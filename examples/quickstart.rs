@@ -1,0 +1,69 @@
+//! Quickstart: the whole three-layer stack in one page.
+//!
+//! Loads the AOT-compiled fused ACDC kernel (authored as a Pallas kernel,
+//! lowered by `make artifacts`), executes it on the PJRT CPU client from
+//! rust, and cross-checks the numbers against the pure-rust reference
+//! implementation.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use acdc::dct::DctPlan;
+use acdc::runtime::values::HostValue;
+use acdc::runtime::Engine;
+use acdc::sell::acdc::AcdcLayer;
+use acdc::sell::LinearOp;
+use acdc::tensor::Tensor;
+use acdc::util::rng::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> Result<(), String> {
+    let artifacts = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "artifacts".to_string());
+    let engine = Engine::open(Path::new(&artifacts))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // The artifact: one fused ACDC layer, batch 4, N = 64.
+    let art = engine.load("quickstart_acdc_b4_n64")?;
+    println!(
+        "loaded '{}' ({} inputs, {} outputs)",
+        art.meta.name,
+        art.meta.inputs.len(),
+        art.meta.outputs.len()
+    );
+
+    // Random inputs with the paper's identity-plus-noise diagonals.
+    let n = 64;
+    let mut rng = Pcg32::seeded(7);
+    let x = Tensor::from_vec(&[4, n], rng.normal_vec(4 * n, 0.0, 1.0));
+    let a = rng.normal_vec(n, 1.0, 0.1);
+    let d = rng.normal_vec(n, 1.0, 0.1);
+    let bias = rng.normal_vec(n, 0.0, 0.1);
+
+    // Execute the lowered Pallas kernel via PJRT.
+    let out = art.call(&[
+        HostValue::from_tensor(&x),
+        HostValue::F32 { shape: vec![n], data: a.clone() },
+        HostValue::F32 { shape: vec![n], data: d.clone() },
+        HostValue::F32 { shape: vec![n], data: bias.clone() },
+    ])?;
+    let y_pjrt = out[0].to_tensor();
+
+    // Same computation through the pure-rust ACDC (Makhoul DCT via FFT).
+    let layer = AcdcLayer::new(a, d, bias, Arc::new(DctPlan::new(n)));
+    let y_native = layer.forward_fused(&x);
+
+    let diff = y_pjrt.max_abs_diff(&y_native);
+    println!("output[0][..6] = {:?}", &y_pjrt.row(0)[..6]);
+    println!("PJRT vs native reference: max |Δ| = {diff:.3e}");
+    println!(
+        "layer parameters: {} (vs {} for a dense {n}×{n} layer — x{:.1} fewer)",
+        layer.param_count(),
+        n * n,
+        (n * n) as f64 / layer.param_count() as f64
+    );
+    assert!(diff < 1e-3, "kernel and reference disagree");
+    println!("quickstart OK");
+    Ok(())
+}

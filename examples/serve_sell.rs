@@ -1,0 +1,110 @@
+//! Serving example: batched SELL inference through the full coordinator.
+//!
+//! Starts the router → dynamic batcher → PJRT worker stack over the
+//! `serve_cascade_*` artifacts (a 12-layer ACDC classifier head, §6.2
+//! configuration), drives an open-loop load of single-row requests from
+//! several client threads, and reports latency percentiles, throughput
+//! and batch occupancy.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_sell
+//!        [-- --requests 2000 --clients 8 --max-wait-us 2000]`
+
+use acdc::config::ServeConfig;
+use acdc::serve::{ServeParams, Server};
+use acdc::util::bench::{fmt_ns, percentile};
+use acdc::util::cli::{opt, Args};
+use acdc::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<(), String> {
+    let args = Args::parse(vec![
+        opt("artifacts", "artifacts directory", Some("artifacts")),
+        opt("requests", "total requests", Some("2000")),
+        opt("clients", "client threads", Some("8")),
+        opt("workers", "PJRT worker threads", Some("2")),
+        opt("max-wait-us", "batcher deadline (µs)", Some("2000")),
+    ])?;
+    let requests = args.get_usize("requests")?.unwrap();
+    let clients = args.get_usize("clients")?.unwrap();
+
+    let cfg = ServeConfig {
+        artifacts_dir: args.get("artifacts").unwrap().to_string(),
+        buckets: vec![1, 8, 32, 128],
+        max_wait_us: args.get_usize("max-wait-us")?.unwrap() as u64,
+        workers: args.get_usize("workers")?.unwrap(),
+        queue_cap: 8_192,
+    };
+    let (n, k, classes) = (256usize, 12usize, 10usize);
+    println!(
+        "starting server: ACDC-{k} classifier head, N={n}, buckets {:?}, {} workers",
+        cfg.buckets, cfg.workers
+    );
+    let server = Arc::new(Server::start_pjrt(&cfg, ServeParams::random(n, k, classes, 1), n)?);
+
+    // warmup (compile all buckets)
+    for _ in 0..cfg.buckets.len() * 4 {
+        let mut rng = Pcg32::seeded(99);
+        server
+            .infer(rng.normal_vec(n, 0.0, 1.0), Duration::from_secs(120))
+            .map_err(|e| format!("warmup: {e}"))?;
+    }
+
+    println!("driving {requests} requests from {clients} client threads...");
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(1000 + ci as u64);
+                let mut latencies = Vec::with_capacity(per_client);
+                let mut batch_sizes = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let row = rng.normal_vec(n, 0.0, 1.0);
+                    let t = Instant::now();
+                    let rx = loop {
+                        match server.submit(row.clone()) {
+                            Ok(rx) => break rx,
+                            Err(_) => std::thread::sleep(Duration::from_micros(100)),
+                        }
+                    };
+                    let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+                    resp.output.expect("inference ok");
+                    latencies.push(t.elapsed().as_nanos() as f64);
+                    batch_sizes.push(resp.batch_size);
+                }
+                (latencies, batch_sizes)
+            })
+        })
+        .collect();
+
+    let mut latencies = vec![];
+    let mut batch_sizes = vec![];
+    for h in handles {
+        let (l, b) = h.join().expect("client thread");
+        latencies.extend(l);
+        batch_sizes.extend(b);
+    }
+    let wall = t0.elapsed();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let served = latencies.len();
+    println!("\n== results ==");
+    println!("served:      {served} requests in {:.2}s", wall.as_secs_f64());
+    println!(
+        "throughput:  {:.0} req/s",
+        served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency:     p50 {}  p90 {}  p99 {}",
+        fmt_ns(percentile(&latencies, 50.0)),
+        fmt_ns(percentile(&latencies, 90.0)),
+        fmt_ns(percentile(&latencies, 99.0)),
+    );
+    let mean_batch: f64 =
+        batch_sizes.iter().map(|&b| b as f64).sum::<f64>() / batch_sizes.len() as f64;
+    println!("mean dispatched bucket: {mean_batch:.1}");
+    println!("\n== coordinator metrics ==\n{}", server.metrics_report());
+    Ok(())
+}

@@ -1,0 +1,352 @@
+"""AOT pipeline: lower every L2 entry point to HLO text + manifest.json.
+
+This is the *only* place python touches the artifact directory. Each entry
+point is jitted, lowered to StableHLO, converted to an XlaComputation and
+dumped as **HLO text** — not a serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+``manifest.json`` records, for every artifact, the positional input/output
+names, shapes and dtypes so the rust ``runtime::registry`` can feed and
+decode executables without any knowledge of jax. Outputs are always a
+single tuple (``return_tuple=True``).
+
+Usage:  python -m compile.aot --outdir ../artifacts [--only PREFIX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import acdc as kernels
+
+PERM_SEED = 7  # fixed permutation bank seed, shared with tests
+
+# Figure-3 workload shapes (paper §6.1): W_true is 32×32, X is 10000×32;
+# we lower one minibatch-step per cascade depth K.
+FIG3_N = 32
+FIG3_BATCH = 250
+FIG3_KS = [1, 2, 4, 8, 16, 32]
+
+# Serving batch buckets for the coordinator's size-bucketed batcher.
+SERVE_BUCKETS = [1, 8, 32, 128]
+
+# Single-layer forward sizes for the runtime micro-bench (§Perf, E1 PJRT leg).
+FWD_SIZES = [256, 512, 1024, 2048]
+
+CNN_TRAIN_BATCH = 64
+CNN_EVAL_BATCH = 256
+
+
+def _dtype_str(dt) -> str:
+    return {
+        np.dtype("float32"): "f32",
+        np.dtype("int32"): "i32",
+        np.dtype("uint32"): "u32",
+    }[np.dtype(dt)]
+
+
+class Spec(NamedTuple):
+    name: str
+    shape: tuple
+    dtype: str
+
+    def to_json(self):
+        return {"name": self.name, "shape": list(self.shape), "dtype": self.dtype}
+
+
+def _specs(names, examples) -> list[Spec]:
+    flat, _ = jax.tree_util.tree_flatten(examples)
+    assert len(names) == len(flat), (names, [f.shape for f in flat])
+    return [
+        Spec(n, tuple(f.shape), _dtype_str(f.dtype)) for n, f in zip(names, flat)
+    ]
+
+
+def to_hlo_text(fn: Callable, *example_args) -> str:
+    """Lower ``fn`` at the example shapes and render HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default text dump
+    # elides big constants as `constant({...})`, and the rust side's HLO
+    # text parser (xla_extension 0.5.1) silently parses that as ZEROS —
+    # the baked DCT matrices would vanish.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _u32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint32)
+
+
+class Artifact(NamedTuple):
+    name: str
+    fn: Callable
+    example_args: tuple
+    input_names: list
+    output_names: list
+    tags: dict
+
+
+def _named_tuple_names(cls, prefix: str) -> list:
+    return [f"{prefix}{f}" for f in cls._fields]
+
+
+def build_registry() -> list[Artifact]:
+    arts: list[Artifact] = []
+    perms_cnn = model.make_perms(PERM_SEED, model.CNN_K, model.N_FEAT)
+
+    # -- quickstart: one fused ACDC layer ---------------------------------
+    def quickstart(x, a, d, bias):
+        return kernels.acdc(x, a, d, bias)
+
+    arts.append(
+        Artifact(
+            "quickstart_acdc_b4_n64",
+            quickstart,
+            (_f32(4, 64), _f32(64), _f32(64), _f32(64)),
+            ["x", "a", "d", "bias"],
+            ["y"],
+            {"experiment": "quickstart", "n": 64, "batch": 4},
+        )
+    )
+
+    # -- single-layer forwards for the perf harness -----------------------
+    for n in FWD_SIZES:
+        arts.append(
+            Artifact(
+                f"acdc_fwd_b128_n{n}",
+                quickstart,
+                (_f32(128, n), _f32(n), _f32(n), _f32(n)),
+                ["x", "a", "d", "bias"],
+                ["y"],
+                {"experiment": "fig2_pjrt", "n": n, "batch": 128},
+            )
+        )
+
+    # -- serving cascade (classifier head) per batch bucket ---------------
+    for b in SERVE_BUCKETS:
+        def serve(a_stack, d_stack, bias_stack, cls_w, cls_b, feat,
+                  _perms=perms_cnn):
+            return model.serve_classifier(
+                a_stack, d_stack, bias_stack, cls_w, cls_b, feat, _perms
+            )
+
+        arts.append(
+            Artifact(
+                f"serve_cascade_b{b}_n{model.N_FEAT}_k{model.CNN_K}",
+                serve,
+                (
+                    _f32(model.CNN_K, model.N_FEAT),
+                    _f32(model.CNN_K, model.N_FEAT),
+                    _f32(model.CNN_K, model.N_FEAT),
+                    _f32(model.N_FEAT, model.N_CLASSES),
+                    _f32(model.N_CLASSES),
+                    _f32(b, model.N_FEAT),
+                ),
+                ["a_stack", "d_stack", "bias_stack", "cls_w", "cls_b", "feat"],
+                ["log_probs"],
+                {
+                    "experiment": "serve",
+                    "batch": b,
+                    "n": model.N_FEAT,
+                    "k": model.CNN_K,
+                    "perm_seed": PERM_SEED,
+                },
+            )
+        )
+
+    # -- Figure 3: ACDC_K regression steps + dense baseline ---------------
+    for k in FIG3_KS:
+        arts.append(
+            Artifact(
+                f"fig3_step_k{k}",
+                model.fig3_step,
+                (
+                    _f32(k, FIG3_N),
+                    _f32(k, FIG3_N),
+                    _f32(FIG3_BATCH, FIG3_N),
+                    _f32(FIG3_BATCH, FIG3_N),
+                    _f32(),
+                ),
+                ["a_stack", "d_stack", "x", "y", "lr"],
+                ["a_stack", "d_stack", "loss"],
+                {"experiment": "fig3", "k": k, "n": FIG3_N, "batch": FIG3_BATCH},
+            )
+        )
+    arts.append(
+        Artifact(
+            "fig3_dense_step",
+            model.dense_step,
+            (_f32(FIG3_N, FIG3_N), _f32(FIG3_BATCH, FIG3_N),
+             _f32(FIG3_BATCH, FIG3_N), _f32()),
+            ["w", "x", "y", "lr"],
+            ["w", "loss"],
+            {"experiment": "fig3", "k": 0, "n": FIG3_N, "batch": FIG3_BATCH},
+        )
+    )
+
+    # -- MiniCaffeNet (Table-1 analogue + E6 end-to-end) -------------------
+    acdc_param_specs = (
+        _f32(5, 5, 1, 8), _f32(8), _f32(3, 3, 8, 16), _f32(16),
+        _f32(model.CNN_K, model.N_FEAT), _f32(model.CNN_K, model.N_FEAT),
+        _f32(model.CNN_K, model.N_FEAT),
+        _f32(model.N_FEAT, model.N_CLASSES), _f32(model.N_CLASSES),
+    )
+    dense_param_specs = (
+        _f32(5, 5, 1, 8), _f32(8), _f32(3, 3, 8, 16), _f32(16),
+        _f32(model.N_FEAT, model.N_FEAT), _f32(model.N_FEAT),
+        _f32(model.N_FEAT, model.N_FEAT), _f32(model.N_FEAT),
+        _f32(model.N_FEAT, model.N_CLASSES), _f32(model.N_CLASSES),
+    )
+    acdc_names = list(model.CnnAcdcParams._fields)
+    dense_names = list(model.CnnDenseParams._fields)
+
+    def acdc_step(*flat):
+        np_, nm = len(acdc_names), len(acdc_names)
+        params = model.CnnAcdcParams(*flat[:np_])
+        moms = model.CnnAcdcParams(*flat[np_:np_ + nm])
+        images, labels, lr, seed = flat[np_ + nm:]
+        p2, m2, loss = model.cnn_acdc_train_step(
+            params, moms, images, labels, lr, seed, perms_cnn
+        )
+        return (*p2, *m2, loss)
+
+    arts.append(
+        Artifact(
+            "cnn_acdc_train_step",
+            acdc_step,
+            (*acdc_param_specs, *acdc_param_specs,
+             _f32(CNN_TRAIN_BATCH, model.IMG, model.IMG, 1),
+             _i32(CNN_TRAIN_BATCH), _f32(), _u32()),
+            [*acdc_names, *[f"m_{n}" for n in acdc_names],
+             "images", "labels", "lr", "seed"],
+            [*acdc_names, *[f"m_{n}" for n in acdc_names], "loss"],
+            {"experiment": "table1", "variant": "acdc", "k": model.CNN_K,
+             "n": model.N_FEAT, "batch": CNN_TRAIN_BATCH,
+             "perm_seed": PERM_SEED},
+        )
+    )
+
+    def acdc_eval(*flat):
+        params = model.CnnAcdcParams(*flat[:len(acdc_names)])
+        images, labels = flat[len(acdc_names):]
+        return model.cnn_acdc_eval(params, images, labels, perms_cnn)
+
+    arts.append(
+        Artifact(
+            "cnn_acdc_eval",
+            acdc_eval,
+            (*acdc_param_specs,
+             _f32(CNN_EVAL_BATCH, model.IMG, model.IMG, 1),
+             _i32(CNN_EVAL_BATCH)),
+            [*acdc_names, "images", "labels"],
+            ["loss", "correct"],
+            {"experiment": "table1", "variant": "acdc",
+             "batch": CNN_EVAL_BATCH, "perm_seed": PERM_SEED},
+        )
+    )
+
+    def dense_step(*flat):
+        np_ = len(dense_names)
+        params = model.CnnDenseParams(*flat[:np_])
+        moms = model.CnnDenseParams(*flat[np_:2 * np_])
+        images, labels, lr = flat[2 * np_:]
+        p2, m2, loss = model.cnn_dense_train_step(params, moms, images, labels, lr)
+        return (*p2, *m2, loss)
+
+    arts.append(
+        Artifact(
+            "cnn_dense_train_step",
+            dense_step,
+            (*dense_param_specs, *dense_param_specs,
+             _f32(CNN_TRAIN_BATCH, model.IMG, model.IMG, 1),
+             _i32(CNN_TRAIN_BATCH), _f32()),
+            [*dense_names, *[f"m_{n}" for n in dense_names],
+             "images", "labels", "lr"],
+            [*dense_names, *[f"m_{n}" for n in dense_names], "loss"],
+            {"experiment": "table1", "variant": "dense",
+             "n": model.N_FEAT, "batch": CNN_TRAIN_BATCH},
+        )
+    )
+
+    def dense_eval(*flat):
+        params = model.CnnDenseParams(*flat[:len(dense_names)])
+        images, labels = flat[len(dense_names):]
+        return model.cnn_dense_eval(params, images, labels)
+
+    arts.append(
+        Artifact(
+            "cnn_dense_eval",
+            dense_eval,
+            (*dense_param_specs,
+             _f32(CNN_EVAL_BATCH, model.IMG, model.IMG, 1),
+             _i32(CNN_EVAL_BATCH)),
+            [*dense_names, "images", "labels"],
+            ["loss", "correct"],
+            {"experiment": "table1", "variant": "dense",
+             "batch": CNN_EVAL_BATCH},
+        )
+    )
+
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="only artifacts with this prefix")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"format": 1, "perm_seed": PERM_SEED, "artifacts": []}
+    for art in build_registry():
+        if args.only and not art.name.startswith(args.only):
+            continue
+        text = to_hlo_text(art.fn, *art.example_args)
+        fname = f"{art.name}.hlo.txt"
+        path = os.path.join(args.outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(art.fn, *art.example_args)
+        manifest["artifacts"].append(
+            {
+                "name": art.name,
+                "file": fname,
+                "inputs": [s.to_json() for s in _specs(art.input_names, art.example_args)],
+                "outputs": [s.to_json() for s in _specs(art.output_names, out_tree)],
+                "tags": art.tags,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"lowered {art.name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts -> {mpath}")
+
+
+if __name__ == "__main__":
+    main()

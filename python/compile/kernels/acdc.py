@@ -1,0 +1,185 @@
+"""Layer-1 Pallas kernels for the ACDC structured efficient linear layer.
+
+The paper's §5 GPU implementation fuses the whole ``A → DCT → D → IDCT``
+chain into a single kernel so each element makes exactly one round trip to
+main memory (8N bytes/row). The TPU/Pallas rethink (DESIGN.md
+§Hardware-Adaptation):
+
+* the fused chain lives in one ``pallas_call`` — intermediates ``h1..h3``
+  stay in VMEM (the TPU analogue of the paper's "temporary low-level
+  memory");
+* the DCT is expressed as a matmul against the precomputed orthonormal
+  DCT-II matrix so it runs on the MXU systolic array. On TPU a matmul-DCT
+  beats a butterfly for the layer sizes the paper studies because the MXU
+  executes dense ``[b, n] @ [n, n]`` at near-peak throughput while a
+  butterfly is VPU-bound and strided;
+* the batch dimension is tiled over the Pallas grid via ``BlockSpec`` — the
+  analogue of the paper's per-threadblock batching.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so kernels are lowered to plain HLO. Structure (blocking, VMEM
+residency) is still exactly what a real TPU lowering would use.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per grid step. 128 matches the paper's benchmark batch size and the
+# MXU/VPU lane width; callers with smaller batches get a single-step grid.
+DEFAULT_BLOCK_B = 128
+
+
+def _block_b(batch: int, block_b: int | None) -> int:
+    b = block_b or DEFAULT_BLOCK_B
+    if batch % b != 0:
+        # Fall back to the largest divisor of batch that is <= b. Pallas
+        # requires the grid to tile the batch exactly; serving-side bucketing
+        # (rust coordinator) keeps batches at power-of-two sizes, so this
+        # path only triggers in tests with odd shapes.
+        b = next(d for d in range(min(b, batch), 0, -1) if batch % d == 0)
+    return b
+
+
+def _acdc_kernel(x_ref, a_ref, d_ref, b_ref, c_ref, ct_ref, o_ref):
+    """Fused single-call ACDC: ``o = ((x ⊙ a) C ⊙ d + bias) C^T``.
+
+    All refs are VMEM-resident blocks. ``c_ref``/``ct_ref`` hold the DCT-II
+    matrix and its transpose; they are broadcast to every grid step and the
+    compiler keeps them resident (the paper's "perfect caching of A and D").
+    """
+    h1 = x_ref[...] * a_ref[...]
+    # MXU: DCT as matmul. float32 accumulation regardless of input dtype.
+    h2 = jnp.dot(h1, c_ref[...], preferred_element_type=jnp.float32)
+    h3 = h2 * d_ref[...] + b_ref[...]
+    o_ref[...] = jnp.dot(h3, ct_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def acdc(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    d: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    block_b: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """One fused ACDC layer (paper §5.1 "single call implementation").
+
+    Args:
+      x:    ``[batch, n]`` activations.
+      a:    ``[n]`` signal-domain diagonal of ``A``.
+      d:    ``[n]`` spectral-domain diagonal of ``D``.
+      bias: optional ``[n]`` bias applied after ``D`` (paper §6.2).
+      block_b: rows per grid step (defaults to 128).
+      interpret: keep True on CPU; False only for real TPU lowering.
+    """
+    batch, n = x.shape
+    bb = _block_b(batch, block_b)
+    c = ref.dct_matrix(n, x.dtype)
+    b = jnp.zeros((n,), x.dtype) if bias is None else bias
+    grid = (batch // bb,)
+    return pl.pallas_call(
+        _acdc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),  # x: tile batch
+            pl.BlockSpec((n,), lambda i: (0,)),  # a: resident
+            pl.BlockSpec((n,), lambda i: (0,)),  # d: resident
+            pl.BlockSpec((n,), lambda i: (0,)),  # bias: resident
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # C: resident
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # C^T: resident
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=interpret,
+    )(x, a, d, b, c, c.T)
+
+
+def _cascade_kernel(
+    x_ref, a_ref, d_ref, b_ref, p_ref, c_ref, ct_ref, o_ref, *, k: int, relu: bool
+):
+    """Fused order-K cascade: K ACDC layers + perms + ReLU in one kernel.
+
+    ``a_ref``/``d_ref``/``b_ref`` are ``[K, n]`` stacks, ``p_ref`` is a
+    ``[K, n]`` int32 permutation bank. The whole chain runs out of VMEM —
+    one HBM load of ``x`` and one store of ``o`` per row, the deep-cascade
+    generalization of the paper's 8N-bytes/row ideal.
+    """
+    h = x_ref[...]
+    for i in range(k):  # K is static — unrolled at trace time
+        h1 = h * a_ref[i, :]
+        h2 = jnp.dot(h1, c_ref[...], preferred_element_type=jnp.float32)
+        h3 = h2 * d_ref[i, :] + b_ref[i, :]
+        h = jnp.dot(h3, ct_ref[...], preferred_element_type=jnp.float32)
+        h = jnp.take(h, p_ref[i, :], axis=1)
+        if relu and i != k - 1:
+            h = jnp.maximum(h, 0.0)
+    o_ref[...] = h.astype(o_ref.dtype)
+
+
+def acdc_cascade(
+    x: jnp.ndarray,
+    a_stack: jnp.ndarray,
+    d_stack: jnp.ndarray,
+    bias_stack: jnp.ndarray | None = None,
+    perms: jnp.ndarray | None = None,
+    relu: bool = False,
+    *,
+    block_b: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused order-K ACDC cascade (Definition 1 + §6.2 interleaving).
+
+    Args mirror :func:`ref.acdc_cascade`; ``perms=None`` uses identity
+    permutations so the kernel stays a single code path.
+    """
+    batch, n = x.shape
+    k = int(a_stack.shape[0])
+    bb = _block_b(batch, block_b)
+    c = ref.dct_matrix(n, x.dtype)
+    b_stack = (
+        jnp.zeros((k, n), x.dtype) if bias_stack is None else bias_stack
+    )
+    if perms is None:
+        perms = jnp.tile(jnp.arange(n, dtype=jnp.int32)[None, :], (k, 1))
+    grid = (batch // bb,)
+    kernel = functools.partial(_cascade_kernel, k=k, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n), x.dtype),
+        interpret=interpret,
+    )(x, a_stack, d_stack, b_stack, perms, c, c.T)
+
+
+def vmem_bytes(n: int, k: int = 1, block_b: int = DEFAULT_BLOCK_B) -> int:
+    """Estimated VMEM footprint (bytes, f32) of the fused cascade kernel.
+
+    Used by DESIGN/EXPERIMENTS to check the block fits the ~16 MiB/core VMEM
+    budget of a real TPU: two ``[block_b, n]`` live activation tiles, the
+    ``[n, n]`` DCT matrix and its transpose, and the ``[K, n]`` A/D/bias/perm
+    banks.
+    """
+    act = 2 * block_b * n * 4
+    dct_mats = 2 * n * n * 4
+    banks = 4 * k * n * 4
+    return act + dct_mats + banks

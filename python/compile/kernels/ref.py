@@ -1,0 +1,135 @@
+"""Pure-jnp correctness oracle for the ACDC kernel.
+
+This module is the ground truth the Pallas kernel (``acdc.py``) is tested
+against. Everything here follows the paper exactly:
+
+* eq. (9): orthonormal DCT-II matrix ``C`` with ``C^{-1} = C^T``
+* §4:     ``ACDC(x) = x · A · C · D · C^{-1}`` with ``A = diag(a)``,
+          ``D = diag(d)``; optionally a bias is added after ``D`` (the paper
+          places biases on ``D`` only, §6.2)
+* §6.2:   deep cascades interleave ReLU non-linearities and fixed
+          permutations so adjacent SELLs are incoherent.
+
+The convention is row-vector based like the paper: ``x`` has shape
+``[batch, n]`` and matrices multiply on the right.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=32)
+def _dct_matrix_np(n: int) -> np.ndarray:
+    """Orthonormal DCT-II matrix per paper eq. (9), as float64 numpy.
+
+    ``y = x @ dct_matrix(n)`` computes the DCT-II of each row of ``x``.
+    Entry ``c[j, k] = sqrt(2/n) * eps_k * cos(pi * (2j + 1) * k / (2n))``
+    with ``eps_0 = 1/sqrt(2)`` and ``eps_k = 1`` otherwise, which makes the
+    matrix orthogonal: ``C @ C.T == I``.
+    """
+    j = np.arange(n)[:, None].astype(np.float64)  # spatial index (rows)
+    k = np.arange(n)[None, :].astype(np.float64)  # frequency index (cols)
+    c = np.sqrt(2.0 / n) * np.cos(np.pi * (2.0 * j + 1.0) * k / (2.0 * n))
+    c[:, 0] *= 1.0 / np.sqrt(2.0)
+    return c
+
+
+def dct_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Orthonormal DCT-II matrix (eq. 9) with ``C^{-1} = C^T``."""
+    return jnp.asarray(_dct_matrix_np(n), dtype=dtype)
+
+
+def dct(x: jnp.ndarray) -> jnp.ndarray:
+    """DCT-II of each row of ``x`` (orthonormal)."""
+    return x @ dct_matrix(x.shape[-1], x.dtype)
+
+
+def idct(x: jnp.ndarray) -> jnp.ndarray:
+    """Inverse DCT (DCT-III, orthonormal) of each row of ``x``."""
+    return x @ dct_matrix(x.shape[-1], x.dtype).T
+
+
+def acdc(
+    x: jnp.ndarray,
+    a: jnp.ndarray,
+    d: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """One ACDC layer: ``y = ((x ⊙ a) C ⊙ d + bias) C^T``.
+
+    Args:
+      x:    ``[batch, n]`` input rows.
+      a:    ``[n]`` signal-domain diagonal.
+      d:    ``[n]`` spectral-domain diagonal.
+      bias: optional ``[n]`` bias added after ``D`` (paper §6.2).
+    """
+    n = x.shape[-1]
+    c = dct_matrix(n, x.dtype)
+    h1 = x * a
+    h2 = h1 @ c
+    h3 = h2 * d
+    if bias is not None:
+        h3 = h3 + bias
+    return h3 @ c.T
+
+
+def acdc_dense_equivalent(
+    a: jnp.ndarray, d: jnp.ndarray, bias: jnp.ndarray | None = None
+):
+    """Materialize the dense ``(W, b)`` a single ACDC layer represents.
+
+    ``acdc(x, a, d, bias) == x @ W + b`` — used by tests and by the
+    operator-approximation experiment to compare against ``W_true``.
+    """
+    n = a.shape[-1]
+    c = dct_matrix(n, a.dtype)
+    w = (jnp.diag(a) @ c) @ jnp.diag(d) @ c.T
+    b = jnp.zeros((n,), a.dtype) if bias is None else bias @ c.T
+    return w, b
+
+
+def acdc_cascade(
+    x: jnp.ndarray,
+    a_stack: jnp.ndarray,
+    d_stack: jnp.ndarray,
+    bias_stack: jnp.ndarray | None = None,
+    perms: jnp.ndarray | None = None,
+    relu: bool = False,
+) -> jnp.ndarray:
+    """Order-K ACDC cascade (Definition 1), optionally with ReLU + perms.
+
+    Args:
+      x:          ``[batch, n]``.
+      a_stack:    ``[K, n]`` diagonals for A_1..A_K.
+      d_stack:    ``[K, n]`` diagonals for D_1..D_K.
+      bias_stack: optional ``[K, n]`` biases on D.
+      perms:      optional ``[K, n]`` int32 permutations applied *after*
+                  each layer (paper §6.2: adjacent SELLs made incoherent).
+      relu:       interleave ReLU after every layer except the last.
+    """
+    k = a_stack.shape[0]
+    h = x
+    for i in range(k):
+        b = None if bias_stack is None else bias_stack[i]
+        h = acdc(h, a_stack[i], d_stack[i], b)
+        if perms is not None:
+            h = h[..., perms[i]]
+        if relu and i != k - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def cascade_dense_equivalent(
+    a_stack: jnp.ndarray, d_stack: jnp.ndarray
+) -> jnp.ndarray:
+    """Dense matrix equal to a (linear, no-ReLU, no-perm) ACDC cascade."""
+    n = a_stack.shape[-1]
+    w = jnp.eye(n, dtype=a_stack.dtype)
+    for i in range(a_stack.shape[0]):
+        wi, _ = acdc_dense_equivalent(a_stack[i], d_stack[i])
+        w = w @ wi
+    return w

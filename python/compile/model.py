@@ -1,0 +1,395 @@
+"""Layer-2 JAX models: the paper's compute graphs, built on the L1 kernel.
+
+Three workloads, matching DESIGN.md §3:
+
+* **Figure 3** — linear-operator approximation: an order-K linear ACDC
+  cascade trained by SGD to recover a dense 32×32 ``W_true`` (paper eq. 15).
+* **Table 1 / Figure 4 / E6** — "MiniCaffeNet": a small convnet whose FC
+  block is either two dense layers (reference) or a stack of ACDC layers
+  interleaved with ReLU and fixed permutations (paper §6.2), with all the
+  §6.2 riders: bias on D only, no weight decay on A/D, per-matrix LR
+  multipliers, conv-feature scaling, dropout before the last 5 SELLs.
+* **Serving** — the ACDC classifier forward pass at several batch sizes for
+  the rust coordinator's size-bucketed batcher.
+
+The ACDC layer uses ``jax.custom_vjp`` with the paper's §4 closed-form
+gradients (eqs. 10–14); the backward pass *recomputes* ``h2`` instead of
+storing it, mirroring the paper's §5 memory-saving choice.
+
+Everything here is lowered once by ``aot.py``; nothing in this module runs
+at serving/training time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import acdc as kernels
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# ACDC layer with the paper's closed-form backward (§4, eqs. 10–14)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def acdc_layer(x, a, d, bias):
+    """One ACDC layer ``y = ((x ⊙ a) C ⊙ d + bias) Cᵀ`` (fused L1 kernel)."""
+    return kernels.acdc(x, a, d, bias)
+
+
+def _acdc_layer_fwd(x, a, d, bias):
+    # Residuals: inputs only. h2 is recomputed in the backward pass — the
+    # paper §5: "it was decided instead to recompute these during the
+    # backward pass, increasing runtime while saving memory".
+    return kernels.acdc(x, a, d, bias), (x, a, d)
+
+
+def _acdc_layer_bwd(res, g):
+    x, a, d = res
+    n = x.shape[-1]
+    c = ref.dct_matrix(n, x.dtype)
+    h1 = x * a
+    h2 = h1 @ c  # recomputed
+    # eq. (10): ∂L/∂d = h2 ⊙ (C ∂L/∂y)   (row-vector form: g @ C)
+    gh3 = g @ c
+    gd = jnp.sum(h2 * gh3, axis=0)
+    # bias sits after D (§6.2), so its gradient is ∂L/∂h3 summed over batch.
+    gbias = jnp.sum(gh3, axis=0)
+    # eq. (12): ∂L/∂a = x ⊙ C⁻¹ d ⊙ (C ∂L/∂y)
+    gh1 = (gh3 * d) @ c.T
+    ga = jnp.sum(x * gh1, axis=0)
+    # eq. (14): ∂L/∂x = a ⊙ C⁻¹ d ⊙ (C ∂L/∂y)
+    gx = a * gh1
+    return gx, ga, gd, gbias
+
+
+acdc_layer.defvjp(_acdc_layer_fwd, _acdc_layer_bwd)
+
+
+def acdc_cascade(x, a_stack, d_stack, bias_stack=None, perms=None, relu=False):
+    """Order-K cascade of :func:`acdc_layer` (+ §6.2 perm/ReLU interleave).
+
+    Differentiable through the custom VJP of each layer. ``perms`` is a
+    ``[K, n]`` int array of fixed (non-learned) permutations.
+    """
+    k = a_stack.shape[0]
+    n = x.shape[-1]
+    h = x
+    for i in range(k):
+        b = jnp.zeros((n,), x.dtype) if bias_stack is None else bias_stack[i]
+        h = acdc_layer(h, a_stack[i], d_stack[i], b)
+        if perms is not None:
+            h = jnp.take(h, perms[i], axis=1)
+        if relu and i != k - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Initialization (paper §6)
+# ---------------------------------------------------------------------------
+
+
+def init_diagonals(key, k: int, n: int, mean: float = 1.0, sigma: float = 0.1):
+    """Diagonal init N(mean, sigma²) — paper's identity-plus-noise scheme.
+
+    Figure 3 "good" init: mean=1, sigma=1e-1. Figure 3 "bad" (standard
+    linear-layer style) init: mean=0, sigma=1e-3. §6.2 uses N(1, 0.061).
+    """
+    ka, kd = jax.random.split(key)
+    a = mean + sigma * jax.random.normal(ka, (k, n), jnp.float32)
+    d = mean + sigma * jax.random.normal(kd, (k, n), jnp.float32)
+    return a, d
+
+
+def make_perms(seed: int, k: int, n: int) -> np.ndarray:
+    """Fixed permutation bank (one per layer) so adjacent SELLs are
+    incoherent (§6.2). Deterministic in ``seed``; baked into the lowered
+    HLO as constants."""
+    rng = np.random.default_rng(seed)
+    return np.stack([rng.permutation(n) for _ in range(k)]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Figure 3: linear-operator approximation (paper §6.1, eq. 15)
+# ---------------------------------------------------------------------------
+
+
+def fig3_predict(a_stack, d_stack, x):
+    """Pure linear cascade (no ReLU/perm/bias) — the Fig. 3 model."""
+    return acdc_cascade(x, a_stack, d_stack)
+
+
+def fig3_loss(a_stack, d_stack, x, y):
+    pred = fig3_predict(a_stack, d_stack, x)
+    return jnp.mean(jnp.sum((pred - y) ** 2, axis=-1))
+
+
+def fig3_step(a_stack, d_stack, x, y, lr):
+    """One SGD step of the Fig. 3 regression. Returns (a', d', loss)."""
+    loss, grads = jax.value_and_grad(fig3_loss, argnums=(0, 1))(
+        a_stack, d_stack, x, y
+    )
+    ga, gd = grads
+    return a_stack - lr * ga, d_stack - lr * gd, loss
+
+
+def dense_step(w, x, y, lr):
+    """Dense-matrix baseline for Fig. 3 (the paper's 'dense' curve)."""
+
+    def loss_fn(w):
+        return jnp.mean(jnp.sum((x @ w - y) ** 2, axis=-1))
+
+    loss, gw = jax.value_and_grad(loss_fn)(w)
+    return w - lr * gw, loss
+
+
+# ---------------------------------------------------------------------------
+# MiniCaffeNet (Table 1 analogue, DESIGN.md substitution S2)
+# ---------------------------------------------------------------------------
+
+IMG = 16  # input resolution (16×16 grayscale)
+N_CLASSES = 10
+N_FEAT = 256  # flattened conv features == SELL width (power of two)
+CNN_K = 12  # paper §6.2: 12 stacked ACDC transforms
+FEATURE_SCALE = 0.1  # §6.2: conv output scaled by 0.1
+LR_MULT_A = 24.0  # §6.2 learning-rate multipliers
+LR_MULT_D = 12.0
+MOMENTUM = 0.65
+WEIGHT_DECAY = 5e-4
+DROPOUT_P = 0.1  # §6.2: dropout before each of the last 5 SELLs
+DROPOUT_LAYERS = 5
+
+
+class CnnAcdcParams(NamedTuple):
+    """Learnable parameters of the ACDC-FC MiniCaffeNet, in lowering order."""
+
+    conv1_w: jnp.ndarray  # [5,5,1,8]
+    conv1_b: jnp.ndarray  # [8]
+    conv2_w: jnp.ndarray  # [3,3,8,16]
+    conv2_b: jnp.ndarray  # [16]
+    a_stack: jnp.ndarray  # [K, 256]
+    d_stack: jnp.ndarray  # [K, 256]
+    bias_stack: jnp.ndarray  # [K, 256] (bias on D only, §6.2)
+    cls_w: jnp.ndarray  # [256, 10]
+    cls_b: jnp.ndarray  # [10]
+
+
+class CnnDenseParams(NamedTuple):
+    """Learnable parameters of the dense-FC reference MiniCaffeNet."""
+
+    conv1_w: jnp.ndarray
+    conv1_b: jnp.ndarray
+    conv2_w: jnp.ndarray
+    conv2_b: jnp.ndarray
+    fc6_w: jnp.ndarray  # [256, 256]
+    fc6_b: jnp.ndarray  # [256]
+    fc7_w: jnp.ndarray  # [256, 256]
+    fc7_b: jnp.ndarray  # [256]
+    cls_w: jnp.ndarray
+    cls_b: jnp.ndarray
+
+
+def init_cnn_acdc(key) -> CnnAcdcParams:
+    ks = jax.random.split(key, 6)
+    he = jax.nn.initializers.he_normal()
+    a, d = init_diagonals(ks[0], CNN_K, N_FEAT, mean=1.0, sigma=0.061)
+    return CnnAcdcParams(
+        conv1_w=he(ks[1], (5, 5, 1, 8), jnp.float32),
+        conv1_b=jnp.zeros((8,), jnp.float32),
+        conv2_w=he(ks[2], (3, 3, 8, 16), jnp.float32),
+        conv2_b=jnp.zeros((16,), jnp.float32),
+        a_stack=a,
+        d_stack=d,
+        bias_stack=jnp.zeros((CNN_K, N_FEAT), jnp.float32),
+        cls_w=he(ks[3], (N_FEAT, N_CLASSES), jnp.float32),
+        cls_b=jnp.zeros((N_CLASSES,), jnp.float32),
+    )
+
+
+def init_cnn_dense(key) -> CnnDenseParams:
+    ks = jax.random.split(key, 6)
+    he = jax.nn.initializers.he_normal()
+    return CnnDenseParams(
+        conv1_w=he(ks[1], (5, 5, 1, 8), jnp.float32),
+        conv1_b=jnp.zeros((8,), jnp.float32),
+        conv2_w=he(ks[2], (3, 3, 8, 16), jnp.float32),
+        conv2_b=jnp.zeros((16,), jnp.float32),
+        fc6_w=he(ks[0], (N_FEAT, N_FEAT), jnp.float32),
+        fc6_b=jnp.zeros((N_FEAT,), jnp.float32),
+        fc7_w=he(ks[4], (N_FEAT, N_FEAT), jnp.float32),
+        fc7_b=jnp.zeros((N_FEAT,), jnp.float32),
+        cls_w=he(ks[3], (N_FEAT, N_CLASSES), jnp.float32),
+        cls_b=jnp.zeros((N_CLASSES,), jnp.float32),
+    )
+
+
+def _conv_features(params, images):
+    """Shared conv trunk: 16×16×1 → 256 features (scaled by 0.1, §6.2)."""
+    h = jax.lax.conv_general_dilated(
+        images,
+        params.conv1_w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + params.conv1_b
+    h = jnp.maximum(h, 0.0)
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    h = jax.lax.conv_general_dilated(
+        h,
+        params.conv2_w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + params.conv2_b
+    h = jnp.maximum(h, 0.0)
+    h = jax.lax.reduce_window(
+        h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+    feat = h.reshape(h.shape[0], -1)  # [B, 256]
+    return feat * FEATURE_SCALE
+
+
+def _sell_block(params: CnnAcdcParams, feat, perms, dropout_key=None):
+    """The §6.2 FC replacement: 12 ACDC layers + ReLU + perms (+ dropout).
+
+    Dropout (p=0.1) is placed before each of the last ``DROPOUT_LAYERS``
+    SELLs, exactly as in the paper. ``dropout_key=None`` disables dropout
+    (eval / serving).
+    """
+    k = params.a_stack.shape[0]
+    h = feat
+    for i in range(k):
+        if dropout_key is not None and i >= k - DROPOUT_LAYERS:
+            mask_key = jax.random.fold_in(dropout_key, i)
+            keep = jax.random.bernoulli(mask_key, 1.0 - DROPOUT_P, h.shape)
+            h = jnp.where(keep, h / (1.0 - DROPOUT_P), 0.0)
+        h = acdc_layer(h, params.a_stack[i], params.d_stack[i], params.bias_stack[i])
+        h = jnp.take(h, perms[i], axis=1)
+        h = jnp.maximum(h, 0.0)  # ReLU after every SELL (§6.2 interleave)
+    return h
+
+
+def cnn_acdc_logits(params: CnnAcdcParams, images, perms, dropout_key=None):
+    feat = _conv_features(params, images)
+    h = _sell_block(params, feat, perms, dropout_key)
+    return h @ params.cls_w + params.cls_b
+
+
+def cnn_dense_logits(params: CnnDenseParams, images):
+    feat = _conv_features(params, images)
+    h = jnp.maximum(feat @ params.fc6_w + params.fc6_b, 0.0)
+    h = jnp.maximum(h @ params.fc7_w + params.fc7_b, 0.0)
+    return h @ params.cls_w + params.cls_b
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+# --- SGD with the §6.2 riders -------------------------------------------------
+
+
+def _acdc_lr_mults(params: CnnAcdcParams) -> CnnAcdcParams:
+    ones = jax.tree_util.tree_map(lambda p: jnp.ones((), p.dtype), params)
+    return ones._replace(
+        a_stack=jnp.asarray(LR_MULT_A, jnp.float32),
+        d_stack=jnp.asarray(LR_MULT_D, jnp.float32),
+        bias_stack=jnp.asarray(LR_MULT_D, jnp.float32),
+    )
+
+
+def _acdc_wd_mask(params: CnnAcdcParams) -> CnnAcdcParams:
+    """§6.2: no weight decay on A or D (or their biases)."""
+    ones = jax.tree_util.tree_map(lambda p: jnp.ones((), p.dtype), params)
+    zero = jnp.zeros((), jnp.float32)
+    return ones._replace(a_stack=zero, d_stack=zero, bias_stack=zero)
+
+
+def _sgd_update(params, moms, grads, lr, lr_mults, wd_mask):
+    """SGD + momentum 0.65 + weight decay 5e-4 with per-leaf riders."""
+    new_moms = jax.tree_util.tree_map(
+        lambda p, m, g, wd: MOMENTUM * m + g + WEIGHT_DECAY * wd * p,
+        params, moms, grads, wd_mask,
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, mult: p - lr * mult * m, params, new_moms, lr_mults
+    )
+    return new_params, new_moms
+
+
+def cnn_acdc_train_step(params: CnnAcdcParams, moms: CnnAcdcParams, images,
+                        labels, lr, seed, perms):
+    """One SGD step of the ACDC MiniCaffeNet. Returns (params', moms', loss)."""
+
+    def loss_fn(p):
+        key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+        logits = cnn_acdc_logits(p, images, perms, dropout_key=key)
+        return _xent(logits, labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params, new_moms = _sgd_update(
+        params, moms, grads, lr, _acdc_lr_mults(params), _acdc_wd_mask(params)
+    )
+    return new_params, new_moms, loss
+
+
+def cnn_dense_train_step(params: CnnDenseParams, moms: CnnDenseParams, images,
+                         labels, lr):
+    """One SGD step of the dense reference MiniCaffeNet."""
+
+    def loss_fn(p):
+        return _xent(cnn_dense_logits(p, images), labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    ones = jax.tree_util.tree_map(lambda p: jnp.ones((), p.dtype), params)
+    new_params, new_moms = _sgd_update(params, moms, grads, lr, ones, ones)
+    return new_params, new_moms, loss
+
+
+def cnn_acdc_eval(params: CnnAcdcParams, images, labels, perms):
+    """Eval step: (mean loss, #correct) over a batch; dropout off."""
+    logits = cnn_acdc_logits(params, images, perms, dropout_key=None)
+    loss = _xent(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+def cnn_dense_eval(params: CnnDenseParams, images, labels):
+    logits = cnn_dense_logits(params, images)
+    loss = _xent(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Serving forward (rust coordinator hot path)
+# ---------------------------------------------------------------------------
+
+
+def serve_classifier(a_stack, d_stack, bias_stack, cls_w, cls_b, feat, perms):
+    """Classifier head over precomputed features: fused SELL stack + dense
+    softmax layer. This is the executable the rust batcher dispatches to —
+    one per batch bucket."""
+    h = kernels.acdc_cascade(
+        feat, a_stack, d_stack, bias_stack, jnp.asarray(perms), relu=True
+    )
+    logits = h @ cls_w + cls_b
+    return jax.nn.log_softmax(logits, axis=-1)
+
+
+def serve_acdc_forward(a_stack, d_stack, bias_stack, x, perms):
+    """Raw fused cascade forward (quickstart / micro-bench artifact)."""
+    return kernels.acdc_cascade(
+        x, a_stack, d_stack, bias_stack, jnp.asarray(perms), relu=False
+    )

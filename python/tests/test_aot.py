@@ -1,0 +1,114 @@
+"""AOT pipeline tests: manifest consistency and HLO-text well-formedness.
+
+These run the lowering in-process (no files needed) for a representative
+subset, and validate the manifest writer's invariants the rust registry
+relies on: positional specs match the lowered program, names are unique,
+dtypes are in the supported set.
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def registry():
+    return aot.build_registry()
+
+
+def test_registry_names_unique(registry):
+    names = [a.name for a in registry]
+    assert len(names) == len(set(names))
+
+
+def test_registry_covers_all_experiments(registry):
+    tags = {a.tags["experiment"] for a in registry}
+    assert {"quickstart", "fig2_pjrt", "serve", "fig3", "table1"} <= tags
+
+
+def test_fig3_ks_match_paper(registry):
+    ks = sorted(
+        a.tags["k"] for a in registry
+        if a.tags["experiment"] == "fig3" and a.tags["k"] > 0
+    )
+    assert ks == [1, 2, 4, 8, 16, 32]
+
+
+def test_serve_buckets_powers_of_two(registry):
+    bs = sorted(a.tags["batch"] for a in registry if a.tags["experiment"] == "serve")
+    assert bs == [1, 8, 32, 128]
+    assert all(b & (b - 1) == 0 for b in bs)
+
+
+def test_input_names_match_example_arg_count(registry):
+    for art in registry:
+        flat, _ = jax.tree_util.tree_flatten(art.example_args)
+        assert len(flat) == len(art.input_names), art.name
+
+
+def test_output_names_match_eval_shape(registry):
+    for art in registry:
+        out = jax.eval_shape(art.fn, *art.example_args)
+        flat, _ = jax.tree_util.tree_flatten(out)
+        assert len(flat) == len(art.output_names), art.name
+
+
+@pytest.mark.parametrize("name", ["quickstart_acdc_b4_n64", "fig3_step_k2",
+                                  "fig3_dense_step"])
+def test_lowering_produces_parseable_hlo_text(registry, name):
+    art = next(a for a in registry if a.name == name)
+    text = aot.to_hlo_text(art.fn, *art.example_args)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # return_tuple=True => root of the entry computation is a tuple
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_quickstart_hlo_has_expected_parameter_shapes(registry):
+    art = next(a for a in registry if a.name == "quickstart_acdc_b4_n64")
+    text = aot.to_hlo_text(art.fn, *art.example_args)
+    assert "f32[4,64]" in text  # x
+    assert "f32[64]" in text  # a / d / bias
+
+
+def test_dtype_str_rejects_unknown():
+    with pytest.raises(KeyError):
+        aot._dtype_str(np.dtype("float64"))
+
+
+def test_manifest_file_if_built():
+    """If `make artifacts` has run, the on-disk manifest must be coherent."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                         "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert len(names) == len(set(names))
+    for art in manifest["artifacts"]:
+        fpath = os.path.join(os.path.dirname(mpath), art["file"])
+        assert os.path.exists(fpath), art["file"]
+        for spec in art["inputs"] + art["outputs"]:
+            assert spec["dtype"] in {"f32", "i32", "u32"}
+            assert all(isinstance(s, int) and s >= 0 for s in spec["shape"])
+
+
+def test_vjp_not_required_for_serving(registry):
+    """Serving artifacts must lower without any grad ops (forward only)."""
+    art = next(a for a in registry if a.name == "serve_cascade_b8_n256_k12")
+    text = aot.to_hlo_text(art.fn, *art.example_args)
+    assert "transpose" not in art.tags.get("experiment", "")
+
+
+def test_perm_seed_recorded(registry):
+    serve = [a for a in registry if a.tags["experiment"] == "serve"]
+    assert all(a.tags["perm_seed"] == aot.PERM_SEED for a in serve)

@@ -1,0 +1,291 @@
+"""L1 correctness: Pallas ACDC kernels vs the pure-jnp oracle.
+
+The hypothesis sweeps are the core correctness signal required by the
+brief: shapes (batch × n, cascade depth K) and dtypes are generated, and
+every case asserts allclose against ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import acdc as kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SIZES = [4, 8, 16, 32, 64, 128, 256]
+
+
+def rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def rand_f32(r, *shape, loc=0.0, scale=1.0):
+    return jnp.asarray(r.normal(loc, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# DCT matrix properties (paper eq. 9)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dct_matrix_orthogonal(n):
+    c = ref.dct_matrix(n)
+    np.testing.assert_allclose(c @ c.T, np.eye(n), atol=5e-6)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dct_matrix_inverse_is_transpose(n):
+    c = ref.dct_matrix(n)
+    np.testing.assert_allclose(c.T @ c, np.eye(n), atol=5e-6)
+
+
+@pytest.mark.parametrize("n", [8, 32, 128])
+def test_dct_matches_jax_scipy(n):
+    import jax.scipy.fft as jsf
+
+    x = rand_f32(rng(n), 6, n)
+    np.testing.assert_allclose(
+        ref.dct(x), jsf.dct(x, type=2, norm="ortho", axis=-1), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("n", [8, 32, 128])
+def test_idct_roundtrip(n):
+    x = rand_f32(rng(n + 1), 5, n)
+    np.testing.assert_allclose(ref.idct(ref.dct(x)), x, atol=2e-5)
+
+
+def test_dct_first_column_is_scaled_mean():
+    # k=0 column of DCT-II: sqrt(2/N) * (1/sqrt(2)) * sum = sum / sqrt(N)
+    n = 16
+    x = rand_f32(rng(2), 3, n)
+    y = ref.dct(x)
+    np.testing.assert_allclose(
+        y[:, 0], np.sum(np.asarray(x), axis=1) / np.sqrt(n), rtol=1e-5
+    )
+
+
+def test_dct_energy_preserved():
+    # Orthogonal transform preserves the L2 norm (Parseval).
+    x = rand_f32(rng(3), 4, 64)
+    np.testing.assert_allclose(
+        np.linalg.norm(ref.dct(x), axis=1),
+        np.linalg.norm(np.asarray(x), axis=1),
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single fused layer vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("batch", [1, 3, 8])
+def test_acdc_matches_ref(n, batch):
+    r = rng(n * 100 + batch)
+    x = rand_f32(r, batch, n)
+    a = rand_f32(r, n, loc=1.0, scale=0.1)
+    d = rand_f32(r, n, loc=1.0, scale=0.1)
+    b = rand_f32(r, n, scale=0.1)
+    np.testing.assert_allclose(
+        kernels.acdc(x, a, d, b), ref.acdc(x, a, d, b), atol=1e-4
+    )
+
+
+def test_acdc_no_bias_matches_ref():
+    r = rng(11)
+    x = rand_f32(r, 4, 32)
+    a = rand_f32(r, 32, loc=1.0)
+    d = rand_f32(r, 32, loc=1.0)
+    np.testing.assert_allclose(
+        kernels.acdc(x, a, d, None), ref.acdc(x, a, d, None), atol=1e-4
+    )
+
+
+def test_acdc_identity_params_is_identity():
+    # a = d = 1, bias = 0  =>  x C C^T = x.
+    n = 64
+    x = rand_f32(rng(4), 8, n)
+    ones = jnp.ones((n,), jnp.float32)
+    zeros = jnp.zeros((n,), jnp.float32)
+    np.testing.assert_allclose(kernels.acdc(x, ones, ones, zeros), x, atol=1e-4)
+
+
+def test_acdc_is_linear_in_x():
+    n, r = 32, rng(5)
+    a = rand_f32(r, n, loc=1.0)
+    d = rand_f32(r, n, loc=1.0)
+    z = jnp.zeros((n,), jnp.float32)
+    x1 = rand_f32(r, 4, n)
+    x2 = rand_f32(r, 4, n)
+    y = kernels.acdc(x1 + 2.0 * x2, a, d, z)
+    y_lin = kernels.acdc(x1, a, d, z) + 2.0 * kernels.acdc(x2, a, d, z)
+    np.testing.assert_allclose(y, y_lin, atol=1e-3)
+
+
+def test_acdc_matches_dense_equivalent():
+    n, r = 16, rng(6)
+    a = rand_f32(r, n, loc=1.0, scale=0.2)
+    d = rand_f32(r, n, loc=1.0, scale=0.2)
+    b = rand_f32(r, n, scale=0.2)
+    x = rand_f32(r, 5, n)
+    w, bias = ref.acdc_dense_equivalent(a, d, b)
+    np.testing.assert_allclose(
+        kernels.acdc(x, a, d, b), x @ w + bias, atol=1e-4
+    )
+
+
+def test_acdc_block_b_tiling_invariance():
+    # Result must not depend on the grid block size.
+    n, batch = 32, 12
+    r = rng(7)
+    x = rand_f32(r, batch, n)
+    a = rand_f32(r, n, loc=1.0)
+    d = rand_f32(r, n, loc=1.0)
+    z = jnp.zeros((n,), jnp.float32)
+    full = kernels.acdc(x, a, d, z, block_b=12)
+    for bb in [1, 2, 3, 4, 6]:
+        np.testing.assert_allclose(
+            kernels.acdc(x, a, d, z, block_b=bb), full, atol=1e-5
+        )
+
+
+# ---------------------------------------------------------------------------
+# Fused cascade vs oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+@pytest.mark.parametrize("relu", [False, True])
+def test_cascade_matches_ref(k, relu):
+    n, batch = 32, 6
+    r = rng(k * 10 + relu)
+    x = rand_f32(r, batch, n)
+    A = rand_f32(r, k, n, loc=1.0, scale=0.1)
+    D = rand_f32(r, k, n, loc=1.0, scale=0.1)
+    B = rand_f32(r, k, n, scale=0.1)
+    P = jnp.asarray(
+        np.stack([r.permutation(n) for _ in range(k)]).astype(np.int32)
+    )
+    np.testing.assert_allclose(
+        kernels.acdc_cascade(x, A, D, B, P, relu=relu),
+        ref.acdc_cascade(x, A, D, B, P, relu=relu),
+        atol=2e-4,
+    )
+
+
+def test_cascade_k1_equals_single_layer():
+    n, r = 64, rng(9)
+    x = rand_f32(r, 4, n)
+    a = rand_f32(r, n, loc=1.0)
+    d = rand_f32(r, n, loc=1.0)
+    b = rand_f32(r, n)
+    np.testing.assert_allclose(
+        kernels.acdc_cascade(x, a[None], d[None], b[None]),
+        kernels.acdc(x, a, d, b),
+        atol=1e-4,
+    )
+
+
+def test_cascade_identity_perm_equals_no_perm():
+    n, k, r = 32, 3, rng(10)
+    x = rand_f32(r, 4, n)
+    A = rand_f32(r, k, n, loc=1.0)
+    D = rand_f32(r, k, n, loc=1.0)
+    B = jnp.zeros((k, n), jnp.float32)
+    ident = jnp.tile(jnp.arange(n, dtype=jnp.int32)[None], (k, 1))
+    np.testing.assert_allclose(
+        kernels.acdc_cascade(x, A, D, B, ident),
+        kernels.acdc_cascade(x, A, D, B, None),
+        atol=1e-5,
+    )
+
+
+def test_cascade_composes_dense_equivalents():
+    n, k, r = 16, 3, rng(12)
+    A = rand_f32(r, k, n, loc=1.0, scale=0.2)
+    D = rand_f32(r, k, n, loc=1.0, scale=0.2)
+    x = rand_f32(r, 5, n)
+    w = ref.cascade_dense_equivalent(A, D)
+    np.testing.assert_allclose(
+        kernels.acdc_cascade(x, A, D), x @ w, atol=1e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shapes and dtypes (required coverage)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_pow=st.integers(min_value=2, max_value=7),  # n = 4..128
+    batch=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_acdc_shapes(n_pow, batch, seed):
+    n = 2**n_pow
+    r = rng(seed)
+    x = rand_f32(r, batch, n)
+    a = rand_f32(r, n, loc=1.0, scale=0.2)
+    d = rand_f32(r, n, loc=1.0, scale=0.2)
+    b = rand_f32(r, n, scale=0.2)
+    np.testing.assert_allclose(
+        kernels.acdc(x, a, d, b), ref.acdc(x, a, d, b), atol=2e-4
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_pow=st.integers(min_value=2, max_value=6),
+    k=st.integers(min_value=1, max_value=6),
+    batch=st.integers(min_value=1, max_value=8),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_cascade_shapes(n_pow, k, batch, relu, seed):
+    n = 2**n_pow
+    r = rng(seed)
+    x = rand_f32(r, batch, n)
+    A = rand_f32(r, k, n, loc=1.0, scale=0.15)
+    D = rand_f32(r, k, n, loc=1.0, scale=0.15)
+    B = rand_f32(r, k, n, scale=0.1)
+    P = jnp.asarray(np.stack([r.permutation(n) for _ in range(k)]).astype(np.int32))
+    np.testing.assert_allclose(
+        kernels.acdc_cascade(x, A, D, B, P, relu=relu),
+        ref.acdc_cascade(x, A, D, B, P, relu=relu),
+        atol=5e-4,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_acdc_dtypes(dtype, seed):
+    n, batch = 32, 4
+    r = rng(seed)
+    tol = 1e-4 if dtype == "float32" else 5e-2
+    x = jnp.asarray(r.normal(0, 1, (batch, n)), dtype=dtype)
+    a = jnp.asarray(r.normal(1, 0.1, (n,)), dtype=dtype)
+    d = jnp.asarray(r.normal(1, 0.1, (n,)), dtype=dtype)
+    b = jnp.asarray(r.normal(0, 0.1, (n,)), dtype=dtype)
+    got = kernels.acdc(x, a, d, b).astype(jnp.float32)
+    want = ref.acdc(
+        x.astype(jnp.float32), a.astype(jnp.float32),
+        d.astype(jnp.float32), b.astype(jnp.float32),
+    )
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+def test_vmem_estimate_within_tpu_budget():
+    # The fused cascade for the paper's largest CNN config must fit VMEM.
+    assert kernels.vmem_bytes(256, k=12, block_b=128) < 16 * 2**20
+    assert kernels.vmem_bytes(1024, k=2, block_b=128) < 16 * 2**20

@@ -1,0 +1,138 @@
+//! E7 — serving hot path: coordinator overhead and end-to-end
+//! latency/throughput through the dynamic batcher.
+//!
+//! Three sections:
+//! 1. batch-policy micro-bench (pure decision logic, ns/decision);
+//! 2. native-executor serving (isolates coordinator overhead from PJRT);
+//! 3. PJRT serving end-to-end across batcher deadlines.
+//!
+//! Run: `make artifacts && cargo bench --bench coordinator_hotpath`
+//! Env: `ACDC_BENCH_FAST=1` shrinks request counts.
+
+use acdc::config::ServeConfig;
+use acdc::coordinator::batcher::BatchPolicy;
+use acdc::serve::{ServeParams, Server};
+use acdc::util::bench::{black_box, fmt_ns, percentile, Bench, Table};
+use acdc::util::rng::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn drive(server: &Arc<Server>, n: usize, requests: usize, clients: usize) -> (f64, Vec<f64>) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|ci| {
+            let server = Arc::clone(server);
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(77 + ci as u64);
+                let mut lats = Vec::with_capacity(requests / clients);
+                for _ in 0..requests / clients {
+                    let row = rng.normal_vec(n, 0.0, 1.0);
+                    let t = Instant::now();
+                    let rx = loop {
+                        match server.submit(row.clone()) {
+                            Ok(rx) => break rx,
+                            Err(_) => std::thread::sleep(Duration::from_micros(50)),
+                        }
+                    };
+                    rx.recv_timeout(Duration::from_secs(120))
+                        .expect("response")
+                        .output
+                        .expect("ok");
+                    lats.push(t.elapsed().as_nanos() as f64);
+                }
+                lats
+            })
+        })
+        .collect();
+    let mut lats = vec![];
+    for h in handles {
+        lats.extend(h.join().unwrap());
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (t0.elapsed().as_secs_f64(), lats)
+}
+
+fn main() {
+    let fast = std::env::var("ACDC_BENCH_FAST").is_ok();
+    let requests = if fast { 400 } else { 4_000 };
+
+    // 1. policy micro-bench
+    let policy = BatchPolicy::new(vec![1, 8, 32, 128], Duration::from_micros(2_000));
+    let now = Instant::now();
+    let bench = Bench::quick();
+    let m = bench.run("policy.decide", || {
+        black_box(policy.decide(black_box(17), Some(now), now));
+    });
+    println!(
+        "batch-policy decision: {} median ({} iters) — pure coordinator logic\n",
+        fmt_ns(m.median_ns),
+        m.iters
+    );
+
+    // 2. native executor (coordinator overhead without PJRT)
+    let n = 256;
+    let mut rng = Pcg32::seeded(3);
+    let cascade = acdc::sell::acdc::AcdcCascade::nonlinear(
+        n,
+        12,
+        acdc::sell::init::DiagInit::CAFFENET,
+        &mut rng,
+    );
+    let cfg = ServeConfig {
+        buckets: vec![1, 8, 32, 128],
+        max_wait_us: 1_000,
+        workers: 2,
+        queue_cap: 8_192,
+        ..Default::default()
+    };
+    let server = Arc::new(Server::start_native(&cfg, cascade));
+    let (wall, lats) = drive(&server, n, requests, 8);
+    let mut t = Table::new(&["leg", "req/s", "p50", "p90", "p99"]);
+    t.row(vec![
+        "native ACDC-12 (N=256)".into(),
+        format!("{:.0}", lats.len() as f64 / wall),
+        fmt_ns(percentile(&lats, 50.0)),
+        fmt_ns(percentile(&lats, 90.0)),
+        fmt_ns(percentile(&lats, 99.0)),
+    ]);
+    println!("{}", server.metrics_report());
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+
+    // 3. PJRT end-to-end at two batcher deadlines
+    if let Ok(_probe) = acdc::runtime::Engine::open(Path::new("artifacts")) {
+        for max_wait_us in [500u64, 4_000] {
+            let cfg = ServeConfig {
+                artifacts_dir: "artifacts".into(),
+                buckets: vec![1, 8, 32, 128],
+                max_wait_us,
+                workers: 2,
+                queue_cap: 8_192,
+            };
+            let server = Arc::new(
+                Server::start_pjrt(&cfg, ServeParams::random(n, 12, 10, 1), n).expect("server"),
+            );
+            // warmup compiles every bucket
+            for _ in 0..8 {
+                let mut rng = Pcg32::seeded(9);
+                server
+                    .infer(rng.normal_vec(n, 0.0, 1.0), Duration::from_secs(120))
+                    .expect("warmup");
+            }
+            let (wall, lats) = drive(&server, n, requests, 8);
+            t.row(vec![
+                format!("pjrt ACDC-12, deadline {}µs", max_wait_us),
+                format!("{:.0}", lats.len() as f64 / wall),
+                fmt_ns(percentile(&lats, 50.0)),
+                fmt_ns(percentile(&lats, 90.0)),
+                fmt_ns(percentile(&lats, 99.0)),
+            ]);
+            Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+        }
+    } else {
+        println!("(PJRT legs skipped — artifacts not built)");
+    }
+
+    println!("coordinator hot path (E7), {} requests, 8 client threads", requests);
+    t.print();
+}

@@ -1,0 +1,31 @@
+//! E4 — regenerates **Figure 4**: the parameter-reduction vs error-increase
+//! trade-off scatter for train-time-applicable SELLs, as a text series
+//! (published points + this repo's measured MiniCaffeNet point).
+//!
+//! Run: `make artifacts && cargo bench --bench fig4_tradeoff`
+//! Env: `ACDC_BENCH_FAST=1` shrinks the measured leg.
+
+use acdc::experiments::table1;
+use acdc::runtime::Engine;
+use std::path::Path;
+
+fn main() {
+    let fast = std::env::var("ACDC_BENCH_FAST").is_ok();
+    let measured = Engine::open(Path::new("artifacts")).ok().and_then(|engine| {
+        let (train_rows, test_rows, steps) = if fast { (512, 512, 80) } else { (1_500, 1_024, 300) };
+        println!("training measured point ({steps} steps per variant)...");
+        table1::run_measured(&engine, train_rows, test_rows, steps, 1).ok()
+    });
+    print!("{}", table1::render_fig4(measured.as_deref()));
+    if let Some(rows) = &measured {
+        match table1::check_paper_shape(rows) {
+            Ok(()) => println!("paper-shape checks: OK"),
+            Err(e) => {
+                println!("paper-shape checks: FAILED — {e}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        println!("(measured point skipped — artifacts not built)");
+    }
+}

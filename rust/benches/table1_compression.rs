@@ -1,0 +1,45 @@
+//! E3 — regenerates **Table 1**: the parameter/accuracy comparison.
+//!
+//! Analytic leg: exact parameter arithmetic at CaffeNet scale for every
+//! published row (including the 165,888-parameter ACDC stack identity).
+//! Measured leg: MiniCaffeNet on synthimg (substitution S2) — dense FC vs
+//! ACDC-12 FC trained through the AOT artifacts, reporting the error
+//! increase next to the parameter reduction.
+//!
+//! Run: `make artifacts && cargo bench --bench table1_compression`
+//! Env: `ACDC_BENCH_FAST=1` shrinks the training runs.
+
+use acdc::experiments::table1;
+use acdc::runtime::Engine;
+use std::path::Path;
+
+fn main() {
+    print!("{}", table1::render_analytic());
+    println!();
+
+    let fast = std::env::var("ACDC_BENCH_FAST").is_ok();
+    let engine = match Engine::open(Path::new("artifacts")) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("(measured leg skipped — {e})");
+            return;
+        }
+    };
+    let (train_rows, test_rows, steps) = if fast { (512, 512, 80) } else { (2_000, 1_024, 400) };
+    println!("measured leg: MiniCaffeNet, {train_rows} train rows, {steps} steps per variant...");
+    let t0 = std::time::Instant::now();
+    let rows = table1::run_measured(&engine, train_rows, test_rows, steps, 0).expect("measured");
+    print!("{}", table1::render_measured(&rows));
+    println!("total wall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    table1::check_audit_consistency(&rows).expect("audit consistency");
+    match table1::check_paper_shape(&rows) {
+        Ok(()) => println!(
+            "paper-shape checks: OK — >5x parameter reduction at small accuracy cost"
+        ),
+        Err(e) => {
+            println!("paper-shape checks: FAILED — {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Binary checkpoints: named f32 arrays with shapes, written atomically.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "ACDC" | u32 version | u32 n_entries
+//! per entry: u32 name_len | name bytes | u32 rank | u64 dims[rank]
+//!            | u64 data_len | f32 data[data_len]
+//! trailer: u64 fnv1a of everything before the trailer
+//! ```
+//! Used by the training orchestrator to persist parameter banks and by the
+//! serving launcher to load them back.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"ACDC";
+const VERSION: u32 = 1;
+
+/// An in-memory checkpoint: ordered name → tensor map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Checkpoint {
+    pub entries: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Checkpoint {
+        Checkpoint::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.entries.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.entries.len() as u32).to_le_bytes());
+        for (name, t) in &self.entries {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+            for &d in t.shape() {
+                out.extend_from_slice(&(d as u64).to_le_bytes());
+            }
+            out.extend_from_slice(&(t.numel() as u64).to_le_bytes());
+            for &v in t.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let digest = fnv1a(&out);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Deserialize, verifying magic/version/checksum.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint, String> {
+        if bytes.len() < 12 + 8 {
+            return Err("checkpoint too short".into());
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let want = u64::from_le_bytes(trailer.try_into().unwrap());
+        if fnv1a(body) != want {
+            return Err("checksum mismatch (corrupt checkpoint)".into());
+        }
+        let mut r = Cursor { buf: body, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            return Err("bad magic".into());
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            return Err(format!("unsupported version {version}"));
+        }
+        let n = r.u32()? as usize;
+        let mut ckpt = Checkpoint::new();
+        for _ in 0..n {
+            let name_len = r.u32()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .map_err(|_| "invalid name utf8".to_string())?;
+            let rank = r.u32()? as usize;
+            if rank > 8 {
+                return Err(format!("implausible rank {rank}"));
+            }
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.u64()? as usize);
+            }
+            let data_len = r.u64()? as usize;
+            if data_len != shape.iter().product::<usize>() {
+                return Err(format!("shape/data mismatch for '{name}'"));
+            }
+            let raw = r.take(data_len * 4)?;
+            let mut data = Vec::with_capacity(data_len);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            ckpt.insert(&name, Tensor::from_vec(&shape, data));
+        }
+        if r.pos != body.len() {
+            return Err("trailing bytes in checkpoint".into());
+        }
+        Ok(ckpt)
+    }
+
+    /// Write atomically (tmp file + rename).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+            f.write_all(&self.to_bytes())
+                .map_err(|e| format!("write: {e}"))?;
+            f.sync_all().map_err(|e| format!("sync: {e}"))?;
+        }
+        std::fs::rename(&tmp, path).map_err(|e| format!("rename: {e}"))
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint, String> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| format!("open {}: {e}", path.display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes).map_err(|e| format!("read: {e}"))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err("unexpected end of checkpoint".into());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// FNV-1a 64-bit hash.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Pcg32::seeded(1);
+        let mut c = Checkpoint::new();
+        c.insert("a_stack", Tensor::from_vec(&[4, 8], rng.normal_vec(32, 1.0, 0.1)));
+        c.insert("d_stack", Tensor::from_vec(&[4, 8], rng.normal_vec(32, 1.0, 0.1)));
+        c.insert("scalar", Tensor::from_vec(&[], vec![3.25]));
+        c
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = sample();
+        let re = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, re);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let c = sample();
+        let dir = std::env::temp_dir().join(format!("acdc_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        c.save(&path).unwrap();
+        let re = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, re);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let c = sample();
+        let mut bytes = c.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let c = sample();
+        let bytes = c.to_bytes();
+        assert!(Checkpoint::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let c = sample();
+        let mut bytes = c.to_bytes();
+        bytes[0] = b'X';
+        // checksum also fails, but even with a fixed checksum magic must fail
+        let body_len = bytes.len() - 8;
+        let digest = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&digest.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.contains("magic"));
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let c = Checkpoint::new();
+        let re = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert!(re.is_empty());
+    }
+
+    #[test]
+    fn get_by_name() {
+        let c = sample();
+        assert_eq!(c.get("scalar").unwrap().data(), &[3.25]);
+        assert!(c.get("missing").is_none());
+    }
+}

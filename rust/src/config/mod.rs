@@ -1,0 +1,449 @@
+//! Typed run configuration + a TOML-subset parser (serde/toml are not in
+//! the offline registry).
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. That is
+//! exactly what the launcher's config files need.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_int().and_then(|i| usize::try_from(i).ok())
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Parsed config: `section.key -> value` (top-level keys use section "").
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError {
+                msg: msg.to_string(),
+                line: ln + 1,
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err("unterminated section header"))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let full_key = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            cfg.values.insert(full_key, value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Config::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(tok: &str) -> Result<Value, String> {
+    if tok.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = tok.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if tok == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if tok == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = tok.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|t| parse_value(t.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = tok.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = tok.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{tok}'"))
+}
+
+// ---------------------------------------------------------------------------
+// Typed run configs
+// ---------------------------------------------------------------------------
+
+/// Serving coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    /// Batch buckets the batcher may dispatch (must match AOT buckets).
+    pub buckets: Vec<usize>,
+    /// Max time a request may wait for batch formation.
+    pub max_wait_us: u64,
+    /// Worker threads executing PJRT calls.
+    pub workers: usize,
+    /// Bound on queued requests before backpressure rejections.
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            buckets: vec![1, 8, 32, 128],
+            max_wait_us: 2_000,
+            workers: 2,
+            queue_cap: 4_096,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_config(cfg: &Config) -> Result<ServeConfig, String> {
+        let mut sc = ServeConfig {
+            artifacts_dir: cfg.get_str("serve.artifacts_dir", "artifacts"),
+            max_wait_us: cfg.get_usize("serve.max_wait_us", 2_000) as u64,
+            workers: cfg.get_usize("serve.workers", 2),
+            queue_cap: cfg.get_usize("serve.queue_cap", 4_096),
+            ..Default::default()
+        };
+        if let Some(v) = cfg.get("serve.buckets") {
+            let arr = v.as_array().ok_or("serve.buckets must be an array")?;
+            sc.buckets = arr
+                .iter()
+                .map(|v| v.as_usize().ok_or("bucket must be a positive integer"))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.buckets.is_empty() {
+            return Err("at least one batch bucket required".into());
+        }
+        let mut sorted = self.buckets.clone();
+        sorted.sort_unstable();
+        if sorted != self.buckets {
+            return Err("buckets must be ascending".into());
+        }
+        if self.workers == 0 {
+            return Err("workers must be >= 1".into());
+        }
+        if self.queue_cap == 0 {
+            return Err("queue_cap must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Training orchestrator configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: String,
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f64,
+    /// Multiply lr by `lr_decay` every `lr_decay_every` steps (§6.2 style).
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    pub eval_every: usize,
+    pub seed: u64,
+    pub checkpoint_path: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts_dir: "artifacts".into(),
+            steps: 400,
+            batch: 64,
+            lr: 0.02,
+            lr_decay: 0.1,
+            lr_decay_every: 100_000,
+            eval_every: 50,
+            seed: 0,
+            checkpoint_path: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_config(cfg: &Config) -> Result<TrainConfig, String> {
+        let tc = TrainConfig {
+            artifacts_dir: cfg.get_str("train.artifacts_dir", "artifacts"),
+            steps: cfg.get_usize("train.steps", 400),
+            batch: cfg.get_usize("train.batch", 64),
+            lr: cfg.get_f64("train.lr", 0.02),
+            lr_decay: cfg.get_f64("train.lr_decay", 0.1),
+            lr_decay_every: cfg.get_usize("train.lr_decay_every", 100_000),
+            eval_every: cfg.get_usize("train.eval_every", 50),
+            seed: cfg.get_usize("train.seed", 0) as u64,
+            checkpoint_path: cfg
+                .get("train.checkpoint_path")
+                .and_then(|v| v.as_str())
+                .map(String::from),
+        };
+        tc.validate()?;
+        Ok(tc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps == 0 {
+            return Err("steps must be >= 1".into());
+        }
+        if self.lr <= 0.0 {
+            return Err("lr must be positive".into());
+        }
+        if !(0.0..=1.0).contains(&self.lr_decay) {
+            return Err("lr_decay must be in (0, 1]".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# launcher config
+[serve]
+artifacts_dir = "artifacts"
+buckets = [1, 8, 32, 128]
+max_wait_us = 500
+workers = 4
+
+[train]
+steps = 300
+lr = 0.05        # per §6.2
+checkpoint_path = "ckpt.bin"
+verbose = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get_str("serve.artifacts_dir", ""), "artifacts");
+        assert_eq!(cfg.get_usize("serve.workers", 0), 4);
+        assert_eq!(cfg.get_f64("train.lr", 0.0), 0.05);
+        assert!(cfg.get_bool("train.verbose", false));
+        let arr = cfg.get("serve.buckets").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 4);
+    }
+
+    #[test]
+    fn comments_stripped_but_not_in_strings() {
+        let cfg = Config::parse("key = \"a#b\" # trailing").unwrap();
+        assert_eq!(cfg.get_str("key", ""), "a#b");
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let cfg = Config::parse("alpha = 1\n[s]\nbeta = 2").unwrap();
+        assert_eq!(cfg.get_usize("alpha", 0), 1);
+        assert_eq!(cfg.get_usize("s.beta", 0), 2);
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = Config::parse("good = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Config::parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(Config::parse("k = \"open").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+        assert!(Config::parse("k = what").is_err());
+        assert!(Config::parse("= 3").is_err());
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let cfg = Config::parse("a = -5\nb = 2.5e-3").unwrap();
+        assert_eq!(cfg.get("a").unwrap().as_int(), Some(-5));
+        assert!((cfg.get_f64("b", 0.0) - 2.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serve_config_from_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.buckets, vec![1, 8, 32, 128]);
+        assert_eq!(sc.max_wait_us, 500);
+        assert_eq!(sc.workers, 4);
+    }
+
+    #[test]
+    fn serve_config_validation() {
+        let mut sc = ServeConfig::default();
+        sc.buckets = vec![8, 1];
+        assert!(sc.validate().is_err());
+        sc.buckets = vec![];
+        assert!(sc.validate().is_err());
+        sc = ServeConfig::default();
+        sc.workers = 0;
+        assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn train_config_from_config_and_validation() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let tc = TrainConfig::from_config(&cfg).unwrap();
+        assert_eq!(tc.steps, 300);
+        assert_eq!(tc.checkpoint_path.as_deref(), Some("ckpt.bin"));
+        let mut bad = tc.clone();
+        bad.lr = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        assert!(ServeConfig::default().validate().is_ok());
+        assert!(TrainConfig::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,292 @@
+//! Size-bucketed dynamic batcher with deadline flush.
+//!
+//! Policy (vLLM-style continuous batching, specialized to fixed AOT batch
+//! buckets — the XLA programs are compiled for static shapes, so the
+//! batcher picks which compiled bucket to dispatch):
+//!
+//! * accumulate requests in arrival order;
+//! * when the queue can fill the **largest** bucket, dispatch immediately;
+//! * when the **oldest** request has waited ≥ `max_wait`, dispatch the
+//!   smallest bucket ≥ queue length (padding the remainder) — bounded
+//!   tail latency at the cost of padding waste;
+//! * otherwise keep waiting.
+//!
+//! Pure decision logic lives in [`BatchPolicy`] (unit-testable without
+//! threads); [`BatcherThread`] wires it to channels.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::request::{FormedBatch, InferRequest};
+
+/// Pure batch-formation policy over sorted buckets.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Ascending batch sizes with compiled executables.
+    pub buckets: Vec<usize>,
+    /// Deadline: max time the oldest request may wait.
+    pub max_wait: Duration,
+}
+
+/// What the policy decides for the current queue state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Dispatch now with this bucket size.
+    Dispatch { bucket: usize, take: usize },
+    /// Wait at most this long for more arrivals.
+    Wait(Duration),
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> BatchPolicy {
+        assert!(!buckets.is_empty());
+        buckets.sort_unstable();
+        buckets.dedup();
+        BatchPolicy { buckets, max_wait }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket that fits `m` rows (None if m == 0).
+    pub fn bucket_for(&self, m: usize) -> Option<usize> {
+        if m == 0 {
+            return None;
+        }
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= m)
+            .or_else(|| Some(self.max_bucket()))
+    }
+
+    /// Decide given queue length and the oldest request's enqueue time.
+    pub fn decide(&self, queue_len: usize, oldest: Option<Instant>, now: Instant) -> Decision {
+        if queue_len == 0 {
+            return Decision::Wait(self.max_wait);
+        }
+        let max_b = self.max_bucket();
+        if queue_len >= max_b {
+            return Decision::Dispatch {
+                bucket: max_b,
+                take: max_b,
+            };
+        }
+        let oldest = oldest.expect("non-empty queue must have oldest");
+        let waited = now.saturating_duration_since(oldest);
+        if waited >= self.max_wait {
+            let bucket = self.bucket_for(queue_len).unwrap();
+            return Decision::Dispatch {
+                bucket,
+                take: queue_len.min(bucket),
+            };
+        }
+        Decision::Wait(self.max_wait - waited)
+    }
+}
+
+/// The batcher loop: drains a request channel, forms batches, forwards
+/// them to the worker channel. Returns when the request channel closes
+/// (flushing any remainder).
+pub fn run_batcher(
+    policy: BatchPolicy,
+    rx: Receiver<InferRequest>,
+    tx: Sender<FormedBatch>,
+) {
+    let mut queue: Vec<InferRequest> = Vec::new();
+    loop {
+        let now = Instant::now();
+        let decision = policy.decide(queue.len(), queue.first().map(|r| r.enqueued_at), now);
+        match decision {
+            Decision::Dispatch { bucket, take } => {
+                let rest = queue.split_off(take);
+                let batch = FormedBatch {
+                    bucket,
+                    requests: std::mem::replace(&mut queue, rest),
+                    formed_at: now,
+                };
+                if tx.send(batch).is_err() {
+                    return; // workers gone
+                }
+            }
+            Decision::Wait(dur) => match rx.recv_timeout(dur) {
+                Ok(req) => {
+                    queue.push(req);
+                    // opportunistically drain whatever else is ready
+                    while queue.len() < policy.max_bucket() {
+                        match rx.try_recv() {
+                            Ok(r) => queue.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // flush remainder then exit
+                    while !queue.is_empty() {
+                        let take = queue.len().min(policy.max_bucket());
+                        let bucket = policy.bucket_for(take).unwrap();
+                        let rest = queue.split_off(take);
+                        let batch = FormedBatch {
+                            bucket,
+                            requests: std::mem::replace(&mut queue, rest),
+                            formed_at: Instant::now(),
+                        };
+                        if tx.send(batch).is_err() {
+                            return;
+                        }
+                    }
+                    return;
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 8, 32, 128], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest_fit() {
+        let p = policy();
+        assert_eq!(p.bucket_for(1), Some(1));
+        assert_eq!(p.bucket_for(2), Some(8));
+        assert_eq!(p.bucket_for(8), Some(8));
+        assert_eq!(p.bucket_for(9), Some(32));
+        assert_eq!(p.bucket_for(200), Some(128)); // clamp to max
+        assert_eq!(p.bucket_for(0), None);
+    }
+
+    #[test]
+    fn decide_empty_queue_waits_full_deadline() {
+        let p = policy();
+        assert_eq!(
+            p.decide(0, None, Instant::now()),
+            Decision::Wait(p.max_wait)
+        );
+    }
+
+    #[test]
+    fn decide_full_queue_dispatches_max_bucket() {
+        let p = policy();
+        let d = p.decide(128, Some(Instant::now()), Instant::now());
+        assert_eq!(
+            d,
+            Decision::Dispatch {
+                bucket: 128,
+                take: 128
+            }
+        );
+        // over-full also dispatches exactly max bucket
+        let d = p.decide(300, Some(Instant::now()), Instant::now());
+        assert_eq!(
+            d,
+            Decision::Dispatch {
+                bucket: 128,
+                take: 128
+            }
+        );
+    }
+
+    #[test]
+    fn decide_deadline_forces_partial_dispatch() {
+        let p = policy();
+        let old = Instant::now() - Duration::from_millis(10);
+        let d = p.decide(3, Some(old), Instant::now());
+        assert_eq!(d, Decision::Dispatch { bucket: 8, take: 3 });
+    }
+
+    #[test]
+    fn decide_fresh_queue_waits_remaining() {
+        let p = policy();
+        let now = Instant::now();
+        match p.decide(3, Some(now), now) {
+            Decision::Wait(d) => assert!(d <= p.max_wait),
+            other => panic!("expected wait, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn buckets_sorted_and_deduped() {
+        let p = BatchPolicy::new(vec![32, 1, 8, 8], Duration::from_millis(1));
+        assert_eq!(p.buckets, vec![1, 8, 32]);
+    }
+
+    fn mk_req(id: u64) -> (InferRequest, std::sync::mpsc::Receiver<super::super::request::InferResponse>) {
+        let (tx, rx) = channel();
+        (
+            InferRequest {
+                id,
+                features: vec![0.0; 4],
+                enqueued_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn batcher_thread_forms_deadline_batch() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let p = BatchPolicy::new(vec![4, 16], Duration::from_millis(1));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let mut keep = vec![];
+        for id in 0..3 {
+            let (r, rx) = mk_req(id);
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        let batch = batch_rx.recv_timeout(Duration::from_millis(200)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.bucket, 4);
+        drop(req_tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_thread_flushes_on_close() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let p = BatchPolicy::new(vec![4, 16], Duration::from_secs(60)); // never deadline
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let mut keep = vec![];
+        for id in 0..6 {
+            let (r, rx) = mk_req(id);
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        drop(req_tx); // close → flush
+        let b1 = batch_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(b1.requests.len(), 6);
+        assert_eq!(b1.bucket, 16);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn batcher_thread_dispatches_immediately_when_full() {
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = channel();
+        let p = BatchPolicy::new(vec![2], Duration::from_secs(60));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let mut keep = vec![];
+        for id in 0..4 {
+            let (r, rx) = mk_req(id);
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        let b1 = batch_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        let b2 = batch_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(b1.requests.len(), 2);
+        assert_eq!(b2.requests.len(), 2);
+        drop(req_tx);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,299 @@
+//! Serving coordinator: router → bucketed dynamic batcher → worker pool.
+//!
+//! The paper's system-level pitch is efficiency at serving time; this
+//! module is the deployment substrate around the AOT-compiled SELL
+//! programs. Shape: requests enter through [`Coordinator::submit`]
+//! (bounded queue → backpressure), a batcher thread forms size-bucketed
+//! batches under a latency deadline, and a worker pool executes them on
+//! thread-local executors (PJRT or native reference).
+
+pub mod batcher;
+pub mod request;
+pub mod worker;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::metrics::Registry;
+use batcher::BatchPolicy;
+use request::{InferRequest, InferResponse};
+use worker::{ExecutorFactory, WorkerPool};
+
+/// Submission error (backpressure or shutdown).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Bounded queue is full — caller should retry/shed load.
+    QueueFull,
+    /// Coordinator is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "request queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator closed"),
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    req_tx: Option<SyncSender<InferRequest>>,
+    batcher: Option<JoinHandle<()>>,
+    pool: Option<WorkerPool>,
+    next_id: AtomicU64,
+    metrics: Arc<Registry>,
+    width: usize,
+    accepted: Arc<crate::metrics::Counter>,
+    rejected: Arc<crate::metrics::Counter>,
+}
+
+impl Coordinator {
+    /// Start batcher + workers for one model of input width `width`.
+    pub fn start(
+        cfg: &ServeConfig,
+        width: usize,
+        factory: ExecutorFactory,
+        metrics: Arc<Registry>,
+    ) -> Coordinator {
+        cfg.validate().expect("invalid serve config");
+        let (req_tx, req_rx) = sync_channel::<InferRequest>(cfg.queue_cap);
+        let (batch_tx, batch_rx) = std::sync::mpsc::channel();
+        let policy = BatchPolicy::new(
+            cfg.buckets.clone(),
+            Duration::from_micros(cfg.max_wait_us),
+        );
+        let batcher = std::thread::Builder::new()
+            .name("acdc-batcher".into())
+            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx))
+            .expect("spawn batcher");
+        let pool = WorkerPool::spawn(cfg.workers, factory, batch_rx, Arc::clone(&metrics));
+        let accepted = metrics.counter("coordinator.accepted");
+        let rejected = metrics.counter("coordinator.rejected");
+        Coordinator {
+            req_tx: Some(req_tx),
+            batcher: Some(batcher),
+            pool: Some(pool),
+            next_id: AtomicU64::new(1),
+            metrics,
+            width,
+            accepted,
+            rejected,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Submit one feature row; returns the response receiver.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        assert_eq!(features.len(), self.width, "feature width mismatch");
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        };
+        let Some(req_tx) = &self.req_tx else {
+            return Err(SubmitError::Closed);
+        };
+        match req_tx.try_send(req) {
+            Ok(()) => {
+                self.accepted.inc();
+                Ok(rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.rejected.inc();
+                Err(SubmitError::QueueFull)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Convenience: submit and block for the answer.
+    pub fn infer(&self, features: Vec<f32>, timeout: Duration) -> Result<InferResponse, String> {
+        let rx = self.submit(features).map_err(|e| e.to_string())?;
+        rx.recv_timeout(timeout)
+            .map_err(|e| format!("response wait: {e}"))
+    }
+
+    /// Graceful shutdown: stop intake, drain, join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.req_tx.take(); // close intake → batcher flushes and exits
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join();
+        }
+        if let Some(p) = self.pool.take() {
+            p.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::BatchExecutor;
+
+    struct EchoExecutor {
+        n: usize,
+    }
+
+    impl BatchExecutor for EchoExecutor {
+        fn width(&self) -> usize {
+            self.n
+        }
+        fn out_width(&self) -> usize {
+            self.n
+        }
+        fn execute(&mut self, _bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+            Ok(padded.to_vec())
+        }
+    }
+
+    fn cfg() -> ServeConfig {
+        ServeConfig {
+            buckets: vec![1, 4, 16],
+            max_wait_us: 500,
+            workers: 2,
+            queue_cap: 64,
+            ..Default::default()
+        }
+    }
+
+    fn echo_coordinator(n: usize) -> Coordinator {
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(move || Ok(Box::new(EchoExecutor { n }) as Box<dyn BatchExecutor>));
+        Coordinator::start(&cfg(), n, factory, metrics)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = echo_coordinator(4);
+        let resp = c
+            .infer(vec![1.0, 2.0, 3.0, 4.0], Duration::from_secs(2))
+            .unwrap();
+        assert_eq!(resp.output.unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let c = Arc::new(echo_coordinator(2));
+        let mut rxs = vec![];
+        for i in 0..50 {
+            rxs.push(c.submit(vec![i as f32, -(i as f32)]).unwrap());
+        }
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(resp.output.unwrap(), vec![i as f32, -(i as f32)]);
+        }
+        assert_eq!(c.metrics().counter("coordinator.accepted").get(), 50);
+    }
+
+    #[test]
+    #[should_panic]
+    fn submit_rejects_wrong_width() {
+        let c = echo_coordinator(4);
+        let _ = c.submit(vec![1.0]);
+    }
+
+    #[test]
+    fn responses_preserve_request_identity() {
+        // Batches mix rows; each caller must get *its* row back.
+        let c = echo_coordinator(1);
+        let mut pairs = vec![];
+        for i in 0..20 {
+            pairs.push((i, c.submit(vec![i as f32 * 10.0]).unwrap()));
+        }
+        for (i, rx) in pairs {
+            let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert_eq!(resp.output.unwrap(), vec![i as f32 * 10.0]);
+        }
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_inflight_work() {
+        let c = echo_coordinator(2);
+        let mut rxs = vec![];
+        for i in 0..10 {
+            rxs.push(c.submit(vec![i as f32, 0.0]).unwrap());
+        }
+        c.shutdown(); // must flush, not hang
+        let mut answered = 0;
+        for rx in rxs {
+            if rx.recv_timeout(Duration::from_millis(100)).is_ok() {
+                answered += 1;
+            }
+        }
+        assert_eq!(answered, 10, "all in-flight requests answered on shutdown");
+    }
+
+    #[test]
+    fn backpressure_rejects_when_queue_full() {
+        // 1 worker blocked by slow executor + tiny queue ⇒ QueueFull.
+        struct SlowExecutor;
+        impl BatchExecutor for SlowExecutor {
+            fn width(&self) -> usize {
+                1
+            }
+            fn out_width(&self) -> usize {
+                1
+            }
+            fn execute(&mut self, _b: usize, p: &[f32]) -> Result<Vec<f32>, String> {
+                std::thread::sleep(Duration::from_millis(50));
+                Ok(p.to_vec())
+            }
+        }
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(SlowExecutor) as Box<dyn BatchExecutor>));
+        let c = Coordinator::start(
+            &ServeConfig {
+                buckets: vec![1],
+                max_wait_us: 1,
+                workers: 1,
+                queue_cap: 2,
+                ..Default::default()
+            },
+            1,
+            factory,
+            metrics,
+        );
+        let mut keep = vec![];
+        let mut saw_full = false;
+        for i in 0..200 {
+            match c.submit(vec![i as f32]) {
+                Ok(rx) => keep.push(rx),
+                Err(SubmitError::QueueFull) => {
+                    saw_full = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(saw_full, "expected backpressure rejection");
+        assert!(c.metrics().counter("coordinator.rejected").get() >= 1);
+    }
+}

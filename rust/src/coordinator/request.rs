@@ -1,0 +1,105 @@
+//! Request/response types flowing through the serving coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// An inference request: a feature row destined for a SELL classifier.
+#[derive(Debug)]
+pub struct InferRequest {
+    pub id: RequestId,
+    /// Feature vector (length = model width N).
+    pub features: Vec<f32>,
+    /// Enqueue timestamp for latency accounting.
+    pub enqueued_at: Instant,
+    /// Where the response is delivered.
+    pub reply: Sender<InferResponse>,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: RequestId,
+    /// Model output row (e.g. class log-probabilities).
+    pub output: Result<Vec<f32>, String>,
+    /// Time spent queued before batch formation.
+    pub queue_us: u64,
+    /// Batch execution wall time.
+    pub execute_us: u64,
+    /// Bucket size this request was served in.
+    pub batch_size: usize,
+}
+
+/// A batch formed by the batcher, ready for a worker.
+#[derive(Debug)]
+pub struct FormedBatch {
+    /// Bucket capacity chosen (rows are padded up to this).
+    pub bucket: usize,
+    /// The actual requests (len ≤ bucket).
+    pub requests: Vec<InferRequest>,
+    pub formed_at: Instant,
+}
+
+impl FormedBatch {
+    /// Occupancy in [0, 1] — 1.0 means no padding waste.
+    pub fn occupancy(&self) -> f64 {
+        self.requests.len() as f64 / self.bucket as f64
+    }
+
+    /// Flatten request rows into a padded [bucket, n] row-major buffer.
+    pub fn padded_features(&self, n: usize) -> Vec<f32> {
+        let mut buf = vec![0.0f32; self.bucket * n];
+        for (i, req) in self.requests.iter().enumerate() {
+            assert_eq!(req.features.len(), n, "request width mismatch");
+            buf[i * n..(i + 1) * n].copy_from_slice(&req.features);
+        }
+        buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn req(id: u64, features: Vec<f32>) -> (InferRequest, std::sync::mpsc::Receiver<InferResponse>) {
+        let (tx, rx) = channel();
+        (
+            InferRequest {
+                id,
+                features,
+                enqueued_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn occupancy_and_padding() {
+        let (r1, _rx1) = req(1, vec![1.0, 2.0]);
+        let (r2, _rx2) = req(2, vec![3.0, 4.0]);
+        let batch = FormedBatch {
+            bucket: 4,
+            requests: vec![r1, r2],
+            formed_at: Instant::now(),
+        };
+        assert_eq!(batch.occupancy(), 0.5);
+        let padded = batch.padded_features(2);
+        assert_eq!(padded, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn padded_features_rejects_wrong_width() {
+        let (r1, _rx) = req(1, vec![1.0, 2.0, 3.0]);
+        let batch = FormedBatch {
+            bucket: 1,
+            requests: vec![r1],
+            formed_at: Instant::now(),
+        };
+        batch.padded_features(2);
+    }
+}

@@ -1,0 +1,311 @@
+//! Worker pool executing formed batches.
+//!
+//! PJRT objects are not `Send` (raw C pointers), so each worker thread
+//! constructs its *own* executor via a factory closure invoked on the
+//! worker's thread — channels only ever carry plain data. This is the
+//! one-client-per-worker pattern; with the CPU plugin each client shares
+//! the host's cores, and the pool size bounds concurrent executions.
+
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::request::{FormedBatch, InferResponse};
+use crate::metrics::Registry;
+
+/// Executes one padded batch: input is the padded [bucket, n] row-major
+/// feature buffer; output must be `bucket` rows of model output.
+pub trait BatchExecutor {
+    /// Model input width N.
+    fn width(&self) -> usize;
+    /// Output width per row.
+    fn out_width(&self) -> usize;
+    /// Run the bucket-sized program.
+    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String>;
+}
+
+/// Factory invoked on each worker thread to build its thread-local
+/// executor (PJRT clients are not Send, so construction happens in-thread).
+pub type ExecutorFactory = Arc<dyn Fn() -> Result<Box<dyn BatchExecutor>, String> + Send + Sync>;
+
+/// Pool of worker threads draining a shared batch channel.
+pub struct WorkerPool {
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers. Each calls `factory()` locally; a factory error
+    /// makes the worker answer every batch with that error (the system
+    /// degrades loudly rather than hanging).
+    pub fn spawn(
+        n: usize,
+        factory: ExecutorFactory,
+        rx: Receiver<FormedBatch>,
+        metrics: Arc<Registry>,
+    ) -> WorkerPool {
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..n.max(1))
+            .map(|wi| {
+                let rx = Arc::clone(&rx);
+                let factory = Arc::clone(&factory);
+                let metrics = Arc::clone(&metrics);
+                std::thread::Builder::new()
+                    .name(format!("acdc-serve-{wi}"))
+                    .spawn(move || worker_loop(factory, rx, metrics))
+                    .expect("spawn worker")
+            })
+            .collect();
+        WorkerPool { handles }
+    }
+
+    /// Block until all workers exit (the batch channel must be closed).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    factory: ExecutorFactory,
+    rx: Arc<Mutex<Receiver<FormedBatch>>>,
+    metrics: Arc<Registry>,
+) {
+    let mut executor = factory();
+    let batches = metrics.counter("worker.batches");
+    let rows = metrics.counter("worker.rows");
+    let padded_rows = metrics.counter("worker.padded_rows");
+    let errors = metrics.counter("worker.errors");
+    let exec_hist = metrics.histogram("worker.execute_ns");
+    let queue_hist = metrics.histogram("worker.queue_wait_ns");
+    loop {
+        let batch = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(batch) = batch else { return };
+        batches.inc();
+        rows.add(batch.requests.len() as u64);
+        padded_rows.add((batch.bucket - batch.requests.len()) as u64);
+
+        let t0 = Instant::now();
+        let result: Result<Vec<f32>, String> = match &mut executor {
+            Ok(exe) => {
+                let n = exe.width();
+                let padded = batch.padded_features(n);
+                exe.execute(batch.bucket, &padded)
+            }
+            Err(e) => Err(format!("executor init failed: {e}")),
+        };
+        let execute_us = t0.elapsed().as_micros() as u64;
+        exec_hist.record_ns(t0.elapsed().as_nanos() as u64);
+        if result.is_err() {
+            errors.inc();
+        }
+
+        let out_w = executor.as_ref().map(|e| e.out_width()).unwrap_or(0);
+        for (i, req) in batch.requests.iter().enumerate() {
+            let queue_us = batch
+                .formed_at
+                .saturating_duration_since(req.enqueued_at)
+                .as_micros() as u64;
+            queue_hist.record_ns(queue_us * 1_000);
+            let output = match &result {
+                Ok(all) => {
+                    let start = i * out_w;
+                    if start + out_w <= all.len() {
+                        Ok(all[start..start + out_w].to_vec())
+                    } else {
+                        Err("executor returned short output".to_string())
+                    }
+                }
+                Err(e) => Err(e.clone()),
+            };
+            let _ = req.reply.send(InferResponse {
+                id: req.id,
+                output,
+                queue_us,
+                execute_us,
+                batch_size: batch.bucket,
+            });
+        }
+    }
+}
+
+/// A pure-rust executor over the reference SELL cascade — used by tests
+/// and as a PJRT-free fallback path (`--native` serving mode).
+pub struct NativeCascadeExecutor {
+    pub cascade: crate::sell::acdc::AcdcCascade,
+}
+
+impl BatchExecutor for NativeCascadeExecutor {
+    fn width(&self) -> usize {
+        self.cascade.n()
+    }
+
+    fn out_width(&self) -> usize {
+        self.cascade.n()
+    }
+
+    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+        let n = self.width();
+        if padded.len() != bucket * n {
+            return Err(format!(
+                "padded buffer {} != bucket {bucket} × n {n}",
+                padded.len()
+            ));
+        }
+        let x = crate::tensor::Tensor::from_vec(&[bucket, n], padded.to_vec());
+        // Large buckets amortize thread spawn; small ones stay serial
+        // (perf pass L3-2).
+        if bucket >= 32 {
+            let threads = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .min(8);
+            let mut out = crate::tensor::Tensor::zeros(&[bucket, n]);
+            let mut h = x;
+            for (li, layer) in self.cascade.layers.iter().enumerate() {
+                let y = layer.forward_fused_parallel(&h, threads);
+                let y = match &self.cascade.perms {
+                    Some(perms) => crate::sell::acdc::apply_perm(&y, &perms[li]),
+                    None => y,
+                };
+                h = if self.cascade.relu && li != self.cascade.layers.len() - 1 {
+                    y.map(|v| v.max(0.0))
+                } else {
+                    y
+                };
+            }
+            out.data_mut().copy_from_slice(h.data());
+            Ok(out.into_vec())
+        } else {
+            Ok(self.cascade.forward(&x).into_vec())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::InferRequest;
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    struct DoubleExecutor {
+        n: usize,
+    }
+
+    impl BatchExecutor for DoubleExecutor {
+        fn width(&self) -> usize {
+            self.n
+        }
+        fn out_width(&self) -> usize {
+            self.n
+        }
+        fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+            assert_eq!(padded.len(), bucket * self.n);
+            Ok(padded.iter().map(|v| v * 2.0).collect())
+        }
+    }
+
+    fn submit(
+        tx: &std::sync::mpsc::Sender<FormedBatch>,
+        ids: &[u64],
+        bucket: usize,
+        n: usize,
+    ) -> Vec<std::sync::mpsc::Receiver<InferResponse>> {
+        let mut rxs = vec![];
+        let mut requests = vec![];
+        for &id in ids {
+            let (rtx, rrx) = channel();
+            requests.push(InferRequest {
+                id,
+                features: vec![id as f32; n],
+                enqueued_at: Instant::now(),
+                reply: rtx,
+            });
+            rxs.push(rrx);
+        }
+        tx.send(FormedBatch {
+            bucket,
+            requests,
+            formed_at: Instant::now(),
+        })
+        .unwrap();
+        rxs
+    }
+
+    #[test]
+    fn pool_executes_and_replies_per_request() {
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(DoubleExecutor { n: 3 }) as Box<dyn BatchExecutor>));
+        let pool = WorkerPool::spawn(2, factory, brx, Arc::clone(&metrics));
+        let rxs = submit(&btx, &[1, 2, 3], 4, 3);
+        for (i, rx) in rxs.iter().enumerate() {
+            let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            let want = vec![(i as f32 + 1.0) * 2.0; 3];
+            assert_eq!(resp.output.unwrap(), want);
+            assert_eq!(resp.batch_size, 4);
+        }
+        drop(btx);
+        pool.join();
+        assert_eq!(metrics.counter("worker.batches").get(), 1);
+        assert_eq!(metrics.counter("worker.rows").get(), 3);
+        assert_eq!(metrics.counter("worker.padded_rows").get(), 1);
+    }
+
+    #[test]
+    fn factory_failure_degrades_loudly() {
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory = Arc::new(|| Err("no artifacts".to_string()));
+        let pool = WorkerPool::spawn(1, factory, brx, Arc::clone(&metrics));
+        let rxs = submit(&btx, &[9], 1, 2);
+        let resp = rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(resp.output.unwrap_err().contains("no artifacts"));
+        drop(btx);
+        pool.join();
+        assert_eq!(metrics.counter("worker.errors").get(), 1);
+    }
+
+    #[test]
+    fn native_cascade_executor_matches_direct_forward() {
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let cascade = crate::sell::acdc::AcdcCascade::nonlinear(
+            16,
+            3,
+            crate::sell::init::DiagInit::CAFFENET,
+            &mut rng,
+        );
+        let mut exe = NativeCascadeExecutor {
+            cascade: cascade.clone(),
+        };
+        let x = crate::tensor::Tensor::from_vec(&[4, 16], rng.normal_vec(64, 0.0, 1.0));
+        let out = exe.execute(4, x.data()).unwrap();
+        let want = cascade.forward(&x);
+        assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn multiple_batches_across_workers() {
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(DoubleExecutor { n: 2 }) as Box<dyn BatchExecutor>));
+        let pool = WorkerPool::spawn(3, factory, brx, Arc::clone(&metrics));
+        let mut all = vec![];
+        for b in 0..10u64 {
+            all.extend(submit(&btx, &[b * 10, b * 10 + 1], 2, 2));
+        }
+        for rx in &all {
+            rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        }
+        drop(btx);
+        pool.join();
+        assert_eq!(metrics.counter("worker.batches").get(), 10);
+    }
+}

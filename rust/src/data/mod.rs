@@ -1,0 +1,55 @@
+//! Synthetic workloads: the paper's eq. (15) regression and a small image
+//! corpus for the MiniCaffeNet experiments (DESIGN.md substitution S2).
+
+pub mod regression;
+pub mod synthimg;
+
+/// Iterate fixed-size minibatches over a dataset of `rows` examples,
+/// cycling deterministically (wraps around; no shuffle — the generators
+/// already sample i.i.d.).
+#[derive(Debug, Clone)]
+pub struct BatchCursor {
+    rows: usize,
+    batch: usize,
+    pos: usize,
+}
+
+impl BatchCursor {
+    pub fn new(rows: usize, batch: usize) -> BatchCursor {
+        assert!(batch > 0 && batch <= rows, "batch {batch} vs rows {rows}");
+        BatchCursor {
+            rows,
+            batch,
+            pos: 0,
+        }
+    }
+
+    /// Next batch's row indices (contiguous, wrapping).
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        let mut idx = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            idx.push(self.pos);
+            self.pos = (self.pos + 1) % self.rows;
+        }
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cursor_wraps() {
+        let mut c = BatchCursor::new(5, 2);
+        assert_eq!(c.next_indices(), vec![0, 1]);
+        assert_eq!(c.next_indices(), vec![2, 3]);
+        assert_eq!(c.next_indices(), vec![4, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn cursor_rejects_oversized_batch() {
+        BatchCursor::new(3, 4);
+    }
+}

@@ -1,0 +1,140 @@
+//! The paper's §6.1 synthetic regression: `Y = X·W_true + ε` (eq. 15).
+//!
+//! `X` (10000×32) and `W_true` (32×32) have entries uniform in [0, 1);
+//! `ε ~ N(0, 1e-4)` is added to the targets. Sizes are parameters so tests
+//! can shrink the problem.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// A generated regression problem.
+#[derive(Debug, Clone)]
+pub struct RegressionTask {
+    pub x: Tensor,      // [rows, n]
+    pub y: Tensor,      // [rows, n]
+    pub w_true: Tensor, // [n, n]
+    pub noise_var: f64,
+}
+
+impl RegressionTask {
+    /// Generate with the paper's construction.
+    pub fn generate(rows: usize, n: usize, noise_var: f64, seed: u64) -> RegressionTask {
+        let mut rng = Pcg32::seeded(seed);
+        let x = Tensor::from_vec(&[rows, n], rng.uniform_vec(rows * n, 0.0, 1.0));
+        let w_true = Tensor::from_vec(&[n, n], rng.uniform_vec(n * n, 0.0, 1.0));
+        let mut y = x.matmul(&w_true);
+        let std = noise_var.sqrt();
+        for v in y.data_mut() {
+            *v += rng.normal_with(0.0, std) as f32;
+        }
+        RegressionTask {
+            x,
+            y,
+            w_true,
+            noise_var,
+        }
+    }
+
+    /// The paper's exact configuration: X 10000×32, noise N(0, 1e-4).
+    pub fn paper(seed: u64) -> RegressionTask {
+        Self::generate(10_000, 32, 1e-4, seed)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Copy out a batch (x, y) at the given row indices.
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Tensor) {
+        let n = self.n();
+        let mut bx = Tensor::zeros(&[idx.len(), n]);
+        let mut by = Tensor::zeros(&[idx.len(), n]);
+        for (bi, &ri) in idx.iter().enumerate() {
+            bx.row_mut(bi).copy_from_slice(self.x.row(ri));
+            by.row_mut(bi).copy_from_slice(self.y.row(ri));
+        }
+        (bx, by)
+    }
+
+    /// Mean squared error (summed over output dims, averaged over rows —
+    /// the Fig. 3 loss) of a prediction matrix against the targets.
+    pub fn mse(&self, pred: &Tensor) -> f64 {
+        assert_eq!(pred.shape(), self.y.shape());
+        let rows = self.rows() as f64;
+        pred.data()
+            .iter()
+            .zip(self.y.data())
+            .map(|(p, t)| ((p - t) as f64).powi(2))
+            .sum::<f64>()
+            / rows
+    }
+
+    /// Loss of the optimal linear predictor (W_true itself) — the noise
+    /// floor the dense curve converges to.
+    pub fn bayes_loss(&self) -> f64 {
+        self.mse(&self.x.matmul(&self.w_true))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_match_paper() {
+        let t = RegressionTask::generate(100, 32, 1e-4, 1);
+        assert_eq!(t.x.shape(), &[100, 32]);
+        assert_eq!(t.y.shape(), &[100, 32]);
+        assert_eq!(t.w_true.shape(), &[32, 32]);
+    }
+
+    #[test]
+    fn entries_in_unit_interval() {
+        let t = RegressionTask::generate(50, 8, 0.0, 2);
+        assert!(t.x.data().iter().all(|&v| (0.0..1.0).contains(&v)));
+        assert!(t.w_true.data().iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn zero_noise_targets_exact() {
+        let t = RegressionTask::generate(20, 4, 0.0, 3);
+        let clean = t.x.matmul(&t.w_true);
+        assert!(t.y.max_abs_diff(&clean) < 1e-6);
+    }
+
+    #[test]
+    fn bayes_loss_scales_with_noise() {
+        let t = RegressionTask::generate(2000, 8, 1e-2, 4);
+        // E[loss of W_true] = n_out · noise_var = 8 × 1e-2
+        let want = 8.0 * 1e-2;
+        let got = t.bayes_loss();
+        assert!((got - want).abs() / want < 0.2, "got={got} want={want}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = RegressionTask::generate(10, 4, 1e-4, 7);
+        let b = RegressionTask::generate(10, 4, 1e-4, 7);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y.data(), b.y.data());
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let t = RegressionTask::generate(10, 4, 0.0, 8);
+        let (bx, by) = t.gather(&[3, 7]);
+        assert_eq!(bx.row(0), t.x.row(3));
+        assert_eq!(bx.row(1), t.x.row(7));
+        assert_eq!(by.row(0), t.y.row(3));
+    }
+
+    #[test]
+    fn mse_zero_for_perfect_prediction() {
+        let t = RegressionTask::generate(10, 4, 0.0, 9);
+        assert!(t.mse(&t.y) < 1e-12);
+    }
+}

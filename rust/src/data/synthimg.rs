@@ -1,0 +1,223 @@
+//! Synthetic 10-class 16×16 image corpus ("synthimg") — the MiniCaffeNet
+//! workload standing in for ImageNet (DESIGN.md substitution S2).
+//!
+//! Each class is a parametric texture family (oriented stripes, rings,
+//! blobs, checkerboards, gradients) with per-sample jitter in phase,
+//! position and scale plus additive Gaussian noise, so the task requires a
+//! real (conv) feature extractor but is learnable at this scale in a few
+//! hundred SGD steps.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+pub const IMG: usize = 16;
+pub const N_CLASSES: usize = 10;
+
+/// A generated labelled corpus. Images are [rows, IMG, IMG, 1] f32 in
+/// roughly [-1, 1]; labels are class ids.
+#[derive(Debug, Clone)]
+pub struct ImageCorpus {
+    pub images: Tensor, // [rows, IMG, IMG, 1]
+    pub labels: Vec<i32>,
+    pub noise: f64,
+}
+
+impl ImageCorpus {
+    /// Generate `rows` images with balanced random classes.
+    pub fn generate(rows: usize, noise: f64, seed: u64) -> ImageCorpus {
+        let mut rng = Pcg32::seeded(seed);
+        let mut images = Tensor::zeros(&[rows, IMG, IMG, 1]);
+        let mut labels = Vec::with_capacity(rows);
+        let stride = IMG * IMG;
+        for r in 0..rows {
+            let class = (r % N_CLASSES) as i32; // balanced
+            let start = r * stride;
+            let img = &mut images.data_mut()[start..start + stride];
+            render_class(class as usize, img, &mut rng);
+            for v in img.iter_mut() {
+                *v += rng.normal_with(0.0, noise) as f32;
+            }
+            labels.push(class);
+        }
+        // Shuffle example order so batches mix classes.
+        let perm = rng.permutation(rows);
+        let mut shuffled = Tensor::zeros(&[rows, IMG, IMG, 1]);
+        let mut shuffled_labels = vec![0i32; rows];
+        for (dst, &src) in perm.iter().enumerate() {
+            let s = src as usize;
+            shuffled.data_mut()[dst * stride..(dst + 1) * stride]
+                .copy_from_slice(&images.data()[s * stride..(s + 1) * stride]);
+            shuffled_labels[dst] = labels[s];
+        }
+        ImageCorpus {
+            images: shuffled,
+            labels: shuffled_labels,
+            noise,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Copy out a batch (images, labels) at the given indices.
+    pub fn gather(&self, idx: &[usize]) -> (Tensor, Vec<i32>) {
+        let stride = IMG * IMG;
+        let mut out = Tensor::zeros(&[idx.len(), IMG, IMG, 1]);
+        let mut labels = Vec::with_capacity(idx.len());
+        for (bi, &ri) in idx.iter().enumerate() {
+            out.data_mut()[bi * stride..(bi + 1) * stride]
+                .copy_from_slice(&self.images.data()[ri * stride..(ri + 1) * stride]);
+            labels.push(self.labels[ri]);
+        }
+        (out, labels)
+    }
+}
+
+/// Render one jittered exemplar of `class` into a 16×16 buffer.
+fn render_class(class: usize, img: &mut [f32], rng: &mut Pcg32) {
+    debug_assert_eq!(img.len(), IMG * IMG);
+    let phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+    let jx = rng.uniform_in(-2.0, 2.0);
+    let jy = rng.uniform_in(-2.0, 2.0);
+    let freq = rng.uniform_in(0.8, 1.2);
+    for yy in 0..IMG {
+        for xx in 0..IMG {
+            let x = xx as f64 - (IMG as f64 - 1.0) / 2.0 - jx;
+            let y = yy as f64 - (IMG as f64 - 1.0) / 2.0 - jy;
+            let v = match class {
+                // 0: horizontal stripes
+                0 => (freq * y * 0.9 + phase).sin(),
+                // 1: vertical stripes
+                1 => (freq * x * 0.9 + phase).sin(),
+                // 2: 45° diagonal stripes
+                2 => (freq * (x + y) * 0.7 + phase).sin(),
+                // 3: -45° diagonal stripes
+                3 => (freq * (x - y) * 0.7 + phase).sin(),
+                // 4: concentric rings
+                4 => (freq * (x * x + y * y).sqrt() * 1.2 + phase).sin(),
+                // 5: centered Gaussian blob
+                5 => 2.0 * (-(x * x + y * y) / (10.0 * freq)).exp() - 0.5,
+                // 6: checkerboard
+                6 => {
+                    let c = ((xx / 4) + (yy / 4)) % 2;
+                    if c == 0 {
+                        0.8
+                    } else {
+                        -0.8
+                    }
+                }
+                // 7: horizontal gradient
+                7 => (x / (IMG as f64 / 2.0)) * freq,
+                // 8: bright corner quadrant (position jittered by sign)
+                8 => {
+                    let sx = if phase < std::f64::consts::PI { 1.0 } else { -1.0 };
+                    if sx * x > 0.0 && y > 0.0 {
+                        0.9
+                    } else {
+                        -0.4
+                    }
+                }
+                // 9: X cross
+                9 => {
+                    if (x.abs() - y.abs()).abs() < 1.8 {
+                        0.9
+                    } else {
+                        -0.4
+                    }
+                }
+                _ => unreachable!("class out of range"),
+            };
+            img[yy * IMG + xx] = v as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_shapes_and_balance() {
+        let c = ImageCorpus::generate(200, 0.1, 1);
+        assert_eq!(c.images.shape(), &[200, IMG, IMG, 1]);
+        assert_eq!(c.labels.len(), 200);
+        for class in 0..N_CLASSES as i32 {
+            let count = c.labels.iter().filter(|&&l| l == class).count();
+            assert_eq!(count, 20, "class {class}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = ImageCorpus::generate(30, 0.1, 5);
+        let b = ImageCorpus::generate(30, 0.1, 5);
+        assert_eq!(a.images.data(), b.images.data());
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn values_bounded() {
+        let c = ImageCorpus::generate(100, 0.05, 2);
+        for &v in c.images.data() {
+            assert!(v.is_finite());
+            assert!(v.abs() < 3.0, "v={v}");
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable_by_template_matching() {
+        // Nearest-class-mean on clean templates must beat chance easily —
+        // guards against degenerate/duplicate class renderings.
+        let train = ImageCorpus::generate(400, 0.05, 3);
+        let test = ImageCorpus::generate(100, 0.05, 4);
+        let stride = IMG * IMG;
+        // class means
+        let mut means = vec![vec![0.0f64; stride]; N_CLASSES];
+        let mut counts = vec![0usize; N_CLASSES];
+        for r in 0..train.rows() {
+            let c = train.labels[r] as usize;
+            counts[c] += 1;
+            for i in 0..stride {
+                means[c][i] += train.images.data()[r * stride + i] as f64;
+            }
+        }
+        for c in 0..N_CLASSES {
+            for v in means[c].iter_mut() {
+                *v /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for r in 0..test.rows() {
+            let img = &test.images.data()[r * stride..(r + 1) * stride];
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..N_CLASSES {
+                let d: f64 = img
+                    .iter()
+                    .zip(&means[c])
+                    .map(|(&a, &m)| (a as f64 - m).powi(2))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c);
+                }
+            }
+            if best.1 as i32 == test.labels[r] {
+                correct += 1;
+            }
+        }
+        // chance = 10%; template matching should be far above.
+        assert!(correct > 50, "correct={correct}/100");
+    }
+
+    #[test]
+    fn gather_matches_source() {
+        let c = ImageCorpus::generate(20, 0.1, 6);
+        let (imgs, labels) = c.gather(&[4, 9]);
+        let stride = IMG * IMG;
+        assert_eq!(
+            &imgs.data()[0..stride],
+            &c.images.data()[4 * stride..5 * stride]
+        );
+        assert_eq!(labels, vec![c.labels[4], c.labels[9]]);
+    }
+}

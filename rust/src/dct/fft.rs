@@ -1,0 +1,248 @@
+//! Iterative radix-2 complex FFT with precomputed plans.
+//!
+//! This is the rust analogue of the paper's cuFFT dependency (DESIGN.md
+//! substitution S3): the multiple-call ACDC implementation computes its
+//! DCTs via FFTs exactly as the paper's §5.2 does via Makhoul (1980).
+//! Power-of-two sizes only — the paper's implementations have the same
+//! restriction ("the implementation is constrained to power-of-two ...
+//! layer sizes").
+
+/// Precomputed FFT plan for a fixed power-of-two size.
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    n: usize,
+    /// Bit-reversal permutation.
+    rev: Vec<u32>,
+    /// Twiddles e^{-2πi j / n} for j in 0..n/2 (forward sign convention).
+    tw_re: Vec<f32>,
+    tw_im: Vec<f32>,
+}
+
+impl FftPlan {
+    /// Build a plan; `n` must be a power of two ≥ 1.
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two, got {n}");
+        let bits = n.trailing_zeros();
+        let rev = (0..n as u32)
+            .map(|i| i.reverse_bits() >> (32 - bits.max(1)) as u32)
+            .map(|r| if n == 1 { 0 } else { r })
+            .collect();
+        let half = (n / 2).max(1);
+        let mut tw_re = Vec::with_capacity(half);
+        let mut tw_im = Vec::with_capacity(half);
+        for j in 0..half {
+            let ang = -2.0 * std::f64::consts::PI * j as f64 / n as f64;
+            tw_re.push(ang.cos() as f32);
+            tw_im.push(ang.sin() as f32);
+        }
+        FftPlan {
+            n,
+            rev,
+            tw_re,
+            tw_im,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// In-place forward FFT over split re/im buffers of length n.
+    pub fn forward(&self, re: &mut [f32], im: &mut [f32]) {
+        self.transform(re, im, false);
+    }
+
+    /// In-place inverse FFT (includes the 1/n scaling).
+    pub fn inverse(&self, re: &mut [f32], im: &mut [f32]) {
+        self.transform(re, im, true);
+        let inv = 1.0 / self.n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+
+    fn transform(&self, re: &mut [f32], im: &mut [f32], invert: bool) {
+        let n = self.n;
+        assert_eq!(re.len(), n);
+        assert_eq!(im.len(), n);
+        if n == 1 {
+            return;
+        }
+        // Bit-reversal reorder.
+        for i in 0..n {
+            let j = self.rev[i] as usize;
+            if i < j {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        // Danielson–Lanczos stages.
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len; // twiddle stride into the n/2 table
+            for start in (0..n).step_by(len) {
+                let mut tidx = 0;
+                for k in start..start + half {
+                    let wr = self.tw_re[tidx];
+                    let wi = if invert {
+                        -self.tw_im[tidx]
+                    } else {
+                        self.tw_im[tidx]
+                    };
+                    let m = k + half;
+                    let xr = re[m] * wr - im[m] * wi;
+                    let xi = re[m] * wi + im[m] * wr;
+                    re[m] = re[k] - xr;
+                    im[m] = im[k] - xi;
+                    re[k] += xr;
+                    im[k] += xi;
+                    tidx += step;
+                }
+            }
+            len <<= 1;
+        }
+    }
+}
+
+/// Naive O(N²) DFT used as the FFT's test oracle (f64 accumulation).
+pub fn naive_dft(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = re.len();
+    let mut or_ = vec![0.0f32; n];
+    let mut oi = vec![0.0f32; n];
+    for k in 0..n {
+        let mut sr = 0.0f64;
+        let mut si = 0.0f64;
+        for t in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+            let (c, s) = (ang.cos(), ang.sin());
+            sr += re[t] as f64 * c - im[t] as f64 * s;
+            si += re[t] as f64 * s + im[t] as f64 * c;
+        }
+        or_[k] = sr as f32;
+        oi[k] = si as f32;
+    }
+    (or_, oi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn size_one_is_identity() {
+        let p = FftPlan::new(1);
+        let mut re = vec![3.0];
+        let mut im = vec![-1.0];
+        p.forward(&mut re, &mut im);
+        assert_eq!((re[0], im[0]), (3.0, -1.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        FftPlan::new(12);
+    }
+
+    #[test]
+    fn matches_naive_dft() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [2usize, 4, 8, 64, 256] {
+            let p = FftPlan::new(n);
+            let re0 = rng.normal_vec(n, 0.0, 1.0);
+            let im0 = rng.normal_vec(n, 0.0, 1.0);
+            let (wr, wi) = naive_dft(&re0, &im0);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            p.forward(&mut re, &mut im);
+            for i in 0..n {
+                assert!((re[i] - wr[i]).abs() < 1e-3 * (n as f32).sqrt(), "n={n} i={i}");
+                assert!((im[i] - wi[i]).abs() < 1e-3 * (n as f32).sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = Pcg32::seeded(2);
+        for n in [2usize, 16, 128, 1024] {
+            let p = FftPlan::new(n);
+            let re0 = rng.normal_vec(n, 0.0, 1.0);
+            let im0 = rng.normal_vec(n, 0.0, 1.0);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            p.forward(&mut re, &mut im);
+            p.inverse(&mut re, &mut im);
+            for i in 0..n {
+                assert!((re[i] - re0[i]).abs() < 1e-4, "n={n}");
+                assert!((im[i] - im0[i]).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let n = 64;
+        let p = FftPlan::new(n);
+        let mut re = vec![0.0; n];
+        let mut im = vec![0.0; n];
+        re[0] = 1.0;
+        p.forward(&mut re, &mut im);
+        for i in 0..n {
+            assert!((re[i] - 1.0).abs() < 1e-5);
+            assert!(im[i].abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn constant_gives_dc_only() {
+        let n = 32;
+        let p = FftPlan::new(n);
+        let mut re = vec![1.0; n];
+        let mut im = vec![0.0; n];
+        p.forward(&mut re, &mut im);
+        assert!((re[0] - n as f32).abs() < 1e-4);
+        for i in 1..n {
+            assert!(re[i].abs() < 1e-4 && im[i].abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 256;
+        let p = FftPlan::new(n);
+        let re0 = rng.normal_vec(n, 0.0, 1.0);
+        let im0 = vec![0.0; n];
+        let time: f64 = re0.iter().map(|v| (*v as f64).powi(2)).sum();
+        let (mut re, mut im) = (re0, im0);
+        p.forward(&mut re, &mut im);
+        let freq: f64 = re
+            .iter()
+            .zip(&im)
+            .map(|(r, i)| (*r as f64).powi(2) + (*i as f64).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        assert!((time - freq).abs() / time < 1e-5);
+    }
+
+    #[test]
+    fn hermitian_symmetry_for_real_input() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 128;
+        let p = FftPlan::new(n);
+        let mut re = rng.normal_vec(n, 0.0, 1.0);
+        let mut im = vec![0.0; n];
+        p.forward(&mut re, &mut im);
+        for k in 1..n / 2 {
+            assert!((re[k] - re[n - k]).abs() < 1e-3);
+            assert!((im[k] + im[n - k]).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,524 @@
+//! DCT-II / DCT-III (orthonormal) with three implementations:
+//!
+//! * `DctPlan::dct2 / dct3` — O(N log N) via Makhoul (1980) using the
+//!   radix-2 FFT (the method the paper's "multiple call" §5.2 version uses
+//!   through cuFFT);
+//! * `DctPlan::dct2_matmul` — O(N²) matmul against the precomputed DCT
+//!   matrix (what the Pallas kernel does on the MXU);
+//! * `naive_dct2 / naive_dct3` — O(N²) f64 closed-form oracles used only
+//!   in tests.
+//!
+//! All use the paper's eq. (9) orthonormal scaling, so `dct3(dct2(x)) == x`
+//! and the transform matrix is orthogonal.
+
+pub mod fft;
+
+use fft::FftPlan;
+
+/// Precomputed plan for orthonormal DCT-II/III of a fixed size.
+#[derive(Debug, Clone)]
+pub struct DctPlan {
+    n: usize,
+    fft: FftPlan,
+    /// Forward post-twiddle: 2·e^{-iπk/(2N)} scaled by sqrt(2/N)·ε_k / 2.
+    fw_re: Vec<f32>,
+    fw_im: Vec<f32>,
+    /// Inverse pre-twiddle: e^{iπk/(2N)} / (sqrt(2/N)·ε_k).
+    bw_re: Vec<f32>,
+    bw_im: Vec<f32>,
+    /// Orthonormal DCT-II matrix (row-major [n, n]; y = x @ C), built lazily.
+    matrix: std::sync::OnceLock<Vec<f32>>,
+}
+
+impl DctPlan {
+    pub fn new(n: usize) -> DctPlan {
+        assert!(n.is_power_of_two(), "DCT size must be a power of two, got {n}");
+        let mut fw_re = Vec::with_capacity(n);
+        let mut fw_im = Vec::with_capacity(n);
+        let mut bw_re = Vec::with_capacity(n);
+        let mut bw_im = Vec::with_capacity(n);
+        for k in 0..n {
+            let ang = -std::f64::consts::PI * k as f64 / (2.0 * n as f64);
+            let eps = if k == 0 {
+                1.0 / 2.0_f64.sqrt()
+            } else {
+                1.0
+            };
+            let scale = (2.0 / n as f64).sqrt() * eps;
+            // Forward: X[k] = scale * Re(e^{-iπk/2N} · V[k])
+            fw_re.push((scale * ang.cos()) as f32);
+            fw_im.push((scale * ang.sin()) as f32);
+            // Inverse: V[k] = e^{+iπk/2N} · (X[k]/scale  - i X[N-k]/scale')
+            let inv_scale = 1.0 / scale;
+            bw_re.push(((-ang).cos() * inv_scale) as f32);
+            bw_im.push(((-ang).sin() * inv_scale) as f32);
+        }
+        DctPlan {
+            n,
+            fft: FftPlan::new(n),
+            fw_re,
+            fw_im,
+            bw_re,
+            bw_im,
+            matrix: std::sync::OnceLock::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Orthonormal DCT-II of `x` in place (paper's `h2 = h1 · C`).
+    ///
+    /// Makhoul's N-point trick: reorder even/odd, one complex FFT, then a
+    /// post-twiddle. `scratch` must be 2·n long (re/im halves).
+    pub fn dct2(&self, x: &mut [f32], scratch: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert!(scratch.len() >= 2 * n);
+        let (re, rest) = scratch.split_at_mut(n);
+        let im = &mut rest[..n];
+        // v[j] = x[2j], v[N-1-j] = x[2j+1]
+        for j in 0..n / 2 {
+            re[j] = x[2 * j];
+            re[n - 1 - j] = x[2 * j + 1];
+        }
+        if n == 1 {
+            re[0] = x[0];
+        }
+        im.fill(0.0);
+        self.fft.forward(re, im);
+        // X[k] = Re( (fw_re + i·fw_im) · (re + i·im) )
+        for k in 0..n {
+            x[k] = self.fw_re[k] * re[k] - self.fw_im[k] * im[k];
+        }
+    }
+
+    /// Orthonormal DCT-III (inverse of `dct2`) of `x` in place.
+    pub fn dct3(&self, x: &mut [f32], scratch: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x.len(), n);
+        assert!(scratch.len() >= 2 * n);
+        let (re, rest) = scratch.split_at_mut(n);
+        let im = &mut rest[..n];
+        // V[k] = e^{iπk/2N} · (X[k] - i·X[N-k]) / scale_k   (X[N] ≡ 0)
+        for k in 0..n {
+            let xk = x[k];
+            let xnk = if k == 0 { 0.0 } else { x[n - k] };
+            // (bw_re + i·bw_im) already folds the 1/scale factor of index k.
+            // For the -i·X[N-k] term the 1/scale belongs to index k as well
+            // (Makhoul's derivation), so use the same twiddle.
+            re[k] = self.bw_re[k] * xk + self.bw_im[k] * xnk;
+            im[k] = self.bw_im[k] * xk - self.bw_re[k] * xnk;
+        }
+        // Undo the missing ε on the X[N-k] pickup at k=0..: handled by xnk=0
+        // at k=0; for k>0, scale' == scale_k only when ε_k == ε_{n-k} == 1,
+        // true for 0 < k < n. (k = 0 row has xnk = 0.)
+        self.fft.inverse(re, im);
+        for j in 0..n / 2 {
+            x[2 * j] = re[j];
+            x[2 * j + 1] = re[n - 1 - j];
+        }
+        if n == 1 {
+            x[0] = re[0];
+        }
+    }
+
+    /// DCT-II of two rows through ONE complex FFT (the classic 2-for-1
+    /// real-transform packing: FFT(v1 + i·v2), then separate the two
+    /// Hermitian spectra). ~1.7× the throughput of two `dct2` calls —
+    /// perf pass L1/L3 item, see EXPERIMENTS.md §Perf.
+    pub fn dct2_pair(&self, x1: &mut [f32], x2: &mut [f32], scratch: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x1.len(), n);
+        assert_eq!(x2.len(), n);
+        assert!(scratch.len() >= 2 * n);
+        let (re, rest) = scratch.split_at_mut(n);
+        let im = &mut rest[..n];
+        // Makhoul reorder of both rows into the real/imag lanes.
+        for j in 0..n / 2 {
+            re[j] = x1[2 * j];
+            re[n - 1 - j] = x1[2 * j + 1];
+            im[j] = x2[2 * j];
+            im[n - 1 - j] = x2[2 * j + 1];
+        }
+        if n == 1 {
+            re[0] = x1[0];
+            im[0] = x2[0];
+        }
+        self.fft.forward(re, im);
+        // Separate: F1[k] = (Z[k] + conj(Z[n-k]))/2, F2 = (Z[k] - conj(Z[n-k]))/(2i)
+        for k in 0..n {
+            let nk = if k == 0 { 0 } else { n - k };
+            let (zr, zi) = (re[k], im[k]);
+            let (cr, ci) = (re[nk], -im[nk]); // conj(Z[n-k])
+            let f1 = (0.5 * (zr + cr), 0.5 * (zi + ci));
+            let f2 = (0.5 * (zi - ci), -0.5 * (zr - cr)); // (Z - conj)/2i
+            x1[k] = self.fw_re[k] * f1.0 - self.fw_im[k] * f1.1;
+            x2[k] = self.fw_re[k] * f2.0 - self.fw_im[k] * f2.1;
+        }
+    }
+
+    /// DCT-III of two rows through one complex inverse FFT (dual of
+    /// `dct2_pair`: both pre-twiddled spectra ride one IFFT, the real
+    /// and imaginary outputs are the two rows).
+    pub fn dct3_pair(&self, x1: &mut [f32], x2: &mut [f32], scratch: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(x1.len(), n);
+        assert_eq!(x2.len(), n);
+        assert!(scratch.len() >= 2 * n);
+        let (re, rest) = scratch.split_at_mut(n);
+        let im = &mut rest[..n];
+        for k in 0..n {
+            let x1k = x1[k];
+            let x1nk = if k == 0 { 0.0 } else { x1[n - k] };
+            let x2k = x2[k];
+            let x2nk = if k == 0 { 0.0 } else { x2[n - k] };
+            // V1[k] = tw·(x1[k] - i·x1[n-k]), V2[k] likewise; z = V1 + i·V2.
+            let v1 = (
+                self.bw_re[k] * x1k + self.bw_im[k] * x1nk,
+                self.bw_im[k] * x1k - self.bw_re[k] * x1nk,
+            );
+            let v2 = (
+                self.bw_re[k] * x2k + self.bw_im[k] * x2nk,
+                self.bw_im[k] * x2k - self.bw_re[k] * x2nk,
+            );
+            re[k] = v1.0 - v2.1;
+            im[k] = v1.1 + v2.0;
+        }
+        self.fft.inverse(re, im);
+        for j in 0..n / 2 {
+            x1[2 * j] = re[j];
+            x1[2 * j + 1] = re[n - 1 - j];
+            x2[2 * j] = im[j];
+            x2[2 * j + 1] = im[n - 1 - j];
+        }
+        if n == 1 {
+            x1[0] = re[0];
+            x2[0] = im[0];
+        }
+    }
+
+    /// Apply DCT-II to every row of a [rows, n] buffer (pairs rows
+    /// through `dct2_pair` — see §Perf).
+    pub fn dct2_rows(&self, data: &mut [f32], rows: usize) {
+        let n = self.n;
+        assert_eq!(data.len(), rows * n);
+        let mut scratch = vec![0.0f32; 2 * n];
+        let mut r = 0;
+        while r + 1 < rows {
+            let (a, b) = data[r * n..].split_at_mut(n);
+            self.dct2_pair(a, &mut b[..n], &mut scratch);
+            r += 2;
+        }
+        if r < rows {
+            self.dct2(&mut data[r * n..(r + 1) * n], &mut scratch);
+        }
+    }
+
+    /// Apply DCT-III to every row of a [rows, n] buffer (paired).
+    pub fn dct3_rows(&self, data: &mut [f32], rows: usize) {
+        let n = self.n;
+        assert_eq!(data.len(), rows * n);
+        let mut scratch = vec![0.0f32; 2 * n];
+        let mut r = 0;
+        while r + 1 < rows {
+            let (a, b) = data[r * n..].split_at_mut(n);
+            self.dct3_pair(a, &mut b[..n], &mut scratch);
+            r += 2;
+        }
+        if r < rows {
+            self.dct3(&mut data[r * n..(r + 1) * n], &mut scratch);
+        }
+    }
+
+    /// The orthonormal DCT-II matrix C (row-major, `y = x @ C`), cached.
+    pub fn matrix(&self) -> &[f32] {
+        self.matrix.get_or_init(|| {
+            let n = self.n;
+            let mut c = vec![0.0f32; n * n];
+            for j in 0..n {
+                for k in 0..n {
+                    c[j * n + k] = dct2_entry(n, j, k) as f32;
+                }
+            }
+            c
+        })
+    }
+}
+
+/// Closed-form entry C[j,k] of the orthonormal DCT-II matrix (paper eq. 9).
+fn dct2_entry(n: usize, j: usize, k: usize) -> f64 {
+    let eps = if k == 0 { 1.0 / 2.0_f64.sqrt() } else { 1.0 };
+    (2.0 / n as f64).sqrt()
+        * eps
+        * (std::f64::consts::PI * (2.0 * j as f64 + 1.0) * k as f64 / (2.0 * n as f64)).cos()
+}
+
+/// O(N²) f64 DCT-II oracle (tests only).
+pub fn naive_dct2(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            (0..n)
+                .map(|j| x[j] as f64 * dct2_entry(n, j, k))
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+/// O(N²) f64 DCT-III oracle (tests only): y = x @ Cᵀ.
+pub fn naive_dct3(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    (0..n)
+        .map(|j| {
+            (0..n)
+                .map(|k| x[k] as f64 * dct2_entry(n, j, k))
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn dct2_matches_naive() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [2usize, 4, 8, 32, 128, 512] {
+            let plan = DctPlan::new(n);
+            let x0 = rng.normal_vec(n, 0.0, 1.0);
+            let want = naive_dct2(&x0);
+            let mut x = x0.clone();
+            let mut scratch = vec![0.0; 2 * n];
+            plan.dct2(&mut x, &mut scratch);
+            for i in 0..n {
+                assert!(
+                    (x[i] - want[i]).abs() < 2e-4 * (n as f32).sqrt(),
+                    "n={n} i={i} got={} want={}",
+                    x[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dct3_matches_naive() {
+        let mut rng = Pcg32::seeded(2);
+        for n in [2usize, 8, 64, 256] {
+            let plan = DctPlan::new(n);
+            let x0 = rng.normal_vec(n, 0.0, 1.0);
+            let want = naive_dct3(&x0);
+            let mut x = x0.clone();
+            let mut scratch = vec![0.0; 2 * n];
+            plan.dct3(&mut x, &mut scratch);
+            for i in 0..n {
+                assert!(
+                    (x[i] - want[i]).abs() < 2e-4 * (n as f32).sqrt(),
+                    "n={n} i={i} got={} want={}",
+                    x[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_dct2_dct3() {
+        let mut rng = Pcg32::seeded(3);
+        for n in [2usize, 16, 128, 1024, 4096] {
+            let plan = DctPlan::new(n);
+            let x0 = rng.normal_vec(n, 0.0, 1.0);
+            let mut x = x0.clone();
+            let mut scratch = vec![0.0; 2 * n];
+            plan.dct2(&mut x, &mut scratch);
+            plan.dct3(&mut x, &mut scratch);
+            for i in 0..n {
+                assert!((x[i] - x0[i]).abs() < 1e-3, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_is_orthogonal() {
+        for n in [4usize, 16, 64] {
+            let plan = DctPlan::new(n);
+            let c = plan.matrix();
+            // C·Cᵀ = I
+            for i in 0..n {
+                for j in 0..n {
+                    let dot: f64 = (0..n)
+                        .map(|k| c[i * n + k] as f64 * c[j * n + k] as f64)
+                        .sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-5, "n={n} ({i},{j}) dot={dot}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dct2_equals_matrix_product() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 64;
+        let plan = DctPlan::new(n);
+        let x0 = rng.normal_vec(n, 0.0, 1.0);
+        let c = plan.matrix().to_vec();
+        let mut want = vec![0.0f32; n];
+        crate::tensor::matvec_row(&x0, &c, &mut want, n, n);
+        let mut x = x0;
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2(&mut x, &mut scratch);
+        for i in 0..n {
+            assert!((x[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 256;
+        let plan = DctPlan::new(n);
+        let x0 = rng.normal_vec(n, 0.0, 1.0);
+        let e0: f64 = x0.iter().map(|v| (*v as f64).powi(2)).sum();
+        let mut x = x0;
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2(&mut x, &mut scratch);
+        let e1: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-5);
+    }
+
+    #[test]
+    fn dc_component() {
+        // DCT-II of a constant vector: only k=0 nonzero, = const·sqrt(n).
+        let n = 64;
+        let plan = DctPlan::new(n);
+        let mut x = vec![2.0f32; n];
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2(&mut x, &mut scratch);
+        assert!((x[0] - 2.0 * (n as f32).sqrt()).abs() < 1e-3);
+        for i in 1..n {
+            assert!(x[i].abs() < 1e-4, "i={i} -> {}", x[i]);
+        }
+    }
+
+    #[test]
+    fn rows_apply_independently() {
+        let mut rng = Pcg32::seeded(6);
+        let n = 32;
+        let rows = 5;
+        let plan = DctPlan::new(n);
+        let mut data = rng.normal_vec(rows * n, 0.0, 1.0);
+        let orig = data.clone();
+        plan.dct2_rows(&mut data, rows);
+        for r in 0..rows {
+            let want = naive_dct2(&orig[r * n..(r + 1) * n]);
+            for i in 0..n {
+                assert!((data[r * n + i] - want[i]).abs() < 1e-3);
+            }
+        }
+        plan.dct3_rows(&mut data, rows);
+        for i in 0..rows * n {
+            assert!((data[i] - orig[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn size_two_closed_form() {
+        // n=2 orthonormal DCT-II: y0=(x0+x1)/√2, y1=(x0-x1)/√2·cos(π/4)·√2 …
+        let plan = DctPlan::new(2);
+        let mut x = vec![1.0f32, 0.0];
+        let mut scratch = vec![0.0; 4];
+        plan.dct2(&mut x, &mut scratch);
+        let want = naive_dct2(&[1.0, 0.0]);
+        assert!((x[0] - want[0]).abs() < 1e-6);
+        assert!((x[1] - want[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        DctPlan::new(12);
+    }
+
+    #[test]
+    fn dct2_pair_matches_two_singles() {
+        let mut rng = Pcg32::seeded(7);
+        for n in [2usize, 8, 64, 256] {
+            let plan = DctPlan::new(n);
+            let a0 = rng.normal_vec(n, 0.0, 1.0);
+            let b0 = rng.normal_vec(n, 0.0, 1.0);
+            let mut scratch = vec![0.0; 2 * n];
+            let (mut a_want, mut b_want) = (a0.clone(), b0.clone());
+            plan.dct2(&mut a_want, &mut scratch);
+            plan.dct2(&mut b_want, &mut scratch);
+            let (mut a, mut b) = (a0, b0);
+            plan.dct2_pair(&mut a, &mut b, &mut scratch);
+            for i in 0..n {
+                assert!((a[i] - a_want[i]).abs() < 1e-3, "n={n} i={i} lane1");
+                assert!((b[i] - b_want[i]).abs() < 1e-3, "n={n} i={i} lane2");
+            }
+        }
+    }
+
+    #[test]
+    fn dct3_pair_matches_two_singles() {
+        let mut rng = Pcg32::seeded(8);
+        for n in [2usize, 8, 64, 256] {
+            let plan = DctPlan::new(n);
+            let a0 = rng.normal_vec(n, 0.0, 1.0);
+            let b0 = rng.normal_vec(n, 0.0, 1.0);
+            let mut scratch = vec![0.0; 2 * n];
+            let (mut a_want, mut b_want) = (a0.clone(), b0.clone());
+            plan.dct3(&mut a_want, &mut scratch);
+            plan.dct3(&mut b_want, &mut scratch);
+            let (mut a, mut b) = (a0, b0);
+            plan.dct3_pair(&mut a, &mut b, &mut scratch);
+            for i in 0..n {
+                assert!((a[i] - a_want[i]).abs() < 1e-3, "n={n} i={i} lane1");
+                assert!((b[i] - b_want[i]).abs() < 1e-3, "n={n} i={i} lane2");
+            }
+        }
+    }
+
+    #[test]
+    fn paired_roundtrip() {
+        let mut rng = Pcg32::seeded(9);
+        let n = 128;
+        let plan = DctPlan::new(n);
+        let a0 = rng.normal_vec(n, 0.0, 1.0);
+        let b0 = rng.normal_vec(n, 0.0, 1.0);
+        let (mut a, mut b) = (a0.clone(), b0.clone());
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2_pair(&mut a, &mut b, &mut scratch);
+        plan.dct3_pair(&mut a, &mut b, &mut scratch);
+        for i in 0..n {
+            assert!((a[i] - a0[i]).abs() < 1e-3);
+            assert!((b[i] - b0[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rows_odd_count_uses_single_fallback() {
+        let mut rng = Pcg32::seeded(10);
+        let n = 32;
+        let rows = 5; // odd → last row through the single path
+        let plan = DctPlan::new(n);
+        let mut data = rng.normal_vec(rows * n, 0.0, 1.0);
+        let orig = data.clone();
+        plan.dct2_rows(&mut data, rows);
+        for r in 0..rows {
+            let want = naive_dct2(&orig[r * n..(r + 1) * n]);
+            for i in 0..n {
+                assert!((data[r * n + i] - want[i]).abs() < 1e-3, "r={r}");
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Experiment drivers regenerating the paper's tables and figures.
+//!
+//! Each submodule owns one artifact of the evaluation (DESIGN.md §3) and
+//! exposes `run`/`render`/`check_paper_shape` so the bench targets, the
+//! examples and the CLI all share one implementation:
+//!
+//! * [`fig2`] — E1: SELL vs dense runtime sweep (+roofline model);
+//! * [`fig3`] — E2: operator approximation under two inits;
+//! * [`table1`] — E3/E4: parameter/accuracy trade-off (analytic + measured).
+
+pub mod fig2;
+pub mod fig3;
+pub mod table1;

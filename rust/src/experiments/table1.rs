@@ -1,0 +1,296 @@
+//! E3/E4 — Table 1 and Figure 4: parameter/accuracy trade-off.
+//!
+//! Two legs (DESIGN.md substitution S2):
+//! * **analytic** — exact parameter arithmetic at CaffeNet scale for every
+//!   Table-1 row, printed `paper vs computed`;
+//! * **measured** — the same architecture surgery (dense FC block → 12
+//!   stacked ACDC+ReLU+perm SELLs) on MiniCaffeNet/synthimg, training both
+//!   variants through the PJRT artifacts and reporting the error increase
+//!   alongside the parameter reduction.
+
+use crate::data::synthimg::ImageCorpus;
+use crate::runtime::Engine;
+use crate::sell::params::{self, mini, table1_rows};
+use crate::train::{CnnTrainer, CnnVariant, StepDecay};
+use crate::util::bench::Table;
+use crate::util::fmt_params;
+
+/// Render the analytic Table-1 audit (no training required).
+pub fn render_analytic() -> String {
+    let mut out = String::new();
+    out.push_str("Table 1 — parameter audit (paper-published vs computed here)\n");
+    let mut t = Table::new(&[
+        "method",
+        "err +%",
+        "params (paper)",
+        "reduction (paper)",
+        "params (computed)",
+        "notes",
+    ]);
+    for row in table1_rows() {
+        t.row(vec![
+            row.method.to_string(),
+            format!("{:.2}", row.err_increase_pct),
+            row.published_params
+                .map(fmt_params)
+                .unwrap_or_else(|| "-".into()),
+            format!("x{:.1}", row.published_reduction),
+            row.computed_params
+                .map(fmt_params)
+                .unwrap_or_else(|| "-".into()),
+            match (row.vgg16, row.train_time) {
+                (true, _) => "*VGG16",
+                (false, true) => "train+test",
+                (false, false) => "post-proc",
+            }
+            .to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nkey identities:\n  ACDC stack (paper): 12 layers x 3N at N=4608 = {} (paper reports 165,888)\n  \
+         CaffeNet fc6+fc7: {} params (paper: 'more than 41 million')\n  \
+         computed CaffeNet total: {} (paper reports 58.7M)\n",
+        fmt_params(params::acdc_stack_params(4608, 12)),
+        fmt_params({
+            let (i6, o6) = params::caffenet::FC6;
+            let (i7, o7) = params::caffenet::FC7;
+            i6 * o6 + o6 + i7 * o7 + o7
+        }),
+        fmt_params(params::caffenet::total_params()),
+    ));
+    out
+}
+
+/// Result of the measured MiniCaffeNet leg.
+#[derive(Debug, Clone)]
+pub struct MeasuredRow {
+    pub variant: &'static str,
+    pub params: u64,
+    pub reduction: f64,
+    pub test_err_pct: f64,
+    pub err_increase_pct: f64,
+    pub train_loss_final: f64,
+}
+
+/// Train both variants and report the Table-1 style measured rows.
+pub fn run_measured(
+    engine: &Engine,
+    train_rows: usize,
+    test_rows: usize,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<MeasuredRow>, String> {
+    let train = ImageCorpus::generate(train_rows, 0.15, seed);
+    let test = ImageCorpus::generate(test_rows, 0.15, seed + 1);
+
+    let mut dense_t = CnnTrainer::new(engine, CnnVariant::Dense, seed + 2)?;
+    let (dense_curve, dense_eval) =
+        dense_t.run(&train, &test, steps, &StepDecay::constant(0.05), 25)?;
+
+    let mut acdc_t = CnnTrainer::new(engine, CnnVariant::Acdc, seed + 3)?;
+    let (acdc_curve, acdc_eval) =
+        acdc_t.run(&train, &test, steps, &StepDecay::constant(0.02), 25)?;
+
+    let dense_params = dense_t.param_count() as u64;
+    let acdc_params = acdc_t.param_count() as u64;
+    let dense_err = (1.0 - dense_eval.accuracy) * 100.0;
+    let acdc_err = (1.0 - acdc_eval.accuracy) * 100.0;
+    Ok(vec![
+        MeasuredRow {
+            variant: "MiniCaffeNet dense FC (reference)",
+            params: dense_params,
+            reduction: 1.0,
+            test_err_pct: dense_err,
+            err_increase_pct: 0.0,
+            train_loss_final: dense_curve.last().unwrap_or(f64::NAN),
+        },
+        MeasuredRow {
+            variant: "MiniCaffeNet ACDC-12 FC",
+            params: acdc_params,
+            reduction: dense_params as f64 / acdc_params as f64,
+            test_err_pct: acdc_err,
+            err_increase_pct: acdc_err - dense_err,
+            train_loss_final: acdc_curve.last().unwrap_or(f64::NAN),
+        },
+    ])
+}
+
+pub fn render_measured(rows: &[MeasuredRow]) -> String {
+    let mut t = Table::new(&[
+        "model",
+        "params",
+        "reduction",
+        "test err %",
+        "err increase %",
+        "final train loss",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.variant.to_string(),
+            fmt_params(r.params),
+            format!("x{:.1}", r.reduction),
+            format!("{:.1}", r.test_err_pct),
+            format!("{:+.1}", r.err_increase_pct),
+            format!("{:.3}", r.train_loss_final),
+        ]);
+    }
+    format!(
+        "Table 1 (measured, MiniCaffeNet on synthimg — substitution S2)\n{}",
+        t.render()
+    )
+}
+
+/// Figure 4: the reduction-vs-error scatter, printed as a text series
+/// (paper rows + our measured point).
+pub fn render_fig4(measured: Option<&[MeasuredRow]>) -> String {
+    let mut out = String::new();
+    out.push_str("Figure 4 — parameter reduction vs top-1 error increase\n");
+    let mut t = Table::new(&["method", "reduction (x)", "err increase (%)", "backbone"]);
+    for row in table1_rows() {
+        if !row.train_time && row.method != "CaffeNet Reference Model" {
+            continue; // Fig 4 plots train-time-applicable SELLs
+        }
+        t.row(vec![
+            row.method.to_string(),
+            format!("{:.1}", row.published_reduction),
+            format!("{:.2}", row.err_increase_pct),
+            if row.vgg16 { "VGG16*" } else { "CaffeNet" }.to_string(),
+        ]);
+    }
+    if let Some(rows) = measured {
+        for r in rows.iter().filter(|r| r.reduction > 1.0) {
+            t.row(vec![
+                format!("{} [measured]", r.variant),
+                format!("{:.1}", r.reduction),
+                format!("{:.2}", r.err_increase_pct),
+                "MiniCaffeNet".to_string(),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Paper-shape checks for the measured leg: the ACDC swap keeps accuracy
+/// within a few points of dense while cutting the FC parameters by >5×.
+pub fn check_paper_shape(rows: &[MeasuredRow]) -> Result<(), String> {
+    let dense = rows
+        .iter()
+        .find(|r| r.reduction == 1.0)
+        .ok_or("missing dense row")?;
+    let acdc = rows
+        .iter()
+        .find(|r| r.reduction > 1.0)
+        .ok_or("missing acdc row")?;
+    if acdc.reduction < 5.0 {
+        return Err(format!("reduction only x{:.1}", acdc.reduction));
+    }
+    if dense.test_err_pct > 60.0 {
+        return Err(format!(
+            "dense reference failed to learn ({}% err)",
+            dense.test_err_pct
+        ));
+    }
+    // The paper reports +0.67% at ImageNet scale; at our scale allow a
+    // wider band but the swap must stay within 15 points.
+    if acdc.err_increase_pct > 15.0 {
+        return Err(format!(
+            "ACDC error increase too large: {:+.1}%",
+            acdc.err_increase_pct
+        ));
+    }
+    Ok(())
+}
+
+/// Consistency between the audit module and the measured parameter banks.
+pub fn check_audit_consistency(rows: &[MeasuredRow]) -> Result<(), String> {
+    let dense = rows.iter().find(|r| r.reduction == 1.0).unwrap();
+    let acdc = rows.iter().find(|r| r.reduction > 1.0).unwrap();
+    if dense.params != mini::dense_total() {
+        return Err(format!(
+            "dense params {} != audit {}",
+            dense.params,
+            mini::dense_total()
+        ));
+    }
+    if acdc.params != mini::acdc_total() {
+        return Err(format!(
+            "acdc params {} != audit {}",
+            acdc.params,
+            mini::acdc_total()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_render_has_all_rows() {
+        let s = render_analytic();
+        assert!(s.contains("ACDC (this paper)"));
+        assert!(s.contains("CaffeNet Reference Model"));
+        assert!(s.contains("165,888"));
+        assert!(s.contains("x6.0"));
+    }
+
+    #[test]
+    fn fig4_render_without_measured() {
+        let s = render_fig4(None);
+        assert!(s.contains("Figure 4"));
+        assert!(s.contains("Adaptive Fastfood"));
+        // post-processing rows are excluded from fig 4
+        assert!(!s.contains("Collins"));
+    }
+
+    #[test]
+    fn fig4_render_with_measured_point() {
+        let rows = vec![
+            MeasuredRow {
+                variant: "dense",
+                params: 100,
+                reduction: 1.0,
+                test_err_pct: 10.0,
+                err_increase_pct: 0.0,
+                train_loss_final: 0.1,
+            },
+            MeasuredRow {
+                variant: "acdc",
+                params: 10,
+                reduction: 10.0,
+                test_err_pct: 12.0,
+                err_increase_pct: 2.0,
+                train_loss_final: 0.2,
+            },
+        ];
+        let s = render_fig4(Some(&rows));
+        assert!(s.contains("[measured]"));
+        check_paper_shape(&rows).unwrap();
+    }
+
+    #[test]
+    fn shape_check_rejects_broken_runs() {
+        let rows = vec![
+            MeasuredRow {
+                variant: "dense",
+                params: 100,
+                reduction: 1.0,
+                test_err_pct: 80.0, // failed to learn
+                err_increase_pct: 0.0,
+                train_loss_final: 2.3,
+            },
+            MeasuredRow {
+                variant: "acdc",
+                params: 10,
+                reduction: 10.0,
+                test_err_pct: 82.0,
+                err_increase_pct: 2.0,
+                train_loss_final: 2.3,
+            },
+        ];
+        assert!(check_paper_shape(&rows).is_err());
+    }
+}

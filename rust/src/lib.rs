@@ -1,0 +1,28 @@
+//! # acdc — ACDC: A Structured Efficient Linear Layer (ICLR 2016)
+//!
+//! Rust + JAX + Pallas reproduction of Moczulski et al., ICLR 2016.
+//!
+//! Three layers (see DESIGN.md):
+//! * **L1** (`python/compile/kernels/`): fused Pallas ACDC kernel;
+//! * **L2** (`python/compile/model.py`): jax models lowered AOT to HLO text;
+//! * **L3** (this crate): the deployment substrate — PJRT runtime, serving
+//!   coordinator with dynamic batching, training orchestrator, reference
+//!   SELL implementations and the paper's experiment harnesses.
+//!
+//! Python never runs on the request path: `make artifacts` lowers once,
+//! and this crate loads/executes the artifacts via the PJRT C API.
+
+pub mod checkpoint;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dct;
+pub mod experiments;
+pub mod metrics;
+pub mod perfmodel;
+pub mod runtime;
+pub mod sell;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,269 @@
+//! `acdc` — launcher CLI for the ACDC reproduction.
+//!
+//! Subcommands (each maps to a DESIGN.md experiment or a serving/training
+//! entry point):
+//!
+//! ```text
+//! acdc info                         inspect artifacts + platform
+//! acdc params                       Table-1 analytic parameter audit (E3)
+//! acdc fig2   [--sizes ...]         Figure-2 runtime sweep (E1)
+//! acdc fig3   [--steps N]           Figure-3 approximation grid (E2)
+//! acdc table1 [--steps N]           Table-1 measured MiniCaffeNet leg (E3)
+//! acdc train-cnn [--config f.toml]  E6 end-to-end CNN training
+//! acdc serve  [--config f.toml]     serving demo over the coordinator (E7)
+//! ```
+
+use acdc::config::{Config, ServeConfig, TrainConfig};
+use acdc::data::regression::RegressionTask;
+use acdc::data::synthimg::ImageCorpus;
+use acdc::experiments::{fig2, fig3, table1};
+use acdc::runtime::Engine;
+use acdc::serve::{ServeParams, Server};
+use acdc::train::{CnnTrainer, CnnVariant, StepDecay};
+use acdc::util::bench::Bench;
+use acdc::util::cli::{flag, opt, Args};
+use std::path::Path;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let sub = argv.get(1).map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = std::iter::once(format!("acdc {sub}"))
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+    let code = match run(sub, &rest) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(sub: &str, rest: &[String]) -> Result<(), String> {
+    match sub {
+        "info" => cmd_info(rest),
+        "params" => cmd_params(rest),
+        "fig2" => cmd_fig2(rest),
+        "fig3" => cmd_fig3(rest),
+        "table1" => cmd_table1(rest),
+        "train-cnn" => cmd_train_cnn(rest),
+        "serve" => cmd_serve(rest),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}'\n{HELP}")),
+    }
+}
+
+const HELP: &str = "acdc — ACDC: A Structured Efficient Linear Layer (ICLR 2016) reproduction
+
+subcommands:
+  info        inspect artifacts + PJRT platform
+  params      Table-1 analytic parameter audit
+  fig2        Figure-2 runtime sweep (dense vs fused vs multipass ACDC)
+  fig3        Figure-3 operator-approximation grid
+  table1      Table-1 measured MiniCaffeNet leg
+  train-cnn   end-to-end CNN training (E6)
+  serve       serving demo over the dynamic-batching coordinator
+run `acdc <subcommand> --help` for options";
+
+fn common_opts() -> Vec<acdc::util::cli::OptSpec> {
+    vec![opt("artifacts", "artifacts directory", Some("artifacts"))]
+}
+
+fn cmd_info(rest: &[String]) -> Result<(), String> {
+    let args = Args::parse_from(rest, common_opts())?;
+    let engine = Engine::open(Path::new(args.get("artifacts").unwrap()))?;
+    println!("platform: {}", engine.platform());
+    let m = engine.manifest();
+    println!("artifacts ({}):", m.artifacts.len());
+    for a in &m.artifacts {
+        let ins: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|s| format!("{}{:?}", s.name, s.shape))
+            .collect();
+        println!(
+            "  {:<28} [{}] {}",
+            a.name,
+            a.tag_str("experiment").unwrap_or("-"),
+            ins.join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn cmd_params(rest: &[String]) -> Result<(), String> {
+    let _ = Args::parse_from(rest, vec![])?;
+    print!("{}", table1::render_analytic());
+    print!("{}", table1::render_fig4(None));
+    Ok(())
+}
+
+fn cmd_fig2(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("sizes", "layer sizes to sweep", Some("128,256,512,1024,2048,4096")));
+    opts.push(opt("batch", "batch size (paper: 128)", Some("128")));
+    opts.push(flag("no-pjrt", "skip the PJRT-executed leg"));
+    let args = Args::parse_from(rest, opts)?;
+    let sizes = args.get_usize_list("sizes")?.unwrap();
+    let batch = args.get_usize("batch")?.unwrap();
+    let engine = if args.flag("no-pjrt") {
+        None
+    } else {
+        Engine::open(Path::new(args.get("artifacts").unwrap())).ok()
+    };
+    let rows = fig2::run(&sizes, batch, &Bench::default(), engine.as_ref());
+    print!("{}", fig2::render(&rows));
+    match fig2::check_paper_shape(&rows) {
+        Ok(()) => println!("paper-shape checks: OK"),
+        Err(e) => println!("paper-shape checks: FAILED — {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_fig3(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("steps", "SGD steps per curve", Some("400")));
+    opts.push(opt("ks", "cascade depths", Some("1,2,4,8,16,32")));
+    opts.push(opt("rows", "regression rows", Some("10000")));
+    opts.push(opt("seed", "rng seed", Some("0")));
+    let args = Args::parse_from(rest, opts)?;
+    let engine = Engine::open(Path::new(args.get("artifacts").unwrap()))?;
+    let task = RegressionTask::generate(
+        args.get_usize("rows")?.unwrap(),
+        32,
+        1e-4,
+        args.get_usize("seed")?.unwrap() as u64,
+    );
+    let cells = fig3::run(
+        &engine,
+        &task,
+        &args.get_usize_list("ks")?.unwrap(),
+        args.get_usize("steps")?.unwrap(),
+        args.get_usize("seed")?.unwrap() as u64,
+    )?;
+    print!("{}", fig3::render(&cells, &task));
+    match fig3::check_paper_shape(&cells) {
+        Ok(()) => println!("paper-shape checks: OK"),
+        Err(e) => println!("paper-shape checks: FAILED — {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_table1(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("steps", "training steps per variant", Some("400")));
+    opts.push(opt("train-rows", "train corpus size", Some("2000")));
+    opts.push(opt("test-rows", "test corpus size", Some("1024")));
+    opts.push(opt("seed", "rng seed", Some("0")));
+    let args = Args::parse_from(rest, opts)?;
+    print!("{}", table1::render_analytic());
+    let engine = Engine::open(Path::new(args.get("artifacts").unwrap()))?;
+    let rows = table1::run_measured(
+        &engine,
+        args.get_usize("train-rows")?.unwrap(),
+        args.get_usize("test-rows")?.unwrap(),
+        args.get_usize("steps")?.unwrap(),
+        args.get_usize("seed")?.unwrap() as u64,
+    )?;
+    print!("{}", table1::render_measured(&rows));
+    print!("{}", table1::render_fig4(Some(&rows)));
+    table1::check_audit_consistency(&rows)?;
+    match table1::check_paper_shape(&rows) {
+        Ok(()) => println!("paper-shape checks: OK"),
+        Err(e) => println!("paper-shape checks: FAILED — {e}"),
+    }
+    Ok(())
+}
+
+fn cmd_train_cnn(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("config", "TOML config file", None));
+    opts.push(opt("steps", "SGD steps", Some("400")));
+    opts.push(opt("variant", "acdc | dense", Some("acdc")));
+    let args = Args::parse_from(rest, opts)?;
+    let tc = match args.get("config") {
+        Some(path) => TrainConfig::from_config(&Config::from_file(Path::new(path))?)?,
+        None => TrainConfig {
+            artifacts_dir: args.get("artifacts").unwrap().to_string(),
+            steps: args.get_usize("steps")?.unwrap(),
+            ..Default::default()
+        },
+    };
+    let variant = match args.get("variant").unwrap() {
+        "acdc" => CnnVariant::Acdc,
+        "dense" => CnnVariant::Dense,
+        v => return Err(format!("unknown variant '{v}'")),
+    };
+    let engine = Engine::open(Path::new(&tc.artifacts_dir))?;
+    let train = ImageCorpus::generate(2000, 0.15, tc.seed);
+    let test = ImageCorpus::generate(1024, 0.15, tc.seed + 1);
+    let mut t = CnnTrainer::new(&engine, variant, tc.seed)?;
+    println!("training {variant:?} MiniCaffeNet: {} steps, lr {}", tc.steps, tc.lr);
+    let schedule = StepDecay::new(tc.lr, tc.lr_decay, tc.lr_decay_every);
+    let (curve, eval) = t.run(&train, &test, tc.steps, &schedule, tc.eval_every)?;
+    println!("{}", curve.render(2));
+    println!(
+        "test: loss {:.3}, accuracy {:.1}%",
+        eval.loss,
+        eval.accuracy * 100.0
+    );
+    if let Some(path) = &tc.checkpoint_path {
+        t.checkpoint().save(Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("config", "TOML config file", None));
+    opts.push(opt("requests", "demo request count", Some("500")));
+    opts.push(flag("native", "use the pure-rust executor instead of PJRT"));
+    let args = Args::parse_from(rest, opts)?;
+    let sc = match args.get("config") {
+        Some(path) => ServeConfig::from_config(&Config::from_file(Path::new(path))?)?,
+        None => ServeConfig {
+            artifacts_dir: args.get("artifacts").unwrap().to_string(),
+            ..Default::default()
+        },
+    };
+    let n = 256;
+    let server = if args.flag("native") {
+        let mut rng = acdc::util::rng::Pcg32::seeded(1);
+        Server::start_native(
+            &sc,
+            acdc::sell::acdc::AcdcCascade::nonlinear(
+                n,
+                12,
+                acdc::sell::init::DiagInit::CAFFENET,
+                &mut rng,
+            ),
+        )
+    } else {
+        Server::start_pjrt(&sc, ServeParams::random(n, 12, 10, 1), n)?
+    };
+    let requests = args.get_usize("requests")?.unwrap();
+    println!("serving demo: {requests} requests (buckets {:?})", sc.buckets);
+    let mut rng = acdc::util::rng::Pcg32::seeded(7);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|_| server.submit(rng.normal_vec(n, 0.0, 1.0)).expect("submit"))
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(120))
+            .map_err(|e| e.to_string())?
+            .output?;
+    }
+    println!(
+        "done: {:.0} req/s\n{}",
+        requests as f64 / t0.elapsed().as_secs_f64(),
+        server.metrics_report()
+    );
+    server.shutdown();
+    Ok(())
+}

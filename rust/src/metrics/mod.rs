@@ -1,0 +1,276 @@
+//! Serving/training metrics: counters, gauges, latency histograms.
+//!
+//! Lock-free counters (atomics) plus a log-bucketed latency histogram with
+//! percentile queries — the minimal telemetry a serving coordinator needs.
+//! A `Registry` aggregates named instruments and renders a text report.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log₂-bucketed histogram for nanosecond latencies.
+///
+/// 64 buckets: bucket i counts samples with floor(log2(ns)) == i. Bounded
+/// relative error (~2×) is plenty for p50/p99 reporting; recording is one
+/// atomic increment.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..64).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    pub fn record_ns(&self, ns: u64) {
+        let bucket = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Approximate percentile (upper bucket bound at the target rank).
+    pub fn percentile_ns(&self, pct: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((pct / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1); // upper bound of bucket i
+            }
+        }
+        self.max_ns()
+    }
+}
+
+/// Named instrument registry with a text report.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Multi-line `name value` report (sorted, stable).
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "hist {name} count={} mean={:.1}µs p50={:.1}µs p99={:.1}µs max={:.1}µs\n",
+                h.count(),
+                h.mean_ns() / 1e3,
+                h.percentile_ns(50.0) as f64 / 1e3,
+                h.percentile_ns(99.0) as f64 / 1e3,
+                h.max_ns() as f64 / 1e3,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(5);
+        assert_eq!(c.get(), 6);
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let g = Gauge::default();
+        g.set(10);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn histogram_percentiles_bounded() {
+        let h = Histogram::new();
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count(), 5);
+        let p50 = h.percentile_ns(50.0);
+        // True p50 is 400; log-bucketed answer must be within 2×.
+        assert!((256..=1024).contains(&p50), "p50={p50}");
+        let p99 = h.percentile_ns(99.0);
+        assert!(p99 >= 65_536, "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_mean_and_max_exact() {
+        let h = Histogram::new();
+        h.record_ns(1000);
+        h.record_ns(3000);
+        assert_eq!(h.mean_ns(), 2000.0);
+        assert_eq!(h.max_ns(), 3000);
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile_ns(99.0), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn registry_reuses_instruments() {
+        let r = Registry::new();
+        r.counter("req").inc();
+        r.counter("req").inc();
+        assert_eq!(r.counter("req").get(), 2);
+    }
+
+    #[test]
+    fn registry_report_contains_all() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        r.gauge("b").set(7);
+        r.histogram("lat").record(Duration::from_micros(50));
+        let rep = r.report();
+        assert!(rep.contains("counter a 1"));
+        assert!(rep.contains("gauge b 7"));
+        assert!(rep.contains("hist lat count=1"));
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let h = Arc::new(Histogram::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record_ns(i + 1);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 8000);
+    }
+}

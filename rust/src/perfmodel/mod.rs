@@ -1,0 +1,198 @@
+//! §5 performance model: arithmetic intensity and roofline curves.
+//!
+//! The paper's Figure 2 plots measured runtimes against "peak" curves
+//! derived from a Titan X's 6605 GFLOP/s and 336.5 GB/s. This module
+//! reproduces that model exactly — FLOP counts, bytes moved, arithmetic
+//! intensity AI = (4 + 5·log2 N)/8 — parameterized by the hardware so the
+//! same curves can be drawn for the paper's GPU and for this testbed
+//! (DESIGN.md substitution S1).
+
+/// Hardware roofline parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Hardware {
+    pub name: &'static str,
+    /// Peak floating-point throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Peak memory bandwidth, bytes/s.
+    pub peak_bw: f64,
+}
+
+impl Hardware {
+    /// The paper's benchmark processor (§5).
+    pub const TITAN_X: Hardware = Hardware {
+        name: "NVIDIA Titan X",
+        peak_flops: 6605e9,
+        peak_bw: 336.5e9,
+    };
+
+    /// Machine-balance point in FLOPs/byte ("approximately 20" in §5).
+    pub fn balance(&self) -> f64 {
+        self.peak_flops / self.peak_bw
+    }
+
+    /// Roofline-predicted seconds for (flops, bytes): whichever of the
+    /// compute or memory legs dominates.
+    pub fn predict_seconds(&self, flops: f64, bytes: f64) -> f64 {
+        (flops / self.peak_flops).max(bytes / self.peak_bw)
+    }
+
+    /// Measure this host's achievable memory bandwidth with a large
+    /// read+write streaming pass (a tiny STREAM-triad). Used to draw the
+    /// testbed's own peak curves.
+    pub fn measure_host(samples: usize) -> Hardware {
+        let n = 1 << 24; // 16M f32 = 64 MiB, beyond LLC
+        let mut a = vec![1.0f32; n];
+        let b = vec![2.0f32; n];
+        let mut best_bw = 0.0f64;
+        for _ in 0..samples.max(1) {
+            let t = std::time::Instant::now();
+            for i in 0..n {
+                a[i] = a[i] + 1.5 * b[i];
+            }
+            let secs = t.elapsed().as_secs_f64();
+            std::hint::black_box(&a);
+            // triad moves 3 words per element (2 loads + 1 store)
+            let bytes = 3.0 * 4.0 * n as f64;
+            best_bw = best_bw.max(bytes / secs);
+        }
+        Hardware {
+            name: "host (measured triad)",
+            // 2 flops per element at measured bandwidth — crude but only
+            // the BW leg matters for ACDC's memory-bound regime.
+            peak_flops: best_bw / 4.0 * 2.0,
+            peak_bw: best_bw,
+        }
+    }
+}
+
+/// FLOPs of one ACDC layer forward for a batch (paper §5):
+/// ≈ (4N + 5N·log2 N) per example.
+pub fn acdc_flops(n: usize, batch: usize) -> f64 {
+    let nf = n as f64;
+    batch as f64 * (4.0 * nf + 5.0 * nf * nf.log2())
+}
+
+/// Minimum bytes to/from main memory for a batched ACDC layer (§5):
+/// 8 bytes/element (4 in + 4 out) once A/D are cached across the batch.
+pub fn acdc_bytes_batched(n: usize, batch: usize) -> f64 {
+    8.0 * (n * batch) as f64
+}
+
+/// Bytes for a single example including the A and D loads (§5's 24N).
+pub fn acdc_bytes_single(n: usize) -> f64 {
+    24.0 * n as f64
+}
+
+/// Bytes for the multipass implementation: every pass loads and stores
+/// the full activation (4 passes ≈ 4× the fused traffic, §5.2).
+pub fn acdc_bytes_multipass(n: usize, batch: usize, passes: usize) -> f64 {
+    passes as f64 * acdc_bytes_batched(n, batch)
+}
+
+/// Arithmetic intensity of a batched ACDC layer: (4 + 5·log2 N)/8.
+pub fn acdc_arithmetic_intensity(n: usize) -> f64 {
+    let nf = n as f64;
+    (4.0 + 5.0 * nf.log2()) / 8.0
+}
+
+/// FLOPs of a dense [n,n] layer on a batch: 2·N²·B.
+pub fn dense_flops(n: usize, batch: usize) -> f64 {
+    2.0 * (n as f64) * (n as f64) * batch as f64
+}
+
+/// Bytes of a dense layer on a batch: weights (4N², amortizable only if
+/// cached) + activations in/out.
+pub fn dense_bytes(n: usize, batch: usize) -> f64 {
+    4.0 * (n as f64) * (n as f64) + 8.0 * (n * batch) as f64
+}
+
+/// Predicted fused-ACDC vs dense speedup on `hw` at (n, batch).
+pub fn predicted_speedup(hw: &Hardware, n: usize, batch: usize) -> f64 {
+    let acdc = hw.predict_seconds(acdc_flops(n, batch), acdc_bytes_batched(n, batch));
+    let dense = hw.predict_seconds(dense_flops(n, batch), dense_bytes(n, batch));
+    dense / acdc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn titan_x_balance_about_20() {
+        let b = Hardware::TITAN_X.balance();
+        assert!((19.0..21.0).contains(&b), "balance={b}");
+    }
+
+    #[test]
+    fn ai_range_matches_paper() {
+        // §5: "For the values of N we are interested in (128 → 16,384)
+        // this arithmetic intensity varies between 4.9 and 9.3".
+        let lo = acdc_arithmetic_intensity(128);
+        let hi = acdc_arithmetic_intensity(16_384);
+        assert!((lo - 4.875).abs() < 0.05, "lo={lo}");
+        assert!((hi - 9.25).abs() < 0.1, "hi={hi}");
+    }
+
+    #[test]
+    fn acdc_memory_bound_on_titan_x() {
+        // AI < balance(≈20) for all paper sizes → memory-bound.
+        for n in [128usize, 1024, 16_384] {
+            assert!(acdc_arithmetic_intensity(n) < Hardware::TITAN_X.balance());
+        }
+    }
+
+    #[test]
+    fn dense_compute_bound_at_scale() {
+        // Dense GEMM at batch 128 is FLOP-bound on the Titan X.
+        let hw = Hardware::TITAN_X;
+        let n = 4096;
+        let flops_t = dense_flops(n, 128) / hw.peak_flops;
+        let bytes_t = dense_bytes(n, 128) / hw.peak_bw;
+        assert!(flops_t > bytes_t);
+    }
+
+    #[test]
+    fn speedup_grows_with_n_and_reaches_10x() {
+        // Paper: "ACDC still would outperform them by up to 10 times".
+        let hw = Hardware::TITAN_X;
+        let s_small = predicted_speedup(&hw, 512, 128);
+        let s_large = predicted_speedup(&hw, 16_384, 128);
+        assert!(s_large > s_small, "{s_small} -> {s_large}");
+        assert!(s_large >= 10.0, "s_large={s_large}");
+    }
+
+    #[test]
+    fn single_example_bytes_24n() {
+        assert_eq!(acdc_bytes_single(1024), 24.0 * 1024.0);
+    }
+
+    #[test]
+    fn multipass_is_4x_fused() {
+        let fused = acdc_bytes_batched(1024, 128);
+        let multi = acdc_bytes_multipass(1024, 128, 4);
+        assert_eq!(multi / fused, 4.0);
+    }
+
+    #[test]
+    fn predict_seconds_takes_max_leg() {
+        let hw = Hardware {
+            name: "t",
+            peak_flops: 100.0,
+            peak_bw: 10.0,
+        };
+        // 100 flops = 1s compute; 100 bytes = 10s memory → memory wins.
+        assert_eq!(hw.predict_seconds(100.0, 100.0), 10.0);
+    }
+
+    #[test]
+    fn acdc_flops_formula() {
+        let f = acdc_flops(256, 1);
+        assert_eq!(f, 4.0 * 256.0 + 5.0 * 256.0 * 8.0);
+    }
+
+    #[test]
+    fn host_measurement_is_positive() {
+        let hw = Hardware::measure_host(1);
+        assert!(hw.peak_bw > 1e8, "bw={}", hw.peak_bw); // >0.1 GB/s sanity
+    }
+}

@@ -1,0 +1,275 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` and
+//! this crate. Positional input/output specs let the runtime feed and
+//! decode any lowered program without knowing anything about jax.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact tensor (matches aot.py's `_dtype_str`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            "u32" => Ok(Dtype::U32),
+            other => Err(format!("unsupported dtype '{other}'")),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One positional tensor spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec, String> {
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("spec missing name")?
+            .to_string();
+        let shape = j
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .ok_or("spec missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype")
+                .and_then(|v| v.as_str())
+                .ok_or("spec missing dtype")?,
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub tags: BTreeMap<String, Json>,
+    pub sha256: Option<String>,
+}
+
+impl ArtifactMeta {
+    pub fn tag_str(&self, key: &str) -> Option<&str> {
+        self.tags.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn tag_usize(&self, key: &str) -> Option<usize> {
+        self.tags.get(key).and_then(|v| v.as_usize())
+    }
+
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// The full manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: u64,
+    pub perm_seed: Option<u64>,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let root = Json::parse(text).map_err(|e| e.to_string())?;
+        let format = root
+            .get("format")
+            .and_then(|v| v.as_usize())
+            .ok_or("manifest missing format")? as u64;
+        if format != 1 {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let perm_seed = root.get("perm_seed").and_then(|v| v.as_usize()).map(|v| v as u64);
+        let mut artifacts = Vec::new();
+        for aj in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing artifacts")?
+        {
+            let name = aj
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing name")?
+                .to_string();
+            let file = dir.join(
+                aj.get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact missing file")?,
+            );
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>, String> {
+                aj.get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| format!("artifact '{name}' missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            let inputs = parse_specs("inputs")?;
+            let outputs = parse_specs("outputs")?;
+            let tags = aj
+                .get("tags")
+                .and_then(|v| v.as_obj())
+                .map(|o| o.clone())
+                .unwrap_or_default();
+            let sha256 = aj
+                .get("sha256")
+                .and_then(|v| v.as_str())
+                .map(String::from);
+            artifacts.push(ArtifactMeta {
+                name,
+                file,
+                inputs,
+                outputs,
+                tags,
+                sha256,
+            });
+        }
+        // Names must be unique — the registry indexes by name.
+        let mut names: Vec<&str> = artifacts.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != artifacts.len() {
+            return Err("duplicate artifact names in manifest".into());
+        }
+        Ok(Manifest {
+            format,
+            perm_seed,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e} (run `make artifacts`?)", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All artifacts whose `experiment` tag matches.
+    pub fn by_experiment(&self, experiment: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.tag_str("experiment") == Some(experiment))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "perm_seed": 7,
+      "artifacts": [
+        {"name": "quickstart", "file": "q.hlo.txt",
+         "inputs": [{"name": "x", "shape": [4, 64], "dtype": "f32"},
+                    {"name": "a", "shape": [64], "dtype": "f32"}],
+         "outputs": [{"name": "y", "shape": [4, 64], "dtype": "f32"}],
+         "tags": {"experiment": "quickstart", "n": 64},
+         "sha256": "ab"},
+        {"name": "fig3_step_k4", "file": "f.hlo.txt",
+         "inputs": [{"name": "a_stack", "shape": [4, 32], "dtype": "f32"},
+                    {"name": "lr", "shape": [], "dtype": "f32"}],
+         "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+         "tags": {"experiment": "fig3", "k": 4}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.format, 1);
+        assert_eq!(m.perm_seed, Some(7));
+        assert_eq!(m.artifacts.len(), 2);
+        let q = m.get("quickstart").unwrap();
+        assert_eq!(q.inputs[0].shape, vec![4, 64]);
+        assert_eq!(q.inputs[0].dtype, Dtype::F32);
+        assert_eq!(q.file, Path::new("/tmp/a/q.hlo.txt"));
+        assert_eq!(q.tag_usize("n"), Some(64));
+    }
+
+    #[test]
+    fn by_experiment_filters() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.by_experiment("fig3").len(), 1);
+        assert_eq!(m.by_experiment("nope").len(), 0);
+    }
+
+    #[test]
+    fn scalar_spec_numel_is_one() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let f = m.get("fig3_step_k4").unwrap();
+        assert_eq!(f.inputs[1].numel(), 1);
+        assert_eq!(f.input_index("lr"), Some(1));
+        assert_eq!(f.output_index("loss"), Some(0));
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let dup = SAMPLE.replace("fig3_step_k4", "quickstart");
+        assert!(Manifest::parse(&dup, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.get("quickstart_acdc_b4_n64").is_some());
+        assert!(!m.by_experiment("fig3").is_empty());
+    }
+}

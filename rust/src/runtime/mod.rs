@@ -1,0 +1,248 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate exactly as /opt/xla-example/load_hlo does:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. The `Engine` owns the client and a lazy per-artifact
+//! executable cache; `LoadedArtifact::call` is the typed entry point the
+//! coordinator and training orchestrator use.
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod values;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use manifest::{ArtifactMeta, Manifest};
+use values::HostValue;
+
+/// PJRT engine: client + manifest + compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Open the CPU PJRT client over an artifacts directory.
+    pub fn open(artifacts_dir: &Path) -> Result<Engine, String> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<LoadedArtifact<'_>, String> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact '{name}' (manifest has {})",
+                self.manifest.artifacts.len()))?
+            .clone();
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(name) {
+                return Ok(LoadedArtifact {
+                    engine: self,
+                    meta,
+                    exe: Arc::clone(exe),
+                });
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(&meta.file)
+            .map_err(|e| format!("parse HLO text {}: {e}", meta.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| format!("compile '{name}': {e}"))?,
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), Arc::clone(&exe));
+        Ok(LoadedArtifact {
+            engine: self,
+            meta,
+            exe,
+        })
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Compile (or fetch) an artifact and return owned handles — the
+    /// hot-path variant used by executors that pin executables at
+    /// construction (no per-call cache lock / meta clone; perf pass L3-1).
+    pub fn load_owned(
+        &self,
+        name: &str,
+    ) -> Result<(ArtifactMeta, Arc<xla::PjRtLoadedExecutable>), String> {
+        let art = self.load(name)?;
+        Ok((art.meta, art.exe))
+    }
+}
+
+/// Execute a compiled artifact against its manifest contract. Free
+/// function so owners of `(meta, exe)` pairs can call without holding a
+/// `LoadedArtifact` (which borrows the engine).
+pub fn execute_artifact(
+    meta: &ArtifactMeta,
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[HostValue],
+) -> Result<Vec<HostValue>, String> {
+    if inputs.len() != meta.inputs.len() {
+        return Err(format!(
+            "'{}': expected {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        ));
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (hv, spec) in inputs.iter().zip(&meta.inputs) {
+        hv.check_spec(spec)
+            .map_err(|e| format!("'{}' input {e}", meta.name))?;
+        literals.push(hv.to_literal()?);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| format!("execute '{}': {e}", meta.name))?;
+    let buffer = &result[0][0];
+    let tuple_lit = buffer
+        .to_literal_sync()
+        .map_err(|e| format!("fetch result: {e}"))?;
+    // aot.py lowers with return_tuple=True, so the root is always a tuple
+    // (possibly a 1-tuple).
+    let elems = tuple_lit
+        .to_tuple()
+        .map_err(|e| format!("decompose tuple: {e}"))?;
+    if elems.len() != meta.outputs.len() {
+        return Err(format!(
+            "'{}': program returned {} outputs, manifest declares {}",
+            meta.name,
+            elems.len(),
+            meta.outputs.len()
+        ));
+    }
+    elems
+        .iter()
+        .zip(&meta.outputs)
+        .map(|(lit, spec)| HostValue::from_literal(lit, spec))
+        .collect()
+}
+
+/// A compiled artifact plus its manifest contract.
+pub struct LoadedArtifact<'e> {
+    #[allow(dead_code)]
+    engine: &'e Engine,
+    pub meta: ArtifactMeta,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl LoadedArtifact<'_> {
+    /// Execute with typed host values; validates inputs against the
+    /// manifest and decodes the output tuple back into host values.
+    pub fn call(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>, String> {
+        execute_artifact(&self.meta, &self.exe, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn open_fails_without_manifest() {
+        let err = match Engine::open(Path::new("/definitely/not/here")) {
+            Ok(_) => panic!("expected error"),
+            Err(e) => e,
+        };
+        assert!(err.contains("manifest.json"));
+    }
+
+    #[test]
+    fn quickstart_executes_and_matches_reference() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::open(&dir).unwrap();
+        let art = engine.load("quickstart_acdc_b4_n64").unwrap();
+        // Inputs: x [4,64], a, d, bias [64]
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        let n = 64;
+        let x = crate::tensor::Tensor::from_vec(&[4, n], rng.normal_vec(4 * n, 0.0, 1.0));
+        let a = rng.normal_vec(n, 1.0, 0.1);
+        let d = rng.normal_vec(n, 1.0, 0.1);
+        let b = rng.normal_vec(n, 0.0, 0.1);
+        let out = art
+            .call(&[
+                HostValue::from_tensor(&x),
+                HostValue::F32 { shape: vec![n], data: a.clone() },
+                HostValue::F32 { shape: vec![n], data: d.clone() },
+                HostValue::F32 { shape: vec![n], data: b.clone() },
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let y = out[0].to_tensor();
+        // Compare against the rust reference SELL.
+        let layer = crate::sell::acdc::AcdcLayer::new(
+            a,
+            d,
+            b,
+            std::sync::Arc::new(crate::dct::DctPlan::new(n)),
+        );
+        let want = layer.forward_fused(&x);
+        assert!(
+            y.max_abs_diff(&want) < 1e-3,
+            "pjrt vs rust reference diff = {}",
+            y.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::open(&dir).unwrap();
+        let _a = engine.load("quickstart_acdc_b4_n64").unwrap();
+        assert_eq!(engine.cached_count(), 1);
+        let _b = engine.load("quickstart_acdc_b4_n64").unwrap();
+        assert_eq!(engine.cached_count(), 1);
+    }
+
+    #[test]
+    fn call_rejects_wrong_arity_and_shape() {
+        let Some(dir) = artifacts_dir() else { return };
+        let engine = Engine::open(&dir).unwrap();
+        let art = engine.load("quickstart_acdc_b4_n64").unwrap();
+        assert!(art.call(&[]).is_err());
+        let bad = vec![
+            HostValue::from_tensor(&crate::tensor::Tensor::zeros(&[4, 32])), // wrong n
+            HostValue::from_tensor(&crate::tensor::Tensor::zeros(&[64])),
+            HostValue::from_tensor(&crate::tensor::Tensor::zeros(&[64])),
+            HostValue::from_tensor(&crate::tensor::Tensor::zeros(&[64])),
+        ];
+        assert!(art.call(&bad).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! Host-side values exchanged with PJRT executables.
+//!
+//! `HostValue` is the typed host tensor (f32/i32/u32) that converts to and
+//! from `xla::Literal` according to a `TensorSpec`. Conversion validates
+//! shape and dtype so a mis-wired harness fails loudly instead of feeding
+//! garbage to a compiled program.
+
+use crate::runtime::manifest::{Dtype, TensorSpec};
+use crate::tensor::Tensor;
+
+/// A typed host tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_u32(v: u32) -> HostValue {
+        HostValue::U32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> HostValue {
+        HostValue::F32 {
+            shape: t.shape().to_vec(),
+            data: t.data().to_vec(),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostValue {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostValue::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. }
+            | HostValue::I32 { shape, .. }
+            | HostValue::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32 { .. } => Dtype::F32,
+            HostValue::I32 { .. } => Dtype::I32,
+            HostValue::U32 { .. } => Dtype::U32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    /// Borrow f32 payload (panics on dtype mismatch — test/impl errors).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostValue::F32 { data, .. } => data,
+            other => panic!("expected f32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostValue::I32 { data, .. } => data,
+            other => panic!("expected i32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    /// First element as f64 (for scalar losses/metrics).
+    pub fn scalar(&self) -> f64 {
+        match self {
+            HostValue::F32 { data, .. } => data[0] as f64,
+            HostValue::I32 { data, .. } => data[0] as f64,
+            HostValue::U32 { data, .. } => data[0] as f64,
+        }
+    }
+
+    /// Into a 2-D `Tensor` view (f32 only).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::from_vec(self.shape(), self.as_f32().to_vec())
+    }
+
+    /// Validate against a manifest spec.
+    pub fn check_spec(&self, spec: &TensorSpec) -> Result<(), String> {
+        if self.dtype() != spec.dtype {
+            return Err(format!(
+                "'{}': dtype mismatch ({:?} vs {:?})",
+                spec.name,
+                self.dtype(),
+                spec.dtype
+            ));
+        }
+        if self.shape() != spec.shape.as_slice() {
+            return Err(format!(
+                "'{}': shape mismatch ({:?} vs {:?})",
+                spec.name,
+                self.shape(),
+                spec.shape
+            ));
+        }
+        Ok(())
+    }
+
+    /// Convert to an `xla::Literal`.
+    pub fn to_literal(&self) -> Result<xla::Literal, String> {
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match self {
+            HostValue::F32 { data, .. } => (
+                xla::ElementType::F32,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            HostValue::I32 { data, .. } => (
+                xla::ElementType::S32,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+            HostValue::U32 { data, .. } => (
+                xla::ElementType::U32,
+                data.iter().flat_map(|v| v.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, self.shape(), &bytes)
+            .map_err(|e| format!("literal create: {e}"))
+    }
+
+    /// Convert back from a `xla::Literal` according to a spec.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostValue, String> {
+        let count = lit.element_count();
+        if count != spec.numel() {
+            return Err(format!(
+                "'{}': literal has {count} elements, spec wants {}",
+                spec.name,
+                spec.numel()
+            ));
+        }
+        let hv = match spec.dtype {
+            Dtype::F32 => HostValue::F32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<f32>().map_err(|e| format!("to_vec f32: {e}"))?,
+            },
+            Dtype::I32 => HostValue::I32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<i32>().map_err(|e| format!("to_vec i32: {e}"))?,
+            },
+            Dtype::U32 => HostValue::U32 {
+                shape: spec.shape.clone(),
+                data: lit.to_vec::<u32>().map_err(|e| format!("to_vec u32: {e}"))?,
+            },
+        };
+        Ok(hv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize], dtype: Dtype) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            shape: shape.to_vec(),
+            dtype,
+        }
+    }
+
+    #[test]
+    fn scalar_constructors() {
+        assert_eq!(HostValue::scalar_f32(2.5).scalar(), 2.5);
+        assert_eq!(HostValue::scalar_u32(3).scalar(), 3.0);
+        assert!(HostValue::scalar_f32(1.0).shape().is_empty());
+    }
+
+    #[test]
+    fn tensor_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let hv = HostValue::from_tensor(&t);
+        assert_eq!(hv.to_tensor(), t);
+        assert_eq!(hv.numel(), 6);
+    }
+
+    #[test]
+    fn check_spec_validates() {
+        let hv = HostValue::from_tensor(&Tensor::zeros(&[2, 2]));
+        assert!(hv.check_spec(&spec("x", &[2, 2], Dtype::F32)).is_ok());
+        assert!(hv.check_spec(&spec("x", &[4], Dtype::F32)).is_err());
+        assert!(hv.check_spec(&spec("x", &[2, 2], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn as_f32_panics_on_i32() {
+        HostValue::from_i32(&[1], vec![1]).as_f32();
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.5, -2.0, 0.0, 7.25]);
+        let hv = HostValue::from_tensor(&t);
+        let lit = hv.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit, &spec("x", &[2, 2], Dtype::F32)).unwrap();
+        assert_eq!(back, hv);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_u32() {
+        let hv = HostValue::from_i32(&[3], vec![-1, 0, 5]);
+        let lit = hv.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit, &spec("l", &[3], Dtype::I32)).unwrap();
+        assert_eq!(back, hv);
+
+        let hv = HostValue::scalar_u32(42);
+        let lit = hv.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit, &spec("s", &[], Dtype::U32)).unwrap();
+        assert_eq!(back.scalar(), 42.0);
+    }
+
+    #[test]
+    fn from_literal_rejects_count_mismatch() {
+        let hv = HostValue::from_tensor(&Tensor::zeros(&[4]));
+        let lit = hv.to_literal().unwrap();
+        assert!(HostValue::from_literal(&lit, &spec("x", &[5], Dtype::F32)).is_err());
+    }
+}

@@ -1,0 +1,751 @@
+//! The ACDC layer and deep cascades — the paper's core contribution (§4).
+//!
+//! `y = ((x ⊙ a) · C ⊙ d + bias) · Cᵀ` with two execution strategies
+//! mirroring §5:
+//!
+//! * **fused** ("single call", §5.1): each row makes one pass through a
+//!   small scratch buffer — scale, DCT-II, scale+bias, DCT-III — touching
+//!   main memory exactly once for load and once for store (the paper's
+//!   8N-bytes/row ideal);
+//! * **multipass** ("multiple call", §5.2): four separate full-batch
+//!   passes materializing `h1..h3`, the way a naive framework composition
+//!   (or the paper's cuFFT fallback) executes, with ~4× the memory
+//!   traffic.
+//!
+//! The backward pass implements the paper's closed-form gradients
+//! (eqs. 10–14) and *recomputes* `h2` rather than caching it — the same
+//! memory/runtime trade the paper's §5 implementation makes.
+
+use std::sync::Arc;
+
+use super::LinearOp;
+use crate::dct::DctPlan;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// One ACDC layer: diagonals `a`, `d` and a spectral-domain `bias` (§6.2
+/// places biases on D only).
+#[derive(Debug, Clone)]
+pub struct AcdcLayer {
+    pub a: Vec<f32>,
+    pub d: Vec<f32>,
+    pub bias: Vec<f32>,
+    plan: Arc<DctPlan>,
+}
+
+impl AcdcLayer {
+    pub fn new(a: Vec<f32>, d: Vec<f32>, bias: Vec<f32>, plan: Arc<DctPlan>) -> AcdcLayer {
+        let n = plan.len();
+        assert_eq!(a.len(), n);
+        assert_eq!(d.len(), n);
+        assert_eq!(bias.len(), n);
+        AcdcLayer { a, d, bias, plan }
+    }
+
+    /// Identity layer (a = d = 1, bias = 0).
+    pub fn identity(n: usize) -> AcdcLayer {
+        AcdcLayer::new(
+            vec![1.0; n],
+            vec![1.0; n],
+            vec![0.0; n],
+            Arc::new(DctPlan::new(n)),
+        )
+    }
+
+    /// Random layer with N(mean, sigma²) diagonals and zero bias.
+    pub fn random(n: usize, rng: &mut Pcg32, mean: f64, sigma: f64) -> AcdcLayer {
+        AcdcLayer::new(
+            rng.normal_vec(n, mean, sigma),
+            rng.normal_vec(n, mean, sigma),
+            vec![0.0; n],
+            Arc::new(DctPlan::new(n)),
+        )
+    }
+
+    pub fn n(&self) -> usize {
+        self.plan.len()
+    }
+
+    pub fn plan(&self) -> &Arc<DctPlan> {
+        &self.plan
+    }
+
+    /// Fused single-pass forward of one row into `out` using `scratch`
+    /// (≥ 3n: n for the row buffer + 2n for the FFT). This is the §5.1
+    /// single-call strategy: intermediates never leave the scratch.
+    pub fn forward_row_fused(&self, x: &[f32], out: &mut [f32], scratch: &mut [f32]) {
+        let n = self.n();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        debug_assert!(scratch.len() >= 3 * n);
+        let (buf, fft_scratch) = scratch.split_at_mut(n);
+        // h1 = x ⊙ a
+        for i in 0..n {
+            buf[i] = x[i] * self.a[i];
+        }
+        // h2 = h1 · C
+        self.plan.dct2(buf, fft_scratch);
+        // h3 = h2 ⊙ d + bias
+        for i in 0..n {
+            buf[i] = buf[i] * self.d[i] + self.bias[i];
+        }
+        // y = h3 · Cᵀ
+        self.plan.dct3(buf, fft_scratch);
+        out.copy_from_slice(buf);
+    }
+
+    /// Fused forward of a PAIR of rows sharing one complex FFT per
+    /// transform (2-for-1 real-FFT packing — perf pass, §Perf).
+    /// `scratch` must be ≥ 4n: two row buffers + 2n FFT scratch.
+    pub fn forward_rows_pair(
+        &self,
+        x1: &[f32],
+        x2: &[f32],
+        out1: &mut [f32],
+        out2: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let n = self.n();
+        debug_assert!(scratch.len() >= 4 * n);
+        let (bufs, fft_scratch) = scratch.split_at_mut(2 * n);
+        let (b1, b2) = bufs.split_at_mut(n);
+        for i in 0..n {
+            b1[i] = x1[i] * self.a[i];
+            b2[i] = x2[i] * self.a[i];
+        }
+        self.plan.dct2_pair(b1, b2, fft_scratch);
+        for i in 0..n {
+            b1[i] = b1[i] * self.d[i] + self.bias[i];
+            b2[i] = b2[i] * self.d[i] + self.bias[i];
+        }
+        self.plan.dct3_pair(b1, b2, fft_scratch);
+        out1.copy_from_slice(b1);
+        out2.copy_from_slice(b2);
+    }
+
+    /// Fused forward over a whole batch (serial over rows, paired FFTs).
+    pub fn forward_fused(&self, x: &Tensor) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let rows = x.rows();
+        let mut out = Tensor::zeros(&[rows, n]);
+        let mut scratch = vec![0.0f32; 4 * n];
+        let mut r = 0;
+        while r + 1 < rows {
+            // Disjoint row views of the output buffer.
+            let (head, tail) = out.data_mut()[r * n..].split_at_mut(n);
+            self.forward_rows_pair(x.row(r), x.row(r + 1), head, &mut tail[..n], &mut scratch);
+            r += 2;
+        }
+        if r < rows {
+            self.forward_row_fused(x.row(r), out.row_mut(r), &mut scratch);
+        }
+        out
+    }
+
+    /// Fused forward with rows split across `threads` scoped threads —
+    /// the CPU analogue of the paper's threadblock-per-batch-tile
+    /// parallelism (perf pass L3-2; see EXPERIMENTS.md §Perf).
+    pub fn forward_fused_parallel(&self, x: &Tensor, threads: usize) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let rows = x.rows();
+        let threads = threads.clamp(1, rows.max(1));
+        if threads <= 1 || rows < 2 {
+            return self.forward_fused(x);
+        }
+        let mut out = Tensor::zeros(&[rows, n]);
+        let ranges = crate::util::threadpool::split_ranges(rows, threads);
+        // Split the output buffer into disjoint row chunks and process
+        // each chunk on its own thread with its own scratch.
+        let out_data = out.data_mut();
+        std::thread::scope(|scope| {
+            let mut rest = out_data;
+            for range in ranges {
+                let (chunk, tail) = rest.split_at_mut((range.end - range.start) * n);
+                rest = tail;
+                let layer = &*self;
+                let xref = &*x;
+                scope.spawn(move || {
+                    let mut scratch = vec![0.0f32; 4 * n];
+                    let count = range.end - range.start;
+                    let mut i = 0;
+                    while i + 1 < count {
+                        let (h, t) = chunk[i * n..].split_at_mut(n);
+                        layer.forward_rows_pair(
+                            xref.row(range.start + i),
+                            xref.row(range.start + i + 1),
+                            h,
+                            &mut t[..n],
+                            &mut scratch,
+                        );
+                        i += 2;
+                    }
+                    if i < count {
+                        layer.forward_row_fused(
+                            xref.row(range.start + i),
+                            &mut chunk[i * n..(i + 1) * n],
+                            &mut scratch,
+                        );
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    /// Multipass forward: materializes h1, h2, h3 as full batch tensors —
+    /// the §5.2 "multiple call" strategy with ≫8N bytes of traffic.
+    pub fn forward_multipass(&self, x: &Tensor) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let rows = x.rows();
+        // pass 1: h1 = x ⊙ a (full batch materialized)
+        let mut h = Tensor::zeros(&[rows, n]);
+        for r in 0..rows {
+            let src = x.row(r);
+            let dst = h.row_mut(r);
+            for i in 0..n {
+                dst[i] = src[i] * self.a[i];
+            }
+        }
+        // pass 2: h2 = h1 · C (separate full-batch DCT pass)
+        self.plan.dct2_rows(h.data_mut(), rows);
+        // pass 3: h3 = h2 ⊙ d + bias
+        for r in 0..rows {
+            let dst = h.row_mut(r);
+            for i in 0..n {
+                dst[i] = dst[i] * self.d[i] + self.bias[i];
+            }
+        }
+        // pass 4: y = h3 · Cᵀ
+        self.plan.dct3_rows(h.data_mut(), rows);
+        h
+    }
+
+    /// Backward pass (paper eqs. 10–14) for a batch.
+    ///
+    /// Given x and g = ∂L/∂y, returns (∂L/∂x, grads). `h2` is recomputed
+    /// (§5: "recompute these during the backward pass ... saving memory").
+    pub fn backward(&self, x: &Tensor, g: &Tensor) -> (Tensor, AcdcGrads) {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        assert_eq!(g.cols(), n);
+        assert_eq!(x.rows(), g.rows());
+        let rows = x.rows();
+        let mut gx = Tensor::zeros(&[rows, n]);
+        let mut grads = AcdcGrads::zeros(n);
+        let mut scratch = vec![0.0f32; 2 * n];
+        let mut h2 = vec![0.0f32; n];
+        let mut gh = vec![0.0f32; n];
+        for r in 0..rows {
+            let xr = x.row(r);
+            // recompute h2 = (x ⊙ a) · C
+            for i in 0..n {
+                h2[i] = xr[i] * self.a[i];
+            }
+            self.plan.dct2(&mut h2, &mut scratch);
+            // gh3 = g · C   (eq. 10's C·∂L/∂y in row form)
+            gh.copy_from_slice(g.row(r));
+            self.plan.dct2(&mut gh, &mut scratch);
+            for i in 0..n {
+                grads.d[i] += h2[i] * gh[i]; // eq. 10
+                grads.bias[i] += gh[i];
+                gh[i] *= self.d[i]; // gh2
+            }
+            // gh1 = gh2 · Cᵀ
+            self.plan.dct3(&mut gh, &mut scratch);
+            let gxr = gx.row_mut(r);
+            for i in 0..n {
+                grads.a[i] += xr[i] * gh[i]; // eq. 12
+                gxr[i] = self.a[i] * gh[i]; // eq. 14
+            }
+        }
+        (gx, grads)
+    }
+
+    /// SGD update with per-diagonal learning-rate multipliers (§6.2).
+    pub fn sgd_step(&mut self, grads: &AcdcGrads, lr: f32, lr_mult_a: f32, lr_mult_d: f32) {
+        for i in 0..self.a.len() {
+            self.a[i] -= lr * lr_mult_a * grads.a[i];
+            self.d[i] -= lr * lr_mult_d * grads.d[i];
+            self.bias[i] -= lr * lr_mult_d * grads.bias[i];
+        }
+    }
+}
+
+impl LinearOp for AcdcLayer {
+    fn width(&self) -> usize {
+        self.n()
+    }
+
+    fn param_count(&self) -> usize {
+        3 * self.n() // a + d + bias
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_fused(x)
+    }
+
+    fn name(&self) -> &'static str {
+        "acdc"
+    }
+}
+
+/// Parameter gradients of one ACDC layer (batch-summed).
+#[derive(Debug, Clone)]
+pub struct AcdcGrads {
+    pub a: Vec<f32>,
+    pub d: Vec<f32>,
+    pub bias: Vec<f32>,
+}
+
+impl AcdcGrads {
+    pub fn zeros(n: usize) -> AcdcGrads {
+        AcdcGrads {
+            a: vec![0.0; n],
+            d: vec![0.0; n],
+            bias: vec![0.0; n],
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.a.iter_mut().chain(&mut self.d).chain(&mut self.bias) {
+            *v *= s;
+        }
+    }
+}
+
+/// Deep ACDC cascade (Definition 1) with optional §6.2 interleaving:
+/// fixed permutations after each layer and ReLU between layers.
+#[derive(Debug, Clone)]
+pub struct AcdcCascade {
+    pub layers: Vec<AcdcLayer>,
+    /// Per-layer permutation applied after the layer (None = identity).
+    pub perms: Option<Vec<Vec<u32>>>,
+    /// ReLU after every layer except the last.
+    pub relu: bool,
+    /// Whether SGD updates the spectral biases. The paper's Fig-3 linear
+    /// cascade is pure `A·C·D·C⁻¹` (no bias); §6.2's nonlinear stack puts
+    /// trainable biases on D.
+    pub train_bias: bool,
+}
+
+impl AcdcCascade {
+    /// Linear cascade (no perms / ReLU) with the given diagonal init —
+    /// the Figure-3 model.
+    pub fn linear(n: usize, k: usize, init: super::init::DiagInit, rng: &mut Pcg32) -> Self {
+        let plan = Arc::new(DctPlan::new(n));
+        let layers = (0..k)
+            .map(|_| {
+                AcdcLayer::new(
+                    init.sample(n, rng),
+                    init.sample(n, rng),
+                    vec![0.0; n],
+                    Arc::clone(&plan),
+                )
+            })
+            .collect();
+        AcdcCascade {
+            layers,
+            perms: None,
+            relu: false,
+            train_bias: false,
+        }
+    }
+
+    /// §6.2-style cascade: ReLU + per-layer random permutations.
+    pub fn nonlinear(n: usize, k: usize, init: super::init::DiagInit, rng: &mut Pcg32) -> Self {
+        let mut c = Self::linear(n, k, init, rng);
+        c.relu = true;
+        c.train_bias = true;
+        c.perms = Some((0..k).map(|_| rng.permutation(n)).collect());
+        c
+    }
+
+    pub fn n(&self) -> usize {
+        self.layers[0].n()
+    }
+
+    pub fn k(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Fused forward through all layers (each row stays in scratch across
+    /// the entire cascade — the deep analogue of the single-call kernel).
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let rows = x.rows();
+        let mut out = Tensor::zeros(&[rows, n]);
+        let mut scratch = vec![0.0f32; 3 * n];
+        let mut row = vec![0.0f32; n];
+        let mut tmp = vec![0.0f32; n];
+        for r in 0..rows {
+            row.copy_from_slice(x.row(r));
+            for (li, layer) in self.layers.iter().enumerate() {
+                layer.forward_row_fused(&row, &mut tmp, &mut scratch);
+                if let Some(perms) = &self.perms {
+                    for (i, &p) in perms[li].iter().enumerate() {
+                        row[i] = tmp[p as usize];
+                    }
+                } else {
+                    row.copy_from_slice(&tmp);
+                }
+                if self.relu && li != self.layers.len() - 1 {
+                    for v in row.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+            out.row_mut(r).copy_from_slice(&row);
+        }
+        out
+    }
+
+    /// Forward keeping per-layer inputs for the backward pass.
+    pub fn forward_train(&self, x: &Tensor) -> (Tensor, CascadeCache) {
+        let mut inputs = Vec::with_capacity(self.k());
+        let mut h = x.clone();
+        for (li, layer) in self.layers.iter().enumerate() {
+            inputs.push(h.clone());
+            let mut y = layer.forward_fused(&h);
+            if let Some(perms) = &self.perms {
+                y = apply_perm(&y, &perms[li]);
+            }
+            if self.relu && li != self.layers.len() - 1 {
+                y = y.map(|v| v.max(0.0));
+            }
+            h = y;
+        }
+        (h.clone(), CascadeCache { inputs, output: h })
+    }
+
+    /// Backward through the cascade; returns ∂L/∂x and per-layer grads.
+    pub fn backward(&self, cache: &CascadeCache, gy: &Tensor) -> (Tensor, Vec<AcdcGrads>) {
+        let kk = self.k();
+        let mut grads: Vec<Option<AcdcGrads>> = (0..kk).map(|_| None).collect();
+        let mut g = gy.clone();
+        for li in (0..kk).rev() {
+            // Undo ReLU mask (post-perm activations feed the next layer;
+            // recompute them as that layer's stored input).
+            if self.relu && li != kk - 1 {
+                // stored input of layer li+1 is ReLU(perm(layer li output));
+                // mask where that input is 0 (inactive units).
+                let act = &cache.inputs[li + 1];
+                let mut masked = g.clone();
+                for (mv, &av) in masked.data_mut().iter_mut().zip(act.data()) {
+                    if av <= 0.0 {
+                        *mv = 0.0;
+                    }
+                }
+                g = masked;
+            }
+            if let Some(perms) = &self.perms {
+                g = apply_perm_transpose(&g, &perms[li]);
+            }
+            let (gx, lg) = self.layers[li].backward(&cache.inputs[li], &g);
+            grads[li] = Some(lg);
+            g = gx;
+        }
+        (g, grads.into_iter().map(|g| g.unwrap()).collect())
+    }
+
+    /// Apply SGD to every layer (biases only when `train_bias`).
+    pub fn sgd_step(&mut self, grads: &[AcdcGrads], lr: f32) {
+        assert_eq!(grads.len(), self.layers.len());
+        let bias_on = self.train_bias;
+        for (layer, g) in self.layers.iter_mut().zip(grads) {
+            for i in 0..layer.a.len() {
+                layer.a[i] -= lr * g.a[i];
+                layer.d[i] -= lr * g.d[i];
+                if bias_on {
+                    layer.bias[i] -= lr * g.bias[i];
+                }
+            }
+        }
+    }
+
+    /// Total learnable parameters (a, d, bias per layer).
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| LinearOp::param_count(l)).sum()
+    }
+
+    /// Dense matrix this (linear) cascade represents.
+    pub fn materialize(&self) -> Tensor {
+        assert!(!self.relu, "materialize is only meaningful for linear cascades");
+        self.forward(&Tensor::eye(self.n()))
+    }
+}
+
+/// Stored activations for the cascade backward pass.
+#[derive(Debug, Clone)]
+pub struct CascadeCache {
+    /// inputs[i] = input fed to layer i.
+    pub inputs: Vec<Tensor>,
+    pub output: Tensor,
+}
+
+/// y[:, i] = x[:, perm[i]] — gather columns (paper's incoherence perms).
+pub fn apply_perm(x: &Tensor, perm: &[u32]) -> Tensor {
+    let (rows, n) = (x.rows(), x.cols());
+    assert_eq!(perm.len(), n);
+    let mut out = Tensor::zeros(&[rows, n]);
+    for r in 0..rows {
+        let src = x.row(r);
+        let dst = out.row_mut(r);
+        for (i, &p) in perm.iter().enumerate() {
+            dst[i] = src[p as usize];
+        }
+    }
+    out
+}
+
+/// Transpose (inverse) of `apply_perm`: y[:, perm[i]] = x[:, i].
+pub fn apply_perm_transpose(x: &Tensor, perm: &[u32]) -> Tensor {
+    let (rows, n) = (x.rows(), x.cols());
+    assert_eq!(perm.len(), n);
+    let mut out = Tensor::zeros(&[rows, n]);
+    for r in 0..rows {
+        let src = x.row(r);
+        let dst = out.row_mut(r);
+        for (i, &p) in perm.iter().enumerate() {
+            dst[p as usize] = src[i];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sell::init::DiagInit;
+
+    fn rand_tensor(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+        Tensor::from_vec(shape, rng.normal_vec(shape.iter().product(), 0.0, 1.0))
+    }
+
+    #[test]
+    fn identity_layer_is_identity() {
+        let mut rng = Pcg32::seeded(1);
+        let layer = AcdcLayer::identity(32);
+        let x = rand_tensor(&mut rng, &[4, 32]);
+        assert!(layer.forward_fused(&x).max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn fused_equals_multipass() {
+        let mut rng = Pcg32::seeded(2);
+        for n in [8usize, 64, 256] {
+            let layer = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+            let x = rand_tensor(&mut rng, &[5, n]);
+            let f = layer.forward_fused(&x);
+            let m = layer.forward_multipass(&x);
+            assert!(f.max_abs_diff(&m) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn forward_matches_naive_matrix_chain() {
+        // y = x·diag(a)·C·diag(d)·Cᵀ + bias·Cᵀ, assembled densely.
+        let mut rng = Pcg32::seeded(3);
+        let n = 16;
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.2);
+        layer.bias = rng.normal_vec(n, 0.0, 0.2);
+        let c = Tensor::from_vec(&[n, n], layer.plan().matrix().to_vec());
+        let mut da = Tensor::zeros(&[n, n]);
+        let mut dd = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            da.set2(i, i, layer.a[i]);
+            dd.set2(i, i, layer.d[i]);
+        }
+        let w = da.matmul(&c).matmul(&dd).matmul(&c.transpose());
+        let x = rand_tensor(&mut rng, &[3, n]);
+        let mut want = x.matmul(&w);
+        // + bias·Cᵀ per row
+        let bias_row = Tensor::from_vec(&[1, n], layer.bias.clone()).matmul(&c.transpose());
+        for r in 0..want.rows() {
+            for i in 0..n {
+                let v = want.get2(r, i) + bias_row.get2(0, i);
+                want.set2(r, i, v);
+            }
+        }
+        assert!(layer.forward_fused(&x).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 8;
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.2);
+        layer.bias = rng.normal_vec(n, 0.0, 0.1);
+        let x = rand_tensor(&mut rng, &[3, n]);
+        // L = 0.5 * ||y||²  =>  g = y
+        let y = layer.forward_fused(&x);
+        let (gx, grads) = layer.backward(&x, &y);
+        let loss = |l: &AcdcLayer, x: &Tensor| -> f64 {
+            l.forward_fused(x)
+                .data()
+                .iter()
+                .map(|v| 0.5 * (*v as f64).powi(2))
+                .sum()
+        };
+        let eps = 1e-3;
+        // check d/da, d/dd, d/dbias at a few indices
+        for idx in [0usize, 3, n - 1] {
+            let mut lp = layer.clone();
+            lp.a[idx] += eps;
+            let mut lm = layer.clone();
+            lm.a[idx] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64);
+            assert!(
+                (grads.a[idx] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0),
+                "a[{idx}]: got {} fd {}",
+                grads.a[idx],
+                fd
+            );
+
+            let mut lp = layer.clone();
+            lp.d[idx] += eps;
+            let mut lm = layer.clone();
+            lm.d[idx] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64);
+            assert!((grads.d[idx] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0));
+
+            let mut lp = layer.clone();
+            lp.bias[idx] += eps;
+            let mut lm = layer.clone();
+            lm.bias[idx] -= eps;
+            let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64);
+            assert!((grads.bias[idx] as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0));
+        }
+        // check dx at one coordinate
+        let mut xp = x.clone();
+        let v = xp.get2(1, 2) + eps;
+        xp.set2(1, 2, v);
+        let mut xm = x.clone();
+        let v = xm.get2(1, 2) - eps;
+        xm.set2(1, 2, v);
+        let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps as f64);
+        assert!((gx.get2(1, 2) as f64 - fd).abs() < 2e-2 * fd.abs().max(1.0));
+    }
+
+    #[test]
+    fn cascade_forward_matches_layer_composition() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 32;
+        let cascade = AcdcCascade::linear(n, 4, DiagInit::IDENTITY, &mut rng);
+        let x = rand_tensor(&mut rng, &[3, n]);
+        let mut want = x.clone();
+        for layer in &cascade.layers {
+            want = layer.forward_fused(&want);
+        }
+        assert!(cascade.forward(&x).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn cascade_with_perm_and_relu_matches_explicit() {
+        let mut rng = Pcg32::seeded(6);
+        let n = 16;
+        let cascade = AcdcCascade::nonlinear(n, 3, DiagInit::IDENTITY, &mut rng);
+        let x = rand_tensor(&mut rng, &[4, n]);
+        let mut want = x.clone();
+        for (li, layer) in cascade.layers.iter().enumerate() {
+            want = layer.forward_fused(&want);
+            want = apply_perm(&want, &cascade.perms.as_ref().unwrap()[li]);
+            if li != cascade.layers.len() - 1 {
+                want = want.map(|v| v.max(0.0));
+            }
+        }
+        assert!(cascade.forward(&x).max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn forward_train_output_matches_forward() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 16;
+        let cascade = AcdcCascade::nonlinear(n, 3, DiagInit::IDENTITY, &mut rng);
+        let x = rand_tensor(&mut rng, &[4, n]);
+        let (y, cache) = cascade.forward_train(&x);
+        assert!(y.max_abs_diff(&cascade.forward(&x)) < 1e-4);
+        assert_eq!(cache.inputs.len(), 3);
+    }
+
+    #[test]
+    fn cascade_backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(8);
+        let n = 8;
+        let mut cascade = AcdcCascade::linear(n, 3, DiagInit::IDENTITY, &mut rng);
+        cascade.relu = true; // exercise relu masking too
+        let x = rand_tensor(&mut rng, &[2, n]);
+        let (y, cache) = cascade.forward_train(&x);
+        let (_, grads) = cascade.backward(&cache, &y); // L = 0.5||y||²
+        let loss = |c: &AcdcCascade| -> f64 {
+            c.forward(&x)
+                .data()
+                .iter()
+                .map(|v| 0.5 * (*v as f64).powi(2))
+                .sum()
+        };
+        let eps = 1e-3;
+        for li in 0..3 {
+            for idx in [0usize, n / 2] {
+                let mut cp = cascade.clone();
+                cp.layers[li].d[idx] += eps;
+                let mut cm = cascade.clone();
+                cm.layers[li].d[idx] -= eps;
+                let fd = (loss(&cp) - loss(&cm)) / (2.0 * eps as f64);
+                let got = grads[li].d[idx] as f64;
+                assert!(
+                    (got - fd).abs() < 3e-2 * fd.abs().max(1.0),
+                    "layer {li} d[{idx}]: got {got} fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn perm_roundtrip() {
+        let mut rng = Pcg32::seeded(9);
+        let x = rand_tensor(&mut rng, &[3, 16]);
+        let p = rng.permutation(16);
+        let y = apply_perm(&x, &p);
+        let back = apply_perm_transpose(&y, &p);
+        assert!(back.max_abs_diff(&x) < 1e-7);
+    }
+
+    #[test]
+    fn sgd_step_moves_toward_target() {
+        // One-layer cascade fitting a diagonalizable target must reduce loss.
+        let mut rng = Pcg32::seeded(10);
+        let n = 16;
+        let target = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+        let x = rand_tensor(&mut rng, &[64, n]);
+        let y_true = target.forward_fused(&x);
+        let mut model = AcdcCascade::linear(n, 1, DiagInit::IDENTITY, &mut rng);
+        let mut last = f32::INFINITY;
+        for step in 0..200 {
+            let (y, cache) = model.forward_train(&x);
+            let diff = y.sub(&y_true);
+            let loss = diff.data().iter().map(|v| v * v).sum::<f32>() / x.rows() as f32;
+            let mut g = diff;
+            g.scale(2.0 / x.rows() as f32);
+            let (_, grads) = model.backward(&cache, &g);
+            model.sgd_step(&grads, 0.02);
+            if step % 50 == 0 {
+                assert!(loss.is_finite());
+            }
+            last = loss;
+        }
+        assert!(last < 0.05, "final loss {last}");
+    }
+
+    #[test]
+    fn param_count_is_3n_per_layer() {
+        let mut rng = Pcg32::seeded(11);
+        let c = AcdcCascade::linear(64, 12, DiagInit::CAFFENET, &mut rng);
+        assert_eq!(c.param_count(), 12 * 3 * 64);
+    }
+}

@@ -1,0 +1,191 @@
+//! Circulant SELL — Cheng et al. (2015), eq. (5): `Φ = D̃·R`.
+//!
+//! A circulant matrix `R` is diagonalized by the Fourier transform, so the
+//! product is computed as a circular convolution via the FFT substrate.
+//! The adaptive variant (this paper's framing) learns the defining vector
+//! `r`; the `D̃` sign diagonal stays fixed random, as in the original.
+
+use std::sync::Arc;
+
+use super::LinearOp;
+use crate::dct::fft::FftPlan;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// `y = (x ⊙ signs) ⊛ r` — sign flip then circular convolution with `r`.
+#[derive(Debug, Clone)]
+pub struct CirculantLayer {
+    /// Fixed random ±1 diagonal D̃.
+    pub signs: Vec<f32>,
+    /// Learned circulant-defining vector (first row of R).
+    pub r: Vec<f32>,
+    plan: Arc<FftPlan>,
+    /// Cached spectrum of r (invalidated by `set_r`).
+    r_spec: (Vec<f32>, Vec<f32>),
+}
+
+impl CirculantLayer {
+    pub fn new(signs: Vec<f32>, r: Vec<f32>) -> CirculantLayer {
+        let n = r.len();
+        assert_eq!(signs.len(), n);
+        let plan = Arc::new(FftPlan::new(n));
+        let mut layer = CirculantLayer {
+            signs,
+            r,
+            plan,
+            r_spec: (vec![], vec![]),
+        };
+        layer.refresh_spectrum();
+        layer
+    }
+
+    /// Random layer: ±1 signs, Gaussian r scaled like a dense init.
+    pub fn random(n: usize, rng: &mut Pcg32) -> CirculantLayer {
+        let std = 1.0 / (n as f64).sqrt();
+        CirculantLayer::new(rng.sign_vec(n), rng.normal_vec(n, 0.0, std))
+    }
+
+    pub fn set_r(&mut self, r: Vec<f32>) {
+        assert_eq!(r.len(), self.r.len());
+        self.r = r;
+        self.refresh_spectrum();
+    }
+
+    fn refresh_spectrum(&mut self) {
+        let n = self.r.len();
+        let mut re = self.r.clone();
+        let mut im = vec![0.0f32; n];
+        self.plan.forward(&mut re, &mut im);
+        self.r_spec = (re, im);
+    }
+
+    /// Circular convolution of one (sign-flipped) row with r, via FFT.
+    fn convolve_row(&self, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let mut re: Vec<f32> = x
+            .iter()
+            .zip(&self.signs)
+            .map(|(&v, &s)| v * s)
+            .collect();
+        let mut im = vec![0.0f32; n];
+        self.plan.forward(&mut re, &mut im);
+        let (rr, ri) = (&self.r_spec.0, &self.r_spec.1);
+        for i in 0..n {
+            let (ar, ai) = (re[i], im[i]);
+            re[i] = ar * rr[i] - ai * ri[i];
+            im[i] = ar * ri[i] + ai * rr[i];
+        }
+        self.plan.inverse(&mut re, &mut im);
+        out.copy_from_slice(&re);
+    }
+}
+
+impl LinearOp for CirculantLayer {
+    fn width(&self) -> usize {
+        self.r.len()
+    }
+
+    fn param_count(&self) -> usize {
+        self.r.len() // only r is learned; signs are fixed random
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let n = self.width();
+        assert_eq!(x.cols(), n);
+        let mut out = Tensor::zeros(&[x.rows(), n]);
+        for rix in 0..x.rows() {
+            let src = x.row(rix).to_vec();
+            self.convolve_row(&src, out.row_mut(rix));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "circulant"
+    }
+}
+
+/// O(N²) oracle: y_j = Σ_i v_i · r_{(j-i) mod n} with v = x ⊙ signs.
+pub fn naive_circulant(signs: &[f32], r: &[f32], x: &[f32]) -> Vec<f32> {
+    let n = r.len();
+    let v: Vec<f64> = x
+        .iter()
+        .zip(signs)
+        .map(|(&a, &s)| (a * s) as f64)
+        .collect();
+    (0..n)
+        .map(|j| {
+            (0..n)
+                .map(|i| v[i] * r[(j + n - i) % n] as f64)
+                .sum::<f64>() as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_naive_oracle() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [4usize, 16, 64] {
+            let layer = CirculantLayer::random(n, &mut rng);
+            let x = rng.normal_vec(n, 0.0, 1.0);
+            let want = naive_circulant(&layer.signs, &layer.r, &x);
+            let got = layer.forward(&Tensor::from_vec(&[1, n], x));
+            for i in 0..n {
+                assert!((got.data()[i] - want[i]).abs() < 1e-3, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_r_gives_shifted_signs() {
+        // r = e_0 makes R = I, so y = x ⊙ signs.
+        let n = 8;
+        let mut rng = Pcg32::seeded(2);
+        let signs = rng.sign_vec(n);
+        let mut r = vec![0.0; n];
+        r[0] = 1.0;
+        let layer = CirculantLayer::new(signs.clone(), r);
+        let x = rng.normal_vec(n, 0.0, 1.0);
+        let y = layer.forward(&Tensor::from_vec(&[1, n], x.clone()));
+        for i in 0..n {
+            assert!((y.data()[i] - x[i] * signs[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn param_count_is_n() {
+        let mut rng = Pcg32::seeded(3);
+        let layer = CirculantLayer::random(32, &mut rng);
+        assert_eq!(layer.param_count(), 32);
+    }
+
+    #[test]
+    fn linear_in_x() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 16;
+        let layer = CirculantLayer::random(n, &mut rng);
+        let x1 = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let x2 = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let lhs = layer.forward(&x1.add(&x2));
+        let rhs = layer.forward(&x1).add(&layer.forward(&x2));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn set_r_refreshes_spectrum() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 8;
+        let mut layer = CirculantLayer::random(n, &mut rng);
+        let x = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let y1 = layer.forward(&x);
+        let mut r2 = vec![0.0; n];
+        r2[1] = 1.0; // shift-by-one circulant
+        layer.set_r(r2);
+        let y2 = layer.forward(&x);
+        assert!(y1.max_abs_diff(&y2) > 1e-3);
+    }
+}

@@ -1,0 +1,160 @@
+//! Dense linear layer — the O(N²) baseline of Figure 2 and Table 1.
+
+use super::LinearOp;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// `y = x·W + b` with a full [n, n] weight matrix.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    pub w: Tensor,
+    pub b: Option<Vec<f32>>,
+}
+
+impl DenseLayer {
+    pub fn new(w: Tensor, b: Option<Vec<f32>>) -> DenseLayer {
+        assert_eq!(w.rank(), 2);
+        if let Some(b) = &b {
+            assert_eq!(b.len(), w.cols());
+        }
+        DenseLayer { w, b }
+    }
+
+    /// Glorot-uniform random square layer.
+    pub fn random(n: usize, rng: &mut Pcg32) -> DenseLayer {
+        let limit = (6.0 / (2 * n) as f64).sqrt();
+        DenseLayer::new(
+            Tensor::from_vec(&[n, n], rng.uniform_vec(n * n, -limit, limit)),
+            None,
+        )
+    }
+
+    /// Zero-initialized (for regression-from-scratch baselines).
+    pub fn zeros(n: usize) -> DenseLayer {
+        DenseLayer::new(Tensor::zeros(&[n, n]), None)
+    }
+
+    /// Backward for L wrt inputs and weights: given x and g = ∂L/∂y,
+    /// returns (∂L/∂x = g·Wᵀ, ∂L/∂W = xᵀ·g, ∂L/∂b = Σg).
+    pub fn backward(&self, x: &Tensor, g: &Tensor) -> (Tensor, Tensor, Vec<f32>) {
+        let gx = g.matmul(&self.w.transpose());
+        let gw = x.transpose().matmul(g);
+        let mut gb = vec![0.0f32; self.w.cols()];
+        for r in 0..g.rows() {
+            for (bi, &gv) in gb.iter_mut().zip(g.row(r)) {
+                *bi += gv;
+            }
+        }
+        (gx, gw, gb)
+    }
+
+    pub fn sgd_step(&mut self, gw: &Tensor, gb: &[f32], lr: f32) {
+        self.w.axpy(-lr, gw);
+        if let Some(b) = &mut self.b {
+            for (bv, &gv) in b.iter_mut().zip(gb) {
+                *bv -= lr * gv;
+            }
+        }
+    }
+}
+
+impl LinearOp for DenseLayer {
+    fn width(&self) -> usize {
+        self.w.rows()
+    }
+
+    fn param_count(&self) -> usize {
+        self.w.numel() + self.b.as_ref().map_or(0, |b| b.len())
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let mut y = x.matmul(&self.w);
+        if let Some(b) = &self.b {
+            for r in 0..y.rows() {
+                for (yv, &bv) in y.row_mut(r).iter_mut().zip(b) {
+                    *yv += bv;
+                }
+            }
+        }
+        y
+    }
+
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_with_bias() {
+        let w = Tensor::eye(2);
+        let layer = DenseLayer::new(w, Some(vec![1.0, -1.0]));
+        let x = Tensor::from_vec(&[1, 2], vec![3.0, 4.0]);
+        assert_eq!(layer.forward(&x).data(), &[4.0, 3.0]);
+    }
+
+    #[test]
+    fn param_count_counts_bias() {
+        let layer = DenseLayer::new(Tensor::zeros(&[4, 4]), Some(vec![0.0; 4]));
+        assert_eq!(layer.param_count(), 20);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let mut rng = Pcg32::seeded(1);
+        let n = 6;
+        let layer = DenseLayer::random(n, &mut rng);
+        let x = Tensor::from_vec(&[3, n], rng.normal_vec(3 * n, 0.0, 1.0));
+        let y = layer.forward(&x);
+        let (gx, gw, _) = layer.backward(&x, &y); // L = 0.5||y||²
+        let loss = |l: &DenseLayer, x: &Tensor| -> f64 {
+            l.forward(x)
+                .data()
+                .iter()
+                .map(|v| 0.5 * (*v as f64).powi(2))
+                .sum()
+        };
+        let eps = 1e-3;
+        let mut lp = layer.clone();
+        let v = lp.w.get2(2, 3) + eps;
+        lp.w.set2(2, 3, v);
+        let mut lm = layer.clone();
+        let v = lm.w.get2(2, 3) - eps;
+        lm.w.set2(2, 3, v);
+        let fd = (loss(&lp, &x) - loss(&lm, &x)) / (2.0 * eps as f64);
+        assert!((gw.get2(2, 3) as f64 - fd).abs() < 1e-2 * fd.abs().max(1.0));
+
+        let mut xp = x.clone();
+        let v = xp.get2(1, 4) + eps;
+        xp.set2(1, 4, v);
+        let mut xm = x.clone();
+        let v = xm.get2(1, 4) - eps;
+        xm.set2(1, 4, v);
+        let fd = (loss(&layer, &xp) - loss(&layer, &xm)) / (2.0 * eps as f64);
+        assert!((gx.get2(1, 4) as f64 - fd).abs() < 1e-2 * fd.abs().max(1.0));
+    }
+
+    #[test]
+    fn sgd_fits_linear_regression() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 8;
+        let target = DenseLayer::random(n, &mut rng);
+        let x = Tensor::from_vec(&[128, n], rng.uniform_vec(128 * n, 0.0, 1.0));
+        let y_true = target.forward(&x);
+        let mut model = DenseLayer::zeros(n);
+        let mut loss = f32::INFINITY;
+        for _ in 0..300 {
+            let y = model.forward(&x);
+            let mut diff = y.sub(&y_true);
+            loss = diff.data().iter().map(|v| v * v).sum::<f32>() / 128.0;
+            diff.scale(2.0 / 128.0);
+            let (_, gw, gb) = model.backward(&x, &diff);
+            model.sgd_step(&gw, &gb, 0.1);
+        }
+        assert!(loss < 1e-3, "loss={loss}");
+        assert!(model.w.max_abs_diff(&target.w) < 0.05);
+    }
+}

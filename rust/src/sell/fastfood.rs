@@ -1,0 +1,214 @@
+//! Adaptive Fastfood SELL — Le et al. (2013) / Yang et al. (2015), eq. (4):
+//! `Φ = S·H·G·P·H·B` with the three diagonals learned in the adaptive
+//! variant. The Hadamard products use an in-place fast Walsh–Hadamard
+//! transform (FWHT), the `H`-basis counterpart of this repo's DCT substrate.
+
+use super::LinearOp;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// In-place fast Walsh–Hadamard transform (unnormalized).
+/// Power-of-two length required.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        for start in (0..n).step_by(h * 2) {
+            for i in start..start + h {
+                let (a, b) = (x[i], x[i + h]);
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Orthonormal FWHT (scales by 1/√n so the transform is orthogonal).
+pub fn fwht_normalized(x: &mut [f32]) {
+    let scale = 1.0 / (x.len() as f32).sqrt();
+    fwht(x);
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
+/// Adaptive Fastfood layer: `y = ((((x ⊙ b)·H)[perm] ⊙ g)·H) ⊙ s`,
+/// H orthonormal Hadamard, `b`, `g`, `s` learned diagonals, `perm` fixed.
+#[derive(Debug, Clone)]
+pub struct FastfoodLayer {
+    pub s: Vec<f32>,
+    pub g: Vec<f32>,
+    pub b: Vec<f32>,
+    pub perm: Vec<u32>,
+}
+
+impl FastfoodLayer {
+    pub fn new(s: Vec<f32>, g: Vec<f32>, b: Vec<f32>, perm: Vec<u32>) -> FastfoodLayer {
+        let n = s.len();
+        assert!(n.is_power_of_two());
+        assert_eq!(g.len(), n);
+        assert_eq!(b.len(), n);
+        assert_eq!(perm.len(), n);
+        FastfoodLayer { s, g, b, perm }
+    }
+
+    /// Random-initialized adaptive layer: b from ±1, g Gaussian, s
+    /// Fastfood's chi-like scaling, perm uniform.
+    pub fn random(n: usize, rng: &mut Pcg32) -> FastfoodLayer {
+        let g = rng.normal_vec(n, 0.0, 1.0);
+        let gnorm = (g.iter().map(|v| (*v as f64).powi(2)).sum::<f64>()).sqrt();
+        let s = (0..n)
+            .map(|_| (rng.normal().abs() / gnorm.max(1e-12)) as f32 * (n as f32).sqrt())
+            .collect();
+        FastfoodLayer::new(s, g, rng.sign_vec(n), rng.permutation(n))
+    }
+
+    fn forward_row(&self, x: &[f32], out: &mut [f32]) {
+        let n = x.len();
+        let mut buf: Vec<f32> = x.iter().zip(&self.b).map(|(&v, &b)| v * b).collect();
+        fwht_normalized(&mut buf);
+        // permute
+        let permuted: Vec<f32> = self.perm.iter().map(|&p| buf[p as usize]).collect();
+        buf.copy_from_slice(&permuted);
+        for (v, &g) in buf.iter_mut().zip(&self.g) {
+            *v *= g;
+        }
+        fwht_normalized(&mut buf);
+        for i in 0..n {
+            out[i] = buf[i] * self.s[i];
+        }
+    }
+}
+
+impl LinearOp for FastfoodLayer {
+    fn width(&self) -> usize {
+        self.s.len()
+    }
+
+    fn param_count(&self) -> usize {
+        3 * self.s.len() // s, g, b learned in the adaptive variant
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let n = self.width();
+        assert_eq!(x.cols(), n);
+        let mut out = Tensor::zeros(&[x.rows(), n]);
+        for r in 0..x.rows() {
+            let src = x.row(r).to_vec();
+            self.forward_row(&src, out.row_mut(r));
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "fastfood"
+    }
+}
+
+/// Naive O(N²) Hadamard matrix (orthonormal), H[i,j] = (-1)^{popcount(i&j)}/√n.
+pub fn hadamard_matrix(n: usize) -> Tensor {
+    assert!(n.is_power_of_two());
+    let scale = 1.0 / (n as f32).sqrt();
+    let mut h = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            let sign = if (i & j).count_ones() % 2 == 0 { 1.0 } else { -1.0 };
+            h.set2(i, j, sign * scale);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fwht_matches_matrix() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [2usize, 8, 32] {
+            let x = rng.normal_vec(n, 0.0, 1.0);
+            let h = hadamard_matrix(n);
+            let want = Tensor::from_vec(&[1, n], x.clone()).matmul(&h);
+            let mut got = x;
+            fwht_normalized(&mut got);
+            for i in 0..n {
+                assert!((got[i] - want.data()[i]).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_involution() {
+        // Orthonormal FWHT is its own inverse.
+        let mut rng = Pcg32::seeded(2);
+        let n = 64;
+        let x0 = rng.normal_vec(n, 0.0, 1.0);
+        let mut x = x0.clone();
+        fwht_normalized(&mut x);
+        fwht_normalized(&mut x);
+        for i in 0..n {
+            assert!((x[i] - x0[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn hadamard_is_orthogonal() {
+        let n = 16;
+        let h = hadamard_matrix(n);
+        let prod = h.matmul(&h.transpose());
+        assert!(prod.max_abs_diff(&Tensor::eye(n)) < 1e-5);
+    }
+
+    #[test]
+    fn forward_matches_explicit_matrix_chain() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 16;
+        let layer = FastfoodLayer::random(n, &mut rng);
+        let h = hadamard_matrix(n);
+        // dense chain: diag(b)·H·Pᵀ·diag(g)·H·diag(s) acting on row vectors
+        let mut db = Tensor::zeros(&[n, n]);
+        let mut dg = Tensor::zeros(&[n, n]);
+        let mut ds = Tensor::zeros(&[n, n]);
+        let mut p = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            db.set2(i, i, layer.b[i]);
+            dg.set2(i, i, layer.g[i]);
+            ds.set2(i, i, layer.s[i]);
+            // row-gather perm as matrix: y_i = x_{perm[i]} => P[perm[i], i] = 1
+            p.set2(layer.perm[i] as usize, i, 1.0);
+        }
+        let chain = db.matmul(&h).matmul(&p).matmul(&dg).matmul(&h).matmul(&ds);
+        let x = Tensor::from_vec(&[2, n], rng.normal_vec(2 * n, 0.0, 1.0));
+        let want = x.matmul(&chain);
+        let got = layer.forward(&x);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    #[test]
+    fn param_count_is_3n() {
+        let mut rng = Pcg32::seeded(4);
+        assert_eq!(FastfoodLayer::random(64, &mut rng).param_count(), 192);
+    }
+
+    #[test]
+    fn linear_in_x() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 32;
+        let layer = FastfoodLayer::random(n, &mut rng);
+        let x1 = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let x2 = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let lhs = layer.forward(&x1.add(&x2));
+        let rhs = layer.forward(&x1).add(&layer.forward(&x2));
+        assert!(lhs.max_abs_diff(&rhs) < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fwht_rejects_non_pow2() {
+        let mut x = vec![0.0; 12];
+        fwht(&mut x);
+    }
+}

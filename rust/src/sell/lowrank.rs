@@ -1,0 +1,162 @@
+//! Low-rank factorized layer — the "Finetuned SVD" baselines of Table 1:
+//! `W ≈ U·V` with `U ∈ R^{n×r}`, `V ∈ R^{r×n}`, 2nr parameters.
+
+use super::LinearOp;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// `y = (x·U)·V`.
+#[derive(Debug, Clone)]
+pub struct LowRankLayer {
+    pub u: Tensor, // [n, r]
+    pub v: Tensor, // [r, n]
+}
+
+impl LowRankLayer {
+    pub fn new(u: Tensor, v: Tensor) -> LowRankLayer {
+        assert_eq!(u.rank(), 2);
+        assert_eq!(v.rank(), 2);
+        assert_eq!(u.cols(), v.rows(), "rank dims must agree");
+        assert_eq!(u.rows(), v.cols(), "square operator expected");
+        LowRankLayer { u, v }
+    }
+
+    pub fn random(n: usize, rank: usize, rng: &mut Pcg32) -> LowRankLayer {
+        let s = 1.0 / (n as f64).sqrt();
+        LowRankLayer::new(
+            Tensor::from_vec(&[n, rank], rng.normal_vec(n * rank, 0.0, s)),
+            Tensor::from_vec(&[rank, n], rng.normal_vec(rank * n, 0.0, s)),
+        )
+    }
+
+    /// Best rank-r approximation of `w` via a few rounds of orthogonal
+    /// iteration (enough for the experiments' fidelity checks).
+    pub fn approximate(w: &Tensor, rank: usize, rng: &mut Pcg32, iters: usize) -> LowRankLayer {
+        let n = w.rows();
+        assert_eq!(w.cols(), n);
+        // Orthogonal iteration on W·Wᵀ to find the top-r left subspace.
+        let mut q = Tensor::from_vec(&[n, rank], rng.normal_vec(n * rank, 0.0, 1.0));
+        gram_schmidt(&mut q);
+        let wt = w.transpose();
+        for _ in 0..iters {
+            // Q <- orth(W·(Wᵀ·Q))
+            let z = w.matmul(&wt.matmul(&q));
+            q = z;
+            gram_schmidt(&mut q);
+        }
+        // U = Q (orthonormal basis), V = Qᵀ·W so U·V = Q·Qᵀ·W ≈ W.
+        let v = q.transpose().matmul(w);
+        LowRankLayer::new(q, v)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+}
+
+/// In-place modified Gram–Schmidt on the columns of q [n, r].
+fn gram_schmidt(q: &mut Tensor) {
+    let (n, r) = (q.rows(), q.cols());
+    for j in 0..r {
+        for prev in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..n {
+                dot += q.get2(i, j) as f64 * q.get2(i, prev) as f64;
+            }
+            for i in 0..n {
+                let v = q.get2(i, j) - dot as f32 * q.get2(i, prev);
+                q.set2(i, j, v);
+            }
+        }
+        let norm = (0..n)
+            .map(|i| (q.get2(i, j) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            .max(1e-12);
+        for i in 0..n {
+            let v = (q.get2(i, j) as f64 / norm) as f32;
+            q.set2(i, j, v);
+        }
+    }
+}
+
+impl LinearOp for LowRankLayer {
+    fn width(&self) -> usize {
+        self.u.rows()
+    }
+
+    fn param_count(&self) -> usize {
+        self.u.numel() + self.v.numel()
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        x.matmul(&self.u).matmul(&self.v)
+    }
+
+    fn name(&self) -> &'static str {
+        "lowrank"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_is_2nr() {
+        let mut rng = Pcg32::seeded(1);
+        let l = LowRankLayer::random(64, 8, &mut rng);
+        assert_eq!(l.param_count(), 2 * 64 * 8);
+        assert_eq!(l.rank(), 8);
+    }
+
+    #[test]
+    fn forward_shape() {
+        let mut rng = Pcg32::seeded(2);
+        let l = LowRankLayer::random(16, 4, &mut rng);
+        let x = Tensor::from_vec(&[3, 16], rng.normal_vec(48, 0.0, 1.0));
+        assert_eq!(l.forward(&x).shape(), &[3, 16]);
+    }
+
+    #[test]
+    fn full_rank_approximation_recovers_matrix() {
+        let mut rng = Pcg32::seeded(3);
+        let n = 8;
+        let w = Tensor::from_vec(&[n, n], rng.normal_vec(n * n, 0.0, 1.0));
+        let l = LowRankLayer::approximate(&w, n, &mut rng, 30);
+        let recon = l.u.matmul(&l.v);
+        assert!(recon.max_abs_diff(&w) < 1e-2, "diff={}", recon.max_abs_diff(&w));
+    }
+
+    #[test]
+    fn rank1_captures_rank1_matrix_exactly() {
+        let mut rng = Pcg32::seeded(4);
+        let n = 12;
+        let u = rng.normal_vec(n, 0.0, 1.0);
+        let v = rng.normal_vec(n, 0.0, 1.0);
+        let mut w = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            for j in 0..n {
+                w.set2(i, j, u[i] * v[j]);
+            }
+        }
+        let l = LowRankLayer::approximate(&w, 1, &mut rng, 40);
+        let recon = l.u.matmul(&l.v);
+        assert!(recon.max_abs_diff(&w) < 1e-2);
+    }
+
+    #[test]
+    fn truncated_rank_reduces_error_monotonically() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 16;
+        let w = Tensor::from_vec(&[n, n], rng.normal_vec(n * n, 0.0, 1.0));
+        let mut errs = vec![];
+        for r in [1usize, 4, 8, 16] {
+            let l = LowRankLayer::approximate(&w, r, &mut rng, 30);
+            errs.push(l.u.matmul(&l.v).sub(&w).norm());
+        }
+        for pair in errs.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-3, "errs={errs:?}");
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Structured Efficient Linear Layers — pure-rust reference implementations.
+//!
+//! The paper's eq. (2) family `y = x·Φ(D, P, S, B)`:
+//!
+//! * [`acdc`] — the paper's contribution: `A·C·D·C⁻¹` with fused
+//!   ("single call", §5.1) and multipass ("multiple call", §5.2) execution
+//!   strategies, plus deep cascades with ReLU/permutation interleaving;
+//! * [`dense`] — the O(N²) baseline the paper compares against;
+//! * [`circulant`] — Cheng et al. (2015): `D·F·D·F⁻¹` via real FFT;
+//! * [`fastfood`] — Yang et al. (2015) Adaptive Fastfood `S·H·G·P·H·B`
+//!   via the fast Walsh–Hadamard transform;
+//! * [`lowrank`] — truncated factorization (the Finetuned-SVD rows);
+//! * [`init`] — the §6 initialization strategies;
+//! * [`params`] — parameter audits powering Table 1 / Figure 4.
+//!
+//! These serve three roles: the correctness oracle for the PJRT artifacts,
+//! the measured "CPU testbed" legs of Figure 2, and the baselines the paper
+//! compares against in Table 1.
+
+pub mod acdc;
+pub mod circulant;
+pub mod dense;
+pub mod fastfood;
+pub mod init;
+pub mod lowrank;
+pub mod params;
+
+use crate::tensor::Tensor;
+
+/// A square linear(ish) operator on row-major batches.
+///
+/// Object-safe so harnesses can sweep heterogeneous layer families; the
+/// training hot paths use the concrete types directly.
+pub trait LinearOp {
+    /// Input/output width N.
+    fn width(&self) -> usize;
+    /// Learnable parameter count (the Table-1 quantity).
+    fn param_count(&self) -> usize;
+    /// y = forward(x), x shape [batch, N].
+    fn forward(&self, x: &Tensor) -> Tensor;
+    /// Human-readable family name.
+    fn name(&self) -> &'static str;
+}
+
+/// Materialize any LinearOp into its dense matrix (rows = unit vectors).
+/// O(N²) — used by tests and the operator-approximation experiments.
+pub fn materialize(op: &dyn LinearOp) -> Tensor {
+    let n = op.width();
+    let eye = Tensor::eye(n);
+    op.forward(&eye)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn materialize_dense_recovers_matrix() {
+        let mut rng = Pcg32::seeded(1);
+        let n = 8;
+        let w = Tensor::from_vec(&[n, n], rng.normal_vec(n * n, 0.0, 1.0));
+        let layer = dense::DenseLayer::new(w.clone(), None);
+        let m = materialize(&layer);
+        assert!(m.max_abs_diff(&w) < 1e-5);
+    }
+
+    #[test]
+    fn materialize_acdc_matches_forward() {
+        let mut rng = Pcg32::seeded(2);
+        let n = 16;
+        let layer = acdc::AcdcLayer::random(n, &mut rng, 1.0, 0.2);
+        let m = materialize(&layer);
+        let x = Tensor::from_vec(&[3, n], rng.normal_vec(3 * n, 0.0, 1.0));
+        let via_matrix = x.matmul(&m);
+        let direct = layer.forward(&x);
+        assert!(via_matrix.max_abs_diff(&direct) < 1e-3);
+    }
+}

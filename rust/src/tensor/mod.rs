@@ -1,0 +1,390 @@
+//! Minimal row-major f32 tensor used by the reference SELLs, the data
+//! generators and the runtime's host-side buffers.
+//!
+//! Deliberately small: dense nd storage, shape bookkeeping, the handful of
+//! BLAS-1/2/3 kernels the reproduction needs (axpy, matmul with blocking,
+//! transpose), and conversion helpers. The heavy math on the request path
+//! happens either in the PJRT executable or in `sell::*`'s hand-fused
+//! loops; this type is the glue.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    /// Build from shape + data (length must match product of dims).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, data.len(), "shape {shape:?} vs {} elems", data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![1.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    /// Number of columns for a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    /// Immutable row view of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    /// Mutable row view of a 2-D tensor.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn get2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols() + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let c = self.cols();
+        self.data[i * c + j] = v;
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// self += alpha * other (elementwise, shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Matrix multiply `self[r,k] @ other[k,c]`, cache-blocked ikj loop.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (r, k) = (self.shape[0], self.shape[1]);
+        let (k2, c) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+        let mut out = Tensor::zeros(&[r, c]);
+        matmul_into(&self.data, &other.data, &mut out.data, r, k, c);
+        out
+    }
+}
+
+/// Blocked ikj matmul kernel: out[r,c] += a[r,k] @ b[k,c].
+/// Exposed for the dense baseline's hot path; `out` must be zeroed by the
+/// caller if a fresh product is wanted.
+pub fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], r: usize, k: usize, c: usize) {
+    debug_assert_eq!(a.len(), r * k);
+    debug_assert_eq!(b.len(), k * c);
+    debug_assert_eq!(out.len(), r * c);
+    // ikj ordering: innermost loop is a contiguous axpy over b/out rows,
+    // which autovectorizes well.
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let kend = (k0 + BK).min(k);
+        for i in 0..r {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * c..(i + 1) * c];
+            for kk in k0..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * c..(kk + 1) * c];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// y = x @ w for a single row vector x[k], w[k,c].
+pub fn matvec_row(x: &[f32], w: &[f32], out: &mut [f32], k: usize, c: usize) {
+    debug_assert_eq!(x.len(), k);
+    debug_assert_eq!(w.len(), k * c);
+    debug_assert_eq!(out.len(), c);
+    out.fill(0.0);
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[kk * c..(kk + 1) * c];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.get2(0, 2), 3.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_mismatch() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn eye_and_matmul_identity() {
+        let x = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let i = Tensor::eye(2);
+        assert_eq!(x.matmul(&i), x);
+        assert_eq!(i.matmul(&x), x);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_random() {
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        let (r, k, c) = (17, 33, 9);
+        let a = Tensor::from_vec(&[r, k], rng.normal_vec(r * k, 0.0, 1.0));
+        let b = Tensor::from_vec(&[k, c], rng.normal_vec(k * c, 0.0, 1.0));
+        let fast = a.matmul(&b);
+        // naive
+        let mut naive = Tensor::zeros(&[r, c]);
+        for i in 0..r {
+            for j in 0..c {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.get2(i, kk) * b.get2(kk, j);
+                }
+                naive.set2(i, j, s);
+            }
+        }
+        assert!(fast.max_abs_diff(&naive) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let t = Tensor::from_vec(&[5, 7], rng.normal_vec(35, 0.0, 1.0));
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn transpose_known() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.transpose();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut a = Tensor::ones(&[4]);
+        let b = Tensor::full(&[4], 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[2.0; 4]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[1.0; 4]);
+        assert!((a.norm() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_sub_map() {
+        let a = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![4., 5., 6.]);
+        assert_eq!(a.add(&b).data(), &[5., 7., 9.]);
+        assert_eq!(b.sub(&a).data(), &[3., 3., 3.]);
+        assert_eq!(a.map(|v| v * 2.0).data(), &[2., 4., 6.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshape(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    fn matvec_row_matches_matmul() {
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let (k, c) = (16, 8);
+        let x = rng.normal_vec(k, 0.0, 1.0);
+        let w = Tensor::from_vec(&[k, c], rng.normal_vec(k * c, 0.0, 1.0));
+        let mut out = vec![0.0; c];
+        matvec_row(&x, w.data(), &mut out, k, c);
+        let xm = Tensor::from_vec(&[1, k], x);
+        let want = xm.matmul(&w);
+        for (o, w) in out.iter().zip(want.data()) {
+            assert!((o - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_identical() {
+        let t = Tensor::ones(&[2, 2]);
+        assert_eq!(t.max_abs_diff(&t.clone()), 0.0);
+    }
+}

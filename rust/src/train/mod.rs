@@ -1,0 +1,9 @@
+//! Training: SGD machinery and the experiment orchestrators driving the
+//! AOT train-step artifacts (Figure 3, Table 1 / E6) plus native
+//! cross-check trainers.
+
+pub mod orchestrator;
+pub mod sgd;
+
+pub use orchestrator::{CnnTrainer, CnnVariant, EvalResult, Fig3NativeTrainer, Fig3Trainer};
+pub use sgd::{LossCurve, Momentum, StepDecay};

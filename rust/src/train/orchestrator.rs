@@ -1,0 +1,455 @@
+//! Training orchestrators: drive the AOT train-step artifacts (and the
+//! native reference implementations) over the synthetic workloads.
+//!
+//! Two experiments:
+//! * **Figure 3** — `Fig3Trainer` fits an `ACDC_K` cascade (or the dense
+//!   baseline) to the eq. (15) regression, via the `fig3_step_k{K}` /
+//!   `fig3_dense_step` artifacts; `Fig3NativeTrainer` is the pure-rust
+//!   cross-check.
+//! * **Table 1 / E6** — `CnnTrainer` trains MiniCaffeNet (ACDC or dense
+//!   FC variant) on the synthimg corpus via the `cnn_*_train_step`
+//!   artifacts, with held-out evaluation through `cnn_*_eval`.
+
+use crate::checkpoint::Checkpoint;
+use crate::data::regression::RegressionTask;
+use crate::data::synthimg::ImageCorpus;
+use crate::data::BatchCursor;
+use crate::runtime::values::HostValue;
+use crate::runtime::Engine;
+use crate::sell::acdc::AcdcCascade;
+use crate::sell::init::DiagInit;
+use crate::tensor::Tensor;
+use crate::train::sgd::{LossCurve, StepDecay};
+use crate::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// Figure 3: artifact-driven ACDC_K regression
+// ---------------------------------------------------------------------------
+
+/// Drives `fig3_step_k{K}` (or `fig3_dense_step` when `k == 0`).
+pub struct Fig3Trainer<'e> {
+    engine: &'e Engine,
+    pub k: usize,
+    pub n: usize,
+    pub batch: usize,
+}
+
+impl<'e> Fig3Trainer<'e> {
+    pub fn new(engine: &'e Engine, k: usize) -> Result<Fig3Trainer<'e>, String> {
+        let name = if k == 0 {
+            "fig3_dense_step".to_string()
+        } else {
+            format!("fig3_step_k{k}")
+        };
+        let meta = engine
+            .manifest()
+            .get(&name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))?;
+        let n = meta.tag_usize("n").ok_or("missing n tag")?;
+        let batch = meta.tag_usize("batch").ok_or("missing batch tag")?;
+        Ok(Fig3Trainer {
+            engine,
+            k,
+            n,
+            batch,
+        })
+    }
+
+    /// Run SGD for `steps` minibatch steps; returns the loss curve.
+    pub fn run(
+        &self,
+        task: &RegressionTask,
+        init: DiagInit,
+        steps: usize,
+        schedule: &StepDecay,
+        seed: u64,
+    ) -> Result<LossCurve, String> {
+        assert_eq!(task.n(), self.n, "task width vs artifact width");
+        let mut rng = Pcg32::seeded(seed);
+        let name = if self.k == 0 {
+            "fig3_dense_step".to_string()
+        } else {
+            format!("fig3_step_k{}", self.k)
+        };
+        let art = self.engine.load(&name)?;
+        let mut cursor = BatchCursor::new(task.rows(), self.batch);
+        let label = if self.k == 0 {
+            "dense".to_string()
+        } else {
+            format!("ACDC_{} init {}", self.k, init.label())
+        };
+        let mut curve = LossCurve::new(&label);
+
+        // Parameter bank(s).
+        let mut params: Vec<HostValue> = if self.k == 0 {
+            vec![HostValue::F32 {
+                shape: vec![self.n, self.n],
+                data: vec![0.0; self.n * self.n],
+            }]
+        } else {
+            vec![
+                HostValue::F32 {
+                    shape: vec![self.k, self.n],
+                    data: init.sample(self.k * self.n, &mut rng),
+                },
+                HostValue::F32 {
+                    shape: vec![self.k, self.n],
+                    data: init.sample(self.k * self.n, &mut rng),
+                },
+            ]
+        };
+
+        for step in 0..steps {
+            let idx = cursor.next_indices();
+            let (bx, by) = task.gather(&idx);
+            let lr = schedule.lr_at(step) as f32;
+            let mut inputs = params.clone();
+            inputs.push(HostValue::from_tensor(&bx));
+            inputs.push(HostValue::from_tensor(&by));
+            inputs.push(HostValue::scalar_f32(lr));
+            let out = art.call(&inputs)?;
+            // outputs: params... , loss
+            let loss = out.last().unwrap().scalar();
+            if !loss.is_finite() {
+                curve.push(step, loss);
+                return Ok(curve); // diverged — record and stop (Fig 3 right panel!)
+            }
+            params = out[..out.len() - 1].to_vec();
+            curve.push(step, loss);
+        }
+        Ok(curve)
+    }
+}
+
+/// Pure-rust Figure-3 trainer (cross-checks the artifact path and runs
+/// without artifacts).
+pub struct Fig3NativeTrainer {
+    pub cascade: AcdcCascade,
+}
+
+impl Fig3NativeTrainer {
+    pub fn new(n: usize, k: usize, init: DiagInit, seed: u64) -> Fig3NativeTrainer {
+        let mut rng = Pcg32::seeded(seed);
+        Fig3NativeTrainer {
+            cascade: AcdcCascade::linear(n, k, init, &mut rng),
+        }
+    }
+
+    pub fn run(
+        &mut self,
+        task: &RegressionTask,
+        steps: usize,
+        batch: usize,
+        schedule: &StepDecay,
+    ) -> LossCurve {
+        let mut cursor = BatchCursor::new(task.rows(), batch);
+        let mut curve = LossCurve::new(&format!("native ACDC_{}", self.cascade.k()));
+        for step in 0..steps {
+            let idx = cursor.next_indices();
+            let (bx, by) = task.gather(&idx);
+            let (pred, cache) = self.cascade.forward_train(&bx);
+            let diff = pred.sub(&by);
+            let loss = diff.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+                / batch as f64;
+            let mut g = diff;
+            g.scale(2.0 / batch as f32);
+            let (_, grads) = self.cascade.backward(&cache, &g);
+            self.cascade.sgd_step(&grads, schedule.lr_at(step) as f32);
+            curve.push(step, loss);
+            if !loss.is_finite() {
+                break;
+            }
+        }
+        curve
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MiniCaffeNet: artifact-driven CNN training (Table 1 analogue + E6)
+// ---------------------------------------------------------------------------
+
+/// Which FC-block variant to train.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CnnVariant {
+    Acdc,
+    Dense,
+}
+
+impl CnnVariant {
+    pub fn train_artifact(&self) -> &'static str {
+        match self {
+            CnnVariant::Acdc => "cnn_acdc_train_step",
+            CnnVariant::Dense => "cnn_dense_train_step",
+        }
+    }
+
+    pub fn eval_artifact(&self) -> &'static str {
+        match self {
+            CnnVariant::Acdc => "cnn_acdc_eval",
+            CnnVariant::Dense => "cnn_dense_eval",
+        }
+    }
+}
+
+/// Result of one evaluation pass.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub examples: usize,
+}
+
+/// Artifact-driven MiniCaffeNet trainer.
+pub struct CnnTrainer<'e> {
+    engine: &'e Engine,
+    pub variant: CnnVariant,
+    /// Current parameter bank, positionally matching the artifact inputs
+    /// (params then momenta).
+    params: Vec<HostValue>,
+    moms: Vec<HostValue>,
+    param_names: Vec<String>,
+    train_batch: usize,
+    eval_batch: usize,
+}
+
+impl<'e> CnnTrainer<'e> {
+    /// Initialize parameters in rust (He-normal convs/classifier, §6
+    /// diagonal init for the SELL stack) matching the artifact's specs.
+    pub fn new(engine: &'e Engine, variant: CnnVariant, seed: u64) -> Result<Self, String> {
+        let meta = engine
+            .manifest()
+            .get(variant.train_artifact())
+            .ok_or_else(|| format!("artifact '{}' missing", variant.train_artifact()))?
+            .clone();
+        let train_batch = meta.tag_usize("batch").ok_or("missing batch tag")?;
+        let eval_meta = engine
+            .manifest()
+            .get(variant.eval_artifact())
+            .ok_or("eval artifact missing")?;
+        let eval_batch = eval_meta.tag_usize("batch").ok_or("missing batch tag")?;
+
+        // Parameter specs = leading inputs up to the first "m_" name.
+        let n_params = meta
+            .inputs
+            .iter()
+            .position(|s| s.name.starts_with("m_"))
+            .ok_or("train artifact has no momentum inputs")?;
+        let mut rng = Pcg32::seeded(seed);
+        let mut params = Vec::with_capacity(n_params);
+        let mut names = Vec::with_capacity(n_params);
+        for spec in &meta.inputs[..n_params] {
+            params.push(init_param(&spec.name, &spec.shape, &mut rng));
+            names.push(spec.name.clone());
+        }
+        let moms = meta.inputs[n_params..2 * n_params]
+            .iter()
+            .map(|s| HostValue::F32 {
+                shape: s.shape.clone(),
+                data: vec![0.0; s.numel()],
+            })
+            .collect();
+        Ok(CnnTrainer {
+            engine,
+            variant,
+            params,
+            moms,
+            param_names: names,
+            train_batch,
+            eval_batch,
+        })
+    }
+
+    pub fn train_batch_size(&self) -> usize {
+        self.train_batch
+    }
+
+    /// One SGD step on a training batch; returns the loss.
+    pub fn step(
+        &mut self,
+        images: &Tensor,
+        labels: &[i32],
+        lr: f32,
+        seed: u32,
+    ) -> Result<f64, String> {
+        let art = self.engine.load(self.variant.train_artifact())?;
+        let mut inputs = Vec::with_capacity(2 * self.params.len() + 4);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.moms.iter().cloned());
+        inputs.push(HostValue::from_tensor(images));
+        inputs.push(HostValue::from_i32(&[labels.len()], labels.to_vec()));
+        inputs.push(HostValue::scalar_f32(lr));
+        if self.variant == CnnVariant::Acdc {
+            inputs.push(HostValue::scalar_u32(seed));
+        }
+        let out = art.call(&inputs)?;
+        let np = self.params.len();
+        self.params = out[..np].to_vec();
+        self.moms = out[np..2 * np].to_vec();
+        Ok(out[2 * np].scalar())
+    }
+
+    /// Evaluate on a held-out batch; returns loss + accuracy.
+    pub fn eval(&self, images: &Tensor, labels: &[i32]) -> Result<EvalResult, String> {
+        let art = self.engine.load(self.variant.eval_artifact())?;
+        let mut inputs: Vec<HostValue> = self.params.clone();
+        inputs.push(HostValue::from_tensor(images));
+        inputs.push(HostValue::from_i32(&[labels.len()], labels.to_vec()));
+        let out = art.call(&inputs)?;
+        let loss = out[0].scalar();
+        let correct = out[1].scalar();
+        Ok(EvalResult {
+            loss,
+            accuracy: correct / labels.len() as f64,
+            examples: labels.len(),
+        })
+    }
+
+    /// Full training run over a corpus. Returns (train curve, final eval).
+    pub fn run(
+        &mut self,
+        train: &ImageCorpus,
+        test: &ImageCorpus,
+        steps: usize,
+        schedule: &StepDecay,
+        log_every: usize,
+    ) -> Result<(LossCurve, EvalResult), String> {
+        let mut cursor = BatchCursor::new(train.rows(), self.train_batch);
+        let mut curve = LossCurve::new(&format!("{:?} cnn", self.variant));
+        for step in 0..steps {
+            let idx = cursor.next_indices();
+            let (imgs, labels) = train.gather(&idx);
+            let lr = schedule.lr_at(step) as f32;
+            let loss = self.step(&imgs, &labels, lr, step as u32)?;
+            if step % log_every.max(1) == 0 || step + 1 == steps {
+                curve.push(step, loss);
+            }
+            if !loss.is_finite() {
+                return Err(format!("loss diverged at step {step}"));
+            }
+        }
+        let eval = self.eval_on_corpus(test)?;
+        Ok((curve, eval))
+    }
+
+    /// Evaluate over as much of a corpus as fits whole eval batches.
+    pub fn eval_on_corpus(&self, corpus: &ImageCorpus) -> Result<EvalResult, String> {
+        let b = self.eval_batch;
+        let batches = corpus.rows() / b;
+        assert!(batches > 0, "corpus smaller than eval batch");
+        let mut loss = 0.0;
+        let mut correct = 0.0;
+        let mut seen = 0usize;
+        for bi in 0..batches {
+            let idx: Vec<usize> = (bi * b..(bi + 1) * b).collect();
+            let (imgs, labels) = corpus.gather(&idx);
+            let r = self.eval(&imgs, &labels)?;
+            loss += r.loss * r.examples as f64;
+            correct += r.accuracy * r.examples as f64;
+            seen += r.examples;
+        }
+        Ok(EvalResult {
+            loss: loss / seen as f64,
+            accuracy: correct / seen as f64,
+            examples: seen,
+        })
+    }
+
+    /// Count of learnable parameters in the bank (the Table-1 number).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Export parameters as a named checkpoint.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let mut ckpt = Checkpoint::new();
+        for (name, p) in self.param_names.iter().zip(&self.params) {
+            ckpt.insert(name, Tensor::from_vec(p.shape(), p.as_f32().to_vec()));
+        }
+        ckpt
+    }
+
+    /// Restore parameters from a checkpoint (momenta reset to zero).
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<(), String> {
+        for (name, p) in self.param_names.iter().zip(self.params.iter_mut()) {
+            let t = ckpt
+                .get(name)
+                .ok_or_else(|| format!("checkpoint missing '{name}'"))?;
+            if t.shape() != p.shape() {
+                return Err(format!("'{name}': shape mismatch"));
+            }
+            *p = HostValue::from_tensor(t);
+        }
+        for m in self.moms.iter_mut() {
+            if let HostValue::F32 { data, .. } = m {
+                data.fill(0.0);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// He-normal for conv/fc weights; §6 diagonal init for SELL stacks;
+/// zeros for biases and momenta-like banks.
+fn init_param(name: &str, shape: &[usize], rng: &mut Pcg32) -> HostValue {
+    let numel: usize = shape.iter().product();
+    let data = match name {
+        "a_stack" | "d_stack" => DiagInit::CAFFENET.sample(numel, rng),
+        "bias_stack" | "conv1_b" | "conv2_b" | "fc6_b" | "fc7_b" | "cls_b" => vec![0.0; numel],
+        _ => {
+            // He-normal: std = sqrt(2 / fan_in); fan_in = all dims but last.
+            let fan_in: usize = shape[..shape.len().saturating_sub(1)].iter().product();
+            let std = (2.0 / fan_in.max(1) as f64).sqrt();
+            rng.normal_vec(numel, 0.0, std)
+        }
+    };
+    HostValue::F32 {
+        shape: shape.to_vec(),
+        data,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_fig3_identity_init_converges() {
+        let task = RegressionTask::generate(512, 16, 1e-4, 1);
+        let mut t = Fig3NativeTrainer::new(16, 2, DiagInit::IDENTITY, 2);
+        let curve = t.run(&task, 300, 128, &StepDecay::constant(5e-3));
+        let ratio = curve.improvement_ratio().unwrap();
+        assert!(ratio < 0.2, "ratio={ratio}");
+    }
+
+    #[test]
+    fn native_fig3_deep_standard_init_fails_to_train() {
+        // The Fig-3 right panel: near-zero init stalls for deep cascades
+        // (the signal dies through the product of near-zero diagonals).
+        let task = RegressionTask::generate(256, 16, 1e-4, 3);
+        let mut t = Fig3NativeTrainer::new(16, 8, DiagInit::STANDARD, 4);
+        let curve = t.run(&task, 200, 128, &StepDecay::constant(5e-3));
+        let ratio = curve.improvement_ratio().unwrap_or(1.0);
+        assert!(ratio > 0.5, "standard init unexpectedly trained: {ratio}");
+    }
+
+    #[test]
+    fn init_param_dispatch() {
+        let mut rng = Pcg32::seeded(1);
+        let a = init_param("a_stack", &[2, 8], &mut rng);
+        let mean: f32 = a.as_f32().iter().sum::<f32>() / 16.0;
+        assert!((mean - 1.0).abs() < 0.2, "diag init centers at 1");
+        let b = init_param("conv1_b", &[8], &mut rng);
+        assert!(b.as_f32().iter().all(|&v| v == 0.0));
+        let w = init_param("conv1_w", &[5, 5, 1, 8], &mut rng);
+        assert!(w.as_f32().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn variant_artifact_names() {
+        assert_eq!(CnnVariant::Acdc.train_artifact(), "cnn_acdc_train_step");
+        assert_eq!(CnnVariant::Dense.eval_artifact(), "cnn_dense_eval");
+    }
+
+    // Artifact-driven trainer tests live in rust/tests/integration_training.rs
+    // (they need built artifacts + the PJRT engine).
+}

@@ -1,0 +1,190 @@
+//! SGD machinery: learning-rate schedules and momentum state for the
+//! native (pure-rust) training paths. The artifact paths carry their
+//! optimizer inside the lowered program; these utilities drive everything
+//! else (schedule, curves, convergence checks).
+
+/// Step-decay learning-rate schedule (§6.2: "learning rate 0.1 multiplied
+/// by 0.1 every 100,000 iterations").
+#[derive(Debug, Clone)]
+pub struct StepDecay {
+    pub base_lr: f64,
+    pub factor: f64,
+    pub every: usize,
+}
+
+impl StepDecay {
+    pub fn new(base_lr: f64, factor: f64, every: usize) -> StepDecay {
+        assert!(base_lr > 0.0 && factor > 0.0 && every > 0);
+        StepDecay {
+            base_lr,
+            factor,
+            every,
+        }
+    }
+
+    /// Constant schedule.
+    pub fn constant(lr: f64) -> StepDecay {
+        StepDecay::new(lr, 1.0, usize::MAX)
+    }
+
+    /// The paper's §6.2 schedule.
+    pub fn paper_62() -> StepDecay {
+        StepDecay::new(0.1, 0.1, 100_000)
+    }
+
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let decays = if self.every == usize::MAX {
+            0
+        } else {
+            step / self.every
+        };
+        self.base_lr * self.factor.powi(decays as i32)
+    }
+}
+
+/// Momentum buffers for a bank of equally-shaped vectors.
+#[derive(Debug, Clone)]
+pub struct Momentum {
+    pub beta: f32,
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Momentum {
+    pub fn new(beta: f32, sizes: &[usize]) -> Momentum {
+        Momentum {
+            beta,
+            bufs: sizes.iter().map(|&s| vec![0.0; s]).collect(),
+        }
+    }
+
+    /// v ← β·v + g; p ← p − lr·v, for each (param, grad) pair.
+    pub fn apply(&mut self, params: &mut [&mut [f32]], grads: &[&[f32]], lr: f32) {
+        assert_eq!(params.len(), self.bufs.len());
+        assert_eq!(grads.len(), self.bufs.len());
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.bufs) {
+            assert_eq!(p.len(), v.len());
+            assert_eq!(g.len(), v.len());
+            for i in 0..v.len() {
+                v[i] = self.beta * v[i] + g[i];
+                p[i] -= lr * v[i];
+            }
+        }
+    }
+}
+
+/// A recorded loss curve: (step, loss) samples with convergence helpers.
+#[derive(Debug, Clone, Default)]
+pub struct LossCurve {
+    pub points: Vec<(usize, f64)>,
+    pub label: String,
+}
+
+impl LossCurve {
+    pub fn new(label: &str) -> LossCurve {
+        LossCurve {
+            points: vec![],
+            label: label.to_string(),
+        }
+    }
+
+    pub fn push(&mut self, step: usize, loss: f64) {
+        self.points.push((step, loss));
+    }
+
+    pub fn first(&self) -> Option<f64> {
+        self.points.first().map(|p| p.1)
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    /// Minimum loss seen.
+    pub fn best(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.1)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// final/initial ratio (< 1 means improved).
+    pub fn improvement_ratio(&self) -> Option<f64> {
+        match (self.first(), self.last()) {
+            (Some(f), Some(l)) if f > 0.0 => Some(l / f),
+            _ => None,
+        }
+    }
+
+    /// Render as a compact text series (for EXPERIMENTS.md and benches).
+    pub fn render(&self, every: usize) -> String {
+        let mut out = format!("# {}\n", self.label);
+        for (i, (step, loss)) in self.points.iter().enumerate() {
+            if i % every.max(1) == 0 || i + 1 == self.points.len() {
+                out.push_str(&format!("step {step:>7}  loss {loss:.6e}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_decay_schedule() {
+        let s = StepDecay::paper_62();
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(99_999), 0.1);
+        assert!((s.lr_at(100_000) - 0.01).abs() < 1e-12);
+        assert!((s.lr_at(250_000) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_schedule_never_decays() {
+        let s = StepDecay::constant(0.05);
+        assert_eq!(s.lr_at(0), 0.05);
+        assert_eq!(s.lr_at(10_000_000), 0.05);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut m = Momentum::new(0.5, &[2]);
+        let mut p = vec![0.0f32, 0.0];
+        let g = vec![1.0f32, -1.0];
+        m.apply(&mut [&mut p], &[&g], 1.0);
+        assert_eq!(p, vec![-1.0, 1.0]); // v = g
+        m.apply(&mut [&mut p], &[&g], 1.0);
+        // v = 0.5*1 + 1 = 1.5 → p = -1 - 1.5 = -2.5
+        assert_eq!(p, vec![-2.5, 2.5]);
+    }
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut m = Momentum::new(0.0, &[1]);
+        let mut p = vec![1.0f32];
+        m.apply(&mut [&mut p], &[&[0.5f32] as &[f32]], 0.1);
+        assert!((p[0] - 0.95).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loss_curve_stats() {
+        let mut c = LossCurve::new("test");
+        c.push(0, 10.0);
+        c.push(10, 4.0);
+        c.push(20, 5.0);
+        assert_eq!(c.first(), Some(10.0));
+        assert_eq!(c.last(), Some(5.0));
+        assert_eq!(c.best(), Some(4.0));
+        assert_eq!(c.improvement_ratio(), Some(0.5));
+        let r = c.render(1);
+        assert!(r.contains("step      20"));
+    }
+
+    #[test]
+    fn empty_curve_is_safe() {
+        let c = LossCurve::new("empty");
+        assert_eq!(c.first(), None);
+        assert_eq!(c.improvement_ratio(), None);
+    }
+}

@@ -1,0 +1,285 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Provides warmup + timed iterations with robust statistics (median, MAD,
+//! p10/p90), black-box value sinks, and a paper-style table printer used by
+//! every `cargo bench` target to regenerate the paper's figures as text
+//! series.
+
+use std::time::{Duration, Instant};
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+
+    /// Throughput in "units processed per second" for a per-iteration unit
+    /// count (e.g. rows in a batch, bytes moved).
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end cases.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            min_iters: 3,
+            max_iters: 100_000,
+        }
+    }
+
+    /// Time `f` repeatedly; returns robust statistics over per-iter times.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + calibration.
+        let wstart = Instant::now();
+        let mut warm_iters = 0usize;
+        while wstart.elapsed() < self.warmup || warm_iters < 1 {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / warm_iters as f64;
+        // Batch so each sample is ≥ ~20µs (timer noise floor).
+        let batch = ((20e-6 / per_iter).ceil() as usize).clamp(1, 1 << 20);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mstart = Instant::now();
+        let mut total_iters = 0usize;
+        while (mstart.elapsed() < self.measure || samples.len() < self.min_iters)
+            && total_iters < self.max_iters
+        {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = t.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile(&samples, 50.0);
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let mad = {
+            let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+            devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            percentile(&devs, 50.0)
+        };
+        Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            median_ns: median,
+            mean_ns: mean,
+            p10_ns: percentile(&samples, 10.0),
+            p90_ns: percentile(&samples, 90.0),
+            mad_ns: mad,
+        }
+    }
+}
+
+/// Percentile of a pre-sorted slice (linear interpolation).
+pub fn percentile(sorted: &[f64], pct: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = pct / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Render nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Fixed-width table printer for paper-style series output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_stats() {
+        let b = Bench {
+            warmup: Duration::from_millis(10),
+            measure: Duration::from_millis(50),
+            min_iters: 3,
+            max_iters: 1_000_000,
+        };
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(m.median_ns > 0.0);
+        assert!(m.p10_ns <= m.median_ns && m.median_ns <= m.p90_ns);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn measures_a_known_sleep_roughly() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(60),
+            min_iters: 3,
+            max_iters: 200,
+        };
+        let m = b.run("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(m.median_ns > 1.5e6, "median={}", m.median_ns);
+        assert!(m.median_ns < 20e6, "median={}", m.median_ns);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0, 20.0, 30.0];
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 100.0), 30.0);
+        assert_eq!(percentile(&v, 50.0), 15.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 90.0), 7.0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200s");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["n", "time"]);
+        t.row(vec!["128".into(), "1.2ms".into()]);
+        t.row(vec!["16384".into(), "0.9ms".into()]);
+        let r = t.render();
+        assert!(r.contains("16384"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "t".into(),
+            iters: 1,
+            median_ns: 1e6, // 1ms
+            mean_ns: 1e6,
+            p10_ns: 1e6,
+            p90_ns: 1e6,
+            mad_ns: 0.0,
+        };
+        let per_sec = m.throughput(128.0);
+        assert!((per_sec - 128_000.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed accessors and auto-generated usage text. Each binary declares
+//! its options up front so `--help` is accurate.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option (for usage text and validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    program: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+}
+
+impl Args {
+    /// Declare options, then parse `std::env::args()`.
+    pub fn parse(specs: Vec<OptSpec>) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse_from(&argv, specs)
+    }
+
+    /// Parse an explicit argv (first element = program name).
+    pub fn parse_from(argv: &[String], specs: Vec<OptSpec>) -> Result<Args, String> {
+        let mut args = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            specs,
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(args.usage());
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = args
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n{}", args.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    /// Usage text from the declared specs.
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [options] [args]\n\noptions:\n", self.program);
+        for spec in &self.specs {
+            let mut left = format!("  --{}", spec.name);
+            if !spec.is_flag {
+                left.push_str(" <value>");
+            }
+            let _ = write!(s, "{left:<28} {}", spec.help);
+            if let Some(d) = spec.default {
+                let _ = write!(s, " (default: {d})");
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str()).or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default)
+        })
+    }
+
+    pub fn get_string(&self, name: &str) -> Option<String> {
+        self.get(name).map(|s| s.to_string())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    /// Comma-separated list of usize, e.g. `--sizes 128,256,512`.
+    pub fn get_usize_list(&self, name: &str) -> Result<Option<Vec<usize>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad element '{t}'"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Shorthand for building an option spec.
+pub fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default,
+        is_flag: false,
+    }
+}
+
+/// Shorthand for building a boolean flag spec.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec {
+        name,
+        help,
+        default: None,
+        is_flag: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        std::iter::once("prog")
+            .chain(parts.iter().copied())
+            .map(String::from)
+            .collect()
+    }
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            opt("steps", "number of steps", Some("100")),
+            opt("lr", "learning rate", Some("0.1")),
+            opt("sizes", "comma list", None),
+            flag("verbose", "chatty output"),
+        ]
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse_from(&argv(&["--steps", "5", "--lr=0.5"]), specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(5));
+        assert_eq!(a.get_f64("lr").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(&argv(&[]), specs()).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), Some(100));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = Args::parse_from(&argv(&["--verbose", "file.txt"]), specs()).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["file.txt".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(Args::parse_from(&argv(&["--nope"]), specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse_from(&argv(&["--steps"]), specs()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(Args::parse_from(&argv(&["--verbose=1"]), specs()).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse_from(&argv(&["--steps", "abc"]), specs()).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse_from(&argv(&["--sizes", "128, 256,512"]), specs()).unwrap();
+        assert_eq!(a.get_usize_list("sizes").unwrap(), Some(vec![128, 256, 512]));
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = Args::parse_from(&argv(&["--help"]), specs()).unwrap_err();
+        assert!(e.contains("--steps"));
+        assert!(e.contains("default: 100"));
+    }
+}

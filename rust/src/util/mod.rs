@@ -1,0 +1,46 @@
+//! From-scratch substrates: JSON, CLI, RNG, thread pool, bench harness.
+//!
+//! The offline crate registry ships only the `xla` closure, so the support
+//! libraries a project of this shape would normally pull in (serde, clap,
+//! rand, tokio, criterion) are implemented here, sized to what the system
+//! actually needs (DESIGN.md substitution S5).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+
+/// Format a parameter count like the paper's Table 1 ("58.7M", "165,888").
+pub fn fmt_params(n: u64) -> String {
+    if n >= 10_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000_000 {
+        format!("{:.2}M", n as f64 / 1e6)
+    } else {
+        // thousands separators
+        let s = n.to_string();
+        let mut out = String::new();
+        for (i, c) in s.chars().enumerate() {
+            if i > 0 && (s.len() - i) % 3 == 0 {
+                out.push(',');
+            }
+            out.push(c);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_params_bands() {
+        assert_eq!(fmt_params(512), "512");
+        assert_eq!(fmt_params(9_216), "9,216");
+        assert_eq!(fmt_params(165_888), "165,888");
+        assert_eq!(fmt_params(1_500_000), "1.50M");
+        assert_eq!(fmt_params(58_700_000), "58.7M");
+    }
+}

@@ -1,0 +1,225 @@
+//! Deterministic pseudo-random numbers (PCG32) — no external crates.
+//!
+//! The offline registry carries only the `xla` closure, so randomness is
+//! implemented from scratch: a PCG-XSH-RR 32-bit generator (O'Neill 2014)
+//! with helpers for uniforms, Box–Muller Gaussians and Fisher–Yates
+//! permutations. Deterministic in the seed, which every experiment harness
+//! relies on for reproducibility.
+
+/// PCG-XSH-RR 64/32 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second output of the last Box–Muller draw.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and stream id.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+            spare_normal: None,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Convenience single-stream constructor.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next 64-bit output (two 32-bit draws).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        // 53 random mantissa bits.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Unbiased integer in [0, bound) via Lemire-style rejection.
+    pub fn below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0);
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            if r >= threshold {
+                return r % bound;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // u1 in (0,1] to avoid ln(0).
+        let u1 = 1.0 - self.uniform();
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with the given mean / stddev.
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Vector of f32 normals.
+    pub fn normal_vec(&mut self, len: usize, mean: f64, std: f64) -> Vec<f32> {
+        (0..len).map(|_| self.normal_with(mean, std) as f32).collect()
+    }
+
+    /// Vector of f32 uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..len).map(|_| self.uniform_in(lo, hi) as f32).collect()
+    }
+
+    /// Fisher–Yates permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        for i in (1..n).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            p.swap(i, j);
+        }
+        p
+    }
+
+    /// Random ±1 signs (for Fastfood's binary diagonal).
+    pub fn sign_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|_| if self.next_u32() & 1 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg32::seeded(42);
+        let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg32::seeded(1);
+        let mut b = Pcg32::seeded(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Pcg32::new(1, 10);
+        let mut b = Pcg32::new(1, 11);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Pcg32::seeded(3);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Pcg32::seeded(4);
+        let mean: f64 = (0..50_000).map(|_| r.uniform()).sum::<f64>() / 50_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg32::seeded(5);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn normal_with_shifts_and_scales() {
+        let mut r = Pcg32::seeded(6);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal_with(1.0, 0.1)).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg32::seeded(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let mut r = Pcg32::seeded(8);
+        for n in [1usize, 2, 7, 64, 255] {
+            let mut p = r.permutation(n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn permutation_not_identity_for_large_n() {
+        let mut r = Pcg32::seeded(9);
+        let p = r.permutation(256);
+        assert!(p.iter().enumerate().any(|(i, &v)| i as u32 != v));
+    }
+
+    #[test]
+    fn sign_vec_balanced() {
+        let mut r = Pcg32::seeded(10);
+        let s = r.sign_vec(10_000);
+        let pos = s.iter().filter(|&&v| v > 0.0).count();
+        assert!((pos as f64 - 5000.0).abs() < 300.0);
+        assert!(s.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Fixed-size worker thread pool (tokio is not in the offline registry).
+//!
+//! The coordinator and the bench harness need: (a) a pool that executes
+//! boxed jobs, (b) scoped fork-join parallelism for data-parallel loops
+//! (used by the fused ACDC reference implementation at large batch sizes).
+//! Built on `std::thread` + channels only.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads executing boxed closures.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("acdc-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx,
+            handles,
+            size,
+            queued,
+        }
+    }
+
+    /// Pool sized to the machine's parallelism.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Fire-and-forget execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(Msg::Run(Box::new(f)))
+            .expect("pool channel closed");
+    }
+
+    /// Run `f(i)` for i in 0..n, blocking until all complete, returning
+    /// results in order. Panics in jobs are propagated.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(usize) -> T + Send + Sync + 'static,
+    {
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, T)>, Receiver<(usize, T)>) = channel();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = f(i);
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut received = 0;
+        while received < n {
+            match rrx.recv() {
+                Ok((i, v)) => {
+                    slots[i] = Some(v);
+                    received += 1;
+                }
+                Err(_) => panic!("worker panicked during ThreadPool::map"),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Split `0..len` into at most `parts` contiguous ranges of near-equal size.
+pub fn split_ranges(len: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return vec![];
+    }
+    let parts = parts.clamp(1, len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push(start..start + sz);
+        start += sz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_returns_in_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map(50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.map(3, |i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn split_ranges_covers_exactly() {
+        for (len, parts) in [(10, 3), (7, 7), (5, 9), (100, 4), (1, 1)] {
+            let rs = split_ranges(len, parts);
+            assert!(rs.len() <= parts);
+            let mut expect = 0;
+            for r in &rs {
+                assert_eq!(r.start, expect);
+                assert!(!r.is_empty());
+                expect = r.end;
+            }
+            assert_eq!(expect, len);
+        }
+    }
+
+    #[test]
+    fn split_ranges_empty_len() {
+        assert!(split_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn nested_map_does_not_deadlock() {
+        // map() jobs must not block on pool capacity for completion of
+        // *other* jobs, only their own — verify a 1-thread pool drains a
+        // sequential map.
+        let pool = ThreadPool::new(1);
+        let out = pool.map(10, |i| i + 1);
+        assert_eq!(out.len(), 10);
+    }
+}

@@ -1,0 +1,24 @@
+//! Shared helpers for integration tests.
+
+use std::path::PathBuf;
+
+/// The artifacts directory, if `make artifacts` has been run.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Skip-or-open helper: integration tests are no-ops without artifacts
+/// (CI runs `make artifacts` first; unit tests never need it).
+#[macro_export]
+macro_rules! require_artifacts {
+    () => {
+        match common::artifacts_dir() {
+            Some(dir) => dir,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}

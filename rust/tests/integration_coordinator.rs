@@ -1,0 +1,119 @@
+//! Integration: serving coordinator end-to-end (PJRT-backed and native).
+
+mod common;
+
+use acdc::config::ServeConfig;
+use acdc::serve::{Server, ServeParams};
+use acdc::util::rng::Pcg32;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn serve_cfg(dir: &std::path::Path) -> ServeConfig {
+    ServeConfig {
+        artifacts_dir: dir.to_string_lossy().into_owned(),
+        buckets: vec![1, 8, 32, 128],
+        max_wait_us: 1_000,
+        workers: 1,
+        queue_cap: 1_024,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn pjrt_server_answers_requests_with_log_probs() {
+    let dir = require_artifacts!();
+    let params = ServeParams::random(256, 12, 10, 1);
+    let server = Server::start_pjrt(&serve_cfg(&dir), params, 256).unwrap();
+    let mut rng = Pcg32::seeded(2);
+    for _ in 0..5 {
+        let out = server
+            .infer(rng.normal_vec(256, 0.0, 1.0), Duration::from_secs(30))
+            .unwrap();
+        assert_eq!(out.len(), 10);
+        let sum: f32 = out.iter().map(|v| v.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-3, "not a log-softmax row: sum={sum}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_server_is_deterministic_per_row() {
+    let dir = require_artifacts!();
+    let params = ServeParams::random(256, 12, 10, 3);
+    let server = Server::start_pjrt(&serve_cfg(&dir), params, 256).unwrap();
+    let mut rng = Pcg32::seeded(4);
+    let row = rng.normal_vec(256, 0.0, 1.0);
+    let a = server.infer(row.clone(), Duration::from_secs(30)).unwrap();
+    let b = server.infer(row, Duration::from_secs(30)).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-4);
+    }
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_server_handles_concurrent_burst_with_batching() {
+    let dir = require_artifacts!();
+    let params = ServeParams::random(256, 12, 10, 5);
+    let mut cfg = serve_cfg(&dir);
+    cfg.max_wait_us = 5_000; // encourage batch formation
+    let server = Arc::new(Server::start_pjrt(&cfg, params, 256).unwrap());
+    let mut rng = Pcg32::seeded(6);
+
+    // Burst of 64 requests; all must be answered correctly.
+    let mut rxs = vec![];
+    for _ in 0..64 {
+        rxs.push(server.submit(rng.normal_vec(256, 0.0, 1.0)).unwrap());
+    }
+    let mut batched = 0usize;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let out = resp.output.unwrap();
+        assert_eq!(out.len(), 10);
+        if resp.batch_size > 1 {
+            batched += 1;
+        }
+    }
+    assert!(
+        batched > 0,
+        "burst of 64 should produce at least one multi-row batch"
+    );
+    let report = server.metrics_report();
+    assert!(report.contains("coordinator.accepted 64"), "{report}");
+    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+}
+
+#[test]
+fn pjrt_and_native_servers_conform_on_bucket_accounting() {
+    // Native server (no artifacts needed) sanity: bucketed batch sizes
+    // reported in responses must come from the configured bucket set.
+    let mut rng = Pcg32::seeded(7);
+    let cascade = acdc::sell::acdc::AcdcCascade::nonlinear(
+        32,
+        3,
+        acdc::sell::init::DiagInit::CAFFENET,
+        &mut rng,
+    );
+    let cfg = ServeConfig {
+        buckets: vec![2, 4],
+        max_wait_us: 500,
+        workers: 2,
+        queue_cap: 256,
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let mut rxs = vec![];
+    for _ in 0..17 {
+        rxs.push(server.submit(rng.normal_vec(32, 0.0, 1.0)).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(
+            [2usize, 4].contains(&resp.batch_size),
+            "unexpected bucket {}",
+            resp.batch_size
+        );
+        resp.output.unwrap();
+    }
+    server.shutdown();
+}

@@ -1,0 +1,216 @@
+//! Integration: PJRT engine × real AOT artifacts.
+//!
+//! These exercise the full python-AOT → HLO-text → rust-PJRT bridge with
+//! the artifacts `make artifacts` produces. Each test is a no-op if the
+//! artifacts are absent.
+
+mod common;
+
+use acdc::dct::DctPlan;
+use acdc::runtime::values::HostValue;
+use acdc::runtime::Engine;
+use acdc::sell::acdc::AcdcLayer;
+use acdc::tensor::Tensor;
+use acdc::util::rng::Pcg32;
+use std::sync::Arc;
+
+#[test]
+fn manifest_covers_all_experiments() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let m = engine.manifest();
+    for exp in ["quickstart", "fig2_pjrt", "serve", "fig3", "table1"] {
+        assert!(
+            !m.by_experiment(exp).is_empty(),
+            "no artifacts for experiment '{exp}'"
+        );
+    }
+    assert_eq!(m.by_experiment("fig3").len(), 7); // k ∈ {1,2,4,8,16,32} + dense
+    assert_eq!(m.by_experiment("serve").len(), 4); // buckets 1/8/32/128
+}
+
+#[test]
+fn acdc_forward_artifacts_match_rust_reference_across_sizes() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let mut rng = Pcg32::seeded(7);
+    for n in [256usize, 512] {
+        let name = format!("acdc_fwd_b128_n{n}");
+        let art = engine.load(&name).unwrap();
+        let x = Tensor::from_vec(&[128, n], rng.normal_vec(128 * n, 0.0, 1.0));
+        let a = rng.normal_vec(n, 1.0, 0.1);
+        let d = rng.normal_vec(n, 1.0, 0.1);
+        let b = rng.normal_vec(n, 0.0, 0.1);
+        let out = art
+            .call(&[
+                HostValue::from_tensor(&x),
+                HostValue::F32 { shape: vec![n], data: a.clone() },
+                HostValue::F32 { shape: vec![n], data: d.clone() },
+                HostValue::F32 { shape: vec![n], data: b.clone() },
+            ])
+            .unwrap();
+        let layer = AcdcLayer::new(a, d, b, Arc::new(DctPlan::new(n)));
+        let want = layer.forward_fused(&x);
+        let diff = out[0].to_tensor().max_abs_diff(&want);
+        assert!(diff < 1e-2, "n={n}: pjrt vs reference diff {diff}");
+    }
+}
+
+#[test]
+fn serve_artifacts_agree_across_buckets() {
+    // The same feature row must produce the same log-probs whether it is
+    // served through the b=1 or the b=8 executable (padding must not leak).
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let b1 = engine.load("serve_cascade_b1_n256_k12").unwrap();
+    let b8 = engine.load("serve_cascade_b8_n256_k12").unwrap();
+    let (k, n, classes) = (12usize, 256usize, 10usize);
+    let mut rng = Pcg32::seeded(11);
+    let a = rng.normal_vec(k * n, 1.0, 0.061);
+    let d = rng.normal_vec(k * n, 1.0, 0.061);
+    let bias = vec![0.0f32; k * n];
+    let cls_w = rng.normal_vec(n * classes, 0.0, 0.05);
+    let cls_b = vec![0.0f32; classes];
+    let row = rng.normal_vec(n, 0.0, 1.0);
+
+    let params = |feat: HostValue| {
+        vec![
+            HostValue::F32 { shape: vec![k, n], data: a.clone() },
+            HostValue::F32 { shape: vec![k, n], data: d.clone() },
+            HostValue::F32 { shape: vec![k, n], data: bias.clone() },
+            HostValue::F32 { shape: vec![n, classes], data: cls_w.clone() },
+            HostValue::F32 { shape: vec![classes], data: cls_b.clone() },
+            feat,
+        ]
+    };
+
+    let out1 = b1
+        .call(&params(HostValue::F32 {
+            shape: vec![1, n],
+            data: row.clone(),
+        }))
+        .unwrap();
+    let mut padded = row.clone();
+    padded.extend(vec![0.0; 7 * n]);
+    let out8 = b8
+        .call(&params(HostValue::F32 {
+            shape: vec![8, n],
+            data: padded,
+        }))
+        .unwrap();
+    let lp1 = out1[0].as_f32();
+    let lp8 = &out8[0].as_f32()[..classes];
+    for (x, y) in lp1.iter().zip(lp8) {
+        assert!((x - y).abs() < 1e-3, "bucket mismatch: {x} vs {y}");
+    }
+    // log-softmax rows must exponentiate-sum to 1
+    let sum: f32 = lp1.iter().map(|v| v.exp()).sum();
+    assert!((sum - 1.0).abs() < 1e-3, "sum={sum}");
+}
+
+#[test]
+fn fig3_step_artifact_reduces_loss_and_updates_params() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let art = engine.load("fig3_step_k2").unwrap();
+    let (k, n, batch) = (2usize, 32usize, 250usize);
+    let task = acdc::data::regression::RegressionTask::generate(batch, n, 1e-4, 3);
+    let mut rng = Pcg32::seeded(5);
+    let mut a = HostValue::F32 { shape: vec![k, n], data: rng.normal_vec(k * n, 1.0, 0.1) };
+    let mut d = HostValue::F32 { shape: vec![k, n], data: rng.normal_vec(k * n, 1.0, 0.1) };
+    let x = HostValue::from_tensor(&task.x);
+    let y = HostValue::from_tensor(&task.y);
+    let mut losses = vec![];
+    for _ in 0..40 {
+        let out = art
+            .call(&[
+                a.clone(),
+                d.clone(),
+                x.clone(),
+                y.clone(),
+                HostValue::scalar_f32(2e-4),
+            ])
+            .unwrap();
+        a = out[0].clone();
+        d = out[1].clone();
+        losses.push(out[2].scalar());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        *losses.last().unwrap() < losses[0] * 0.9,
+        "no improvement: {:?}",
+        &losses[..3]
+    );
+}
+
+#[test]
+fn fig3_dense_step_converges_toward_bayes_floor() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let art = engine.load("fig3_dense_step").unwrap();
+    let (n, batch) = (32usize, 250usize);
+    let task = acdc::data::regression::RegressionTask::generate(batch, n, 1e-4, 9);
+    let mut w = HostValue::F32 {
+        shape: vec![n, n],
+        data: vec![0.0; n * n],
+    };
+    let x = HostValue::from_tensor(&task.x);
+    let y = HostValue::from_tensor(&task.y);
+    let mut last = f64::INFINITY;
+    for _ in 0..300 {
+        let out = art
+            .call(&[w.clone(), x.clone(), y.clone(), HostValue::scalar_f32(0.02)])
+            .unwrap();
+        w = out[0].clone();
+        last = out[1].scalar();
+    }
+    // Bayes floor is n·noise_var ≈ 32e-4; full-batch GD should be well
+    // under 1.0 by 300 steps.
+    assert!(last < 1.0, "dense loss stuck at {last}");
+}
+
+#[test]
+fn engine_caches_compilations() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    assert_eq!(engine.cached_count(), 0);
+    let _ = engine.load("fig3_step_k1").unwrap();
+    let _ = engine.load("fig3_step_k1").unwrap();
+    let _ = engine.load("fig3_dense_step").unwrap();
+    assert_eq!(engine.cached_count(), 2);
+}
+
+#[test]
+fn manifest_shapes_match_paper_configuration() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let m = engine.manifest();
+    // Fig 3: X is [250, 32] minibatches of the 10000×32 problem.
+    let f = m.get("fig3_step_k16").unwrap();
+    assert_eq!(f.inputs[f.input_index("x").unwrap()].shape, vec![250, 32]);
+    assert_eq!(f.inputs[f.input_index("a_stack").unwrap()].shape, vec![16, 32]);
+    // CNN: 12-layer ACDC at width 256 (paper §6.2 scaled per DESIGN S2).
+    let c = m.get("cnn_acdc_train_step").unwrap();
+    assert_eq!(c.inputs[c.input_index("a_stack").unwrap()].shape, vec![12, 256]);
+    assert_eq!(c.tag_usize("k"), Some(12));
+}
+
+#[test]
+fn hlo_text_contains_real_constants() {
+    // Regression test for the print_large_constants pitfall: elided
+    // constants (`constant({...})`) silently parse as zeros in
+    // xla_extension 0.5.1 and zero out the DCT matrices.
+    let dir = require_artifacts!();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            !text.contains("constant({...})"),
+            "{} contains elided constants",
+            path.display()
+        );
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: training orchestrators × real AOT artifacts.
+//!
+//! Covers the Figure-3 trainer (artifact path vs native cross-check) and
+//! the MiniCaffeNet trainer (both FC variants), including checkpointing.
+
+mod common;
+
+use acdc::checkpoint::Checkpoint;
+use acdc::data::regression::RegressionTask;
+use acdc::data::synthimg::ImageCorpus;
+use acdc::runtime::Engine;
+use acdc::sell::init::DiagInit;
+use acdc::train::{CnnTrainer, CnnVariant, Fig3NativeTrainer, Fig3Trainer, StepDecay};
+
+#[test]
+fn fig3_artifact_identity_init_trains_k4() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let task = RegressionTask::generate(2_000, 32, 1e-4, 1);
+    let trainer = Fig3Trainer::new(&engine, 4).unwrap();
+    let curve = trainer
+        .run(&task, DiagInit::IDENTITY, 200, &StepDecay::constant(2e-4), 42)
+        .unwrap();
+    let ratio = curve.improvement_ratio().unwrap();
+    assert!(ratio < 0.6, "identity init k=4 should train, ratio={ratio}");
+}
+
+#[test]
+fn fig3_artifact_standard_init_stalls_deep() {
+    // Figure 3 right panel: the near-zero init cannot train a deep cascade
+    // (the forward signal and the gradients die). 16 layers.
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let task = RegressionTask::generate(2_000, 32, 1e-4, 2);
+    let trainer = Fig3Trainer::new(&engine, 16).unwrap();
+    let curve = trainer
+        .run(&task, DiagInit::STANDARD, 120, &StepDecay::constant(2e-4), 43)
+        .unwrap();
+    let ratio = curve.improvement_ratio().unwrap_or(f64::NAN);
+    assert!(
+        !(ratio < 0.9), // no meaningful progress (NaN divergence also counts)
+        "standard init k=16 unexpectedly trained: ratio={ratio}"
+    );
+}
+
+#[test]
+fn fig3_artifact_and_native_paths_agree_on_trainability() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let task = RegressionTask::generate(2_000, 32, 1e-4, 5);
+    let artifact_curve = Fig3Trainer::new(&engine, 2)
+        .unwrap()
+        .run(&task, DiagInit::IDENTITY, 150, &StepDecay::constant(2e-4), 7)
+        .unwrap();
+    let mut native = Fig3NativeTrainer::new(32, 2, DiagInit::IDENTITY, 7);
+    let native_curve = native.run(&task, 150, 250, &StepDecay::constant(2e-4));
+    let (ra, rn) = (
+        artifact_curve.improvement_ratio().unwrap(),
+        native_curve.improvement_ratio().unwrap(),
+    );
+    // Same workload, same hyperparameters, independent implementations:
+    // both must improve, within a loose band of each other.
+    assert!(ra < 0.8 && rn < 0.8, "ra={ra} rn={rn}");
+    assert!((ra - rn).abs() < 0.4, "paths disagree: ra={ra} rn={rn}");
+}
+
+#[test]
+fn cnn_acdc_trainer_short_run_learns() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let train = ImageCorpus::generate(512, 0.15, 10);
+    let test = ImageCorpus::generate(256, 0.15, 11);
+    let mut t = CnnTrainer::new(&engine, CnnVariant::Acdc, 1).unwrap();
+    let before = t.eval_on_corpus(&test).unwrap();
+    let (curve, after) = t
+        .run(&train, &test, 60, &StepDecay::constant(0.02), 10)
+        .unwrap();
+    assert!(curve.last().unwrap().is_finite());
+    assert!(
+        after.accuracy > before.accuracy,
+        "accuracy did not improve: {} -> {}",
+        before.accuracy,
+        after.accuracy
+    );
+    assert!(after.accuracy > 0.2, "after 60 steps: {}", after.accuracy);
+}
+
+#[test]
+fn cnn_dense_trainer_short_run_learns() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let train = ImageCorpus::generate(512, 0.15, 12);
+    let test = ImageCorpus::generate(256, 0.15, 13);
+    let mut t = CnnTrainer::new(&engine, CnnVariant::Dense, 2).unwrap();
+    let (_, after) = t
+        .run(&train, &test, 60, &StepDecay::constant(0.05), 10)
+        .unwrap();
+    assert!(after.accuracy > 0.2, "after 60 steps: {}", after.accuracy);
+}
+
+#[test]
+fn cnn_param_counts_match_audit() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let acdc_t = CnnTrainer::new(&engine, CnnVariant::Acdc, 3).unwrap();
+    let dense_t = CnnTrainer::new(&engine, CnnVariant::Dense, 3).unwrap();
+    assert_eq!(
+        acdc_t.param_count() as u64,
+        acdc::sell::params::mini::acdc_total()
+    );
+    assert_eq!(
+        dense_t.param_count() as u64,
+        acdc::sell::params::mini::dense_total()
+    );
+    let reduction = dense_t.param_count() as f64 / acdc_t.param_count() as f64;
+    assert!(reduction > 5.0, "MiniCaffeNet reduction {reduction}");
+}
+
+#[test]
+fn cnn_checkpoint_roundtrip_preserves_eval() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    let train = ImageCorpus::generate(256, 0.15, 14);
+    let test = ImageCorpus::generate(256, 0.15, 15);
+    let mut t = CnnTrainer::new(&engine, CnnVariant::Acdc, 4).unwrap();
+    t.run(&train, &test, 20, &StepDecay::constant(0.02), 5)
+        .unwrap();
+    let eval1 = t.eval_on_corpus(&test).unwrap();
+    let ckpt = t.checkpoint();
+
+    // Persist and restore into a *fresh* trainer.
+    let tmp = std::env::temp_dir().join(format!("acdc_cnn_{}.ckpt", std::process::id()));
+    ckpt.save(&tmp).unwrap();
+    let loaded = Checkpoint::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+
+    let mut t2 = CnnTrainer::new(&engine, CnnVariant::Acdc, 999).unwrap();
+    t2.restore(&loaded).unwrap();
+    let eval2 = t2.eval_on_corpus(&test).unwrap();
+    assert!(
+        (eval1.loss - eval2.loss).abs() < 1e-5,
+        "restored eval differs: {} vs {}",
+        eval1.loss,
+        eval2.loss
+    );
+    assert_eq!(eval1.accuracy, eval2.accuracy);
+}
+
+#[test]
+fn fig3_trainer_rejects_unknown_k() {
+    let dir = require_artifacts!();
+    let engine = Engine::open(&dir).unwrap();
+    assert!(Fig3Trainer::new(&engine, 5).is_err()); // only 1,2,4,8,16,32 lowered
+}

@@ -1,0 +1,306 @@
+//! Property-based tests (hand-rolled generative harness — proptest is not
+//! in the offline registry). Each property runs across many random seeds;
+//! failures print the seed for reproduction.
+
+use acdc::checkpoint::Checkpoint;
+use acdc::coordinator::batcher::{BatchPolicy, Decision};
+use acdc::dct::{naive_dct2, DctPlan};
+use acdc::sell::acdc::{apply_perm, apply_perm_transpose, AcdcCascade, AcdcLayer};
+use acdc::sell::init::DiagInit;
+use acdc::sell::{materialize, LinearOp};
+use acdc::tensor::Tensor;
+use acdc::util::json::Json;
+use acdc::util::rng::Pcg32;
+use std::time::{Duration, Instant};
+
+const TRIALS: usize = 60;
+
+fn pow2(rng: &mut Pcg32, lo: u32, hi: u32) -> usize {
+    1usize << (lo + rng.below(hi - lo + 1))
+}
+
+#[test]
+fn prop_dct_roundtrip_and_energy() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let n = pow2(&mut rng, 1, 9); // 2..512
+        let plan = DctPlan::new(n);
+        let x0 = rng.normal_vec(n, 0.0, 1.0);
+        let mut x = x0.clone();
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2(&mut x, &mut scratch);
+        let e0: f64 = x0.iter().map(|v| (*v as f64).powi(2)).sum();
+        let e1: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!((e0 - e1).abs() / e0.max(1e-9) < 1e-4, "seed={seed} n={n}");
+        plan.dct3(&mut x, &mut scratch);
+        for i in 0..n {
+            assert!((x[i] - x0[i]).abs() < 1e-3, "seed={seed} n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn prop_dct2_matches_naive_oracle() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let n = pow2(&mut rng, 1, 7);
+        let plan = DctPlan::new(n);
+        let x0 = rng.normal_vec(n, 0.0, 2.0);
+        let want = naive_dct2(&x0);
+        let mut x = x0;
+        let mut scratch = vec![0.0; 2 * n];
+        plan.dct2(&mut x, &mut scratch);
+        for i in 0..n {
+            assert!((x[i] - want[i]).abs() < 1e-3, "seed={seed} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_acdc_fused_equals_multipass() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(2000 + seed);
+        let n = pow2(&mut rng, 2, 8);
+        let batch = 1 + rng.below(9) as usize;
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+        layer.bias = rng.normal_vec(n, 0.0, 0.2);
+        let x = Tensor::from_vec(&[batch, n], rng.normal_vec(batch * n, 0.0, 1.0));
+        let f = layer.forward_fused(&x);
+        let m = layer.forward_multipass(&x);
+        assert!(f.max_abs_diff(&m) < 1e-3, "seed={seed} n={n} b={batch}");
+    }
+}
+
+#[test]
+fn prop_acdc_linearity_in_x() {
+    // ACDC without bias is a linear operator: f(αx + βz) = αf(x) + βf(z).
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(3000 + seed);
+        let n = pow2(&mut rng, 2, 7);
+        let layer = AcdcLayer::random(n, &mut rng, 1.0, 0.4);
+        let x = Tensor::from_vec(&[2, n], rng.normal_vec(2 * n, 0.0, 1.0));
+        let z = Tensor::from_vec(&[2, n], rng.normal_vec(2 * n, 0.0, 1.0));
+        let alpha = rng.uniform_in(-2.0, 2.0) as f32;
+        let mut combo = x.clone();
+        combo.scale(alpha);
+        combo.axpy(1.0, &z);
+        let lhs = layer.forward_fused(&combo);
+        let mut rhs = layer.forward_fused(&x);
+        rhs.scale(alpha);
+        rhs.axpy(1.0, &layer.forward_fused(&z));
+        assert!(lhs.max_abs_diff(&rhs) < 2e-3, "seed={seed} n={n}");
+    }
+}
+
+#[test]
+fn prop_materialized_cascade_equals_forward() {
+    for seed in 0..(TRIALS / 2) as u64 {
+        let mut rng = Pcg32::seeded(4000 + seed);
+        let n = pow2(&mut rng, 2, 6);
+        let k = 1 + rng.below(4) as usize;
+        let cascade = AcdcCascade::linear(n, k, DiagInit::IDENTITY, &mut rng);
+        let w = cascade.materialize();
+        let x = Tensor::from_vec(&[3, n], rng.normal_vec(3 * n, 0.0, 1.0));
+        let via = x.matmul(&w);
+        let direct = cascade.forward(&x);
+        assert!(via.max_abs_diff(&direct) < 2e-3, "seed={seed} n={n} k={k}");
+    }
+}
+
+#[test]
+fn prop_acdc_param_gradients_match_finite_differences() {
+    for seed in 0..10u64 {
+        let mut rng = Pcg32::seeded(5000 + seed);
+        let n = pow2(&mut rng, 2, 4); // 4..16 (fd is O(N) loss evals)
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.2);
+        layer.bias = rng.normal_vec(n, 0.0, 0.1);
+        let x = Tensor::from_vec(&[2, n], rng.normal_vec(2 * n, 0.0, 1.0));
+        let y = layer.forward_fused(&x);
+        let (_, grads) = layer.backward(&x, &y);
+        let loss = |l: &AcdcLayer| -> f64 {
+            l.forward_fused(&x)
+                .data()
+                .iter()
+                .map(|v| 0.5 * (*v as f64).powi(2))
+                .sum()
+        };
+        let eps = 1e-3;
+        let idx = rng.below(n as u32) as usize;
+        let mut lp = layer.clone();
+        lp.d[idx] += eps;
+        let mut lm = layer.clone();
+        lm.d[idx] -= eps;
+        let fd = (loss(&lp) - loss(&lm)) / (2.0 * eps as f64);
+        assert!(
+            (grads.d[idx] as f64 - fd).abs() < 3e-2 * fd.abs().max(1.0),
+            "seed={seed} n={n} idx={idx}: {} vs {fd}",
+            grads.d[idx]
+        );
+    }
+}
+
+#[test]
+fn prop_perm_transpose_inverts() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(6000 + seed);
+        let n = 2 + rng.below(200) as usize;
+        let rows = 1 + rng.below(5) as usize;
+        let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+        let p = rng.permutation(n);
+        let there = apply_perm(&x, &p);
+        let back = apply_perm_transpose(&there, &p);
+        assert!(back.max_abs_diff(&x) == 0.0, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_fastfood_and_circulant_are_linear() {
+    for seed in 0..(TRIALS / 2) as u64 {
+        let mut rng = Pcg32::seeded(7000 + seed);
+        let n = pow2(&mut rng, 2, 7);
+        let ff = acdc::sell::fastfood::FastfoodLayer::random(n, &mut rng);
+        let circ = acdc::sell::circulant::CirculantLayer::random(n, &mut rng);
+        let x = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let z = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        for op in [&ff as &dyn LinearOp, &circ as &dyn LinearOp] {
+            let lhs = op.forward(&x.add(&z));
+            let rhs = op.forward(&x).add(&op.forward(&z));
+            let scale = lhs.norm().max(1.0);
+            assert!(
+                lhs.max_abs_diff(&rhs) / scale < 1e-3,
+                "seed={seed} op={} n={n}",
+                op.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_materialize_any_linearop_reproduces_forward() {
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(8000 + seed);
+        let n = pow2(&mut rng, 2, 5);
+        let ops: Vec<Box<dyn LinearOp>> = vec![
+            Box::new(AcdcLayer::random(n, &mut rng, 1.0, 0.3)),
+            Box::new(acdc::sell::fastfood::FastfoodLayer::random(n, &mut rng)),
+            Box::new(acdc::sell::circulant::CirculantLayer::random(n, &mut rng)),
+            Box::new(acdc::sell::lowrank::LowRankLayer::random(n, n / 2, &mut rng)),
+        ];
+        let x = Tensor::from_vec(&[2, n], rng.normal_vec(2 * n, 0.0, 1.0));
+        for op in &ops {
+            let w = materialize(op.as_ref());
+            let via = x.matmul(&w);
+            let direct = op.forward(&x);
+            let scale = direct.norm().max(1.0);
+            assert!(
+                via.max_abs_diff(&direct) / scale < 1e-2,
+                "seed={seed} op={} n={n}",
+                op.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_batch_policy_invariants() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(9000 + seed);
+        // random ascending bucket set
+        let mut buckets: Vec<usize> = (0..1 + rng.below(4))
+            .map(|_| 1usize << rng.below(8))
+            .collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        let max_wait = Duration::from_micros(1 + rng.below(10_000) as u64);
+        let p = BatchPolicy::new(buckets.clone(), max_wait);
+        let now = Instant::now();
+        for _ in 0..20 {
+            let qlen = rng.below(400) as usize;
+            let age = Duration::from_micros(rng.below(20_000) as u64);
+            let oldest = (qlen > 0).then(|| now - age);
+            match p.decide(qlen, oldest, now) {
+                Decision::Dispatch { bucket, take } => {
+                    assert!(p.buckets.contains(&bucket), "seed={seed}");
+                    assert!(take <= bucket, "seed={seed}");
+                    assert!(take <= qlen, "seed={seed}");
+                    assert!(take > 0, "seed={seed}");
+                    // must only dispatch when full or deadline hit
+                    assert!(
+                        qlen >= p.max_bucket() || age >= max_wait,
+                        "seed={seed} premature dispatch qlen={qlen} age={age:?}"
+                    );
+                }
+                Decision::Wait(d) => {
+                    assert!(d <= max_wait, "seed={seed}");
+                    assert!(qlen < p.max_bucket(), "seed={seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_banks() {
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(10_000 + seed);
+        let mut ckpt = Checkpoint::new();
+        let n_entries = 1 + rng.below(6) as usize;
+        for e in 0..n_entries {
+            let rank = rng.below(4) as usize;
+            let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(8) as usize).collect();
+            let numel: usize = shape.iter().product();
+            ckpt.insert(
+                &format!("bank{e}"),
+                Tensor::from_vec(&shape, rng.normal_vec(numel, 0.0, 10.0)),
+            );
+        }
+        let re = Checkpoint::from_bytes(&ckpt.to_bytes()).unwrap();
+        assert_eq!(ckpt, re, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_json_number_array_roundtrip() {
+    for seed in 0..TRIALS as u64 {
+        let mut rng = Pcg32::seeded(11_000 + seed);
+        let vals: Vec<Json> = (0..rng.below(20))
+            .map(|_| Json::Num((rng.normal_with(0.0, 1e6) as i64) as f64))
+            .collect();
+        let v = Json::Arr(vals);
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re, "seed={seed}");
+    }
+}
+
+#[test]
+fn prop_dense_equivalent_of_single_layer() {
+    // acdc(x) == x @ W + b for the materialized (W, b) — the §3 linkage
+    // between the SELL and the dense operator it represents.
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(12_000 + seed);
+        let n = pow2(&mut rng, 2, 6);
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+        layer.bias = rng.normal_vec(n, 0.0, 0.3);
+        // W = forward of unit rows minus bias row; b = forward of zero row.
+        let zero = Tensor::zeros(&[1, n]);
+        let b_row = layer.forward_fused(&zero);
+        let eye = Tensor::eye(n);
+        let mut w = layer.forward_fused(&eye);
+        for i in 0..n {
+            for j in 0..n {
+                let v = w.get2(i, j) - b_row.get2(0, j);
+                w.set2(i, j, v);
+            }
+        }
+        let x = Tensor::from_vec(&[3, n], rng.normal_vec(3 * n, 0.0, 1.0));
+        let mut want = x.matmul(&w);
+        for r in 0..3 {
+            for j in 0..n {
+                let v = want.get2(r, j) + b_row.get2(0, j);
+                want.set2(r, j, v);
+            }
+        }
+        let got = layer.forward_fused(&x);
+        assert!(got.max_abs_diff(&want) < 2e-3, "seed={seed} n={n}");
+    }
+}
