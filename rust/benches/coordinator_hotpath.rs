@@ -108,6 +108,7 @@ fn main() {
                 max_wait_us,
                 workers: 2,
                 queue_cap: 8_192,
+                ..Default::default()
             };
             let server = Arc::new(
                 Server::start_pjrt(&cfg, ServeParams::random(n, 12, 10, 1), n).expect("server"),

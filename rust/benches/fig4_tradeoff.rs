@@ -12,7 +12,11 @@ use std::path::Path;
 fn main() {
     let fast = std::env::var("ACDC_BENCH_FAST").is_ok();
     let measured = Engine::open(Path::new("artifacts")).ok().and_then(|engine| {
-        let (train_rows, test_rows, steps) = if fast { (512, 512, 80) } else { (1_500, 1_024, 300) };
+        let (train_rows, test_rows, steps) = if fast {
+            (512, 512, 80)
+        } else {
+            (1_500, 1_024, 300)
+        };
         println!("training measured point ({steps} steps per variant)...");
         table1::run_measured(&engine, train_rows, test_rows, steps, 1).ok()
     });

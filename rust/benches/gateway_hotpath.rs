@@ -1,0 +1,127 @@
+//! E8 — gateway hot path: HTTP framing, admission control, and loopback
+//! end-to-end serving through the network gateway.
+//!
+//! Three sections:
+//! 1. request-parse micro-bench (bytes → `Request`, ns/request);
+//! 2. admission micro-bench (token bucket + in-flight permit, ns/admit);
+//! 3. loopback end-to-end: native ACDC cascade behind the gateway, driven
+//!    by the closed-loop load generator over real TCP connections.
+//!
+//! Run: `cargo bench --bench gateway_hotpath`
+//! Env: `ACDC_BENCH_FAST=1` shrinks the end-to-end leg.
+
+use acdc::config::{GatewayConfig, ServeConfig};
+use acdc::gateway::admission::Admission;
+use acdc::gateway::http::{self, ReadOutcome};
+use acdc::gateway::loadgen::{self, ArrivalMode, LoadgenConfig};
+use acdc::gateway::Gateway;
+use acdc::metrics::Registry;
+use acdc::serve::Server;
+use acdc::util::bench::{black_box, fmt_ns, Bench};
+use acdc::util::rng::Pcg32;
+use std::io::Cursor;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn canned_infer_request(width: usize) -> Vec<u8> {
+    let mut rng = Pcg32::seeded(9);
+    let features: Vec<String> = rng
+        .normal_vec(width, 0.0, 1.0)
+        .iter()
+        .map(|v| format!("{v}"))
+        .collect();
+    let body = format!("{{\"features\":[{}]}}", features.join(","));
+    let mut wire = Vec::new();
+    http::write_request(
+        &mut wire,
+        "POST",
+        "/v1/infer",
+        &[("content-type", "application/json")],
+        body.as_bytes(),
+    )
+    .unwrap();
+    wire
+}
+
+fn main() {
+    let fast = std::env::var("ACDC_BENCH_FAST").is_ok();
+    let bench = Bench::default();
+
+    // 1. HTTP request parsing.
+    let wire = canned_infer_request(256);
+    let m = bench.run("http.read_request", || {
+        let mut c = Cursor::new(&wire[..]);
+        match http::read_request(&mut c, 1 << 20).unwrap() {
+            ReadOutcome::Request(req) => {
+                black_box(req.body.len());
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+    println!(
+        "http request parse (256-wide row, {} bytes): {} median ({} iters)",
+        wire.len(),
+        fmt_ns(m.median_ns),
+        m.iters
+    );
+
+    // 2. Admission control (token bucket + permit lifecycle).
+    let registry = Registry::new();
+    let admission = Arc::new(Admission::new(
+        &GatewayConfig {
+            max_inflight: 1 << 20,
+            rate_rps: 1e9, // effectively unlimited: measures mechanism cost
+            rate_burst: 1e6,
+            ..Default::default()
+        },
+        &registry,
+    ));
+    let m = bench.run("admission.try_admit", || {
+        let permit = admission.try_admit().unwrap();
+        black_box(&permit);
+    });
+    println!(
+        "admission (bucket + in-flight permit): {} median ({} iters)\n",
+        fmt_ns(m.median_ns),
+        m.iters
+    );
+
+    // 3. Loopback end-to-end through real sockets.
+    let n = 256;
+    let mut rng = Pcg32::seeded(3);
+    let cascade = acdc::sell::acdc::AcdcCascade::nonlinear(
+        n,
+        12,
+        acdc::sell::init::DiagInit::CAFFENET,
+        &mut rng,
+    );
+    let cfg = ServeConfig {
+        buckets: vec![1, 8, 32, 128],
+        max_wait_us: 1_000,
+        workers: 2,
+        queue_cap: 8_192,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 4_096,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).expect("gateway");
+    let report = loadgen::run(&LoadgenConfig {
+        addr: gateway.local_addr().to_string(),
+        mode: ArrivalMode::Closed,
+        concurrency: 8,
+        duration: Duration::from_millis(if fast { 500 } else { 3_000 }),
+        width: n,
+        rows_mix: vec![1, 1, 1, 8],
+        timeout: Duration::from_secs(30),
+        seed: 7,
+    })
+    .expect("loadgen");
+    println!("loopback closed-loop, native ACDC-12 (N=256), 8 workers, mix 3×1+1×8 rows:");
+    print!("{}", report.render());
+    println!("{}", gateway.metrics_report());
+    gateway.shutdown();
+}

@@ -213,6 +213,99 @@ fn parse_value(tok: &str) -> Result<Value, String> {
 // Typed run configs
 // ---------------------------------------------------------------------------
 
+/// Network gateway configuration (`[gateway]` section): the admission
+/// control and HTTP front-end in front of the serving coordinator.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    /// Listen address, e.g. `"127.0.0.1:7878"` (port 0 = ephemeral).
+    pub addr: String,
+    /// Concurrent connection cap; excess connects get an immediate 503.
+    pub max_open_conns: usize,
+    /// Global in-flight request cap enforced by admission control.
+    pub max_inflight: usize,
+    /// Token-bucket refill rate in requests/second (0 disables the bucket).
+    pub rate_rps: f64,
+    /// Token-bucket capacity (burst allowance).
+    pub rate_burst: f64,
+    /// Per-request budget for the coordinator to answer, else 504.
+    pub request_timeout_ms: u64,
+    /// Graceful-shutdown bound on waiting for in-flight connections.
+    pub drain_timeout_ms: u64,
+    /// `Retry-After` seconds attached to 429/503 shed responses.
+    pub retry_after_s: u64,
+    /// Reject request bodies larger than this with 413.
+    pub max_body_bytes: usize,
+    /// Cap on feature rows in one `POST /v1/infer` batch request.
+    pub max_rows_per_request: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:7878".into(),
+            max_open_conns: 256,
+            max_inflight: 1_024,
+            rate_rps: 0.0,
+            rate_burst: 256.0,
+            request_timeout_ms: 5_000,
+            drain_timeout_ms: 10_000,
+            retry_after_s: 1,
+            max_body_bytes: 4 << 20,
+            max_rows_per_request: 128,
+        }
+    }
+}
+
+impl GatewayConfig {
+    pub fn from_config(cfg: &Config) -> Result<GatewayConfig, String> {
+        let d = GatewayConfig::default();
+        let gc = GatewayConfig {
+            addr: cfg.get_str("gateway.addr", &d.addr),
+            max_open_conns: cfg.get_usize("gateway.max_open_conns", d.max_open_conns),
+            max_inflight: cfg.get_usize("gateway.max_inflight", d.max_inflight),
+            rate_rps: cfg.get_f64("gateway.rate_rps", d.rate_rps),
+            rate_burst: cfg.get_f64("gateway.rate_burst", d.rate_burst),
+            request_timeout_ms: cfg
+                .get_usize("gateway.request_timeout_ms", d.request_timeout_ms as usize)
+                as u64,
+            drain_timeout_ms: cfg
+                .get_usize("gateway.drain_timeout_ms", d.drain_timeout_ms as usize)
+                as u64,
+            retry_after_s: cfg.get_usize("gateway.retry_after_s", d.retry_after_s as usize) as u64,
+            max_body_bytes: cfg.get_usize("gateway.max_body_bytes", d.max_body_bytes),
+            max_rows_per_request: cfg
+                .get_usize("gateway.max_rows_per_request", d.max_rows_per_request),
+        };
+        gc.validate()?;
+        Ok(gc)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.addr.is_empty() {
+            return Err("gateway.addr must not be empty".into());
+        }
+        if self.max_open_conns == 0 {
+            return Err("gateway.max_open_conns must be >= 1".into());
+        }
+        if self.max_inflight == 0 {
+            return Err("gateway.max_inflight must be >= 1".into());
+        }
+        if !self.rate_rps.is_finite() || self.rate_rps < 0.0 {
+            return Err("gateway.rate_rps must be finite and >= 0".into());
+        }
+        if self.rate_rps > 0.0 && (!self.rate_burst.is_finite() || self.rate_burst < 1.0) {
+            return Err("gateway.rate_burst must be >= 1 when rate limiting is on".into());
+        }
+        if self.request_timeout_ms == 0 {
+            return Err("gateway.request_timeout_ms must be >= 1".into());
+        }
+        if self.max_rows_per_request == 0 {
+            return Err("gateway.max_rows_per_request must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -225,6 +318,8 @@ pub struct ServeConfig {
     pub workers: usize,
     /// Bound on queued requests before backpressure rejections.
     pub queue_cap: usize,
+    /// Network front-end knobs (`[gateway]` section).
+    pub gateway: GatewayConfig,
 }
 
 impl Default for ServeConfig {
@@ -235,6 +330,7 @@ impl Default for ServeConfig {
             max_wait_us: 2_000,
             workers: 2,
             queue_cap: 4_096,
+            gateway: GatewayConfig::default(),
         }
     }
 }
@@ -246,6 +342,7 @@ impl ServeConfig {
             max_wait_us: cfg.get_usize("serve.max_wait_us", 2_000) as u64,
             workers: cfg.get_usize("serve.workers", 2),
             queue_cap: cfg.get_usize("serve.queue_cap", 4_096),
+            gateway: GatewayConfig::from_config(cfg)?,
             ..Default::default()
         };
         if let Some(v) = cfg.get("serve.buckets") {
@@ -274,7 +371,7 @@ impl ServeConfig {
         if self.queue_cap == 0 {
             return Err("queue_cap must be >= 1".into());
         }
-        Ok(())
+        self.gateway.validate()
     }
 }
 
@@ -360,6 +457,13 @@ steps = 300
 lr = 0.05        # per §6.2
 checkpoint_path = "ckpt.bin"
 verbose = true
+
+[gateway]
+addr = "127.0.0.1:9000"
+max_inflight = 64
+rate_rps = 500.0
+rate_burst = 50.0
+retry_after_s = 2
 "#;
 
     #[test]
@@ -420,14 +524,61 @@ verbose = true
 
     #[test]
     fn serve_config_validation() {
-        let mut sc = ServeConfig::default();
-        sc.buckets = vec![8, 1];
+        let mut sc = ServeConfig {
+            buckets: vec![8, 1],
+            ..Default::default()
+        };
         assert!(sc.validate().is_err());
         sc.buckets = vec![];
         assert!(sc.validate().is_err());
-        sc = ServeConfig::default();
-        sc.workers = 0;
+        let sc = ServeConfig {
+            workers: 0,
+            ..Default::default()
+        };
         assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn gateway_config_from_config_and_defaults() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let gc = GatewayConfig::from_config(&cfg).unwrap();
+        assert_eq!(gc.addr, "127.0.0.1:9000");
+        assert_eq!(gc.max_inflight, 64);
+        assert!((gc.rate_rps - 500.0).abs() < 1e-9);
+        assert!((gc.rate_burst - 50.0).abs() < 1e-9);
+        assert_eq!(gc.retry_after_s, 2);
+        // unspecified keys fall back to defaults
+        assert_eq!(gc.max_open_conns, GatewayConfig::default().max_open_conns);
+        // and the serve config embeds the same section
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.gateway.addr, "127.0.0.1:9000");
+    }
+
+    #[test]
+    fn gateway_config_validation() {
+        let ok = GatewayConfig::default();
+        assert!(ok.validate().is_ok());
+        let bad = GatewayConfig {
+            max_inflight: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GatewayConfig {
+            rate_rps: -1.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GatewayConfig {
+            rate_rps: 10.0,
+            rate_burst: 0.0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = GatewayConfig {
+            max_rows_per_request: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

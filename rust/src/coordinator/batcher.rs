@@ -14,7 +14,7 @@
 //! Pure decision logic lives in [`BatchPolicy`] (unit-testable without
 //! threads); [`BatcherThread`] wires it to channels.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
 use super::request::{FormedBatch, InferRequest};
@@ -87,12 +87,13 @@ impl BatchPolicy {
 }
 
 /// The batcher loop: drains a request channel, forms batches, forwards
-/// them to the worker channel. Returns when the request channel closes
-/// (flushing any remainder).
+/// them to the bounded worker channel (blocking there when every worker
+/// is busy, which propagates backpressure to the request queue). Returns
+/// when the request channel closes (flushing any remainder).
 pub fn run_batcher(
     policy: BatchPolicy,
     rx: Receiver<InferRequest>,
-    tx: Sender<FormedBatch>,
+    tx: SyncSender<FormedBatch>,
 ) {
     let mut queue: Vec<InferRequest> = Vec::new();
     loop {
@@ -147,7 +148,7 @@ pub fn run_batcher(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use std::sync::mpsc::{channel, sync_channel};
 
     fn policy() -> BatchPolicy {
         BatchPolicy::new(vec![1, 8, 32, 128], Duration::from_millis(2))
@@ -219,7 +220,9 @@ mod tests {
         assert_eq!(p.buckets, vec![1, 8, 32]);
     }
 
-    fn mk_req(id: u64) -> (InferRequest, std::sync::mpsc::Receiver<super::super::request::InferResponse>) {
+    type RespRx = std::sync::mpsc::Receiver<super::super::request::InferResponse>;
+
+    fn mk_req(id: u64) -> (InferRequest, RespRx) {
         let (tx, rx) = channel();
         (
             InferRequest {
@@ -235,7 +238,7 @@ mod tests {
     #[test]
     fn batcher_thread_forms_deadline_batch() {
         let (req_tx, req_rx) = channel();
-        let (batch_tx, batch_rx) = channel();
+        let (batch_tx, batch_rx) = sync_channel(16);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_millis(1));
         let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
         let mut keep = vec![];
@@ -254,7 +257,7 @@ mod tests {
     #[test]
     fn batcher_thread_flushes_on_close() {
         let (req_tx, req_rx) = channel();
-        let (batch_tx, batch_rx) = channel();
+        let (batch_tx, batch_rx) = sync_channel(16);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_secs(60)); // never deadline
         let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
         let mut keep = vec![];
@@ -273,7 +276,7 @@ mod tests {
     #[test]
     fn batcher_thread_dispatches_immediately_when_full() {
         let (req_tx, req_rx) = channel();
-        let (batch_tx, batch_rx) = channel();
+        let (batch_tx, batch_rx) = sync_channel(16);
         let p = BatchPolicy::new(vec![2], Duration::from_secs(60));
         let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
         let mut keep = vec![];

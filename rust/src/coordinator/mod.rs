@@ -6,6 +6,12 @@
 //! (bounded queue → backpressure), a batcher thread forms size-bucketed
 //! batches under a latency deadline, and a worker pool executes them on
 //! thread-local executors (PJRT or native reference).
+//!
+//! Both stages are bounded: the request queue at `queue_cap` and the
+//! formed-batch channel at `2 × workers`. Slow executors therefore
+//! backpressure the batcher, the batcher backpressures the request queue,
+//! and saturation surfaces deterministically as [`SubmitError::QueueFull`]
+//! at the submit edge — which the network gateway maps to HTTP 503.
 
 pub mod batcher;
 pub mod request;
@@ -63,7 +69,10 @@ impl Coordinator {
     ) -> Coordinator {
         cfg.validate().expect("invalid serve config");
         let (req_tx, req_rx) = sync_channel::<InferRequest>(cfg.queue_cap);
-        let (batch_tx, batch_rx) = std::sync::mpsc::channel();
+        // Bounded so a slow worker pool backpressures batch formation
+        // instead of letting formed batches pile up unboundedly; 2× the
+        // pool keeps every worker busy while one batch is in flight.
+        let (batch_tx, batch_rx) = sync_channel(cfg.workers.saturating_mul(2).max(1));
         let policy = BatchPolicy::new(
             cfg.buckets.clone(),
             Duration::from_micros(cfg.max_wait_us),
@@ -295,5 +304,67 @@ mod tests {
         }
         assert!(saw_full, "expected backpressure rejection");
         assert!(c.metrics().counter("coordinator.rejected").get() >= 1);
+    }
+
+    #[test]
+    fn saturation_is_deterministic_and_drain_answers_inflight() {
+        // Bounded pipeline capacity with buckets [1], 1 worker, queue_cap 2:
+        //   1 executing + 2 batch-channel slots + 1 held by the blocked
+        //   batcher + 2 request-queue slots = 6 requests absorbed.
+        // The 7th submit must fail with QueueFull while the worker is still
+        // on the first batch, and shutdown must drain all 6.
+        struct SlowExecutor;
+        impl BatchExecutor for SlowExecutor {
+            fn width(&self) -> usize {
+                1
+            }
+            fn out_width(&self) -> usize {
+                1
+            }
+            fn execute(&mut self, _b: usize, p: &[f32]) -> Result<Vec<f32>, String> {
+                std::thread::sleep(Duration::from_millis(300));
+                Ok(p.to_vec())
+            }
+        }
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(SlowExecutor) as Box<dyn BatchExecutor>));
+        let c = Coordinator::start(
+            &ServeConfig {
+                buckets: vec![1],
+                max_wait_us: 1,
+                workers: 1,
+                queue_cap: 2,
+                ..Default::default()
+            },
+            1,
+            factory,
+            metrics,
+        );
+        let mut rxs = vec![];
+        rxs.push(c.submit(vec![0.0]).unwrap());
+        // Let the worker pick up request 0 before filling the pipeline.
+        std::thread::sleep(Duration::from_millis(50));
+        for i in 1..6 {
+            rxs.push(c.submit(vec![i as f32]).unwrap());
+            // Paced so the batcher (not the request queue) absorbs each
+            // submit until every stage is full.
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Let the batcher settle (blocked on the full batch channel).
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(
+            c.submit(vec![6.0]).unwrap_err(),
+            SubmitError::QueueFull,
+            "7th request must be shed while the pipeline is saturated"
+        );
+        assert_eq!(c.metrics().counter("coordinator.rejected").get(), 1);
+        c.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap_or_else(|e| panic!("request {i} unanswered after drain: {e}"));
+            assert_eq!(resp.output.unwrap(), vec![i as f32]);
+        }
     }
 }

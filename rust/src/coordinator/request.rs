@@ -64,7 +64,9 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
-    fn req(id: u64, features: Vec<f32>) -> (InferRequest, std::sync::mpsc::Receiver<InferResponse>) {
+    type RespRx = std::sync::mpsc::Receiver<InferResponse>;
+
+    fn req(id: u64, features: Vec<f32>) -> (InferRequest, RespRx) {
         let (tx, rx) = channel();
         (
             InferRequest {

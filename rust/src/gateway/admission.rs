@@ -1,0 +1,279 @@
+//! Admission control in front of the serving coordinator.
+//!
+//! Three gates, checked in order at the request edge:
+//!
+//! 1. **drain** — a gateway that is shutting down sheds everything new
+//!    while in-flight work completes;
+//! 2. **concurrency** — a global in-flight cap bounds memory and queueing,
+//!    shedding with 503;
+//! 3. **rate** — a token bucket (refill `rate_rps`, capacity `rate_burst`)
+//!    smooths offered load, shedding with 429 + `Retry-After`. Checked
+//!    after the cap so capacity-shed requests don't drain the rate budget
+//!    of requests that could actually run.
+//!
+//! A fourth shed source lives past admission: the coordinator's bounded
+//! queue ([`crate::coordinator::SubmitError::QueueFull`]), recorded here
+//! via [`Admission::note_queue_full`] so `GET /metrics` exposes every shed
+//! class side by side.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::GatewayConfig;
+use crate::metrics::{Counter, Gauge, Registry};
+
+/// Classic token bucket; `try_acquire` refills lazily from elapsed time.
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    state: Mutex<BucketState>,
+}
+
+struct BucketState {
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    pub fn new(rate: f64, burst: f64) -> TokenBucket {
+        TokenBucket {
+            rate,
+            burst,
+            state: Mutex::new(BucketState {
+                tokens: burst,
+                last: Instant::now(),
+            }),
+        }
+    }
+
+    pub fn try_acquire(&self) -> bool {
+        self.try_acquire_at(Instant::now())
+    }
+
+    /// Deterministic variant for tests: the caller supplies "now".
+    pub fn try_acquire_at(&self, now: Instant) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if now > s.last {
+            let dt = now.duration_since(s.last).as_secs_f64();
+            s.tokens = (s.tokens + dt * self.rate).min(self.burst);
+            s.last = now;
+        }
+        if s.tokens >= 1.0 {
+            s.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Why a request was shed at the admission edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Token bucket empty — HTTP 429.
+    RateLimited,
+    /// Global in-flight cap reached — HTTP 503.
+    InflightFull,
+    /// Gateway is draining for shutdown — HTTP 503.
+    Draining,
+}
+
+impl AdmitError {
+    pub fn status(&self) -> u16 {
+        match self {
+            AdmitError::RateLimited => 429,
+            AdmitError::InflightFull | AdmitError::Draining => 503,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AdmitError::RateLimited => "rate limited",
+            AdmitError::InflightFull => "too many in-flight requests",
+            AdmitError::Draining => "gateway draining",
+        }
+    }
+}
+
+/// Shared admission state; lives in an `Arc` next to the coordinator.
+pub struct Admission {
+    bucket: Option<TokenBucket>,
+    max_inflight: u64,
+    draining: AtomicBool,
+    inflight: Arc<Gauge>,
+    admitted: Arc<Counter>,
+    shed_rate: Arc<Counter>,
+    shed_inflight: Arc<Counter>,
+    shed_queue: Arc<Counter>,
+    shed_drain: Arc<Counter>,
+}
+
+impl Admission {
+    pub fn new(cfg: &GatewayConfig, metrics: &Registry) -> Admission {
+        Admission {
+            bucket: (cfg.rate_rps > 0.0)
+                .then(|| TokenBucket::new(cfg.rate_rps, cfg.rate_burst)),
+            max_inflight: cfg.max_inflight as u64,
+            draining: AtomicBool::new(false),
+            inflight: metrics.gauge("gateway.inflight"),
+            admitted: metrics.counter("gateway.admitted"),
+            shed_rate: metrics.counter("gateway.shed.rate_limited"),
+            shed_inflight: metrics.counter("gateway.shed.inflight"),
+            shed_queue: metrics.counter("gateway.shed.queue_full"),
+            shed_drain: metrics.counter("gateway.shed.draining"),
+        }
+    }
+
+    /// Admit one request or say why not. The returned permit holds an
+    /// in-flight slot until dropped, so callers keep it alive for the
+    /// whole submit → response window.
+    pub fn try_admit(&self) -> Result<Permit, AdmitError> {
+        if self.draining.load(Ordering::Acquire) {
+            self.shed_drain.inc();
+            return Err(AdmitError::Draining);
+        }
+        if self.inflight.inc() > self.max_inflight {
+            self.inflight.dec();
+            self.shed_inflight.inc();
+            return Err(AdmitError::InflightFull);
+        }
+        if let Some(bucket) = &self.bucket {
+            if !bucket.try_acquire() {
+                self.inflight.dec();
+                self.shed_rate.inc();
+                return Err(AdmitError::RateLimited);
+            }
+        }
+        self.admitted.inc();
+        Ok(Permit {
+            inflight: Arc::clone(&self.inflight),
+        })
+    }
+
+    /// Record a shed caused by the coordinator's bounded queue.
+    pub fn note_queue_full(&self) {
+        self.shed_queue.inc();
+    }
+
+    /// Flip into drain mode: every subsequent admit is refused.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.get()
+    }
+
+    /// Total sheds across every class (rate, inflight, queue, drain).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_rate.get() + self.shed_inflight.get() + self.shed_queue.get()
+            + self.shed_drain.get()
+    }
+}
+
+/// RAII in-flight slot; dropping releases it.
+pub struct Permit {
+    inflight: Arc<Gauge>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.inflight.dec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn cfg(max_inflight: usize, rate_rps: f64, rate_burst: f64) -> GatewayConfig {
+        GatewayConfig {
+            max_inflight,
+            rate_rps,
+            rate_burst,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn token_bucket_consumes_burst_then_refills() {
+        let b = TokenBucket::new(2.0, 3.0);
+        let t0 = Instant::now();
+        assert!(b.try_acquire_at(t0));
+        assert!(b.try_acquire_at(t0));
+        assert!(b.try_acquire_at(t0));
+        assert!(!b.try_acquire_at(t0), "burst of 3 exhausted");
+        // 1 second at 2 rps refills exactly two tokens.
+        let t1 = t0 + Duration::from_secs(1);
+        assert!(b.try_acquire_at(t1));
+        assert!(b.try_acquire_at(t1));
+        assert!(!b.try_acquire_at(t1));
+    }
+
+    #[test]
+    fn token_bucket_caps_refill_at_burst() {
+        let b = TokenBucket::new(100.0, 2.0);
+        let t0 = Instant::now();
+        // A long idle period must not accumulate more than `burst`.
+        let t1 = t0 + Duration::from_secs(60);
+        assert!(b.try_acquire_at(t1));
+        assert!(b.try_acquire_at(t1));
+        assert!(!b.try_acquire_at(t1));
+    }
+
+    #[test]
+    fn inflight_cap_enforced_and_released_by_permit_drop() {
+        let metrics = Registry::new();
+        let adm = Arc::new(Admission::new(&cfg(2, 0.0, 1.0), &metrics));
+        let p1 = adm.try_admit().unwrap();
+        let _p2 = adm.try_admit().unwrap();
+        assert_eq!(adm.inflight(), 2);
+        assert_eq!(adm.try_admit().unwrap_err(), AdmitError::InflightFull);
+        assert_eq!(metrics.counter("gateway.shed.inflight").get(), 1);
+        drop(p1);
+        assert_eq!(adm.inflight(), 1);
+        let _p3 = adm.try_admit().unwrap();
+        assert_eq!(metrics.counter("gateway.admitted").get(), 3);
+    }
+
+    #[test]
+    fn rate_limit_sheds_with_429_class() {
+        let metrics = Registry::new();
+        // rate 0.001 rps, burst 1: the second immediate request is shed.
+        let adm = Arc::new(Admission::new(&cfg(16, 0.001, 1.0), &metrics));
+        let _p = adm.try_admit().unwrap();
+        let err = adm.try_admit().unwrap_err();
+        assert_eq!(err, AdmitError::RateLimited);
+        assert_eq!(err.status(), 429);
+        assert_eq!(metrics.counter("gateway.shed.rate_limited").get(), 1);
+    }
+
+    #[test]
+    fn draining_refuses_everything_new() {
+        let metrics = Registry::new();
+        let adm = Arc::new(Admission::new(&cfg(16, 0.0, 1.0), &metrics));
+        let _held = adm.try_admit().unwrap();
+        adm.begin_drain();
+        assert!(adm.is_draining());
+        assert_eq!(adm.try_admit().unwrap_err(), AdmitError::Draining);
+        assert_eq!(adm.try_admit().unwrap_err().status(), 503);
+        // held permit still releases normally
+        assert_eq!(adm.inflight(), 1);
+    }
+
+    #[test]
+    fn queue_full_sheds_are_tallied() {
+        let metrics = Registry::new();
+        let adm = Arc::new(Admission::new(&cfg(16, 0.0, 1.0), &metrics));
+        adm.note_queue_full();
+        adm.note_queue_full();
+        assert_eq!(metrics.counter("gateway.shed.queue_full").get(), 2);
+        assert_eq!(adm.shed_total(), 2);
+    }
+}

@@ -1,0 +1,572 @@
+//! Dependency-free HTTP/1.1 framing for the serving gateway.
+//!
+//! Server side: [`read_request`] parses one request off a `BufRead`
+//! (request line, headers, `Content-Length` body) and distinguishes a
+//! *parked* keep-alive connection ([`ReadOutcome::Idle`], a read timeout
+//! before any bytes) from a *stalled* peer mid-request (an error after a
+//! bounded retry window). [`Response`] renders status/headers/body with
+//! explicit `Content-Length` and `Connection` headers.
+//!
+//! Client side ([`write_request`], [`read_response`]) is used by the
+//! load generator and the integration tests; both ends speak the same
+//! deliberately small dialect: no chunked transfer, no trailers, bodies
+//! always length-delimited.
+
+use std::fmt;
+use std::io::{BufRead, ErrorKind, Read, Write};
+use std::time::{Duration, Instant};
+
+/// Reject header sections larger than this.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+
+/// Cap on any single line (request line, header, status line) — bounds
+/// memory against a peer streaming bytes with no newline.
+const MAX_LINE_BYTES: usize = MAX_HEADER_BYTES;
+
+/// How long a peer may stall mid-message before the connection is dropped.
+const STALL_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Framing error. `BodyTooLarge` and `Malformed` are answerable with a
+/// status code; `Io` means the connection is unusable.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Declared body exceeds the configured cap (answer 413).
+    BodyTooLarge(usize),
+    /// Unparseable or unsupported message (answer 400).
+    Malformed(String),
+    /// Transport failure; drop the connection.
+    Io(String),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HttpError::BodyTooLarge(n) => write!(f, "request body too large ({n} bytes)"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::Io(m) => write!(f, "connection error: {m}"),
+        }
+    }
+}
+
+/// A parsed inbound request. Header names are lowercased at parse time.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub version: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, name)
+    }
+
+    /// Path with any query string stripped (routing key).
+    pub fn route_path(&self) -> &str {
+        self.path.split('?').next().unwrap_or("")
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 requires an explicit `Connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        if self.version == "HTTP/1.0" {
+            conn.eq_ignore_ascii_case("keep-alive")
+        } else {
+            !conn.eq_ignore_ascii_case("close")
+        }
+    }
+}
+
+/// What one read attempt produced.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete request.
+    Request(Request),
+    /// Clean close at a message boundary.
+    Eof,
+    /// Read timeout with no bytes received — connection is parked; the
+    /// caller should poll its shutdown flag and retry.
+    Idle,
+}
+
+enum LineRead {
+    Line,
+    Eof,
+    Idle,
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read one `\n`-terminated line, retrying short read-timeouts until
+/// `deadline`. `allow_idle` governs the empty-buffer timeout case. The
+/// read is length-capped at [`MAX_LINE_BYTES`] so a peer streaming bytes
+/// with no newline cannot grow memory without bound.
+fn read_line_retry<R: BufRead>(
+    r: &mut R,
+    buf: &mut String,
+    allow_idle: bool,
+    deadline: Instant,
+) -> Result<LineRead, HttpError> {
+    loop {
+        // +2 leaves room for the "\r\n" of a maximal line; hitting the
+        // cap makes the limited reader report EOF mid-line below.
+        let cap = (MAX_LINE_BYTES + 2).saturating_sub(buf.len()) as u64;
+        let mut limited = r.by_ref().take(cap);
+        match limited.read_line(buf) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Ok(LineRead::Eof)
+                } else if buf.len() > MAX_LINE_BYTES {
+                    Err(HttpError::Malformed("line too long".into()))
+                } else {
+                    Err(HttpError::Io("eof mid-line".into()))
+                };
+            }
+            Ok(_) => {
+                if buf.ends_with('\n') {
+                    return Ok(LineRead::Line);
+                }
+                return if buf.len() > MAX_LINE_BYTES {
+                    Err(HttpError::Malformed("line too long".into()))
+                } else {
+                    // read_line only stops short of '\n' at EOF.
+                    Err(HttpError::Io("eof mid-line".into()))
+                };
+            }
+            Err(e) if is_timeout(&e) => {
+                if buf.is_empty() && allow_idle {
+                    return Ok(LineRead::Idle);
+                }
+                if Instant::now() >= deadline {
+                    return Err(HttpError::Io("peer stalled mid-message".into()));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::Io(e.to_string())),
+        }
+    }
+}
+
+/// Read `name: value` headers until the blank line; names lowercased.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+    deadline: Instant,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    let mut total = 0usize;
+    loop {
+        let mut line = String::new();
+        match read_line_retry(r, &mut line, false, deadline)? {
+            LineRead::Line => {}
+            _ => return Err(HttpError::Io("eof in headers".into())),
+        }
+        let trimmed = line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            return Ok(headers);
+        }
+        total += line.len();
+        if total > MAX_HEADER_BYTES {
+            return Err(HttpError::Malformed("header section too large".into()));
+        }
+        let (name, value) = trimmed
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line '{trimmed}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+/// Read an exact-length body, retrying short read-timeouts until `deadline`.
+fn read_body<R: BufRead>(
+    r: &mut R,
+    len: usize,
+    deadline: Instant,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = vec![0u8; len];
+    let mut filled = 0usize;
+    while filled < len {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(HttpError::Io("eof mid-body".into())),
+            Ok(n) => filled += n,
+            Err(e) if is_timeout(&e) => {
+                if Instant::now() >= deadline {
+                    return Err(HttpError::Io("peer stalled mid-body".into()));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(HttpError::Io(e.to_string())),
+        }
+    }
+    Ok(body)
+}
+
+fn find_header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
+    match find_header(headers, "content-length") {
+        None => Ok(0),
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length '{v}'"))),
+    }
+}
+
+/// Parse one request. See [`ReadOutcome`] for the idle/EOF contract.
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<ReadOutcome, HttpError> {
+    let deadline = Instant::now() + STALL_DEADLINE;
+    let mut line = String::new();
+    match read_line_retry(r, &mut line, true, deadline)? {
+        LineRead::Line => {}
+        LineRead::Eof => return Ok(ReadOutcome::Eof),
+        LineRead::Idle => return Ok(ReadOutcome::Idle),
+    }
+    let trimmed = line.trim_end_matches(['\r', '\n']);
+    let mut parts = trimmed.splitn(3, ' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("bad request line '{trimmed}'")));
+    }
+    let headers = read_headers(r, deadline)?;
+    if find_header(&headers, "transfer-encoding").is_some() {
+        return Err(HttpError::Malformed("transfer-encoding not supported".into()));
+    }
+    let len = content_length(&headers)?;
+    if len > max_body {
+        return Err(HttpError::BodyTooLarge(len));
+    }
+    let body = read_body(r, len, deadline)?;
+    Ok(ReadOutcome::Request(Request {
+        method,
+        path,
+        version,
+        headers,
+        body,
+    }))
+}
+
+/// Canonical reason phrase for the statuses the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// An outbound response. `Content-Length` and `Connection` are written by
+/// [`Response::write_to`]; other headers accumulate via [`Response::with_header`].
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "application/json".into())],
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    pub fn text(status: u16, body: &str) -> Response {
+        Response {
+            status,
+            headers: vec![("content-type".into(), "text/plain; charset=utf-8".into())],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason(self.status));
+        for (k, v) in &self.headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n", self.body.len()));
+        head.push_str(if keep_alive {
+            "connection: keep-alive\r\n\r\n"
+        } else {
+            "connection: close\r\n\r\n"
+        });
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side (load generator, tests)
+// ---------------------------------------------------------------------------
+
+/// Write one request with a length-delimited body.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\n");
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str(&format!("content-length: {}\r\n\r\n", body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// A parsed response on the client side.
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(&self.headers, name)
+    }
+
+    pub fn body_str(&self) -> &str {
+        std::str::from_utf8(&self.body).unwrap_or("")
+    }
+
+    /// Whether the server will keep the connection open.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .unwrap_or("keep-alive")
+            .eq_ignore_ascii_case("close")
+    }
+}
+
+/// Read one response (status line, headers, length-delimited body) with
+/// the default stall budget.
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<ClientResponse, HttpError> {
+    read_response_within(r, STALL_DEADLINE)
+}
+
+/// [`read_response`] with a caller-supplied stall budget — the retry loop
+/// around short socket timeouts gives up after `stall`, so clients with a
+/// configured per-request timeout are actually bounded by it.
+pub fn read_response_within<R: BufRead>(
+    r: &mut R,
+    stall: Duration,
+) -> Result<ClientResponse, HttpError> {
+    let deadline = Instant::now() + stall;
+    let mut line = String::new();
+    match read_line_retry(r, &mut line, false, deadline)? {
+        LineRead::Line => {}
+        _ => return Err(HttpError::Io("connection closed before response".into())),
+    }
+    let trimmed = line.trim_end_matches(['\r', '\n']);
+    let mut parts = trimmed.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    let status = parts
+        .next()
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| HttpError::Malformed(format!("bad status line '{trimmed}'")))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("bad status line '{trimmed}'")));
+    }
+    let headers = read_headers(r, deadline)?;
+    let len = content_length(&headers)?;
+    let body = read_body(r, len, deadline)?;
+    Ok(ClientResponse {
+        status,
+        headers,
+        body,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<ReadOutcome, HttpError> {
+        let mut c = Cursor::new(raw.as_bytes().to_vec());
+        read_request(&mut c, 1 << 20)
+    }
+
+    fn must_request(raw: &str) -> Request {
+        match parse(raw).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("expected request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = must_request(
+            "POST /v1/infer HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 4\r\n\r\nabcd",
+        );
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert_eq!(req.header("Content-Type"), Some("application/json"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.wants_keep_alive());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_strips_query() {
+        let req = must_request("GET /metrics?verbose=1 HTTP/1.1\r\n\r\n");
+        assert_eq!(req.route_path(), "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn bare_lf_lines_accepted() {
+        let req = must_request("GET /healthz HTTP/1.1\nhost: x\n\n");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let req = must_request("GET / HTTP/1.1\r\nconnection: close\r\n\r\n");
+        assert!(!req.wants_keep_alive());
+        let req = must_request("GET / HTTP/1.0\r\n\r\n");
+        assert!(!req.wants_keep_alive(), "1.0 defaults to close");
+        let req = must_request("GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n");
+        assert!(req.wants_keep_alive());
+    }
+
+    #[test]
+    fn eof_at_boundary_is_clean() {
+        assert!(matches!(parse("").unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn rejects_garbage_and_oversize() {
+        assert!(matches!(
+            parse("NONSENSE\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\ncontent-length: nope\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(
+            parse("GET / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        let mut c = Cursor::new(b"POST / HTTP/1.1\r\ncontent-length: 99\r\n\r\n".to_vec());
+        assert!(matches!(
+            read_request(&mut c, 10),
+            Err(HttpError::BodyTooLarge(99))
+        ));
+    }
+
+    #[test]
+    fn endless_request_line_is_rejected_not_buffered() {
+        // A peer streaming bytes with no newline must hit the line cap,
+        // not grow the buffer indefinitely.
+        let mut raw = b"GET /".to_vec();
+        raw.extend(std::iter::repeat(b'a').take(MAX_HEADER_BYTES * 4));
+        let mut c = Cursor::new(raw);
+        assert!(matches!(
+            read_request(&mut c, 1 << 20),
+            Err(HttpError::Malformed(m)) if m.contains("too long")
+        ));
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc"),
+            Err(HttpError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn response_roundtrips_through_client_parser() {
+        let resp = Response::json(429, &crate::util::json::Json::Null)
+            .with_header("retry-after", "2");
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let mut c = Cursor::new(wire);
+        let parsed = read_response(&mut c).unwrap();
+        assert_eq!(parsed.status, 429);
+        assert_eq!(parsed.header("Retry-After"), Some("2"));
+        assert_eq!(parsed.body_str(), "null");
+        assert!(parsed.keep_alive());
+    }
+
+    #[test]
+    fn response_connection_close_is_signalled() {
+        let mut wire = Vec::new();
+        Response::text(200, "hi").write_to(&mut wire, false).unwrap();
+        let mut c = Cursor::new(wire);
+        let parsed = read_response(&mut c).unwrap();
+        assert!(!parsed.keep_alive());
+        assert_eq!(parsed.body_str(), "hi");
+    }
+
+    #[test]
+    fn request_writer_roundtrips_through_request_parser() {
+        let mut wire = Vec::new();
+        write_request(
+            &mut wire,
+            "POST",
+            "/v1/infer",
+            &[("content-type", "application/json")],
+            b"{\"features\":[1]}",
+        )
+        .unwrap();
+        let mut c = Cursor::new(wire);
+        let req = match read_request(&mut c, 1 << 20).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(req.body, b"{\"features\":[1]}");
+    }
+
+    #[test]
+    fn two_pipelined_requests_parse_sequentially() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\n\r\n";
+        let mut c = Cursor::new(raw.as_bytes().to_vec());
+        let a = match read_request(&mut c, 1 << 20).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        let b = match read_request(&mut c, 1 << 20).unwrap() {
+            ReadOutcome::Request(r) => r,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a.path, "/healthz");
+        assert_eq!(b.path, "/metrics");
+        assert!(matches!(
+            read_request(&mut c, 1 << 20).unwrap(),
+            ReadOutcome::Eof
+        ));
+    }
+}

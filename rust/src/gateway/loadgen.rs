@@ -1,0 +1,419 @@
+//! Closed- and open-loop load generator for the gateway.
+//!
+//! *Closed* mode models a fixed client population: each of `concurrency`
+//! workers keeps exactly one request outstanding on a persistent
+//! keep-alive connection, so offered load adapts to service rate (the
+//! classic closed-loop throughput probe). *Open* mode paces request
+//! starts at `rate / concurrency` per worker; each worker still waits
+//! for its response before the next send, so the achievable offered load
+//! is bounded by `concurrency / latency` — size `concurrency ≳ rps ×
+//! expected latency` (with headroom) to approximate a true open loop and
+//! expose queueing collapse and shed behaviour past saturation.
+//!
+//! The request-size mix cycles through `rows_mix` (rows per request), and
+//! the report carries exact p50/p95/p99 latency over every successful
+//! request plus shed/error tallies and goodput, renderable as text or
+//! JSON.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::http;
+use crate::util::bench::percentile;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// Arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMode {
+    /// One outstanding request per worker (offered load = service rate).
+    Closed,
+    /// Paced arrivals targeting this aggregate rate (requests/second).
+    /// Workers are synchronous, so the rate is only reachable while
+    /// `concurrency / latency` exceeds it; see the module docs.
+    Open { rps: f64 },
+}
+
+/// Load generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Gateway address, e.g. `"127.0.0.1:7878"`.
+    pub addr: String,
+    pub mode: ArrivalMode,
+    /// Worker threads (each with its own keep-alive connection).
+    pub concurrency: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Model input width N (features per row).
+    pub width: usize,
+    /// Rows-per-request mix, cycled per request (e.g. `[1, 1, 8]`).
+    pub rows_mix: Vec<usize>,
+    /// Socket/request timeout.
+    pub timeout: Duration,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7878".into(),
+            mode: ArrivalMode::Closed,
+            concurrency: 8,
+            duration: Duration::from_secs(5),
+            width: 256,
+            rows_mix: vec![1],
+            timeout: Duration::from_secs(5),
+            seed: 0,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.concurrency == 0 {
+            return Err("loadgen concurrency must be >= 1".into());
+        }
+        if self.width == 0 {
+            return Err("loadgen width must be >= 1".into());
+        }
+        if self.rows_mix.is_empty() || self.rows_mix.contains(&0) {
+            return Err("rows mix must be non-empty positive row counts".into());
+        }
+        if let ArrivalMode::Open { rps } = self.mode {
+            if !rps.is_finite() || rps <= 0.0 {
+                return Err("open-loop rate must be a positive number".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate results of one run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests sent (including shed/errored ones).
+    pub sent: u64,
+    /// 200 responses.
+    pub ok: u64,
+    /// 429/503 shed responses.
+    pub shed: u64,
+    /// Transport failures and non-shed error statuses.
+    pub errors: u64,
+    /// Feature rows carried by successful requests.
+    pub rows_ok: u64,
+    /// Wall-clock run time in seconds.
+    pub wall_s: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadReport {
+    /// Request attempts per second — offered load, including attempts
+    /// that never got a response (failed connects, transport errors).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.sent as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Successful requests per second.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.ok as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rows_ok", Json::Num(self.rows_ok as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("goodput_rps", Json::Num(self.goodput_rps())),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p95_ms", Json::Num(self.p95_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("mean_ms", Json::Num(self.mean_ms)),
+            ("max_ms", Json::Num(self.max_ms)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "loadgen: sent {} | ok {} | shed {} | errors {} | rows {}\n\
+             wall {:.2}s  throughput {:.0} req/s  goodput {:.0} req/s\n\
+             latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}\n",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.rows_ok,
+            self.wall_s,
+            self.throughput_rps(),
+            self.goodput_rps(),
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.max_ms,
+        )
+    }
+}
+
+#[derive(Default)]
+struct WorkerStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    errors: u64,
+    rows_ok: u64,
+    latencies_ms: Vec<f64>,
+}
+
+/// Drive the gateway; blocks for `cfg.duration` and returns the report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    cfg.validate()?;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..cfg.concurrency)
+        .map(|wi| {
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name(format!("acdc-loadgen-{wi}"))
+                .spawn(move || worker(&cfg, wi))
+                .map_err(|e| format!("spawn loadgen worker: {e}"))
+        })
+        .collect::<Result<_, String>>()?;
+    let mut stats = WorkerStats::default();
+    for h in handles {
+        let w = h.join().map_err(|_| "loadgen worker panicked".to_string())?;
+        stats.sent += w.sent;
+        stats.ok += w.ok;
+        stats.shed += w.shed;
+        stats.errors += w.errors;
+        stats.rows_ok += w.rows_ok;
+        stats.latencies_ms.extend(w.latencies_ms);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let mut lats = stats.latencies_ms;
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = if lats.is_empty() {
+        0.0
+    } else {
+        lats.iter().sum::<f64>() / lats.len() as f64
+    };
+    // percentile() yields NaN on empty input, which would poison the JSON
+    // report — an all-shed run reports zeros instead.
+    let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
+    Ok(LoadReport {
+        sent: stats.sent,
+        ok: stats.ok,
+        shed: stats.shed,
+        errors: stats.errors,
+        rows_ok: stats.rows_ok,
+        wall_s,
+        p50_ms: pct(50.0),
+        p95_ms: pct(95.0),
+        p99_ms: pct(99.0),
+        mean_ms: mean,
+        max_ms: lats.last().copied().unwrap_or(0.0),
+    })
+}
+
+fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
+    let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(wi as u64 * 7919 + 1));
+    let mut stats = WorkerStats::default();
+    let deadline = Instant::now() + cfg.duration;
+    let interval = match cfg.mode {
+        ArrivalMode::Closed => None,
+        ArrivalMode::Open { rps } => Some(Duration::from_secs_f64(
+            cfg.concurrency as f64 / rps,
+        )),
+    };
+    // Stagger workers across one pacing interval so open-loop arrivals
+    // spread evenly instead of firing in synchronized bursts.
+    let mut next_fire = match interval {
+        Some(iv) => Instant::now() + iv.mul_f64(wi as f64 / cfg.concurrency as f64),
+        None => Instant::now(),
+    };
+    let mut conn: Option<(TcpStream, BufReader<TcpStream>)> = None;
+    let mut mix_at = wi; // stagger the mix cycle across workers
+    while Instant::now() < deadline {
+        if let Some(iv) = interval {
+            let now = Instant::now();
+            if now < next_fire {
+                std::thread::sleep(next_fire - now);
+            }
+            // Schedule the next arrival independently of completion time
+            // (back-to-back catch-up when the previous request overran).
+            next_fire += iv;
+        }
+        let rows = cfg.rows_mix[mix_at % cfg.rows_mix.len()];
+        mix_at += 1;
+        let body = request_body(rows, cfg.width, &mut rng);
+        if conn.is_none() {
+            conn = connect(&cfg.addr, cfg.timeout);
+            if conn.is_none() {
+                stats.sent += 1;
+                stats.errors += 1;
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        }
+        let (stream, reader) = conn.as_mut().unwrap();
+        stats.sent += 1;
+        let t = Instant::now();
+        let wrote = http::write_request(
+            stream,
+            "POST",
+            "/v1/infer",
+            &[("content-type", "application/json")],
+            body.as_bytes(),
+        );
+        if wrote.is_err() {
+            stats.errors += 1;
+            conn = None;
+            continue;
+        }
+        match http::read_response_within(reader, cfg.timeout) {
+            Ok(resp) => {
+                match resp.status {
+                    200 => {
+                        stats.ok += 1;
+                        stats.rows_ok += rows as u64;
+                        stats.latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    }
+                    429 | 503 => stats.shed += 1,
+                    _ => stats.errors += 1,
+                }
+                if !resp.keep_alive() {
+                    conn = None;
+                }
+            }
+            Err(_) => {
+                stats.errors += 1;
+                conn = None;
+            }
+        }
+    }
+    stats
+}
+
+fn connect(addr: &str, timeout: Duration) -> Option<(TcpStream, BufReader<TcpStream>)> {
+    // connect_timeout so a blackholed/saturated gateway cannot park a
+    // worker in the OS connect far past the configured run duration.
+    let resolved = addr.to_socket_addrs().ok()?.next()?;
+    let stream = TcpStream::connect_timeout(&resolved, timeout).ok()?;
+    stream.set_read_timeout(Some(timeout)).ok()?;
+    stream.set_nodelay(true).ok()?;
+    let reader = BufReader::new(stream.try_clone().ok()?);
+    Some((stream, reader))
+}
+
+/// JSON body for one request: `features` for a single row, `rows` batch
+/// otherwise.
+fn request_body(rows: usize, width: usize, rng: &mut Pcg32) -> String {
+    let row_json = |rng: &mut Pcg32| {
+        Json::Arr(
+            rng.normal_vec(width, 0.0, 1.0)
+                .into_iter()
+                .map(|v| Json::Num(v as f64))
+                .collect(),
+        )
+    };
+    let v = if rows == 1 {
+        obj(vec![("features", row_json(rng))])
+    } else {
+        obj(vec![(
+            "rows",
+            Json::Arr((0..rows).map(|_| row_json(rng)).collect()),
+        )])
+    };
+    v.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        assert!(LoadgenConfig::default().validate().is_ok());
+        let bad = LoadgenConfig {
+            concurrency: 0,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = LoadgenConfig {
+            rows_mix: vec![1, 0],
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let bad = LoadgenConfig {
+            mode: ArrivalMode::Open { rps: 0.0 },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn request_bodies_match_the_wire_contract() {
+        let mut rng = Pcg32::seeded(1);
+        let single = Json::parse(&request_body(1, 4, &mut rng)).unwrap();
+        assert_eq!(single.get("features").unwrap().as_arr().unwrap().len(), 4);
+        let batch = Json::parse(&request_body(3, 4, &mut rng)).unwrap();
+        let rows = batch.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn report_rates_and_json() {
+        let r = LoadReport {
+            sent: 100,
+            ok: 80,
+            shed: 15,
+            errors: 5,
+            rows_ok: 80,
+            wall_s: 2.0,
+            p50_ms: 1.0,
+            p95_ms: 2.0,
+            p99_ms: 3.0,
+            mean_ms: 1.2,
+            max_ms: 4.0,
+        };
+        assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
+        assert!((r.goodput_rps() - 40.0).abs() < 1e-9);
+        let j = r.to_json();
+        assert_eq!(j.get("shed").unwrap().as_f64(), Some(15.0));
+        assert_eq!(j.get("p99_ms").unwrap().as_f64(), Some(3.0));
+        assert!(r.render().contains("goodput 40"));
+    }
+
+    #[test]
+    fn run_against_nothing_reports_errors_not_panics() {
+        // Port 9 (discard) on localhost is almost certainly closed; every
+        // request must surface as a transport error.
+        let cfg = LoadgenConfig {
+            addr: "127.0.0.1:9".into(),
+            concurrency: 2,
+            duration: Duration::from_millis(100),
+            width: 4,
+            timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.ok, 0);
+        assert!(report.errors > 0);
+    }
+}

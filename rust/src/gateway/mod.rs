@@ -1,0 +1,35 @@
+//! Network serving gateway: TCP/HTTP front-end, admission control, and a
+//! closed-loop load generator over the batching coordinator.
+//!
+//! This is the layer that puts the ACDC serving stack "on the wire" — the
+//! paper's O(N log N) layer only pays off at scale if the substrate around
+//! it can absorb and shape real concurrent traffic:
+//!
+//! ```text
+//!   clients ──TCP──▶ accept loop ──▶ conn threads (HTTP/1.1 keep-alive)
+//!                                        │
+//!                                 admission control
+//!                            (drain → in-flight cap → token bucket)
+//!                                        │ submit
+//!                                  Coordinator (bounded queue,
+//!                                  bucketed batcher, worker pool)
+//!                                        │
+//!                                  SELL executors (PJRT or native)
+//! ```
+//!
+//! * [`http`] — dependency-free HTTP/1.1 framing (server + client side);
+//! * [`admission`] — token bucket, in-flight cap, drain gate, shed
+//!   accounting;
+//! * [`server`] — [`Gateway`]: listener, routing, graceful drain;
+//! * [`loadgen`] — closed/open-loop traffic with a p50/p95/p99 report.
+//!
+//! Every shed path is observable: `429`/`503` responses carry
+//! `Retry-After`, and `GET /metrics` exposes per-class shed counters next
+//! to the coordinator's own instruments.
+
+pub mod admission;
+pub mod http;
+pub mod loadgen;
+pub mod server;
+
+pub use server::Gateway;

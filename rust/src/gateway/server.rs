@@ -1,0 +1,426 @@
+//! The network gateway: a TCP/HTTP front-end over the batching coordinator.
+//!
+//! Thread-per-connection accept loop with keep-alive; every request passes
+//! admission control ([`super::admission`]) before touching the
+//! coordinator. Endpoints:
+//!
+//! * `POST /v1/infer` — JSON body `{"features": [f32; N]}` for one row or
+//!   `{"rows": [[f32; N], ...]}` for a batch; replies with outputs plus
+//!   queue/execute timings and the batch buckets used. Sheds map to
+//!   429/503 with `Retry-After`, coordinator timeouts to 504.
+//! * `GET /healthz` — liveness + drain state + in-flight gauge.
+//! * `GET /metrics` — Prometheus text from [`crate::metrics::Registry`].
+//!
+//! Shutdown is a graceful drain: stop accepting, refuse new work at
+//! admission, let in-flight requests finish and connections close, then
+//! tear the coordinator down (which itself flushes its queues).
+
+use std::io::{BufReader, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::admission::{Admission, AdmitError};
+use super::http::{self, HttpError, ReadOutcome, Request, Response};
+use crate::config::GatewayConfig;
+use crate::coordinator::SubmitError;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::serve::Server;
+use crate::util::json::{obj, Json};
+
+/// Poll interval for parked keep-alive connections (also bounds how fast
+/// idle connections notice a drain).
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Running gateway handle. Dropping it (or calling [`Gateway::shutdown`])
+/// drains gracefully.
+pub struct Gateway {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+struct Shared {
+    server: Server,
+    cfg: GatewayConfig,
+    admission: Arc<Admission>,
+    metrics: Arc<Registry>,
+    stop: AtomicBool,
+    open_conns: Arc<Gauge>,
+    conns_total: Arc<Counter>,
+    conns_rejected: Arc<Counter>,
+    requests: Arc<Counter>,
+    responses_ok: Arc<Counter>,
+    http_errors: Arc<Counter>,
+    timeouts: Arc<Counter>,
+    request_ns: Arc<Histogram>,
+}
+
+impl Gateway {
+    /// Bind `cfg.addr` (port 0 for ephemeral) and start serving `server`.
+    pub fn start(server: Server, cfg: GatewayConfig) -> Result<Gateway, String> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| format!("gateway bind {}: {e}", cfg.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("gateway local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("gateway set_nonblocking: {e}"))?;
+        let metrics = Arc::clone(server.metrics());
+        let admission = Arc::new(Admission::new(&cfg, &metrics));
+        let shared = Arc::new(Shared {
+            server,
+            cfg,
+            admission,
+            open_conns: metrics.gauge("gateway.open_connections"),
+            conns_total: metrics.counter("gateway.connections"),
+            conns_rejected: metrics.counter("gateway.connections_rejected"),
+            requests: metrics.counter("gateway.requests"),
+            responses_ok: metrics.counter("gateway.responses_ok"),
+            http_errors: metrics.counter("gateway.http_errors"),
+            timeouts: metrics.counter("gateway.timeouts"),
+            request_ns: metrics.histogram("gateway.request_ns"),
+            metrics,
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("acdc-gw-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared))
+            .map_err(|e| format!("spawn accept loop: {e}"))?;
+        Ok(Gateway {
+            shared,
+            addr,
+            accept: Some(accept),
+        })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.shared.metrics
+    }
+
+    pub fn metrics_report(&self) -> String {
+        self.shared.metrics.report()
+    }
+
+    /// Graceful drain, then coordinator teardown. Equivalent to `drop`.
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shared.admission.begin_drain();
+        self.shared.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Connection threads finish their in-flight request, write the
+        // response and exit (they observe the drain within IDLE_POLL).
+        let deadline = Instant::now() + Duration::from_millis(self.shared.cfg.drain_timeout_ms);
+        while self.shared.open_conns.get() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The coordinator itself drains in `Coordinator::drop` once the
+        // last `Shared` clone (ours, or a straggler past the deadline)
+        // goes away — in-flight work is answered either way.
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conns_total.inc();
+                if shared.open_conns.inc() > shared.cfg.max_open_conns as u64 {
+                    shared.open_conns.dec();
+                    shared.conns_rejected.inc();
+                    reject_connection(stream, shared.cfg.retry_after_s);
+                    continue;
+                }
+                let conn_shared = Arc::clone(&shared);
+                let spawned = std::thread::Builder::new()
+                    .name("acdc-gw-conn".into())
+                    .spawn(move || handle_connection(conn_shared, stream));
+                if spawned.is_err() {
+                    shared.open_conns.dec();
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Over the connection cap: answer 503 on the raw socket and close.
+fn reject_connection(mut stream: TcpStream, retry_after_s: u64) {
+    let _ = stream.set_nonblocking(false);
+    let resp = Response::json(503, &err_json("too many connections"))
+        .with_header("retry-after", &retry_after_s.to_string());
+    let _ = resp.write_to(&mut stream, false);
+}
+
+/// Releases the accept loop's `open_conns` slot even if the connection
+/// thread unwinds (a leaked slot would eventually wedge admission and
+/// drain behind `max_open_conns`).
+struct ConnSlot(Arc<Gauge>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.dec();
+    }
+}
+
+fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
+    let _slot = ConnSlot(Arc::clone(&shared.open_conns));
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = stream;
+    loop {
+        match http::read_request(&mut reader, shared.cfg.max_body_bytes) {
+            Ok(ReadOutcome::Idle) => {
+                if shared.stop.load(Ordering::Acquire) || shared.admission.is_draining() {
+                    break;
+                }
+            }
+            Ok(ReadOutcome::Eof) => break,
+            Ok(ReadOutcome::Request(req)) => {
+                let t0 = Instant::now();
+                shared.requests.inc();
+                let resp = route(&shared, &req);
+                shared.request_ns.record(t0.elapsed());
+                if resp.status == 200 {
+                    shared.responses_ok.inc();
+                }
+                let keep = req.wants_keep_alive()
+                    && !shared.stop.load(Ordering::Acquire)
+                    && !shared.admission.is_draining();
+                if resp.write_to(&mut writer, keep).is_err() || !keep {
+                    break;
+                }
+            }
+            Err(HttpError::BodyTooLarge(n)) => {
+                shared.http_errors.inc();
+                let msg = format!("body too large ({n} > {} bytes)", shared.cfg.max_body_bytes);
+                let _ = Response::json(413, &err_json(&msg)).write_to(&mut writer, false);
+                break;
+            }
+            Err(HttpError::Malformed(m)) => {
+                shared.http_errors.inc();
+                let _ = Response::json(400, &err_json(&m)).write_to(&mut writer, false);
+                break;
+            }
+            Err(HttpError::Io(_)) => break,
+        }
+    }
+}
+
+fn route(shared: &Arc<Shared>, req: &Request) -> Response {
+    match (req.method.as_str(), req.route_path()) {
+        ("GET", "/healthz") => healthz(shared),
+        ("GET", "/metrics") => Response::text(200, &shared.metrics.prometheus()),
+        ("POST", "/v1/infer") => infer(shared, req),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/infer") => {
+            Response::json(405, &err_json("method not allowed"))
+        }
+        _ => Response::json(404, &err_json("not found")),
+    }
+}
+
+fn healthz(shared: &Arc<Shared>) -> Response {
+    let status = if shared.admission.is_draining() {
+        "draining"
+    } else {
+        "ok"
+    };
+    Response::json(
+        200,
+        &obj(vec![
+            ("status", Json::Str(status.to_string())),
+            ("width", Json::Num(shared.server.width() as f64)),
+            ("inflight", Json::Num(shared.admission.inflight() as f64)),
+            (
+                "open_connections",
+                Json::Num(shared.open_conns.get() as f64),
+            ),
+        ]),
+    )
+}
+
+fn infer(shared: &Arc<Shared>, req: &Request) -> Response {
+    // The permit holds an in-flight slot for the whole submit → response
+    // window; dropping it on any exit path releases the slot.
+    let _permit = match shared.admission.try_admit() {
+        Ok(p) => p,
+        Err(e) => return shed_response(shared, e),
+    };
+    let body = match std::str::from_utf8(&req.body) {
+        Ok(s) => s,
+        Err(_) => return Response::json(400, &err_json("body is not valid utf-8")),
+    };
+    let parsed = match Json::parse(body) {
+        Ok(v) => v,
+        Err(e) => return Response::json(400, &err_json(&format!("bad json: {e}"))),
+    };
+    let rows = match extract_rows(&parsed, shared.server.width(), shared.cfg.max_rows_per_request)
+    {
+        Ok(rows) => rows,
+        Err(msg) => return Response::json(400, &err_json(&msg)),
+    };
+    let mut rxs = Vec::with_capacity(rows.len());
+    for row in rows {
+        match shared.server.submit(row) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::QueueFull) => {
+                shared.admission.note_queue_full();
+                return shed_retry_after(shared, 503, "coordinator queue full");
+            }
+            Err(SubmitError::Closed) => {
+                return shed_retry_after(shared, 503, "coordinator shutting down");
+            }
+        }
+    }
+    // Rows submitted before a mid-batch shed are still answered by the
+    // coordinator; their receivers simply drop here.
+    let deadline = Instant::now() + Duration::from_millis(shared.cfg.request_timeout_ms);
+    let mut outputs = Vec::with_capacity(rxs.len());
+    let mut batch_sizes = Vec::with_capacity(rxs.len());
+    let mut queue_us = 0u64;
+    let mut execute_us = 0u64;
+    for rx in rxs {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(remaining) {
+            Ok(resp) => {
+                queue_us = queue_us.max(resp.queue_us);
+                execute_us = execute_us.max(resp.execute_us);
+                batch_sizes.push(Json::Num(resp.batch_size as f64));
+                match resp.output {
+                    Ok(row) => outputs.push(Json::Arr(
+                        row.into_iter().map(|v| Json::Num(v as f64)).collect(),
+                    )),
+                    Err(e) => {
+                        return Response::json(500, &err_json(&format!("executor: {e}")))
+                    }
+                }
+            }
+            Err(_) => {
+                shared.timeouts.inc();
+                return Response::json(504, &err_json("inference timed out"));
+            }
+        }
+    }
+    let mut pairs = vec![
+        ("rows", Json::Num(outputs.len() as f64)),
+        ("queue_us", Json::Num(queue_us as f64)),
+        ("execute_us", Json::Num(execute_us as f64)),
+        ("batch_sizes", Json::Arr(batch_sizes)),
+    ];
+    if outputs.len() == 1 {
+        pairs.push(("output", outputs[0].clone()));
+    }
+    pairs.push(("outputs", Json::Arr(outputs)));
+    Response::json(200, &obj(pairs))
+}
+
+/// Feature rows from a request body: `{"features": [...]}` (one row) or
+/// `{"rows": [[...], ...]}` (a batch).
+fn extract_rows(v: &Json, width: usize, max_rows: usize) -> Result<Vec<Vec<f32>>, String> {
+    let parse_row = |arr: &[Json]| -> Result<Vec<f32>, String> {
+        if arr.len() != width {
+            return Err(format!(
+                "row has {} features, model width is {width}",
+                arr.len()
+            ));
+        }
+        arr.iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as f32)
+                    .filter(|f| f.is_finite())
+                    .ok_or_else(|| "features must be finite numbers".to_string())
+            })
+            .collect()
+    };
+    if let Some(features) = v.get("features") {
+        let arr = features.as_arr().ok_or("'features' must be an array")?;
+        return Ok(vec![parse_row(arr)?]);
+    }
+    if let Some(rows) = v.get("rows") {
+        let rows = rows.as_arr().ok_or("'rows' must be an array of arrays")?;
+        if rows.is_empty() {
+            return Err("'rows' must not be empty".into());
+        }
+        if rows.len() > max_rows {
+            return Err(format!("too many rows ({} > {max_rows})", rows.len()));
+        }
+        return rows
+            .iter()
+            .map(|row| parse_row(row.as_arr().ok_or("'rows' must be an array of arrays")?))
+            .collect();
+    }
+    Err("body must carry 'features' (one row) or 'rows' (a batch)".into())
+}
+
+fn shed_response(shared: &Arc<Shared>, e: AdmitError) -> Response {
+    shed_retry_after(shared, e.status(), e.as_str())
+}
+
+fn shed_retry_after(shared: &Arc<Shared>, status: u16, msg: &str) -> Response {
+    Response::json(status, &err_json(msg))
+        .with_header("retry-after", &shared.cfg.retry_after_s.to_string())
+}
+
+fn err_json(msg: &str) -> Json {
+    obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_rows_single_and_batch() {
+        let v = Json::parse(r#"{"features": [1.0, 2.0]}"#).unwrap();
+        assert_eq!(extract_rows(&v, 2, 8).unwrap(), vec![vec![1.0, 2.0]]);
+        let v = Json::parse(r#"{"rows": [[1, 2], [3, 4], [5, 6]]}"#).unwrap();
+        assert_eq!(
+            extract_rows(&v, 2, 8).unwrap(),
+            vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]
+        );
+    }
+
+    #[test]
+    fn extract_rows_validates_width_count_and_values() {
+        let v = Json::parse(r#"{"features": [1.0]}"#).unwrap();
+        assert!(extract_rows(&v, 2, 8).unwrap_err().contains("width"));
+        let v = Json::parse(r#"{"rows": []}"#).unwrap();
+        assert!(extract_rows(&v, 2, 8).is_err());
+        let v = Json::parse(r#"{"rows": [[1,2],[3,4],[5,6]]}"#).unwrap();
+        assert!(extract_rows(&v, 2, 2).unwrap_err().contains("too many"));
+        let v = Json::parse(r#"{"features": [1.0, "x"]}"#).unwrap();
+        assert!(extract_rows(&v, 2, 8).is_err());
+        let v = Json::parse(r#"{"nope": 1}"#).unwrap();
+        assert!(extract_rows(&v, 2, 8).is_err());
+    }
+}

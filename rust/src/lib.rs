@@ -6,11 +6,26 @@
 //! * **L1** (`python/compile/kernels/`): fused Pallas ACDC kernel;
 //! * **L2** (`python/compile/model.py`): jax models lowered AOT to HLO text;
 //! * **L3** (this crate): the deployment substrate — PJRT runtime, serving
-//!   coordinator with dynamic batching, training orchestrator, reference
-//!   SELL implementations and the paper's experiment harnesses.
+//!   coordinator with dynamic batching, the network gateway (HTTP front-end
+//!   with admission control and a load generator, [`gateway`]), training
+//!   orchestrator, reference SELL implementations and the paper's
+//!   experiment harnesses.
+//!
+//! The L3 request path, outside-in:
+//!
+//! ```text
+//!   TCP clients → gateway (HTTP/1.1, token bucket, in-flight caps,
+//!                 load shedding with Retry-After, graceful drain)
+//!              → coordinator (bounded queue → bucketed dynamic batcher
+//!                 → worker pool, backpressure end to end)
+//!              → executors (PJRT artifacts with the `pjrt` feature,
+//!                 pure-Rust SELL reference otherwise)
+//! ```
 //!
 //! Python never runs on the request path: `make artifacts` lowers once,
-//! and this crate loads/executes the artifacts via the PJRT C API.
+//! and this crate loads/executes the artifacts via the PJRT C API. The
+//! default build has no PJRT dependency at all — `--features pjrt` swaps
+//! the runtime stubs for the real bindings.
 
 pub mod checkpoint;
 pub mod config;
@@ -18,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod dct;
 pub mod experiments;
+pub mod gateway;
 pub mod metrics;
 pub mod perfmodel;
 pub mod runtime;

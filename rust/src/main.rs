@@ -11,12 +11,16 @@
 //! acdc table1 [--steps N]           Table-1 measured MiniCaffeNet leg (E3)
 //! acdc train-cnn [--config f.toml]  E6 end-to-end CNN training
 //! acdc serve  [--config f.toml]     serving demo over the coordinator (E7)
+//! acdc gateway [--addr host:port]   HTTP serving gateway (E8)
+//! acdc loadgen [--addr host:port]   closed/open-loop load generator (E8)
 //! ```
 
 use acdc::config::{Config, ServeConfig, TrainConfig};
 use acdc::data::regression::RegressionTask;
 use acdc::data::synthimg::ImageCorpus;
 use acdc::experiments::{fig2, fig3, table1};
+use acdc::gateway::loadgen::{ArrivalMode, LoadgenConfig};
+use acdc::gateway::Gateway;
 use acdc::runtime::Engine;
 use acdc::serve::{ServeParams, Server};
 use acdc::train::{CnnTrainer, CnnVariant, StepDecay};
@@ -50,6 +54,8 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "table1" => cmd_table1(rest),
         "train-cnn" => cmd_train_cnn(rest),
         "serve" => cmd_serve(rest),
+        "gateway" => cmd_gateway(rest),
+        "loadgen" => cmd_loadgen(rest),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -68,6 +74,8 @@ subcommands:
   table1      Table-1 measured MiniCaffeNet leg
   train-cnn   end-to-end CNN training (E6)
   serve       serving demo over the dynamic-batching coordinator
+  gateway     HTTP serving gateway (POST /v1/infer, /healthz, /metrics)
+  loadgen     closed/open-loop load generator against a running gateway
 run `acdc <subcommand> --help` for options";
 
 fn common_opts() -> Vec<acdc::util::cli::OptSpec> {
@@ -265,5 +273,98 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
         server.metrics_report()
     );
     server.shutdown();
+    Ok(())
+}
+
+fn cmd_gateway(rest: &[String]) -> Result<(), String> {
+    let mut opts = common_opts();
+    opts.push(opt("config", "TOML config file (with a [gateway] section)", None));
+    opts.push(opt("addr", "listen address (overrides config)", None));
+    opts.push(opt("n", "demo model width", Some("256")));
+    opts.push(opt("k", "demo cascade depth", Some("12")));
+    opts.push(opt("duration-s", "serve N seconds then drain (0 = forever)", Some("0")));
+    opts.push(flag("native", "use the pure-rust executor instead of PJRT"));
+    let args = Args::parse_from(rest, opts)?;
+    let mut sc = match args.get("config") {
+        Some(path) => ServeConfig::from_config(&Config::from_file(Path::new(path))?)?,
+        None => ServeConfig {
+            artifacts_dir: args.get("artifacts").unwrap().to_string(),
+            ..Default::default()
+        },
+    };
+    if let Some(addr) = args.get("addr") {
+        sc.gateway.addr = addr.to_string();
+    }
+    let n = args.get_usize("n")?.unwrap();
+    let k = args.get_usize("k")?.unwrap();
+    let server = if args.flag("native") {
+        let mut rng = acdc::util::rng::Pcg32::seeded(1);
+        Server::start_native(
+            &sc,
+            acdc::sell::acdc::AcdcCascade::nonlinear(
+                n,
+                k,
+                acdc::sell::init::DiagInit::CAFFENET,
+                &mut rng,
+            ),
+        )
+    } else {
+        Server::start_pjrt(&sc, ServeParams::random(n, k, 10, 1), n)?
+    };
+    let gateway = Gateway::start(server, sc.gateway.clone())?;
+    println!("gateway listening on http://{}", gateway.local_addr());
+    println!("  POST /v1/infer    {{\"features\": [f32; {n}]}} or {{\"rows\": [[...], ...]}}");
+    println!("  GET  /healthz     liveness + drain state");
+    println!("  GET  /metrics     Prometheus text exposition");
+    let duration_s = args.get_usize("duration-s")?.unwrap();
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_s as u64));
+    println!("draining...");
+    gateway.shutdown();
+    println!("gateway stopped");
+    Ok(())
+}
+
+fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt("addr", "gateway address", Some("127.0.0.1:7878")),
+        opt("mode", "arrival process: closed | open", Some("closed")),
+        opt("rps", "aggregate request rate for open mode", Some("1000")),
+        opt("concurrency", "worker connections", Some("8")),
+        opt("duration-s", "run length in seconds", Some("5")),
+        opt("width", "model width N (features per row)", Some("256")),
+        opt("rows", "rows-per-request mix, e.g. 1,1,8", Some("1")),
+        opt("timeout-ms", "per-request timeout", Some("5000")),
+        opt("seed", "rng seed", Some("0")),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let mode = match args.get("mode").unwrap() {
+        "closed" => ArrivalMode::Closed,
+        "open" => ArrivalMode::Open {
+            rps: args.get_f64("rps")?.unwrap(),
+        },
+        other => return Err(format!("unknown mode '{other}' (closed | open)")),
+    };
+    let cfg = LoadgenConfig {
+        addr: args.get("addr").unwrap().to_string(),
+        mode,
+        concurrency: args.get_usize("concurrency")?.unwrap(),
+        duration: Duration::from_secs(args.get_usize("duration-s")?.unwrap() as u64),
+        width: args.get_usize("width")?.unwrap(),
+        rows_mix: args.get_usize_list("rows")?.unwrap(),
+        timeout: Duration::from_millis(args.get_usize("timeout-ms")?.unwrap() as u64),
+        seed: args.get_usize("seed")?.unwrap() as u64,
+    };
+    println!(
+        "loadgen: {:?} × {} workers for {:?} against {}",
+        cfg.mode, cfg.concurrency, cfg.duration, cfg.addr
+    );
+    let report = acdc::gateway::loadgen::run(&cfg)?;
+    print!("{}", report.render());
+    println!("{}", report.to_json().to_pretty());
     Ok(())
 }

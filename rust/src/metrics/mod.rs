@@ -29,7 +29,9 @@ impl Counter {
     }
 }
 
-/// Last-value gauge.
+/// Last-value gauge. Besides `set`, supports atomic inc/dec so callers
+/// can use it as a live occupancy meter (in-flight requests, open
+/// connections) whose reading doubles as an admission-control input.
 #[derive(Debug, Default)]
 pub struct Gauge {
     value: AtomicU64,
@@ -42,6 +44,28 @@ impl Gauge {
 
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
+    }
+
+    /// Atomically increment; returns the new value.
+    pub fn inc(&self) -> u64 {
+        self.value.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Atomically decrement (saturating at 0); returns the new value.
+    pub fn dec(&self) -> u64 {
+        let mut cur = self.value.load(Ordering::Acquire);
+        loop {
+            let next = cur.saturating_sub(1);
+            match self.value.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return next,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 }
 
@@ -100,6 +124,10 @@ impl Histogram {
 
     pub fn max_ns(&self) -> u64 {
         self.max_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
     }
 
     /// Approximate percentile (upper bucket bound at the target rank).
@@ -163,6 +191,51 @@ impl Registry {
         )
     }
 
+    /// Prometheus text exposition (served by the gateway's `GET /metrics`).
+    ///
+    /// Counters and gauges render as `acdc_<name> <value>`; histograms as
+    /// summaries with `quantile` labels plus `_sum` and `_count` series.
+    /// Every histogram in this registry records nanoseconds and is named
+    /// `*_ns`, so quantiles and `_sum` are both emitted in nanoseconds to
+    /// keep the series self-consistent. Names are sanitized to `[a-z0-9_]`
+    /// so `worker.execute_ns` becomes `acdc_worker_execute_ns`.
+    pub fn prometheus(&self) -> String {
+        fn sanitize(name: &str) -> String {
+            let mut out = String::with_capacity(name.len() + 5);
+            out.push_str("acdc_");
+            for c in name.chars() {
+                if c.is_ascii_alphanumeric() {
+                    out.push(c.to_ascii_lowercase());
+                } else {
+                    out.push('_');
+                }
+            }
+            out
+        }
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} summary\n"));
+            for (q, pct) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                out.push_str(&format!(
+                    "{n}{{quantile=\"{q}\"}} {}\n",
+                    h.percentile_ns(pct)
+                ));
+            }
+            out.push_str(&format!("{n}_sum {}\n", h.sum_ns()));
+            out.push_str(&format!("{n}_count {}\n", h.count()));
+        }
+        out
+    }
+
     /// Multi-line `name value` report (sorted, stable).
     pub fn report(&self) -> String {
         let mut out = String::new();
@@ -204,6 +277,50 @@ mod tests {
         g.set(10);
         g.set(3);
         assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn gauge_inc_dec_saturating() {
+        let g = Gauge::default();
+        assert_eq!(g.inc(), 1);
+        assert_eq!(g.inc(), 2);
+        assert_eq!(g.dec(), 1);
+        assert_eq!(g.dec(), 0);
+        assert_eq!(g.dec(), 0, "dec must saturate at zero");
+    }
+
+    #[test]
+    fn gauge_inc_dec_balanced_across_threads() {
+        let g = Arc::new(Gauge::default());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    g.inc();
+                    g.dec();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let r = Registry::new();
+        r.counter("gateway.admitted").add(3);
+        r.gauge("gateway.inflight").set(2);
+        r.histogram("gateway.request_ns").record(Duration::from_micros(100));
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE acdc_gateway_admitted counter"), "{text}");
+        assert!(text.contains("acdc_gateway_admitted 3"), "{text}");
+        assert!(text.contains("acdc_gateway_inflight 2"), "{text}");
+        assert!(text.contains("acdc_gateway_request_ns{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("acdc_gateway_request_ns_count 1"), "{text}");
+        assert!(text.contains("acdc_gateway_request_ns_sum"), "{text}");
     }
 
     #[test]

@@ -9,8 +9,16 @@
 //! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The whole PJRT surface is gated behind the `pjrt` cargo feature. The
+//! default build substitutes [`stub`] for the `xla` crate (the bindings are
+//! not in the offline registry), so `Engine::open` fails cleanly with a
+//! "built without pjrt" error and every caller falls back to the native
+//! executors — the crate stays pure-Rust and green without artifacts.
 
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 pub mod values;
 
 use std::collections::HashMap;
@@ -18,6 +26,8 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use manifest::{ArtifactMeta, Manifest};
+#[cfg(not(feature = "pjrt"))]
+use self::stub as xla;
 use values::HostValue;
 
 /// PJRT engine: client + manifest + compiled-executable cache.

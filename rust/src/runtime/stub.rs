@@ -1,0 +1,145 @@
+//! Inert stand-ins for the `xla` PJRT bindings (default, non-`pjrt` build).
+//!
+//! The offline registry does not carry the `xla` crate, so the default
+//! build replaces it with this module (`use crate::runtime::stub as xla`).
+//! Every constructor that would touch PJRT returns [`Error`] instead, which
+//! surfaces through `Engine::open` as a clean "built without pjrt" message;
+//! callers already treat that the same as "artifacts not present" and fall
+//! back to the native executors. The method signatures mirror the subset of
+//! the real crate the runtime uses, so enabling the `pjrt` feature swaps the
+//! real crate back in with no call-site changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error produced by every stubbed PJRT entry point.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn disabled() -> Error {
+        Error("acdc was built without the `pjrt` feature (PJRT execution disabled)".to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types the runtime exchanges with executables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+/// Stand-in for `xla::PjRtClient`; construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::disabled())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::disabled())
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(Error::disabled())
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`; unreachable in practice
+/// because no client can be constructed to compile one.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::disabled())
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::disabled())
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal, Error> {
+        Err(Error::disabled())
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::disabled())
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::disabled())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_reports_disabled_feature() {
+        let err = match PjRtClient::cpu() {
+            Ok(_) => panic!("stub client must not construct"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn literal_entry_points_all_fail_closed() {
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let bad = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4]);
+        assert!(bad.is_err());
+        let lit = Literal;
+        assert_eq!(lit.element_count(), 0);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

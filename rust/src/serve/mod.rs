@@ -15,6 +15,8 @@ use crate::config::ServeConfig;
 use crate::coordinator::worker::{BatchExecutor, ExecutorFactory};
 use crate::coordinator::{Coordinator, SubmitError};
 use crate::metrics::Registry;
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::stub as xla;
 use crate::runtime::values::HostValue;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
@@ -195,17 +197,28 @@ impl Server {
     /// Start with native (pure-rust reference) workers — no artifacts
     /// needed; used by tests and the `--native` CLI mode.
     pub fn start_native(cfg: &ServeConfig, cascade: crate::sell::acdc::AcdcCascade) -> Server {
-        let metrics = Arc::new(Registry::new());
         let n = cascade.n();
         let factory: ExecutorFactory = Arc::new(move || {
             Ok(Box::new(crate::coordinator::worker::NativeCascadeExecutor {
                 cascade: cascade.clone(),
             }) as Box<dyn BatchExecutor>)
         });
+        Server::start_custom(cfg, n, factory)
+    }
+
+    /// Start over an arbitrary executor factory (custom backends and tests
+    /// that need to control execution latency, e.g. gateway saturation).
+    pub fn start_custom(cfg: &ServeConfig, width: usize, factory: ExecutorFactory) -> Server {
+        let metrics = Arc::new(Registry::new());
         Server {
-            coordinator: Coordinator::start(cfg, n, factory, Arc::clone(&metrics)),
+            coordinator: Coordinator::start(cfg, width, factory, Arc::clone(&metrics)),
             metrics,
         }
+    }
+
+    /// Model input width N (feature count per request row).
+    pub fn width(&self) -> usize {
+        self.coordinator.width()
     }
 
     pub fn infer(&self, features: Vec<f32>, timeout: Duration) -> Result<Vec<f32>, String> {

@@ -88,13 +88,6 @@ impl Json {
         Ok(v)
     }
 
-    /// Serialize compactly.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     /// Serialize with 2-space indentation.
     pub fn to_pretty(&self) -> String {
         let mut out = String::new();
@@ -168,8 +161,21 @@ impl Json {
     }
 }
 
+/// Compact serialization (`Json::to_string()` via the `ToString` blanket).
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
 fn write_num(n: f64, out: &mut String) {
-    if n.fract() == 0.0 && n.abs() < 1e15 {
+    if !n.is_finite() {
+        // JSON has no NaN/Infinity; emit null (JSON.stringify behaviour)
+        // so serialized documents always reparse.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
         out.push_str(&format!("{}", n as i64));
     } else {
         out.push_str(&format!("{n}"));
@@ -473,6 +479,14 @@ mod tests {
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        let arr = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NEG_INFINITY)]);
+        assert_eq!(Json::parse(&arr.to_string()).unwrap(), Json::parse("[1,null]").unwrap());
     }
 
     #[test]

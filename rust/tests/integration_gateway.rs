@@ -1,0 +1,385 @@
+//! Integration: the network gateway end-to-end over ephemeral ports.
+//!
+//! Covers the acceptance path for the serving gateway: concurrent
+//! `POST /v1/infer` traffic against a native-executor server, the load
+//! generator's latency/shed report under saturation, and the
+//! queue-full → 503 → drain contract.
+
+use acdc::config::{GatewayConfig, ServeConfig};
+use acdc::coordinator::worker::{BatchExecutor, ExecutorFactory};
+use acdc::gateway::http;
+use acdc::gateway::loadgen::{ArrivalMode, LoadgenConfig};
+use acdc::gateway::Gateway;
+use acdc::sell::acdc::AcdcCascade;
+use acdc::sell::init::DiagInit;
+use acdc::serve::Server;
+use acdc::tensor::Tensor;
+use acdc::util::json::Json;
+use acdc::util::rng::Pcg32;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One HTTP exchange on a fresh connection.
+fn one_shot(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        body,
+    )
+    .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+fn infer_body(row: &[f32]) -> Vec<u8> {
+    let features = Json::Arr(row.iter().map(|v| Json::Num(*v as f64)).collect());
+    acdc::util::json::obj(vec![("features", features)])
+        .to_string()
+        .into_bytes()
+}
+
+#[test]
+fn gateway_serves_concurrent_infer_traffic_end_to_end() {
+    let n = 32;
+    let mut rng = Pcg32::seeded(11);
+    let cascade = AcdcCascade::nonlinear(n, 4, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 300,
+        workers: 2,
+        queue_cap: 512,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade.clone());
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+
+    // 8 concurrent clients, 5 keep-alive requests each.
+    let handles: Vec<_> = (0..8)
+        .map(|client| {
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(100 + client);
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(60)))
+                    .unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                for _ in 0..5 {
+                    let row = rng.normal_vec(32, 0.0, 1.0);
+                    http::write_request(
+                        &mut stream,
+                        "POST",
+                        "/v1/infer",
+                        &[("content-type", "application/json")],
+                        &infer_body(&row),
+                    )
+                    .expect("write");
+                    let resp = http::read_response(&mut reader).expect("response");
+                    assert_eq!(resp.status, 200, "{}", resp.body_str());
+                    let v = Json::parse(resp.body_str()).unwrap();
+                    assert_eq!(v.get("output").unwrap().as_arr().unwrap().len(), 32);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // One more request whose output we can check numerically.
+    let mut rng = Pcg32::seeded(500);
+    let row = rng.normal_vec(n, 0.0, 1.0);
+    let resp = one_shot(addr, "POST", "/v1/infer", &infer_body(&row));
+    assert_eq!(resp.status, 200);
+    let v = Json::parse(resp.body_str()).unwrap();
+    let got: Vec<f64> = v
+        .get("output")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    let want = cascade.forward(&Tensor::from_vec(&[1, n], row));
+    for (g, w) in got.iter().zip(want.data()) {
+        assert!((g - *w as f64).abs() < 1e-3, "gateway output drifted");
+    }
+
+    // Health and metrics endpoints.
+    let health = one_shot(addr, "GET", "/healthz", b"");
+    assert_eq!(health.status, 200);
+    let hv = Json::parse(health.body_str()).unwrap();
+    assert_eq!(hv.get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(hv.get("width").unwrap().as_usize(), Some(n));
+
+    let metrics = one_shot(addr, "GET", "/metrics", b"");
+    assert_eq!(metrics.status, 200);
+    let text = metrics.body_str();
+    assert!(text.contains("acdc_gateway_admitted"), "{text}");
+    assert!(text.contains("acdc_coordinator_accepted"), "{text}");
+    assert!(text.contains("acdc_gateway_request_ns_count"), "{text}");
+
+    // Unknown routes and wrong methods are typed errors.
+    assert_eq!(one_shot(addr, "GET", "/nope", b"").status, 404);
+    assert_eq!(one_shot(addr, "GET", "/v1/infer", b"").status, 405);
+    assert_eq!(one_shot(addr, "POST", "/v1/infer", b"not json").status, 400);
+
+    gateway.shutdown();
+}
+
+#[test]
+fn gateway_batch_rows_request_answers_every_row() {
+    let n = 16;
+    let mut rng = Pcg32::seeded(21);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 4],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let rows: Vec<Json> = (0..3)
+        .map(|_| {
+            let vals = rng.normal_vec(n, 0.0, 1.0);
+            Json::Arr(vals.iter().map(|v| Json::Num(*v as f64)).collect())
+        })
+        .collect();
+    let body = acdc::util::json::obj(vec![("rows", Json::Arr(rows))]).to_string();
+    let resp = one_shot(gateway.local_addr(), "POST", "/v1/infer", body.as_bytes());
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = Json::parse(resp.body_str()).unwrap();
+    assert_eq!(v.get("rows").unwrap().as_usize(), Some(3));
+    let outputs = v.get("outputs").unwrap().as_arr().unwrap();
+    assert_eq!(outputs.len(), 3);
+    for out in outputs {
+        assert_eq!(out.as_arr().unwrap().len(), n);
+    }
+    gateway.shutdown();
+}
+
+/// Echo executor with a configurable service time, to saturate tiny
+/// queues deterministically.
+struct SlowEcho {
+    n: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for SlowEcho {
+    fn width(&self) -> usize {
+        self.n
+    }
+    fn out_width(&self) -> usize {
+        self.n
+    }
+    fn execute(&mut self, _bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+        std::thread::sleep(self.delay);
+        Ok(padded.to_vec())
+    }
+}
+
+fn slow_gateway(n: usize, delay: Duration, queue_cap: usize, timeout_ms: u64) -> Gateway {
+    let cfg = ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 1,
+        workers: 1,
+        queue_cap,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 64,
+            request_timeout_ms: timeout_ms,
+            drain_timeout_ms: 30_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let factory: ExecutorFactory =
+        Arc::new(move || Ok(Box::new(SlowEcho { n, delay }) as Box<dyn BatchExecutor>));
+    let server = Server::start_custom(&cfg, n, factory);
+    Gateway::start(server, cfg.gateway.clone()).unwrap()
+}
+
+#[test]
+fn loadgen_reports_latency_and_nonzero_sheds_past_queue_cap() {
+    // 1 worker × 10ms service time ≈ 100 req/s capacity; 12 closed-loop
+    // clients against queue_cap 2 must shed hard.
+    let gateway = slow_gateway(8, Duration::from_millis(10), 2, 10_000);
+    let addr = gateway.local_addr();
+    let report = acdc::gateway::loadgen::run(&LoadgenConfig {
+        addr: addr.to_string(),
+        mode: ArrivalMode::Closed,
+        concurrency: 12,
+        duration: Duration::from_millis(1_500),
+        width: 8,
+        rows_mix: vec![1],
+        timeout: Duration::from_secs(30),
+        seed: 3,
+    })
+    .unwrap();
+
+    assert!(report.ok > 0, "some requests must succeed: {report:?}");
+    assert!(
+        report.shed > 0,
+        "driving 12 clients past queue_cap=2 must shed: {report:?}"
+    );
+    assert!(report.errors == 0, "sheds are not errors: {report:?}");
+    assert!(report.p50_ms > 0.0 && report.p99_ms >= report.p50_ms, "{report:?}");
+    assert!(report.goodput_rps() > 0.0);
+    // JSON report carries the same story.
+    let j = report.to_json();
+    assert!(j.get("shed").unwrap().as_f64().unwrap() > 0.0);
+
+    // The gateway's own accounting saw the queue-full sheds.
+    let metrics = one_shot(addr, "GET", "/metrics", b"");
+    let text = metrics.body_str();
+    let shed_line = text
+        .lines()
+        .find(|l| l.starts_with("acdc_gateway_shed_queue_full "))
+        .unwrap_or_else(|| panic!("no shed counter in:\n{text}"));
+    let shed_count: f64 = shed_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    assert!(shed_count > 0.0, "{shed_line}");
+
+    gateway.shutdown();
+}
+
+#[test]
+fn queue_full_maps_to_503_and_drain_completes_inflight() {
+    // Pipeline capacity with buckets [1], 1 worker, queue_cap 2 and a
+    // bounded batch channel (2 × workers): 6 requests absorbed; the 7th
+    // must see 503 + Retry-After while the first is still executing.
+    let delay = Duration::from_millis(600);
+    let gateway = slow_gateway(4, delay, 2, 30_000);
+    let addr = gateway.local_addr();
+
+    let clients: Vec<_> = (0..6)
+        .map(|i| {
+            let h = std::thread::spawn(move || {
+                let row = vec![i as f32; 4];
+                one_shot(addr, "POST", "/v1/infer", &infer_body(&row))
+            });
+            // Paced so the batcher absorbs each submit in order.
+            std::thread::sleep(Duration::from_millis(15));
+            h
+        })
+        .collect();
+    // Everything is queued, nothing finished (first completes at ~600ms).
+    std::thread::sleep(Duration::from_millis(200));
+
+    let shed = one_shot(addr, "POST", "/v1/infer", &infer_body(&[9.0; 4]));
+    assert_eq!(shed.status, 503, "{}", shed.body_str());
+    assert_eq!(shed.header("retry-after"), Some("1"));
+    assert!(shed.body_str().contains("queue full"), "{}", shed.body_str());
+
+    let metrics = one_shot(addr, "GET", "/metrics", b"");
+    assert!(
+        metrics.body_str().contains("acdc_gateway_shed_queue_full 1"),
+        "{}",
+        metrics.body_str()
+    );
+
+    // Drain: shutdown must let all six in-flight requests finish with 200s.
+    gateway.shutdown();
+    for (i, h) in clients.into_iter().enumerate() {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.status, 200, "client {i} lost during drain");
+        let v = Json::parse(resp.body_str()).unwrap();
+        let out = v.get("output").unwrap().as_arr().unwrap();
+        assert_eq!(out[0].as_f64(), Some(i as f64), "echo row identity");
+    }
+}
+
+#[test]
+fn shutdown_drains_promptly_with_idle_keepalive_connections() {
+    let n = 8;
+    let mut rng = Pcg32::seeded(31);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 16,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+    // A served request plus an idle parked keep-alive connection.
+    let idle = TcpStream::connect(addr).unwrap();
+    let ok = one_shot(addr, "POST", "/v1/infer", &infer_body(&[0.5; 8]));
+    assert_eq!(ok.status, 200);
+    // Drain must not wait out the idle connection's socket: parked
+    // connections poll the drain flag and exit within the idle interval.
+    let t0 = std::time::Instant::now();
+    gateway.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain stalled on an idle keep-alive connection: {:?}",
+        t0.elapsed()
+    );
+    drop(idle);
+}
+
+#[test]
+fn rate_limited_gateway_sheds_with_429_and_retry_after() {
+    let n = 8;
+    let mut rng = Pcg32::seeded(41);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 100,
+        workers: 2,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            // 2-token burst, glacial refill: the 3rd rapid request is shed.
+            rate_rps: 0.001,
+            rate_burst: 2.0,
+            retry_after_s: 7,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+    let body = infer_body(&[1.0; 8]);
+    assert_eq!(one_shot(addr, "POST", "/v1/infer", &body).status, 200);
+    assert_eq!(one_shot(addr, "POST", "/v1/infer", &body).status, 200);
+    let shed = one_shot(addr, "POST", "/v1/infer", &body);
+    assert_eq!(shed.status, 429, "{}", shed.body_str());
+    assert_eq!(shed.header("retry-after"), Some("7"));
+    let metrics = one_shot(addr, "GET", "/metrics", b"");
+    assert!(
+        metrics.body_str().contains("acdc_gateway_shed_rate_limited 1"),
+        "{}",
+        metrics.body_str()
+    );
+    gateway.shutdown();
+}
