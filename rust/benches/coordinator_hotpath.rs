@@ -97,7 +97,9 @@ fn main() {
         fmt_ns(percentile(&lats, 99.0)),
     ]);
     println!("{}", server.metrics_report());
-    Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+    if let Ok(s) = Arc::try_unwrap(server) {
+        s.shutdown();
+    }
 
     // 3. PJRT end-to-end at two batcher deadlines
     if let Ok(_probe) = acdc::runtime::Engine::open(Path::new("artifacts")) {
@@ -128,7 +130,9 @@ fn main() {
                 fmt_ns(percentile(&lats, 90.0)),
                 fmt_ns(percentile(&lats, 99.0)),
             ]);
-            Arc::try_unwrap(server).ok().map(|s| s.shutdown());
+            if let Ok(s) = Arc::try_unwrap(server) {
+                s.shutdown();
+            }
         }
     } else {
         println!("(PJRT legs skipped — artifacts not built)");

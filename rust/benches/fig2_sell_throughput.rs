@@ -1,12 +1,14 @@
 //! E1 — regenerates **Figure 2** (and the §5 arithmetic-intensity table,
-//! E5): dense GEMM vs fused ("single call") vs multipass ("multiple
-//! call") ACDC across layer sizes at batch 128, with roofline peak curves
-//! for the paper's Titan X and the measured host.
+//! E5): dense GEMM vs fused ("single call") vs batched-SoA vs multipass
+//! ("multiple call") ACDC across layer sizes at batch 128, with roofline
+//! peak curves for the paper's Titan X and the measured host. Ends with
+//! the batched-engine acceptance comparison (E9) and writes its rows to
+//! `BENCH_acdc_batch.json`.
 //!
 //! Run: `cargo bench --bench fig2_sell_throughput`
 //! Env: `ACDC_BENCH_FAST=1` shrinks the sweep for smoke runs.
 
-use acdc::experiments::fig2;
+use acdc::experiments::{engine_bench, fig2};
 use acdc::perfmodel::{self, Hardware};
 use acdc::runtime::Engine;
 use acdc::util::bench::{Bench, Table};
@@ -51,6 +53,33 @@ fn main() {
         ),
         Err(e) => {
             println!("paper-shape checks: FAILED — {e}");
+            std::process::exit(1);
+        }
+    }
+
+    // E9: batched-engine acceptance comparison (per-row vs SoA), written
+    // out as the committed BENCH_acdc_batch.json report.
+    println!();
+    let cases: &[(usize, usize)] = if fast {
+        &[(1024, 256)]
+    } else {
+        &[(256, 64), (256, 256), (1024, 64), (1024, 256), (4096, 256)]
+    };
+    let erows = engine_bench::run(cases, &bench);
+    print!("{}", engine_bench::render(&erows));
+    // Benches run with CWD = rust/; the committed report lives at the
+    // repo root, so anchor on the manifest dir to actually update it.
+    let out = Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_acdc_batch.json");
+    match engine_bench::write_json(&out, &erows, "cargo bench --bench fig2_sell_throughput") {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => println!("could not write report: {e}"),
+    }
+    match engine_bench::check_acceptance(&erows) {
+        Ok(()) => {
+            println!("acceptance: OK — serial batched engine ≥ 2x per-row at N=1024, batch=256")
+        }
+        Err(e) => {
+            println!("acceptance: FAILED — {e}");
             std::process::exit(1);
         }
     }

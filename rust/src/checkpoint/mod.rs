@@ -22,26 +22,32 @@ const VERSION: u32 = 1;
 /// An in-memory checkpoint: ordered name → tensor map.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Checkpoint {
+    /// Named parameter banks, sorted by name.
     pub entries: BTreeMap<String, Tensor>,
 }
 
 impl Checkpoint {
+    /// Empty checkpoint.
     pub fn new() -> Checkpoint {
         Checkpoint::default()
     }
 
+    /// Insert (or replace) a named tensor.
     pub fn insert(&mut self, name: &str, t: Tensor) {
         self.entries.insert(name.to_string(), t);
     }
 
+    /// Tensor by name.
     pub fn get(&self, name: &str) -> Option<&Tensor> {
         self.entries.get(name)
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the checkpoint holds no entries.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -132,6 +138,7 @@ impl Checkpoint {
         std::fs::rename(&tmp, path).map_err(|e| format!("rename: {e}"))
     }
 
+    /// Read and verify a checkpoint file.
     pub fn load(path: &Path) -> Result<Checkpoint, String> {
         let mut f = std::fs::File::open(path)
             .map_err(|e| format!("open {}: {e}", path.display()))?;

@@ -12,14 +12,20 @@ use std::path::Path;
 /// A parsed config value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[a, b, c]` array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -27,6 +33,7 @@ impl Value {
         }
     }
 
+    /// The integer payload, if this is an `Int`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -34,10 +41,12 @@ impl Value {
         }
     }
 
+    /// The integer as usize, if non-negative.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_int().and_then(|i| usize::try_from(i).ok())
     }
 
+    /// Numeric payload as f64 (ints widen).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -46,6 +55,7 @@ impl Value {
         }
     }
 
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -53,6 +63,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is an `Array`.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -64,7 +75,9 @@ impl Value {
 /// Parse error with line number.
 #[derive(Debug, Clone)]
 pub struct ConfigError {
+    /// What went wrong.
     pub msg: String,
+    /// 1-based line number of the error.
     pub line: usize,
 }
 
@@ -83,6 +96,7 @@ pub struct Config {
 }
 
 impl Config {
+    /// Parse the TOML-subset text.
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
         let mut cfg = Config::default();
         let mut section = String::new();
@@ -123,16 +137,19 @@ impl Config {
         Ok(cfg)
     }
 
+    /// Read and parse a config file.
     pub fn from_file(path: &Path) -> Result<Config, String> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| format!("read {}: {e}", path.display()))?;
         Config::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
     }
 
+    /// Raw value at `section.key` (top-level keys use the bare key).
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.values.get(key)
     }
 
+    /// String value with a default.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.get(key)
             .and_then(|v| v.as_str())
@@ -140,18 +157,22 @@ impl Config {
             .to_string()
     }
 
+    /// usize value with a default.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
     }
 
+    /// f64 value with a default.
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
     }
 
+    /// bool value with a default.
     pub fn get_bool(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// All `section.key` names present, sorted.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
     }
@@ -257,6 +278,8 @@ impl Default for GatewayConfig {
 }
 
 impl GatewayConfig {
+    /// Build from a parsed config's `[gateway]` section (defaults fill
+    /// missing keys).
     pub fn from_config(cfg: &Config) -> Result<GatewayConfig, String> {
         let d = GatewayConfig::default();
         let gc = GatewayConfig {
@@ -280,6 +303,7 @@ impl GatewayConfig {
         Ok(gc)
     }
 
+    /// Sanity-check the knobs (caps ≥ 1, rates finite).
     pub fn validate(&self) -> Result<(), String> {
         if self.addr.is_empty() {
             return Err("gateway.addr must not be empty".into());
@@ -309,6 +333,7 @@ impl GatewayConfig {
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// Directory holding the AOT artifacts + manifest.
     pub artifacts_dir: String,
     /// Batch buckets the batcher may dispatch (must match AOT buckets).
     pub buckets: Vec<usize>,
@@ -336,6 +361,7 @@ impl Default for ServeConfig {
 }
 
 impl ServeConfig {
+    /// Build from a parsed config's `[serve]` (+ `[gateway]`) sections.
     pub fn from_config(cfg: &Config) -> Result<ServeConfig, String> {
         let mut sc = ServeConfig {
             artifacts_dir: cfg.get_str("serve.artifacts_dir", "artifacts"),
@@ -356,6 +382,7 @@ impl ServeConfig {
         Ok(sc)
     }
 
+    /// Sanity-check buckets/workers/queue bounds.
     pub fn validate(&self) -> Result<(), String> {
         if self.buckets.is_empty() {
             return Err("at least one batch bucket required".into());
@@ -378,15 +405,23 @@ impl ServeConfig {
 /// Training orchestrator configuration.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// Directory holding the AOT artifacts + manifest.
     pub artifacts_dir: String,
+    /// SGD steps to run.
     pub steps: usize,
+    /// Minibatch size.
     pub batch: usize,
+    /// Base learning rate.
     pub lr: f64,
     /// Multiply lr by `lr_decay` every `lr_decay_every` steps (§6.2 style).
     pub lr_decay: f64,
+    /// Steps between learning-rate decays.
     pub lr_decay_every: usize,
+    /// Steps between held-out evaluations.
     pub eval_every: usize,
+    /// RNG seed for data + init.
     pub seed: u64,
+    /// Where to write the final checkpoint (None = don't).
     pub checkpoint_path: Option<String>,
 }
 
@@ -407,6 +442,7 @@ impl Default for TrainConfig {
 }
 
 impl TrainConfig {
+    /// Build from a parsed config's `[train]` section.
     pub fn from_config(cfg: &Config) -> Result<TrainConfig, String> {
         let tc = TrainConfig {
             artifacts_dir: cfg.get_str("train.artifacts_dir", "artifacts"),
@@ -426,6 +462,7 @@ impl TrainConfig {
         Ok(tc)
     }
 
+    /// Sanity-check steps/lr/decay ranges.
     pub fn validate(&self) -> Result<(), String> {
         if self.steps == 0 {
             return Err("steps must be >= 1".into());

@@ -12,7 +12,7 @@
 //! * otherwise keep waiting.
 //!
 //! Pure decision logic lives in [`BatchPolicy`] (unit-testable without
-//! threads); [`BatcherThread`] wires it to channels.
+//! threads); [`run_batcher`] wires it to channels.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
@@ -32,12 +32,18 @@ pub struct BatchPolicy {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Decision {
     /// Dispatch now with this bucket size.
-    Dispatch { bucket: usize, take: usize },
+    Dispatch {
+        /// Compiled bucket to execute (rows padded up to this).
+        bucket: usize,
+        /// How many queued requests to take.
+        take: usize,
+    },
     /// Wait at most this long for more arrivals.
     Wait(Duration),
 }
 
 impl BatchPolicy {
+    /// Policy over the given buckets (sorted/deduped) and deadline.
     pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> BatchPolicy {
         assert!(!buckets.is_empty());
         buckets.sort_unstable();
@@ -45,6 +51,7 @@ impl BatchPolicy {
         BatchPolicy { buckets, max_wait }
     }
 
+    /// The largest compiled bucket.
     pub fn max_bucket(&self) -> usize {
         *self.buckets.last().unwrap()
     }

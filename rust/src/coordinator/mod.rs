@@ -96,10 +96,12 @@ impl Coordinator {
         }
     }
 
+    /// Model input width N (features per request row).
     pub fn width(&self) -> usize {
         self.width
     }
 
+    /// The shared metrics registry.
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.metrics
     }

@@ -9,6 +9,7 @@ pub type RequestId = u64;
 /// An inference request: a feature row destined for a SELL classifier.
 #[derive(Debug)]
 pub struct InferRequest {
+    /// Unique id assigned at submit time.
     pub id: RequestId,
     /// Feature vector (length = model width N).
     pub features: Vec<f32>,
@@ -21,6 +22,7 @@ pub struct InferRequest {
 /// The coordinator's answer.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
+    /// The request this answers.
     pub id: RequestId,
     /// Model output row (e.g. class log-probabilities).
     pub output: Result<Vec<f32>, String>,
@@ -39,6 +41,7 @@ pub struct FormedBatch {
     pub bucket: usize,
     /// The actual requests (len ≤ bucket).
     pub requests: Vec<InferRequest>,
+    /// When the batcher dispatched this batch.
     pub formed_at: Instant,
 }
 

@@ -135,7 +135,14 @@ fn worker_loop(
 
 /// A pure-rust executor over the reference SELL cascade — used by tests
 /// and as a PJRT-free fallback path (`--native` serving mode).
+///
+/// Buckets run through the batched SoA ACDC engine
+/// ([`crate::dct::batch`]); large buckets additionally fan panels out
+/// across the process-wide [`crate::util::threadpool::global`] pool, so
+/// every serving worker shares one set of compute threads.
 pub struct NativeCascadeExecutor {
+    /// The cascade evaluated for each batch (cheap to clone per worker —
+    /// all layers share one cached plan).
     pub cascade: crate::sell::acdc::AcdcCascade,
 }
 
@@ -157,29 +164,10 @@ impl BatchExecutor for NativeCascadeExecutor {
             ));
         }
         let x = crate::tensor::Tensor::from_vec(&[bucket, n], padded.to_vec());
-        // Large buckets amortize thread spawn; small ones stay serial
-        // (perf pass L3-2).
+        // Large buckets amortize pool dispatch; small ones stay serial.
         if bucket >= 32 {
-            let threads = std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(4)
-                .min(8);
-            let mut out = crate::tensor::Tensor::zeros(&[bucket, n]);
-            let mut h = x;
-            for (li, layer) in self.cascade.layers.iter().enumerate() {
-                let y = layer.forward_fused_parallel(&h, threads);
-                let y = match &self.cascade.perms {
-                    Some(perms) => crate::sell::acdc::apply_perm(&y, &perms[li]),
-                    None => y,
-                };
-                h = if self.cascade.relu && li != self.cascade.layers.len() - 1 {
-                    y.map(|v| v.max(0.0))
-                } else {
-                    y
-                };
-            }
-            out.data_mut().copy_from_slice(h.data());
-            Ok(out.into_vec())
+            let pool = crate::util::threadpool::global();
+            Ok(self.cascade.forward_pooled(&x, pool).into_vec())
         } else {
             Ok(self.cascade.forward(&x).into_vec())
         }

@@ -15,6 +15,7 @@ pub struct BatchCursor {
 }
 
 impl BatchCursor {
+    /// Cursor over `rows` examples in fixed `batch`-sized steps.
     pub fn new(rows: usize, batch: usize) -> BatchCursor {
         assert!(batch > 0 && batch <= rows, "batch {batch} vs rows {rows}");
         BatchCursor {

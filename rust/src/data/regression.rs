@@ -10,9 +10,13 @@ use crate::util::rng::Pcg32;
 /// A generated regression problem.
 #[derive(Debug, Clone)]
 pub struct RegressionTask {
-    pub x: Tensor,      // [rows, n]
-    pub y: Tensor,      // [rows, n]
-    pub w_true: Tensor, // [n, n]
+    /// Inputs, `[rows, n]`.
+    pub x: Tensor,
+    /// Noisy targets, `[rows, n]`.
+    pub y: Tensor,
+    /// The generating dense operator, `[n, n]`.
+    pub w_true: Tensor,
+    /// Variance of the additive target noise.
     pub noise_var: f64,
 }
 
@@ -40,10 +44,12 @@ impl RegressionTask {
         Self::generate(10_000, 32, 1e-4, seed)
     }
 
+    /// Number of examples.
     pub fn rows(&self) -> usize {
         self.x.rows()
     }
 
+    /// Operator width N.
     pub fn n(&self) -> usize {
         self.x.cols()
     }

@@ -10,15 +10,20 @@
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
+/// Image side length (images are IMG×IMG single-channel).
 pub const IMG: usize = 16;
+/// Number of texture classes.
 pub const N_CLASSES: usize = 10;
 
 /// A generated labelled corpus. Images are [rows, IMG, IMG, 1] f32 in
 /// roughly [-1, 1]; labels are class ids.
 #[derive(Debug, Clone)]
 pub struct ImageCorpus {
-    pub images: Tensor, // [rows, IMG, IMG, 1]
+    /// Image tensor, `[rows, IMG, IMG, 1]`.
+    pub images: Tensor,
+    /// Class id per image.
     pub labels: Vec<i32>,
+    /// Additive Gaussian noise stddev used at generation.
     pub noise: f64,
 }
 
@@ -56,6 +61,7 @@ impl ImageCorpus {
         }
     }
 
+    /// Number of images.
     pub fn rows(&self) -> usize {
         self.labels.len()
     }

@@ -1,0 +1,688 @@
+//! Batched structure-of-arrays (SoA) ACDC compute engine.
+//!
+//! The paper's §5 analysis shows the ACDC hot path is *memory-bound*: the
+//! "single call" kernel wins because it touches each row once (8N bytes of
+//! main-memory traffic per row — 4N in, 4N out; see DESIGN.md §4). The
+//! scalar `DctPlan::dct2/dct3` path honours that traffic model but
+//! transforms one row (or one packed pair) at a time, leaving batch-level
+//! locality and SIMD on the table. This module is the batched counterpart,
+//! the CPU analogue of cuFFT's batched transforms (DESIGN.md substitution
+//! S3):
+//!
+//! * **Lane panels** — a `[rows, N]` batch is processed [`LANES`] rows at
+//!   a time. Each panel is transposed into *structure-of-arrays* lanes:
+//!   frequency bin `k` of all lanes lives contiguously at
+//!   `buf[k*LANES .. (k+1)*LANES]`. Every inner loop of the transform then
+//!   runs over the lane dimension with unit stride — trivially
+//!   auto-vectorizable, and each twiddle load is amortized over [`LANES`]
+//!   rows instead of one.
+//! * **Fused Makhoul DCT** — the even/odd Makhoul reorder is folded into
+//!   the transpose (pack/unpack), so the panel is read once and written
+//!   once. One radix-2 FFT over the lanes replaces [`LANES`] scalar FFTs.
+//! * **Fused `A`/`D`/bias** — [`BatchEngine::acdc_rows`] executes a whole
+//!   `ACDC⁻¹` layer (`y = ((x ⊙ a)·C ⊙ d + bias)·Cᵀ`): the `a` scale rides
+//!   the input pack, and `d`/`bias` ride the single twiddle stage between
+//!   the forward post-twiddle and the inverse pre-twiddle. Intermediates
+//!   never leave the panel scratch, so main memory sees exactly one load
+//!   and one store per panel.
+//! * **Panel parallelism** — [`BatchEngine::acdc_rows_parallel`] splits
+//!   panels across the shared [`crate::util::threadpool`], the serving
+//!   pool all SELL executors already use.
+//!
+//! Plans are cached process-wide in [`PlanCache`] so the gateway's serving
+//! threads, the coordinator workers and every SELL variant share one
+//! twiddle table per size.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::DctPlan;
+use crate::util::threadpool::{split_ranges, ThreadPool};
+
+/// Rows per SoA panel. Eight f32 lanes fill one 256-bit vector register;
+/// the panel scratch for N=8192 (3 buffers × 8 lanes × 4 B) stays inside
+/// L2. Exposed so callers (and the fastfood FWHT path) can size batches.
+pub const LANES: usize = 8;
+
+/// Below this many rows the scalar pair path (`DctPlan::dct2_pair`) wins:
+/// a padded panel always computes all [`LANES`] lanes, so occupancy under
+/// one half wastes more than the SoA layout saves.
+pub const MIN_SOA_ROWS: usize = LANES / 2;
+
+/// Process-wide `size → Arc<DctPlan>` cache.
+///
+/// Plan construction is O(N) trig plus an O(N²) lazily-built matrix;
+/// serving threads, the batcher's executors and ad-hoc layer constructors
+/// all want the same handful of power-of-two sizes. `get` hands out shared
+/// handles so each size is built exactly once per process.
+///
+/// ```
+/// use acdc::dct::PlanCache;
+/// let a = PlanCache::get(64);
+/// let b = PlanCache::get(64);
+/// assert!(std::sync::Arc::ptr_eq(&a, &b)); // one plan per size, shared
+/// ```
+pub struct PlanCache;
+
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<DctPlan>>>> = OnceLock::new();
+
+impl PlanCache {
+    /// Shared plan for size `n` (built on first request). Panics if `n`
+    /// is not a power of two, like [`DctPlan::new`].
+    pub fn get(n: usize) -> Arc<DctPlan> {
+        let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut guard = cache.lock().expect("plan cache poisoned");
+        Arc::clone(guard.entry(n).or_insert_with(|| Arc::new(DctPlan::new(n))))
+    }
+
+    /// Sizes currently cached (ascending) — observability for tests and
+    /// the `acdc info` diagnostics.
+    pub fn cached_sizes() -> Vec<usize> {
+        let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let guard = cache.lock().expect("plan cache poisoned");
+        let mut sizes: Vec<usize> = guard.keys().copied().collect();
+        sizes.sort_unstable();
+        sizes
+    }
+}
+
+/// Reusable per-panel scratch: three SoA buffers of `n × LANES` f32.
+///
+/// Allocated once per batch call (not per row, not per panel) and reused
+/// across every panel, so the hot loop performs no allocation.
+#[derive(Debug)]
+pub struct PanelScratch {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    t: Vec<f32>,
+}
+
+impl PanelScratch {
+    /// Scratch for panels of size `n`.
+    pub fn new(n: usize) -> PanelScratch {
+        PanelScratch {
+            re: vec![0.0; n * LANES],
+            im: vec![0.0; n * LANES],
+            t: vec![0.0; n * LANES],
+        }
+    }
+}
+
+/// Batched SoA executor over a shared [`DctPlan`].
+///
+/// ```
+/// use acdc::dct::{naive_dct2, BatchEngine};
+/// let engine = BatchEngine::for_size(8);
+/// let mut data = vec![0.0f32; 3 * 8];
+/// data[0] = 1.0; // row 0 = impulse
+/// let want = naive_dct2(&data[..8]);
+/// engine.dct2_rows(&mut data, 3);
+/// for k in 0..8 {
+///     assert!((data[k] - want[k]).abs() < 1e-4);
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct BatchEngine {
+    plan: Arc<DctPlan>,
+}
+
+impl BatchEngine {
+    /// Engine over an existing plan handle.
+    pub fn new(plan: Arc<DctPlan>) -> BatchEngine {
+        BatchEngine { plan }
+    }
+
+    /// Engine over the process-wide cached plan for `n`.
+    pub fn for_size(n: usize) -> BatchEngine {
+        BatchEngine::new(PlanCache::get(n))
+    }
+
+    /// Transform size N.
+    pub fn n(&self) -> usize {
+        self.plan.len()
+    }
+
+    /// The underlying shared plan.
+    pub fn plan(&self) -> &Arc<DctPlan> {
+        &self.plan
+    }
+
+    // -- batch drivers ------------------------------------------------------
+
+    /// Orthonormal DCT-II of every row of `data` (`[rows, n]` row-major),
+    /// in place, through SoA panels.
+    pub fn dct2_rows(&self, data: &mut [f32], rows: usize) {
+        let n = self.n();
+        assert_eq!(data.len(), rows * n, "data len vs rows × n");
+        let mut s = PanelScratch::new(n);
+        let mut r = 0;
+        while r < rows {
+            let take = LANES.min(rows - r);
+            self.dct2_panel(data, r, take, &mut s);
+            r += take;
+        }
+    }
+
+    /// Orthonormal DCT-III (inverse of [`BatchEngine::dct2_rows`]) of
+    /// every row of `data`, in place, through SoA panels.
+    pub fn dct3_rows(&self, data: &mut [f32], rows: usize) {
+        let n = self.n();
+        assert_eq!(data.len(), rows * n, "data len vs rows × n");
+        let mut s = PanelScratch::new(n);
+        let mut r = 0;
+        while r < rows {
+            let take = LANES.min(rows - r);
+            self.dct3_panel(data, r, take, &mut s);
+            r += take;
+        }
+    }
+
+    /// Fused `ACDC⁻¹` layer over a batch:
+    /// `out[r] = ((x[r] ⊙ a)·C ⊙ d + bias)·Cᵀ` for every row, one panel
+    /// load and one panel store of main-memory traffic (§5's 8N bytes per
+    /// row once `a`/`d`/`bias` are cache-resident).
+    pub fn acdc_rows(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+        rows: usize,
+    ) {
+        let n = self.n();
+        assert_eq!(a.len(), n);
+        assert_eq!(d.len(), n);
+        assert_eq!(bias.len(), n);
+        assert_eq!(x.len(), rows * n, "x len vs rows × n");
+        assert_eq!(out.len(), rows * n, "out len vs rows × n");
+        let mut s = PanelScratch::new(n);
+        let mut r = 0;
+        while r < rows {
+            let take = LANES.min(rows - r);
+            self.acdc_panel(a, d, bias, x, out, r, take, &mut s);
+            r += take;
+        }
+    }
+
+    /// [`BatchEngine::acdc_rows`] with panels split across `pool` — the
+    /// serving path's thread-level parallelism. Falls back to the serial
+    /// driver when the batch or pool is too small to amortize dispatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn acdc_rows_parallel(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+        rows: usize,
+        pool: &ThreadPool,
+    ) {
+        let n = self.n();
+        assert_eq!(x.len(), rows * n, "x len vs rows × n");
+        assert_eq!(out.len(), rows * n, "out len vs rows × n");
+        let panels = rows.div_ceil(LANES);
+        let parts = pool.size().min(panels);
+        if parts <= 1 {
+            return self.acdc_rows(a, d, bias, x, out, rows);
+        }
+        // Contiguous, disjoint row ranges on panel boundaries.
+        let row_ranges: Vec<std::ops::Range<usize>> = split_ranges(panels, parts)
+            .into_iter()
+            .map(|p| (p.start * LANES)..(p.end * LANES).min(rows))
+            .collect();
+        struct Bufs {
+            x: *const f32,
+            out: *mut f32,
+        }
+        // SAFETY: the pointers are only dereferenced inside pool jobs, and
+        // `ThreadPool::map` joins every job before returning, so the
+        // borrows cannot outlive this call's `x`/`out` arguments.
+        unsafe impl Send for Bufs {}
+        unsafe impl Sync for Bufs {}
+        let bufs = Arc::new(Bufs {
+            x: x.as_ptr(),
+            out: out.as_mut_ptr(),
+        });
+        let engine = self.clone();
+        let params = Arc::new((a.to_vec(), d.to_vec(), bias.to_vec()));
+        let ranges = Arc::new(row_ranges);
+        pool.map(parts, move |i| {
+            let r = ranges[i].clone();
+            let count = r.end - r.start;
+            // SAFETY: ranges are pairwise disjoint, so each job builds the
+            // only mutable view of its own output rows; the shared input
+            // view is read-only. Both stay within the caller's buffers
+            // (r.end ≤ rows) and die before `map` returns.
+            let (x_part, out_part) = unsafe {
+                (
+                    std::slice::from_raw_parts(bufs.x.add(r.start * n), count * n),
+                    std::slice::from_raw_parts_mut(bufs.out.add(r.start * n), count * n),
+                )
+            };
+            engine.acdc_rows(&params.0, &params.1, &params.2, x_part, out_part, count);
+        });
+    }
+
+    // -- panel kernels ------------------------------------------------------
+
+    /// Makhoul pack + transpose of rows `r0..r0+take` into SoA `re` lanes
+    /// (`re[j*LANES + l] = row_l[2j]`, `re[(n-1-j)*LANES + l] = row_l[2j+1]`),
+    /// optionally fusing a per-element `scale` (the ACDC `a` diagonal).
+    /// Unused lanes are zero-filled, so padded tail panels stay exact.
+    fn pack(&self, x: &[f32], r0: usize, take: usize, scale: Option<&[f32]>, re: &mut [f32]) {
+        let n = self.n();
+        re.fill(0.0);
+        for l in 0..take {
+            let row = &x[(r0 + l) * n..(r0 + l + 1) * n];
+            if n == 1 {
+                re[l] = row[0] * scale.map_or(1.0, |s| s[0]);
+                continue;
+            }
+            match scale {
+                Some(s) => {
+                    for j in 0..n / 2 {
+                        re[j * LANES + l] = row[2 * j] * s[2 * j];
+                        re[(n - 1 - j) * LANES + l] = row[2 * j + 1] * s[2 * j + 1];
+                    }
+                }
+                None => {
+                    for j in 0..n / 2 {
+                        re[j * LANES + l] = row[2 * j];
+                        re[(n - 1 - j) * LANES + l] = row[2 * j + 1];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Inverse of [`BatchEngine::pack`]: un-reorder SoA `re` lanes back
+    /// into rows `r0..r0+take` of `out`.
+    fn unpack(&self, re: &[f32], out: &mut [f32], r0: usize, take: usize) {
+        let n = self.n();
+        for l in 0..take {
+            let row = &mut out[(r0 + l) * n..(r0 + l + 1) * n];
+            if n == 1 {
+                row[0] = re[l];
+                continue;
+            }
+            for j in 0..n / 2 {
+                row[2 * j] = re[j * LANES + l];
+                row[2 * j + 1] = re[(n - 1 - j) * LANES + l];
+            }
+        }
+    }
+
+    /// DCT-II of one panel, in place in `data`.
+    fn dct2_panel(&self, data: &mut [f32], r0: usize, take: usize, s: &mut PanelScratch) {
+        let n = self.n();
+        let (rev, twr, twi) = self.plan.fft.tables();
+        self.pack(data, r0, take, None, &mut s.re);
+        s.im.fill(0.0);
+        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, false);
+        // Forward post-twiddle: X[k] = Re((fw_re + i·fw_im)·Z[k]).
+        for k in 0..n {
+            let (fr, fi) = (self.plan.fw_re[k], self.plan.fw_im[k]);
+            let re = lane(&s.re, k);
+            let im = lane(&s.im, k);
+            let t = lane_mut(&mut s.t, k);
+            for l in 0..LANES {
+                t[l] = fr * re[l] - fi * im[l];
+            }
+        }
+        // Plain transpose out (frequency order, no Makhoul reorder).
+        for l in 0..take {
+            let row = &mut data[(r0 + l) * n..(r0 + l + 1) * n];
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = s.t[k * LANES + l];
+            }
+        }
+    }
+
+    /// DCT-III of one panel, in place in `data`.
+    fn dct3_panel(&self, data: &mut [f32], r0: usize, take: usize, s: &mut PanelScratch) {
+        let n = self.n();
+        let (rev, twr, twi) = self.plan.fft.tables();
+        // Plain transpose in (zero the padded lanes).
+        s.t.fill(0.0);
+        for l in 0..take {
+            let row = &data[(r0 + l) * n..(r0 + l + 1) * n];
+            for (k, &v) in row.iter().enumerate() {
+                s.t[k * LANES + l] = v;
+            }
+        }
+        self.dct3_twiddle_from_t(s);
+        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, true);
+        self.unpack(&s.re, data, r0, take);
+    }
+
+    /// Inverse pre-twiddle: `V[k] = (bw_re + i·bw_im)[k] · (t[k] - i·t[n-k])`
+    /// (with `t[n] ≡ 0`), from `s.t` into `s.re`/`s.im`.
+    fn dct3_twiddle_from_t(&self, s: &mut PanelScratch) {
+        let n = self.n();
+        for k in 0..n {
+            let (br, bi) = (self.plan.bw_re[k], self.plan.bw_im[k]);
+            let re = lane_mut(&mut s.re, k);
+            let im = lane_mut(&mut s.im, k);
+            if k == 0 {
+                let tk = lane(&s.t, 0);
+                for l in 0..LANES {
+                    re[l] = br * tk[l];
+                    im[l] = bi * tk[l];
+                }
+            } else {
+                let tk = lane(&s.t, k);
+                let tnk = lane(&s.t, n - k);
+                for l in 0..LANES {
+                    re[l] = br * tk[l] + bi * tnk[l];
+                    im[l] = bi * tk[l] - br * tnk[l];
+                }
+            }
+        }
+    }
+
+    /// One fused `ACDC⁻¹` panel: pack(⊙a) → FFT → post-twiddle ⊙d +bias →
+    /// pre-twiddle → inverse FFT → unpack. All intermediates stay in `s`.
+    #[allow(clippy::too_many_arguments)]
+    fn acdc_panel(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+        r0: usize,
+        take: usize,
+        s: &mut PanelScratch,
+    ) {
+        let n = self.n();
+        let (rev, twr, twi) = self.plan.fft.tables();
+        self.pack(x, r0, take, Some(a), &mut s.re);
+        s.im.fill(0.0);
+        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, false);
+        // Fused middle stage: h3[k] = (fw·Z)[k] ⊙ d[k] + bias[k].
+        for k in 0..n {
+            let (fr, fi) = (self.plan.fw_re[k], self.plan.fw_im[k]);
+            let (dk, bk) = (d[k], bias[k]);
+            let re = lane(&s.re, k);
+            let im = lane(&s.im, k);
+            let t = lane_mut(&mut s.t, k);
+            for l in 0..LANES {
+                t[l] = (fr * re[l] - fi * im[l]) * dk + bk;
+            }
+        }
+        self.dct3_twiddle_from_t(s);
+        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, true);
+        self.unpack(&s.re, out, r0, take);
+    }
+}
+
+/// Radix-2 complex FFT over SoA lane buffers: element `(k, l)` lives at
+/// `k*LANES + l`. Identical schedule (bit-reversal + Danielson–Lanczos,
+/// shared twiddle tables) to the scalar [`crate::dct::fft::FftPlan`], with
+/// the butterfly applied to all [`LANES`] lanes per twiddle load. The
+/// inverse includes the 1/n scaling, matching `FftPlan::inverse`.
+fn fft_soa(
+    re: &mut [f32],
+    im: &mut [f32],
+    n: usize,
+    rev: &[u32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    invert: bool,
+) {
+    debug_assert_eq!(re.len(), n * LANES);
+    debug_assert_eq!(im.len(), n * LANES);
+    if n == 1 {
+        return;
+    }
+    // Bit-reversal reorder of whole lane blocks.
+    for i in 0..n {
+        let j = rev[i] as usize;
+        if i < j {
+            for l in 0..LANES {
+                re.swap(i * LANES + l, j * LANES + l);
+                im.swap(i * LANES + l, j * LANES + l);
+            }
+        }
+    }
+    // Danielson–Lanczos stages, lanes innermost.
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        let step = n / len;
+        for start in (0..n).step_by(len) {
+            let mut tidx = 0;
+            for k in start..start + half {
+                let wr = tw_re[tidx];
+                let wi = if invert { -tw_im[tidx] } else { tw_im[tidx] };
+                let m = k + half;
+                // Disjoint lane blocks at k and m (k < m always).
+                let (re_k, re_m) = lane_pair(re, k, m);
+                let (im_k, im_m) = lane_pair(im, k, m);
+                for l in 0..LANES {
+                    let xr = re_m[l] * wr - im_m[l] * wi;
+                    let xi = re_m[l] * wi + im_m[l] * wr;
+                    re_m[l] = re_k[l] - xr;
+                    im_m[l] = im_k[l] - xi;
+                    re_k[l] += xr;
+                    im_k[l] += xi;
+                }
+                tidx += step;
+            }
+        }
+        len <<= 1;
+    }
+    if invert {
+        let inv = 1.0 / n as f32;
+        for v in re.iter_mut() {
+            *v *= inv;
+        }
+        for v in im.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Shared lane block at bin `k` as a fixed-size array reference (the
+/// known length lets LLVM elide bounds checks and vectorize the 8-wide
+/// lane loops).
+#[inline]
+pub(crate) fn lane(buf: &[f32], k: usize) -> &[f32; LANES] {
+    (&buf[k * LANES..(k + 1) * LANES]).try_into().unwrap()
+}
+
+/// Mutable lane block at bin `k` as a fixed-size array reference.
+#[inline]
+pub(crate) fn lane_mut(buf: &mut [f32], k: usize) -> &mut [f32; LANES] {
+    (&mut buf[k * LANES..(k + 1) * LANES]).try_into().unwrap()
+}
+
+/// Two disjoint mutable lane blocks at bins `k < m` of one SoA buffer.
+#[inline]
+fn lane_pair(buf: &mut [f32], k: usize, m: usize) -> (&mut [f32; LANES], &mut [f32; LANES]) {
+    debug_assert!(k < m);
+    let (head, tail) = buf.split_at_mut(m * LANES);
+    (
+        (&mut head[k * LANES..(k + 1) * LANES]).try_into().unwrap(),
+        (&mut tail[..LANES]).try_into().unwrap(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::{naive_dct2, naive_dct3};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn plan_cache_shares_one_plan_per_size() {
+        let a = PlanCache::get(32);
+        let b = PlanCache::get(32);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(PlanCache::cached_sizes().contains(&32));
+    }
+
+    #[test]
+    fn dct2_rows_matches_oracle_across_panel_shapes() {
+        let mut rng = Pcg32::seeded(1);
+        for n in [1usize, 2, 8, 64] {
+            let engine = BatchEngine::for_size(n);
+            for rows in [1usize, 3, 8, 9, 16, 17] {
+                let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+                let mut data = orig.clone();
+                engine.dct2_rows(&mut data, rows);
+                for r in 0..rows {
+                    let want = naive_dct2(&orig[r * n..(r + 1) * n]);
+                    for k in 0..n {
+                        assert!(
+                            (data[r * n + k] - want[k]).abs() < 1e-4,
+                            "n={n} rows={rows} r={r} k={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dct3_rows_matches_oracle() {
+        let mut rng = Pcg32::seeded(2);
+        for n in [2usize, 8, 64] {
+            let engine = BatchEngine::for_size(n);
+            for rows in [1usize, 5, 11] {
+                let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+                let mut data = orig.clone();
+                engine.dct3_rows(&mut data, rows);
+                for r in 0..rows {
+                    let want = naive_dct3(&orig[r * n..(r + 1) * n]);
+                    for k in 0..n {
+                        assert!(
+                            (data[r * n + k] - want[k]).abs() < 1e-4,
+                            "n={n} rows={rows} r={r} k={k}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn soa_roundtrip_dct3_of_dct2_is_identity() {
+        let mut rng = Pcg32::seeded(3);
+        for n in [2usize, 16, 128] {
+            let engine = BatchEngine::for_size(n);
+            let rows = 13;
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            engine.dct2_rows(&mut data, rows);
+            engine.dct3_rows(&mut data, rows);
+            for i in 0..rows * n {
+                assert!((data[i] - orig[i]).abs() < 1e-4, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_acdc_matches_unfused_chain() {
+        let mut rng = Pcg32::seeded(4);
+        for n in [2usize, 8, 64, 256] {
+            let engine = BatchEngine::for_size(n);
+            let rows = 9;
+            let a = rng.normal_vec(n, 1.0, 0.3);
+            let d = rng.normal_vec(n, 1.0, 0.3);
+            let bias = rng.normal_vec(n, 0.0, 0.2);
+            let x = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut got = vec![0.0f32; rows * n];
+            engine.acdc_rows(&a, &d, &bias, &x, &mut got, rows);
+            // Unfused: scale, dct2_rows, scale+bias, dct3_rows.
+            let mut want: Vec<f32> = x
+                .chunks(n)
+                .flat_map(|row| row.iter().zip(&a).map(|(&v, &av)| v * av))
+                .collect();
+            engine.dct2_rows(&mut want, rows);
+            for r in 0..rows {
+                for k in 0..n {
+                    want[r * n + k] = want[r * n + k] * d[k] + bias[k];
+                }
+            }
+            engine.dct3_rows(&mut want, rows);
+            for i in 0..rows * n {
+                assert!((got[i] - want[i]).abs() < 1e-4, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut rng = Pcg32::seeded(5);
+        let n = 64;
+        let rows = 67; // several panels + ragged tail
+        let engine = BatchEngine::for_size(n);
+        let a = rng.normal_vec(n, 1.0, 0.2);
+        let d = rng.normal_vec(n, 1.0, 0.2);
+        let bias = rng.normal_vec(n, 0.0, 0.2);
+        let x = rng.normal_vec(rows * n, 0.0, 1.0);
+        let mut serial = vec![0.0f32; rows * n];
+        engine.acdc_rows(&a, &d, &bias, &x, &mut serial, rows);
+        let pool = ThreadPool::new(4);
+        let mut parallel = vec![0.0f32; rows * n];
+        engine.acdc_rows_parallel(&a, &d, &bias, &x, &mut parallel, rows, &pool);
+        assert_eq!(serial, parallel, "panel split must be bit-identical");
+    }
+
+    #[test]
+    fn parallel_small_batch_falls_back_to_serial() {
+        let mut rng = Pcg32::seeded(6);
+        let n = 16;
+        let rows = 3;
+        let engine = BatchEngine::for_size(n);
+        let a = vec![1.0; n];
+        let d = vec![1.0; n];
+        let bias = vec![0.0; n];
+        let x = rng.normal_vec(rows * n, 0.0, 1.0);
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0.0f32; rows * n];
+        engine.acdc_rows_parallel(&a, &d, &bias, &x, &mut out, rows, &pool);
+        // identity layer → output equals input
+        for i in 0..rows * n {
+            assert!((out[i] - x[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn size_one_engine_is_exact() {
+        let engine = BatchEngine::for_size(1);
+        let mut data = vec![2.0f32, -3.0, 0.5];
+        engine.dct2_rows(&mut data, 3);
+        assert_eq!(data, vec![2.0, -3.0, 0.5]); // 1-point orthonormal DCT = id
+        let a = vec![2.0f32];
+        let d = vec![0.5f32];
+        let bias = vec![1.0f32];
+        let x = vec![3.0f32, 4.0];
+        let mut out = vec![0.0f32; 2];
+        engine.acdc_rows(&a, &d, &bias, &x, &mut out, 2);
+        // y = x·a·d + bias (all transforms identity at n=1)
+        assert!((out[0] - 4.0).abs() < 1e-6);
+        assert!((out[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scalar_and_soa_paths_agree() {
+        // The two execution strategies must be numerically interchangeable.
+        let mut rng = Pcg32::seeded(7);
+        let n = 128;
+        let rows = 10;
+        let plan = PlanCache::get(n);
+        let engine = BatchEngine::new(Arc::clone(&plan));
+        let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+        let mut soa = orig.clone();
+        engine.dct2_rows(&mut soa, rows);
+        let mut scalar = orig;
+        plan.dct2_rows(&mut scalar, rows);
+        for i in 0..rows * n {
+            assert!((soa[i] - scalar[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+}

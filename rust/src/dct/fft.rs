@@ -43,12 +43,23 @@ impl FftPlan {
         }
     }
 
+    /// Transform size N.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True only for the degenerate zero-length plan (never constructed
+    /// by [`FftPlan::new`], which requires a power of two ≥ 1).
     pub fn is_empty(&self) -> bool {
         self.n == 0
+    }
+
+    /// Precomputed tables `(rev, tw_re, tw_im)` — the bit-reversal
+    /// permutation and the n/2 forward twiddles. Shared with the
+    /// structure-of-arrays batched engine ([`crate::dct::batch`]) so both
+    /// execution strategies run the identical radix-2 schedule.
+    pub(crate) fn tables(&self) -> (&[u32], &[f32], &[f32]) {
+        (&self.rev, &self.tw_re, &self.tw_im)
     }
 
     /// In-place forward FFT over split re/im buffers of length n.

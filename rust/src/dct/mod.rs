@@ -1,9 +1,12 @@
-//! DCT-II / DCT-III (orthonormal) with three implementations:
+//! DCT-II / DCT-III (orthonormal) with four implementations:
 //!
-//! * `DctPlan::dct2 / dct3` — O(N log N) via Makhoul (1980) using the
-//!   radix-2 FFT (the method the paper's "multiple call" §5.2 version uses
-//!   through cuFFT);
-//! * `DctPlan::dct2_matmul` — O(N²) matmul against the precomputed DCT
+//! * `DctPlan::dct2 / dct3` — scalar O(N log N) via Makhoul (1980) using
+//!   the radix-2 FFT (the method the paper's "multiple call" §5.2 version
+//!   uses through cuFFT);
+//! * [`batch`] — the batched structure-of-arrays engine: the same Makhoul
+//!   schedule run 8 rows per pass with the ACDC diagonals fused into the
+//!   twiddle stages (DESIGN.md §4), plus the process-wide [`PlanCache`];
+//! * `DctPlan::matrix` — O(N²) matmul against the precomputed DCT
 //!   matrix (what the Pallas kernel does on the MXU);
 //! * `naive_dct2 / naive_dct3` — O(N²) f64 closed-form oracles used only
 //!   in tests.
@@ -11,7 +14,10 @@
 //! All use the paper's eq. (9) orthonormal scaling, so `dct3(dct2(x)) == x`
 //! and the transform matrix is orthogonal.
 
+pub mod batch;
 pub mod fft;
+
+pub use batch::{BatchEngine, PlanCache, LANES, MIN_SOA_ROWS};
 
 use fft::FftPlan;
 
@@ -31,6 +37,20 @@ pub struct DctPlan {
 }
 
 impl DctPlan {
+    /// Build a plan for size `n` (must be a power of two, like the
+    /// paper's implementations).
+    ///
+    /// ```
+    /// use acdc::dct::{naive_dct2, DctPlan};
+    /// let plan = DctPlan::new(8);
+    /// let mut x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+    /// let want = naive_dct2(&x);
+    /// let mut scratch = vec![0.0f32; 16]; // 2·n re/im scratch
+    /// plan.dct2(&mut x, &mut scratch);
+    /// assert!((x[0] - want[0]).abs() < 1e-4);
+    /// plan.dct3(&mut x, &mut scratch); // inverse: back to the ramp
+    /// assert!((x[3] - 3.0).abs() < 1e-4);
+    /// ```
     pub fn new(n: usize) -> DctPlan {
         assert!(n.is_power_of_two(), "DCT size must be a power of two, got {n}");
         let mut fw_re = Vec::with_capacity(n);
@@ -64,10 +84,13 @@ impl DctPlan {
         }
     }
 
+    /// Transform size N.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True only for a degenerate zero-length plan (never constructed by
+    /// [`DctPlan::new`]).
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }

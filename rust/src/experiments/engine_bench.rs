@@ -1,0 +1,252 @@
+//! E9 — batched-engine acceptance bench: per-row vs SoA ACDC throughput.
+//!
+//! Measures one full `ACDC⁻¹` layer application over a `[batch, N]` panel
+//! through four execution strategies:
+//!
+//! 1. **per-row** — `forward_row_fused` looped over rows: the §5.1
+//!    single-call kernel with no batch-level reuse (the pre-batched
+//!    serving baseline);
+//! 2. **pair** — `forward_fused`: two rows share each complex FFT (the
+//!    2-for-1 real-transform packing);
+//! 3. **soa** — the batched structure-of-arrays engine
+//!    ([`crate::dct::batch::BatchEngine::acdc_rows`]), 8 lanes per pass;
+//! 4. **soa-pooled** — the same engine with panels fanned out across the
+//!    process-wide thread pool (the serving executors' path).
+//!
+//! The acceptance gate for the batched engine is `soa ≥ 2× per-row` rows/s
+//! at N=1024, batch=256; `acdc bench` and the `fig2_sell_throughput`
+//! bench target both emit these rows as `BENCH_acdc_batch.json`.
+
+use crate::sell::acdc::AcdcLayer;
+use crate::tensor::Tensor;
+use crate::util::bench::{black_box, fmt_ns, Bench, Table};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// One measured (N, batch) case.
+#[derive(Debug, Clone)]
+pub struct EngineBenchRow {
+    /// Layer width N.
+    pub n: usize,
+    /// Rows per application.
+    pub batch: usize,
+    /// Per-row scalar kernel, ns per batch.
+    pub per_row_ns: f64,
+    /// Pair-packed scalar kernel, ns per batch.
+    pub pair_ns: f64,
+    /// Batched SoA engine (serial panels), ns per batch.
+    pub soa_ns: f64,
+    /// Batched SoA engine across the global pool, ns per batch.
+    pub pooled_ns: f64,
+}
+
+impl EngineBenchRow {
+    /// Serial SoA-engine speedup over the per-row baseline.
+    pub fn soa_speedup(&self) -> f64 {
+        self.per_row_ns / self.soa_ns
+    }
+
+    /// Pooled SoA-engine speedup over the per-row baseline.
+    pub fn pooled_speedup(&self) -> f64 {
+        self.per_row_ns / self.pooled_ns
+    }
+
+    /// Rows per second through the serial SoA engine.
+    pub fn soa_rows_per_s(&self) -> f64 {
+        self.batch as f64 / (self.soa_ns * 1e-9)
+    }
+}
+
+/// Measure every `(n, batch)` case.
+pub fn run(cases: &[(usize, usize)], bench: &Bench) -> Vec<EngineBenchRow> {
+    let mut rng = Pcg32::seeded(4242);
+    let pool = crate::util::threadpool::global();
+    let mut rows = Vec::with_capacity(cases.len());
+    for &(n, batch) in cases {
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.1);
+        layer.bias = rng.normal_vec(n, 0.0, 0.1);
+        let x = Tensor::from_vec(&[batch, n], rng.normal_vec(batch * n, 0.0, 1.0));
+        let mut out = Tensor::zeros(&[batch, n]);
+
+        let mut scratch = vec![0.0f32; 3 * n];
+        let m_row = bench.run(&format!("per-row n={n} b={batch}"), || {
+            for r in 0..batch {
+                let dst = &mut out.data_mut()[r * n..(r + 1) * n];
+                layer.forward_row_fused(x.row(r), dst, &mut scratch);
+            }
+            black_box(out.data()[0]);
+        });
+        let m_pair = bench.run(&format!("pair n={n} b={batch}"), || {
+            black_box(layer.forward_fused(&x));
+        });
+        let m_soa = bench.run(&format!("soa n={n} b={batch}"), || {
+            black_box(layer.forward_batch(&x));
+        });
+        let m_pooled = bench.run(&format!("soa-pooled n={n} b={batch}"), || {
+            black_box(layer.forward_batch_pooled(&x, pool));
+        });
+        rows.push(EngineBenchRow {
+            n,
+            batch,
+            per_row_ns: m_row.median_ns,
+            pair_ns: m_pair.median_ns,
+            soa_ns: m_soa.median_ns,
+            pooled_ns: m_pooled.median_ns,
+        });
+    }
+    rows
+}
+
+/// Paper-style text table of the comparison.
+pub fn render(rows: &[EngineBenchRow]) -> String {
+    let mut t = Table::new(&[
+        "N",
+        "batch",
+        "per-row",
+        "pair",
+        "soa",
+        "soa-pooled",
+        "soa speedup",
+        "pooled speedup",
+        "soa rows/s",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.batch.to_string(),
+            fmt_ns(r.per_row_ns),
+            fmt_ns(r.pair_ns),
+            fmt_ns(r.soa_ns),
+            fmt_ns(r.pooled_ns),
+            format!("{:.2}x", r.soa_speedup()),
+            format!("{:.2}x", r.pooled_speedup()),
+            format!("{:.0}", r.soa_rows_per_s()),
+        ]);
+    }
+    format!(
+        "ACDC batched-engine comparison (one ACDC⁻¹ layer per application)\n{}",
+        t.render()
+    )
+}
+
+/// JSON report (the `BENCH_acdc_batch.json` payload): the measured rows
+/// plus an `acceptance` record mirroring [`check_acceptance`].
+pub fn to_json(rows: &[EngineBenchRow], provenance: &str) -> Json {
+    let target = rows.iter().find(|r| r.n == 1024 && r.batch == 256);
+    obj(vec![
+        ("bench", Json::Str("acdc_batch_engine".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        ("lanes", Json::Num(crate::dct::LANES as f64)),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("n", Json::Num(r.n as f64)),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("per_row_ns", Json::Num(r.per_row_ns)),
+                            ("pair_ns", Json::Num(r.pair_ns)),
+                            ("soa_ns", Json::Num(r.soa_ns)),
+                            ("pooled_ns", Json::Num(r.pooled_ns)),
+                            ("soa_speedup", Json::Num(r.soa_speedup())),
+                            ("pooled_speedup", Json::Num(r.pooled_speedup())),
+                            ("soa_rows_per_s", Json::Num(r.soa_rows_per_s())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "acceptance",
+            obj(vec![
+                (
+                    "criterion",
+                    Json::Str(
+                        "serial batched SoA engine >= 2x per-row throughput at N=1024, batch=256"
+                            .into(),
+                    ),
+                ),
+                (
+                    "measured_speedup",
+                    target.map_or(Json::Null, |t| Json::Num(t.soa_speedup())),
+                ),
+                (
+                    "pass",
+                    target.map_or(Json::Null, |t| Json::Bool(t.soa_speedup() >= 2.0)),
+                ),
+            ]),
+        ),
+    ])
+}
+
+/// Write the JSON report to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    rows: &[EngineBenchRow],
+    provenance: &str,
+) -> Result<(), String> {
+    std::fs::write(path, to_json(rows, provenance).to_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+/// The acceptance gate: the *serial* SoA engine must be ≥ 2× per-row at
+/// the target shape. The pooled number is reported but deliberately not
+/// consulted — multi-core fan-out against a single-threaded baseline
+/// would make the gate vacuous.
+pub fn check_acceptance(rows: &[EngineBenchRow]) -> Result<(), String> {
+    let target = rows
+        .iter()
+        .find(|r| r.n == 1024 && r.batch == 256)
+        .ok_or("no N=1024, batch=256 row measured")?;
+    if target.soa_speedup() < 2.0 {
+        return Err(format!(
+            "serial batched engine below 2x per-row at N=1024 b=256: soa {:.2}x (pooled {:.2}x)",
+            target.soa_speedup(),
+            target.pooled_speedup()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(15),
+            min_iters: 2,
+            max_iters: 10_000,
+        }
+    }
+
+    #[test]
+    fn runs_and_renders() {
+        let rows = run(&[(64, 8), (128, 16)], &quick());
+        assert_eq!(rows.len(), 2);
+        let s = render(&rows);
+        assert!(s.contains("soa speedup"));
+        assert!(s.contains("128"));
+        for r in &rows {
+            assert!(r.per_row_ns > 0.0 && r.soa_ns > 0.0);
+        }
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let rows = run(&[(32, 8)], &quick());
+        let j = to_json(&rows, "unit test");
+        let re = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(re.get("bench").unwrap().as_str(), Some("acdc_batch_engine"));
+        assert_eq!(re.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn acceptance_check_requires_target_shape() {
+        let rows = run(&[(32, 8)], &quick());
+        assert!(check_acceptance(&rows).is_err()); // no 1024×256 row
+    }
+}

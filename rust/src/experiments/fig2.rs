@@ -19,25 +19,37 @@ use crate::util::rng::Pcg32;
 /// One measured row of the Figure-2 sweep.
 #[derive(Debug, Clone)]
 pub struct Fig2Row {
+    /// Layer width N.
     pub n: usize,
+    /// Batch size (rows per application).
     pub batch: usize,
     /// Measured medians, ns per layer application on the whole batch.
     pub dense_ns: f64,
+    /// Scalar fused ("single call") ACDC, ns per batch.
     pub acdc_fused_ns: f64,
+    /// Batched SoA-engine ACDC ([`crate::dct::batch`]), ns per batch.
+    pub acdc_batch_ns: f64,
+    /// Multipass ("multiple call") ACDC, ns per batch.
     pub acdc_multipass_ns: f64,
     /// PJRT-executed fused ACDC artifact (None without artifacts).
     pub pjrt_acdc_ns: Option<f64>,
-    /// Roofline predictions on the paper's Titan X.
+    /// Roofline prediction for dense on the paper's Titan X.
     pub titan_dense_ns: f64,
+    /// Roofline prediction for ACDC on the paper's Titan X.
     pub titan_acdc_ns: f64,
     /// Roofline predictions for the measured host bandwidth.
     pub host_acdc_ns: f64,
 }
 
 impl Fig2Row {
-    /// Measured dense / fused-ACDC speedup.
+    /// Measured dense / best-ACDC speedup.
     pub fn measured_speedup(&self) -> f64 {
-        self.dense_ns / self.acdc_fused_ns
+        self.dense_ns / self.acdc_fused_ns.min(self.acdc_batch_ns)
+    }
+
+    /// Batched-engine speedup over the scalar fused path.
+    pub fn batch_speedup(&self) -> f64 {
+        self.acdc_fused_ns / self.acdc_batch_ns
     }
 
     /// Titan-X-model dense / ACDC speedup (the paper's "up to 10×").
@@ -67,6 +79,9 @@ pub fn run(
         });
         let m_fused = bench.run(&format!("acdc-fused n={n}"), || {
             black_box(acdc.forward_fused(&x));
+        });
+        let m_batch = bench.run(&format!("acdc-batch n={n}"), || {
+            black_box(acdc.forward_batch(&x));
         });
         let m_multi = bench.run(&format!("acdc-multipass n={n}"), || {
             black_box(acdc.forward_multipass(&x));
@@ -101,6 +116,7 @@ pub fn run(
             batch,
             dense_ns: m_dense.median_ns,
             acdc_fused_ns: m_fused.median_ns,
+            acdc_batch_ns: m_batch.median_ns,
             acdc_multipass_ns: m_multi.median_ns,
             pjrt_acdc_ns,
             titan_dense_ns: titan.predict_seconds(
@@ -127,6 +143,7 @@ pub fn render(rows: &[Fig2Row]) -> String {
         "AI(f/B)",
         "dense",
         "acdc-fused",
+        "acdc-batch",
         "acdc-multi",
         "acdc-pjrt",
         "titanX dense*",
@@ -140,6 +157,7 @@ pub fn render(rows: &[Fig2Row]) -> String {
             format!("{:.1}", perfmodel::acdc_arithmetic_intensity(r.n)),
             crate::util::bench::fmt_ns(r.dense_ns),
             crate::util::bench::fmt_ns(r.acdc_fused_ns),
+            crate::util::bench::fmt_ns(r.acdc_batch_ns),
             crate::util::bench::fmt_ns(r.acdc_multipass_ns),
             r.pjrt_acdc_ns
                 .map(crate::util::bench::fmt_ns)

@@ -14,13 +14,17 @@ use crate::sell::init::DiagInit;
 use crate::train::{Fig3Trainer, LossCurve, StepDecay};
 use crate::util::bench::Table;
 
+/// The cascade depths swept in the paper's Figure 3.
 pub const PAPER_KS: [usize; 6] = [1, 2, 4, 8, 16, 32];
 
 /// One (K, init) cell of the figure.
 #[derive(Debug, Clone)]
 pub struct Fig3Cell {
-    pub k: usize, // 0 = dense baseline
+    /// Cascade depth (0 = dense baseline).
+    pub k: usize,
+    /// Diagonal initialization used.
     pub init: DiagInit,
+    /// The recorded training curve.
     pub curve: LossCurve,
 }
 

@@ -6,8 +6,11 @@
 //!
 //! * [`fig2`] — E1: SELL vs dense runtime sweep (+roofline model);
 //! * [`fig3`] — E2: operator approximation under two inits;
-//! * [`table1`] — E3/E4: parameter/accuracy trade-off (analytic + measured).
+//! * [`table1`] — E3/E4: parameter/accuracy trade-off (analytic + measured);
+//! * [`engine_bench`] — E9: per-row vs batched-SoA ACDC engine comparison
+//!   (the `BENCH_acdc_batch.json` source, see DESIGN.md §4).
 
+pub mod engine_bench;
 pub mod fig2;
 pub mod fig3;
 pub mod table1;

@@ -65,11 +65,17 @@ pub fn render_analytic() -> String {
 /// Result of the measured MiniCaffeNet leg.
 #[derive(Debug, Clone)]
 pub struct MeasuredRow {
+    /// Variant label.
     pub variant: &'static str,
+    /// Learnable parameter count.
     pub params: u64,
+    /// Parameter reduction vs the dense reference.
     pub reduction: f64,
+    /// Held-out top-1 error, percent.
     pub test_err_pct: f64,
+    /// Error increase over the dense reference, points.
     pub err_increase_pct: f64,
+    /// Final training loss.
     pub train_loss_final: f64,
 }
 
@@ -116,6 +122,7 @@ pub fn run_measured(
     ])
 }
 
+/// Render the measured MiniCaffeNet rows as a Table-1-style table.
 pub fn render_measured(rows: &[MeasuredRow]) -> String {
     let mut t = Table::new(&[
         "model",

@@ -36,6 +36,8 @@ struct BucketState {
 }
 
 impl TokenBucket {
+    /// Bucket refilling `rate` tokens/second up to `burst` capacity
+    /// (starts full).
     pub fn new(rate: f64, burst: f64) -> TokenBucket {
         TokenBucket {
             rate,
@@ -47,6 +49,7 @@ impl TokenBucket {
         }
     }
 
+    /// Take one token now if available.
     pub fn try_acquire(&self) -> bool {
         self.try_acquire_at(Instant::now())
     }
@@ -80,6 +83,7 @@ pub enum AdmitError {
 }
 
 impl AdmitError {
+    /// The HTTP status this shed class maps to.
     pub fn status(&self) -> u16 {
         match self {
             AdmitError::RateLimited => 429,
@@ -87,6 +91,7 @@ impl AdmitError {
         }
     }
 
+    /// Human-readable shed reason (the response body message).
     pub fn as_str(&self) -> &'static str {
         match self {
             AdmitError::RateLimited => "rate limited",
@@ -110,6 +115,8 @@ pub struct Admission {
 }
 
 impl Admission {
+    /// Admission state from the gateway config, instruments registered
+    /// in `metrics`.
     pub fn new(cfg: &GatewayConfig, metrics: &Registry) -> Admission {
         Admission {
             bucket: (cfg.rate_rps > 0.0)
@@ -161,10 +168,12 @@ impl Admission {
         self.draining.store(true, Ordering::Release);
     }
 
+    /// Whether drain mode is active.
     pub fn is_draining(&self) -> bool {
         self.draining.load(Ordering::Acquire)
     }
 
+    /// Currently admitted (permit-held) request count.
     pub fn inflight(&self) -> u64 {
         self.inflight.get()
     }

@@ -51,10 +51,15 @@ impl fmt::Display for HttpError {
 /// A parsed inbound request. Header names are lowercased at parse time.
 #[derive(Debug)]
 pub struct Request {
+    /// HTTP method (e.g. `GET`, `POST`).
     pub method: String,
+    /// Request target as sent (may include a query string).
     pub path: String,
+    /// Protocol version (`HTTP/1.0` or `HTTP/1.1`).
     pub version: String,
+    /// Headers in arrival order, names lowercased.
     pub headers: Vec<(String, String)>,
+    /// Length-delimited body (empty without `Content-Length`).
     pub body: Vec<u8>,
 }
 
@@ -276,12 +281,16 @@ pub fn reason(status: u16) -> &'static str {
 /// [`Response::write_to`]; other headers accumulate via [`Response::with_header`].
 #[derive(Debug)]
 pub struct Response {
+    /// Status code.
     pub status: u16,
+    /// Extra headers (Content-Length/Connection are added on write).
     pub headers: Vec<(String, String)>,
+    /// Response body.
     pub body: Vec<u8>,
 }
 
 impl Response {
+    /// JSON response with `content-type: application/json`.
     pub fn json(status: u16, body: &crate::util::json::Json) -> Response {
         Response {
             status,
@@ -290,6 +299,7 @@ impl Response {
         }
     }
 
+    /// Plain-text response.
     pub fn text(status: u16, body: &str) -> Response {
         Response {
             status,
@@ -298,11 +308,13 @@ impl Response {
         }
     }
 
+    /// Builder-style extra header.
     pub fn with_header(mut self, name: &str, value: &str) -> Response {
         self.headers.push((name.to_string(), value.to_string()));
         self
     }
 
+    /// Serialize to the wire with explicit framing headers.
     pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> std::io::Result<()> {
         let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, reason(self.status));
         for (k, v) in &self.headers {
@@ -345,16 +357,21 @@ pub fn write_request<W: Write>(
 /// A parsed response on the client side.
 #[derive(Debug)]
 pub struct ClientResponse {
+    /// Status code.
     pub status: u16,
+    /// Headers in arrival order, names lowercased.
     pub headers: Vec<(String, String)>,
+    /// Length-delimited body.
     pub body: Vec<u8>,
 }
 
 impl ClientResponse {
+    /// Case-insensitive header lookup.
     pub fn header(&self, name: &str) -> Option<&str> {
         find_header(&self.headers, name)
     }
 
+    /// Body as UTF-8 (empty string when invalid).
     pub fn body_str(&self) -> &str {
         std::str::from_utf8(&self.body).unwrap_or("")
     }

@@ -32,7 +32,10 @@ pub enum ArrivalMode {
     /// Paced arrivals targeting this aggregate rate (requests/second).
     /// Workers are synchronous, so the rate is only reachable while
     /// `concurrency / latency` exceeds it; see the module docs.
-    Open { rps: f64 },
+    Open {
+        /// Aggregate target rate, requests/second.
+        rps: f64,
+    },
 }
 
 /// Load generator configuration.
@@ -40,6 +43,7 @@ pub enum ArrivalMode {
 pub struct LoadgenConfig {
     /// Gateway address, e.g. `"127.0.0.1:7878"`.
     pub addr: String,
+    /// Arrival process (closed or open loop).
     pub mode: ArrivalMode,
     /// Worker threads (each with its own keep-alive connection).
     pub concurrency: usize,
@@ -51,6 +55,7 @@ pub struct LoadgenConfig {
     pub rows_mix: Vec<usize>,
     /// Socket/request timeout.
     pub timeout: Duration,
+    /// RNG seed for the feature payloads.
     pub seed: u64,
 }
 
@@ -70,6 +75,7 @@ impl Default for LoadgenConfig {
 }
 
 impl LoadgenConfig {
+    /// Sanity-check concurrency/width/mix/rate.
     pub fn validate(&self) -> Result<(), String> {
         if self.concurrency == 0 {
             return Err("loadgen concurrency must be >= 1".into());
@@ -104,10 +110,15 @@ pub struct LoadReport {
     pub rows_ok: u64,
     /// Wall-clock run time in seconds.
     pub wall_s: f64,
+    /// Median latency of successful requests, milliseconds.
     pub p50_ms: f64,
+    /// 95th-percentile latency, milliseconds.
     pub p95_ms: f64,
+    /// 99th-percentile latency, milliseconds.
     pub p99_ms: f64,
+    /// Mean latency, milliseconds.
     pub mean_ms: f64,
+    /// Worst latency, milliseconds.
     pub max_ms: f64,
 }
 
@@ -131,6 +142,7 @@ impl LoadReport {
         }
     }
 
+    /// The report as a JSON document.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("sent", Json::Num(self.sent as f64)),
@@ -149,6 +161,7 @@ impl LoadReport {
         ])
     }
 
+    /// Human-readable multi-line summary.
     pub fn render(&self) -> String {
         format!(
             "loadgen: sent {} | ok {} | shed {} | errors {} | rows {}\n\
@@ -315,6 +328,9 @@ fn connect(addr: &str, timeout: Duration) -> Option<(TcpStream, BufReader<TcpStr
     let resolved = addr.to_socket_addrs().ok()?.next()?;
     let stream = TcpStream::connect_timeout(&resolved, timeout).ok()?;
     stream.set_read_timeout(Some(timeout)).ok()?;
+    // A write timeout too: a wedged peer that stops reading would
+    // otherwise park the worker in write_request past the run deadline.
+    stream.set_write_timeout(Some(timeout)).ok()?;
     stream.set_nodelay(true).ok()?;
     let reader = BufReader::new(stream.try_clone().ok()?);
     Some((stream, reader))

@@ -104,10 +104,12 @@ impl Gateway {
         self.addr
     }
 
+    /// The shared metrics registry (gateway + coordinator + workers).
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.shared.metrics
     }
 
+    /// Text metrics report (the non-Prometheus rendering).
     pub fn metrics_report(&self) -> String {
         self.shared.metrics.report()
     }

@@ -18,14 +18,18 @@
 //!                 load shedding with Retry-After, graceful drain)
 //!              → coordinator (bounded queue → bucketed dynamic batcher
 //!                 → worker pool, backpressure end to end)
-//!              → executors (PJRT artifacts with the `pjrt` feature,
-//!                 pure-Rust SELL reference otherwise)
+//!              → executors (PJRT artifacts with the `pjrt` feature;
+//!                 otherwise the pure-Rust batched SoA ACDC engine,
+//!                 [`dct::batch`] — 8-row lane panels, fused A/D/bias,
+//!                 panels fanned across the shared thread pool)
 //! ```
 //!
 //! Python never runs on the request path: `make artifacts` lowers once,
 //! and this crate loads/executes the artifacts via the PJRT C API. The
 //! default build has no PJRT dependency at all — `--features pjrt` swaps
 //! the runtime stubs for the real bindings.
+
+#![warn(missing_docs)]
 
 pub mod checkpoint;
 pub mod config;

@@ -49,6 +49,7 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
     match sub {
         "info" => cmd_info(rest),
         "params" => cmd_params(rest),
+        "bench" => cmd_bench(rest),
         "fig2" => cmd_fig2(rest),
         "fig3" => cmd_fig3(rest),
         "table1" => cmd_table1(rest),
@@ -69,7 +70,9 @@ const HELP: &str = "acdc — ACDC: A Structured Efficient Linear Layer (ICLR 201
 subcommands:
   info        inspect artifacts + PJRT platform
   params      Table-1 analytic parameter audit
-  fig2        Figure-2 runtime sweep (dense vs fused vs multipass ACDC)
+  bench       batched SoA engine vs per-row ACDC comparison (E9,
+              writes BENCH_acdc_batch.json)
+  fig2        Figure-2 runtime sweep (dense vs fused vs batched vs multipass ACDC)
   fig3        Figure-3 operator-approximation grid
   table1      Table-1 measured MiniCaffeNet leg
   train-cnn   end-to-end CNN training (E6)
@@ -109,6 +112,49 @@ fn cmd_params(rest: &[String]) -> Result<(), String> {
     print!("{}", table1::render_analytic());
     print!("{}", table1::render_fig4(None));
     Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt("sizes", "layer sizes to sweep", Some("256,1024")),
+        opt("batches", "batch sizes to sweep", Some("64,256")),
+        opt("out", "JSON report path", Some("BENCH_acdc_batch.json")),
+        flag("fast", "shrink measurement windows for smoke runs"),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let sizes = args.get_usize_list("sizes")?.unwrap();
+    let batches = args.get_usize_list("batches")?.unwrap();
+    let bench = if args.flag("fast") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let cases: Vec<(usize, usize)> = sizes
+        .iter()
+        .flat_map(|&n| batches.iter().map(move |&b| (n, b)))
+        .collect();
+    let rows = acdc::experiments::engine_bench::run(&cases, &bench);
+    print!("{}", acdc::experiments::engine_bench::render(&rows));
+    let out = args.get("out").unwrap();
+    acdc::experiments::engine_bench::write_json(
+        Path::new(out),
+        &rows,
+        "acdc bench (local cargo run)",
+    )?;
+    println!("wrote {out}");
+    match acdc::experiments::engine_bench::check_acceptance(&rows) {
+        Ok(()) => {
+            println!("acceptance: OK — serial batched engine ≥ 2x per-row at N=1024, batch=256");
+            Ok(())
+        }
+        // The target shape wasn't in the sweep: report, don't fail.
+        Err(e) if e.contains("no N=1024") => {
+            println!("acceptance: not applicable — {e}");
+            Ok(())
+        }
+        // The target shape was measured and missed the gate: nonzero exit.
+        Err(e) => Err(format!("acceptance FAILED — {e}")),
+    }
 }
 
 fn cmd_fig2(rest: &[String]) -> Result<(), String> {

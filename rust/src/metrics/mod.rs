@@ -16,14 +16,17 @@ pub struct Counter {
 }
 
 impl Counter {
+    /// Increment by one.
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Add `n` to the count.
     pub fn add(&self, n: u64) {
         self.value.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current count.
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }
@@ -38,10 +41,12 @@ pub struct Gauge {
 }
 
 impl Gauge {
+    /// Overwrite the gauge value.
     pub fn set(&self, v: u64) {
         self.value.store(v, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.value.load(Ordering::Relaxed)
     }
@@ -94,14 +99,17 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one duration sample.
     pub fn record(&self, d: Duration) {
         self.record_ns(d.as_nanos().min(u128::from(u64::MAX)) as u64);
     }
 
+    /// Record one sample, in nanoseconds.
     pub fn record_ns(&self, ns: u64) {
         let bucket = 63 - ns.max(1).leading_zeros() as usize;
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
@@ -110,10 +118,12 @@ impl Histogram {
         self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
+    /// Total samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean sample in nanoseconds (0 when empty).
     pub fn mean_ns(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -122,10 +132,12 @@ impl Histogram {
         self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
     }
 
+    /// Largest sample seen, in nanoseconds.
     pub fn max_ns(&self) -> u64 {
         self.max_ns.load(Ordering::Relaxed)
     }
 
+    /// Sum of all samples, in nanoseconds.
     pub fn sum_ns(&self) -> u64 {
         self.sum_ns.load(Ordering::Relaxed)
     }
@@ -157,10 +169,12 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Named counter (created on first use, shared thereafter).
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         Arc::clone(
             self.counters
@@ -171,6 +185,7 @@ impl Registry {
         )
     }
 
+    /// Named gauge (created on first use, shared thereafter).
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         Arc::clone(
             self.gauges
@@ -181,6 +196,7 @@ impl Registry {
         )
     }
 
+    /// Named histogram (created on first use, shared thereafter).
     pub fn histogram(&self, name: &str) -> Arc<Histogram> {
         Arc::clone(
             self.histograms

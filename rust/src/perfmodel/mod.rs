@@ -10,6 +10,7 @@
 /// Hardware roofline parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct Hardware {
+    /// Human-readable device name.
     pub name: &'static str,
     /// Peak floating-point throughput, FLOP/s.
     pub peak_flops: f64,

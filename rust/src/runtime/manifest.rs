@@ -10,12 +10,16 @@ use crate::util::json::Json;
 /// Element dtype of an artifact tensor (matches aot.py's `_dtype_str`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
 impl Dtype {
+    /// Parse aot.py's dtype string (`"f32"`, `"i32"`, `"u32"`).
     pub fn parse(s: &str) -> Result<Dtype, String> {
         match s {
             "f32" => Ok(Dtype::F32),
@@ -25,6 +29,7 @@ impl Dtype {
         }
     }
 
+    /// Bytes per element.
     pub fn size_bytes(&self) -> usize {
         4
     }
@@ -33,12 +38,16 @@ impl Dtype {
 /// One positional tensor spec.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TensorSpec {
+    /// Parameter name from the lowering.
     pub name: String,
+    /// Static shape.
     pub shape: Vec<usize>,
+    /// Element dtype.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -68,27 +77,37 @@ impl TensorSpec {
 /// One lowered artifact.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (the registry key).
     pub name: String,
+    /// HLO text file path (resolved against the manifest dir).
     pub file: PathBuf,
+    /// Positional input specs.
     pub inputs: Vec<TensorSpec>,
+    /// Positional output specs.
     pub outputs: Vec<TensorSpec>,
+    /// Free-form tags (`experiment`, `n`, `batch`, ...).
     pub tags: BTreeMap<String, Json>,
+    /// Content hash of the HLO text, when present.
     pub sha256: Option<String>,
 }
 
 impl ArtifactMeta {
+    /// String tag by key.
     pub fn tag_str(&self, key: &str) -> Option<&str> {
         self.tags.get(key).and_then(|v| v.as_str())
     }
 
+    /// Integer tag by key.
     pub fn tag_usize(&self, key: &str) -> Option<usize> {
         self.tags.get(key).and_then(|v| v.as_usize())
     }
 
+    /// Position of a named input.
     pub fn input_index(&self, name: &str) -> Option<usize> {
         self.inputs.iter().position(|s| s.name == name)
     }
 
+    /// Position of a named output.
     pub fn output_index(&self, name: &str) -> Option<usize> {
         self.outputs.iter().position(|s| s.name == name)
     }
@@ -97,13 +116,18 @@ impl ArtifactMeta {
 /// The full manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Schema version (must be 1).
     pub format: u64,
+    /// Seed used for the lowering's fixed permutations, when recorded.
     pub perm_seed: Option<u64>,
+    /// Every lowered artifact.
     pub artifacts: Vec<ArtifactMeta>,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Parse manifest JSON; `dir` anchors relative file paths.
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
         let root = Json::parse(text).map_err(|e| e.to_string())?;
         let format = root
@@ -173,6 +197,7 @@ impl Manifest {
         })
     }
 
+    /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest, String> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -180,6 +205,7 @@ impl Manifest {
         Manifest::parse(&text, dir)
     }
 
+    /// Artifact by name.
     pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
         self.artifacts.iter().find(|a| a.name == name)
     }

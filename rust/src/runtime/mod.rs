@@ -49,10 +49,12 @@ impl Engine {
         })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (or the stub's marker when disabled).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -164,6 +166,7 @@ pub fn execute_artifact(
 pub struct LoadedArtifact<'e> {
     #[allow(dead_code)]
     engine: &'e Engine,
+    /// The artifact's manifest contract.
     pub meta: ArtifactMeta,
     exe: Arc<xla::PjRtLoadedExecutable>,
 }

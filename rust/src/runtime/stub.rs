@@ -33,8 +33,11 @@ impl std::error::Error for Error {}
 /// Element types the runtime exchanges with executables.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ElementType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     S32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
@@ -42,14 +45,17 @@ pub enum ElementType {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always fails: PJRT is disabled in this build.
     pub fn cpu() -> Result<PjRtClient, Error> {
         Err(Error::disabled())
     }
 
+    /// Marker platform name for the disabled build.
     pub fn platform_name(&self) -> String {
         "pjrt-disabled".to_string()
     }
 
+    /// Always fails: PJRT is disabled in this build.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         Err(Error::disabled())
     }
@@ -59,6 +65,7 @@ impl PjRtClient {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails: PJRT is disabled in this build.
     pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
         Err(Error::disabled())
     }
@@ -68,6 +75,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Inert wrapper (nothing to convert without PJRT).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -78,6 +86,7 @@ impl XlaComputation {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Always fails: PJRT is disabled in this build.
     pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
         Err(Error::disabled())
     }
@@ -87,6 +96,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails: PJRT is disabled in this build.
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         Err(Error::disabled())
     }
@@ -96,6 +106,7 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Always fails: PJRT is disabled in this build.
     pub fn create_from_shape_and_untyped_data(
         _ty: ElementType,
         _shape: &[usize],
@@ -104,14 +115,17 @@ impl Literal {
         Err(Error::disabled())
     }
 
+    /// Always zero in the stub.
     pub fn element_count(&self) -> usize {
         0
     }
 
+    /// Always fails: PJRT is disabled in this build.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
         Err(Error::disabled())
     }
 
+    /// Always fails: PJRT is disabled in this build.
     pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
         Err(Error::disabled())
     }

@@ -13,12 +13,31 @@ use crate::tensor::Tensor;
 /// A typed host tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub enum HostValue {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
-    U32 { shape: Vec<usize>, data: Vec<u32> },
+    /// f32 tensor.
+    F32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major elements.
+        data: Vec<f32>,
+    },
+    /// i32 tensor.
+    I32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major elements.
+        data: Vec<i32>,
+    },
+    /// u32 tensor.
+    U32 {
+        /// Dimension sizes.
+        shape: Vec<usize>,
+        /// Flat row-major elements.
+        data: Vec<u32>,
+    },
 }
 
 impl HostValue {
+    /// Rank-0 f32 value.
     pub fn scalar_f32(v: f32) -> HostValue {
         HostValue::F32 {
             shape: vec![],
@@ -26,6 +45,7 @@ impl HostValue {
         }
     }
 
+    /// Rank-0 u32 value.
     pub fn scalar_u32(v: u32) -> HostValue {
         HostValue::U32 {
             shape: vec![],
@@ -33,6 +53,7 @@ impl HostValue {
         }
     }
 
+    /// f32 value copying a [`Tensor`]'s shape and data.
     pub fn from_tensor(t: &Tensor) -> HostValue {
         HostValue::F32 {
             shape: t.shape().to_vec(),
@@ -40,6 +61,7 @@ impl HostValue {
         }
     }
 
+    /// i32 value from shape + data (lengths must agree).
     pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostValue {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         HostValue::I32 {
@@ -48,6 +70,7 @@ impl HostValue {
         }
     }
 
+    /// Dimension sizes.
     pub fn shape(&self) -> &[usize] {
         match self {
             HostValue::F32 { shape, .. }
@@ -56,6 +79,7 @@ impl HostValue {
         }
     }
 
+    /// Element dtype.
     pub fn dtype(&self) -> Dtype {
         match self {
             HostValue::F32 { .. } => Dtype::F32,
@@ -64,6 +88,7 @@ impl HostValue {
         }
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape().iter().product()
     }
@@ -76,6 +101,7 @@ impl HostValue {
         }
     }
 
+    /// Borrow i32 payload (panics on dtype mismatch).
     pub fn as_i32(&self) -> &[i32] {
         match self {
             HostValue::I32 { data, .. } => data,

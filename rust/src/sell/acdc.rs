@@ -19,21 +19,35 @@
 use std::sync::Arc;
 
 use super::LinearOp;
-use crate::dct::DctPlan;
+use crate::dct::{BatchEngine, DctPlan, PlanCache, MIN_SOA_ROWS};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
 
 /// One ACDC layer: diagonals `a`, `d` and a spectral-domain `bias` (§6.2
 /// places biases on D only).
+///
+/// ```
+/// use acdc::sell::acdc::AcdcLayer;
+/// use acdc::tensor::Tensor;
+/// let layer = AcdcLayer::identity(8); // a = d = 1, bias = 0
+/// let x = Tensor::from_vec(&[2, 8], (0..16).map(|i| i as f32).collect());
+/// let y = layer.forward_batch(&x); // identity ACDC leaves x unchanged
+/// assert!(y.max_abs_diff(&x) < 1e-4);
+/// ```
 #[derive(Debug, Clone)]
 pub struct AcdcLayer {
+    /// Input-side diagonal `A`.
     pub a: Vec<f32>,
+    /// Spectral-domain diagonal `D`.
     pub d: Vec<f32>,
+    /// Spectral-domain bias (added after `D`, before `C⁻¹`).
     pub bias: Vec<f32>,
     plan: Arc<DctPlan>,
 }
 
 impl AcdcLayer {
+    /// Layer from explicit parameters over a shared plan.
     pub fn new(a: Vec<f32>, d: Vec<f32>, bias: Vec<f32>, plan: Arc<DctPlan>) -> AcdcLayer {
         let n = plan.len();
         assert_eq!(a.len(), n);
@@ -44,12 +58,7 @@ impl AcdcLayer {
 
     /// Identity layer (a = d = 1, bias = 0).
     pub fn identity(n: usize) -> AcdcLayer {
-        AcdcLayer::new(
-            vec![1.0; n],
-            vec![1.0; n],
-            vec![0.0; n],
-            Arc::new(DctPlan::new(n)),
-        )
+        AcdcLayer::new(vec![1.0; n], vec![1.0; n], vec![0.0; n], PlanCache::get(n))
     }
 
     /// Random layer with N(mean, sigma²) diagonals and zero bias.
@@ -58,14 +67,16 @@ impl AcdcLayer {
             rng.normal_vec(n, mean, sigma),
             rng.normal_vec(n, mean, sigma),
             vec![0.0; n],
-            Arc::new(DctPlan::new(n)),
+            PlanCache::get(n),
         )
     }
 
+    /// Layer width N.
     pub fn n(&self) -> usize {
         self.plan.len()
     }
 
+    /// The shared DCT plan (one per size, via [`PlanCache`]).
     pub fn plan(&self) -> &Arc<DctPlan> {
         &self.plan
     }
@@ -143,54 +154,43 @@ impl AcdcLayer {
         out
     }
 
-    /// Fused forward with rows split across `threads` scoped threads —
-    /// the CPU analogue of the paper's threadblock-per-batch-tile
-    /// parallelism (perf pass L3-2; see EXPERIMENTS.md §Perf).
-    pub fn forward_fused_parallel(&self, x: &Tensor, threads: usize) -> Tensor {
+    /// Batched SoA forward through the fused [`BatchEngine`] — the
+    /// serving hot path. One panel load and one panel store of traffic
+    /// per 8 rows (DESIGN.md §4); falls back to the scalar fused path
+    /// below [`MIN_SOA_ROWS`] rows, where padded lanes would waste work.
+    pub fn forward_batch(&self, x: &Tensor) -> Tensor {
         let n = self.n();
         assert_eq!(x.cols(), n);
         let rows = x.rows();
-        let threads = threads.clamp(1, rows.max(1));
-        if threads <= 1 || rows < 2 {
+        if rows < MIN_SOA_ROWS {
             return self.forward_fused(x);
         }
+        let engine = BatchEngine::new(Arc::clone(&self.plan));
         let mut out = Tensor::zeros(&[rows, n]);
-        let ranges = crate::util::threadpool::split_ranges(rows, threads);
-        // Split the output buffer into disjoint row chunks and process
-        // each chunk on its own thread with its own scratch.
-        let out_data = out.data_mut();
-        std::thread::scope(|scope| {
-            let mut rest = out_data;
-            for range in ranges {
-                let (chunk, tail) = rest.split_at_mut((range.end - range.start) * n);
-                rest = tail;
-                let layer = &*self;
-                let xref = &*x;
-                scope.spawn(move || {
-                    let mut scratch = vec![0.0f32; 4 * n];
-                    let count = range.end - range.start;
-                    let mut i = 0;
-                    while i + 1 < count {
-                        let (h, t) = chunk[i * n..].split_at_mut(n);
-                        layer.forward_rows_pair(
-                            xref.row(range.start + i),
-                            xref.row(range.start + i + 1),
-                            h,
-                            &mut t[..n],
-                            &mut scratch,
-                        );
-                        i += 2;
-                    }
-                    if i < count {
-                        layer.forward_row_fused(
-                            xref.row(range.start + i),
-                            &mut chunk[i * n..(i + 1) * n],
-                            &mut scratch,
-                        );
-                    }
-                });
-            }
-        });
+        engine.acdc_rows(&self.a, &self.d, &self.bias, x.data(), out.data_mut(), rows);
+        out
+    }
+
+    /// [`AcdcLayer::forward_batch`] with panels fanned out across `pool`
+    /// (the process-wide serving pool in production).
+    pub fn forward_batch_pooled(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let rows = x.rows();
+        if rows < MIN_SOA_ROWS {
+            return self.forward_fused(x);
+        }
+        let engine = BatchEngine::new(Arc::clone(&self.plan));
+        let mut out = Tensor::zeros(&[rows, n]);
+        engine.acdc_rows_parallel(
+            &self.a,
+            &self.d,
+            &self.bias,
+            x.data(),
+            out.data_mut(),
+            rows,
+            pool,
+        );
         out
     }
 
@@ -227,11 +227,61 @@ impl AcdcLayer {
     ///
     /// Given x and g = ∂L/∂y, returns (∂L/∂x, grads). `h2` is recomputed
     /// (§5: "recompute these during the backward pass ... saving memory").
+    /// From [`MIN_SOA_ROWS`] rows up all four DCTs run through the batched
+    /// SoA engine (materializing two `[rows, n]` intermediates); below
+    /// that the scalar path keeps the original O(n) scratch footprint.
     pub fn backward(&self, x: &Tensor, g: &Tensor) -> (Tensor, AcdcGrads) {
         let n = self.n();
         assert_eq!(x.cols(), n);
         assert_eq!(g.cols(), n);
         assert_eq!(x.rows(), g.rows());
+        let rows = x.rows();
+        if rows < MIN_SOA_ROWS {
+            return self.backward_scalar(x, g);
+        }
+        let engine = BatchEngine::new(Arc::clone(&self.plan));
+        let mut grads = AcdcGrads::zeros(n);
+        // recompute h2 = (x ⊙ a) · C — batched
+        let mut h2 = Tensor::zeros(&[rows, n]);
+        for r in 0..rows {
+            let xr = x.row(r);
+            let dst = h2.row_mut(r);
+            for i in 0..n {
+                dst[i] = xr[i] * self.a[i];
+            }
+        }
+        engine.dct2_rows(h2.data_mut(), rows);
+        // gh3 = g · C (eq. 10's C·∂L/∂y in row form) — batched
+        let mut gh = g.clone();
+        engine.dct2_rows(gh.data_mut(), rows);
+        for r in 0..rows {
+            let h2r = h2.row(r);
+            let ghr = gh.row_mut(r);
+            for i in 0..n {
+                grads.d[i] += h2r[i] * ghr[i]; // eq. 10
+                grads.bias[i] += ghr[i];
+                ghr[i] *= self.d[i]; // gh2
+            }
+        }
+        // gh1 = gh2 · Cᵀ — batched
+        engine.dct3_rows(gh.data_mut(), rows);
+        let mut gx = Tensor::zeros(&[rows, n]);
+        for r in 0..rows {
+            let xr = x.row(r);
+            let ghr = gh.row(r);
+            let gxr = gx.row_mut(r);
+            for i in 0..n {
+                grads.a[i] += xr[i] * ghr[i]; // eq. 12
+                gxr[i] = self.a[i] * ghr[i]; // eq. 14
+            }
+        }
+        (gx, grads)
+    }
+
+    /// Scalar backward (one row at a time, two n-length scratch buffers —
+    /// the original §5 memory trade, kept for tiny batches).
+    fn backward_scalar(&self, x: &Tensor, g: &Tensor) -> (Tensor, AcdcGrads) {
+        let n = self.n();
         let rows = x.rows();
         let mut gx = Tensor::zeros(&[rows, n]);
         let mut grads = AcdcGrads::zeros(n);
@@ -245,7 +295,7 @@ impl AcdcLayer {
                 h2[i] = xr[i] * self.a[i];
             }
             self.plan.dct2(&mut h2, &mut scratch);
-            // gh3 = g · C   (eq. 10's C·∂L/∂y in row form)
+            // gh3 = g · C (eq. 10's C·∂L/∂y in row form)
             gh.copy_from_slice(g.row(r));
             self.plan.dct2(&mut gh, &mut scratch);
             for i in 0..n {
@@ -284,7 +334,7 @@ impl LinearOp for AcdcLayer {
     }
 
     fn forward(&self, x: &Tensor) -> Tensor {
-        self.forward_fused(x)
+        self.forward_batch(x)
     }
 
     fn name(&self) -> &'static str {
@@ -295,12 +345,16 @@ impl LinearOp for AcdcLayer {
 /// Parameter gradients of one ACDC layer (batch-summed).
 #[derive(Debug, Clone)]
 pub struct AcdcGrads {
+    /// ∂L/∂a (eq. 12).
     pub a: Vec<f32>,
+    /// ∂L/∂d (eq. 10).
     pub d: Vec<f32>,
+    /// ∂L/∂bias.
     pub bias: Vec<f32>,
 }
 
 impl AcdcGrads {
+    /// Zero-initialized gradient accumulator of width `n`.
     pub fn zeros(n: usize) -> AcdcGrads {
         AcdcGrads {
             a: vec![0.0; n],
@@ -309,6 +363,7 @@ impl AcdcGrads {
         }
     }
 
+    /// Multiply every gradient by `s` (batch-mean normalization).
     pub fn scale(&mut self, s: f32) {
         for v in self.a.iter_mut().chain(&mut self.d).chain(&mut self.bias) {
             *v *= s;
@@ -320,6 +375,7 @@ impl AcdcGrads {
 /// fixed permutations after each layer and ReLU between layers.
 #[derive(Debug, Clone)]
 pub struct AcdcCascade {
+    /// The stacked ACDC layers (all sharing one [`DctPlan`]).
     pub layers: Vec<AcdcLayer>,
     /// Per-layer permutation applied after the layer (None = identity).
     pub perms: Option<Vec<Vec<u32>>>,
@@ -335,7 +391,7 @@ impl AcdcCascade {
     /// Linear cascade (no perms / ReLU) with the given diagonal init —
     /// the Figure-3 model.
     pub fn linear(n: usize, k: usize, init: super::init::DiagInit, rng: &mut Pcg32) -> Self {
-        let plan = Arc::new(DctPlan::new(n));
+        let plan = PlanCache::get(n);
         let layers = (0..k)
             .map(|_| {
                 AcdcLayer::new(
@@ -363,17 +419,32 @@ impl AcdcCascade {
         c
     }
 
+    /// Cascade width N.
     pub fn n(&self) -> usize {
         self.layers[0].n()
     }
 
+    /// Cascade depth K.
     pub fn k(&self) -> usize {
         self.layers.len()
     }
 
-    /// Fused forward through all layers (each row stays in scratch across
-    /// the entire cascade — the deep analogue of the single-call kernel).
+    /// Forward through all layers. Small batches take the scalar fused
+    /// row path (each row stays in scratch across the whole cascade);
+    /// from [`MIN_SOA_ROWS`] rows up, each layer runs through the batched
+    /// SoA engine ([`AcdcLayer::forward_batch`]).
     pub fn forward(&self, x: &Tensor) -> Tensor {
+        if x.rows() < MIN_SOA_ROWS {
+            self.forward_scalar(x)
+        } else {
+            self.forward_batch(x)
+        }
+    }
+
+    /// Scalar fused forward (one row through every layer while it sits in
+    /// scratch — the deep analogue of the single-call kernel; best for
+    /// latency-critical single rows).
+    fn forward_scalar(&self, x: &Tensor) -> Tensor {
         let n = self.n();
         assert_eq!(x.cols(), n);
         let rows = x.rows();
@@ -405,13 +476,49 @@ impl AcdcCascade {
         out
     }
 
+    /// Batched SoA forward: every layer is one fused panel sweep over the
+    /// whole batch, with perms/ReLU applied between layers.
+    pub fn forward_batch(&self, x: &Tensor) -> Tensor {
+        self.forward_layers(x, None)
+    }
+
+    /// [`AcdcCascade::forward_batch`] with panels fanned out across
+    /// `pool` — the serving executors' bulk path.
+    pub fn forward_pooled(&self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        self.forward_layers(x, Some(pool))
+    }
+
+    fn forward_layers(&self, x: &Tensor, pool: Option<&ThreadPool>) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let mut h = x.clone();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let mut y = match pool {
+                Some(p) => layer.forward_batch_pooled(&h, p),
+                None => layer.forward_batch(&h),
+            };
+            if let Some(perms) = &self.perms {
+                y = apply_perm(&y, &perms[li]);
+            }
+            if self.relu && li != self.layers.len() - 1 {
+                for v in y.data_mut().iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            h = y;
+        }
+        h
+    }
+
     /// Forward keeping per-layer inputs for the backward pass.
     pub fn forward_train(&self, x: &Tensor) -> (Tensor, CascadeCache) {
         let mut inputs = Vec::with_capacity(self.k());
         let mut h = x.clone();
         for (li, layer) in self.layers.iter().enumerate() {
             inputs.push(h.clone());
-            let mut y = layer.forward_fused(&h);
+            let mut y = layer.forward_batch(&h);
             if let Some(perms) = &self.perms {
                 y = apply_perm(&y, &perms[li]);
             }
@@ -485,6 +592,7 @@ impl AcdcCascade {
 pub struct CascadeCache {
     /// inputs[i] = input fed to layer i.
     pub inputs: Vec<Tensor>,
+    /// The cascade's final output (post-perm/ReLU of the last layer).
     pub output: Tensor,
 }
 
@@ -533,6 +641,69 @@ mod tests {
         let layer = AcdcLayer::identity(32);
         let x = rand_tensor(&mut rng, &[4, 32]);
         assert!(layer.forward_fused(&x).max_abs_diff(&x) < 1e-4);
+    }
+
+    #[test]
+    fn batch_forward_equals_fused() {
+        let mut rng = Pcg32::seeded(20);
+        for n in [8usize, 64, 256] {
+            let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+            layer.bias = rng.normal_vec(n, 0.0, 0.2);
+            for rows in [1usize, 3, 4, 9, 17] {
+                let x = rand_tensor(&mut rng, &[rows, n]);
+                let fused = layer.forward_fused(&x);
+                let batch = layer.forward_batch(&x);
+                assert!(fused.max_abs_diff(&batch) < 1e-4, "n={n} rows={rows}");
+                let pool = crate::util::threadpool::ThreadPool::new(3);
+                let pooled = layer.forward_batch_pooled(&x, &pool);
+                assert!(fused.max_abs_diff(&pooled) < 1e-4, "n={n} rows={rows} pooled");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_backward_equals_scalar_backward() {
+        // The SoA backward (rows ≥ MIN_SOA_ROWS) must agree with the
+        // scalar per-row path: run each row alone (scalar) and sum.
+        let mut rng = Pcg32::seeded(22);
+        let n = 16;
+        let rows = 9;
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.2);
+        layer.bias = rng.normal_vec(n, 0.0, 0.1);
+        let x = rand_tensor(&mut rng, &[rows, n]);
+        let g = rand_tensor(&mut rng, &[rows, n]);
+        let (gx, grads) = layer.backward(&x, &g);
+        let mut want_grads = AcdcGrads::zeros(n);
+        for r in 0..rows {
+            let xr = Tensor::from_vec(&[1, n], x.row(r).to_vec());
+            let gr = Tensor::from_vec(&[1, n], g.row(r).to_vec());
+            let (gxr, lg) = layer.backward(&xr, &gr); // 1 row → scalar path
+            for i in 0..n {
+                want_grads.a[i] += lg.a[i];
+                want_grads.d[i] += lg.d[i];
+                want_grads.bias[i] += lg.bias[i];
+                assert!((gx.get2(r, i) - gxr.get2(0, i)).abs() < 1e-4, "gx r={r} i={i}");
+            }
+        }
+        for i in 0..n {
+            assert!((grads.a[i] - want_grads.a[i]).abs() < 1e-3, "a[{i}]");
+            assert!((grads.d[i] - want_grads.d[i]).abs() < 1e-3, "d[{i}]");
+            assert!((grads.bias[i] - want_grads.bias[i]).abs() < 1e-3, "bias[{i}]");
+        }
+    }
+
+    #[test]
+    fn cascade_batch_equals_scalar_path() {
+        let mut rng = Pcg32::seeded(21);
+        let n = 32;
+        let cascade = AcdcCascade::nonlinear(n, 3, DiagInit::CAFFENET, &mut rng);
+        let x = rand_tensor(&mut rng, &[11, n]);
+        let scalar = cascade.forward_scalar(&x);
+        let batch = cascade.forward_batch(&x);
+        assert!(scalar.max_abs_diff(&batch) < 1e-4);
+        let pool = crate::util::threadpool::ThreadPool::new(2);
+        let pooled = cascade.forward_pooled(&x, &pool);
+        assert!(scalar.max_abs_diff(&pooled) < 1e-4);
     }
 
     #[test]

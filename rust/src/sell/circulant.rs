@@ -25,6 +25,7 @@ pub struct CirculantLayer {
 }
 
 impl CirculantLayer {
+    /// Layer from an explicit sign diagonal and defining vector.
     pub fn new(signs: Vec<f32>, r: Vec<f32>) -> CirculantLayer {
         let n = r.len();
         assert_eq!(signs.len(), n);
@@ -45,6 +46,7 @@ impl CirculantLayer {
         CirculantLayer::new(rng.sign_vec(n), rng.normal_vec(n, 0.0, std))
     }
 
+    /// Replace the defining vector (refreshes the cached spectrum).
     pub fn set_r(&mut self, r: Vec<f32>) {
         assert_eq!(r.len(), self.r.len());
         self.r = r;

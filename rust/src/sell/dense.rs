@@ -7,11 +7,14 @@ use crate::util::rng::Pcg32;
 /// `y = x·W + b` with a full [n, n] weight matrix.
 #[derive(Debug, Clone)]
 pub struct DenseLayer {
+    /// Weight matrix `[n, n]`.
     pub w: Tensor,
+    /// Optional bias row.
     pub b: Option<Vec<f32>>,
 }
 
 impl DenseLayer {
+    /// Layer from explicit weights (+ optional bias).
     pub fn new(w: Tensor, b: Option<Vec<f32>>) -> DenseLayer {
         assert_eq!(w.rank(), 2);
         if let Some(b) = &b {
@@ -48,6 +51,7 @@ impl DenseLayer {
         (gx, gw, gb)
     }
 
+    /// Plain SGD update of weights (and bias when present).
     pub fn sgd_step(&mut self, gw: &Tensor, gb: &[f32], lr: f32) {
         self.w.axpy(-lr, gw);
         if let Some(b) = &mut self.b {

@@ -2,8 +2,15 @@
 //! `Φ = S·H·G·P·H·B` with the three diagonals learned in the adaptive
 //! variant. The Hadamard products use an in-place fast Walsh–Hadamard
 //! transform (FWHT), the `H`-basis counterpart of this repo's DCT substrate.
+//!
+//! Batches ride the same lane-panel strategy as the batched ACDC engine
+//! ([`crate::dct::batch`]): [`fwht_soa`] runs the butterfly over
+//! [`crate::dct::LANES`] rows at once, and `FastfoodLayer::forward`
+//! fuses the whole `S·H·G·P·H·B` chain into one pack/unpack per panel.
 
 use super::LinearOp;
+use crate::dct::batch::{lane, lane_mut};
+use crate::dct::{LANES, MIN_SOA_ROWS};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 
@@ -34,17 +41,57 @@ pub fn fwht_normalized(x: &mut [f32]) {
     }
 }
 
+/// Structure-of-arrays FWHT over a lane panel: `x[k*LANES + l]` holds
+/// element `k` of lane `l` for `k < n`. Same butterfly schedule as
+/// [`fwht`], with each addition applied to all [`LANES`] lanes — the
+/// Hadamard counterpart of the batched DCT engine's SoA FFT.
+pub fn fwht_soa(x: &mut [f32], n: usize) {
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    assert_eq!(x.len(), n * LANES);
+    let mut h = 1;
+    while h < n {
+        for start in (0..n).step_by(h * 2) {
+            for i in start..start + h {
+                let (head, tail) = x.split_at_mut((i + h) * LANES);
+                let a: &mut [f32; LANES] =
+                    (&mut head[i * LANES..(i + 1) * LANES]).try_into().unwrap();
+                let b: &mut [f32; LANES] = (&mut tail[..LANES]).try_into().unwrap();
+                for l in 0..LANES {
+                    let (va, vb) = (a[l], b[l]);
+                    a[l] = va + vb;
+                    b[l] = va - vb;
+                }
+            }
+        }
+        h *= 2;
+    }
+}
+
+/// Orthonormal [`fwht_soa`] (scales by 1/√n).
+pub fn fwht_soa_normalized(x: &mut [f32], n: usize) {
+    fwht_soa(x, n);
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+}
+
 /// Adaptive Fastfood layer: `y = ((((x ⊙ b)·H)[perm] ⊙ g)·H) ⊙ s`,
 /// H orthonormal Hadamard, `b`, `g`, `s` learned diagonals, `perm` fixed.
 #[derive(Debug, Clone)]
 pub struct FastfoodLayer {
+    /// Output-side scaling diagonal `S`.
     pub s: Vec<f32>,
+    /// Mid-chain Gaussian diagonal `G`.
     pub g: Vec<f32>,
+    /// Input-side binary diagonal `B`.
     pub b: Vec<f32>,
+    /// Fixed permutation `P`.
     pub perm: Vec<u32>,
 }
 
 impl FastfoodLayer {
+    /// Layer from explicit parameters (all length-n, n a power of two).
     pub fn new(s: Vec<f32>, g: Vec<f32>, b: Vec<f32>, perm: Vec<u32>) -> FastfoodLayer {
         let n = s.len();
         assert!(n.is_power_of_two());
@@ -80,6 +127,46 @@ impl FastfoodLayer {
             out[i] = buf[i] * self.s[i];
         }
     }
+
+    /// One SoA lane panel through the full fused `S·H·G·P·H·B` chain:
+    /// the `b` scale rides the pack, `g` rides the permutation gather,
+    /// `s` rides the unpack — one load/store per panel, all butterflies
+    /// over the lane dimension.
+    fn forward_panel(
+        &self,
+        x: &[f32],
+        out: &mut [f32],
+        r0: usize,
+        take: usize,
+        buf: &mut [f32],
+        buf2: &mut [f32],
+    ) {
+        let n = self.width();
+        buf.fill(0.0);
+        for l in 0..take {
+            let row = &x[(r0 + l) * n..(r0 + l + 1) * n];
+            for k in 0..n {
+                buf[k * LANES + l] = row[k] * self.b[k];
+            }
+        }
+        fwht_soa_normalized(buf, n);
+        // P then G in one gather: buf2[k] = buf[perm[k]] · g[k] (lane-wise).
+        for (k, &p) in self.perm.iter().enumerate() {
+            let gk = self.g[k];
+            let src = lane(buf, p as usize);
+            let dst = lane_mut(buf2, k);
+            for l in 0..LANES {
+                dst[l] = src[l] * gk;
+            }
+        }
+        fwht_soa_normalized(buf2, n);
+        for l in 0..take {
+            let row = &mut out[(r0 + l) * n..(r0 + l + 1) * n];
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = buf2[k * LANES + l] * self.s[k];
+            }
+        }
+    }
 }
 
 impl LinearOp for FastfoodLayer {
@@ -94,10 +181,23 @@ impl LinearOp for FastfoodLayer {
     fn forward(&self, x: &Tensor) -> Tensor {
         let n = self.width();
         assert_eq!(x.cols(), n);
-        let mut out = Tensor::zeros(&[x.rows(), n]);
-        for r in 0..x.rows() {
-            let src = x.row(r).to_vec();
-            self.forward_row(&src, out.row_mut(r));
+        let rows = x.rows();
+        let mut out = Tensor::zeros(&[rows, n]);
+        if rows < MIN_SOA_ROWS {
+            for r in 0..rows {
+                let src = x.row(r).to_vec();
+                self.forward_row(&src, out.row_mut(r));
+            }
+            return out;
+        }
+        // Lane-panel SoA path (same batching strategy as dct::batch).
+        let mut buf = vec![0.0f32; n * LANES];
+        let mut buf2 = vec![0.0f32; n * LANES];
+        let mut r = 0;
+        while r < rows {
+            let take = LANES.min(rows - r);
+            self.forward_panel(x.data(), out.data_mut(), r, take, &mut buf, &mut buf2);
+            r += take;
         }
         out
     }
@@ -210,5 +310,49 @@ mod tests {
     fn fwht_rejects_non_pow2() {
         let mut x = vec![0.0; 12];
         fwht(&mut x);
+    }
+
+    #[test]
+    fn soa_fwht_matches_scalar_per_lane() {
+        let mut rng = Pcg32::seeded(6);
+        for n in [1usize, 2, 16, 64] {
+            let rows: Vec<Vec<f32>> = (0..LANES).map(|_| rng.normal_vec(n, 0.0, 1.0)).collect();
+            let mut soa = vec![0.0f32; n * LANES];
+            for (l, row) in rows.iter().enumerate() {
+                for k in 0..n {
+                    soa[k * LANES + l] = row[k];
+                }
+            }
+            fwht_soa_normalized(&mut soa, n);
+            for (l, row) in rows.iter().enumerate() {
+                let mut want = row.clone();
+                fwht_normalized(&mut want);
+                for k in 0..n {
+                    assert!((soa[k * LANES + l] - want[k]).abs() < 1e-4, "n={n} l={l} k={k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_forward_matches_per_row() {
+        let mut rng = Pcg32::seeded(7);
+        for n in [8usize, 32] {
+            let layer = FastfoodLayer::random(n, &mut rng);
+            for rows in [4usize, 9, 17] {
+                let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+                let batched = layer.forward(&x); // rows ≥ MIN_SOA_ROWS → panel path
+                for r in 0..rows {
+                    let mut want = vec![0.0f32; n];
+                    layer.forward_row(x.row(r), &mut want);
+                    for k in 0..n {
+                        assert!(
+                            (batched.get2(r, k) - want[k]).abs() < 1e-4,
+                            "n={n} rows={rows} r={r} k={k}"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -10,7 +10,9 @@ use crate::util::rng::Pcg32;
 /// A named diagonal-initialization scheme.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DiagInit {
+    /// Mean of the Gaussian draw.
     pub mean: f64,
+    /// Standard deviation of the Gaussian draw.
     pub sigma: f64,
 }
 
@@ -38,6 +40,7 @@ impl DiagInit {
         rng.normal_vec(n, self.mean, self.sigma)
     }
 
+    /// Figure-3-style label, e.g. `N(1, 1e-2)`.
     pub fn label(&self) -> String {
         format!("N({}, {:.0e})", self.mean, self.sigma * self.sigma)
     }

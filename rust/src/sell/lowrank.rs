@@ -8,11 +8,14 @@ use crate::util::rng::Pcg32;
 /// `y = (x·U)·V`.
 #[derive(Debug, Clone)]
 pub struct LowRankLayer {
-    pub u: Tensor, // [n, r]
-    pub v: Tensor, // [r, n]
+    /// Left factor `[n, r]`.
+    pub u: Tensor,
+    /// Right factor `[r, n]`.
+    pub v: Tensor,
 }
 
 impl LowRankLayer {
+    /// Layer from explicit factors (shapes must chain to square).
     pub fn new(u: Tensor, v: Tensor) -> LowRankLayer {
         assert_eq!(u.rank(), 2);
         assert_eq!(v.rank(), 2);
@@ -21,6 +24,7 @@ impl LowRankLayer {
         LowRankLayer { u, v }
     }
 
+    /// Random factors at 1/√n scale.
     pub fn random(n: usize, rank: usize, rng: &mut Pcg32) -> LowRankLayer {
         let s = 1.0 / (n as f64).sqrt();
         LowRankLayer::new(
@@ -49,6 +53,7 @@ impl LowRankLayer {
         LowRankLayer::new(q, v)
     }
 
+    /// The factorization rank r.
     pub fn rank(&self) -> usize {
         self.u.cols()
     }

@@ -10,6 +10,7 @@
 /// One Table-1 row.
 #[derive(Debug, Clone)]
 pub struct Table1Row {
+    /// Method name as printed in the paper.
     pub method: &'static str,
     /// Published top-1 error increase (percentage points).
     pub err_increase_pct: f64,
@@ -39,16 +40,21 @@ pub mod caffenet {
         (384, 192, 3, 3), // grouped
         (256, 192, 3, 3), // grouped
     ];
+    /// fc6 (in, out).
     pub const FC6: (u64, u64) = (9216, 4096);
+    /// fc7 (in, out).
     pub const FC7: (u64, u64) = (4096, 4096);
+    /// fc8 / classifier (in, out).
     pub const FC8: (u64, u64) = (4096, 1000);
 
     /// Width of the paper's ACDC stack replacing fc6/fc7. The paper's
     /// "combined 165,888 parameters" for 12 layers implies 3N·12 = 165,888
     /// → N = 4608 (the pooled conv5 features are reduced 9216→4608).
     pub const ACDC_WIDTH: u64 = 4608;
+    /// Depth of the paper's ACDC stack.
     pub const ACDC_LAYERS: u64 = 12;
 
+    /// Parameters of conv1..conv5 (biases included).
     pub fn conv_params() -> u64 {
         CONVS
             .iter()
@@ -56,6 +62,7 @@ pub mod caffenet {
             .sum()
     }
 
+    /// Parameters of fc6 + fc7 + fc8 (biases included).
     pub fn fc_params() -> u64 {
         let (i6, o6) = FC6;
         let (i7, o7) = FC7;
@@ -63,6 +70,7 @@ pub mod caffenet {
         (i6 * o6 + o6) + (i7 * o7 + o7) + (i8 * o8 + o8)
     }
 
+    /// Whole-model parameter count.
     pub fn total_params() -> u64 {
         conv_params() + fc_params()
     }
@@ -223,34 +231,44 @@ pub fn table1_rows() -> Vec<Table1Row> {
 /// MiniCaffeNet (the measured S2 substitution) parameter audit, matching
 /// `python/compile/model.py` exactly.
 pub mod mini {
+    /// FC-block width.
     pub const N_FEAT: u64 = 256;
+    /// ACDC stack depth.
     pub const K: u64 = 12;
+    /// Classifier classes.
     pub const N_CLASSES: u64 = 10;
 
+    /// Conv feature-extractor parameters.
     pub fn conv_params() -> u64 {
         (5 * 5 * 1 * 8 + 8) + (3 * 3 * 8 * 16 + 16)
     }
 
+    /// Dense FC-block parameters (the reference variant).
     pub fn dense_fc_params() -> u64 {
         2 * (N_FEAT * N_FEAT + N_FEAT)
     }
 
+    /// ACDC FC-block parameters (the compressed variant).
     pub fn acdc_fc_params() -> u64 {
         super::acdc_stack_params(N_FEAT, K)
     }
 
+    /// Classifier head parameters.
     pub fn classifier_params() -> u64 {
         N_FEAT * N_CLASSES + N_CLASSES
     }
 
+    /// Whole-model parameters, dense variant.
     pub fn dense_total() -> u64 {
         conv_params() + dense_fc_params() + classifier_params()
     }
 
+    /// Whole-model parameters, ACDC variant.
     pub fn acdc_total() -> u64 {
         conv_params() + acdc_fc_params() + classifier_params()
     }
 
+    /// dense/ACDC parameter ratio (the Table-1 headline).
     pub fn reduction() -> f64 {
         dense_total() as f64 / acdc_total() as f64
     }

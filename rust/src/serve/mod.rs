@@ -25,11 +25,16 @@ use crate::tensor::Tensor;
 /// `serve_cascade_*` manifest inputs, minus the feature batch).
 #[derive(Debug, Clone)]
 pub struct ServeParams {
-    pub a_stack: Tensor,    // [K, N]
-    pub d_stack: Tensor,    // [K, N]
-    pub bias_stack: Tensor, // [K, N]
-    pub cls_w: Tensor,      // [N, classes]
-    pub cls_b: Tensor,      // [classes]
+    /// Stacked `A` diagonals, `[K, N]`.
+    pub a_stack: Tensor,
+    /// Stacked `D` diagonals, `[K, N]`.
+    pub d_stack: Tensor,
+    /// Stacked spectral biases, `[K, N]`.
+    pub bias_stack: Tensor,
+    /// Classifier weights, `[N, classes]`.
+    pub cls_w: Tensor,
+    /// Classifier bias, `[classes]`.
+    pub cls_b: Tensor,
 }
 
 impl ServeParams {
@@ -99,6 +104,7 @@ pub struct PjrtCascadeExecutor {
 }
 
 impl PjrtCascadeExecutor {
+    /// Open the artifacts dir and eagerly compile every serve bucket.
     pub fn new(artifacts_dir: &PathBuf, params: ServeParams) -> Result<Self, String> {
         let engine = Engine::open(artifacts_dir)?;
         let mut compiled = HashMap::new();
@@ -138,6 +144,7 @@ impl PjrtCascadeExecutor {
         })
     }
 
+    /// Compiled batch buckets, ascending.
     pub fn buckets(&self) -> Vec<usize> {
         let mut b: Vec<usize> = self.compiled.keys().copied().collect();
         b.sort_unstable();
@@ -221,11 +228,14 @@ impl Server {
         self.coordinator.width()
     }
 
+    /// Submit one row and block for its output.
     pub fn infer(&self, features: Vec<f32>, timeout: Duration) -> Result<Vec<f32>, String> {
         let resp = self.coordinator.infer(features, timeout)?;
         resp.output
     }
 
+    /// Submit one row; returns the response receiver (see
+    /// [`Coordinator::submit`]).
     pub fn submit(
         &self,
         features: Vec<f32>,
@@ -234,14 +244,17 @@ impl Server {
         self.coordinator.submit(features)
     }
 
+    /// Text metrics report.
     pub fn metrics_report(&self) -> String {
         self.metrics.report()
     }
 
+    /// The shared metrics registry.
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.metrics
     }
 
+    /// Graceful shutdown: stop intake, drain, join workers.
     pub fn shutdown(self) {
         self.coordinator.shutdown();
     }

@@ -37,6 +37,7 @@ impl Tensor {
         }
     }
 
+    /// All-zeros tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -44,6 +45,7 @@ impl Tensor {
         }
     }
 
+    /// All-ones tensor of the given shape.
     pub fn ones(shape: &[usize]) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -51,6 +53,7 @@ impl Tensor {
         }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn full(shape: &[usize], v: f32) -> Tensor {
         Tensor {
             shape: shape.to_vec(),
@@ -67,26 +70,32 @@ impl Tensor {
         t
     }
 
+    /// The shape (dimension sizes).
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.data.len()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
 
+    /// Flat row-major element view.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable flat row-major element view.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the flat element vector.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
@@ -123,10 +132,12 @@ impl Tensor {
         self
     }
 
+    /// Element (i, j) of a 2-D tensor.
     pub fn get2(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols() + j]
     }
 
+    /// Set element (i, j) of a 2-D tensor.
     pub fn set2(&mut self, i: usize, j: usize, v: f32) {
         let c = self.cols();
         self.data[i * c + j] = v;
@@ -155,6 +166,7 @@ impl Tensor {
         }
     }
 
+    /// Elementwise sum into a new tensor.
     pub fn add(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         Tensor {
@@ -168,6 +180,7 @@ impl Tensor {
         }
     }
 
+    /// Elementwise difference into a new tensor.
     pub fn sub(&self, other: &Tensor) -> Tensor {
         assert_eq!(self.shape, other.shape);
         Tensor {

@@ -29,12 +29,16 @@ use crate::util::rng::Pcg32;
 /// Drives `fig3_step_k{K}` (or `fig3_dense_step` when `k == 0`).
 pub struct Fig3Trainer<'e> {
     engine: &'e Engine,
+    /// Cascade depth (0 = dense baseline).
     pub k: usize,
+    /// Operator width from the artifact's tags.
     pub n: usize,
+    /// Minibatch size from the artifact's tags.
     pub batch: usize,
 }
 
 impl<'e> Fig3Trainer<'e> {
+    /// Bind to the depth-K train-step artifact.
     pub fn new(engine: &'e Engine, k: usize) -> Result<Fig3Trainer<'e>, String> {
         let name = if k == 0 {
             "fig3_dense_step".to_string()
@@ -124,10 +128,12 @@ impl<'e> Fig3Trainer<'e> {
 /// Pure-rust Figure-3 trainer (cross-checks the artifact path and runs
 /// without artifacts).
 pub struct Fig3NativeTrainer {
+    /// The cascade being trained.
     pub cascade: AcdcCascade,
 }
 
 impl Fig3NativeTrainer {
+    /// Fresh linear cascade with the given init.
     pub fn new(n: usize, k: usize, init: DiagInit, seed: u64) -> Fig3NativeTrainer {
         let mut rng = Pcg32::seeded(seed);
         Fig3NativeTrainer {
@@ -135,6 +141,7 @@ impl Fig3NativeTrainer {
         }
     }
 
+    /// Run SGD for `steps` minibatch steps; returns the loss curve.
     pub fn run(
         &mut self,
         task: &RegressionTask,
@@ -171,11 +178,14 @@ impl Fig3NativeTrainer {
 /// Which FC-block variant to train.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CnnVariant {
+    /// FC block replaced by the 12-layer ACDC stack.
     Acdc,
+    /// Dense FC block (the reference).
     Dense,
 }
 
 impl CnnVariant {
+    /// Name of the lowered train-step artifact.
     pub fn train_artifact(&self) -> &'static str {
         match self {
             CnnVariant::Acdc => "cnn_acdc_train_step",
@@ -183,6 +193,7 @@ impl CnnVariant {
         }
     }
 
+    /// Name of the lowered eval artifact.
     pub fn eval_artifact(&self) -> &'static str {
         match self {
             CnnVariant::Acdc => "cnn_acdc_eval",
@@ -194,14 +205,18 @@ impl CnnVariant {
 /// Result of one evaluation pass.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalResult {
+    /// Mean loss over the evaluated examples.
     pub loss: f64,
+    /// Fraction classified correctly.
     pub accuracy: f64,
+    /// Examples evaluated.
     pub examples: usize,
 }
 
 /// Artifact-driven MiniCaffeNet trainer.
 pub struct CnnTrainer<'e> {
     engine: &'e Engine,
+    /// Which FC-block variant this trainer drives.
     pub variant: CnnVariant,
     /// Current parameter bank, positionally matching the artifact inputs
     /// (params then momenta).
@@ -259,6 +274,7 @@ impl<'e> CnnTrainer<'e> {
         })
     }
 
+    /// Minibatch size the train artifact was compiled for.
     pub fn train_batch_size(&self) -> usize {
         self.train_batch
     }

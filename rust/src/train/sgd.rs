@@ -7,12 +7,16 @@
 /// by 0.1 every 100,000 iterations").
 #[derive(Debug, Clone)]
 pub struct StepDecay {
+    /// Learning rate at step 0.
     pub base_lr: f64,
+    /// Multiplier applied at each decay.
     pub factor: f64,
+    /// Steps between decays.
     pub every: usize,
 }
 
 impl StepDecay {
+    /// Schedule multiplying `base_lr` by `factor` every `every` steps.
     pub fn new(base_lr: f64, factor: f64, every: usize) -> StepDecay {
         assert!(base_lr > 0.0 && factor > 0.0 && every > 0);
         StepDecay {
@@ -32,6 +36,7 @@ impl StepDecay {
         StepDecay::new(0.1, 0.1, 100_000)
     }
 
+    /// Learning rate at the given step.
     pub fn lr_at(&self, step: usize) -> f64 {
         let decays = if self.every == usize::MAX {
             0
@@ -45,11 +50,13 @@ impl StepDecay {
 /// Momentum buffers for a bank of equally-shaped vectors.
 #[derive(Debug, Clone)]
 pub struct Momentum {
+    /// Velocity decay coefficient.
     pub beta: f32,
     bufs: Vec<Vec<f32>>,
 }
 
 impl Momentum {
+    /// Zeroed velocity buffers of the given sizes.
     pub fn new(beta: f32, sizes: &[usize]) -> Momentum {
         Momentum {
             beta,
@@ -75,11 +82,14 @@ impl Momentum {
 /// A recorded loss curve: (step, loss) samples with convergence helpers.
 #[derive(Debug, Clone, Default)]
 pub struct LossCurve {
+    /// (step, loss) samples in recording order.
     pub points: Vec<(usize, f64)>,
+    /// Curve label for rendering.
     pub label: String,
 }
 
 impl LossCurve {
+    /// Empty curve with a label.
     pub fn new(label: &str) -> LossCurve {
         LossCurve {
             points: vec![],
@@ -87,14 +97,17 @@ impl LossCurve {
         }
     }
 
+    /// Record one (step, loss) sample.
     pub fn push(&mut self, step: usize, loss: f64) {
         self.points.push((step, loss));
     }
 
+    /// First recorded loss.
     pub fn first(&self) -> Option<f64> {
         self.points.first().map(|p| p.1)
     }
 
+    /// Last recorded loss.
     pub fn last(&self) -> Option<f64> {
         self.points.last().map(|p| p.1)
     }

@@ -17,16 +17,24 @@ pub fn black_box<T>(x: T) -> T {
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Case label.
     pub name: String,
+    /// Total iterations measured.
     pub iters: usize,
+    /// Median per-iteration time, nanoseconds.
     pub median_ns: f64,
+    /// Mean per-iteration time, nanoseconds.
     pub mean_ns: f64,
+    /// 10th-percentile per-iteration time, nanoseconds.
     pub p10_ns: f64,
+    /// 90th-percentile per-iteration time, nanoseconds.
     pub p90_ns: f64,
+    /// Median absolute deviation, nanoseconds.
     pub mad_ns: f64,
 }
 
 impl Measurement {
+    /// Median per-iteration time as a `Duration`.
     pub fn median(&self) -> Duration {
         Duration::from_nanos(self.median_ns as u64)
     }
@@ -41,9 +49,13 @@ impl Measurement {
 /// Benchmark runner configuration.
 #[derive(Debug, Clone)]
 pub struct Bench {
+    /// Warmup/calibration window before measuring.
     pub warmup: Duration,
+    /// Measurement window.
     pub measure: Duration,
+    /// Minimum timed samples regardless of window.
     pub min_iters: usize,
+    /// Hard cap on total iterations.
     pub max_iters: usize,
 }
 
@@ -151,6 +163,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -158,11 +171,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells);
     }
 
+    /// Render with right-aligned, width-fitted columns.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
@@ -190,6 +205,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

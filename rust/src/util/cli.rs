@@ -10,9 +10,13 @@ use std::fmt::Write as _;
 /// Declared option (for usage text and validation).
 #[derive(Debug, Clone)]
 pub struct OptSpec {
+    /// Option name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value applied when the option is absent.
     pub default: Option<&'static str>,
+    /// True for boolean flags (no value).
     pub is_flag: bool,
 }
 
@@ -99,10 +103,12 @@ impl Args {
         s
     }
 
+    /// Whether a boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw option value (falling back to the declared default).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str()).or_else(|| {
             self.specs
@@ -112,16 +118,19 @@ impl Args {
         })
     }
 
+    /// Owned option value (falling back to the declared default).
     pub fn get_string(&self, name: &str) -> Option<String> {
         self.get(name).map(|s| s.to_string())
     }
 
+    /// Option value parsed as usize.
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")))
             .transpose()
     }
 
+    /// Option value parsed as f64.
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.get(name)
             .map(|v| v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")))
@@ -144,6 +153,7 @@ impl Args {
         }
     }
 
+    /// Positional (non-option) arguments in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

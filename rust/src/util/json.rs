@@ -10,15 +10,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always carried as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for stable serialization).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// The boolean payload, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -26,6 +33,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -33,10 +41,12 @@ impl Json {
         }
     }
 
+    /// The number truncated to i64, if this is a `Num`.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().map(|n| n as i64)
     }
 
+    /// The number as usize if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|n| {
             if n >= 0.0 && n.fract() == 0.0 {
@@ -47,6 +57,7 @@ impl Json {
         })
     }
 
+    /// The string payload, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -54,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -61,6 +73,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -73,11 +86,14 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
-    /// Parse a JSON document.
+    /// Parse a JSON document. Nesting is capped at [`MAX_DEPTH`] so
+    /// adversarial input (the gateway feeds this untrusted bodies)
+    /// cannot overflow the stack.
     pub fn parse(input: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: input.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -201,7 +217,9 @@ fn write_escaped(s: &str, out: &mut String) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the error in the input.
     pub pos: usize,
 }
 
@@ -216,6 +234,7 @@ impl std::error::Error for JsonError {}
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -224,6 +243,15 @@ impl<'a> Parser<'a> {
             msg: msg.to_string(),
             pos: self.pos,
         }
+    }
+
+    /// Bump the container depth, rejecting pathological nesting.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -254,8 +282,18 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json, JsonError> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                self.descend()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            Some(b'[') => {
+                self.descend()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -426,6 +464,11 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+/// Deepest container nesting [`Json::parse`] accepts. Recursive descent
+/// uses one stack frame per level; 128 levels is far beyond any real
+/// payload while keeping worst-case stack use trivially small.
+pub const MAX_DEPTH: usize = 128;
+
 /// Convenience builder for object literals in report writers.
 pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
@@ -470,6 +513,20 @@ mod tests {
     fn parses_unicode_passthrough() {
         let v = Json::parse("\"héllo ☃\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ☃"));
+    }
+
+    #[test]
+    fn deep_nesting_is_rejected_not_stack_overflow() {
+        // The gateway feeds untrusted bodies to this parser; a ~40 KB
+        // bracket bomb must yield a parse error, not a process abort.
+        let bomb = "[".repeat(50_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // At the limit, parsing still succeeds.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(Json::parse(&ok).is_ok());
+        let over = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&over).is_err());
     }
 
     #[test]

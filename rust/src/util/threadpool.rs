@@ -45,7 +45,15 @@ impl ThreadPool {
                         };
                         match msg {
                             Ok(Msg::Run(job)) => {
-                                job();
+                                // A panicking job must not kill the worker:
+                                // the pool is process-wide (`global()`) and a
+                                // dead worker would silently shrink serving
+                                // capacity for the rest of the process. The
+                                // panic still surfaces to `map` callers via
+                                // the dropped result sender.
+                                let _ = std::panic::catch_unwind(
+                                    std::panic::AssertUnwindSafe(job),
+                                );
                                 queued.fetch_sub(1, Ordering::SeqCst);
                             }
                             Ok(Msg::Shutdown) | Err(_) => break,
@@ -70,6 +78,7 @@ impl ThreadPool {
         Self::new(n)
     }
 
+    /// Number of worker threads in the pool.
     pub fn size(&self) -> usize {
         self.size
     }
@@ -129,6 +138,16 @@ impl Drop for ThreadPool {
             let _ = h.join();
         }
     }
+}
+
+/// Process-wide shared pool for data-parallel kernels (lazily spawned at
+/// the machine's parallelism). Used by the batched ACDC engine's panel
+/// fan-out ([`crate::dct::batch`]) and the native serving executors, so
+/// concurrent batches share one fixed set of compute threads instead of
+/// spawning per call.
+pub fn global() -> &'static ThreadPool {
+    static POOL: std::sync::OnceLock<ThreadPool> = std::sync::OnceLock::new();
+    POOL.get_or_init(ThreadPool::with_default_size)
 }
 
 /// Split `0..len` into at most `parts` contiguous ranges of near-equal size.
@@ -207,6 +226,37 @@ mod tests {
     #[test]
     fn split_ranges_empty_len() {
         assert!(split_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_workers() {
+        let pool = ThreadPool::new(1); // single worker: a dead one would wedge
+        pool.execute(|| panic!("boom"));
+        // The same worker must still drain subsequent jobs.
+        let out = pool.map(3, |i| i + 1);
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn map_propagates_job_panic_without_wedging() {
+        let pool = ThreadPool::new(2);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(4, |i| {
+                assert!(i != 2, "induced failure");
+                i
+            })
+        }));
+        assert!(res.is_err(), "map must surface the job panic");
+        // And the pool stays usable afterwards.
+        assert_eq!(pool.map(2, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_works() {
+        let p1 = global();
+        let p2 = global();
+        assert!(std::ptr::eq(p1, p2));
+        assert_eq!(p1.map(4, |i| i * 2), vec![0, 2, 4, 6]);
     }
 
     #[test]

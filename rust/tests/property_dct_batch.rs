@@ -1,0 +1,171 @@
+//! Property tests for the batched SoA DCT/ACDC engine (hand-rolled
+//! generative harness, matching tests/property_sell.rs).
+//!
+//! The acceptance grid from the batched-engine PR: both row drivers
+//! (`DctPlan::dct2_rows/dct3_rows`, scalar pair path) and the SoA
+//! [`BatchEngine`] must match the `naive_dct2`/`naive_dct3` f64 oracles
+//! within 1e-4 across sizes {2, 8, 64, 512} × batches {1, 3, 16, 257},
+//! and `dct3(dct2(x)) == x` must hold on the SoA path.
+
+use acdc::dct::{naive_dct2, naive_dct3, BatchEngine, DctPlan, PlanCache};
+use acdc::sell::acdc::AcdcLayer;
+use acdc::tensor::Tensor;
+use acdc::util::rng::Pcg32;
+
+const SIZES: [usize; 4] = [2, 8, 64, 512];
+const BATCHES: [usize; 4] = [1, 3, 16, 257];
+const TOL: f32 = 1e-4;
+
+#[test]
+fn prop_scalar_dct2_rows_matches_oracle_grid() {
+    let mut rng = Pcg32::seeded(100);
+    for &n in &SIZES {
+        let plan = DctPlan::new(n);
+        for &rows in &BATCHES {
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            plan.dct2_rows(&mut data, rows);
+            for r in 0..rows {
+                let want = naive_dct2(&orig[r * n..(r + 1) * n]);
+                for k in 0..n {
+                    assert!(
+                        (data[r * n + k] - want[k]).abs() < TOL,
+                        "scalar dct2 n={n} rows={rows} r={r} k={k}: {} vs {}",
+                        data[r * n + k],
+                        want[k]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_scalar_dct3_rows_matches_oracle_grid() {
+    let mut rng = Pcg32::seeded(200);
+    for &n in &SIZES {
+        let plan = DctPlan::new(n);
+        for &rows in &BATCHES {
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            plan.dct3_rows(&mut data, rows);
+            for r in 0..rows {
+                let want = naive_dct3(&orig[r * n..(r + 1) * n]);
+                for k in 0..n {
+                    assert!(
+                        (data[r * n + k] - want[k]).abs() < TOL,
+                        "scalar dct3 n={n} rows={rows} r={r} k={k}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_soa_dct2_rows_matches_oracle_grid() {
+    let mut rng = Pcg32::seeded(300);
+    for &n in &SIZES {
+        let engine = BatchEngine::for_size(n);
+        for &rows in &BATCHES {
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            engine.dct2_rows(&mut data, rows);
+            for r in 0..rows {
+                let want = naive_dct2(&orig[r * n..(r + 1) * n]);
+                for k in 0..n {
+                    assert!(
+                        (data[r * n + k] - want[k]).abs() < TOL,
+                        "soa dct2 n={n} rows={rows} r={r} k={k}: {} vs {}",
+                        data[r * n + k],
+                        want[k]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_soa_dct3_rows_matches_oracle_grid() {
+    let mut rng = Pcg32::seeded(400);
+    for &n in &SIZES {
+        let engine = BatchEngine::for_size(n);
+        for &rows in &BATCHES {
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            engine.dct3_rows(&mut data, rows);
+            for r in 0..rows {
+                let want = naive_dct3(&orig[r * n..(r + 1) * n]);
+                for k in 0..n {
+                    assert!(
+                        (data[r * n + k] - want[k]).abs() < TOL,
+                        "soa dct3 n={n} rows={rows} r={r} k={k}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_soa_roundtrip_is_identity_grid() {
+    let mut rng = Pcg32::seeded(500);
+    for &n in &SIZES {
+        let engine = BatchEngine::for_size(n);
+        for &rows in &BATCHES {
+            let orig = rng.normal_vec(rows * n, 0.0, 1.0);
+            let mut data = orig.clone();
+            engine.dct2_rows(&mut data, rows);
+            engine.dct3_rows(&mut data, rows);
+            for i in 0..rows * n {
+                assert!(
+                    (data[i] - orig[i]).abs() < TOL,
+                    "soa roundtrip n={n} rows={rows} i={i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fused_engine_matches_scalar_fused_layer() {
+    // The full batched ACDC⁻¹ (a/d/bias fused into the transform stages)
+    // must agree with the scalar single-call kernel on random layers.
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(600 + seed);
+        let n = 1usize << (1 + rng.below(8)); // 2..256
+        let rows = 1 + rng.below(20) as usize;
+        let mut layer = AcdcLayer::random(n, &mut rng, 1.0, 0.3);
+        layer.bias = rng.normal_vec(n, 0.0, 0.2);
+        let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+        let fused = layer.forward_fused(&x);
+        let batched = layer.forward_batch(&x);
+        assert!(
+            fused.max_abs_diff(&batched) < 1e-3,
+            "seed={seed} n={n} rows={rows}"
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_engine_is_bit_identical_to_serial() {
+    // Panel splitting must not change results at all (same panels, same
+    // order of operations within each panel).
+    let pool = acdc::util::threadpool::ThreadPool::new(4);
+    for seed in 0..15u64 {
+        let mut rng = Pcg32::seeded(700 + seed);
+        let n = 1usize << (3 + rng.below(5)); // 8..128
+        let rows = 1 + rng.below(100) as usize;
+        let engine = BatchEngine::new(PlanCache::get(n));
+        let a = rng.normal_vec(n, 1.0, 0.2);
+        let d = rng.normal_vec(n, 1.0, 0.2);
+        let bias = rng.normal_vec(n, 0.0, 0.2);
+        let x = rng.normal_vec(rows * n, 0.0, 1.0);
+        let mut serial = vec![0.0f32; rows * n];
+        engine.acdc_rows(&a, &d, &bias, &x, &mut serial, rows);
+        let mut parallel = vec![0.0f32; rows * n];
+        engine.acdc_rows_parallel(&a, &d, &bias, &x, &mut parallel, rows, &pool);
+        assert_eq!(serial, parallel, "seed={seed} n={n} rows={rows}");
+    }
+}
