@@ -330,6 +330,46 @@ impl GatewayConfig {
     }
 }
 
+/// Model registry configuration (`[registry]` section): which checkpoint
+/// manifests the gateway preloads and where legacy `/v1/infer` routes.
+#[derive(Debug, Clone, Default)]
+pub struct RegistryConfig {
+    /// Model (or alias) the legacy `/v1/infer` route resolves. Empty
+    /// means "first model loaded".
+    pub default_model: String,
+    /// Checkpoint manifests loaded at startup, as `name=path` pairs.
+    pub preload: Vec<(String, String)>,
+}
+
+impl RegistryConfig {
+    /// Build from a parsed config's `[registry]` section. `models` is an
+    /// array of `"name=path"` strings.
+    pub fn from_config(cfg: &Config) -> Result<RegistryConfig, String> {
+        let mut rc = RegistryConfig {
+            default_model: cfg.get_str("registry.default_model", ""),
+            preload: Vec::new(),
+        };
+        if let Some(v) = cfg.get("registry.models") {
+            let arr = v
+                .as_array()
+                .ok_or("registry.models must be an array of \"name=path\" strings")?;
+            for item in arr {
+                let s = item
+                    .as_str()
+                    .ok_or("registry.models entries must be strings")?;
+                let (name, path) = s
+                    .split_once('=')
+                    .ok_or_else(|| format!("registry.models entry '{s}' must be name=path"))?;
+                if name.is_empty() || path.is_empty() {
+                    return Err(format!("registry.models entry '{s}' must be name=path"));
+                }
+                rc.preload.push((name.to_string(), path.to_string()));
+            }
+        }
+        Ok(rc)
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -345,6 +385,8 @@ pub struct ServeConfig {
     pub queue_cap: usize,
     /// Network front-end knobs (`[gateway]` section).
     pub gateway: GatewayConfig,
+    /// Model registry knobs (`[registry]` section).
+    pub registry: RegistryConfig,
 }
 
 impl Default for ServeConfig {
@@ -356,6 +398,7 @@ impl Default for ServeConfig {
             workers: 2,
             queue_cap: 4_096,
             gateway: GatewayConfig::default(),
+            registry: RegistryConfig::default(),
         }
     }
 }
@@ -369,6 +412,7 @@ impl ServeConfig {
             workers: cfg.get_usize("serve.workers", 2),
             queue_cap: cfg.get_usize("serve.queue_cap", 4_096),
             gateway: GatewayConfig::from_config(cfg)?,
+            registry: RegistryConfig::from_config(cfg)?,
             ..Default::default()
         };
         if let Some(v) = cfg.get("serve.buckets") {
@@ -501,6 +545,10 @@ max_inflight = 64
 rate_rps = 500.0
 rate_burst = 50.0
 retry_after_s = 2
+
+[registry]
+default_model = "stable"
+models = ["m1=ckpts/m1.ckpt", "m2=ckpts/m2.ckpt"]
 "#;
 
     #[test]
@@ -616,6 +664,32 @@ retry_after_s = 2
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn registry_config_from_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let rc = RegistryConfig::from_config(&cfg).unwrap();
+        assert_eq!(rc.default_model, "stable");
+        assert_eq!(
+            rc.preload,
+            vec![
+                ("m1".to_string(), "ckpts/m1.ckpt".to_string()),
+                ("m2".to_string(), "ckpts/m2.ckpt".to_string()),
+            ]
+        );
+        // The serve config embeds the same section.
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.registry.default_model, "stable");
+        // Malformed entries are rejected.
+        let bad = Config::parse("[registry]\nmodels = [\"nopath\"]").unwrap();
+        assert!(RegistryConfig::from_config(&bad).is_err());
+        let bad = Config::parse("[registry]\nmodels = [7]").unwrap();
+        assert!(RegistryConfig::from_config(&bad).is_err());
+        // Absent section falls back to defaults.
+        let empty = Config::parse("").unwrap();
+        let rc = RegistryConfig::from_config(&empty).unwrap();
+        assert!(rc.default_model.is_empty() && rc.preload.is_empty());
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //!                                        │
 //!                                 admission control
 //!                            (drain → in-flight cap → token bucket)
+//!                                        │ resolve (model, version)
+//!                                  ModelRegistry ([`crate::registry`]:
+//!                                  named models, Arc-epoch hot swap)
 //!                                        │ submit
-//!                                  Coordinator (bounded queue,
+//!                                  per-model Coordinator (bounded queue,
 //!                                  bucketed batcher, worker pool)
 //!                                        │
 //!                                  SELL executors (PJRT or native)

@@ -1,24 +1,44 @@
-//! The network gateway: a TCP/HTTP front-end over the batching coordinator.
+//! The network gateway: a TCP/HTTP front-end over the model registry.
 //!
-//! Thread-per-connection accept loop with keep-alive; every request passes
-//! admission control ([`super::admission`]) before touching the
-//! coordinator. Endpoints:
+//! Thread-per-connection accept loop with keep-alive; every inference
+//! request passes admission control ([`super::admission`]) before
+//! resolving a [`ModelHandle`] and touching that model's coordinator.
+//! Endpoints:
 //!
-//! * `POST /v1/infer` — JSON body `{"features": [f32; N]}` for one row or
-//!   `{"rows": [[f32; N], ...]}` for a batch; replies with outputs plus
-//!   queue/execute timings and the batch buckets used. Sheds map to
-//!   429/503 with `Retry-After`, coordinator timeouts to 504.
+//! * `POST /v1/models/{name}/infer` — JSON body `{"features": [f32; N]}`
+//!   for one row or `{"rows": [[f32; N], ...]}` for a batch against the
+//!   named model (or alias); replies with outputs, the serving model +
+//!   version, queue/execute timings and the batch buckets used. Sheds
+//!   map to 429/503 with `Retry-After`, coordinator timeouts to 504.
+//! * `POST /v1/infer` — same wire format against the registry's default
+//!   model (the single-model legacy route).
+//! * `GET /v1/models` — registry listing: per-model version, kind,
+//!   width, params, in-flight count, aliases and the default marker.
+//! * `POST /v1/admin/models/{name}/load` — body `{"path": "m.ckpt"}`
+//!   (optional `"version": n`): load or hot-swap a checkpoint manifest.
+//!   In-flight requests finish on the old version; new admissions see
+//!   the new one (Arc epoch handoff, [`crate::registry`]).
+//! * `POST /v1/admin/models/{name}/unload` — remove a model; refused
+//!   with 409 while requests are in flight.
+//! * `POST /v1/admin/aliases/{alias}` — body `{"target": "name"}`.
+//! * `POST /v1/admin/default` — body `{"model": "name"}`.
 //! * `GET /healthz` — liveness + drain state + in-flight gauge.
-//! * `GET /metrics` — Prometheus text from [`crate::metrics::Registry`].
+//! * `GET /metrics` — Prometheus text from [`crate::metrics::Registry`]
+//!   (gateway + admission + per-model `acdc_model_*` series).
+//!
+//! The admin surface is unauthenticated by design — deploy it on a
+//! trusted network or behind a fronting proxy.
 //!
 //! Shutdown is a graceful drain: stop accepting, refuse new work at
-//! admission, let in-flight requests finish and connections close, then
-//! tear the coordinator down (which itself flushes its queues).
+//! admission, let in-flight requests finish, then wait on a condvar that
+//! every connection thread signals on exit — the drain is event-driven
+//! (no sleep-polling), bounded by `drain_timeout_ms`.
 
 use std::io::{BufReader, ErrorKind};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -27,12 +47,17 @@ use super::http::{self, HttpError, ReadOutcome, Request, Response};
 use crate::config::GatewayConfig;
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
 use crate::serve::Server;
 use crate::util::json::{obj, Json};
 
 /// Poll interval for parked keep-alive connections (also bounds how fast
 /// idle connections notice a drain).
 const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// Model name the legacy [`Gateway::start`] constructor registers its
+/// server under.
+pub const LEGACY_MODEL: &str = "default";
 
 /// Running gateway handle. Dropping it (or calling [`Gateway::shutdown`])
 /// drains gracefully.
@@ -42,13 +67,73 @@ pub struct Gateway {
     accept: Option<JoinHandle<()>>,
 }
 
+/// Connection-count tracker: the accept-side cap, the exported
+/// `gateway.open_connections` gauge, and the event-driven drain barrier —
+/// one count, updated in one place. Connection threads signal `cv` on
+/// exit, so shutdown blocks on real events instead of sleep-polling.
+struct ConnTracker {
+    count: Mutex<u64>,
+    cv: Condvar,
+    /// Prometheus mirror of `count`, kept in lockstep by enter/exit.
+    gauge: Arc<Gauge>,
+}
+
+impl ConnTracker {
+    fn new(gauge: Arc<Gauge>) -> ConnTracker {
+        ConnTracker {
+            count: Mutex::new(0),
+            cv: Condvar::new(),
+            gauge,
+        }
+    }
+
+    /// Claim a connection slot unless the cap is reached.
+    fn try_enter(&self, max: u64) -> bool {
+        let mut c = self.count.lock().unwrap();
+        if *c >= max {
+            return false;
+        }
+        *c += 1;
+        self.gauge.set(*c);
+        true
+    }
+
+    /// Release a slot and wake any drain waiter.
+    fn exit(&self) {
+        let mut c = self.count.lock().unwrap();
+        *c = c.saturating_sub(1);
+        self.gauge.set(*c);
+        self.cv.notify_all();
+    }
+
+    /// Current open-connection count (the `/healthz` reading).
+    fn open(&self) -> u64 {
+        *self.count.lock().unwrap()
+    }
+
+    /// Block until every connection exits or `deadline` passes; returns
+    /// whether the count reached zero.
+    fn wait_idle(&self, deadline: Instant) -> bool {
+        let mut c = self.count.lock().unwrap();
+        while *c > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(c, deadline - now).unwrap();
+            c = guard;
+        }
+        true
+    }
+}
+
 struct Shared {
-    server: Server,
+    registry: Arc<ModelRegistry>,
     cfg: GatewayConfig,
     admission: Arc<Admission>,
     metrics: Arc<Registry>,
     stop: AtomicBool,
-    open_conns: Arc<Gauge>,
+    conns: ConnTracker,
     conns_total: Arc<Counter>,
     conns_rejected: Arc<Counter>,
     requests: Arc<Counter>,
@@ -59,8 +144,27 @@ struct Shared {
 }
 
 impl Gateway {
-    /// Bind `cfg.addr` (port 0 for ephemeral) and start serving `server`.
+    /// Single-model compatibility constructor: registers `server` in a
+    /// fresh registry under [`LEGACY_MODEL`] (which becomes the default
+    /// model `POST /v1/infer` routes to) and serves it.
     pub fn start(server: Server, cfg: GatewayConfig) -> Result<Gateway, String> {
+        let metrics = Arc::clone(server.metrics());
+        let registry = Arc::new(ModelRegistry::new(
+            crate::config::ServeConfig::default(),
+            metrics,
+        ));
+        registry
+            .insert_server(LEGACY_MODEL, "custom", server, None)
+            .map_err(|e| e.to_string())?;
+        Gateway::start_registry(registry, cfg)
+    }
+
+    /// Bind `cfg.addr` (port 0 for ephemeral) and serve every model in
+    /// `registry`.
+    pub fn start_registry(
+        registry: Arc<ModelRegistry>,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway, String> {
         cfg.validate()?;
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("gateway bind {}: {e}", cfg.addr))?;
@@ -70,13 +174,13 @@ impl Gateway {
         listener
             .set_nonblocking(true)
             .map_err(|e| format!("gateway set_nonblocking: {e}"))?;
-        let metrics = Arc::clone(server.metrics());
+        let metrics = Arc::clone(registry.metrics());
         let admission = Arc::new(Admission::new(&cfg, &metrics));
         let shared = Arc::new(Shared {
-            server,
+            registry,
             cfg,
             admission,
-            open_conns: metrics.gauge("gateway.open_connections"),
+            conns: ConnTracker::new(metrics.gauge("gateway.open_connections")),
             conns_total: metrics.counter("gateway.connections"),
             conns_rejected: metrics.counter("gateway.connections_rejected"),
             requests: metrics.counter("gateway.requests"),
@@ -104,7 +208,12 @@ impl Gateway {
         self.addr
     }
 
-    /// The shared metrics registry (gateway + coordinator + workers).
+    /// The model registry this gateway serves.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
+    }
+
+    /// The shared metrics registry (gateway + registry + coordinators).
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.shared.metrics
     }
@@ -128,14 +237,15 @@ impl Drop for Gateway {
             let _ = h.join();
         }
         // Connection threads finish their in-flight request, write the
-        // response and exit (they observe the drain within IDLE_POLL).
+        // response and signal the tracker on exit (idle connections
+        // observe the drain within IDLE_POLL). This wait is event-driven
+        // and deterministic: it returns the moment the last connection
+        // exits, or at the deadline.
         let deadline = Instant::now() + Duration::from_millis(self.shared.cfg.drain_timeout_ms);
-        while self.shared.open_conns.get() > 0 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(10));
-        }
-        // The coordinator itself drains in `Coordinator::drop` once the
-        // last `Shared` clone (ours, or a straggler past the deadline)
-        // goes away — in-flight work is answered either way.
+        self.shared.conns.wait_idle(deadline);
+        // Model coordinators drain when the registry's last Arc drops
+        // (ours, or a straggler connection past the deadline) — in-flight
+        // work is answered either way.
     }
 }
 
@@ -147,8 +257,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 shared.conns_total.inc();
-                if shared.open_conns.inc() > shared.cfg.max_open_conns as u64 {
-                    shared.open_conns.dec();
+                if !shared.conns.try_enter(shared.cfg.max_open_conns as u64) {
                     shared.conns_rejected.inc();
                     reject_connection(stream, shared.cfg.retry_after_s);
                     continue;
@@ -158,7 +267,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
                     .name("acdc-gw-conn".into())
                     .spawn(move || handle_connection(conn_shared, stream));
                 if spawned.is_err() {
-                    shared.open_conns.dec();
+                    shared.conns.exit();
                 }
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
@@ -177,19 +286,19 @@ fn reject_connection(mut stream: TcpStream, retry_after_s: u64) {
     let _ = resp.write_to(&mut stream, false);
 }
 
-/// Releases the accept loop's `open_conns` slot even if the connection
-/// thread unwinds (a leaked slot would eventually wedge admission and
-/// drain behind `max_open_conns`).
-struct ConnSlot(Arc<Gauge>);
+/// Releases the connection slot even if the connection thread unwinds (a
+/// leaked slot would wedge admission — and the drain barrier — behind
+/// `max_open_conns`).
+struct ConnSlot(Arc<Shared>);
 
 impl Drop for ConnSlot {
     fn drop(&mut self) {
-        self.0.dec();
+        self.0.conns.exit();
     }
 }
 
 fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
-    let _slot = ConnSlot(Arc::clone(&shared.open_conns));
+    let _slot = ConnSlot(Arc::clone(&shared));
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_POLL));
@@ -239,15 +348,62 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
 }
 
 fn route(shared: &Arc<Shared>, req: &Request) -> Response {
-    match (req.method.as_str(), req.route_path()) {
-        ("GET", "/healthz") => healthz(shared),
-        ("GET", "/metrics") => Response::text(200, &shared.metrics.prometheus()),
-        ("POST", "/v1/infer") => infer(shared, req),
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/infer") => {
-            Response::json(405, &err_json("method not allowed"))
+    let path = req.route_path();
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => return healthz(shared),
+        ("GET", "/metrics") => return Response::text(200, &shared.metrics.prometheus()),
+        ("GET", "/v1/models") => return list_models(shared),
+        ("POST", "/v1/infer") => return infer(shared, req, None),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer") => {
+            return Response::json(405, &err_json("method not allowed"));
         }
-        _ => Response::json(404, &err_json("not found")),
+        _ => {}
     }
+    // /v1/models/{name}/infer
+    if let Some(name) = path
+        .strip_prefix("/v1/models/")
+        .and_then(|rest| rest.strip_suffix("/infer"))
+    {
+        if name.is_empty() || name.contains('/') {
+            return Response::json(404, &err_json("not found"));
+        }
+        if req.method != "POST" {
+            return Response::json(405, &err_json("method not allowed"));
+        }
+        return infer(shared, req, Some(name));
+    }
+    // /v1/admin/models/{name}/load | /v1/admin/models/{name}/unload
+    if let Some(rest) = path.strip_prefix("/v1/admin/models/") {
+        if let Some((name, action)) = rest.rsplit_once('/') {
+            if !name.is_empty() && !name.contains('/') && matches!(action, "load" | "unload") {
+                if req.method != "POST" {
+                    return Response::json(405, &err_json("method not allowed"));
+                }
+                return match action {
+                    "load" => admin_load(shared, req, name),
+                    _ => admin_unload(shared, name),
+                };
+            }
+        }
+        return Response::json(404, &err_json("not found"));
+    }
+    // /v1/admin/aliases/{alias}
+    if let Some(alias) = path.strip_prefix("/v1/admin/aliases/") {
+        if alias.is_empty() || alias.contains('/') {
+            return Response::json(404, &err_json("not found"));
+        }
+        if req.method != "POST" {
+            return Response::json(405, &err_json("method not allowed"));
+        }
+        return admin_alias(shared, req, alias);
+    }
+    if path == "/v1/admin/default" {
+        if req.method != "POST" {
+            return Response::json(405, &err_json("method not allowed"));
+        }
+        return admin_default(shared, req);
+    }
+    Response::json(404, &err_json("not found"))
 }
 
 fn healthz(shared: &Arc<Shared>) -> Response {
@@ -256,26 +412,171 @@ fn healthz(shared: &Arc<Shared>) -> Response {
     } else {
         "ok"
     };
+    let width = match shared.registry.default_width() {
+        Some(w) => Json::Num(w as f64),
+        None => Json::Null,
+    };
     Response::json(
         200,
         &obj(vec![
             ("status", Json::Str(status.to_string())),
-            ("width", Json::Num(shared.server.width() as f64)),
+            ("width", width),
+            ("models", Json::Num(shared.registry.len() as f64)),
             ("inflight", Json::Num(shared.admission.inflight() as f64)),
             (
                 "open_connections",
-                Json::Num(shared.open_conns.get() as f64),
+                Json::Num(shared.conns.open() as f64),
             ),
         ]),
     )
 }
 
-fn infer(shared: &Arc<Shared>, req: &Request) -> Response {
+fn list_models(shared: &Arc<Shared>) -> Response {
+    let infos = shared.registry.list();
+    let models: Vec<Json> = infos
+        .iter()
+        .map(|m| {
+            obj(vec![
+                ("name", Json::Str(m.name.clone())),
+                ("version", Json::Num(m.version as f64)),
+                ("kind", Json::Str(m.kind.clone())),
+                ("width", Json::Num(m.width as f64)),
+                ("params", Json::Num(m.params as f64)),
+                ("inflight", Json::Num(m.inflight as f64)),
+                (
+                    "aliases",
+                    Json::Arr(m.aliases.iter().cloned().map(Json::Str).collect()),
+                ),
+                ("default", Json::Bool(m.is_default)),
+            ])
+        })
+        .collect();
+    let default = match shared.registry.default_model() {
+        Some(name) => Json::Str(name),
+        None => Json::Null,
+    };
+    Response::json(
+        200,
+        &obj(vec![("models", Json::Arr(models)), ("default", default)]),
+    )
+}
+
+fn registry_error(e: &RegistryError) -> Response {
+    Response::json(e.status(), &err_json(&e.to_string()))
+}
+
+fn admin_body(req: &Request) -> Result<Json, Response> {
+    let body = std::str::from_utf8(&req.body)
+        .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
+    if body.trim().is_empty() {
+        return Ok(Json::Obj(Default::default()));
+    }
+    Json::parse(body).map_err(|e| Response::json(400, &err_json(&format!("bad json: {e}"))))
+}
+
+fn admin_load(shared: &Arc<Shared>, req: &Request, name: &str) -> Response {
+    let body = match admin_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(path) = body.get("path").and_then(|p| p.as_str()) else {
+        return Response::json(400, &err_json("body must carry a checkpoint 'path'"));
+    };
+    let version = match body.get("version") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(n) => Some(n as u64),
+            None => {
+                return Response::json(400, &err_json("'version' must be a non-negative integer"))
+            }
+        },
+    };
+    match shared.registry.load_path(name, Path::new(path), version) {
+        Ok(v) => Response::json(
+            200,
+            &obj(vec![
+                ("model", Json::Str(name.to_string())),
+                ("version", Json::Num(v as f64)),
+                ("status", Json::Str("loaded".to_string())),
+            ]),
+        ),
+        Err(e) => registry_error(&e),
+    }
+}
+
+fn admin_unload(shared: &Arc<Shared>, name: &str) -> Response {
+    match shared.registry.unload(name) {
+        Ok(()) => Response::json(
+            200,
+            &obj(vec![
+                ("model", Json::Str(name.to_string())),
+                ("status", Json::Str("unloaded".to_string())),
+            ]),
+        ),
+        Err(e) => registry_error(&e),
+    }
+}
+
+fn admin_alias(shared: &Arc<Shared>, req: &Request, alias: &str) -> Response {
+    let body = match admin_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(target) = body.get("target").and_then(|t| t.as_str()) else {
+        return Response::json(400, &err_json("body must carry a 'target' model name"));
+    };
+    match shared.registry.alias(alias, target) {
+        Ok(()) => Response::json(
+            200,
+            &obj(vec![
+                ("alias", Json::Str(alias.to_string())),
+                ("target", Json::Str(target.to_string())),
+                ("status", Json::Str("aliased".to_string())),
+            ]),
+        ),
+        Err(e) => registry_error(&e),
+    }
+}
+
+fn admin_default(shared: &Arc<Shared>, req: &Request) -> Response {
+    let body = match admin_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let Some(model) = body.get("model").and_then(|m| m.as_str()) else {
+        return Response::json(400, &err_json("body must carry a 'model' name"));
+    };
+    match shared.registry.set_default(model) {
+        Ok(()) => Response::json(
+            200,
+            &obj(vec![
+                ("default", Json::Str(model.to_string())),
+                ("status", Json::Str("ok".to_string())),
+            ]),
+        ),
+        Err(e) => registry_error(&e),
+    }
+}
+
+fn infer(shared: &Arc<Shared>, req: &Request, model: Option<&str>) -> Response {
     // The permit holds an in-flight slot for the whole submit → response
     // window; dropping it on any exit path releases the slot.
     let _permit = match shared.admission.try_admit() {
         Ok(p) => p,
         Err(e) => return shed_response(shared, e),
+    };
+    // The handle pins this request to one (model, version) epoch: the
+    // request survives a concurrent hot swap on the version it was
+    // admitted against, and blocks unload until it completes.
+    let handle: ModelHandle = match model {
+        Some(name) => match shared.registry.resolve(name) {
+            Ok(h) => h,
+            Err(e) => return registry_error(&e),
+        },
+        None => match shared.registry.resolve_default() {
+            Ok(h) => h,
+            Err(e) => return registry_error(&e),
+        },
     };
     let body = match std::str::from_utf8(&req.body) {
         Ok(s) => s,
@@ -285,14 +586,13 @@ fn infer(shared: &Arc<Shared>, req: &Request) -> Response {
         Ok(v) => v,
         Err(e) => return Response::json(400, &err_json(&format!("bad json: {e}"))),
     };
-    let rows = match extract_rows(&parsed, shared.server.width(), shared.cfg.max_rows_per_request)
-    {
+    let rows = match extract_rows(&parsed, handle.width(), shared.cfg.max_rows_per_request) {
         Ok(rows) => rows,
         Err(msg) => return Response::json(400, &err_json(&msg)),
     };
     let mut rxs = Vec::with_capacity(rows.len());
     for row in rows {
-        match shared.server.submit(row) {
+        match handle.submit(row) {
             Ok(rx) => rxs.push(rx),
             Err(SubmitError::QueueFull) => {
                 shared.admission.note_queue_full();
@@ -333,6 +633,8 @@ fn infer(shared: &Arc<Shared>, req: &Request) -> Response {
         }
     }
     let mut pairs = vec![
+        ("model", Json::Str(handle.name().to_string())),
+        ("version", Json::Num(handle.version() as f64)),
         ("rows", Json::Num(outputs.len() as f64)),
         ("queue_us", Json::Num(queue_us as f64)),
         ("execute_us", Json::Num(execute_us as f64)),
@@ -424,5 +726,38 @@ mod tests {
         assert!(extract_rows(&v, 2, 8).is_err());
         let v = Json::parse(r#"{"nope": 1}"#).unwrap();
         assert!(extract_rows(&v, 2, 8).is_err());
+    }
+
+    #[test]
+    fn conn_tracker_caps_counts_and_drains() {
+        let gauge = Arc::new(Gauge::default());
+        let t = ConnTracker::new(Arc::clone(&gauge));
+        assert!(t.try_enter(2));
+        assert!(t.try_enter(2));
+        assert!(!t.try_enter(2), "cap reached");
+        assert_eq!((t.open(), gauge.get()), (2, 2), "gauge mirrors count");
+        // Non-blocking drain check fails while connections are open…
+        assert!(!t.wait_idle(Instant::now()));
+        t.exit();
+        t.exit();
+        // …and succeeds immediately once they exit.
+        assert!(t.wait_idle(Instant::now()));
+        assert_eq!((t.open(), gauge.get()), (0, 0));
+    }
+
+    #[test]
+    fn conn_tracker_wait_wakes_on_exit() {
+        let t = Arc::new(ConnTracker::new(Arc::new(Gauge::default())));
+        assert!(t.try_enter(8));
+        let t2 = Arc::clone(&t);
+        let waiter = std::thread::spawn(move || {
+            t2.wait_idle(Instant::now() + Duration::from_secs(10))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let t0 = Instant::now();
+        t.exit();
+        assert!(waiter.join().unwrap(), "drain must observe the exit");
+        // The waiter returned on the notify, far before the 10s deadline.
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 }

@@ -16,8 +16,11 @@
 //! ```text
 //!   TCP clients → gateway (HTTP/1.1, token bucket, in-flight caps,
 //!                 load shedding with Retry-After, graceful drain)
-//!              → coordinator (bounded queue → bucketed dynamic batcher
-//!                 → worker pool, backpressure end to end)
+//!              → model registry ([`registry`]: named, versioned models,
+//!                 Arc-epoch hot swap under live traffic)
+//!              → per-(model, version) coordinator (bounded queue →
+//!                 bucketed dynamic batcher → worker pool, backpressure
+//!                 end to end)
 //!              → executors (PJRT artifacts with the `pjrt` feature;
 //!                 otherwise the pure-Rust batched SoA ACDC engine,
 //!                 [`dct::batch`] — 8-row lane panels, fused A/D/bias,
@@ -40,6 +43,7 @@ pub mod experiments;
 pub mod gateway;
 pub mod metrics;
 pub mod perfmodel;
+pub mod registry;
 pub mod runtime;
 pub mod sell;
 pub mod serve;

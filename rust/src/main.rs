@@ -19,14 +19,20 @@ use acdc::config::{Config, ServeConfig, TrainConfig};
 use acdc::data::regression::RegressionTask;
 use acdc::data::synthimg::ImageCorpus;
 use acdc::experiments::{fig2, fig3, table1};
+use acdc::gateway::http;
 use acdc::gateway::loadgen::{ArrivalMode, LoadgenConfig};
 use acdc::gateway::Gateway;
+use acdc::registry::{ModelRegistry, SellModel};
 use acdc::runtime::Engine;
 use acdc::serve::{ServeParams, Server};
 use acdc::train::{CnnTrainer, CnnVariant, StepDecay};
 use acdc::util::bench::Bench;
 use acdc::util::cli::{flag, opt, Args};
+use acdc::util::json::{obj, Json};
+use std::io::BufReader;
+use std::net::TcpStream;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -57,6 +63,7 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
         "loadgen" => cmd_loadgen(rest),
+        "registry" => cmd_registry(rest),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -77,8 +84,11 @@ subcommands:
   table1      Table-1 measured MiniCaffeNet leg
   train-cnn   end-to-end CNN training (E6)
   serve       serving demo over the dynamic-batching coordinator
-  gateway     HTTP serving gateway (POST /v1/infer, /healthz, /metrics)
+  gateway     multi-model HTTP serving gateway (POST /v1/models/{name}/infer,
+              GET /v1/models, /healthz, /metrics, hot-swap admin endpoints)
   loadgen     closed/open-loop load generator against a running gateway
+  registry    admin client: list | load | unload | alias | default against a
+              running gateway's model registry
 run `acdc <subcommand> --help` for options";
 
 fn common_opts() -> Vec<acdc::util::cli::OptSpec> {
@@ -324,12 +334,14 @@ fn cmd_serve(rest: &[String]) -> Result<(), String> {
 
 fn cmd_gateway(rest: &[String]) -> Result<(), String> {
     let mut opts = common_opts();
-    opts.push(opt("config", "TOML config file (with a [gateway] section)", None));
+    opts.push(opt("config", "TOML config file ([gateway]/[registry] sections)", None));
     opts.push(opt("addr", "listen address (overrides config)", None));
     opts.push(opt("n", "demo model width", Some("256")));
     opts.push(opt("k", "demo cascade depth", Some("12")));
+    opts.push(opt("demo-model", "name the demo model registers under", Some("demo")));
     opts.push(opt("duration-s", "serve N seconds then drain (0 = forever)", Some("0")));
     opts.push(flag("native", "use the pure-rust executor instead of PJRT"));
+    opts.push(flag("no-demo", "start with only [registry] preloads, no demo model"));
     let args = Args::parse_from(rest, opts)?;
     let mut sc = match args.get("config") {
         Some(path) => ServeConfig::from_config(&Config::from_file(Path::new(path))?)?,
@@ -343,25 +355,56 @@ fn cmd_gateway(rest: &[String]) -> Result<(), String> {
     }
     let n = args.get_usize("n")?.unwrap();
     let k = args.get_usize("k")?.unwrap();
-    let server = if args.flag("native") {
-        let mut rng = acdc::util::rng::Pcg32::seeded(1);
-        Server::start_native(
-            &sc,
-            acdc::sell::acdc::AcdcCascade::nonlinear(
+    let metrics = Arc::new(acdc::metrics::Registry::new());
+    let registry = Arc::new(ModelRegistry::new(sc.clone(), Arc::clone(&metrics)));
+    if !args.flag("no-demo") {
+        let demo = args.get("demo-model").unwrap();
+        if args.flag("native") {
+            let mut rng = acdc::util::rng::Pcg32::seeded(1);
+            let cascade = acdc::sell::acdc::AcdcCascade::nonlinear(
                 n,
                 k,
                 acdc::sell::init::DiagInit::CAFFENET,
                 &mut rng,
-            ),
-        )
-    } else {
-        Server::start_pjrt(&sc, ServeParams::random(n, k, 10, 1), n)?
-    };
-    let gateway = Gateway::start(server, sc.gateway.clone())?;
+            );
+            registry
+                .load(demo, SellModel::Acdc(cascade), None)
+                .map_err(|e| e.to_string())?;
+        } else {
+            // Shares the gateway's metrics registry so the coordinator and
+            // worker series stay visible on GET /metrics.
+            let server = Server::start_pjrt_with_metrics(
+                &sc,
+                ServeParams::random(n, k, 10, 1),
+                n,
+                Arc::clone(&metrics),
+            )?;
+            registry
+                .insert_server(demo, "pjrt", server, None)
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    for (name, path) in &sc.registry.preload {
+        let v = registry
+            .load_path(name, Path::new(path), None)
+            .map_err(|e| format!("preload {name}={path}: {e}"))?;
+        println!("preloaded model '{name}' v{v} from {path}");
+    }
+    if !sc.registry.default_model.is_empty() {
+        registry
+            .set_default(&sc.registry.default_model)
+            .map_err(|e| e.to_string())?;
+    }
+    if registry.is_empty() {
+        return Err("no models: pass a [registry] preload list or drop --no-demo".into());
+    }
+    let gateway = Gateway::start_registry(registry, sc.gateway.clone())?;
     println!("gateway listening on http://{}", gateway.local_addr());
-    println!("  POST /v1/infer    {{\"features\": [f32; {n}]}} or {{\"rows\": [[...], ...]}}");
-    println!("  GET  /healthz     liveness + drain state");
-    println!("  GET  /metrics     Prometheus text exposition");
+    println!("  POST /v1/models/{{name}}/infer  {{\"features\": [...]}} or {{\"rows\": [[...], ...]}}");
+    println!("  POST /v1/infer                 same, against the default model");
+    println!("  GET  /v1/models                registry listing");
+    println!("  POST /v1/admin/models/{{name}}/load|unload   hot-swap admin");
+    println!("  GET  /healthz /metrics         liveness, Prometheus text");
     let duration_s = args.get_usize("duration-s")?.unwrap();
     if duration_s == 0 {
         loop {
@@ -413,4 +456,150 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
     print!("{}", report.render());
     println!("{}", report.to_json().to_pretty());
     Ok(())
+}
+
+/// One admin HTTP exchange against a running gateway.
+fn admin_call(addr: &str, method: &str, path: &str, body: Option<Json>) -> Result<Json, String> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+    let payload = body.map(|b| b.to_string().into_bytes()).unwrap_or_default();
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        &payload,
+    )
+    .map_err(|e| format!("write: {e}"))?;
+    let resp = http::read_response(&mut reader).map_err(|e| format!("read: {e}"))?;
+    let parsed = Json::parse(resp.body_str())
+        .map_err(|e| format!("unparseable response ({}): {e}", resp.status))?;
+    if resp.status != 200 {
+        let msg = parsed
+            .get("error")
+            .and_then(|e| e.as_str())
+            .unwrap_or("(no error body)");
+        return Err(format!("gateway answered {}: {msg}", resp.status));
+    }
+    Ok(parsed)
+}
+
+fn cmd_registry(rest: &[String]) -> Result<(), String> {
+    const USAGE: &str = "usage: acdc registry <list | load | unload | alias | default> [options]
+  list                                  show loaded models
+  load    --model m --path ckpt.bin     load/hot-swap a checkpoint [--version N]
+  unload  --model m                     remove a model (409 while busy)
+  alias   --name stable --target m      point an alias at a model
+  default --model m                     route legacy /v1/infer to m";
+    let opts = vec![
+        opt("addr", "gateway address", Some("127.0.0.1:7878")),
+        opt("model", "model name", None),
+        opt("path", "checkpoint manifest path (load)", None),
+        opt("version", "explicit version number (load)", None),
+        opt("name", "alias name (alias)", None),
+        opt("target", "alias target model (alias)", None),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let addr = args.get("addr").unwrap().to_string();
+    let action = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| USAGE.to_string())?;
+    let need = |key: &str| -> Result<String, String> {
+        args.get(key)
+            .map(String::from)
+            .ok_or_else(|| format!("--{key} is required for '{action}'\n{USAGE}"))
+    };
+    match action {
+        "list" => {
+            let v = admin_call(&addr, "GET", "/v1/models", None)?;
+            let models = v
+                .get("models")
+                .and_then(|m| m.as_arr())
+                .ok_or("malformed listing")?;
+            println!("{} model(s):", models.len());
+            for m in models {
+                let name = m.get("name").and_then(|x| x.as_str()).unwrap_or("?");
+                let version = m.get("version").and_then(|x| x.as_i64()).unwrap_or(0);
+                let kind = m.get("kind").and_then(|x| x.as_str()).unwrap_or("?");
+                let width = m.get("width").and_then(|x| x.as_i64()).unwrap_or(0);
+                let inflight = m.get("inflight").and_then(|x| x.as_i64()).unwrap_or(0);
+                let is_default = m.get("default").and_then(|x| x.as_bool()).unwrap_or(false);
+                let aliases: Vec<&str> = m
+                    .get("aliases")
+                    .and_then(|a| a.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_str()).collect())
+                    .unwrap_or_default();
+                println!(
+                    "  {name:<20} v{version:<4} {kind:<9} n={width:<6} inflight={inflight}{}{}",
+                    if aliases.is_empty() {
+                        String::new()
+                    } else {
+                        format!("  aliases={}", aliases.join(","))
+                    },
+                    if is_default { "  [default]" } else { "" },
+                );
+            }
+            Ok(())
+        }
+        "load" => {
+            let model = need("model")?;
+            let path = need("path")?;
+            let mut pairs = vec![("path", Json::Str(path))];
+            if let Some(v) = args.get_usize("version")? {
+                pairs.push(("version", Json::Num(v as f64)));
+            }
+            let v = admin_call(
+                &addr,
+                "POST",
+                &format!("/v1/admin/models/{model}/load"),
+                Some(obj(pairs)),
+            )?;
+            println!(
+                "loaded '{model}' as v{}",
+                v.get("version").and_then(|x| x.as_i64()).unwrap_or(0)
+            );
+            Ok(())
+        }
+        "unload" => {
+            let model = need("model")?;
+            admin_call(
+                &addr,
+                "POST",
+                &format!("/v1/admin/models/{model}/unload"),
+                None,
+            )?;
+            println!("unloaded '{model}'");
+            Ok(())
+        }
+        "alias" => {
+            let name = need("name")?;
+            let target = need("target")?;
+            admin_call(
+                &addr,
+                "POST",
+                &format!("/v1/admin/aliases/{name}"),
+                Some(obj(vec![("target", Json::Str(target.clone()))])),
+            )?;
+            println!("alias '{name}' → '{target}'");
+            Ok(())
+        }
+        "default" => {
+            let model = need("model")?;
+            admin_call(
+                &addr,
+                "POST",
+                "/v1/admin/default",
+                Some(obj(vec![("model", Json::Str(model.clone()))])),
+            )?;
+            println!("default model set to '{model}'");
+            Ok(())
+        }
+        other => Err(format!("unknown registry action '{other}'\n{USAGE}")),
+    }
 }

@@ -1,0 +1,720 @@
+//! Multi-tenant model registry with hot-swap checkpoint serving.
+//!
+//! The registry owns named, versioned [`SellModel`]s, each served by its
+//! own batching coordinator (a [`Server`]), so batches are formed strictly
+//! per `(model, version)` — rows of different tenants or different
+//! checkpoint versions never share a padded batch.
+//!
+//! **Epoch handoff** is the swap mechanism (DESIGN.md §5): the live
+//! version of a model is one `Arc<ModelEpoch>`; admission clones that
+//! `Arc` into a [`ModelHandle`] held for the whole submit → response
+//! window. Loading a new version atomically replaces the entry's current
+//! epoch, so *new* admissions see the new version immediately while
+//! *in-flight* requests keep their clone of the old epoch and finish on
+//! the old coordinator. When the last handle to an old epoch drops, the
+//! epoch's coordinator drains and its worker threads join — the `Arc`
+//! refcount is the epoch's lifetime, no reference counting bolted on.
+//!
+//! [`ModelRegistry::unload`] refuses (with [`RegistryError::Busy`]) while
+//! any handle is outstanding; handle counting shares the registry lock
+//! with admission, so the refusal cannot race a concurrent resolve.
+
+pub mod model;
+
+pub use model::{SellModel, SellModelExecutor};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::checkpoint::Checkpoint;
+use crate::config::ServeConfig;
+use crate::coordinator::request::InferResponse;
+use crate::coordinator::worker::{BatchExecutor, ExecutorFactory};
+use crate::coordinator::SubmitError;
+use crate::metrics::{Counter, Gauge, Registry};
+use crate::serve::Server;
+
+/// Why a registry operation failed. Maps onto HTTP statuses at the
+/// gateway (404 / 409 / 400).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// No model or alias with that name.
+    NotFound(String),
+    /// Unload refused: requests are still in flight on the model.
+    Busy {
+        /// The model that refused to unload.
+        name: String,
+        /// Outstanding handle count at refusal time.
+        inflight: u64,
+    },
+    /// Malformed request (bad checkpoint, name collision, …).
+    Invalid(String),
+}
+
+impl RegistryError {
+    /// The HTTP status this error maps to at the gateway.
+    pub fn status(&self) -> u16 {
+        match self {
+            RegistryError::NotFound(_) => 404,
+            RegistryError::Busy { .. } => 409,
+            RegistryError::Invalid(_) => 400,
+        }
+    }
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::NotFound(name) => write!(f, "unknown model '{name}'"),
+            RegistryError::Busy { name, inflight } => {
+                write!(f, "model '{name}' is busy ({inflight} requests in flight)")
+            }
+            RegistryError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// One immutable loaded version of a model: the coordinator serving it
+/// plus identity metadata. Lives behind an `Arc`; dropping the last
+/// reference drains the coordinator (see the module docs).
+pub struct ModelEpoch {
+    version: u64,
+    kind: String,
+    width: usize,
+    params: usize,
+    server: Server,
+}
+
+impl ModelEpoch {
+    /// Checkpoint version this epoch serves.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Model family name (`acdc` / `fastfood` / `lowrank` / `custom`).
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Input width N.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+}
+
+/// A named model slot: the current epoch plus handle accounting.
+struct ModelEntry {
+    name: String,
+    current: Mutex<Arc<ModelEpoch>>,
+    /// Outstanding [`ModelHandle`]s across *all* epochs of this model.
+    inflight: AtomicU64,
+    next_version: AtomicU64,
+    requests: Arc<Counter>,
+    loads: Arc<Counter>,
+    swaps: Arc<Counter>,
+    version_gauge: Arc<Gauge>,
+    inflight_gauge: Arc<Gauge>,
+}
+
+/// RAII admission ticket: pins one epoch of one model for the lifetime of
+/// a request. Holding a handle blocks [`ModelRegistry::unload`].
+pub struct ModelHandle {
+    entry: Arc<ModelEntry>,
+    epoch: Arc<ModelEpoch>,
+}
+
+impl ModelHandle {
+    /// The model's registered name.
+    pub fn name(&self) -> &str {
+        &self.entry.name
+    }
+
+    /// The pinned epoch's version.
+    pub fn version(&self) -> u64 {
+        self.epoch.version
+    }
+
+    /// The pinned epoch's model family.
+    pub fn kind(&self) -> &str {
+        &self.epoch.kind
+    }
+
+    /// Input width N of the pinned epoch.
+    pub fn width(&self) -> usize {
+        self.epoch.width
+    }
+
+    /// Submit one feature row to the pinned epoch's coordinator.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
+        self.epoch.server.submit(features)
+    }
+
+    /// Submit one row and block for the answer.
+    pub fn infer(&self, features: Vec<f32>, timeout: Duration) -> Result<Vec<f32>, String> {
+        self.epoch.server.infer(features, timeout)
+    }
+}
+
+impl Drop for ModelHandle {
+    fn drop(&mut self) {
+        self.entry.inflight.fetch_sub(1, Ordering::AcqRel);
+        self.entry.inflight_gauge.dec();
+        // `epoch` drops here; if this was the last reference to a
+        // swapped-out epoch, its coordinator drains now.
+    }
+}
+
+/// A row of `GET /v1/models` / `acdc registry list`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelInfo {
+    /// Registered model name.
+    pub name: String,
+    /// Live checkpoint version.
+    pub version: u64,
+    /// Model family (`acdc` / `fastfood` / `lowrank` / `custom`).
+    pub kind: String,
+    /// Input width N.
+    pub width: usize,
+    /// Learnable parameter count (0 for custom servers).
+    pub params: usize,
+    /// Outstanding request handles right now.
+    pub inflight: u64,
+    /// Aliases resolving to this model, sorted.
+    pub aliases: Vec<String>,
+    /// Whether legacy `/v1/infer` routes here.
+    pub is_default: bool,
+}
+
+struct Inner {
+    models: HashMap<String, Arc<ModelEntry>>,
+    aliases: HashMap<String, String>,
+    default_model: Option<String>,
+}
+
+/// The multi-tenant model registry. See the module docs for the epoch
+/// handoff protocol.
+pub struct ModelRegistry {
+    inner: Mutex<Inner>,
+    /// Coordinator template applied to every loaded model (buckets,
+    /// max_wait, workers, queue_cap).
+    template: ServeConfig,
+    metrics: Arc<Registry>,
+}
+
+impl ModelRegistry {
+    /// Empty registry. `template` supplies the coordinator knobs every
+    /// loaded model's server is started with; per-model instruments are
+    /// registered in `metrics` (the gateway's shared registry).
+    pub fn new(template: ServeConfig, metrics: Arc<Registry>) -> ModelRegistry {
+        ModelRegistry {
+            inner: Mutex::new(Inner {
+                models: HashMap::new(),
+                aliases: HashMap::new(),
+                default_model: None,
+            }),
+            template,
+            metrics,
+        }
+    }
+
+    /// The shared metrics registry (per-model instruments live here).
+    pub fn metrics(&self) -> &Arc<Registry> {
+        &self.metrics
+    }
+
+    /// Load (or hot-swap) `model` under `name`. Returns the version now
+    /// live: `version` if given, else one past the previous version.
+    ///
+    /// On a swap, in-flight requests finish on the old epoch while new
+    /// admissions immediately see the new one; the old coordinator drains
+    /// when its last handle drops.
+    pub fn load(
+        &self,
+        name: &str,
+        model: SellModel,
+        version: Option<u64>,
+    ) -> Result<u64, RegistryError> {
+        validate_name(name)?;
+        let width = model.width();
+        let kind = model.kind().to_string();
+        let params = model.param_count();
+        // Build the new epoch's coordinator *before* taking the registry
+        // lock — worker-thread spawning must not serialize admissions.
+        let factory: ExecutorFactory = Arc::new(move || {
+            Ok(Box::new(SellModelExecutor {
+                model: model.clone(),
+            }) as Box<dyn BatchExecutor>)
+        });
+        // Coordinator/worker instruments share the registry-wide metrics,
+        // so `GET /metrics` aggregates them fleet-wide.
+        let server = Server::start_custom_with_metrics(
+            &self.template,
+            width,
+            factory,
+            Arc::clone(&self.metrics),
+        );
+        self.install(name, kind, width, params, server, version)
+    }
+
+    /// [`ModelRegistry::load`] from a checkpoint manifest on disk.
+    pub fn load_path(
+        &self,
+        name: &str,
+        path: &Path,
+        version: Option<u64>,
+    ) -> Result<u64, RegistryError> {
+        let ckpt = Checkpoint::load(path).map_err(RegistryError::Invalid)?;
+        let model = SellModel::from_checkpoint(&ckpt).map_err(RegistryError::Invalid)?;
+        self.load(name, model, version)
+    }
+
+    /// Register an externally-constructed [`Server`] under `name` (the
+    /// legacy single-model gateway path and custom-executor tests).
+    pub fn insert_server(
+        &self,
+        name: &str,
+        kind: &str,
+        server: Server,
+        version: Option<u64>,
+    ) -> Result<u64, RegistryError> {
+        validate_name(name)?;
+        let width = server.width();
+        self.install(name, kind.to_string(), width, 0, server, version)
+    }
+
+    fn install(
+        &self,
+        name: &str,
+        kind: String,
+        width: usize,
+        params: usize,
+        server: Server,
+        version: Option<u64>,
+    ) -> Result<u64, RegistryError> {
+        let mut old_epoch = None;
+        let v;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.aliases.contains_key(name) {
+                return Err(RegistryError::Invalid(format!(
+                    "'{name}' is an alias; load under the model name instead"
+                )));
+            }
+            match inner.models.get(name) {
+                Some(entry) => {
+                    v = version.unwrap_or_else(|| entry.next_version.load(Ordering::Relaxed));
+                    entry.next_version.store(v + 1, Ordering::Relaxed);
+                    let epoch = Arc::new(ModelEpoch {
+                        version: v,
+                        kind,
+                        width,
+                        params,
+                        server,
+                    });
+                    let mut cur = entry.current.lock().unwrap();
+                    old_epoch = Some(std::mem::replace(&mut *cur, epoch));
+                    entry.swaps.inc();
+                    entry.loads.inc();
+                    entry.version_gauge.set(v);
+                }
+                None => {
+                    v = version.unwrap_or(1);
+                    let entry = Arc::new(ModelEntry {
+                        name: name.to_string(),
+                        current: Mutex::new(Arc::new(ModelEpoch {
+                            version: v,
+                            kind,
+                            width,
+                            params,
+                            server,
+                        })),
+                        inflight: AtomicU64::new(0),
+                        next_version: AtomicU64::new(v + 1),
+                        requests: self.metrics.counter(&format!("model.{name}.requests")),
+                        loads: self.metrics.counter(&format!("model.{name}.loads")),
+                        swaps: self.metrics.counter(&format!("model.{name}.swaps")),
+                        version_gauge: self.metrics.gauge(&format!("model.{name}.version")),
+                        inflight_gauge: self.metrics.gauge(&format!("model.{name}.inflight")),
+                    });
+                    entry.loads.inc();
+                    entry.version_gauge.set(v);
+                    if inner.default_model.is_none() {
+                        inner.default_model = Some(name.to_string());
+                    }
+                    inner.models.insert(name.to_string(), entry);
+                }
+            }
+        }
+        // Drop the swapped-out epoch outside every lock: if no handles
+        // pin it, its coordinator drains right here.
+        drop(old_epoch);
+        Ok(v)
+    }
+
+    /// Unload `name`, refusing with [`RegistryError::Busy`] while any
+    /// request handle is outstanding. Aliases to the model are removed.
+    pub fn unload(&self, name: &str) -> Result<(), RegistryError> {
+        let entry = {
+            let mut inner = self.inner.lock().unwrap();
+            let canonical = resolve_name(&inner, name)?;
+            let entry = Arc::clone(&inner.models[&canonical]);
+            // Handles are minted under this same lock, so the check and
+            // the removal are one atomic step.
+            let inflight = entry.inflight.load(Ordering::Acquire);
+            if inflight > 0 {
+                return Err(RegistryError::Busy {
+                    name: canonical,
+                    inflight,
+                });
+            }
+            // Resolve the default *before* removing the model: the
+            // default may be an alias to it, which would dangle forever
+            // (install only assigns a default when none is set).
+            let default_points_here = inner
+                .default_model
+                .as_ref()
+                .and_then(|d| resolve_name(&inner, d).ok())
+                .as_deref()
+                == Some(canonical.as_str());
+            inner.models.remove(&canonical);
+            inner.aliases.retain(|_, target| *target != canonical);
+            if default_points_here {
+                inner.default_model = None;
+            }
+            entry
+        };
+        // Last registry reference: the epoch (and its coordinator) drain
+        // here, outside the lock.
+        drop(entry);
+        Ok(())
+    }
+
+    /// Point alias `alias` at model `target` (replacing any previous
+    /// target). The alias namespace is disjoint from model names.
+    pub fn alias(&self, alias: &str, target: &str) -> Result<(), RegistryError> {
+        validate_name(alias)?;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.models.contains_key(alias) {
+            return Err(RegistryError::Invalid(format!(
+                "'{alias}' is already a model name"
+            )));
+        }
+        if !inner.models.contains_key(target) {
+            return Err(RegistryError::NotFound(target.to_string()));
+        }
+        inner.aliases.insert(alias.to_string(), target.to_string());
+        Ok(())
+    }
+
+    /// Route legacy `/v1/infer` traffic to `name` (a model or alias).
+    pub fn set_default(&self, name: &str) -> Result<(), RegistryError> {
+        let mut inner = self.inner.lock().unwrap();
+        resolve_name(&inner, name)?;
+        inner.default_model = Some(name.to_string());
+        Ok(())
+    }
+
+    /// The current default model name, if any.
+    pub fn default_model(&self) -> Option<String> {
+        self.inner.lock().unwrap().default_model.clone()
+    }
+
+    /// Width of the default model (for `/healthz`), if one is set.
+    pub fn default_width(&self) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        let name = inner.default_model.clone()?;
+        let canonical = resolve_name(&inner, &name).ok()?;
+        let entry = inner.models.get(&canonical)?;
+        let w = entry.current.lock().unwrap().width;
+        Some(w)
+    }
+
+    /// Admit one request: pin the current epoch of `name` (model or
+    /// alias) behind a [`ModelHandle`].
+    pub fn resolve(&self, name: &str) -> Result<ModelHandle, RegistryError> {
+        let inner = self.inner.lock().unwrap();
+        let canonical = resolve_name(&inner, name)?;
+        let entry = Arc::clone(&inner.models[&canonical]);
+        // Counted under the registry lock so unload's busy check can't
+        // miss a handle being minted concurrently.
+        entry.inflight.fetch_add(1, Ordering::AcqRel);
+        entry.inflight_gauge.inc();
+        entry.requests.inc();
+        let epoch = Arc::clone(&entry.current.lock().unwrap());
+        drop(inner);
+        Ok(ModelHandle { entry, epoch })
+    }
+
+    /// [`ModelRegistry::resolve`] on the default model.
+    pub fn resolve_default(&self) -> Result<ModelHandle, RegistryError> {
+        let name = self
+            .default_model()
+            .ok_or_else(|| RegistryError::NotFound("(no default model)".to_string()))?;
+        self.resolve(&name)
+    }
+
+    /// Number of loaded models (cheaper than [`ModelRegistry::list`] for
+    /// health probes).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().models.len()
+    }
+
+    /// Whether no models are loaded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of every loaded model, sorted by name.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let inner = self.inner.lock().unwrap();
+        let default_canonical = inner
+            .default_model
+            .as_ref()
+            .and_then(|d| resolve_name(&inner, d).ok());
+        let mut out: Vec<ModelInfo> = inner
+            .models
+            .iter()
+            .map(|(name, entry)| {
+                let epoch = entry.current.lock().unwrap();
+                let mut aliases: Vec<String> = inner
+                    .aliases
+                    .iter()
+                    .filter(|(_, target)| *target == name)
+                    .map(|(alias, _)| alias.clone())
+                    .collect();
+                aliases.sort();
+                ModelInfo {
+                    name: name.clone(),
+                    version: epoch.version,
+                    kind: epoch.kind.clone(),
+                    width: epoch.width,
+                    params: epoch.params,
+                    inflight: entry.inflight.load(Ordering::Acquire),
+                    aliases,
+                    is_default: default_canonical.as_deref() == Some(name.as_str()),
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+/// Canonical model name for `name` (resolving one level of alias).
+fn resolve_name(inner: &Inner, name: &str) -> Result<String, RegistryError> {
+    if inner.models.contains_key(name) {
+        return Ok(name.to_string());
+    }
+    if let Some(target) = inner.aliases.get(name) {
+        if inner.models.contains_key(target) {
+            return Ok(target.clone());
+        }
+    }
+    Err(RegistryError::NotFound(name.to_string()))
+}
+
+/// Model/alias names appear in URL paths and metric names; keep them to
+/// a conservative charset.
+fn validate_name(name: &str) -> Result<(), RegistryError> {
+    if name.is_empty() || name.len() > 64 {
+        return Err(RegistryError::Invalid(
+            "model name must be 1..=64 characters".to_string(),
+        ));
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.')
+    {
+        return Err(RegistryError::Invalid(format!(
+            "model name '{name}' may only contain [A-Za-z0-9._-]"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sell::acdc::AcdcCascade;
+    use crate::sell::init::DiagInit;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Pcg32;
+
+    fn template() -> ServeConfig {
+        ServeConfig {
+            buckets: vec![1, 4],
+            max_wait_us: 200,
+            workers: 1,
+            queue_cap: 64,
+            ..Default::default()
+        }
+    }
+
+    fn registry() -> ModelRegistry {
+        ModelRegistry::new(template(), Arc::new(Registry::new()))
+    }
+
+    fn cascade(seed: u64, n: usize) -> AcdcCascade {
+        let mut rng = Pcg32::seeded(seed);
+        AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng)
+    }
+
+    #[test]
+    fn load_resolve_infer_matches_direct_forward() {
+        let reg = registry();
+        let c = cascade(1, 16);
+        let v = reg.load("m", SellModel::Acdc(c.clone()), None).unwrap();
+        assert_eq!(v, 1);
+        let handle = reg.resolve("m").unwrap();
+        assert_eq!(handle.width(), 16);
+        assert_eq!(handle.kind(), "acdc");
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(16, 0.0, 1.0);
+        let got = handle.infer(x.clone(), Duration::from_secs(5)).unwrap();
+        let want = c.forward(&Tensor::from_vec(&[1, 16], x));
+        for (g, w) in got.iter().zip(want.data()) {
+            assert!((g - w).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn first_load_becomes_default() {
+        let reg = registry();
+        reg.load("a", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        reg.load("b", SellModel::Acdc(cascade(2, 8)), None).unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("a"));
+        assert_eq!(reg.default_width(), Some(8));
+        reg.set_default("b").unwrap();
+        assert_eq!(reg.resolve_default().unwrap().name(), "b");
+        assert!(reg.set_default("nope").is_err());
+    }
+
+    #[test]
+    fn hot_swap_versions_and_inflight_pinning() {
+        let reg = registry();
+        reg.load("m", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        // A pre-swap admission pins version 1…
+        let h1 = reg.resolve("m").unwrap();
+        assert_eq!(h1.version(), 1);
+        let rx = h1.submit(vec![0.5; 8]).unwrap();
+        // …while the swap installs version 2 for new admissions.
+        let v = reg.load("m", SellModel::Acdc(cascade(2, 8)), None).unwrap();
+        assert_eq!(v, 2);
+        let h2 = reg.resolve("m").unwrap();
+        assert_eq!(h2.version(), 2);
+        // The in-flight request still completes on the old epoch.
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.output.unwrap().len(), 8);
+        drop(h1);
+        // Explicit version numbers advance the counter past themselves.
+        let v = reg.load("m", SellModel::Acdc(cascade(3, 8)), Some(10)).unwrap();
+        assert_eq!(v, 10);
+        let v = reg.load("m", SellModel::Acdc(cascade(4, 8)), None).unwrap();
+        assert_eq!(v, 11);
+    }
+
+    #[test]
+    fn unload_refuses_while_busy_then_succeeds() {
+        let reg = registry();
+        reg.load("m", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        let handle = reg.resolve("m").unwrap();
+        match reg.unload("m").unwrap_err() {
+            RegistryError::Busy { name, inflight } => {
+                assert_eq!(name, "m");
+                assert_eq!(inflight, 1);
+            }
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        drop(handle);
+        reg.unload("m").unwrap();
+        assert!(matches!(
+            reg.resolve("m").unwrap_err(),
+            RegistryError::NotFound(_)
+        ));
+        assert!(reg.default_model().is_none(), "default cleared on unload");
+    }
+
+    #[test]
+    fn aliases_resolve_and_follow_unload() {
+        let reg = registry();
+        reg.load("m-v2", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        reg.alias("stable", "m-v2").unwrap();
+        assert_eq!(reg.resolve("stable").unwrap().name(), "m-v2");
+        // Alias namespace is disjoint from model names.
+        assert!(reg.alias("m-v2", "m-v2").is_err());
+        assert!(reg.alias("dangling", "nope").is_err());
+        assert!(reg
+            .load("stable", SellModel::Acdc(cascade(2, 8)), None)
+            .is_err());
+        let infos = reg.list();
+        assert_eq!(infos.len(), 1);
+        assert_eq!(infos[0].aliases, vec!["stable".to_string()]);
+        assert!(infos[0].is_default);
+        reg.unload("m-v2").unwrap();
+        assert!(reg.resolve("stable").is_err(), "alias removed with model");
+    }
+
+    #[test]
+    fn unload_clears_a_default_that_was_an_alias() {
+        let reg = registry();
+        reg.load("m1", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        reg.alias("stable", "m1").unwrap();
+        reg.set_default("stable").unwrap();
+        reg.unload("m1").unwrap();
+        // The aliased default must not dangle: a fresh load becomes the
+        // default again instead of /v1/infer 404ing forever.
+        assert!(reg.default_model().is_none());
+        reg.load("m2", SellModel::Acdc(cascade(2, 8)), None).unwrap();
+        assert_eq!(reg.resolve_default().unwrap().name(), "m2");
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_through_load_path() {
+        let reg = registry();
+        let c = cascade(7, 8);
+        let dir = std::env::temp_dir().join(format!("acdc_reg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        SellModel::Acdc(c.clone())
+            .to_checkpoint()
+            .unwrap()
+            .save(&path)
+            .unwrap();
+        let v = reg.load_path("m", &path, Some(3)).unwrap();
+        assert_eq!(v, 3);
+        let info = &reg.list()[0];
+        assert_eq!((info.version, info.kind.as_str()), (3, "acdc"));
+        assert!(reg.load_path("x", &dir.join("missing.ckpt"), None).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_names() {
+        let reg = registry();
+        assert!(reg.load("", SellModel::Acdc(cascade(1, 8)), None).is_err());
+        assert!(reg
+            .load("has space", SellModel::Acdc(cascade(1, 8)), None)
+            .is_err());
+        assert!(reg
+            .load("has/slash", SellModel::Acdc(cascade(1, 8)), None)
+            .is_err());
+    }
+
+    #[test]
+    fn per_model_metrics_registered() {
+        let metrics = Arc::new(Registry::new());
+        let reg = ModelRegistry::new(template(), Arc::clone(&metrics));
+        reg.load("m", SellModel::Acdc(cascade(1, 8)), None).unwrap();
+        let _h = reg.resolve("m").unwrap();
+        assert_eq!(metrics.counter("model.m.requests").get(), 1);
+        assert_eq!(metrics.gauge("model.m.version").get(), 1);
+        assert_eq!(metrics.gauge("model.m.inflight").get(), 1);
+        reg.load("m", SellModel::Acdc(cascade(2, 8)), None).unwrap();
+        assert_eq!(metrics.counter("model.m.swaps").get(), 1);
+        assert_eq!(metrics.gauge("model.m.version").get(), 2);
+    }
+}

@@ -1,0 +1,420 @@
+//! Servable SELL models and their checkpoint manifest codec.
+//!
+//! [`SellModel`] is the unit the registry loads, swaps and serves: one of
+//! the repo's structured-efficient-linear-layer families wrapped behind a
+//! uniform forward interface. Models round-trip through the binary
+//! [`Checkpoint`] format bit-exactly (f32 payloads are stored verbatim;
+//! permutations are stored as exactly-representable small integers), so a
+//! `save → load → infer` cycle reproduces the in-memory model's outputs
+//! to the last ulp on the same execution path.
+//!
+//! Layout (all under reserved `sell.`/`acdc.`/`ff.`/`lr.` key prefixes):
+//!
+//! ```text
+//! sell.meta            [_, ...]   kind code + shape header (see below)
+//! acdc.layer{i}.{a,d,bias}  [n]   per-layer ACDC diagonals
+//! acdc.perm{i}              [n]   optional §6.2 permutations
+//! ff.{s,g,b,perm}           [n]   adaptive Fastfood diagonals + perm
+//! lr.u / lr.v         [n,r]/[r,n] low-rank factors
+//! ```
+
+use std::sync::Arc;
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::worker::BatchExecutor;
+use crate::dct::PlanCache;
+use crate::sell::acdc::{AcdcCascade, AcdcLayer};
+use crate::sell::fastfood::FastfoodLayer;
+use crate::sell::lowrank::LowRankLayer;
+use crate::tensor::Tensor;
+
+/// Kind code stored in `sell.meta[0]`.
+const KIND_ACDC: f32 = 0.0;
+/// Kind code for [`FastfoodLayer`].
+const KIND_FASTFOOD: f32 = 1.0;
+/// Kind code for [`LowRankLayer`].
+const KIND_LOWRANK: f32 = 2.0;
+
+/// Permutation indices are stored as f32; exact only below 2^24.
+const MAX_EXACT_U32: u32 = 1 << 24;
+
+/// A servable model: any SELL family behind one forward interface.
+///
+/// Cloning is cheap relative to model size (ACDC layers share one cached
+/// [`crate::dct::DctPlan`]); the serving worker factory clones one per
+/// worker thread.
+#[derive(Debug, Clone)]
+pub enum SellModel {
+    /// Deep ACDC cascade (the paper's family).
+    Acdc(AcdcCascade),
+    /// Adaptive Fastfood `S·H·G·P·H·B` layer.
+    Fastfood(FastfoodLayer),
+    /// Low-rank `U·V` factorization.
+    LowRank(LowRankLayer),
+}
+
+impl SellModel {
+    /// Input/output width N.
+    pub fn width(&self) -> usize {
+        match self {
+            SellModel::Acdc(c) => c.n(),
+            SellModel::Fastfood(f) => crate::sell::LinearOp::width(f),
+            SellModel::LowRank(l) => crate::sell::LinearOp::width(l),
+        }
+    }
+
+    /// Family name (the checkpoint `kind` and the `/v1/models` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SellModel::Acdc(_) => "acdc",
+            SellModel::Fastfood(_) => "fastfood",
+            SellModel::LowRank(_) => "lowrank",
+        }
+    }
+
+    /// Learnable parameter count (the Table-1 quantity).
+    pub fn param_count(&self) -> usize {
+        match self {
+            SellModel::Acdc(c) => c.param_count(),
+            SellModel::Fastfood(f) => crate::sell::LinearOp::param_count(f),
+            SellModel::LowRank(l) => crate::sell::LinearOp::param_count(l),
+        }
+    }
+
+    /// Forward a `[rows, N]` batch.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        match self {
+            SellModel::Acdc(c) => c.forward(x),
+            SellModel::Fastfood(f) => crate::sell::LinearOp::forward(f, x),
+            SellModel::LowRank(l) => crate::sell::LinearOp::forward(l, x),
+        }
+    }
+
+    /// Serialize into a checkpoint manifest (see the module docs for the
+    /// key layout). Fails only on permutations too large to store exactly.
+    pub fn to_checkpoint(&self) -> Result<Checkpoint, String> {
+        let mut ckpt = Checkpoint::new();
+        match self {
+            SellModel::Acdc(c) => {
+                let n = c.n();
+                let k = c.k();
+                ckpt.insert(
+                    "sell.meta",
+                    Tensor::from_vec(
+                        &[6],
+                        vec![
+                            KIND_ACDC,
+                            n as f32,
+                            k as f32,
+                            if c.relu { 1.0 } else { 0.0 },
+                            if c.train_bias { 1.0 } else { 0.0 },
+                            if c.perms.is_some() { 1.0 } else { 0.0 },
+                        ],
+                    ),
+                );
+                for (i, layer) in c.layers.iter().enumerate() {
+                    ckpt.insert(&format!("acdc.layer{i}.a"), Tensor::from_vec(&[n], layer.a.clone()));
+                    ckpt.insert(&format!("acdc.layer{i}.d"), Tensor::from_vec(&[n], layer.d.clone()));
+                    ckpt.insert(
+                        &format!("acdc.layer{i}.bias"),
+                        Tensor::from_vec(&[n], layer.bias.clone()),
+                    );
+                }
+                if let Some(perms) = &c.perms {
+                    for (i, perm) in perms.iter().enumerate() {
+                        ckpt.insert(&format!("acdc.perm{i}"), perm_to_tensor(perm)?);
+                    }
+                }
+            }
+            SellModel::Fastfood(f) => {
+                let n = f.s.len();
+                ckpt.insert(
+                    "sell.meta",
+                    Tensor::from_vec(&[2], vec![KIND_FASTFOOD, n as f32]),
+                );
+                ckpt.insert("ff.s", Tensor::from_vec(&[n], f.s.clone()));
+                ckpt.insert("ff.g", Tensor::from_vec(&[n], f.g.clone()));
+                ckpt.insert("ff.b", Tensor::from_vec(&[n], f.b.clone()));
+                ckpt.insert("ff.perm", perm_to_tensor(&f.perm)?);
+            }
+            SellModel::LowRank(l) => {
+                let n = l.u.rows();
+                let r = l.u.cols();
+                ckpt.insert(
+                    "sell.meta",
+                    Tensor::from_vec(&[3], vec![KIND_LOWRANK, n as f32, r as f32]),
+                );
+                ckpt.insert("lr.u", l.u.clone());
+                ckpt.insert("lr.v", l.v.clone());
+            }
+        }
+        Ok(ckpt)
+    }
+
+    /// Reconstruct a model from a checkpoint manifest, validating the kind
+    /// code and every shape.
+    pub fn from_checkpoint(ckpt: &Checkpoint) -> Result<SellModel, String> {
+        let meta = ckpt
+            .get("sell.meta")
+            .ok_or("checkpoint missing 'sell.meta' (not a model manifest)")?;
+        let m = meta.data();
+        let kind = *m.first().ok_or("empty sell.meta")?;
+        if kind == KIND_ACDC {
+            if m.len() != 6 {
+                return Err(format!("acdc sell.meta must have 6 entries, got {}", m.len()));
+            }
+            let n = meta_usize(m[1], "n")?;
+            let k = meta_usize(m[2], "k")?;
+            if k == 0 {
+                return Err("acdc cascade depth k must be >= 1".into());
+            }
+            // Guard before PlanCache::get, whose DctPlan constructor
+            // asserts — a corrupt manifest must error, not panic.
+            if !n.is_power_of_two() {
+                return Err(format!("acdc width must be a power of two, got {n}"));
+            }
+            let plan = PlanCache::get(n);
+            let mut layers = Vec::with_capacity(k);
+            for i in 0..k {
+                let a = vec_entry(ckpt, &format!("acdc.layer{i}.a"), n)?;
+                let d = vec_entry(ckpt, &format!("acdc.layer{i}.d"), n)?;
+                let bias = vec_entry(ckpt, &format!("acdc.layer{i}.bias"), n)?;
+                layers.push(AcdcLayer::new(a, d, bias, Arc::clone(&plan)));
+            }
+            let perms = if m[5] != 0.0 {
+                let mut ps = Vec::with_capacity(k);
+                for i in 0..k {
+                    let t = ckpt
+                        .get(&format!("acdc.perm{i}"))
+                        .ok_or_else(|| format!("checkpoint missing 'acdc.perm{i}'"))?;
+                    ps.push(tensor_to_perm(t, n)?);
+                }
+                Some(ps)
+            } else {
+                None
+            };
+            Ok(SellModel::Acdc(AcdcCascade {
+                layers,
+                perms,
+                relu: m[3] != 0.0,
+                train_bias: m[4] != 0.0,
+            }))
+        } else if kind == KIND_FASTFOOD {
+            if m.len() != 2 {
+                return Err(format!("fastfood sell.meta must have 2 entries, got {}", m.len()));
+            }
+            let n = meta_usize(m[1], "n")?;
+            if !n.is_power_of_two() {
+                return Err(format!("fastfood width must be a power of two, got {n}"));
+            }
+            let s = vec_entry(ckpt, "ff.s", n)?;
+            let g = vec_entry(ckpt, "ff.g", n)?;
+            let b = vec_entry(ckpt, "ff.b", n)?;
+            let perm = tensor_to_perm(
+                ckpt.get("ff.perm").ok_or("checkpoint missing 'ff.perm'")?,
+                n,
+            )?;
+            Ok(SellModel::Fastfood(FastfoodLayer::new(s, g, b, perm)))
+        } else if kind == KIND_LOWRANK {
+            if m.len() != 3 {
+                return Err(format!("lowrank sell.meta must have 3 entries, got {}", m.len()));
+            }
+            let n = meta_usize(m[1], "n")?;
+            let r = meta_usize(m[2], "r")?;
+            let u = ckpt.get("lr.u").ok_or("checkpoint missing 'lr.u'")?.clone();
+            let v = ckpt.get("lr.v").ok_or("checkpoint missing 'lr.v'")?.clone();
+            if u.shape() != &[n, r] || v.shape() != &[r, n] {
+                return Err(format!(
+                    "lowrank factor shapes {:?}/{:?} do not match meta [n={n}, r={r}]",
+                    u.shape(),
+                    v.shape()
+                ));
+            }
+            Ok(SellModel::LowRank(LowRankLayer::new(u, v)))
+        } else {
+            Err(format!("unknown sell kind code {kind}"))
+        }
+    }
+}
+
+fn meta_usize(v: f32, what: &str) -> Result<usize, String> {
+    if v < 0.0 || v.fract() != 0.0 || v >= MAX_EXACT_U32 as f32 {
+        return Err(format!("sell.meta {what} = {v} is not a valid size"));
+    }
+    Ok(v as usize)
+}
+
+fn vec_entry(ckpt: &Checkpoint, name: &str, n: usize) -> Result<Vec<f32>, String> {
+    let t = ckpt
+        .get(name)
+        .ok_or_else(|| format!("checkpoint missing '{name}'"))?;
+    if t.shape() != &[n] {
+        return Err(format!("'{name}' has shape {:?}, want [{n}]", t.shape()));
+    }
+    Ok(t.data().to_vec())
+}
+
+fn perm_to_tensor(perm: &[u32]) -> Result<Tensor, String> {
+    if perm.iter().any(|&p| p >= MAX_EXACT_U32) {
+        return Err("permutation index too large to store exactly".into());
+    }
+    Ok(Tensor::from_vec(
+        &[perm.len()],
+        perm.iter().map(|&p| p as f32).collect(),
+    ))
+}
+
+fn tensor_to_perm(t: &Tensor, n: usize) -> Result<Vec<u32>, String> {
+    if t.shape() != &[n] {
+        return Err(format!("permutation has shape {:?}, want [{n}]", t.shape()));
+    }
+    let mut perm = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    for &v in t.data() {
+        if v < 0.0 || v.fract() != 0.0 || v >= n as f32 {
+            return Err(format!("permutation entry {v} is not an index below {n}"));
+        }
+        let p = v as usize;
+        if seen[p] {
+            return Err(format!("permutation repeats index {p}"));
+        }
+        seen[p] = true;
+        perm.push(p as u32);
+    }
+    Ok(perm)
+}
+
+/// [`BatchExecutor`] over any [`SellModel`] — the registry's per-worker
+/// executor. ACDC cascades ride the batched SoA engine exactly like
+/// [`crate::coordinator::worker::NativeCascadeExecutor`] (pooled panels
+/// for buckets ≥ 32); the other families use their own batch forwards.
+pub struct SellModelExecutor {
+    /// The model evaluated per batch (one clone per worker thread).
+    pub model: SellModel,
+}
+
+impl BatchExecutor for SellModelExecutor {
+    fn width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.model.width()
+    }
+
+    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+        let n = self.model.width();
+        if padded.len() != bucket * n {
+            return Err(format!(
+                "padded buffer {} != bucket {bucket} × n {n}",
+                padded.len()
+            ));
+        }
+        let x = Tensor::from_vec(&[bucket, n], padded.to_vec());
+        if let SellModel::Acdc(cascade) = &self.model {
+            if bucket >= 32 {
+                let pool = crate::util::threadpool::global();
+                return Ok(cascade.forward_pooled(&x, pool).into_vec());
+            }
+        }
+        Ok(self.model.forward(&x).into_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sell::init::DiagInit;
+    use crate::util::rng::Pcg32;
+
+    fn exact_eq(a: &Tensor, b: &Tensor) -> bool {
+        a.shape() == b.shape()
+            && a.data()
+                .iter()
+                .zip(b.data())
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn acdc_checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Pcg32::seeded(1);
+        let cascade = AcdcCascade::nonlinear(16, 3, DiagInit::CAFFENET, &mut rng);
+        let model = SellModel::Acdc(cascade);
+        let re = SellModel::from_checkpoint(&model.to_checkpoint().unwrap()).unwrap();
+        assert_eq!(re.kind(), "acdc");
+        assert_eq!(re.width(), 16);
+        let x = Tensor::from_vec(&[5, 16], rng.normal_vec(80, 0.0, 1.0));
+        assert!(exact_eq(&model.forward(&x), &re.forward(&x)));
+    }
+
+    #[test]
+    fn acdc_linear_cascade_roundtrips_without_perms() {
+        let mut rng = Pcg32::seeded(2);
+        let model = SellModel::Acdc(AcdcCascade::linear(8, 2, DiagInit::CAFFENET, &mut rng));
+        let re = SellModel::from_checkpoint(&model.to_checkpoint().unwrap()).unwrap();
+        match re {
+            SellModel::Acdc(c) => {
+                assert!(c.perms.is_none());
+                assert!(!c.relu);
+            }
+            other => panic!("wrong kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    fn fastfood_checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Pcg32::seeded(3);
+        let model = SellModel::Fastfood(FastfoodLayer::random(32, &mut rng));
+        let re = SellModel::from_checkpoint(&model.to_checkpoint().unwrap()).unwrap();
+        assert_eq!(re.kind(), "fastfood");
+        let x = Tensor::from_vec(&[3, 32], rng.normal_vec(96, 0.0, 1.0));
+        assert!(exact_eq(&model.forward(&x), &re.forward(&x)));
+    }
+
+    #[test]
+    fn lowrank_checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Pcg32::seeded(4);
+        let model = SellModel::LowRank(LowRankLayer::random(24, 4, &mut rng));
+        let re = SellModel::from_checkpoint(&model.to_checkpoint().unwrap()).unwrap();
+        assert_eq!(re.kind(), "lowrank");
+        assert_eq!(re.param_count(), 2 * 24 * 4);
+        let x = Tensor::from_vec(&[2, 24], rng.normal_vec(48, 0.0, 1.0));
+        assert!(exact_eq(&model.forward(&x), &re.forward(&x)));
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_corrupt_manifests() {
+        let mut rng = Pcg32::seeded(5);
+        let model = SellModel::Fastfood(FastfoodLayer::random(16, &mut rng));
+        let good = model.to_checkpoint().unwrap();
+        // Not a model manifest at all.
+        assert!(SellModel::from_checkpoint(&Checkpoint::new())
+            .unwrap_err()
+            .contains("sell.meta"));
+        // Missing a parameter bank.
+        let mut bad = good.clone();
+        bad.entries.remove("ff.g");
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("ff.g"));
+        // Invalid permutation (repeated index).
+        let mut bad = good.clone();
+        bad.insert("ff.perm", Tensor::from_vec(&[16], vec![0.0; 16]));
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("repeats"));
+        // Unknown kind code.
+        let mut bad = good.clone();
+        bad.insert("sell.meta", Tensor::from_vec(&[2], vec![9.0, 16.0]));
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("unknown"));
+    }
+
+    #[test]
+    fn executor_matches_direct_forward() {
+        let mut rng = Pcg32::seeded(6);
+        let model = SellModel::LowRank(LowRankLayer::random(8, 2, &mut rng));
+        let x = Tensor::from_vec(&[4, 8], rng.normal_vec(32, 0.0, 1.0));
+        let mut exe = SellModelExecutor {
+            model: model.clone(),
+        };
+        let got = exe.execute(4, x.data()).unwrap();
+        assert_eq!(got, model.forward(&x).data());
+        assert!(exe.execute(4, &[0.0; 3]).is_err(), "bad buffer length");
+    }
+}

@@ -189,7 +189,19 @@ impl Server {
         params: ServeParams,
         n: usize,
     ) -> Result<Server, String> {
-        let metrics = Arc::new(Registry::new());
+        Server::start_pjrt_with_metrics(cfg, params, n, Arc::new(Registry::new()))
+    }
+
+    /// [`Server::start_pjrt`] recording into a caller-supplied registry
+    /// (see [`Server::start_custom_with_metrics`]) — used when the server
+    /// joins a multi-model gateway whose `GET /metrics` must include the
+    /// coordinator/worker series.
+    pub fn start_pjrt_with_metrics(
+        cfg: &ServeConfig,
+        params: ServeParams,
+        n: usize,
+        metrics: Arc<Registry>,
+    ) -> Result<Server, String> {
         let dir = PathBuf::from(cfg.artifacts_dir.clone());
         let factory: ExecutorFactory = Arc::new(move || {
             let exe = PjrtCascadeExecutor::new(&dir, params.clone())?;
@@ -216,7 +228,20 @@ impl Server {
     /// Start over an arbitrary executor factory (custom backends and tests
     /// that need to control execution latency, e.g. gateway saturation).
     pub fn start_custom(cfg: &ServeConfig, width: usize, factory: ExecutorFactory) -> Server {
-        let metrics = Arc::new(Registry::new());
+        Server::start_custom_with_metrics(cfg, width, factory, Arc::new(Registry::new()))
+    }
+
+    /// [`Server::start_custom`] recording into a caller-supplied registry
+    /// — the model registry hands every per-model coordinator the
+    /// gateway's shared registry, so coordinator/worker instruments
+    /// aggregate fleet-wide in one `GET /metrics` exposition (per-model
+    /// series live under `model.{name}.*`).
+    pub fn start_custom_with_metrics(
+        cfg: &ServeConfig,
+        width: usize,
+        factory: ExecutorFactory,
+        metrics: Arc<Registry>,
+    ) -> Server {
         Server {
             coordinator: Coordinator::start(cfg, width, factory, Arc::clone(&metrics)),
             metrics,

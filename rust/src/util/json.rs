@@ -327,7 +327,11 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.skip_ws();
             let val = self.value()?;
-            map.insert(key, val);
+            // Duplicate keys are a classic smuggling vector (different
+            // consumers disagree on which value wins); refuse outright.
+            if map.insert(key.clone(), val).is_some() {
+                return Err(self.err(&format!("duplicate key '{key}'")));
+            }
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
@@ -381,6 +385,11 @@ impl<'a> Parser<'a> {
                                 return Err(self.err("expected low surrogate"));
                             }
                             let lo = self.hex4()?;
+                            // A non-low-surrogate here must error; the
+                            // subtraction below would underflow on it.
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err("expected low surrogate"));
+                            }
                             let combined =
                                 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
                             char::from_u32(combined)
@@ -430,13 +439,25 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
+        let mut digits = 0usize;
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
+            digits += 1;
         }
+        if digits == 0 {
+            return Err(self.err("expected digits"));
+        }
+        // The JSON grammar requires digits after '.' and in exponents;
+        // Rust's f64 parser is laxer ("1.", "1.e5"), so enforce here.
         if self.peek() == Some(b'.') {
             self.pos += 1;
+            let mut frac = 0usize;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
+                frac += 1;
+            }
+            if frac == 0 {
+                return Err(self.err("expected digits after '.'"));
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
@@ -444,14 +465,25 @@ impl<'a> Parser<'a> {
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
             }
+            let mut exp = 0usize;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
+                exp += 1;
+            }
+            if exp == 0 {
+                return Err(self.err("expected digits in exponent"));
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>()
-            .map(Json::Num)
-            .map_err(|_| self.err("invalid number"))
+        let n = text
+            .parse::<f64>()
+            .map_err(|_| self.err("invalid number"))?;
+        // Overflowing literals ("1e999") parse to ±inf; JSON has no
+        // non-finite numbers, so reject rather than smuggle an inf in.
+        if !n.is_finite() {
+            return Err(self.err("number out of range"));
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -536,6 +568,22 @@ mod tests {
         assert!(Json::parse("tru").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn rejects_overflowing_numbers() {
+        assert!(Json::parse("1e999").is_err());
+        assert!(Json::parse("-1e999").is_err());
+        // Large-but-finite stays accepted.
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+    }
+
+    #[test]
+    fn rejects_duplicate_object_keys() {
+        let err = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap_err();
+        assert!(err.msg.contains("duplicate"), "{err}");
+        // Same key at different nesting levels is fine.
+        assert!(Json::parse(r#"{"a": {"a": 1}}"#).is_ok());
     }
 
     #[test]

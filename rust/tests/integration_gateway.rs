@@ -331,11 +331,15 @@ fn shutdown_drains_promptly_with_idle_keepalive_connections() {
     let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
     let addr = gateway.local_addr();
     // A served request plus an idle parked keep-alive connection.
-    let idle = TcpStream::connect(addr).unwrap();
+    let mut idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
     let ok = one_shot(addr, "POST", "/v1/infer", &infer_body(&[0.5; 8]));
     assert_eq!(ok.status, 200);
     // Drain must not wait out the idle connection's socket: parked
-    // connections poll the drain flag and exit within the idle interval.
+    // connections poll the drain flag and exit within the idle interval,
+    // and shutdown blocks on the connection-exit condvar — an event, not
+    // a sleep-poll — so returning here means every connection thread has
+    // actually finished (nothing detached, nothing joined-on-timeout).
     let t0 = std::time::Instant::now();
     gateway.shutdown();
     assert!(
@@ -343,7 +347,16 @@ fn shutdown_drains_promptly_with_idle_keepalive_connections() {
         "drain stalled on an idle keep-alive connection: {:?}",
         t0.elapsed()
     );
-    drop(idle);
+    // Deterministic teardown: the server side closed the parked
+    // connection during the drain, so the very next read sees EOF (not a
+    // timeout against a half-open socket).
+    use std::io::Read;
+    let mut buf = [0u8; 16];
+    match idle.read(&mut buf) {
+        Ok(0) => {}                   // clean EOF — connection was closed
+        Ok(n) => panic!("unexpected {n} bytes on a drained idle connection"),
+        Err(e) => panic!("idle connection not closed by drain: {e}"),
+    }
 }
 
 #[test]
