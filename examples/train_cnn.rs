@@ -14,7 +14,7 @@
 
 use acdc::data::synthimg::ImageCorpus;
 use acdc::runtime::Engine;
-use acdc::train::{CnnTrainer, CnnVariant, StepDecay};
+use acdc::trainer::{CnnTrainer, CnnVariant, StepDecay};
 use acdc::util::cli::{opt, Args};
 use acdc::util::fmt_params;
 use std::path::Path;

@@ -370,6 +370,188 @@ impl RegistryConfig {
     }
 }
 
+/// Training-job configuration (`[trainer]` section): the default knobs a
+/// [`crate::trainer::TrainerPool`] applies to submitted jobs. Every field
+/// can be overridden per job (HTTP body of `POST /v1/models/{name}/train`
+/// or `acdc train` options).
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    /// SGD steps per job (jobs may finish earlier on convergence).
+    pub steps: usize,
+    /// Minibatch rows per step (batches never mix jobs — each job owns
+    /// its dataset and cascade).
+    pub batch: usize,
+    /// Base learning rate.
+    pub lr: f64,
+    /// Momentum coefficient β (0 = plain SGD).
+    pub momentum: f64,
+    /// Multiply lr by this every `lr_decay_every` steps (1.0 = constant).
+    pub lr_decay: f64,
+    /// Steps between learning-rate decays (0 = never decay).
+    pub lr_decay_every: usize,
+    /// Cascade width N (must be a power of two).
+    pub width: usize,
+    /// Cascade depth K.
+    pub depth: usize,
+    /// Mean of the diagonal init (the paper's working init is A = D = 1
+    /// plus small Gaussian noise — mean 1.0).
+    pub init_mean: f64,
+    /// Std-dev of the diagonal init noise.
+    pub init_sigma: f64,
+    /// Train a §6.2-style nonlinear cascade (ReLU + permutations +
+    /// trainable biases) instead of the linear Fig-3 operator.
+    pub nonlinear: bool,
+    /// Rows of the synthetic eq.-(15) regression dataset.
+    pub dataset_rows: usize,
+    /// Target-noise variance of the dataset.
+    pub dataset_noise: f64,
+    /// RNG seed for dataset + init.
+    pub seed: u64,
+    /// Write a checkpoint manifest every this many steps (0 = only at
+    /// promotion/completion).
+    pub checkpoint_every: usize,
+    /// Directory checkpoint manifests are written into.
+    pub checkpoint_dir: String,
+    /// Convergence target: the job completes once loss ≤ first-loss ×
+    /// this ratio (0.1 = a 10× drop).
+    pub target_ratio: f64,
+    /// Promote (checkpoint → registry load → hot swap) automatically
+    /// when the job completes.
+    pub promote_on_complete: bool,
+    /// Cap on concurrently live (non-terminal) jobs in the pool.
+    pub max_jobs: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            steps: 2_000,
+            batch: 64,
+            lr: 2e-4,
+            momentum: 0.9,
+            lr_decay: 1.0,
+            lr_decay_every: 0,
+            width: 32,
+            depth: 2,
+            init_mean: 1.0,
+            init_sigma: 0.1,
+            nonlinear: false,
+            dataset_rows: 4_096,
+            dataset_noise: 1e-4,
+            seed: 0,
+            checkpoint_every: 500,
+            checkpoint_dir: "ckpts".into(),
+            target_ratio: 0.1,
+            promote_on_complete: true,
+            max_jobs: 4,
+        }
+    }
+}
+
+impl TrainerConfig {
+    /// Build from a parsed config's `[trainer]` section (defaults fill
+    /// missing keys).
+    pub fn from_config(cfg: &Config) -> Result<TrainerConfig, String> {
+        let d = TrainerConfig::default();
+        let tc = TrainerConfig {
+            steps: cfg.get_usize("trainer.steps", d.steps),
+            batch: cfg.get_usize("trainer.batch", d.batch),
+            lr: cfg.get_f64("trainer.lr", d.lr),
+            momentum: cfg.get_f64("trainer.momentum", d.momentum),
+            lr_decay: cfg.get_f64("trainer.lr_decay", d.lr_decay),
+            lr_decay_every: cfg.get_usize("trainer.lr_decay_every", d.lr_decay_every),
+            width: cfg.get_usize("trainer.width", d.width),
+            depth: cfg.get_usize("trainer.depth", d.depth),
+            init_mean: cfg.get_f64("trainer.init_mean", d.init_mean),
+            init_sigma: cfg.get_f64("trainer.init_sigma", d.init_sigma),
+            nonlinear: cfg.get_bool("trainer.nonlinear", d.nonlinear),
+            dataset_rows: cfg.get_usize("trainer.dataset_rows", d.dataset_rows),
+            dataset_noise: cfg.get_f64("trainer.dataset_noise", d.dataset_noise),
+            seed: cfg.get_usize("trainer.seed", d.seed as usize) as u64,
+            checkpoint_every: cfg.get_usize("trainer.checkpoint_every", d.checkpoint_every),
+            checkpoint_dir: cfg.get_str("trainer.checkpoint_dir", &d.checkpoint_dir),
+            target_ratio: cfg.get_f64("trainer.target_ratio", d.target_ratio),
+            promote_on_complete: cfg.get_bool("trainer.promote_on_complete", d.promote_on_complete),
+            max_jobs: cfg.get_usize("trainer.max_jobs", d.max_jobs),
+        };
+        tc.validate()?;
+        Ok(tc)
+    }
+
+    /// Cap on `dataset_rows × width` elements (64 MB per f32 tensor):
+    /// the train endpoint is unauthenticated-adjacent admin surface, and
+    /// an unbounded spec would let one request abort the gateway on a
+    /// failed multi-GB allocation.
+    pub const MAX_DATASET_ELEMS: usize = 1 << 24;
+
+    /// Cap on `batch × width × depth` elements (the per-step activation
+    /// cache the backward pass keeps).
+    pub const MAX_STEP_ELEMS: usize = 1 << 24;
+
+    /// Sanity-check the knobs. Rejecting a non-power-of-two width here is
+    /// what keeps a bad HTTP train request a 400 instead of a panic in
+    /// the DCT plan constructor; the size caps keep a hostile spec a 400
+    /// instead of an allocation abort.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.steps == 0 {
+            return Err("trainer.steps must be >= 1".into());
+        }
+        if self.batch == 0 {
+            return Err("trainer.batch must be >= 1".into());
+        }
+        if self.batch > self.dataset_rows {
+            return Err("trainer.batch must not exceed trainer.dataset_rows".into());
+        }
+        if !self.lr.is_finite() || self.lr <= 0.0 {
+            return Err("trainer.lr must be finite and positive".into());
+        }
+        if !self.momentum.is_finite() || !(0.0..1.0).contains(&self.momentum) {
+            return Err("trainer.momentum must be in [0, 1)".into());
+        }
+        if !self.lr_decay.is_finite() || self.lr_decay <= 0.0 || self.lr_decay > 1.0 {
+            return Err("trainer.lr_decay must be in (0, 1]".into());
+        }
+        if self.width < 2 || self.width > 16_384 || !self.width.is_power_of_two() {
+            return Err(format!(
+                "trainer.width must be a power of two in [2, 16384], got {}",
+                self.width
+            ));
+        }
+        if self.depth == 0 || self.depth > 64 {
+            return Err("trainer.depth must be in [1, 64]".into());
+        }
+        if self.dataset_rows.saturating_mul(self.width) > Self::MAX_DATASET_ELEMS {
+            return Err(format!(
+                "trainer.dataset_rows x width must not exceed {} elements",
+                Self::MAX_DATASET_ELEMS
+            ));
+        }
+        let step_elems = self
+            .batch
+            .saturating_mul(self.width)
+            .saturating_mul(self.depth);
+        if step_elems > Self::MAX_STEP_ELEMS {
+            return Err(format!(
+                "trainer.batch x width x depth must not exceed {} elements",
+                Self::MAX_STEP_ELEMS
+            ));
+        }
+        if !self.init_mean.is_finite() || !self.init_sigma.is_finite() || self.init_sigma < 0.0 {
+            return Err("trainer.init_mean/init_sigma must be finite (sigma >= 0)".into());
+        }
+        if !self.dataset_noise.is_finite() || self.dataset_noise < 0.0 {
+            return Err("trainer.dataset_noise must be finite and >= 0".into());
+        }
+        if !self.target_ratio.is_finite() || self.target_ratio <= 0.0 || self.target_ratio > 1.0 {
+            return Err("trainer.target_ratio must be in (0, 1]".into());
+        }
+        if self.max_jobs == 0 {
+            return Err("trainer.max_jobs must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -387,6 +569,8 @@ pub struct ServeConfig {
     pub gateway: GatewayConfig,
     /// Model registry knobs (`[registry]` section).
     pub registry: RegistryConfig,
+    /// Training-job defaults (`[trainer]` section).
+    pub trainer: TrainerConfig,
 }
 
 impl Default for ServeConfig {
@@ -399,6 +583,7 @@ impl Default for ServeConfig {
             queue_cap: 4_096,
             gateway: GatewayConfig::default(),
             registry: RegistryConfig::default(),
+            trainer: TrainerConfig::default(),
         }
     }
 }
@@ -413,6 +598,7 @@ impl ServeConfig {
             queue_cap: cfg.get_usize("serve.queue_cap", 4_096),
             gateway: GatewayConfig::from_config(cfg)?,
             registry: RegistryConfig::from_config(cfg)?,
+            trainer: TrainerConfig::from_config(cfg)?,
             ..Default::default()
         };
         if let Some(v) = cfg.get("serve.buckets") {
@@ -442,7 +628,8 @@ impl ServeConfig {
         if self.queue_cap == 0 {
             return Err("queue_cap must be >= 1".into());
         }
-        self.gateway.validate()
+        self.gateway.validate()?;
+        self.trainer.validate()
     }
 }
 
@@ -549,6 +736,17 @@ retry_after_s = 2
 [registry]
 default_model = "stable"
 models = ["m1=ckpts/m1.ckpt", "m2=ckpts/m2.ckpt"]
+
+[trainer]
+steps = 1200
+batch = 32
+lr = 0.005
+momentum = 0.5
+width = 64
+depth = 4
+checkpoint_every = 100
+checkpoint_dir = "out/ckpts"
+target_ratio = 0.05
 "#;
 
     #[test]
@@ -704,8 +902,84 @@ models = ["m1=ckpts/m1.ckpt", "m2=ckpts/m2.ckpt"]
     }
 
     #[test]
+    fn trainer_config_from_config() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let tc = TrainerConfig::from_config(&cfg).unwrap();
+        assert_eq!(tc.steps, 1200);
+        assert_eq!(tc.batch, 32);
+        assert!((tc.lr - 0.005).abs() < 1e-12);
+        assert!((tc.momentum - 0.5).abs() < 1e-12);
+        assert_eq!((tc.width, tc.depth), (64, 4));
+        assert_eq!(tc.checkpoint_every, 100);
+        assert_eq!(tc.checkpoint_dir, "out/ckpts");
+        assert!((tc.target_ratio - 0.05).abs() < 1e-12);
+        // Unspecified keys fall back to defaults; ServeConfig embeds it.
+        assert_eq!(tc.dataset_rows, TrainerConfig::default().dataset_rows);
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.trainer.steps, 1200);
+    }
+
+    #[test]
+    fn trainer_config_validation() {
+        let ok = TrainerConfig::default();
+        assert!(ok.validate().is_ok());
+        for bad in [
+            TrainerConfig {
+                width: 48, // not a power of two → must be a 400, not a panic
+                ..Default::default()
+            },
+            TrainerConfig {
+                momentum: 1.0,
+                ..Default::default()
+            },
+            TrainerConfig {
+                lr: 0.0,
+                ..Default::default()
+            },
+            TrainerConfig {
+                batch: 10_000_000,
+                ..Default::default()
+            },
+            TrainerConfig {
+                // rows x width over the allocation cap: must be a 400,
+                // not an OOM abort of the serving process.
+                dataset_rows: 30_000_000_000,
+                batch: 64,
+                ..Default::default()
+            },
+            TrainerConfig {
+                width: 1 << 20, // pow2 but over the width cap
+                ..Default::default()
+            },
+            TrainerConfig {
+                depth: 100_000,
+                ..Default::default()
+            },
+            TrainerConfig {
+                // per-step activation cache over the cap
+                batch: 4096,
+                width: 16_384,
+                depth: 64,
+                dataset_rows: 4096,
+                ..Default::default()
+            },
+            TrainerConfig {
+                target_ratio: 0.0,
+                ..Default::default()
+            },
+            TrainerConfig {
+                depth: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
     fn defaults_are_valid() {
         assert!(ServeConfig::default().validate().is_ok());
         assert!(TrainConfig::default().validate().is_ok());
+        assert!(TrainerConfig::default().validate().is_ok());
     }
 }

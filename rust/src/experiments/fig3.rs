@@ -11,7 +11,7 @@
 use crate::data::regression::RegressionTask;
 use crate::runtime::Engine;
 use crate::sell::init::DiagInit;
-use crate::train::{Fig3Trainer, LossCurve, StepDecay};
+use crate::trainer::{Fig3Trainer, LossCurve, StepDecay};
 use crate::util::bench::Table;
 
 /// The cascade depths swept in the paper's Figure 3.

@@ -8,9 +8,12 @@
 //! * [`fig3`] — E2: operator approximation under two inits;
 //! * [`table1`] — E3/E4: parameter/accuracy trade-off (analytic + measured);
 //! * [`engine_bench`] — E9: per-row vs batched-SoA ACDC engine comparison
-//!   (the `BENCH_acdc_batch.json` source, see DESIGN.md §4).
+//!   (the `BENCH_acdc_batch.json` source, see DESIGN.md §4);
+//! * [`trainer_bench`] — E11 throughput leg: full-SGD-step sweep over
+//!   layer width (the `BENCH_trainer_step.json` source, DESIGN.md §6).
 
 pub mod engine_bench;
 pub mod fig2;
 pub mod fig3;
 pub mod table1;
+pub mod trainer_bench;

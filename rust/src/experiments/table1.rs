@@ -11,7 +11,7 @@
 use crate::data::synthimg::ImageCorpus;
 use crate::runtime::Engine;
 use crate::sell::params::{self, mini, table1_rows};
-use crate::train::{CnnTrainer, CnnVariant, StepDecay};
+use crate::trainer::{CnnTrainer, CnnVariant, StepDecay};
 use crate::util::bench::Table;
 use crate::util::fmt_params;
 

@@ -1,0 +1,196 @@
+//! E11 (throughput leg) — trainer-step bench: one full SGD step
+//! (pooled batched `forward_train` + closed-form backward + momentum
+//! update) over the eq.-(15) regression task, swept over layer width.
+//!
+//! Two strategies per `(N, batch, depth)` case:
+//!
+//! 1. **serial** — [`crate::sell::acdc::AcdcCascade::forward_train`] +
+//!    backward on the serial batched SoA engine;
+//! 2. **pooled** — [`crate::sell::acdc::AcdcCascade::forward_train_pooled`]
+//!    with panels fanned across the process-wide thread pool (the
+//!    [`crate::trainer::TrainerPool`] hot path; bit-identical to serial).
+//!
+//! `acdc bench-trainer` renders the table and writes
+//! `BENCH_trainer_step.json` with provenance, so the training-throughput
+//! trajectory is tracked the same way the engine bench (E9) is.
+
+use crate::data::regression::RegressionTask;
+use crate::data::BatchCursor;
+use crate::sell::acdc::AcdcCascade;
+use crate::sell::init::DiagInit;
+use crate::trainer::{apply_momentum_update, Momentum};
+use crate::util::bench::{black_box, fmt_ns, Bench, Table};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// One measured (N, batch, depth) case.
+#[derive(Debug, Clone)]
+pub struct TrainerBenchRow {
+    /// Layer width N.
+    pub n: usize,
+    /// Minibatch rows per step.
+    pub batch: usize,
+    /// Cascade depth K.
+    pub depth: usize,
+    /// Full SGD step on the serial engine, ns.
+    pub serial_step_ns: f64,
+    /// Full SGD step with pooled panels, ns.
+    pub pooled_step_ns: f64,
+}
+
+impl TrainerBenchRow {
+    /// Steps per second on the pooled (production) path.
+    pub fn steps_per_s(&self) -> f64 {
+        1e9 / self.pooled_step_ns
+    }
+
+    /// Training rows per second on the pooled path.
+    pub fn rows_per_s(&self) -> f64 {
+        self.batch as f64 * self.steps_per_s()
+    }
+
+    /// Pooled speedup over the serial engine.
+    pub fn pooled_speedup(&self) -> f64 {
+        self.serial_step_ns / self.pooled_step_ns
+    }
+}
+
+/// Measure every `(n, batch, depth)` case. The learning rate is zero so
+/// the parameters (and therefore the measured work) stay pinned at the
+/// init across the whole measurement window; the update runs in full.
+pub fn run(cases: &[(usize, usize, usize)], bench: &Bench) -> Vec<TrainerBenchRow> {
+    let pool = crate::util::threadpool::global();
+    let mut rows = Vec::with_capacity(cases.len());
+    for &(n, batch, depth) in cases {
+        let mut rng = Pcg32::seeded(99);
+        let task = RegressionTask::generate(batch * 4, n, 1e-4, 7);
+        let mut cascade = AcdcCascade::linear(n, depth, DiagInit::IDENTITY, &mut rng);
+        let sizes = vec![n; 3 * depth];
+        let mut momentum = Momentum::new(0.9, &sizes);
+        let mut cursor = BatchCursor::new(task.rows(), batch);
+        let mut step = |pooled: bool| {
+            let idx = cursor.next_indices();
+            let (bx, by) = task.gather(&idx);
+            let (pred, cache) = if pooled {
+                cascade.forward_train_pooled(&bx, pool)
+            } else {
+                cascade.forward_train(&bx)
+            };
+            let mut g = pred.sub(&by);
+            g.scale(2.0 / batch as f32);
+            let (_, mut grads) = cascade.backward(&cache, &g);
+            apply_momentum_update(&mut cascade, &mut grads, &mut momentum, 0.0);
+            black_box(grads[0].a[0]);
+        };
+        let m_serial = bench.run(&format!("train-step serial n={n} b={batch} k={depth}"), || {
+            step(false)
+        });
+        let m_pooled = bench.run(&format!("train-step pooled n={n} b={batch} k={depth}"), || {
+            step(true)
+        });
+        rows.push(TrainerBenchRow {
+            n,
+            batch,
+            depth,
+            serial_step_ns: m_serial.median_ns,
+            pooled_step_ns: m_pooled.median_ns,
+        });
+    }
+    rows
+}
+
+/// Text table of the sweep.
+pub fn render(rows: &[TrainerBenchRow]) -> String {
+    let mut t = Table::new(&[
+        "N",
+        "batch",
+        "depth",
+        "serial step",
+        "pooled step",
+        "pooled speedup",
+        "steps/s",
+        "rows/s",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.n.to_string(),
+            r.batch.to_string(),
+            r.depth.to_string(),
+            fmt_ns(r.serial_step_ns),
+            fmt_ns(r.pooled_step_ns),
+            format!("{:.2}x", r.pooled_speedup()),
+            format!("{:.1}", r.steps_per_s()),
+            format!("{:.0}", r.rows_per_s()),
+        ]);
+    }
+    format!(
+        "Trainer-step throughput (forward_train + backward + momentum update)\n{}",
+        t.render()
+    )
+}
+
+/// JSON report (the `BENCH_trainer_step.json` payload).
+pub fn to_json(rows: &[TrainerBenchRow], provenance: &str) -> Json {
+    obj(vec![
+        ("bench", Json::Str("trainer_step".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("n", Json::Num(r.n as f64)),
+                            ("batch", Json::Num(r.batch as f64)),
+                            ("depth", Json::Num(r.depth as f64)),
+                            ("serial_step_ns", Json::Num(r.serial_step_ns)),
+                            ("pooled_step_ns", Json::Num(r.pooled_step_ns)),
+                            ("pooled_speedup", Json::Num(r.pooled_speedup())),
+                            ("steps_per_s", Json::Num(r.steps_per_s())),
+                            ("rows_per_s", Json::Num(r.rows_per_s())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the JSON report to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    rows: &[TrainerBenchRow],
+    provenance: &str,
+) -> Result<(), String> {
+    std::fs::write(path, to_json(rows, provenance).to_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(15),
+            min_iters: 2,
+            max_iters: 10_000,
+        }
+    }
+
+    #[test]
+    fn runs_renders_and_serializes() {
+        let rows = run(&[(16, 8, 2)], &quick());
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].serial_step_ns > 0.0 && rows[0].pooled_step_ns > 0.0);
+        assert!(rows[0].steps_per_s() > 0.0);
+        let s = render(&rows);
+        assert!(s.contains("steps/s"), "{s}");
+        let j = to_json(&rows, "unit test");
+        let re = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(re.get("bench").unwrap().as_str(), Some("trainer_step"));
+        assert_eq!(re.get("rows").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -22,6 +22,17 @@
 //!   with 409 while requests are in flight.
 //! * `POST /v1/admin/aliases/{alias}` — body `{"target": "name"}`.
 //! * `POST /v1/admin/default` — body `{"model": "name"}`.
+//! * `POST /v1/models/{name}/train` — start a background training job
+//!   toward model `name` ([`crate::trainer`]); body keys (all optional)
+//!   override the `[trainer]` defaults: `steps`, `batch`, `lr`,
+//!   `momentum`, `lr_decay`, `lr_decay_every`, `width`, `depth`, `rows`,
+//!   `noise`, `seed`, `checkpoint_every`, `target_ratio`, `init_mean`,
+//!   `init_sigma`, `nonlinear`, `promote` (`"auto"` | `"manual"`).
+//! * `GET /v1/jobs` — list training jobs (state, step, loss, lr,
+//!   promotions, last checkpoint).
+//! * `POST /v1/jobs/{id}/{pause|resume|cancel|promote}` — job controls;
+//!   `promote` checkpoints and hot-swaps the job's parameters into the
+//!   registry under live traffic.
 //! * `GET /healthz` — liveness + drain state + in-flight gauge.
 //! * `GET /metrics` — Prometheus text from [`crate::metrics::Registry`]
 //!   (gateway + admission + per-model `acdc_model_*` series).
@@ -44,11 +55,12 @@ use std::time::{Duration, Instant};
 
 use super::admission::{Admission, AdmitError};
 use super::http::{self, HttpError, ReadOutcome, Request, Response};
-use crate::config::GatewayConfig;
+use crate::config::{GatewayConfig, TrainerConfig};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
 use crate::serve::Server;
+use crate::trainer::{JobSpec, JobStatus, TrainerError, TrainerPool};
 use crate::util::json::{obj, Json};
 
 /// Poll interval for parked keep-alive connections (also bounds how fast
@@ -129,6 +141,7 @@ impl ConnTracker {
 
 struct Shared {
     registry: Arc<ModelRegistry>,
+    trainer: Arc<TrainerPool>,
     cfg: GatewayConfig,
     admission: Arc<Admission>,
     metrics: Arc<Registry>,
@@ -160,9 +173,27 @@ impl Gateway {
     }
 
     /// Bind `cfg.addr` (port 0 for ephemeral) and serve every model in
-    /// `registry`.
+    /// `registry`. Training jobs submitted over HTTP get a fresh
+    /// [`TrainerPool`] with default `[trainer]` knobs; use
+    /// [`Gateway::start_registry_with_trainer`] to configure them.
     pub fn start_registry(
         registry: Arc<ModelRegistry>,
+        cfg: GatewayConfig,
+    ) -> Result<Gateway, String> {
+        let trainer = Arc::new(TrainerPool::new(
+            Arc::clone(&registry),
+            Arc::clone(registry.metrics()),
+            TrainerConfig::default(),
+        ));
+        Gateway::start_registry_with_trainer(registry, trainer, cfg)
+    }
+
+    /// [`Gateway::start_registry`] with a caller-configured training-job
+    /// pool (the `[trainer]` config section). The pool is drained —
+    /// live jobs cancelled and joined — on gateway shutdown.
+    pub fn start_registry_with_trainer(
+        registry: Arc<ModelRegistry>,
+        trainer: Arc<TrainerPool>,
         cfg: GatewayConfig,
     ) -> Result<Gateway, String> {
         cfg.validate()?;
@@ -178,6 +209,7 @@ impl Gateway {
         let admission = Arc::new(Admission::new(&cfg, &metrics));
         let shared = Arc::new(Shared {
             registry,
+            trainer,
             cfg,
             admission,
             conns: ConnTracker::new(metrics.gauge("gateway.open_connections")),
@@ -213,6 +245,11 @@ impl Gateway {
         &self.shared.registry
     }
 
+    /// The training-job pool behind the `/v1/jobs` admin surface.
+    pub fn trainer(&self) -> &Arc<TrainerPool> {
+        &self.shared.trainer
+    }
+
     /// The shared metrics registry (gateway + registry + coordinators).
     pub fn metrics(&self) -> &Arc<Registry> {
         &self.shared.metrics
@@ -243,6 +280,9 @@ impl Drop for Gateway {
         // exits, or at the deadline.
         let deadline = Instant::now() + Duration::from_millis(self.shared.cfg.drain_timeout_ms);
         self.shared.conns.wait_idle(deadline);
+        // Training jobs are part of the drain contract: cancel and join
+        // them so no background thread outlives the gateway.
+        self.shared.trainer.shutdown();
         // Model coordinators drain when the registry's last Arc drops
         // (ours, or a straggler connection past the deadline) — in-flight
         // work is answered either way.
@@ -354,7 +394,9 @@ fn route(shared: &Arc<Shared>, req: &Request) -> Response {
         ("GET", "/metrics") => return Response::text(200, &shared.metrics.prometheus()),
         ("GET", "/v1/models") => return list_models(shared),
         ("POST", "/v1/infer") => return infer(shared, req, None),
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer") => {
+        ("GET", "/v1/jobs") => return list_jobs(shared),
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer")
+        | (_, "/v1/jobs") => {
             return Response::json(405, &err_json("method not allowed"));
         }
         _ => {}
@@ -371,6 +413,33 @@ fn route(shared: &Arc<Shared>, req: &Request) -> Response {
             return Response::json(405, &err_json("method not allowed"));
         }
         return infer(shared, req, Some(name));
+    }
+    // /v1/models/{name}/train — submit a background training job
+    if let Some(name) = path
+        .strip_prefix("/v1/models/")
+        .and_then(|rest| rest.strip_suffix("/train"))
+    {
+        if name.is_empty() || name.contains('/') {
+            return Response::json(404, &err_json("not found"));
+        }
+        if req.method != "POST" {
+            return Response::json(405, &err_json("method not allowed"));
+        }
+        return train_submit(shared, req, name);
+    }
+    // /v1/jobs/{id}/{pause|resume|cancel|promote}
+    if let Some(rest) = path.strip_prefix("/v1/jobs/") {
+        if let Some((id_str, action)) = rest.split_once('/') {
+            if let Ok(id) = id_str.parse::<u64>() {
+                if matches!(action, "pause" | "resume" | "cancel" | "promote") {
+                    if req.method != "POST" {
+                        return Response::json(405, &err_json("method not allowed"));
+                    }
+                    return job_action(shared, id, action);
+                }
+            }
+        }
+        return Response::json(404, &err_json("not found"));
     }
     // /v1/admin/models/{name}/load | /v1/admin/models/{name}/unload
     if let Some(rest) = path.strip_prefix("/v1/admin/models/") {
@@ -555,6 +624,168 @@ fn admin_default(shared: &Arc<Shared>, req: &Request) -> Response {
             ]),
         ),
         Err(e) => registry_error(&e),
+    }
+}
+
+fn trainer_error(e: &TrainerError) -> Response {
+    Response::json(e.status(), &err_json(&e.to_string()))
+}
+
+/// One `GET /v1/jobs` row.
+fn job_json(s: &JobStatus) -> Json {
+    let mut pairs = vec![
+        ("id", Json::Num(s.id as f64)),
+        ("model", Json::Str(s.model.clone())),
+        ("state", Json::Str(s.state.as_str().to_string())),
+        ("step", Json::Num(s.step as f64)),
+        ("steps", Json::Num(s.steps as f64)),
+        (
+            "loss",
+            if s.loss.is_finite() {
+                Json::Num(s.loss)
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "first_loss",
+            if s.first_loss.is_finite() {
+                Json::Num(s.first_loss)
+            } else {
+                Json::Null
+            },
+        ),
+        ("lr", Json::Num(s.lr)),
+        ("promotions", Json::Num(s.promotions as f64)),
+        (
+            "promoted_version",
+            s.promoted_version.map_or(Json::Null, |v| Json::Num(v as f64)),
+        ),
+        ("last_checkpoint", s.last_checkpoint.clone().map_or(Json::Null, Json::Str)),
+    ];
+    if let Some(err) = &s.error {
+        pairs.push(("error", Json::Str(err.clone())));
+    }
+    obj(pairs)
+}
+
+fn list_jobs(shared: &Arc<Shared>) -> Response {
+    let jobs: Vec<Json> = shared.trainer.list().iter().map(job_json).collect();
+    Response::json(200, &obj(vec![("jobs", Json::Arr(jobs))]))
+}
+
+/// Build a [`JobSpec`] from the request body: `[trainer]` defaults with
+/// any body key overriding. A present-but-mistyped key is a 400.
+fn job_spec_from_body(defaults: &JobSpec, body: &Json) -> Result<JobSpec, String> {
+    let mut spec = defaults.clone();
+    let usize_field = |key: &str, slot: &mut usize| -> Result<(), String> {
+        match body.get(key) {
+            None => Ok(()),
+            Some(v) => match v.as_usize() {
+                Some(n) => {
+                    *slot = n;
+                    Ok(())
+                }
+                None => Err(format!("'{key}' must be a non-negative integer")),
+            },
+        }
+    };
+    let f64_field = |key: &str, slot: &mut f64| -> Result<(), String> {
+        match body.get(key) {
+            None => Ok(()),
+            Some(v) => match v.as_f64() {
+                Some(f) => {
+                    *slot = f;
+                    Ok(())
+                }
+                None => Err(format!("'{key}' must be a number")),
+            },
+        }
+    };
+    usize_field("width", &mut spec.width)?;
+    usize_field("depth", &mut spec.depth)?;
+    usize_field("steps", &mut spec.steps)?;
+    usize_field("batch", &mut spec.batch)?;
+    usize_field("rows", &mut spec.dataset_rows)?;
+    usize_field("checkpoint_every", &mut spec.checkpoint_every)?;
+    usize_field("lr_decay_every", &mut spec.lr_decay_every)?;
+    f64_field("lr", &mut spec.lr)?;
+    f64_field("momentum", &mut spec.momentum)?;
+    f64_field("lr_decay", &mut spec.lr_decay)?;
+    f64_field("noise", &mut spec.dataset_noise)?;
+    f64_field("target_ratio", &mut spec.target_ratio)?;
+    f64_field("init_mean", &mut spec.init.mean)?;
+    f64_field("init_sigma", &mut spec.init.sigma)?;
+    let mut seed = spec.seed as usize;
+    usize_field("seed", &mut seed)?;
+    spec.seed = seed as u64;
+    match body.get("nonlinear") {
+        None => {}
+        Some(v) => match v.as_bool() {
+            Some(b) => spec.nonlinear = b,
+            None => return Err("'nonlinear' must be a boolean".into()),
+        },
+    }
+    match body.get("promote") {
+        None => {}
+        Some(v) => match v.as_str() {
+            Some("auto") => spec.promote_on_complete = true,
+            Some("manual") => spec.promote_on_complete = false,
+            _ => return Err("'promote' must be \"auto\" or \"manual\"".into()),
+        },
+    }
+    Ok(spec)
+}
+
+fn train_submit(shared: &Arc<Shared>, req: &Request, name: &str) -> Response {
+    let body = match admin_body(req) {
+        Ok(v) => v,
+        Err(resp) => return resp,
+    };
+    let defaults = JobSpec::from_config(shared.trainer.defaults());
+    let spec = match job_spec_from_body(&defaults, &body) {
+        Ok(s) => s,
+        Err(msg) => return Response::json(400, &err_json(&msg)),
+    };
+    let steps = spec.steps;
+    match shared.trainer.submit(name, spec) {
+        Ok(id) => Response::json(
+            200,
+            &obj(vec![
+                ("job", Json::Num(id as f64)),
+                ("model", Json::Str(name.to_string())),
+                ("steps", Json::Num(steps as f64)),
+                ("status", Json::Str("running".to_string())),
+            ]),
+        ),
+        Err(e) => trainer_error(&e),
+    }
+}
+
+fn job_action(shared: &Arc<Shared>, id: u64, action: &str) -> Response {
+    let result = match action {
+        "pause" => shared.trainer.pause(id),
+        "resume" => shared.trainer.resume(id),
+        "cancel" => shared.trainer.cancel(id),
+        _ => shared.trainer.promote(id),
+    };
+    match result {
+        Ok(()) => {
+            let status = shared
+                .trainer
+                .status(id)
+                .map(|s| job_json(&s))
+                .unwrap_or(Json::Null);
+            Response::json(
+                200,
+                &obj(vec![
+                    ("job", Json::Num(id as f64)),
+                    ("action", Json::Str(action.to_string())),
+                    ("status", status),
+                ]),
+            )
+        }
+        Err(e) => trainer_error(&e),
     }
 }
 

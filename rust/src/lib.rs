@@ -27,6 +27,12 @@
 //!                 panels fanned across the shared thread pool)
 //! ```
 //!
+//! Off the request path, background training jobs ([`trainer`]) run SGD
+//! on the same batched engine and feed the registry: checkpoint every K
+//! steps, promote by the same Arc-epoch hot swap — the train → checkpoint
+//! → load → swap loop is closed in-process (see `OPERATIONS.md` for the
+//! end-to-end tutorial).
+//!
 //! Python never runs on the request path: `make artifacts` lowers once,
 //! and this crate loads/executes the artifacts via the PJRT C API. The
 //! default build has no PJRT dependency at all — `--features pjrt` swaps
@@ -48,5 +54,5 @@ pub mod runtime;
 pub mod sell;
 pub mod serve;
 pub mod tensor;
-pub mod train;
+pub mod trainer;
 pub mod util;

@@ -15,25 +15,26 @@
 //! acdc loadgen [--addr host:port]   closed/open-loop load generator (E8)
 //! ```
 
-use acdc::config::{Config, ServeConfig, TrainConfig};
+use acdc::config::{Config, ServeConfig, TrainConfig, TrainerConfig};
 use acdc::data::regression::RegressionTask;
 use acdc::data::synthimg::ImageCorpus;
-use acdc::experiments::{fig2, fig3, table1};
+use acdc::experiments::{fig2, fig3, table1, trainer_bench};
 use acdc::gateway::http;
 use acdc::gateway::loadgen::{ArrivalMode, LoadgenConfig};
 use acdc::gateway::Gateway;
+use acdc::metrics::Registry;
 use acdc::registry::{ModelRegistry, SellModel};
 use acdc::runtime::Engine;
 use acdc::serve::{ServeParams, Server};
-use acdc::train::{CnnTrainer, CnnVariant, StepDecay};
+use acdc::trainer::{CnnTrainer, CnnVariant, JobSpec, StepDecay, TrainerPool};
 use acdc::util::bench::Bench;
-use acdc::util::cli::{flag, opt, Args};
+use acdc::util::cli::{flag, opt, Args, OptSpec};
 use acdc::util::json::{obj, Json};
 use std::io::BufReader;
 use std::net::TcpStream;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     let argv: Vec<String> = std::env::args().collect();
@@ -59,7 +60,10 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "fig2" => cmd_fig2(rest),
         "fig3" => cmd_fig3(rest),
         "table1" => cmd_table1(rest),
+        "train" => cmd_train(rest),
         "train-cnn" => cmd_train_cnn(rest),
+        "jobs" => cmd_jobs(rest),
+        "bench-trainer" => cmd_bench_trainer(rest),
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
         "loadgen" => cmd_loadgen(rest),
@@ -79,10 +83,17 @@ subcommands:
   params      Table-1 analytic parameter audit
   bench       batched SoA engine vs per-row ACDC comparison (E9,
               writes BENCH_acdc_batch.json)
+  bench-trainer  full-SGD-step throughput sweep (E11, writes
+              BENCH_trainer_step.json)
   fig2        Figure-2 runtime sweep (dense vs fused vs batched vs multipass ACDC)
   fig3        Figure-3 operator-approximation grid
   table1      Table-1 measured MiniCaffeNet leg
+  train       background training job: submit to a running gateway's
+              trainer pool (POST /v1/models/{name}/train) and watch it,
+              or --standalone to train + promote in-process
   train-cnn   end-to-end CNN training (E6)
+  jobs        trainer-pool admin client: list | pause | resume | cancel |
+              promote against a running gateway
   serve       serving demo over the dynamic-batching coordinator
   gateway     multi-model HTTP serving gateway (POST /v1/models/{name}/infer,
               GET /v1/models, /healthz, /metrics, hot-swap admin endpoints)
@@ -244,6 +255,273 @@ fn cmd_table1(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Knob options shared by `acdc train`'s HTTP and standalone modes.
+/// Defaults mirror `TrainerConfig::default()` (the `[trainer]` section).
+fn train_opts() -> Vec<OptSpec> {
+    vec![
+        opt("addr", "gateway address (HTTP mode)", Some("127.0.0.1:7878")),
+        opt("model", "registry model the job trains toward", Some("trained")),
+        opt("steps", "SGD step budget", Some("2000")),
+        opt("batch", "minibatch rows", Some("64")),
+        opt("lr", "base learning rate", Some("0.0002")),
+        opt("momentum", "momentum coefficient", Some("0.9")),
+        opt("lr-decay", "lr multiplier per decay (1.0 = constant)", Some("1.0")),
+        opt("lr-decay-every", "steps between decays (0 = never)", Some("0")),
+        opt("width", "cascade width N (power of two)", Some("32")),
+        opt("depth", "cascade depth K", Some("2")),
+        opt("init-mean", "diagonal init mean (paper: 1.0)", Some("1.0")),
+        opt("init-sigma", "diagonal init noise sigma", Some("0.1")),
+        opt("rows", "regression dataset rows", Some("4096")),
+        opt("noise", "dataset target-noise variance", Some("0.0001")),
+        opt("seed", "rng seed (dataset + init)", Some("0")),
+        opt("checkpoint-every", "checkpoint cadence in steps (0 = off)", Some("500")),
+        opt("checkpoint-dir", "checkpoint directory (standalone mode)", Some("ckpts")),
+        opt("target-ratio", "converged when loss <= first x this", Some("0.1")),
+        flag("nonlinear", "train a ReLU+permutation cascade (§6.2 style)"),
+        flag("no-promote", "do not auto-promote into the registry on completion"),
+        flag("standalone", "train in-process instead of driving a gateway"),
+        flag("no-watch", "submit and exit without polling progress"),
+        opt("config", "TOML config ([serve] template, standalone mode)", None),
+    ]
+}
+
+fn trainer_config_from_args(args: &Args) -> Result<TrainerConfig, String> {
+    let tc = TrainerConfig {
+        steps: args.get_usize("steps")?.unwrap(),
+        batch: args.get_usize("batch")?.unwrap(),
+        lr: args.get_f64("lr")?.unwrap(),
+        momentum: args.get_f64("momentum")?.unwrap(),
+        lr_decay: args.get_f64("lr-decay")?.unwrap(),
+        lr_decay_every: args.get_usize("lr-decay-every")?.unwrap(),
+        width: args.get_usize("width")?.unwrap(),
+        depth: args.get_usize("depth")?.unwrap(),
+        init_mean: args.get_f64("init-mean")?.unwrap(),
+        init_sigma: args.get_f64("init-sigma")?.unwrap(),
+        nonlinear: args.flag("nonlinear"),
+        dataset_rows: args.get_usize("rows")?.unwrap(),
+        dataset_noise: args.get_f64("noise")?.unwrap(),
+        seed: args.get_usize("seed")?.unwrap() as u64,
+        checkpoint_every: args.get_usize("checkpoint-every")?.unwrap(),
+        checkpoint_dir: args.get("checkpoint-dir").unwrap().to_string(),
+        target_ratio: args.get_f64("target-ratio")?.unwrap(),
+        promote_on_complete: !args.flag("no-promote"),
+        max_jobs: TrainerConfig::default().max_jobs,
+    };
+    tc.validate()?;
+    Ok(tc)
+}
+
+/// Render one job-status line (shared by the watch loops and `acdc jobs`).
+fn job_line(j: &Json) -> String {
+    let id = j.get("id").and_then(|x| x.as_i64()).unwrap_or(0);
+    let model = j.get("model").and_then(|x| x.as_str()).unwrap_or("?");
+    let state = j.get("state").and_then(|x| x.as_str()).unwrap_or("?");
+    let step = j.get("step").and_then(|x| x.as_i64()).unwrap_or(0);
+    let steps = j.get("steps").and_then(|x| x.as_i64()).unwrap_or(0);
+    let loss = j.get("loss").and_then(|x| x.as_f64());
+    let lr = j.get("lr").and_then(|x| x.as_f64()).unwrap_or(0.0);
+    let promotions = j.get("promotions").and_then(|x| x.as_i64()).unwrap_or(0);
+    let version = j.get("promoted_version").and_then(|x| x.as_i64());
+    format!(
+        "job {id}  {model:<16} {state:<10} step {step:>7}/{steps}  loss {}  lr {lr:.2e}  promotions {promotions}{}",
+        loss.map_or("-".to_string(), |l| format!("{l:.4e}")),
+        version.map_or(String::new(), |v| format!(" (v{v} live)")),
+    )
+}
+
+fn promote_mode(tc: &TrainerConfig) -> &'static str {
+    if tc.promote_on_complete {
+        "auto"
+    } else {
+        "manual"
+    }
+}
+
+fn cmd_train(rest: &[String]) -> Result<(), String> {
+    let args = Args::parse_from(rest, train_opts())?;
+    let tc = trainer_config_from_args(&args)?;
+    let model = args.get("model").unwrap().to_string();
+    if args.flag("standalone") {
+        return train_standalone(&args, &tc, &model);
+    }
+    let addr = args.get("addr").unwrap().to_string();
+    let body = obj(vec![
+        ("steps", Json::Num(tc.steps as f64)),
+        ("batch", Json::Num(tc.batch as f64)),
+        ("lr", Json::Num(tc.lr)),
+        ("momentum", Json::Num(tc.momentum)),
+        ("lr_decay", Json::Num(tc.lr_decay)),
+        ("lr_decay_every", Json::Num(tc.lr_decay_every as f64)),
+        ("width", Json::Num(tc.width as f64)),
+        ("depth", Json::Num(tc.depth as f64)),
+        ("init_mean", Json::Num(tc.init_mean)),
+        ("init_sigma", Json::Num(tc.init_sigma)),
+        ("nonlinear", Json::Bool(tc.nonlinear)),
+        ("rows", Json::Num(tc.dataset_rows as f64)),
+        ("noise", Json::Num(tc.dataset_noise)),
+        ("seed", Json::Num(tc.seed as f64)),
+        ("checkpoint_every", Json::Num(tc.checkpoint_every as f64)),
+        ("target_ratio", Json::Num(tc.target_ratio)),
+        ("promote", Json::Str(promote_mode(tc).to_string())),
+    ]);
+    let v = admin_call(&addr, "POST", &format!("/v1/models/{model}/train"), Some(body))?;
+    let id = v
+        .get("job")
+        .and_then(|x| x.as_i64())
+        .ok_or("gateway answered without a job id")?;
+    println!("job {id} training model '{model}' ({} steps)", tc.steps);
+    if args.flag("no-watch") {
+        println!("watch with: acdc jobs list --addr {addr}");
+        return Ok(());
+    }
+    loop {
+        std::thread::sleep(Duration::from_millis(500));
+        let v = admin_call(&addr, "GET", "/v1/jobs", None)?;
+        let jobs = v
+            .get("jobs")
+            .and_then(|j| j.as_arr())
+            .ok_or("malformed jobs listing")?;
+        let Some(job) = jobs
+            .iter()
+            .find(|j| j.get("id").and_then(|x| x.as_i64()) == Some(id))
+        else {
+            return Err(format!("job {id} disappeared from the listing"));
+        };
+        println!("{}", job_line(job));
+        let state = job.get("state").and_then(|x| x.as_str()).unwrap_or("?");
+        if matches!(state, "completed" | "cancelled" | "failed") {
+            if state == "failed" {
+                let err = job.get("error").and_then(|x| x.as_str()).unwrap_or("?");
+                return Err(format!("job {id} failed: {err}"));
+            }
+            return Ok(());
+        }
+    }
+}
+
+fn train_standalone(args: &Args, tc: &TrainerConfig, model: &str) -> Result<(), String> {
+    let template = match args.get("config") {
+        Some(path) => ServeConfig::from_config(&Config::from_file(Path::new(path))?)?,
+        None => ServeConfig::default(),
+    };
+    let metrics = Arc::new(Registry::new());
+    let registry = Arc::new(ModelRegistry::new(template, Arc::clone(&metrics)));
+    let pool = TrainerPool::new(Arc::clone(&registry), metrics, tc.clone());
+    let spec = JobSpec::from_config(tc);
+    println!(
+        "standalone: training '{model}' — N={} K={} batch={} lr={} ({} steps max)",
+        tc.width, tc.depth, tc.batch, tc.lr, tc.steps
+    );
+    let id = pool.submit(model, spec).map_err(|e| e.to_string())?;
+    let t0 = Instant::now();
+    let status = loop {
+        match pool.join(id, Duration::from_millis(500)) {
+            Some(status) => break status,
+            None => {
+                let s = pool.status(id).map_err(|e| e.to_string())?;
+                println!(
+                    "step {:>7}/{}  loss {:.4e}  lr {:.2e}",
+                    s.step, s.steps, s.loss, s.lr
+                );
+            }
+        }
+    };
+    println!(
+        "job {id} {} after {:.1}s: loss {:.4e} (first {:.4e}, {:.1}x drop)",
+        status.state.as_str(),
+        t0.elapsed().as_secs_f64(),
+        status.loss,
+        status.first_loss,
+        status.first_loss / status.loss.max(f64::MIN_POSITIVE),
+    );
+    if let Some(path) = &status.last_checkpoint {
+        println!("checkpoint: {path}");
+    }
+    if let Some(v) = status.promoted_version {
+        let handle = registry.resolve(model).map_err(|e| e.to_string())?;
+        println!("promoted: registry serves '{model}' v{} (width {})", v, handle.width());
+    }
+    if let Some(err) = &status.error {
+        return Err(format!("job failed: {err}"));
+    }
+    pool.shutdown();
+    Ok(())
+}
+
+fn cmd_jobs(rest: &[String]) -> Result<(), String> {
+    const USAGE: &str = "usage: acdc jobs <list | pause | resume | cancel | promote> [options]
+  list                 show every training job on the gateway
+  pause   --id N       freeze job N at its next step boundary
+  resume  --id N       resume a paused job
+  cancel  --id N       cancel a running or paused job
+  promote --id N       checkpoint + hot-swap job N's parameters now";
+    let opts = vec![
+        opt("addr", "gateway address", Some("127.0.0.1:7878")),
+        opt("id", "job id (from `acdc jobs list`)", None),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let addr = args.get("addr").unwrap().to_string();
+    let action = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| USAGE.to_string())?;
+    match action {
+        "list" => {
+            let v = admin_call(&addr, "GET", "/v1/jobs", None)?;
+            let jobs = v
+                .get("jobs")
+                .and_then(|j| j.as_arr())
+                .ok_or("malformed jobs listing")?;
+            println!("{} job(s):", jobs.len());
+            for j in jobs {
+                println!("  {}", job_line(j));
+            }
+            Ok(())
+        }
+        "pause" | "resume" | "cancel" | "promote" => {
+            let id = args
+                .get_usize("id")?
+                .ok_or_else(|| format!("--id is required for '{action}'\n{USAGE}"))?;
+            let v = admin_call(&addr, "POST", &format!("/v1/jobs/{id}/{action}"), None)?;
+            match v.get("status") {
+                Some(status) if status.get("id").is_some() => {
+                    println!("{action}: {}", job_line(status))
+                }
+                _ => println!("{action}: ok"),
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown jobs action '{other}'\n{USAGE}")),
+    }
+}
+
+fn cmd_bench_trainer(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt("sizes", "layer widths to sweep", Some("64,256,1024")),
+        opt("batch", "minibatch rows per step", Some("64")),
+        opt("depth", "cascade depth", Some("2")),
+        opt("out", "JSON report path", Some("BENCH_trainer_step.json")),
+        flag("fast", "shrink measurement windows for smoke runs"),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let sizes = args.get_usize_list("sizes")?.unwrap();
+    let batch = args.get_usize("batch")?.unwrap();
+    let depth = args.get_usize("depth")?.unwrap();
+    let bench = if args.flag("fast") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let cases: Vec<(usize, usize, usize)> = sizes.iter().map(|&n| (n, batch, depth)).collect();
+    let rows = trainer_bench::run(&cases, &bench);
+    print!("{}", trainer_bench::render(&rows));
+    let out = args.get("out").unwrap();
+    trainer_bench::write_json(Path::new(out), &rows, "acdc bench-trainer (local cargo run)")?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn cmd_train_cnn(rest: &[String]) -> Result<(), String> {
     let mut opts = common_opts();
     opts.push(opt("config", "TOML config file", None));
@@ -398,12 +676,22 @@ fn cmd_gateway(rest: &[String]) -> Result<(), String> {
     if registry.is_empty() {
         return Err("no models: pass a [registry] preload list or drop --no-demo".into());
     }
-    let gateway = Gateway::start_registry(registry, sc.gateway.clone())?;
+    // The training-job pool shares the registry + metrics, so promoted
+    // checkpoints hot-swap live models and trainer.* series land on
+    // GET /metrics.
+    let trainer = Arc::new(TrainerPool::new(
+        Arc::clone(&registry),
+        Arc::clone(&metrics),
+        sc.trainer.clone(),
+    ));
+    let gateway = Gateway::start_registry_with_trainer(registry, trainer, sc.gateway.clone())?;
     println!("gateway listening on http://{}", gateway.local_addr());
     println!("  POST /v1/models/{{name}}/infer  {{\"features\": [...]}} or {{\"rows\": [[...], ...]}}");
     println!("  POST /v1/infer                 same, against the default model");
     println!("  GET  /v1/models                registry listing");
     println!("  POST /v1/admin/models/{{name}}/load|unload   hot-swap admin");
+    println!("  POST /v1/models/{{name}}/train  background training job ([trainer] knobs)");
+    println!("  GET  /v1/jobs                  job listing; POST /v1/jobs/{{id}}/pause|resume|cancel|promote");
     println!("  GET  /healthz /metrics         liveness, Prometheus text");
     let duration_s = args.get_usize("duration-s")?.unwrap();
     if duration_s == 0 {

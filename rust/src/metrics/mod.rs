@@ -74,6 +74,33 @@ impl Gauge {
     }
 }
 
+/// Last-value gauge holding a float (bits in an `AtomicU64`) — loss,
+/// learning-rate and other non-integer series the trainer exports.
+#[derive(Debug)]
+pub struct FloatGauge {
+    bits: AtomicU64,
+}
+
+impl Default for FloatGauge {
+    fn default() -> Self {
+        FloatGauge {
+            bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl FloatGauge {
+    /// Overwrite the gauge value.
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
 /// Log₂-bucketed histogram for nanosecond latencies.
 ///
 /// 64 buckets: bucket i counts samples with floor(log2(ns)) == i. Bounded
@@ -165,6 +192,7 @@ impl Histogram {
 pub struct Registry {
     counters: Mutex<BTreeMap<String, Arc<Counter>>>,
     gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    float_gauges: Mutex<BTreeMap<String, Arc<FloatGauge>>>,
     histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
 }
 
@@ -189,6 +217,17 @@ impl Registry {
     pub fn gauge(&self, name: &str) -> Arc<Gauge> {
         Arc::clone(
             self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// Named float gauge (created on first use, shared thereafter).
+    pub fn float_gauge(&self, name: &str) -> Arc<FloatGauge> {
+        Arc::clone(
+            self.float_gauges
                 .lock()
                 .unwrap()
                 .entry(name.to_string())
@@ -237,6 +276,10 @@ impl Registry {
             let n = sanitize(name);
             out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
         }
+        for (name, g) in self.float_gauges.lock().unwrap().iter() {
+            let n = sanitize(name);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", g.get()));
+        }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             let n = sanitize(name);
             out.push_str(&format!("# TYPE {n} summary\n"));
@@ -259,6 +302,9 @@ impl Registry {
             out.push_str(&format!("counter {name} {}\n", c.get()));
         }
         for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("gauge {name} {}\n", g.get()));
+        }
+        for (name, g) in self.float_gauges.lock().unwrap().iter() {
             out.push_str(&format!("gauge {name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
@@ -293,6 +339,28 @@ mod tests {
         g.set(10);
         g.set(3);
         assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn float_gauge_holds_floats() {
+        let g = FloatGauge::default();
+        assert_eq!(g.get(), 0.0);
+        g.set(1.25e-3);
+        assert_eq!(g.get(), 1.25e-3);
+        g.set(-7.5);
+        assert_eq!(g.get(), -7.5);
+    }
+
+    #[test]
+    fn float_gauge_in_registry_and_expositions() {
+        let r = Registry::new();
+        r.float_gauge("trainer.m.loss").set(0.125);
+        r.float_gauge("trainer.m.loss").set(0.5);
+        assert_eq!(r.float_gauge("trainer.m.loss").get(), 0.5);
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE acdc_trainer_m_loss gauge"), "{text}");
+        assert!(text.contains("acdc_trainer_m_loss 0.5"), "{text}");
+        assert!(r.report().contains("gauge trainer.m.loss 0.5"));
     }
 
     #[test]

@@ -457,6 +457,12 @@ impl ModelRegistry {
         self.resolve(&name)
     }
 
+    /// Whether `name` is currently an alias (loads — and training jobs —
+    /// must target the model name, never an alias).
+    pub fn is_alias(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().aliases.contains_key(name)
+    }
+
     /// Number of loaded models (cheaper than [`ModelRegistry::list`] for
     /// health probes).
     pub fn len(&self) -> usize {
@@ -518,8 +524,9 @@ fn resolve_name(inner: &Inner, name: &str) -> Result<String, RegistryError> {
 }
 
 /// Model/alias names appear in URL paths and metric names; keep them to
-/// a conservative charset.
-fn validate_name(name: &str) -> Result<(), RegistryError> {
+/// a conservative charset. Shared with the trainer, whose job names are
+/// the model names they promote into.
+pub(crate) fn validate_name(name: &str) -> Result<(), RegistryError> {
     if name.is_empty() || name.len() > 64 {
         return Err(RegistryError::Invalid(
             "model name must be 1..=64 characters".to_string(),

@@ -514,11 +514,26 @@ impl AcdcCascade {
 
     /// Forward keeping per-layer inputs for the backward pass.
     pub fn forward_train(&self, x: &Tensor) -> (Tensor, CascadeCache) {
+        self.forward_train_inner(x, None)
+    }
+
+    /// [`AcdcCascade::forward_train`] with each layer's batch sweep fanned
+    /// across `pool` — the trainer's hot path. Panel ranges are disjoint,
+    /// so the pooled sweep is **bit-identical** to the serial engine path
+    /// (pinned by `tests/property_backward.rs`).
+    pub fn forward_train_pooled(&self, x: &Tensor, pool: &ThreadPool) -> (Tensor, CascadeCache) {
+        self.forward_train_inner(x, Some(pool))
+    }
+
+    fn forward_train_inner(&self, x: &Tensor, pool: Option<&ThreadPool>) -> (Tensor, CascadeCache) {
         let mut inputs = Vec::with_capacity(self.k());
         let mut h = x.clone();
         for (li, layer) in self.layers.iter().enumerate() {
             inputs.push(h.clone());
-            let mut y = layer.forward_batch(&h);
+            let mut y = match pool {
+                Some(p) => layer.forward_batch_pooled(&h, p),
+                None => layer.forward_batch(&h),
+            };
             if let Some(perms) = &self.perms {
                 y = apply_perm(&y, &perms[li]);
             }
@@ -842,6 +857,28 @@ mod tests {
         let (y, cache) = cascade.forward_train(&x);
         assert!(y.max_abs_diff(&cascade.forward(&x)) < 1e-4);
         assert_eq!(cache.inputs.len(), 3);
+    }
+
+    #[test]
+    fn forward_train_pooled_is_bit_identical_to_serial() {
+        let mut rng = Pcg32::seeded(23);
+        let n = 32;
+        let cascade = AcdcCascade::nonlinear(n, 3, DiagInit::CAFFENET, &mut rng);
+        let pool = crate::util::threadpool::ThreadPool::new(3);
+        for rows in [4usize, 9, 16, 33] {
+            let x = rand_tensor(&mut rng, &[rows, n]);
+            let (y_serial, cache_serial) = cascade.forward_train(&x);
+            let (y_pooled, cache_pooled) = cascade.forward_train_pooled(&x, &pool);
+            assert_eq!(y_serial.data().len(), y_pooled.data().len());
+            for (a, b) in y_serial.data().iter().zip(y_pooled.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rows={rows}");
+            }
+            for (ia, ib) in cache_serial.inputs.iter().zip(&cache_pooled.inputs) {
+                for (a, b) in ia.data().iter().zip(ib.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "cache rows={rows}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1193 @@
+//! Background training jobs that feed the live model registry.
+//!
+//! This module closes the train → checkpoint → load → hot-swap loop
+//! (DESIGN.md §6): a [`TrainerPool`] owns named background jobs, each
+//! running minibatch SGD on an ACDC cascade over the synthetic eq.-(15)
+//! regression task, on the batched SoA engine
+//! ([`crate::sell::acdc::AcdcCascade::forward_train_pooled`]). Every
+//! `checkpoint_every` steps a job serializes its cascade through the
+//! bit-exact [`SellModel`] manifest codec; on convergence (or on demand
+//! via [`TrainerPool::promote`]) it loads that manifest into the
+//! [`ModelRegistry`], which promotes the new version under live traffic
+//! by Arc epoch handoff — in-flight requests finish on the old version,
+//! new admissions see the new one, zero requests fail.
+//!
+//! The paper's central training findings are the pool's defaults: the
+//! diagonals initialize to A = D = 1 plus small Gaussian noise (the init
+//! that makes deep cascades trainable — Figure 3 / [`DiagInit`]), and
+//! depth/learning-rate are first-class per-job knobs.
+//!
+//! **Batches never mix jobs**: each job owns its dataset, cursor and
+//! cascade, and only talks to the rest of the system through checkpoint
+//! files and registry loads. Serving-side, the per-(model, version)
+//! coordinator invariant of DESIGN.md §5.1 keeps inference batches
+//! equally isolated.
+//!
+//! Job lifecycle (see [`JobState`]):
+//!
+//! ```text
+//!   submit ─▶ Running ⇄ Paused          (pause / resume)
+//!                │  │ └────▶ Cancelled  (cancel, from either state)
+//!                │  └──────▶ Failed     (diverged loss, I/O error, panic)
+//!                └─────────▶ Completed  (converged or step budget spent)
+//!   promote: Running/Paused → checkpoint + registry.load at the next
+//!            step boundary; Completed → load the final checkpoint now
+//! ```
+//!
+//! The experiment orchestrators ([`orchestrator`]) and SGD machinery
+//! ([`sgd`]) live here too — they were `crate::train` before the trainer
+//! subsystem absorbed them.
+//!
+//! ```
+//! use acdc::config::{ServeConfig, TrainerConfig};
+//! use acdc::metrics::Registry;
+//! use acdc::registry::ModelRegistry;
+//! use acdc::trainer::{JobSpec, JobState, TrainerPool};
+//! use std::sync::Arc;
+//! use std::time::Duration;
+//!
+//! let metrics = Arc::new(Registry::new());
+//! let registry = Arc::new(ModelRegistry::new(ServeConfig::default(), Arc::clone(&metrics)));
+//! let defaults = TrainerConfig {
+//!     checkpoint_dir: std::env::temp_dir()
+//!         .join(format!("acdc_doc_{}", std::process::id()))
+//!         .display()
+//!         .to_string(),
+//!     ..Default::default()
+//! };
+//! let pool = TrainerPool::new(Arc::clone(&registry), metrics, defaults.clone());
+//! let spec = JobSpec {
+//!     width: 8,
+//!     depth: 1,
+//!     steps: 40,
+//!     batch: 16,
+//!     dataset_rows: 64,
+//!     lr: 5e-3,
+//!     momentum: 0.0,
+//!     promote_on_complete: true,
+//!     ..JobSpec::from_config(&defaults)
+//! };
+//! let id = pool.submit("doc-model", spec).unwrap();
+//! let status = pool.join(id, Duration::from_secs(120)).expect("job finished");
+//! assert_eq!(status.state, JobState::Completed);
+//! // The finished job promoted its checkpoint into the registry.
+//! assert_eq!(registry.resolve("doc-model").unwrap().version(), 1);
+//! pool.shutdown();
+//! ```
+
+pub mod orchestrator;
+pub mod sgd;
+
+pub use orchestrator::{CnnTrainer, CnnVariant, EvalResult, Fig3NativeTrainer, Fig3Trainer};
+pub use sgd::{LossCurve, Momentum, StepDecay};
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::TrainerConfig;
+use crate::data::regression::RegressionTask;
+use crate::data::BatchCursor;
+use crate::metrics::{Counter, FloatGauge, Gauge, Registry};
+use crate::registry::{ModelRegistry, SellModel};
+use crate::sell::acdc::{AcdcCascade, AcdcGrads};
+use crate::sell::init::DiagInit;
+use crate::util::rng::Pcg32;
+
+/// Why a trainer operation failed. Maps onto HTTP statuses at the
+/// gateway (404 / 409 / 400), mirroring [`crate::registry::RegistryError`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrainerError {
+    /// No job with that id.
+    NotFound(u64),
+    /// The operation conflicts with the job's current state (e.g. resume
+    /// on a running job, a second live job for the same model).
+    Conflict(String),
+    /// Malformed job spec or model name.
+    Invalid(String),
+}
+
+impl TrainerError {
+    /// The HTTP status this error maps to at the gateway.
+    pub fn status(&self) -> u16 {
+        match self {
+            TrainerError::NotFound(_) => 404,
+            TrainerError::Conflict(_) => 409,
+            TrainerError::Invalid(_) => 400,
+        }
+    }
+}
+
+impl std::fmt::Display for TrainerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainerError::NotFound(id) => write!(f, "unknown job {id}"),
+            TrainerError::Conflict(msg) => write!(f, "{msg}"),
+            TrainerError::Invalid(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// Lifecycle state of one training job (see the module docs for the
+/// transition diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Stepping; the only state that consumes CPU.
+    Running,
+    /// Frozen at a step boundary; resume or cancel to leave.
+    Paused,
+    /// Converged (loss ≤ first × `target_ratio`) or step budget spent.
+    Completed,
+    /// Cancelled by an operator; parameters are discarded (checkpoints
+    /// already written remain on disk).
+    Cancelled,
+    /// Diverged loss, checkpoint I/O error, or a panic in the step.
+    Failed,
+}
+
+impl JobState {
+    /// Lowercase wire name (`GET /v1/jobs` payloads and the CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Running => "running",
+            JobState::Paused => "paused",
+            JobState::Completed => "completed",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Whether the job's thread has exited (no further transitions).
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Cancelled | JobState::Failed
+        )
+    }
+}
+
+/// Everything one job needs to run, resolved up front so a bad request
+/// fails at submit time (HTTP 400) instead of inside the worker thread.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Cascade width N (power of two).
+    pub width: usize,
+    /// Cascade depth K.
+    pub depth: usize,
+    /// SGD step budget.
+    pub steps: usize,
+    /// Minibatch rows.
+    pub batch: usize,
+    /// Base learning rate.
+    pub lr: f64,
+    /// Momentum coefficient β.
+    pub momentum: f64,
+    /// lr multiplier applied every `lr_decay_every` steps (1.0 = constant).
+    pub lr_decay: f64,
+    /// Steps between decays (0 = never).
+    pub lr_decay_every: usize,
+    /// Diagonal initialization (the paper's identity-plus-noise by default).
+    pub init: DiagInit,
+    /// §6.2-style nonlinear cascade instead of the linear operator.
+    pub nonlinear: bool,
+    /// Rows of the generated eq.-(15) regression dataset.
+    pub dataset_rows: usize,
+    /// Target-noise variance of the dataset.
+    pub dataset_noise: f64,
+    /// RNG seed (dataset and init).
+    pub seed: u64,
+    /// Checkpoint cadence in steps (0 = only at promotion/completion).
+    pub checkpoint_every: usize,
+    /// Convergence target: done when loss ≤ first-loss × this.
+    pub target_ratio: f64,
+    /// Promote into the registry automatically on completion.
+    pub promote_on_complete: bool,
+}
+
+impl JobSpec {
+    /// A spec carrying the `[trainer]` config defaults.
+    pub fn from_config(cfg: &TrainerConfig) -> JobSpec {
+        JobSpec {
+            width: cfg.width,
+            depth: cfg.depth,
+            steps: cfg.steps,
+            batch: cfg.batch,
+            lr: cfg.lr,
+            momentum: cfg.momentum,
+            lr_decay: cfg.lr_decay,
+            lr_decay_every: cfg.lr_decay_every,
+            init: DiagInit {
+                mean: cfg.init_mean,
+                sigma: cfg.init_sigma,
+            },
+            nonlinear: cfg.nonlinear,
+            dataset_rows: cfg.dataset_rows,
+            dataset_noise: cfg.dataset_noise,
+            seed: cfg.seed,
+            checkpoint_every: cfg.checkpoint_every,
+            target_ratio: cfg.target_ratio,
+            promote_on_complete: cfg.promote_on_complete,
+        }
+    }
+
+    /// Validate by round-tripping through [`TrainerConfig::validate`] (one
+    /// source of truth for the knob ranges).
+    pub fn validate(&self) -> Result<(), String> {
+        let probe = TrainerConfig {
+            width: self.width,
+            depth: self.depth,
+            steps: self.steps,
+            batch: self.batch,
+            lr: self.lr,
+            momentum: self.momentum,
+            lr_decay: self.lr_decay,
+            lr_decay_every: self.lr_decay_every,
+            init_mean: self.init.mean,
+            init_sigma: self.init.sigma,
+            nonlinear: self.nonlinear,
+            dataset_rows: self.dataset_rows,
+            dataset_noise: self.dataset_noise,
+            seed: self.seed,
+            checkpoint_every: self.checkpoint_every,
+            target_ratio: self.target_ratio,
+            promote_on_complete: self.promote_on_complete,
+            ..Default::default()
+        };
+        probe.validate()
+    }
+}
+
+/// Point-in-time snapshot of one job (`GET /v1/jobs` row).
+#[derive(Debug, Clone)]
+pub struct JobStatus {
+    /// Pool-unique job id.
+    pub id: u64,
+    /// Registry model name the job trains toward.
+    pub model: String,
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Steps completed so far.
+    pub step: usize,
+    /// Step budget.
+    pub steps: usize,
+    /// Most recent minibatch loss.
+    pub loss: f64,
+    /// Loss of the first step (the convergence baseline).
+    pub first_loss: f64,
+    /// Learning rate at the last step.
+    pub lr: f64,
+    /// Times this job promoted a checkpoint into the registry.
+    pub promotions: u64,
+    /// Registry version of the most recent promotion, if any.
+    pub promoted_version: Option<u64>,
+    /// Path of the most recent checkpoint manifest, if any.
+    pub last_checkpoint: Option<String>,
+    /// Most recent failure: job-fatal when `state == Failed`, or a
+    /// non-fatal promotion error (the job keeps its progress — the
+    /// checkpoint is on disk — and keeps running).
+    pub error: Option<String>,
+}
+
+/// Mutable job fields shared between the worker thread and the control
+/// surface, guarded by one mutex (the condvar wakes paused workers and
+/// `join` waiters).
+struct Ctl {
+    state: JobState,
+    promote_requested: bool,
+    step: usize,
+    loss: f64,
+    first_loss: f64,
+    lr: f64,
+    promotions: u64,
+    promoted_version: Option<u64>,
+    last_checkpoint: Option<PathBuf>,
+    error: Option<String>,
+}
+
+struct JobShared {
+    id: u64,
+    model: String,
+    spec: JobSpec,
+    ctl: Mutex<Ctl>,
+    cv: Condvar,
+    m_step: Arc<Gauge>,
+    m_loss: Arc<FloatGauge>,
+    m_lr: Arc<FloatGauge>,
+    m_promotions: Arc<Counter>,
+}
+
+impl JobShared {
+    fn status(&self) -> JobStatus {
+        let ctl = self.ctl.lock().unwrap();
+        JobStatus {
+            id: self.id,
+            model: self.model.clone(),
+            state: ctl.state,
+            step: ctl.step,
+            steps: self.spec.steps,
+            loss: ctl.loss,
+            first_loss: ctl.first_loss,
+            lr: ctl.lr,
+            promotions: ctl.promotions,
+            promoted_version: ctl.promoted_version,
+            last_checkpoint: ctl.last_checkpoint.as_ref().map(|p| p.display().to_string()),
+            error: ctl.error.clone(),
+        }
+    }
+}
+
+struct JobEntry {
+    shared: Arc<JobShared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+struct PoolInner {
+    next_id: u64,
+    jobs: Vec<JobEntry>,
+    /// Set by [`TrainerPool::shutdown`]; submits are refused afterwards so
+    /// a straggler request cannot leak a job thread past the drain.
+    closed: bool,
+}
+
+/// Pool of background training jobs feeding a [`ModelRegistry`]. See the
+/// module docs for the lifecycle and a runnable end-to-end example.
+pub struct TrainerPool {
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Registry>,
+    defaults: TrainerConfig,
+    inner: Mutex<PoolInner>,
+}
+
+impl TrainerPool {
+    /// Pool promoting into `registry`, exporting per-job
+    /// `trainer.{model}.{step,loss,lr,promotions}` series into `metrics`
+    /// (the gateway's shared registry), with `defaults` filling
+    /// unspecified job knobs.
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<Registry>,
+        defaults: TrainerConfig,
+    ) -> TrainerPool {
+        TrainerPool {
+            registry,
+            metrics,
+            defaults,
+            inner: Mutex::new(PoolInner {
+                next_id: 1,
+                jobs: Vec::new(),
+                closed: false,
+            }),
+        }
+    }
+
+    /// The `[trainer]` defaults jobs inherit.
+    pub fn defaults(&self) -> &TrainerConfig {
+        &self.defaults
+    }
+
+    /// Start a background job training toward registry model `model`.
+    /// Returns the job id. Refuses a second live job for the same model
+    /// (the per-model metric series and promotion target would collide)
+    /// and more than `max_jobs` live jobs total.
+    pub fn submit(&self, model: &str, spec: JobSpec) -> Result<u64, TrainerError> {
+        crate::registry::validate_name(model).map_err(|e| TrainerError::Invalid(e.to_string()))?;
+        // Fail fast instead of training for hours toward a promotion the
+        // registry will always refuse (loads under an alias are invalid).
+        if self.registry.is_alias(model) {
+            return Err(TrainerError::Conflict(format!(
+                "'{model}' is an alias; train under the model name instead"
+            )));
+        }
+        spec.validate().map_err(TrainerError::Invalid)?;
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(TrainerError::Conflict(
+                "trainer pool is shut down".to_string(),
+            ));
+        }
+        prune_terminal(&mut inner);
+        let live = |e: &JobEntry| !e.shared.ctl.lock().unwrap().state.is_terminal();
+        if inner.jobs.iter().any(|e| e.shared.model == model && live(e)) {
+            return Err(TrainerError::Conflict(format!(
+                "model '{model}' already has a live training job"
+            )));
+        }
+        if inner.jobs.iter().filter(|e| live(e)).count() >= self.defaults.max_jobs {
+            return Err(TrainerError::Conflict(format!(
+                "trainer pool is full ({} live jobs)",
+                self.defaults.max_jobs
+            )));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let shared = Arc::new(JobShared {
+            id,
+            model: model.to_string(),
+            spec,
+            ctl: Mutex::new(Ctl {
+                state: JobState::Running,
+                promote_requested: false,
+                step: 0,
+                loss: f64::NAN,
+                first_loss: f64::NAN,
+                lr: 0.0,
+                promotions: 0,
+                promoted_version: None,
+                last_checkpoint: None,
+                error: None,
+            }),
+            cv: Condvar::new(),
+            m_step: self.metrics.gauge(&format!("trainer.{model}.step")),
+            m_loss: self.metrics.float_gauge(&format!("trainer.{model}.loss")),
+            m_lr: self.metrics.float_gauge(&format!("trainer.{model}.lr")),
+            m_promotions: self.metrics.counter(&format!("trainer.{model}.promotions")),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let registry = Arc::clone(&self.registry);
+        let ckpt_dir = PathBuf::from(&self.defaults.checkpoint_dir);
+        let handle = std::thread::Builder::new()
+            .name(format!("acdc-trainer-{id}"))
+            .spawn(move || run_job(worker_shared, registry, ckpt_dir))
+            .map_err(|e| TrainerError::Invalid(format!("spawn job thread: {e}")))?;
+        inner.jobs.push(JobEntry {
+            shared,
+            handle: Some(handle),
+        });
+        Ok(id)
+    }
+
+    fn find(&self, id: u64) -> Result<Arc<JobShared>, TrainerError> {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .iter()
+            .find(|e| e.shared.id == id)
+            .map(|e| Arc::clone(&e.shared))
+            .ok_or(TrainerError::NotFound(id))
+    }
+
+    /// Freeze a running job at its next step boundary.
+    pub fn pause(&self, id: u64) -> Result<(), TrainerError> {
+        let shared = self.find(id)?;
+        let mut ctl = shared.ctl.lock().unwrap();
+        match ctl.state {
+            JobState::Running => {
+                ctl.state = JobState::Paused;
+                shared.cv.notify_all();
+                Ok(())
+            }
+            other => Err(TrainerError::Conflict(format!(
+                "cannot pause a {} job",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Resume a paused job.
+    pub fn resume(&self, id: u64) -> Result<(), TrainerError> {
+        let shared = self.find(id)?;
+        let mut ctl = shared.ctl.lock().unwrap();
+        match ctl.state {
+            JobState::Paused => {
+                ctl.state = JobState::Running;
+                shared.cv.notify_all();
+                Ok(())
+            }
+            other => Err(TrainerError::Conflict(format!(
+                "cannot resume a {} job",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Cancel a running or paused job; its thread exits at the next step
+    /// boundary.
+    pub fn cancel(&self, id: u64) -> Result<(), TrainerError> {
+        let shared = self.find(id)?;
+        let mut ctl = shared.ctl.lock().unwrap();
+        match ctl.state {
+            JobState::Running | JobState::Paused => {
+                ctl.state = JobState::Cancelled;
+                shared.cv.notify_all();
+                Ok(())
+            }
+            other => Err(TrainerError::Conflict(format!(
+                "cannot cancel a {} job",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Promote the job's current parameters into the registry. A live job
+    /// checkpoints and loads at its next step boundary; a completed job's
+    /// final checkpoint is loaded immediately (hot-swapping whatever
+    /// version is currently serving).
+    pub fn promote(&self, id: u64) -> Result<(), TrainerError> {
+        let shared = self.find(id)?;
+        let mut ctl = shared.ctl.lock().unwrap();
+        match ctl.state {
+            JobState::Running | JobState::Paused => {
+                ctl.promote_requested = true;
+                shared.cv.notify_all();
+                Ok(())
+            }
+            JobState::Completed => {
+                let path = ctl.last_checkpoint.clone().ok_or_else(|| {
+                    TrainerError::Conflict("completed job has no checkpoint".to_string())
+                })?;
+                drop(ctl);
+                let version = self
+                    .registry
+                    .load_path(&shared.model, &path, None)
+                    .map_err(|e| TrainerError::Conflict(e.to_string()))?;
+                let mut ctl = shared.ctl.lock().unwrap();
+                ctl.promotions += 1;
+                ctl.promoted_version = Some(version);
+                shared.m_promotions.inc();
+                Ok(())
+            }
+            other => Err(TrainerError::Conflict(format!(
+                "cannot promote a {} job",
+                other.as_str()
+            ))),
+        }
+    }
+
+    /// Snapshot of one job.
+    pub fn status(&self, id: u64) -> Result<JobStatus, TrainerError> {
+        Ok(self.find(id)?.status())
+    }
+
+    /// Snapshot of every job, ordered by id (submission order). History
+    /// is bounded: terminal jobs beyond the most recent
+    /// [`MAX_TERMINAL_KEPT`] are pruned when new jobs are submitted.
+    pub fn list(&self) -> Vec<JobStatus> {
+        self.inner
+            .lock()
+            .unwrap()
+            .jobs
+            .iter()
+            .map(|e| e.shared.status())
+            .collect()
+    }
+
+    /// Block until job `id` reaches a terminal state (or `timeout`);
+    /// returns the final status, or `None` on timeout / unknown id.
+    pub fn join(&self, id: u64, timeout: Duration) -> Option<JobStatus> {
+        let shared = self.find(id).ok()?;
+        let deadline = Instant::now() + timeout;
+        let mut ctl = shared.ctl.lock().unwrap();
+        while !ctl.state.is_terminal() {
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = shared.cv.wait_timeout(ctl, deadline - now).unwrap();
+            ctl = guard;
+        }
+        drop(ctl);
+        Some(shared.status())
+    }
+
+    /// Cancel every live job and join all job threads. Idempotent; called
+    /// by the gateway on drain.
+    pub fn shutdown(&self) {
+        let handles: Vec<(Arc<JobShared>, Option<JoinHandle<()>>)> = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.closed = true;
+            inner
+                .jobs
+                .iter_mut()
+                .map(|e| (Arc::clone(&e.shared), e.handle.take()))
+                .collect()
+        };
+        for (shared, _) in &handles {
+            let mut ctl = shared.ctl.lock().unwrap();
+            if !ctl.state.is_terminal() {
+                ctl.state = JobState::Cancelled;
+            }
+            shared.cv.notify_all();
+        }
+        for (_, handle) in handles {
+            if let Some(h) = handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for TrainerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Terminal job entries kept as history; older ones are pruned at
+/// submit time so a long-running gateway with periodic retraining does
+/// not grow its job list (and `GET /v1/jobs` payloads) without bound.
+pub const MAX_TERMINAL_KEPT: usize = 64;
+
+/// Drop the oldest terminal entries beyond [`MAX_TERMINAL_KEPT`],
+/// joining their (already-exited) threads.
+fn prune_terminal(inner: &mut PoolInner) {
+    let is_terminal = |e: &JobEntry| e.shared.ctl.lock().unwrap().state.is_terminal();
+    let mut terminal = inner.jobs.iter().filter(|e| is_terminal(e)).count();
+    let mut i = 0;
+    while terminal > MAX_TERMINAL_KEPT && i < inner.jobs.len() {
+        if is_terminal(&inner.jobs[i]) {
+            let mut e = inner.jobs.remove(i);
+            if let Some(h) = e.handle.take() {
+                let _ = h.join();
+            }
+            terminal -= 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// What the worker should do next, decided at each step boundary.
+enum Directive {
+    Continue,
+    Promote,
+    Stop,
+}
+
+/// Observe pause/cancel/promote requests; blocks while paused.
+fn control_point(shared: &JobShared) -> Directive {
+    let mut ctl = shared.ctl.lock().unwrap();
+    loop {
+        match ctl.state {
+            JobState::Cancelled => return Directive::Stop,
+            JobState::Paused => {
+                if ctl.promote_requested {
+                    ctl.promote_requested = false;
+                    return Directive::Promote;
+                }
+                ctl = shared.cv.wait(ctl).unwrap();
+            }
+            _ => {
+                if ctl.promote_requested {
+                    ctl.promote_requested = false;
+                    return Directive::Promote;
+                }
+                return Directive::Continue;
+            }
+        }
+    }
+}
+
+/// Set a terminal state (unless the operator already cancelled) and wake
+/// `join` waiters. A recorded non-fatal error (failed promotion) is kept
+/// unless a fatal one replaces it.
+fn finish(shared: &JobShared, state: JobState, error: Option<String>) {
+    let mut ctl = shared.ctl.lock().unwrap();
+    if ctl.state != JobState::Cancelled {
+        ctl.state = state;
+        if error.is_some() {
+            ctl.error = error;
+        }
+    }
+    shared.cv.notify_all();
+}
+
+/// Worker-thread entry: run the training loop, downgrading panics to a
+/// `Failed` state so a bug in one job can never take the pool down.
+fn run_job(shared: Arc<JobShared>, registry: Arc<ModelRegistry>, ckpt_dir: PathBuf) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        train_loop(&shared, &registry, &ckpt_dir)
+    }));
+    match result {
+        Ok(Ok(completed)) => {
+            if completed {
+                finish(&shared, JobState::Completed, None);
+            } else {
+                // Cancelled mid-run: finish() preserves the Cancelled state.
+                finish(&shared, JobState::Cancelled, None);
+            }
+        }
+        Ok(Err(msg)) => finish(&shared, JobState::Failed, Some(msg)),
+        Err(_) => finish(
+            &shared,
+            JobState::Failed,
+            Some("training step panicked".to_string()),
+        ),
+    }
+}
+
+/// Write the cascade as a bit-exact checkpoint manifest.
+fn write_checkpoint(
+    dir: &Path,
+    shared: &JobShared,
+    step: usize,
+    cascade: &AcdcCascade,
+) -> Result<PathBuf, String> {
+    std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+    let path = dir.join(format!("{}-job{}-step{}.ckpt", shared.model, shared.id, step));
+    SellModel::Acdc(cascade.clone()).to_checkpoint()?.save(&path)?;
+    let mut ctl = shared.ctl.lock().unwrap();
+    ctl.last_checkpoint = Some(path.clone());
+    Ok(path)
+}
+
+/// Checkpoint then load into the registry: the full train → manifest →
+/// hot-swap loop, not an in-memory shortcut, so every promotion exercises
+/// the same codec path serving restarts depend on.
+fn promote(
+    dir: &Path,
+    shared: &JobShared,
+    registry: &ModelRegistry,
+    step: usize,
+    cascade: &AcdcCascade,
+) -> Result<u64, String> {
+    let path = write_checkpoint(dir, shared, step, cascade)?;
+    let version = registry
+        .load_path(&shared.model, &path, None)
+        .map_err(|e| format!("promote '{}': {e}", shared.model))?;
+    let mut ctl = shared.ctl.lock().unwrap();
+    ctl.promotions += 1;
+    ctl.promoted_version = Some(version);
+    shared.m_promotions.inc();
+    Ok(version)
+}
+
+/// Momentum SGD update over every layer's (a, d, bias) banks — the
+/// trainer's optimizer step, shared with the `acdc bench-trainer`
+/// throughput sweep. Bias gradients are zeroed first when the cascade
+/// doesn't train biases, so the velocity buffers stay zero too.
+/// `momentum` must hold `3 × depth` buffers of width N (see
+/// [`Momentum::new`]), ordered (a, d, bias) per layer.
+pub fn apply_momentum_update(
+    cascade: &mut AcdcCascade,
+    grads: &mut [AcdcGrads],
+    momentum: &mut Momentum,
+    lr: f32,
+) {
+    if !cascade.train_bias {
+        for g in grads.iter_mut() {
+            g.bias.fill(0.0);
+        }
+    }
+    let mut params: Vec<&mut [f32]> = Vec::with_capacity(3 * cascade.layers.len());
+    for layer in cascade.layers.iter_mut() {
+        let crate::sell::acdc::AcdcLayer { a, d, bias, .. } = layer;
+        params.push(a.as_mut_slice());
+        params.push(d.as_mut_slice());
+        params.push(bias.as_mut_slice());
+    }
+    let gs: Vec<&[f32]> = grads
+        .iter()
+        .flat_map(|g| [g.a.as_slice(), g.d.as_slice(), g.bias.as_slice()])
+        .collect();
+    momentum.apply(&mut params, &gs, lr);
+}
+
+/// The SGD loop. Returns `Ok(true)` on completion (converged or budget
+/// spent), `Ok(false)` when cancelled, `Err` on failure.
+fn train_loop(
+    shared: &JobShared,
+    registry: &ModelRegistry,
+    ckpt_dir: &Path,
+) -> Result<bool, String> {
+    let spec = shared.spec.clone();
+    let mut rng = Pcg32::seeded(spec.seed);
+    let task = RegressionTask::generate(
+        spec.dataset_rows,
+        spec.width,
+        spec.dataset_noise,
+        spec.seed,
+    );
+    let mut cascade = if spec.nonlinear {
+        AcdcCascade::nonlinear(spec.width, spec.depth, spec.init, &mut rng)
+    } else {
+        AcdcCascade::linear(spec.width, spec.depth, spec.init, &mut rng)
+    };
+    let sizes = vec![spec.width; 3 * spec.depth];
+    let mut momentum = Momentum::new(spec.momentum as f32, &sizes);
+    let schedule = if spec.lr_decay_every == 0 || spec.lr_decay >= 1.0 {
+        StepDecay::constant(spec.lr)
+    } else {
+        StepDecay::new(spec.lr, spec.lr_decay, spec.lr_decay_every)
+    };
+    let mut cursor = BatchCursor::new(task.rows(), spec.batch);
+    let pool = crate::util::threadpool::global();
+    let mut first_loss = f64::NAN;
+    let mut last_step = 0usize;
+
+    for step in 0..spec.steps {
+        // Step boundary: honour pause/cancel/promote before touching data.
+        loop {
+            match control_point(shared) {
+                Directive::Continue => break,
+                Directive::Stop => return Ok(false),
+                Directive::Promote => {
+                    // A failed promotion (e.g. the model name turned into
+                    // an alias) must not kill hours of training: record
+                    // it and keep stepping — the checkpoint is on disk.
+                    if let Err(e) = promote(ckpt_dir, shared, registry, step, &cascade) {
+                        shared.ctl.lock().unwrap().error = Some(e);
+                    }
+                }
+            }
+        }
+
+        let idx = cursor.next_indices();
+        let (bx, by) = task.gather(&idx);
+        // The trainer hot path rides the pooled batched SoA engine —
+        // bit-identical to the serial engine (property-pinned).
+        let (pred, cache) = cascade.forward_train_pooled(&bx, pool);
+        let diff = pred.sub(&by);
+        let loss = diff.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+            / spec.batch as f64;
+        if !loss.is_finite() {
+            return Err(format!("loss diverged at step {step}"));
+        }
+        let mut g = diff;
+        g.scale(2.0 / spec.batch as f32);
+        let (_, mut grads) = cascade.backward(&cache, &g);
+        let lr = schedule.lr_at(step) as f32;
+        apply_momentum_update(&mut cascade, &mut grads, &mut momentum, lr);
+
+        if first_loss.is_nan() {
+            first_loss = loss;
+        }
+        last_step = step + 1;
+        {
+            let mut ctl = shared.ctl.lock().unwrap();
+            ctl.step = last_step;
+            ctl.loss = loss;
+            ctl.first_loss = first_loss;
+            ctl.lr = lr as f64;
+        }
+        shared.m_step.set(last_step as u64);
+        shared.m_loss.set(loss);
+        shared.m_lr.set(lr as f64);
+
+        if spec.checkpoint_every > 0 && last_step % spec.checkpoint_every == 0 {
+            write_checkpoint(ckpt_dir, shared, last_step, &cascade)?;
+        }
+        if loss <= first_loss * spec.target_ratio {
+            break;
+        }
+    }
+
+    // Completion boundary: a cancel that landed during the last step must
+    // win — a cancelled job neither checkpoints nor promotes. The pending
+    // promote flag is taken under the same lock so an acknowledged
+    // on-demand promote folds into the final promotion instead of being
+    // dropped on the floor.
+    let (cancelled, promote_pending) = {
+        let mut ctl = shared.ctl.lock().unwrap();
+        (
+            ctl.state == JobState::Cancelled,
+            std::mem::take(&mut ctl.promote_requested),
+        )
+    };
+    if cancelled {
+        return Ok(false);
+    }
+    // Final checkpoint always exists, so promote-after-completion works
+    // even with checkpoint_every = 0.
+    write_checkpoint(ckpt_dir, shared, last_step, &cascade)?;
+    if spec.promote_on_complete || promote_pending {
+        if let Err(e) = promote(ckpt_dir, shared, registry, last_step, &cascade) {
+            shared.ctl.lock().unwrap().error = Some(e);
+        }
+    }
+    Ok(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use crate::tensor::Tensor;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("acdc_trainer_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn template() -> ServeConfig {
+        ServeConfig {
+            buckets: vec![1, 4],
+            max_wait_us: 200,
+            workers: 1,
+            queue_cap: 64,
+            ..Default::default()
+        }
+    }
+
+    fn pool_with(tag: &str, defaults: TrainerConfig) -> (TrainerPool, Arc<ModelRegistry>, PathBuf) {
+        let dir = temp_dir(tag);
+        let metrics = Arc::new(Registry::new());
+        let registry = Arc::new(ModelRegistry::new(template(), Arc::clone(&metrics)));
+        let defaults = TrainerConfig {
+            checkpoint_dir: dir.display().to_string(),
+            ..defaults
+        };
+        (
+            TrainerPool::new(Arc::clone(&registry), metrics, defaults),
+            registry,
+            dir,
+        )
+    }
+
+    /// A spec that converges in well under a second: shallow linear
+    /// cascade, small task, identity init.
+    fn quick_spec(defaults: &TrainerConfig) -> JobSpec {
+        JobSpec {
+            width: 16,
+            depth: 2,
+            steps: 1_000,
+            batch: 32,
+            dataset_rows: 256,
+            lr: 5e-3,
+            momentum: 0.0,
+            seed: 1,
+            checkpoint_every: 0,
+            target_ratio: 0.2,
+            ..JobSpec::from_config(defaults)
+        }
+    }
+
+    /// A spec that keeps stepping long enough to exercise controls.
+    fn long_spec(defaults: &TrainerConfig) -> JobSpec {
+        JobSpec {
+            steps: 5_000_000,
+            target_ratio: 1e-12,
+            promote_on_complete: false,
+            ..quick_spec(defaults)
+        }
+    }
+
+    #[test]
+    fn paper_init_statistics_pinned() {
+        // The paper's working init: A = D = 1 + small Gaussian noise,
+        // biases exactly zero. Pin the sample statistics the trainer's
+        // default spec produces.
+        let defaults = TrainerConfig::default();
+        let spec = JobSpec::from_config(&defaults);
+        assert_eq!(spec.init.mean, 1.0);
+        assert_eq!(spec.init.sigma, 0.1);
+        let mut rng = Pcg32::seeded(7);
+        let cascade = AcdcCascade::linear(256, 8, spec.init, &mut rng);
+        let mut diag = Vec::new();
+        for layer in &cascade.layers {
+            diag.extend_from_slice(&layer.a);
+            diag.extend_from_slice(&layer.d);
+            assert!(layer.bias.iter().all(|&b| b == 0.0), "biases start at 0");
+        }
+        let n = diag.len() as f64; // 2 * 8 * 256 = 4096 samples
+        let mean = diag.iter().map(|&v| v as f64).sum::<f64>() / n;
+        let var = diag.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+        assert!((mean - 1.0).abs() < 0.01, "mean {mean}");
+        assert!((var.sqrt() - 0.1).abs() < 0.01, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn job_trains_converges_and_promotes() {
+        let (pool, registry, dir) = pool_with("converge", TrainerConfig::default());
+        let spec = quick_spec(pool.defaults());
+        let id = pool.submit("m", spec).unwrap();
+        let status = pool.join(id, Duration::from_secs(120)).expect("join");
+        assert_eq!(status.state, JobState::Completed, "{:?}", status.error);
+        assert!(
+            status.loss <= status.first_loss * 0.2,
+            "loss {} vs first {}",
+            status.loss,
+            status.first_loss
+        );
+        // Auto-promotion loaded version 1 into the registry.
+        assert_eq!(status.promoted_version, Some(1));
+        assert_eq!(status.promotions, 1);
+        let handle = registry.resolve("m").unwrap();
+        assert_eq!((handle.version(), handle.width()), (1, 16));
+        // The checkpoint on disk is the same bit-exact manifest.
+        let path = PathBuf::from(status.last_checkpoint.unwrap());
+        let model =
+            SellModel::from_checkpoint(&crate::checkpoint::Checkpoint::load(&path).unwrap())
+                .unwrap();
+        let mut rng = Pcg32::seeded(9);
+        let x = rng.normal_vec(16, 0.0, 1.0);
+        let got = handle.infer(x.clone(), Duration::from_secs(10)).unwrap();
+        let want = model.forward(&Tensor::from_vec(&[1, 16], x));
+        for (g, w) in got.iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "registry infer vs manifest");
+        }
+        drop(handle);
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pause_resume_cancel_state_machine() {
+        let (pool, _registry, dir) = pool_with("ctl", TrainerConfig::default());
+        let id = pool.submit("m", long_spec(pool.defaults())).unwrap();
+        // Pause freezes the step counter (allow the in-flight step).
+        pool.pause(id).unwrap();
+        let s1 = pool.status(id).unwrap();
+        assert_eq!(s1.state, JobState::Paused);
+        std::thread::sleep(Duration::from_millis(120));
+        let s2 = pool.status(id).unwrap();
+        assert!(
+            s2.step <= s1.step + 1,
+            "paused job kept stepping: {} -> {}",
+            s1.step,
+            s2.step
+        );
+        assert!(pool.pause(id).is_err(), "pause while paused conflicts");
+        // Resume makes progress again.
+        pool.resume(id).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if pool.status(id).unwrap().step > s2.step + 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "no progress after resume");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // Cancel terminates.
+        pool.cancel(id).unwrap();
+        let status = pool.join(id, Duration::from_secs(30)).expect("join");
+        assert_eq!(status.state, JobState::Cancelled);
+        assert!(pool.resume(id).is_err(), "resume on terminal conflicts");
+        assert!(pool.cancel(id).is_err(), "cancel on terminal conflicts");
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn on_demand_promotion_loads_registry_mid_run() {
+        let (pool, registry, dir) = pool_with("promote", TrainerConfig::default());
+        let id = pool.submit("m", long_spec(pool.defaults())).unwrap();
+        // Let it take a few steps, then promote mid-run.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while pool.status(id).unwrap().step < 5 {
+            assert!(Instant::now() < deadline, "job made no progress");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        pool.promote(id).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let s = pool.status(id).unwrap();
+            if s.promotions >= 1 {
+                assert_eq!(s.promoted_version, Some(1));
+                break;
+            }
+            assert!(Instant::now() < deadline, "promotion never happened");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(registry.resolve("m").unwrap().version(), 1);
+        // A second promotion hot-swaps version 2.
+        pool.promote(id).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while pool.status(id).unwrap().promotions < 2 {
+            assert!(Instant::now() < deadline, "second promotion never happened");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(registry.resolve("m").unwrap().version(), 2);
+        pool.cancel(id).unwrap();
+        pool.join(id, Duration::from_secs(30)).unwrap();
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn submit_refuses_alias_names_up_front() {
+        // Training toward an alias would fail at every promotion (the
+        // registry refuses loads under alias names) — refuse at submit.
+        let (pool, registry, dir) = pool_with("alias", TrainerConfig::default());
+        let mut rng = Pcg32::seeded(3);
+        registry
+            .load(
+                "real",
+                SellModel::Acdc(AcdcCascade::linear(8, 1, DiagInit::IDENTITY, &mut rng)),
+                None,
+            )
+            .unwrap();
+        registry.alias("prod", "real").unwrap();
+        match pool.submit("prod", quick_spec(pool.defaults())).unwrap_err() {
+            TrainerError::Conflict(msg) => assert!(msg.contains("alias"), "{msg}"),
+            other => panic!("expected Conflict, got {other:?}"),
+        }
+        // The model name itself is fine.
+        let id = pool.submit("real", long_spec(pool.defaults())).unwrap();
+        pool.cancel(id).unwrap();
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn submit_guards_duplicates_capacity_and_bad_specs() {
+        let defaults = TrainerConfig {
+            max_jobs: 2,
+            ..TrainerConfig::default()
+        };
+        let (pool, _registry, dir) = pool_with("guards", defaults);
+        let long = long_spec(pool.defaults());
+        let id = pool.submit("m", long.clone()).unwrap();
+        // Same model, live job → 409.
+        match pool.submit("m", long.clone()).unwrap_err() {
+            TrainerError::Conflict(msg) => assert!(msg.contains("live"), "{msg}"),
+            other => panic!("expected Conflict, got {other:?}"),
+        }
+        // Pool capacity → 409.
+        let id2 = pool.submit("m2", long.clone()).unwrap();
+        assert!(matches!(
+            pool.submit("m3", long.clone()).unwrap_err(),
+            TrainerError::Conflict(_)
+        ));
+        // Bad name / bad spec → 400.
+        assert!(matches!(
+            pool.submit("has space", long.clone()).unwrap_err(),
+            TrainerError::Invalid(_)
+        ));
+        let bad = JobSpec {
+            width: 48,
+            ..long.clone()
+        };
+        assert!(matches!(
+            pool.submit("m3", bad).unwrap_err(),
+            TrainerError::Invalid(_)
+        ));
+        // Unknown job id → 404.
+        assert!(matches!(
+            pool.pause(999).unwrap_err(),
+            TrainerError::NotFound(999)
+        ));
+        pool.cancel(id).unwrap();
+        pool.cancel(id2).unwrap();
+        pool.join(id, Duration::from_secs(30)).unwrap();
+        pool.join(id2, Duration::from_secs(30)).unwrap();
+        // Terminal jobs free their model name for resubmission.
+        let id3 = pool.submit("m", long).unwrap();
+        pool.cancel(id3).unwrap();
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn per_job_metric_series_exported() {
+        let dir = temp_dir("metrics");
+        let metrics = Arc::new(Registry::new());
+        let registry = Arc::new(ModelRegistry::new(template(), Arc::clone(&metrics)));
+        let defaults = TrainerConfig {
+            checkpoint_dir: dir.display().to_string(),
+            ..TrainerConfig::default()
+        };
+        let pool = TrainerPool::new(registry, Arc::clone(&metrics), defaults);
+        let id = pool.submit("m", quick_spec(pool.defaults())).unwrap();
+        let status = pool.join(id, Duration::from_secs(120)).expect("join");
+        assert_eq!(status.state, JobState::Completed, "{:?}", status.error);
+        assert_eq!(metrics.gauge("trainer.m.step").get(), status.step as u64);
+        assert_eq!(metrics.float_gauge("trainer.m.loss").get(), status.loss);
+        assert!(metrics.float_gauge("trainer.m.lr").get() > 0.0);
+        assert_eq!(metrics.counter("trainer.m.promotions").get(), 1);
+        pool.shutdown();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -19,7 +19,7 @@ use crate::runtime::Engine;
 use crate::sell::acdc::AcdcCascade;
 use crate::sell::init::DiagInit;
 use crate::tensor::Tensor;
-use crate::train::sgd::{LossCurve, StepDecay};
+use crate::trainer::sgd::{LossCurve, StepDecay};
 use crate::util::rng::Pcg32;
 
 // ---------------------------------------------------------------------------
@@ -151,10 +151,13 @@ impl Fig3NativeTrainer {
     ) -> LossCurve {
         let mut cursor = BatchCursor::new(task.rows(), batch);
         let mut curve = LossCurve::new(&format!("native ACDC_{}", self.cascade.k()));
+        // Pooled batched engine, like the trainer's hot path —
+        // bit-identical to the serial sweep (property-pinned).
+        let pool = crate::util::threadpool::global();
         for step in 0..steps {
             let idx = cursor.next_indices();
             let (bx, by) = task.gather(&idx);
-            let (pred, cache) = self.cascade.forward_train(&bx);
+            let (pred, cache) = self.cascade.forward_train_pooled(&bx, pool);
             let diff = pred.sub(&by);
             let loss = diff.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
                 / batch as f64;

@@ -1,0 +1,371 @@
+//! Integration: the train → checkpoint → registry → hot-swap loop.
+//!
+//! Covers the trainer acceptance path: a background job on the synthetic
+//! eq.-(15) regression drops its loss 10×, writes a bit-exact checkpoint
+//! manifest, and promotes it into the registry; a promotion under live
+//! keep-alive HTTP load completes with **zero failed requests**, with
+//! post-promote responses carrying the new version; and the full
+//! `/v1/models/{name}/train` + `/v1/jobs` admin surface round-trips
+//! (submit, watch, pause, resume, cancel, typed errors).
+
+use acdc::checkpoint::Checkpoint;
+use acdc::config::{GatewayConfig, ServeConfig, TrainerConfig};
+use acdc::gateway::http;
+use acdc::gateway::Gateway;
+use acdc::metrics::Registry;
+use acdc::registry::{ModelRegistry, SellModel};
+use acdc::sell::acdc::AcdcCascade;
+use acdc::sell::init::DiagInit;
+use acdc::tensor::Tensor;
+use acdc::trainer::{JobSpec, JobState, TrainerPool};
+use acdc::util::json::{obj, Json};
+use acdc::util::rng::Pcg32;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("acdc_it_trainer_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn template() -> ServeConfig {
+    ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 200,
+        workers: 2,
+        queue_cap: 4_096,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// A job spec that converges fast and deterministically: shallow linear
+/// cascade on a small task with the paper's identity-plus-noise init.
+fn quick_spec(defaults: &TrainerConfig) -> JobSpec {
+    JobSpec {
+        width: 16,
+        depth: 2,
+        steps: 2_500,
+        batch: 32,
+        dataset_rows: 512,
+        dataset_noise: 1e-4,
+        lr: 5e-3,
+        momentum: 0.0,
+        seed: 1,
+        checkpoint_every: 0,
+        target_ratio: 0.1,
+        promote_on_complete: true,
+        ..JobSpec::from_config(defaults)
+    }
+}
+
+#[test]
+fn train_job_drops_loss_10x_and_promoted_checkpoint_serves_bit_exact() {
+    let dir = temp_dir("tenx");
+    let metrics = Arc::new(Registry::new());
+    let registry = Arc::new(ModelRegistry::new(template(), Arc::clone(&metrics)));
+    let defaults = TrainerConfig {
+        checkpoint_dir: dir.display().to_string(),
+        ..TrainerConfig::default()
+    };
+    let pool = TrainerPool::new(Arc::clone(&registry), metrics, defaults);
+    let id = pool.submit("m", quick_spec(pool.defaults())).unwrap();
+    let status = pool.join(id, Duration::from_secs(300)).expect("job finished");
+    assert_eq!(status.state, JobState::Completed, "{:?}", status.error);
+    // The acceptance criterion: loss dropped at least 10x.
+    assert!(
+        status.loss <= status.first_loss * 0.1,
+        "loss {} did not drop 10x from {}",
+        status.loss,
+        status.first_loss
+    );
+    // Promotion loaded the checkpoint manifest into the registry…
+    assert_eq!(status.promoted_version, Some(1));
+    let handle = registry.resolve("m").unwrap();
+    assert_eq!((handle.version(), handle.kind()), (1, "acdc"));
+    // …and serving it is bit-exact with the manifest on disk (bucket-1
+    // coordinator == direct [1, n] forward).
+    let path = PathBuf::from(status.last_checkpoint.expect("checkpoint path"));
+    let model = SellModel::from_checkpoint(&Checkpoint::load(&path).unwrap()).unwrap();
+    let mut rng = Pcg32::seeded(77);
+    for _ in 0..3 {
+        let x = rng.normal_vec(16, 0.0, 1.0);
+        let got = handle.infer(x.clone(), Duration::from_secs(10)).unwrap();
+        let want = model.forward(&Tensor::from_vec(&[1, 16], x));
+        for (g, w) in got.iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), w.to_bits(), "not bit-exact");
+        }
+    }
+    drop(handle);
+    pool.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        body,
+    )
+    .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+fn job_state(addr: SocketAddr, id: i64) -> (String, i64, Option<i64>) {
+    let resp = one_shot(addr, "GET", "/v1/jobs", b"");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = Json::parse(resp.body_str()).unwrap();
+    let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+    let job = jobs
+        .iter()
+        .find(|j| j.get("id").and_then(|x| x.as_i64()) == Some(id))
+        .unwrap_or_else(|| panic!("job {id} not listed"));
+    (
+        job.get("state").and_then(|x| x.as_str()).unwrap().to_string(),
+        job.get("promotions").and_then(|x| x.as_i64()).unwrap_or(0),
+        job.get("promoted_version").and_then(|x| x.as_i64()),
+    )
+}
+
+fn gateway_with_trainer(tag: &str) -> (Gateway, Arc<ModelRegistry>, PathBuf) {
+    let dir = temp_dir(tag);
+    let template = template();
+    let metrics = Arc::new(Registry::new());
+    let registry = Arc::new(ModelRegistry::new(template.clone(), Arc::clone(&metrics)));
+    let trainer_defaults = TrainerConfig {
+        checkpoint_dir: dir.display().to_string(),
+        ..TrainerConfig::default()
+    };
+    let trainer = Arc::new(TrainerPool::new(
+        Arc::clone(&registry),
+        metrics,
+        trainer_defaults,
+    ));
+    let gateway =
+        Gateway::start_registry_with_trainer(Arc::clone(&registry), trainer, template.gateway)
+            .unwrap();
+    (gateway, registry, dir)
+}
+
+#[test]
+fn http_train_then_promote_under_live_load_loses_nothing() {
+    let n = 16;
+    let (gateway, registry, dir) = gateway_with_trainer("liveload");
+    let addr = gateway.local_addr();
+    // v1: an untrained cascade is already serving the model.
+    let mut rng = Pcg32::seeded(42);
+    registry
+        .load(
+            "live",
+            SellModel::Acdc(AcdcCascade::linear(n, 2, DiagInit::IDENTITY, &mut rng)),
+            None,
+        )
+        .unwrap();
+
+    // Live load first: keep-alive clients hammer the model, so the
+    // training job's promotion below provably lands under traffic.
+    let stop = Arc::new(AtomicBool::new(false));
+    let clients: Vec<_> = (0..4)
+        .map(|_| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(60)))
+                    .unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let features = Json::Arr((0..n).map(|_| Json::Num(1.0)).collect());
+                let body = obj(vec![("features", features)]).to_string();
+                let mut seen: Vec<(u16, i64)> = Vec::new();
+                while !stop.load(Ordering::Acquire) {
+                    http::write_request(
+                        &mut stream,
+                        "POST",
+                        "/v1/models/live/infer",
+                        &[("content-type", "application/json")],
+                        body.as_bytes(),
+                    )
+                    .expect("write");
+                    let resp = http::read_response(&mut reader).expect("response");
+                    let version = if resp.status == 200 {
+                        Json::parse(resp.body_str())
+                            .unwrap()
+                            .get("version")
+                            .and_then(|x| x.as_i64())
+                            .unwrap_or(-1)
+                    } else {
+                        -1
+                    };
+                    seen.push((resp.status, version));
+                }
+                seen
+            })
+        })
+        .collect();
+
+    // With the load established, submit the training job over HTTP.
+    std::thread::sleep(Duration::from_millis(250));
+    let body = obj(vec![
+        ("width", Json::Num(n as f64)),
+        ("depth", Json::Num(2.0)),
+        ("steps", Json::Num(2_500.0)),
+        ("batch", Json::Num(32.0)),
+        ("rows", Json::Num(512.0)),
+        ("lr", Json::Num(5e-3)),
+        ("momentum", Json::Num(0.0)),
+        ("seed", Json::Num(1.0)),
+        ("checkpoint_every", Json::Num(0.0)),
+        ("target_ratio", Json::Num(0.1)),
+        ("promote", Json::Str("auto".into())),
+    ])
+    .to_string();
+    let resp = one_shot(addr, "POST", "/v1/models/live/train", body.as_bytes());
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = Json::parse(resp.body_str()).unwrap();
+    let job_id = v.get("job").and_then(|x| x.as_i64()).expect("job id");
+
+    // Wait for the job to complete (which auto-promotes v2), then let the
+    // load observe the new version before stopping.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let (state, promotions, version) = job_state(addr, job_id);
+        if state == "completed" {
+            assert_eq!(promotions, 1, "exactly one auto-promotion");
+            assert_eq!(version, Some(2), "promotion hot-swapped v2");
+            break;
+        }
+        assert!(
+            state == "running",
+            "unexpected mid-run state '{state}'"
+        );
+        assert!(Instant::now() < deadline, "training never completed");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    stop.store(true, Ordering::Release);
+
+    let mut all: Vec<(u16, i64)> = Vec::new();
+    for c in clients {
+        all.extend(c.join().unwrap());
+    }
+    assert!(!all.is_empty());
+    // Zero failed requests across training + promotion, and every
+    // response was answered by a committed version.
+    let mut v1_seen = 0u64;
+    let mut v2_seen = 0u64;
+    for (i, (status, version)) in all.iter().enumerate() {
+        assert_eq!(*status, 200, "request {i} failed during train/promote");
+        match version {
+            1 => v1_seen += 1,
+            2 => v2_seen += 1,
+            other => panic!("request {i} saw version {other}"),
+        }
+    }
+    // The load started before the job and outlived the promotion, so it
+    // must have been served by both versions.
+    assert!(v1_seen > 0, "load never observed the pre-training version");
+    assert!(v2_seen > 0, "load never observed the promoted version");
+    // A post-promotion probe is served by the trained version.
+    let features = Json::Arr((0..n).map(|_| Json::Num(1.0)).collect());
+    let body = obj(vec![("features", features)]).to_string();
+    let resp = one_shot(addr, "POST", "/v1/models/live/infer", body.as_bytes());
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = Json::parse(resp.body_str()).unwrap();
+    assert_eq!(v.get("version").and_then(|x| x.as_i64()), Some(2));
+    assert_eq!(v.get("model").and_then(|x| x.as_str()), Some("live"));
+
+    // Terminal-state controls are typed errors on the HTTP surface.
+    let resp = one_shot(addr, "POST", &format!("/v1/jobs/{job_id}/resume"), b"");
+    assert_eq!(resp.status, 409, "{}", resp.body_str());
+    let resp = one_shot(addr, "POST", "/v1/jobs/999/pause", b"");
+    assert_eq!(resp.status, 404, "{}", resp.body_str());
+    // A second job for the same model is allowed once the first is done.
+    let resp = one_shot(addr, "POST", "/v1/models/live/train", body_small(n).as_bytes());
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+
+    gateway.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A tiny follow-up job body (used to prove resubmission after completion).
+fn body_small(n: usize) -> String {
+    obj(vec![
+        ("width", Json::Num(n as f64)),
+        ("depth", Json::Num(1.0)),
+        ("steps", Json::Num(10.0)),
+        ("batch", Json::Num(8.0)),
+        ("rows", Json::Num(32.0)),
+        ("momentum", Json::Num(0.0)),
+        ("promote", Json::Str("manual".into())),
+    ])
+    .to_string()
+}
+
+#[test]
+fn http_job_controls_pause_resume_cancel() {
+    let (gateway, _registry, dir) = gateway_with_trainer("controls");
+    let addr = gateway.local_addr();
+    // A job that will not finish on its own.
+    let body = obj(vec![
+        ("width", Json::Num(16.0)),
+        ("depth", Json::Num(2.0)),
+        ("steps", Json::Num(5_000_000.0)),
+        ("batch", Json::Num(32.0)),
+        ("rows", Json::Num(256.0)),
+        ("momentum", Json::Num(0.0)),
+        ("checkpoint_every", Json::Num(0.0)),
+        ("target_ratio", Json::Num(1e-12)),
+        ("promote", Json::Str("manual".into())),
+    ])
+    .to_string();
+    let resp = one_shot(addr, "POST", "/v1/models/bg/train", body.as_bytes());
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let submitted = Json::parse(resp.body_str()).unwrap();
+    let id = submitted.get("job").and_then(|x| x.as_i64()).unwrap();
+
+    // Duplicate live job for the same model → 409.
+    let resp = one_shot(addr, "POST", "/v1/models/bg/train", body.as_bytes());
+    assert_eq!(resp.status, 409, "{}", resp.body_str());
+    // Bad spec → 400 (width not a power of two must not panic the plan).
+    let bad = obj(vec![("width", Json::Num(48.0))]).to_string();
+    let resp = one_shot(addr, "POST", "/v1/models/other/train", bad.as_bytes());
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    // Wrong method on the jobs listing → 405.
+    let resp = one_shot(addr, "POST", "/v1/jobs", b"");
+    assert_eq!(resp.status, 405, "{}", resp.body_str());
+
+    let resp = one_shot(addr, "POST", &format!("/v1/jobs/{id}/pause"), b"");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    assert_eq!(job_state(addr, id).0, "paused");
+    let resp = one_shot(addr, "POST", &format!("/v1/jobs/{id}/resume"), b"");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    assert_eq!(job_state(addr, id).0, "running");
+    let resp = one_shot(addr, "POST", &format!("/v1/jobs/{id}/cancel"), b"");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        let (state, _, _) = job_state(addr, id);
+        if state == "cancelled" {
+            break;
+        }
+        assert!(Instant::now() < deadline, "cancel never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    gateway.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

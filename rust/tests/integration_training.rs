@@ -10,7 +10,7 @@ use acdc::data::regression::RegressionTask;
 use acdc::data::synthimg::ImageCorpus;
 use acdc::runtime::Engine;
 use acdc::sell::init::DiagInit;
-use acdc::train::{CnnTrainer, CnnVariant, Fig3NativeTrainer, Fig3Trainer, StepDecay};
+use acdc::trainer::{CnnTrainer, CnnVariant, Fig3NativeTrainer, Fig3Trainer, StepDecay};
 
 #[test]
 fn fig3_artifact_identity_init_trains_k4() {

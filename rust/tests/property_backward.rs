@@ -139,3 +139,55 @@ fn dct_plan_is_power_of_two_only() {
         assert!(r.is_err(), "DctPlan::new({n}) unexpectedly succeeded");
     }
 }
+
+#[test]
+fn pooled_training_loss_is_bit_identical_to_serial_engine() {
+    // The trainer's hot path (`forward_train_pooled` → backward →
+    // update) fans panels across the thread pool; panel ranges are
+    // disjoint, so the pooled sweep must reproduce the serial engine's
+    // training loss TO THE BIT across batch shapes, including
+    // non-multiples of the 8-lane panel. A drift here would make
+    // training results depend on pool sizing.
+    use acdc::sell::acdc::AcdcCascade;
+    use acdc::sell::init::DiagInit;
+    use acdc::util::threadpool::ThreadPool;
+
+    let pool = ThreadPool::new(3);
+    for (n, k) in [(16usize, 2usize), (32, 3)] {
+        for rows in [MIN_SOA_ROWS, 7, 16, 33] {
+            let mut rng = Pcg32::seeded(9000 + (n * 7 + rows) as u64);
+            let cascade = AcdcCascade::linear(n, k, DiagInit::IDENTITY, &mut rng);
+            let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+            let target = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+
+            let loss_of = |pred: &Tensor| -> f64 {
+                let diff = pred.sub(&target);
+                let sum: f64 = diff.data().iter().map(|v| (*v as f64).powi(2)).sum();
+                sum / rows as f64
+            };
+            let (pred_serial, cache_serial) = cascade.forward_train(&x);
+            let (pred_pooled, cache_pooled) = cascade.forward_train_pooled(&x, &pool);
+            let (l_serial, l_pooled) = (loss_of(&pred_serial), loss_of(&pred_pooled));
+            assert_eq!(
+                l_serial.to_bits(),
+                l_pooled.to_bits(),
+                "n={n} k={k} rows={rows}: pooled loss {l_pooled} != serial {l_serial}"
+            );
+
+            // Gradients from the two caches agree bit-for-bit too (the
+            // backward itself runs on the serial engine in both cases).
+            let mut g = pred_serial.sub(&target);
+            g.scale(2.0 / rows as f32);
+            let (_, grads_serial) = cascade.backward(&cache_serial, &g);
+            let (_, grads_pooled) = cascade.backward(&cache_pooled, &g);
+            for (gs, gp) in grads_serial.iter().zip(&grads_pooled) {
+                for (a, b) in gs.a.iter().zip(&gp.a) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad a n={n} rows={rows}");
+                }
+                for (a, b) in gs.d.iter().zip(&gp.d) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "grad d n={n} rows={rows}");
+                }
+            }
+        }
+    }
+}
