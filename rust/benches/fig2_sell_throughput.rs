@@ -76,7 +76,7 @@ fn main() {
     }
     match engine_bench::check_acceptance(&erows) {
         Ok(()) => {
-            println!("acceptance: OK — serial batched engine ≥ 2x per-row at N=1024, batch=256")
+            println!("acceptance: OK — serial batched engine ≥ 1.2x per-row at N=1024, batch=256")
         }
         Err(e) => {
             println!("acceptance: FAILED — {e}");

@@ -65,6 +65,23 @@ fn main() {
         m.iters
     );
 
+    // 1b. Allocation-free request parsing (the keep-alive hot path).
+    let mut scratch = http::RequestScratch::new();
+    let m = bench.run("http.read_request_reusing", || {
+        let mut c = Cursor::new(&wire[..]);
+        match http::read_request_reusing(&mut c, 1 << 20, &mut scratch).unwrap() {
+            http::ScratchOutcome::Request => {
+                black_box(scratch.body.len());
+            }
+            other => panic!("{other:?}"),
+        }
+    });
+    println!(
+        "http request parse, reused scratch (zero-alloc): {} median ({} iters)",
+        fmt_ns(m.median_ns),
+        m.iters
+    );
+
     // 2. Admission control (token bucket + permit lifecycle).
     let registry = Registry::new();
     let admission = Arc::new(Admission::new(

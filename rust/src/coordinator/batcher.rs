@@ -97,23 +97,34 @@ impl BatchPolicy {
 /// them to the bounded worker channel (blocking there when every worker
 /// is busy, which propagates backpressure to the request queue). Returns
 /// when the request channel closes (flushing any remainder).
+///
+/// `recycle` receives emptied `requests` vectors back from the workers
+/// (a bounded array channel, so the handoff itself never allocates);
+/// steady-state batch formation therefore reuses a fixed pool of buffers
+/// instead of allocating one `Vec` per formed batch.
 pub fn run_batcher(
     policy: BatchPolicy,
     rx: Receiver<InferRequest>,
     tx: SyncSender<FormedBatch>,
+    recycle: Receiver<Vec<InferRequest>>,
 ) {
     let mut queue: Vec<InferRequest> = Vec::new();
+    let mut form = |queue: &mut Vec<InferRequest>, bucket: usize, take: usize, now: Instant| {
+        let mut requests = recycle.try_recv().unwrap_or_default();
+        requests.clear();
+        requests.extend(queue.drain(..take));
+        FormedBatch {
+            bucket,
+            requests,
+            formed_at: now,
+        }
+    };
     loop {
         let now = Instant::now();
         let decision = policy.decide(queue.len(), queue.first().map(|r| r.enqueued_at), now);
         match decision {
             Decision::Dispatch { bucket, take } => {
-                let rest = queue.split_off(take);
-                let batch = FormedBatch {
-                    bucket,
-                    requests: std::mem::replace(&mut queue, rest),
-                    formed_at: now,
-                };
+                let batch = form(&mut queue, bucket, take, now);
                 if tx.send(batch).is_err() {
                     return; // workers gone
                 }
@@ -135,12 +146,7 @@ pub fn run_batcher(
                     while !queue.is_empty() {
                         let take = queue.len().min(policy.max_bucket());
                         let bucket = policy.bucket_for(take).unwrap();
-                        let rest = queue.split_off(take);
-                        let batch = FormedBatch {
-                            bucket,
-                            requests: std::mem::replace(&mut queue, rest),
-                            formed_at: Instant::now(),
-                        };
+                        let batch = form(&mut queue, bucket, take, Instant::now());
                         if tx.send(batch).is_err() {
                             return;
                         }
@@ -154,6 +160,7 @@ pub fn run_batcher(
 
 #[cfg(test)]
 mod tests {
+    use super::super::request::Reply;
     use super::*;
     use std::sync::mpsc::{channel, sync_channel};
 
@@ -234,9 +241,9 @@ mod tests {
         (
             InferRequest {
                 id,
-                features: vec![0.0; 4],
+                features: super::super::request::Features::Owned(vec![0.0; 4]),
                 enqueued_at: Instant::now(),
-                reply: tx,
+                reply: Reply::Channel(tx),
             },
             rx,
         )
@@ -246,8 +253,9 @@ mod tests {
     fn batcher_thread_forms_deadline_batch() {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = sync_channel(16);
+        let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_millis(1));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
         let mut keep = vec![];
         for id in 0..3 {
             let (r, rx) = mk_req(id);
@@ -265,8 +273,9 @@ mod tests {
     fn batcher_thread_flushes_on_close() {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = sync_channel(16);
+        let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_secs(60)); // never deadline
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
         let mut keep = vec![];
         for id in 0..6 {
             let (r, rx) = mk_req(id);
@@ -284,8 +293,11 @@ mod tests {
     fn batcher_thread_dispatches_immediately_when_full() {
         let (req_tx, req_rx) = channel();
         let (batch_tx, batch_rx) = sync_channel(16);
+        let (rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![2], Duration::from_secs(60));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
+        // A recycled buffer round-trips back into batch formation.
+        rtx.send(Vec::with_capacity(2)).unwrap();
         let mut keep = vec![];
         for id in 0..4 {
             let (r, rx) = mk_req(id);

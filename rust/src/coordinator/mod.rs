@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 use crate::config::ServeConfig;
 use crate::metrics::Registry;
 use batcher::BatchPolicy;
-use request::{InferRequest, InferResponse};
+use request::{Features, InferRequest, InferResponse, Reply, ResponseSlot, RowRef};
 use worker::{ExecutorFactory, WorkerPool};
 
 /// Submission error (backpressure or shutdown).
@@ -73,15 +73,26 @@ impl Coordinator {
         // instead of letting formed batches pile up unboundedly; 2× the
         // pool keeps every worker busy while one batch is in flight.
         let (batch_tx, batch_rx) = sync_channel(cfg.workers.saturating_mul(2).max(1));
+        // Emptied request buffers flow back from the workers so batch
+        // formation reuses a fixed pool instead of allocating per batch
+        // (bounded array channel: the handoff itself never allocates).
+        let (recycle_tx, recycle_rx) =
+            sync_channel(cfg.workers.saturating_mul(2).saturating_add(2));
         let policy = BatchPolicy::new(
             cfg.buckets.clone(),
             Duration::from_micros(cfg.max_wait_us),
         );
         let batcher = std::thread::Builder::new()
             .name("acdc-batcher".into())
-            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx))
+            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx, recycle_rx))
             .expect("spawn batcher");
-        let pool = WorkerPool::spawn(cfg.workers, factory, batch_rx, Arc::clone(&metrics));
+        let pool = WorkerPool::spawn(
+            cfg.workers,
+            factory,
+            batch_rx,
+            Arc::clone(&metrics),
+            Some(recycle_tx),
+        );
         let accepted = metrics.counter("coordinator.accepted");
         let rejected = metrics.counter("coordinator.rejected");
         Coordinator {
@@ -110,19 +121,37 @@ impl Coordinator {
     pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
         assert_eq!(features.len(), self.width, "feature width mismatch");
         let (tx, rx) = std::sync::mpsc::channel();
-        let req = InferRequest {
+        self.enqueue(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            features,
+            features: Features::Owned(features),
             enqueued_at: Instant::now(),
-            reply: tx,
-        };
+            reply: Reply::Channel(tx),
+        })
+        .map(|()| rx)
+    }
+
+    /// Submit one arena row on the zero-allocation path: the worker copies
+    /// the input out of — and the output back into — the buffers behind
+    /// `row`, and signals `slot` (whose current sequence `row` must carry,
+    /// see [`ResponseSlot::issue`]). No allocation on success.
+    pub fn submit_slot(&self, row: RowRef, slot: &Arc<ResponseSlot>) -> Result<(), SubmitError> {
+        assert_eq!(row.len(), self.width, "feature width mismatch");
+        self.enqueue(InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features: Features::Borrowed(row),
+            enqueued_at: Instant::now(),
+            reply: Reply::Slot(Arc::clone(slot)),
+        })
+    }
+
+    fn enqueue(&self, req: InferRequest) -> Result<(), SubmitError> {
         let Some(req_tx) = &self.req_tx else {
             return Err(SubmitError::Closed);
         };
         match req_tx.try_send(req) {
             Ok(()) => {
                 self.accepted.inc();
-                Ok(rx)
+                Ok(())
             }
             Err(TrySendError::Full(_)) => {
                 self.rejected.inc();
@@ -177,8 +206,14 @@ mod tests {
         fn out_width(&self) -> usize {
             self.n
         }
-        fn execute(&mut self, _bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
-            Ok(padded.to_vec())
+        fn execute_into(
+            &mut self,
+            _bucket: usize,
+            padded: &[f32],
+            out: &mut [f32],
+        ) -> Result<(), String> {
+            out.copy_from_slice(padded);
+            Ok(())
         }
     }
 
@@ -272,9 +307,15 @@ mod tests {
             fn out_width(&self) -> usize {
                 1
             }
-            fn execute(&mut self, _b: usize, p: &[f32]) -> Result<Vec<f32>, String> {
+            fn execute_into(
+                &mut self,
+                _b: usize,
+                p: &[f32],
+                out: &mut [f32],
+            ) -> Result<(), String> {
                 std::thread::sleep(Duration::from_millis(50));
-                Ok(p.to_vec())
+                out.copy_from_slice(p);
+                Ok(())
             }
         }
         let metrics = Arc::new(Registry::new());
@@ -323,9 +364,15 @@ mod tests {
             fn out_width(&self) -> usize {
                 1
             }
-            fn execute(&mut self, _b: usize, p: &[f32]) -> Result<Vec<f32>, String> {
+            fn execute_into(
+                &mut self,
+                _b: usize,
+                p: &[f32],
+                out: &mut [f32],
+            ) -> Result<(), String> {
                 std::thread::sleep(Duration::from_millis(300));
-                Ok(p.to_vec())
+                out.copy_from_slice(p);
+                Ok(())
             }
         }
         let metrics = Arc::new(Registry::new());

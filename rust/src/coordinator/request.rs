@@ -1,10 +1,305 @@
 //! Request/response types flowing through the serving coordinator.
+//!
+//! Two request shapes share the pipeline:
+//!
+//! * **Owned + channel** — the legacy [`Features::Owned`] /
+//!   [`Reply::Channel`] pair: the row is a heap `Vec<f32>` and the answer
+//!   arrives on a per-request mpsc channel (`Coordinator::submit`).
+//! * **Borrowed + slot** — the zero-allocation gateway path
+//!   ([`Features::Borrowed`] / [`Reply::Slot`]): the row lives in a
+//!   connection-owned arena, referenced by a raw [`RowRef`]; the worker
+//!   copies the input out of — and writes the output back into — that
+//!   arena **under the slot's lock**, and completion is signalled through
+//!   a reusable [`ResponseSlot`] (condvar, no channel, no allocation).
+//!
+//! The slot protocol that makes the raw pointers sound: every use of a
+//! slot gets a fresh sequence number ([`ResponseSlot::issue`]); the worker
+//! touches the arena only while holding the slot lock *and* only if the
+//! sequence still matches and the use was not abandoned. The connection
+//! abandons outstanding uses ([`ResponseSlot::abandon`]) before reusing or
+//! growing its arena (timeout, shed, connection teardown), so a stale
+//! worker can never dereference a dangling pointer.
 
 use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 /// Unique request id.
 pub type RequestId = u64;
+
+/// The feature payload of one request row.
+#[derive(Debug)]
+pub enum Features {
+    /// Heap-owned row (the legacy `submit` path).
+    Owned(Vec<f32>),
+    /// Zero-copy view into a connection-owned arena; only dereferenced
+    /// under the paired [`ResponseSlot`]'s lock.
+    Borrowed(RowRef),
+}
+
+impl Features {
+    /// Row width.
+    pub fn len(&self) -> usize {
+        match self {
+            Features::Owned(v) => v.len(),
+            Features::Borrowed(r) => r.len,
+        }
+    }
+
+    /// Whether the row is empty (width 0 never occurs in practice).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Where a request's answer goes.
+#[derive(Debug)]
+pub enum Reply {
+    /// Per-request mpsc channel (legacy path).
+    Channel(Sender<InferResponse>),
+    /// Reusable completion slot (zero-allocation path).
+    Slot(Arc<ResponseSlot>),
+}
+
+/// Raw view of one arena row: input features plus the output destination.
+///
+/// Constructed only by [`RowRef::new`] (unsafe): the creator promises the
+/// pointed-to buffers stay valid and unaliased until the paired slot use
+/// is completed or abandoned.
+#[derive(Debug)]
+pub struct RowRef {
+    ptr: *const f32,
+    out: *mut f32,
+    len: usize,
+    /// Capacity of the output destination (an output row wider than this
+    /// is answered with an error instead of written).
+    out_cap: usize,
+    /// The slot sequence number this use was issued under.
+    seq: u64,
+}
+
+// SAFETY: the pointers are only dereferenced while holding the paired
+// slot's lock with a matching sequence number (see the module docs); the
+// issuing connection keeps the buffers alive until then.
+unsafe impl Send for RowRef {}
+
+impl RowRef {
+    /// Build a row view over caller-owned buffers.
+    ///
+    /// # Safety
+    /// `ptr[..len]` and `out[..out_cap]` must stay valid, disjoint, and
+    /// unwritten (resp. unread) by the caller until the slot use `seq`
+    /// (from [`ResponseSlot::issue`]) is observed done or abandoned.
+    pub unsafe fn new(
+        ptr: *const f32,
+        len: usize,
+        out: *mut f32,
+        out_cap: usize,
+        seq: u64,
+    ) -> RowRef {
+        RowRef {
+            ptr,
+            out,
+            len,
+            out_cap,
+            seq,
+        }
+    }
+
+    /// Row width.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the row is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// How one slot use ended.
+#[derive(Debug)]
+enum SlotOutcome {
+    /// Not completed yet.
+    Pending,
+    /// Output row of this length written into the arena.
+    Ok(usize),
+    /// Executor (or pipeline) error.
+    Err(String),
+}
+
+#[derive(Debug)]
+struct SlotState {
+    seq: u64,
+    done: bool,
+    abandoned: bool,
+    queue_us: u64,
+    execute_us: u64,
+    batch_size: usize,
+    outcome: SlotOutcome,
+}
+
+/// A reusable completion cell for the zero-allocation request path: one
+/// mutex + condvar reused for every request a connection serves (via
+/// [`ResponseSlot::issue`]'s sequence numbers), instead of a fresh mpsc
+/// channel per request.
+#[derive(Debug)]
+pub struct ResponseSlot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+/// Answer metadata read back from a completed slot; the output row itself
+/// is already in the issuing connection's arena.
+#[derive(Debug)]
+pub struct SlotReply {
+    /// Time spent queued before batch formation (µs).
+    pub queue_us: u64,
+    /// Batch execution wall time (µs).
+    pub execute_us: u64,
+    /// Bucket size this row was served in.
+    pub batch_size: usize,
+    /// Output row length written into the arena, or the error.
+    pub output: Result<usize, String>,
+}
+
+impl Default for ResponseSlot {
+    fn default() -> Self {
+        ResponseSlot {
+            state: Mutex::new(SlotState {
+                seq: 0,
+                done: true,
+                abandoned: false,
+                queue_us: 0,
+                execute_us: 0,
+                batch_size: 0,
+                outcome: SlotOutcome::Pending,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl ResponseSlot {
+    /// Fresh slot (idle until the first [`ResponseSlot::issue`]).
+    pub fn new() -> ResponseSlot {
+        Self::default()
+    }
+
+    /// Begin a new use: resets the slot and returns the sequence number
+    /// the paired [`RowRef`] must carry. Stale completions from earlier
+    /// sequences are ignored.
+    pub fn issue(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        s.seq += 1;
+        s.done = false;
+        s.abandoned = false;
+        s.queue_us = 0;
+        s.execute_us = 0;
+        s.batch_size = 0;
+        s.outcome = SlotOutcome::Pending;
+        s.seq
+    }
+
+    /// Abandon use `seq`: after this returns, the worker will never touch
+    /// the arena for that use, so the issuing connection may reuse or
+    /// free its buffers. No-op if the use already completed.
+    pub fn abandon(&self, seq: u64) {
+        let mut s = self.state.lock().unwrap();
+        if s.seq == seq && !s.done {
+            s.abandoned = true;
+        }
+    }
+
+    /// Block until use `seq` completes or `deadline` passes. `None` on
+    /// timeout (the caller must then [`ResponseSlot::abandon`] before
+    /// reusing its arena).
+    pub fn wait(&self, seq: u64, deadline: Instant) -> Option<SlotReply> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.seq == seq && s.done {
+                let output = match std::mem::replace(&mut s.outcome, SlotOutcome::Pending) {
+                    SlotOutcome::Ok(len) => Ok(len),
+                    SlotOutcome::Err(e) => Err(e),
+                    SlotOutcome::Pending => Err("slot completed without outcome".to_string()),
+                };
+                return Some(SlotReply {
+                    queue_us: s.queue_us,
+                    execute_us: s.execute_us,
+                    batch_size: s.batch_size,
+                    output,
+                });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Worker side: copy the input row out of the arena into `dst`.
+    /// Returns false (leaving `dst` untouched beyond zeros the caller put
+    /// there) when the use was abandoned or superseded.
+    pub fn copy_input(&self, row: &RowRef, dst: &mut [f32]) -> bool {
+        let s = self.state.lock().unwrap();
+        if s.seq != row.seq || s.abandoned {
+            return false;
+        }
+        debug_assert_eq!(dst.len(), row.len);
+        // SAFETY: seq matches and the use is not abandoned, so the issuer
+        // is still keeping `ptr[..len]` alive (module-docs protocol), and
+        // it never writes the buffer while the use is outstanding.
+        unsafe {
+            std::ptr::copy_nonoverlapping(row.ptr, dst.as_mut_ptr(), row.len.min(dst.len()));
+        }
+        true
+    }
+
+    /// Worker side: finish use `row.seq` — write the output row into the
+    /// arena (when it fits; a wider row becomes an error) and publish the
+    /// metadata. Stale or abandoned uses are dropped silently.
+    pub fn complete(
+        &self,
+        row: &RowRef,
+        output: Result<&[f32], &str>,
+        queue_us: u64,
+        execute_us: u64,
+        batch_size: usize,
+    ) {
+        let mut s = self.state.lock().unwrap();
+        if s.seq != row.seq || s.abandoned {
+            return;
+        }
+        s.outcome = match output {
+            Ok(vals) => {
+                if vals.len() <= row.out_cap {
+                    // SAFETY: seq matches and the use is not abandoned, so
+                    // `out[..out_cap]` is alive and exclusively ours (the
+                    // issuer neither reads nor writes it until `done`).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(vals.as_ptr(), row.out, vals.len());
+                    }
+                    SlotOutcome::Ok(vals.len())
+                } else {
+                    SlotOutcome::Err(format!(
+                        "output row ({} values) exceeds the request arena ({})",
+                        vals.len(),
+                        row.out_cap
+                    ))
+                }
+            }
+            Err(e) => SlotOutcome::Err(e.to_string()),
+        };
+        s.queue_us = queue_us;
+        s.execute_us = execute_us;
+        s.batch_size = batch_size;
+        s.done = true;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
 
 /// An inference request: a feature row destined for a SELL classifier.
 #[derive(Debug)]
@@ -12,14 +307,14 @@ pub struct InferRequest {
     /// Unique id assigned at submit time.
     pub id: RequestId,
     /// Feature vector (length = model width N).
-    pub features: Vec<f32>,
+    pub features: Features,
     /// Enqueue timestamp for latency accounting.
     pub enqueued_at: Instant,
     /// Where the response is delivered.
-    pub reply: Sender<InferResponse>,
+    pub reply: Reply,
 }
 
-/// The coordinator's answer.
+/// The coordinator's answer (legacy channel path).
 #[derive(Debug, Clone)]
 pub struct InferResponse {
     /// The request this answers.
@@ -34,7 +329,9 @@ pub struct InferResponse {
     pub batch_size: usize,
 }
 
-/// A batch formed by the batcher, ready for a worker.
+/// A batch formed by the batcher, ready for a worker. The `requests`
+/// vector is drawn from — and recycled back into — the coordinator's
+/// buffer pool, so steady-state batch formation allocates nothing.
 #[derive(Debug)]
 pub struct FormedBatch {
     /// Bucket capacity chosen (rows are padded up to this).
@@ -50,61 +347,115 @@ impl FormedBatch {
     pub fn occupancy(&self) -> f64 {
         self.requests.len() as f64 / self.bucket as f64
     }
+}
 
-    /// Flatten request rows into a padded [bucket, n] row-major buffer.
-    pub fn padded_features(&self, n: usize) -> Vec<f32> {
-        let mut buf = vec![0.0f32; self.bucket * n];
-        for (i, req) in self.requests.iter().enumerate() {
-            assert_eq!(req.features.len(), n, "request width mismatch");
-            buf[i * n..(i + 1) * n].copy_from_slice(&req.features);
-        }
-        buf
-    }
+/// Convenience: wait with a relative timeout (tests).
+pub fn wait_slot(slot: &ResponseSlot, seq: u64, timeout: Duration) -> Option<SlotReply> {
+    slot.wait(seq, Instant::now() + timeout)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
-
-    type RespRx = std::sync::mpsc::Receiver<InferResponse>;
-
-    fn req(id: u64, features: Vec<f32>) -> (InferRequest, RespRx) {
-        let (tx, rx) = channel();
-        (
-            InferRequest {
-                id,
-                features,
-                enqueued_at: Instant::now(),
-                reply: tx,
-            },
-            rx,
-        )
-    }
 
     #[test]
-    fn occupancy_and_padding() {
-        let (r1, _rx1) = req(1, vec![1.0, 2.0]);
-        let (r2, _rx2) = req(2, vec![3.0, 4.0]);
+    fn occupancy() {
         let batch = FormedBatch {
             bucket: 4,
-            requests: vec![r1, r2],
+            requests: vec![
+                InferRequest {
+                    id: 1,
+                    features: Features::Owned(vec![1.0, 2.0]),
+                    enqueued_at: Instant::now(),
+                    reply: Reply::Channel(std::sync::mpsc::channel().0),
+                },
+                InferRequest {
+                    id: 2,
+                    features: Features::Owned(vec![3.0, 4.0]),
+                    enqueued_at: Instant::now(),
+                    reply: Reply::Channel(std::sync::mpsc::channel().0),
+                },
+            ],
             formed_at: Instant::now(),
         };
         assert_eq!(batch.occupancy(), 0.5);
-        let padded = batch.padded_features(2);
-        assert_eq!(padded, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(batch.requests[0].features.len(), 2);
     }
 
     #[test]
-    #[should_panic]
-    fn padded_features_rejects_wrong_width() {
-        let (r1, _rx) = req(1, vec![1.0, 2.0, 3.0]);
-        let batch = FormedBatch {
-            bucket: 1,
-            requests: vec![r1],
-            formed_at: Instant::now(),
-        };
-        batch.padded_features(2);
+    fn slot_roundtrip_copies_through_arena() {
+        let slot = Arc::new(ResponseSlot::new());
+        let input = [1.0f32, 2.0, 3.0];
+        let mut output = [0.0f32; 3];
+        let seq = slot.issue();
+        // SAFETY: buffers outlive the completed use below.
+        let row = unsafe { RowRef::new(input.as_ptr(), 3, output.as_mut_ptr(), 3, seq) };
+        let mut dst = [0.0f32; 3];
+        assert!(slot.copy_input(&row, &mut dst));
+        assert_eq!(dst, input);
+        slot.complete(&row, Ok(&[9.0, 8.0, 7.0]), 5, 11, 4);
+        let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
+        assert_eq!(reply.output.unwrap(), 3);
+        assert_eq!((reply.queue_us, reply.execute_us, reply.batch_size), (5, 11, 4));
+        assert_eq!(output, [9.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn abandoned_use_blocks_arena_access() {
+        let slot = Arc::new(ResponseSlot::new());
+        let input = [1.0f32];
+        let mut output = [0.0f32];
+        let seq = slot.issue();
+        let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 1, seq) };
+        slot.abandon(seq);
+        let mut dst = [0.0f32];
+        assert!(!slot.copy_input(&row, &mut dst), "abandoned input must not be read");
+        slot.complete(&row, Ok(&[5.0]), 0, 0, 1);
+        assert_eq!(output, [0.0], "abandoned output must not be written");
+        assert!(wait_slot(&slot, seq, Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn stale_sequence_is_ignored() {
+        let slot = Arc::new(ResponseSlot::new());
+        let input = [1.0f32];
+        let mut output = [0.0f32];
+        let old_seq = slot.issue();
+        let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 1, old_seq) };
+        let new_seq = slot.issue(); // reuse supersedes the old use
+        slot.complete(&row, Ok(&[5.0]), 0, 0, 1);
+        assert_eq!(output, [0.0], "stale completion must not touch the arena");
+        assert!(wait_slot(&slot, new_seq, Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn oversized_output_becomes_error_not_overflow() {
+        let slot = Arc::new(ResponseSlot::new());
+        let input = [1.0f32];
+        let mut output = [0.0f32; 2];
+        let seq = slot.issue();
+        let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 2, seq) };
+        slot.complete(&row, Ok(&[1.0, 2.0, 3.0]), 0, 0, 1);
+        let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
+        assert!(reply.output.unwrap_err().contains("exceeds"));
+        assert_eq!(output, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn wait_wakes_from_another_thread() {
+        let slot = Arc::new(ResponseSlot::new());
+        let seq = slot.issue();
+        let input = vec![2.0f32];
+        let mut output = vec![0.0f32];
+        let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 1, seq) };
+        let slot2 = Arc::clone(&slot);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            slot2.complete(&row, Ok(&[4.0]), 1, 2, 1);
+        });
+        let reply = wait_slot(&slot, seq, Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.output.unwrap(), 1);
+        t.join().unwrap();
+        assert_eq!(output[0], 4.0);
     }
 }

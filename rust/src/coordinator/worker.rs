@@ -5,24 +5,38 @@
 //! worker's thread — channels only ever carry plain data. This is the
 //! one-client-per-worker pattern; with the CPU plugin each client shares
 //! the host's cores, and the pool size bounds concurrent executions.
+//!
+//! The per-batch hot loop is allocation-free in steady state: the padded
+//! input and the output live in worker-thread buffers that are grown once
+//! and reused, executors write into the caller-provided output slice
+//! ([`BatchExecutor::execute_into`]), zero-alloc requests get their rows
+//! copied in/out of the connection arena under their slot locks, and the
+//! emptied `requests` vector is recycled back to the batcher.
 
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::request::{FormedBatch, InferResponse};
+use super::request::{Features, FormedBatch, InferRequest, InferResponse, Reply};
 use crate::metrics::Registry;
 
 /// Executes one padded batch: input is the padded [bucket, n] row-major
-/// feature buffer; output must be `bucket` rows of model output.
+/// feature buffer; the executor writes `bucket × out_width` outputs into
+/// `out` (sized by the caller).
 pub trait BatchExecutor {
     /// Model input width N.
     fn width(&self) -> usize;
     /// Output width per row.
     fn out_width(&self) -> usize;
-    /// Run the bucket-sized program.
-    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String>;
+    /// Run the bucket-sized program, writing into `out`
+    /// (`bucket × out_width` f32, pre-zeroed by the caller).
+    fn execute_into(
+        &mut self,
+        bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String>;
 }
 
 /// Factory invoked on each worker thread to build its thread-local
@@ -37,12 +51,15 @@ pub struct WorkerPool {
 impl WorkerPool {
     /// Spawn `n` workers. Each calls `factory()` locally; a factory error
     /// makes the worker answer every batch with that error (the system
-    /// degrades loudly rather than hanging).
+    /// degrades loudly rather than hanging). `recycle` hands emptied
+    /// request buffers back to the batcher (None in tests that drive the
+    /// batch channel directly).
     pub fn spawn(
         n: usize,
         factory: ExecutorFactory,
         rx: Receiver<FormedBatch>,
         metrics: Arc<Registry>,
+        recycle: Option<SyncSender<Vec<InferRequest>>>,
     ) -> WorkerPool {
         let rx = Arc::new(Mutex::new(rx));
         let handles = (0..n.max(1))
@@ -50,9 +67,10 @@ impl WorkerPool {
                 let rx = Arc::clone(&rx);
                 let factory = Arc::clone(&factory);
                 let metrics = Arc::clone(&metrics);
+                let recycle = recycle.clone();
                 std::thread::Builder::new()
                     .name(format!("acdc-serve-{wi}"))
-                    .spawn(move || worker_loop(factory, rx, metrics))
+                    .spawn(move || worker_loop(factory, rx, metrics, recycle))
                     .expect("spawn worker")
             })
             .collect();
@@ -71,6 +89,7 @@ fn worker_loop(
     factory: ExecutorFactory,
     rx: Arc<Mutex<Receiver<FormedBatch>>>,
     metrics: Arc<Registry>,
+    recycle: Option<SyncSender<Vec<InferRequest>>>,
 ) {
     let mut executor = factory();
     let batches = metrics.counter("worker.batches");
@@ -79,22 +98,67 @@ fn worker_loop(
     let errors = metrics.counter("worker.errors");
     let exec_hist = metrics.histogram("worker.execute_ns");
     let queue_hist = metrics.histogram("worker.queue_wait_ns");
+    // Thread-persistent batch buffers: grown to the largest bucket seen,
+    // then reused forever — no per-batch allocation.
+    let mut padded: Vec<f32> = Vec::new();
+    let mut outbuf: Vec<f32> = Vec::new();
     loop {
         let batch = {
             let guard = rx.lock().unwrap();
             guard.recv()
         };
         let Ok(batch) = batch else { return };
+        let FormedBatch {
+            bucket,
+            mut requests,
+            formed_at,
+        } = batch;
         batches.inc();
-        rows.add(batch.requests.len() as u64);
-        padded_rows.add((batch.bucket - batch.requests.len()) as u64);
+        rows.add(requests.len() as u64);
+        padded_rows.add((bucket - requests.len()) as u64);
 
         let t0 = Instant::now();
-        let result: Result<Vec<f32>, String> = match &mut executor {
+        let mut out_w = 0;
+        let result: Result<(), String> = match &mut executor {
             Ok(exe) => {
                 let n = exe.width();
-                let padded = batch.padded_features(n);
-                exe.execute(batch.bucket, &padded)
+                out_w = exe.out_width();
+                padded.clear();
+                padded.resize(bucket * n, 0.0);
+                let mut width_err = None;
+                for (i, req) in requests.iter().enumerate() {
+                    let dst = &mut padded[i * n..(i + 1) * n];
+                    match &req.features {
+                        Features::Owned(v) => {
+                            if v.len() == n {
+                                dst.copy_from_slice(v);
+                            } else {
+                                width_err =
+                                    Some(format!("request width {} != model width {n}", v.len()));
+                            }
+                        }
+                        Features::Borrowed(r) => {
+                            if r.len() == n {
+                                if let Reply::Slot(slot) = &req.reply {
+                                    // Abandoned rows stay zero — their
+                                    // issuer is gone and never reads back.
+                                    let _ = slot.copy_input(r, dst);
+                                }
+                            } else {
+                                width_err =
+                                    Some(format!("request width {} != model width {n}", r.len()));
+                            }
+                        }
+                    }
+                }
+                match width_err {
+                    Some(e) => Err(e),
+                    None => {
+                        outbuf.clear();
+                        outbuf.resize(bucket * out_w, 0.0);
+                        exe.execute_into(bucket, &padded, &mut outbuf)
+                    }
+                }
             }
             Err(e) => Err(format!("executor init failed: {e}")),
         };
@@ -104,31 +168,48 @@ fn worker_loop(
             errors.inc();
         }
 
-        let out_w = executor.as_ref().map(|e| e.out_width()).unwrap_or(0);
-        for (i, req) in batch.requests.iter().enumerate() {
-            let queue_us = batch
-                .formed_at
+        for (i, req) in requests.iter().enumerate() {
+            let queue_us = formed_at
                 .saturating_duration_since(req.enqueued_at)
                 .as_micros() as u64;
             queue_hist.record_ns(queue_us * 1_000);
-            let output = match &result {
-                Ok(all) => {
+            let row_out: Result<&[f32], &str> = match &result {
+                Ok(()) => {
                     let start = i * out_w;
-                    if start + out_w <= all.len() {
-                        Ok(all[start..start + out_w].to_vec())
+                    if start + out_w <= outbuf.len() {
+                        Ok(&outbuf[start..start + out_w])
                     } else {
-                        Err("executor returned short output".to_string())
+                        Err("executor returned short output")
                     }
                 }
-                Err(e) => Err(e.clone()),
+                Err(e) => Err(e.as_str()),
             };
-            let _ = req.reply.send(InferResponse {
-                id: req.id,
-                output,
-                queue_us,
-                execute_us,
-                batch_size: batch.bucket,
-            });
+            match &req.reply {
+                Reply::Channel(tx) => {
+                    let output = match row_out {
+                        Ok(vals) => Ok(vals.to_vec()),
+                        Err(e) => Err(e.to_string()),
+                    };
+                    let _ = tx.send(InferResponse {
+                        id: req.id,
+                        output,
+                        queue_us,
+                        execute_us,
+                        batch_size: bucket,
+                    });
+                }
+                Reply::Slot(slot) => {
+                    if let Features::Borrowed(r) = &req.features {
+                        slot.complete(r, row_out, queue_us, execute_us, bucket);
+                    }
+                }
+            }
+        }
+        // Recycle the emptied buffer to the batcher; if its pool is full
+        // the Vec simply drops (a dealloc, never an alloc).
+        requests.clear();
+        if let Some(recycle) = &recycle {
+            let _ = recycle.try_send(requests);
         }
     }
 }
@@ -139,11 +220,26 @@ fn worker_loop(
 /// Buckets run through the batched SoA ACDC engine
 /// ([`crate::dct::batch`]); large buckets additionally fan panels out
 /// across the process-wide [`crate::util::threadpool::global`] pool, so
-/// every serving worker shares one set of compute threads.
+/// every serving worker shares one set of compute threads. Small buckets
+/// run serially through the worker-local [`crate::sell::acdc::CascadeScratch`]
+/// — the steady-state path performs no allocation at all.
 pub struct NativeCascadeExecutor {
     /// The cascade evaluated for each batch (cheap to clone per worker —
     /// all layers share one cached plan).
     pub cascade: crate::sell::acdc::AcdcCascade,
+    /// Worker-local reusable forward buffers.
+    scratch: crate::sell::acdc::CascadeScratch,
+}
+
+impl NativeCascadeExecutor {
+    /// Executor over `cascade` with fresh (lazily grown) scratch.
+    pub fn new(cascade: crate::sell::acdc::AcdcCascade) -> NativeCascadeExecutor {
+        let n = cascade.n();
+        NativeCascadeExecutor {
+            cascade,
+            scratch: crate::sell::acdc::CascadeScratch::new(n, 1),
+        }
+    }
 }
 
 impl BatchExecutor for NativeCascadeExecutor {
@@ -155,7 +251,12 @@ impl BatchExecutor for NativeCascadeExecutor {
         self.cascade.n()
     }
 
-    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute_into(
+        &mut self,
+        bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
         let n = self.width();
         if padded.len() != bucket * n {
             return Err(format!(
@@ -163,14 +264,23 @@ impl BatchExecutor for NativeCascadeExecutor {
                 padded.len()
             ));
         }
-        let x = crate::tensor::Tensor::from_vec(&[bucket, n], padded.to_vec());
-        // Large buckets amortize pool dispatch; small ones stay serial.
+        if out.len() != bucket * n {
+            return Err(format!(
+                "output buffer {} != bucket {bucket} × n {n}",
+                out.len()
+            ));
+        }
+        // Large buckets amortize pool dispatch; small ones stay serial
+        // (and allocation-free through the worker-local scratch).
         if bucket >= 32 {
             let pool = crate::util::threadpool::global();
-            Ok(self.cascade.forward_pooled(&x, pool).into_vec())
+            let x = crate::tensor::Tensor::from_vec(&[bucket, n], padded.to_vec());
+            out.copy_from_slice(self.cascade.forward_pooled(&x, pool).data());
         } else {
-            Ok(self.cascade.forward(&x).into_vec())
+            self.cascade
+                .forward_rows_into(padded, bucket, out, &mut self.scratch);
         }
+        Ok(())
     }
 }
 
@@ -192,9 +302,17 @@ mod tests {
         fn out_width(&self) -> usize {
             self.n
         }
-        fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+        fn execute_into(
+            &mut self,
+            bucket: usize,
+            padded: &[f32],
+            out: &mut [f32],
+        ) -> Result<(), String> {
             assert_eq!(padded.len(), bucket * self.n);
-            Ok(padded.iter().map(|v| v * 2.0).collect())
+            for (o, v) in out.iter_mut().zip(padded) {
+                *o = v * 2.0;
+            }
+            Ok(())
         }
     }
 
@@ -210,9 +328,9 @@ mod tests {
             let (rtx, rrx) = channel();
             requests.push(InferRequest {
                 id,
-                features: vec![id as f32; n],
+                features: Features::Owned(vec![id as f32; n]),
                 enqueued_at: Instant::now(),
-                reply: rtx,
+                reply: Reply::Channel(rtx),
             });
             rxs.push(rrx);
         }
@@ -231,7 +349,7 @@ mod tests {
         let metrics = Arc::new(Registry::new());
         let factory: ExecutorFactory =
             Arc::new(|| Ok(Box::new(DoubleExecutor { n: 3 }) as Box<dyn BatchExecutor>));
-        let pool = WorkerPool::spawn(2, factory, brx, Arc::clone(&metrics));
+        let pool = WorkerPool::spawn(2, factory, brx, Arc::clone(&metrics), None);
         let rxs = submit(&btx, &[1, 2, 3], 4, 3);
         for (i, rx) in rxs.iter().enumerate() {
             let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -251,13 +369,52 @@ mod tests {
         let (btx, brx) = channel();
         let metrics = Arc::new(Registry::new());
         let factory: ExecutorFactory = Arc::new(|| Err("no artifacts".to_string()));
-        let pool = WorkerPool::spawn(1, factory, brx, Arc::clone(&metrics));
+        let pool = WorkerPool::spawn(1, factory, brx, Arc::clone(&metrics), None);
         let rxs = submit(&btx, &[9], 1, 2);
         let resp = rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
         assert!(resp.output.unwrap_err().contains("no artifacts"));
         drop(btx);
         pool.join();
         assert_eq!(metrics.counter("worker.errors").get(), 1);
+    }
+
+    #[test]
+    fn slot_requests_complete_through_the_arena() {
+        use crate::coordinator::request::{ResponseSlot, RowRef};
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Registry::new());
+        let (rec_tx, rec_rx) = std::sync::mpsc::sync_channel(2);
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(DoubleExecutor { n: 2 }) as Box<dyn BatchExecutor>));
+        let pool = WorkerPool::spawn(1, factory, brx, Arc::clone(&metrics), Some(rec_tx));
+        let slot = Arc::new(ResponseSlot::new());
+        let input = vec![3.0f32, 4.0];
+        let mut output = vec![0.0f32; 2];
+        let seq = slot.issue();
+        // SAFETY: input/output outlive the wait below.
+        let row = unsafe { RowRef::new(input.as_ptr(), 2, output.as_mut_ptr(), 2, seq) };
+        btx.send(FormedBatch {
+            bucket: 1,
+            requests: vec![InferRequest {
+                id: 7,
+                features: Features::Borrowed(row),
+                enqueued_at: Instant::now(),
+                reply: Reply::Slot(Arc::clone(&slot)),
+            }],
+            formed_at: Instant::now(),
+        })
+        .unwrap();
+        let reply = slot
+            .wait(seq, Instant::now() + Duration::from_secs(2))
+            .expect("slot answered");
+        assert_eq!(reply.output.unwrap(), 2);
+        assert_eq!(reply.batch_size, 1);
+        assert_eq!(output, vec![6.0, 8.0]);
+        // The emptied request buffer came back for recycling.
+        let recycled = rec_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(recycled.is_empty());
+        drop(btx);
+        pool.join();
     }
 
     #[test]
@@ -269,11 +426,10 @@ mod tests {
             crate::sell::init::DiagInit::CAFFENET,
             &mut rng,
         );
-        let mut exe = NativeCascadeExecutor {
-            cascade: cascade.clone(),
-        };
+        let mut exe = NativeCascadeExecutor::new(cascade.clone());
         let x = crate::tensor::Tensor::from_vec(&[4, 16], rng.normal_vec(64, 0.0, 1.0));
-        let out = exe.execute(4, x.data()).unwrap();
+        let mut out = vec![0.0f32; 64];
+        exe.execute_into(4, x.data(), &mut out).unwrap();
         let want = cascade.forward(&x);
         assert_eq!(out, want.data());
     }
@@ -284,7 +440,7 @@ mod tests {
         let metrics = Arc::new(Registry::new());
         let factory: ExecutorFactory =
             Arc::new(|| Ok(Box::new(DoubleExecutor { n: 2 }) as Box<dyn BatchExecutor>));
-        let pool = WorkerPool::spawn(3, factory, brx, Arc::clone(&metrics));
+        let pool = WorkerPool::spawn(3, factory, brx, Arc::clone(&metrics), None);
         let mut all = vec![];
         for b in 0..10u64 {
             all.extend(submit(&btx, &[b * 10, b * 10 + 1], 2, 2));

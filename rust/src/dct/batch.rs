@@ -13,18 +13,25 @@
 //!   a time. Each panel is transposed into *structure-of-arrays* lanes:
 //!   frequency bin `k` of all lanes lives contiguously at
 //!   `buf[k*LANES .. (k+1)*LANES]`. Every inner loop of the transform then
-//!   runs over the lane dimension with unit stride — trivially
-//!   auto-vectorizable, and each twiddle load is amortized over [`LANES`]
-//!   rows instead of one.
-//! * **Fused Makhoul DCT** — the even/odd Makhoul reorder is folded into
-//!   the transpose (pack/unpack), so the panel is read once and written
-//!   once. One radix-2 FFT over the lanes replaces [`LANES`] scalar FFTs.
+//!   runs over the lane dimension with unit stride — one 256-bit vector
+//!   register per lane block — and each twiddle load is amortized over
+//!   [`LANES`] rows instead of one.
+//! * **Real-FFT Makhoul path** — N real inputs are packed into an **N/2**
+//!   complex FFT (`z[j] = v[2j] + i·v[2j+1]`, [`crate::dct::fft::RealFftPlan`])
+//!   with an O(N) un-twist fused into the DCT twiddle stages, halving the
+//!   butterfly count and the panel scratch traffic of the previous
+//!   full-size complex path. The Makhoul even/odd reorder rides the
+//!   pack/unpack transpose through the plan's source-index table.
 //! * **Fused `A`/`D`/bias** — [`BatchEngine::acdc_rows`] executes a whole
 //!   `ACDC⁻¹` layer (`y = ((x ⊙ a)·C ⊙ d + bias)·Cᵀ`): the `a` scale rides
-//!   the input pack, and `d`/`bias` ride the single twiddle stage between
-//!   the forward post-twiddle and the inverse pre-twiddle. Intermediates
-//!   never leave the panel scratch, so main memory sees exactly one load
-//!   and one store per panel.
+//!   the input pack, and `d`/`bias` ride the single twist stage between
+//!   the forward and inverse half-size FFTs. Intermediates never leave
+//!   the panel scratch, so main memory sees exactly one load and one
+//!   store per panel.
+//! * **Runtime SIMD dispatch** — the FFT butterfly and twist stages run
+//!   through [`crate::dct::simd`]: explicit AVX2 kernels behind a one-time
+//!   `is_x86_feature_detected!` check, with the portable 8-wide loops as
+//!   the mandatory (bit-identical) fallback; `ACDC_SIMD=scalar` forces it.
 //! * **Panel parallelism** — [`BatchEngine::acdc_rows_parallel`] splits
 //!   panels across the shared [`crate::util::threadpool`], the serving
 //!   pool all SELL executors already use.
@@ -36,12 +43,13 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
+use super::simd::{self, Dispatch, RealStage};
 use super::DctPlan;
 use crate::util::threadpool::{split_ranges, ThreadPool};
 
 /// Rows per SoA panel. Eight f32 lanes fill one 256-bit vector register;
-/// the panel scratch for N=8192 (3 buffers × 8 lanes × 4 B) stays inside
-/// L2. Exposed so callers (and the fastfood FWHT path) can size batches.
+/// the panel scratch for N=8192 (2×N/2 + N lanes × 4 B) stays inside L2.
+/// Exposed so callers (and the fastfood FWHT path) can size batches.
 pub const LANES: usize = 8;
 
 /// Below this many rows the scalar pair path (`DctPlan::dct2_pair`) wins:
@@ -86,24 +94,37 @@ impl PlanCache {
     }
 }
 
-/// Reusable per-panel scratch: three SoA buffers of `n × LANES` f32.
+/// Reusable per-panel scratch: two half-size SoA spectrum buffers
+/// (`n/2 × LANES` each, the packed complex lanes) plus one full-size
+/// staging buffer (`n × LANES`, the spectral-domain lanes).
 ///
-/// Allocated once per batch call (not per row, not per panel) and reused
-/// across every panel, so the hot loop performs no allocation.
+/// Allocate once and reuse across calls via the `*_with_scratch` drivers
+/// — the serving executors hold one per worker thread so the steady-state
+/// hot path performs no allocation at all.
 #[derive(Debug)]
 pub struct PanelScratch {
-    re: Vec<f32>,
-    im: Vec<f32>,
+    n: usize,
+    zre: Vec<f32>,
+    zim: Vec<f32>,
     t: Vec<f32>,
 }
 
 impl PanelScratch {
     /// Scratch for panels of size `n`.
     pub fn new(n: usize) -> PanelScratch {
+        let h = (n / 2).max(1);
         PanelScratch {
-            re: vec![0.0; n * LANES],
-            im: vec![0.0; n * LANES],
+            n,
+            zre: vec![0.0; h * LANES],
+            zim: vec![0.0; h * LANES],
             t: vec![0.0; n * LANES],
+        }
+    }
+
+    /// Grow (never shrink) to serve panels of size `n`.
+    pub fn ensure(&mut self, n: usize) {
+        if n > self.n {
+            *self = PanelScratch::new(n);
         }
     }
 }
@@ -124,12 +145,20 @@ impl PanelScratch {
 #[derive(Debug, Clone)]
 pub struct BatchEngine {
     plan: Arc<DctPlan>,
+    dispatch: &'static Dispatch,
 }
 
 impl BatchEngine {
-    /// Engine over an existing plan handle.
+    /// Engine over an existing plan handle, using the process-wide
+    /// [`simd::active`] kernel dispatch.
     pub fn new(plan: Arc<DctPlan>) -> BatchEngine {
-        BatchEngine { plan }
+        BatchEngine::with_dispatch(plan, simd::active())
+    }
+
+    /// Engine pinned to an explicit kernel arm ([`simd::scalar`] /
+    /// [`simd::avx2`]) — tests and benches compare arms through this.
+    pub fn with_dispatch(plan: Arc<DctPlan>, dispatch: &'static Dispatch) -> BatchEngine {
+        BatchEngine { plan, dispatch }
     }
 
     /// Engine over the process-wide cached plan for `n`.
@@ -147,18 +176,30 @@ impl BatchEngine {
         &self.plan
     }
 
+    /// The kernel arm this engine runs (`"scalar"` or `"avx2"`).
+    pub fn dispatch_name(&self) -> &'static str {
+        self.dispatch.name()
+    }
+
     // -- batch drivers ------------------------------------------------------
 
     /// Orthonormal DCT-II of every row of `data` (`[rows, n]` row-major),
     /// in place, through SoA panels.
     pub fn dct2_rows(&self, data: &mut [f32], rows: usize) {
+        let mut s = PanelScratch::new(self.n());
+        self.dct2_rows_with_scratch(data, rows, &mut s);
+    }
+
+    /// [`BatchEngine::dct2_rows`] reusing caller-owned scratch (the
+    /// allocation-free serving path).
+    pub fn dct2_rows_with_scratch(&self, data: &mut [f32], rows: usize, s: &mut PanelScratch) {
         let n = self.n();
         assert_eq!(data.len(), rows * n, "data len vs rows × n");
-        let mut s = PanelScratch::new(n);
+        s.ensure(n);
         let mut r = 0;
         while r < rows {
             let take = LANES.min(rows - r);
-            self.dct2_panel(data, r, take, &mut s);
+            self.dct2_panel(data, r, take, s);
             r += take;
         }
     }
@@ -166,13 +207,19 @@ impl BatchEngine {
     /// Orthonormal DCT-III (inverse of [`BatchEngine::dct2_rows`]) of
     /// every row of `data`, in place, through SoA panels.
     pub fn dct3_rows(&self, data: &mut [f32], rows: usize) {
+        let mut s = PanelScratch::new(self.n());
+        self.dct3_rows_with_scratch(data, rows, &mut s);
+    }
+
+    /// [`BatchEngine::dct3_rows`] reusing caller-owned scratch.
+    pub fn dct3_rows_with_scratch(&self, data: &mut [f32], rows: usize, s: &mut PanelScratch) {
         let n = self.n();
         assert_eq!(data.len(), rows * n, "data len vs rows × n");
-        let mut s = PanelScratch::new(n);
+        s.ensure(n);
         let mut r = 0;
         while r < rows {
             let take = LANES.min(rows - r);
-            self.dct3_panel(data, r, take, &mut s);
+            self.dct3_panel(data, r, take, s);
             r += take;
         }
     }
@@ -190,17 +237,34 @@ impl BatchEngine {
         out: &mut [f32],
         rows: usize,
     ) {
+        let mut s = PanelScratch::new(self.n());
+        self.acdc_rows_with_scratch(a, d, bias, x, out, rows, &mut s);
+    }
+
+    /// [`BatchEngine::acdc_rows`] reusing caller-owned scratch — the
+    /// zero-allocation serving hot path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn acdc_rows_with_scratch(
+        &self,
+        a: &[f32],
+        d: &[f32],
+        bias: &[f32],
+        x: &[f32],
+        out: &mut [f32],
+        rows: usize,
+        s: &mut PanelScratch,
+    ) {
         let n = self.n();
         assert_eq!(a.len(), n);
         assert_eq!(d.len(), n);
         assert_eq!(bias.len(), n);
         assert_eq!(x.len(), rows * n, "x len vs rows × n");
         assert_eq!(out.len(), rows * n, "out len vs rows × n");
-        let mut s = PanelScratch::new(n);
+        s.ensure(n);
         let mut r = 0;
         while r < rows {
             let take = LANES.min(rows - r);
-            self.acdc_panel(a, d, bias, x, out, r, take, &mut s);
+            self.acdc_panel(a, d, bias, x, out, r, take, s);
             r += take;
         }
     }
@@ -220,6 +284,9 @@ impl BatchEngine {
         pool: &ThreadPool,
     ) {
         let n = self.n();
+        assert_eq!(a.len(), n);
+        assert_eq!(d.len(), n);
+        assert_eq!(bias.len(), n);
         assert_eq!(x.len(), rows * n, "x len vs rows × n");
         assert_eq!(out.len(), rows * n, "out len vs rows × n");
         let panels = rows.div_ceil(LANES);
@@ -235,102 +302,159 @@ impl BatchEngine {
         struct Bufs {
             x: *const f32,
             out: *mut f32,
+            a: *const f32,
+            d: *const f32,
+            bias: *const f32,
         }
         // SAFETY: the pointers are only dereferenced inside pool jobs, and
         // `ThreadPool::map` joins every job before returning, so the
-        // borrows cannot outlive this call's `x`/`out` arguments.
+        // borrows cannot outlive this call's slice arguments.
         unsafe impl Send for Bufs {}
         unsafe impl Sync for Bufs {}
         let bufs = Arc::new(Bufs {
             x: x.as_ptr(),
             out: out.as_mut_ptr(),
+            a: a.as_ptr(),
+            d: d.as_ptr(),
+            bias: bias.as_ptr(),
         });
         let engine = self.clone();
-        let params = Arc::new((a.to_vec(), d.to_vec(), bias.to_vec()));
         let ranges = Arc::new(row_ranges);
         pool.map(parts, move |i| {
             let r = ranges[i].clone();
             let count = r.end - r.start;
             // SAFETY: ranges are pairwise disjoint, so each job builds the
             // only mutable view of its own output rows; the shared input
-            // view is read-only. Both stay within the caller's buffers
-            // (r.end ≤ rows) and die before `map` returns.
-            let (x_part, out_part) = unsafe {
+            // and parameter views are read-only. All stay within the
+            // caller's buffers (r.end ≤ rows) and die before `map` returns.
+            let (x_part, out_part, a_v, d_v, bias_v) = unsafe {
                 (
                     std::slice::from_raw_parts(bufs.x.add(r.start * n), count * n),
                     std::slice::from_raw_parts_mut(bufs.out.add(r.start * n), count * n),
+                    std::slice::from_raw_parts(bufs.a, n),
+                    std::slice::from_raw_parts(bufs.d, n),
+                    std::slice::from_raw_parts(bufs.bias, n),
                 )
             };
-            engine.acdc_rows(&params.0, &params.1, &params.2, x_part, out_part, count);
+            engine.acdc_rows(a_v, d_v, bias_v, x_part, out_part, count);
         });
     }
 
     // -- panel kernels ------------------------------------------------------
 
-    /// Makhoul pack + transpose of rows `r0..r0+take` into SoA `re` lanes
-    /// (`re[j*LANES + l] = row_l[2j]`, `re[(n-1-j)*LANES + l] = row_l[2j+1]`),
-    /// optionally fusing a per-element `scale` (the ACDC `a` diagonal).
-    /// Unused lanes are zero-filled, so padded tail panels stay exact.
-    fn pack(&self, x: &[f32], r0: usize, take: usize, scale: Option<&[f32]>, re: &mut [f32]) {
+    /// Makhoul pack + transpose of rows `r0..r0+take` straight into the
+    /// half-size complex lanes: `z[j] = v[2j] + i·v[2j+1]` with
+    /// `v[p] = row[src[p]]` (the plan's even/odd source table), optionally
+    /// fusing a per-element `scale` (the ACDC `a` diagonal). Unused lanes
+    /// are zero-filled, so padded tail panels stay exact.
+    fn pack(&self, x: &[f32], r0: usize, take: usize, scale: Option<&[f32]>, s: &mut PanelScratch) {
         let n = self.n();
-        re.fill(0.0);
+        let hl = ((n / 2).max(1)) * LANES;
+        s.zre[..hl].fill(0.0);
+        s.zim[..hl].fill(0.0);
+        if n == 1 {
+            for l in 0..take {
+                s.zre[l] = x[r0 + l] * scale.map_or(1.0, |a| a[0]);
+            }
+            return;
+        }
+        let h = n / 2;
+        let src = self.plan.rfft.src();
         for l in 0..take {
             let row = &x[(r0 + l) * n..(r0 + l + 1) * n];
-            if n == 1 {
-                re[l] = row[0] * scale.map_or(1.0, |s| s[0]);
-                continue;
-            }
             match scale {
-                Some(s) => {
-                    for j in 0..n / 2 {
-                        re[j * LANES + l] = row[2 * j] * s[2 * j];
-                        re[(n - 1 - j) * LANES + l] = row[2 * j + 1] * s[2 * j + 1];
+                Some(a) => {
+                    for j in 0..h {
+                        let p0 = src[2 * j] as usize;
+                        let p1 = src[2 * j + 1] as usize;
+                        s.zre[j * LANES + l] = row[p0] * a[p0];
+                        s.zim[j * LANES + l] = row[p1] * a[p1];
                     }
                 }
                 None => {
-                    for j in 0..n / 2 {
-                        re[j * LANES + l] = row[2 * j];
-                        re[(n - 1 - j) * LANES + l] = row[2 * j + 1];
+                    for j in 0..h {
+                        s.zre[j * LANES + l] = row[src[2 * j] as usize];
+                        s.zim[j * LANES + l] = row[src[2 * j + 1] as usize];
                     }
                 }
             }
         }
     }
 
-    /// Inverse of [`BatchEngine::pack`]: un-reorder SoA `re` lanes back
-    /// into rows `r0..r0+take` of `out`.
-    fn unpack(&self, re: &[f32], out: &mut [f32], r0: usize, take: usize) {
+    /// Inverse of [`BatchEngine::pack`]: interleave the half-size complex
+    /// lanes back into rows `r0..r0+take` of `out` through the same
+    /// source table (`row[src[2j]] = Re z[j]`, `row[src[2j+1]] = Im z[j]`).
+    fn unpack(&self, s: &PanelScratch, out: &mut [f32], r0: usize, take: usize) {
         let n = self.n();
+        if n == 1 {
+            for l in 0..take {
+                out[r0 + l] = s.zre[l];
+            }
+            return;
+        }
+        let h = n / 2;
+        let src = self.plan.rfft.src();
         for l in 0..take {
             let row = &mut out[(r0 + l) * n..(r0 + l + 1) * n];
-            if n == 1 {
-                row[0] = re[l];
-                continue;
+            for j in 0..h {
+                row[src[2 * j] as usize] = s.zre[j * LANES + l];
+                row[src[2 * j + 1] as usize] = s.zim[j * LANES + l];
             }
-            for j in 0..n / 2 {
-                row[2 * j] = re[j * LANES + l];
-                row[2 * j + 1] = re[(n - 1 - j) * LANES + l];
-            }
+        }
+    }
+
+    /// Forward twist stage tables (the DCT-II post-twiddle).
+    fn fwd_stage<'a>(&'a self, d: Option<&'a [f32]>, bias: Option<&'a [f32]>) -> RealStage<'a> {
+        let (_, twr, twi) = self.plan.fft.tables();
+        RealStage {
+            n: self.n(),
+            c_re: &self.plan.fw_re,
+            c_im: &self.plan.fw_im,
+            tw_re: twr,
+            tw_im: twi,
+            d,
+            bias,
+        }
+    }
+
+    /// Inverse twist stage tables (the DCT-III pre-twiddle).
+    fn inv_stage(&self) -> RealStage<'_> {
+        let (_, twr, twi) = self.plan.fft.tables();
+        RealStage {
+            n: self.n(),
+            c_re: &self.plan.bw_re,
+            c_im: &self.plan.bw_im,
+            tw_re: twr,
+            tw_im: twi,
+            d: None,
+            bias: None,
         }
     }
 
     /// DCT-II of one panel, in place in `data`.
     fn dct2_panel(&self, data: &mut [f32], r0: usize, take: usize, s: &mut PanelScratch) {
         let n = self.n();
-        let (rev, twr, twi) = self.plan.fft.tables();
-        self.pack(data, r0, take, None, &mut s.re);
-        s.im.fill(0.0);
-        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, false);
-        // Forward post-twiddle: X[k] = Re((fw_re + i·fw_im)·Z[k]).
-        for k in 0..n {
-            let (fr, fi) = (self.plan.fw_re[k], self.plan.fw_im[k]);
-            let re = lane(&s.re, k);
-            let im = lane(&s.im, k);
-            let t = lane_mut(&mut s.t, k);
-            for l in 0..LANES {
-                t[l] = fr * re[l] - fi * im[l];
-            }
+        if n == 1 {
+            return; // 1-point orthonormal DCT is the identity
         }
+        let h = n / 2;
+        let (rev, twr, twi) = self.plan.rfft.half().tables();
+        self.pack(data, r0, take, None, s);
+        (self.dispatch.fft_soa)(
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+            h,
+            rev,
+            twr,
+            twi,
+            false,
+        );
+        (self.dispatch.real_fwd)(
+            &self.fwd_stage(None, None),
+            &s.zre[..h * LANES],
+            &s.zim[..h * LANES],
+            &mut s.t[..n * LANES],
+        );
         // Plain transpose out (frequency order, no Makhoul reorder).
         for l in 0..take {
             let row = &mut data[(r0 + l) * n..(r0 + l + 1) * n];
@@ -343,47 +467,40 @@ impl BatchEngine {
     /// DCT-III of one panel, in place in `data`.
     fn dct3_panel(&self, data: &mut [f32], r0: usize, take: usize, s: &mut PanelScratch) {
         let n = self.n();
-        let (rev, twr, twi) = self.plan.fft.tables();
+        if n == 1 {
+            return;
+        }
+        let h = n / 2;
+        let (rev, twr, twi) = self.plan.rfft.half().tables();
         // Plain transpose in (zero the padded lanes).
-        s.t.fill(0.0);
+        s.t[..n * LANES].fill(0.0);
         for l in 0..take {
             let row = &data[(r0 + l) * n..(r0 + l + 1) * n];
             for (k, &v) in row.iter().enumerate() {
                 s.t[k * LANES + l] = v;
             }
         }
-        self.dct3_twiddle_from_t(s);
-        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, true);
-        self.unpack(&s.re, data, r0, take);
+        (self.dispatch.real_inv)(
+            &self.inv_stage(),
+            &s.t[..n * LANES],
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+        );
+        (self.dispatch.fft_soa)(
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+            h,
+            rev,
+            twr,
+            twi,
+            true,
+        );
+        self.unpack(s, data, r0, take);
     }
 
-    /// Inverse pre-twiddle: `V[k] = (bw_re + i·bw_im)[k] · (t[k] - i·t[n-k])`
-    /// (with `t[n] ≡ 0`), from `s.t` into `s.re`/`s.im`.
-    fn dct3_twiddle_from_t(&self, s: &mut PanelScratch) {
-        let n = self.n();
-        for k in 0..n {
-            let (br, bi) = (self.plan.bw_re[k], self.plan.bw_im[k]);
-            let re = lane_mut(&mut s.re, k);
-            let im = lane_mut(&mut s.im, k);
-            if k == 0 {
-                let tk = lane(&s.t, 0);
-                for l in 0..LANES {
-                    re[l] = br * tk[l];
-                    im[l] = bi * tk[l];
-                }
-            } else {
-                let tk = lane(&s.t, k);
-                let tnk = lane(&s.t, n - k);
-                for l in 0..LANES {
-                    re[l] = br * tk[l] + bi * tnk[l];
-                    im[l] = bi * tk[l] - br * tnk[l];
-                }
-            }
-        }
-    }
-
-    /// One fused `ACDC⁻¹` panel: pack(⊙a) → FFT → post-twiddle ⊙d +bias →
-    /// pre-twiddle → inverse FFT → unpack. All intermediates stay in `s`.
+    /// One fused `ACDC⁻¹` panel: pack(⊙a) → FFT(N/2) → un-twist +
+    /// post-twiddle ⊙d +bias → pre-twiddle + twist → IFFT(N/2) → unpack.
+    /// All intermediates stay in `s`.
     #[allow(clippy::too_many_arguments)]
     fn acdc_panel(
         &self,
@@ -397,91 +514,47 @@ impl BatchEngine {
         s: &mut PanelScratch,
     ) {
         let n = self.n();
-        let (rev, twr, twi) = self.plan.fft.tables();
-        self.pack(x, r0, take, Some(a), &mut s.re);
-        s.im.fill(0.0);
-        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, false);
-        // Fused middle stage: h3[k] = (fw·Z)[k] ⊙ d[k] + bias[k].
-        for k in 0..n {
-            let (fr, fi) = (self.plan.fw_re[k], self.plan.fw_im[k]);
-            let (dk, bk) = (d[k], bias[k]);
-            let re = lane(&s.re, k);
-            let im = lane(&s.im, k);
-            let t = lane_mut(&mut s.t, k);
-            for l in 0..LANES {
-                t[l] = (fr * re[l] - fi * im[l]) * dk + bk;
+        if n == 1 {
+            // All transforms are the identity at n=1: y = x·a·d + bias.
+            for l in 0..take {
+                out[r0 + l] = (x[r0 + l] * a[0]) * d[0] + bias[0];
             }
+            return;
         }
-        self.dct3_twiddle_from_t(s);
-        fft_soa(&mut s.re, &mut s.im, n, rev, twr, twi, true);
-        self.unpack(&s.re, out, r0, take);
-    }
-}
-
-/// Radix-2 complex FFT over SoA lane buffers: element `(k, l)` lives at
-/// `k*LANES + l`. Identical schedule (bit-reversal + Danielson–Lanczos,
-/// shared twiddle tables) to the scalar [`crate::dct::fft::FftPlan`], with
-/// the butterfly applied to all [`LANES`] lanes per twiddle load. The
-/// inverse includes the 1/n scaling, matching `FftPlan::inverse`.
-fn fft_soa(
-    re: &mut [f32],
-    im: &mut [f32],
-    n: usize,
-    rev: &[u32],
-    tw_re: &[f32],
-    tw_im: &[f32],
-    invert: bool,
-) {
-    debug_assert_eq!(re.len(), n * LANES);
-    debug_assert_eq!(im.len(), n * LANES);
-    if n == 1 {
-        return;
-    }
-    // Bit-reversal reorder of whole lane blocks.
-    for i in 0..n {
-        let j = rev[i] as usize;
-        if i < j {
-            for l in 0..LANES {
-                re.swap(i * LANES + l, j * LANES + l);
-                im.swap(i * LANES + l, j * LANES + l);
-            }
-        }
-    }
-    // Danielson–Lanczos stages, lanes innermost.
-    let mut len = 2;
-    while len <= n {
-        let half = len / 2;
-        let step = n / len;
-        for start in (0..n).step_by(len) {
-            let mut tidx = 0;
-            for k in start..start + half {
-                let wr = tw_re[tidx];
-                let wi = if invert { -tw_im[tidx] } else { tw_im[tidx] };
-                let m = k + half;
-                // Disjoint lane blocks at k and m (k < m always).
-                let (re_k, re_m) = lane_pair(re, k, m);
-                let (im_k, im_m) = lane_pair(im, k, m);
-                for l in 0..LANES {
-                    let xr = re_m[l] * wr - im_m[l] * wi;
-                    let xi = re_m[l] * wi + im_m[l] * wr;
-                    re_m[l] = re_k[l] - xr;
-                    im_m[l] = im_k[l] - xi;
-                    re_k[l] += xr;
-                    im_k[l] += xi;
-                }
-                tidx += step;
-            }
-        }
-        len <<= 1;
-    }
-    if invert {
-        let inv = 1.0 / n as f32;
-        for v in re.iter_mut() {
-            *v *= inv;
-        }
-        for v in im.iter_mut() {
-            *v *= inv;
-        }
+        let h = n / 2;
+        let (rev, twr, twi) = self.plan.rfft.half().tables();
+        self.pack(x, r0, take, Some(a), s);
+        (self.dispatch.fft_soa)(
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+            h,
+            rev,
+            twr,
+            twi,
+            false,
+        );
+        (self.dispatch.real_fwd)(
+            &self.fwd_stage(Some(d), Some(bias)),
+            &s.zre[..h * LANES],
+            &s.zim[..h * LANES],
+            &mut s.t[..n * LANES],
+        );
+        (self.dispatch.real_inv)(
+            &self.inv_stage(),
+            &s.t[..n * LANES],
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+        );
+        (self.dispatch.fft_soa)(
+            &mut s.zre[..h * LANES],
+            &mut s.zim[..h * LANES],
+            h,
+            rev,
+            twr,
+            twi,
+            true,
+        );
+        self.unpack(s, out, r0, take);
     }
 }
 
@@ -501,7 +574,11 @@ pub(crate) fn lane_mut(buf: &mut [f32], k: usize) -> &mut [f32; LANES] {
 
 /// Two disjoint mutable lane blocks at bins `k < m` of one SoA buffer.
 #[inline]
-fn lane_pair(buf: &mut [f32], k: usize, m: usize) -> (&mut [f32; LANES], &mut [f32; LANES]) {
+pub(crate) fn lane_pair(
+    buf: &mut [f32],
+    k: usize,
+    m: usize,
+) -> (&mut [f32; LANES], &mut [f32; LANES]) {
     debug_assert!(k < m);
     let (head, tail) = buf.split_at_mut(m * LANES);
     (
@@ -683,6 +760,65 @@ mod tests {
         plan.dct2_rows(&mut scalar, rows);
         for i in 0..rows * n {
             assert!((soa[i] - scalar[i]).abs() < 1e-4, "i={i}");
+        }
+    }
+
+    #[test]
+    fn reused_scratch_is_bit_identical_to_fresh() {
+        let mut rng = Pcg32::seeded(8);
+        let n = 32;
+        let rows = 11;
+        let engine = BatchEngine::for_size(n);
+        let a = rng.normal_vec(n, 1.0, 0.2);
+        let d = rng.normal_vec(n, 1.0, 0.2);
+        let bias = rng.normal_vec(n, 0.0, 0.2);
+        let mut s = PanelScratch::new(n);
+        let mut out_fresh = vec![0.0f32; rows * n];
+        let mut out_reused = vec![0.0f32; rows * n];
+        for trial in 0..3 {
+            let x = rng.normal_vec(rows * n, 0.0, 1.0);
+            engine.acdc_rows(&a, &d, &bias, &x, &mut out_fresh, rows);
+            engine.acdc_rows_with_scratch(&a, &d, &bias, &x, &mut out_reused, rows, &mut s);
+            assert_eq!(out_fresh, out_reused, "trial {trial}");
+        }
+        // Scratch grows across sizes without losing correctness.
+        s.ensure(64);
+        let engine64 = BatchEngine::for_size(64);
+        let x = rng.normal_vec(64, 0.0, 1.0);
+        let mut got = vec![0.0f32; 64];
+        engine64.acdc_rows_with_scratch(
+            &vec![1.0; 64],
+            &vec![1.0; 64],
+            &vec![0.0; 64],
+            &x,
+            &mut got,
+            1,
+            &mut s,
+        );
+        for i in 0..64 {
+            assert!((got[i] - x[i]).abs() < 1e-4, "identity layer via grown scratch");
+        }
+    }
+
+    #[test]
+    fn scalar_dispatch_engine_matches_active() {
+        let mut rng = Pcg32::seeded(9);
+        let n = 64;
+        let rows = 9;
+        let plan = PlanCache::get(n);
+        let active = BatchEngine::new(Arc::clone(&plan));
+        let scalar = BatchEngine::with_dispatch(Arc::clone(&plan), crate::dct::simd::scalar());
+        let a = rng.normal_vec(n, 1.0, 0.2);
+        let d = rng.normal_vec(n, 1.0, 0.2);
+        let bias = rng.normal_vec(n, 0.0, 0.2);
+        let x = rng.normal_vec(rows * n, 0.0, 1.0);
+        let mut got_a = vec![0.0f32; rows * n];
+        let mut got_s = vec![0.0f32; rows * n];
+        active.acdc_rows(&a, &d, &bias, &x, &mut got_a, rows);
+        scalar.acdc_rows(&a, &d, &bias, &x, &mut got_s, rows);
+        // The SIMD arms are mul/add-only in scalar op order → bit-identical.
+        for (va, vs) in got_a.iter().zip(&got_s) {
+            assert_eq!(va.to_bits(), vs.to_bits());
         }
     }
 }

@@ -123,6 +123,77 @@ impl FftPlan {
     }
 }
 
+/// Real-input FFT plan: an N-point real transform computed through one
+/// N/2-point **complex** FFT plus an O(N) un-twist stage (Makhoul 1980,
+/// §3; the classic packing z[j] = v[2j] + i·v[2j+1]).
+///
+/// This halves the butterfly count and the FFT scratch traffic of every
+/// DCT in the stack relative to the complex-FFT-with-zero-imaginary path
+/// the scalar [`FftPlan`] route uses. The twist twiddles e^{∓2πik/N} are
+/// exactly the *full-size* plan's twiddle table, so [`crate::dct::DctPlan`]
+/// shares one table between its pair path and this real path.
+///
+/// The un-twist algebra (validated against f64 oracles in
+/// `tests/property_realfft.rs`):
+///
+/// ```text
+/// forward:  Z = FFT_{N/2}(z),  Ze = (Z[k]+conj(Z[h-k]))/2,
+///           Zo = (Z[k]-conj(Z[h-k]))/2i,  V[k] = Ze + e^{-2πik/N}·Zo
+/// inverse:  Ze = (V[k]+conj(V[h-k]))/2,
+///           Zo = e^{+2πik/N}·(V[k]-conj(V[h-k]))/2,  Z = Ze + i·Zo
+/// ```
+#[derive(Debug, Clone)]
+pub struct RealFftPlan {
+    n: usize,
+    /// The N/2-point complex plan both directions ride.
+    half: FftPlan,
+    /// Makhoul source table: v\[p\] = x\[src\[p\]\] (even indices ascending
+    /// into the front half, odd indices descending into the back half).
+    src: Vec<u32>,
+}
+
+impl RealFftPlan {
+    /// Build a plan; `n` must be a power of two ≥ 1 (n = 1 degenerates to
+    /// the identity, handled by callers before any FFT work).
+    pub fn new(n: usize) -> RealFftPlan {
+        assert!(n.is_power_of_two(), "real FFT size must be a power of two, got {n}");
+        let mut src = vec![0u32; n];
+        for p in 0..n / 2 {
+            src[p] = 2 * p as u32;
+            src[n - 1 - p] = 2 * p as u32 + 1;
+        }
+        if n == 1 {
+            src[0] = 0;
+        }
+        RealFftPlan {
+            n,
+            half: FftPlan::new((n / 2).max(1)),
+            src,
+        }
+    }
+
+    /// Transform size N (the real length, not the half complex length).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True only for a degenerate zero-length plan (never constructed by
+    /// [`RealFftPlan::new`]).
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// The half-size complex plan (size N/2).
+    pub(crate) fn half(&self) -> &FftPlan {
+        &self.half
+    }
+
+    /// The Makhoul even/odd source-index table (`v[p] = x[src[p]]`).
+    pub(crate) fn src(&self) -> &[u32] {
+        &self.src
+    }
+}
+
 /// Naive O(N²) DFT used as the FFT's test oracle (f64 accumulation).
 pub fn naive_dft(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let n = re.len();
@@ -241,6 +312,24 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((time - freq).abs() / time < 1e-5);
+    }
+
+    #[test]
+    fn real_plan_src_table_is_the_makhoul_reorder() {
+        let p = RealFftPlan::new(8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.half().len(), 4);
+        // v = [x0, x2, x4, x6, x7, x5, x3, x1]
+        assert_eq!(p.src(), &[0, 2, 4, 6, 7, 5, 3, 1]);
+        let p1 = RealFftPlan::new(1);
+        assert_eq!(p1.src(), &[0]);
+        assert_eq!(p1.half().len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn real_plan_rejects_non_power_of_two() {
+        RealFftPlan::new(12);
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! DCT-II / DCT-III (orthonormal) with four implementations:
 //!
-//! * `DctPlan::dct2 / dct3` — scalar O(N log N) via Makhoul (1980) using
-//!   the radix-2 FFT (the method the paper's "multiple call" §5.2 version
-//!   uses through cuFFT);
-//! * [`batch`] — the batched structure-of-arrays engine: the same Makhoul
-//!   schedule run 8 rows per pass with the ACDC diagonals fused into the
-//!   twiddle stages (DESIGN.md §4), plus the process-wide [`PlanCache`];
+//! * `DctPlan::dct2 / dct3` — scalar O(N log N) via Makhoul (1980),
+//!   computed through a **real-input** N/2-point FFT
+//!   ([`fft::RealFftPlan`]: pack-into-complex + un-twist), half the
+//!   butterflies of the previous complex-FFT route;
+//! * [`batch`] — the batched structure-of-arrays engine: the same
+//!   real-FFT Makhoul schedule run 8 rows per pass with the ACDC
+//!   diagonals fused into the twist stages (DESIGN.md §4) and runtime
+//!   SIMD dispatch ([`simd`]), plus the process-wide [`PlanCache`];
 //! * `DctPlan::matrix` — O(N²) matmul against the precomputed DCT
 //!   matrix (what the Pallas kernel does on the MXU);
 //! * `naive_dct2 / naive_dct3` — O(N²) f64 closed-form oracles used only
@@ -16,16 +18,20 @@
 
 pub mod batch;
 pub mod fft;
+pub mod simd;
 
-pub use batch::{BatchEngine, PlanCache, LANES, MIN_SOA_ROWS};
+pub use batch::{BatchEngine, PanelScratch, PlanCache, LANES, MIN_SOA_ROWS};
 
-use fft::FftPlan;
+use fft::{FftPlan, RealFftPlan};
 
 /// Precomputed plan for orthonormal DCT-II/III of a fixed size.
 #[derive(Debug, Clone)]
 pub struct DctPlan {
     n: usize,
     fft: FftPlan,
+    /// Half-size real-input FFT plan (the Makhoul pack), shared by the
+    /// scalar single-row path and the SoA panel engine.
+    rfft: RealFftPlan,
     /// Forward post-twiddle: 2·e^{-iπk/(2N)} scaled by sqrt(2/N)·ε_k / 2.
     fw_re: Vec<f32>,
     fw_im: Vec<f32>,
@@ -76,6 +82,7 @@ impl DctPlan {
         DctPlan {
             n,
             fft: FftPlan::new(n),
+            rfft: RealFftPlan::new(n),
             fw_re,
             fw_im,
             bw_re,
@@ -97,57 +104,88 @@ impl DctPlan {
 
     /// Orthonormal DCT-II of `x` in place (paper's `h2 = h1 · C`).
     ///
-    /// Makhoul's N-point trick: reorder even/odd, one complex FFT, then a
-    /// post-twiddle. `scratch` must be 2·n long (re/im halves).
+    /// Makhoul's trick on a **real-input** FFT: reorder even/odd, pack the
+    /// N reals into an N/2 complex FFT, then un-twist + post-twiddle in
+    /// one O(N) sweep ([`fft::RealFftPlan`]) — half the butterflies of the
+    /// previous complex-FFT route. `scratch` must be ≥ 2·n long (the real
+    /// path uses the first n floats as the packed re/im halves).
     pub fn dct2(&self, x: &mut [f32], scratch: &mut [f32]) {
         let n = self.n;
         assert_eq!(x.len(), n);
         assert!(scratch.len() >= 2 * n);
-        let (re, rest) = scratch.split_at_mut(n);
-        let im = &mut rest[..n];
-        // v[j] = x[2j], v[N-1-j] = x[2j+1]
-        for j in 0..n / 2 {
-            re[j] = x[2 * j];
-            re[n - 1 - j] = x[2 * j + 1];
-        }
         if n == 1 {
-            re[0] = x[0];
+            return; // 1-point orthonormal DCT is the identity
         }
-        im.fill(0.0);
-        self.fft.forward(re, im);
-        // X[k] = Re( (fw_re + i·fw_im) · (re + i·im) )
-        for k in 0..n {
-            x[k] = self.fw_re[k] * re[k] - self.fw_im[k] * im[k];
+        let h = n / 2;
+        let src = self.rfft.src();
+        let (zre, rest) = scratch.split_at_mut(h);
+        let zim = &mut rest[..h];
+        // z[j] = v[2j] + i·v[2j+1] with v[p] = x[src[p]] (Makhoul reorder).
+        for j in 0..h {
+            zre[j] = x[src[2 * j] as usize];
+            zim[j] = x[src[2 * j + 1] as usize];
         }
+        self.rfft.half().forward(zre, zim);
+        let (_, twr, twi) = self.fft.tables();
+        // Bins 0 and h: V[0] = ReZ0 + ImZ0, V[h] = ReZ0 - ImZ0 (both real).
+        let v0 = zre[0] + zim[0];
+        let vh = zre[0] - zim[0];
+        // Un-twist + post-twiddle, Hermitian pickup for the top half.
+        for k in 1..h {
+            let kk = h - k;
+            let zer = 0.5 * (zre[k] + zre[kk]);
+            let zei = 0.5 * (zim[k] - zim[kk]);
+            let zor = 0.5 * (zim[k] + zim[kk]);
+            let zoi = -0.5 * (zre[k] - zre[kk]);
+            let vr = zer + (twr[k] * zor - twi[k] * zoi);
+            let vi = zei + (twr[k] * zoi + twi[k] * zor);
+            x[k] = self.fw_re[k] * vr - self.fw_im[k] * vi;
+            x[n - k] = self.fw_re[n - k] * vr + self.fw_im[n - k] * vi;
+        }
+        x[0] = self.fw_re[0] * v0;
+        x[h] = self.fw_re[h] * vh;
     }
 
-    /// Orthonormal DCT-III (inverse of `dct2`) of `x` in place.
+    /// Orthonormal DCT-III (inverse of `dct2`) of `x` in place, through
+    /// the same half-size real-FFT path (pre-twiddle + twist down, one
+    /// N/2 inverse FFT, interleave back via the Makhoul source table).
     pub fn dct3(&self, x: &mut [f32], scratch: &mut [f32]) {
         let n = self.n;
         assert_eq!(x.len(), n);
         assert!(scratch.len() >= 2 * n);
-        let (re, rest) = scratch.split_at_mut(n);
-        let im = &mut rest[..n];
-        // V[k] = e^{iπk/2N} · (X[k] - i·X[N-k]) / scale_k   (X[N] ≡ 0)
-        for k in 0..n {
+        if n == 1 {
+            return;
+        }
+        let h = n / 2;
+        let (zre, rest) = scratch.split_at_mut(h);
+        let zim = &mut rest[..h];
+        let (_, twr, twi) = self.fft.tables();
+        // V[j] = (bw_re + i·bw_im)[j] · (x[j] - i·x[n-j])  (x[n] ≡ 0),
+        // then twist the Hermitian V down to the half spectrum Z.
+        for k in 0..h {
+            let hk = h - k; // 1..=h — x[n - hk] is always in range
             let xk = x[k];
             let xnk = if k == 0 { 0.0 } else { x[n - k] };
-            // (bw_re + i·bw_im) already folds the 1/scale factor of index k.
-            // For the -i·X[N-k] term the 1/scale belongs to index k as well
-            // (Makhoul's derivation), so use the same twiddle.
-            re[k] = self.bw_re[k] * xk + self.bw_im[k] * xnk;
-            im[k] = self.bw_im[k] * xk - self.bw_re[k] * xnk;
+            let vrk = self.bw_re[k] * xk + self.bw_im[k] * xnk;
+            let vik = self.bw_im[k] * xk - self.bw_re[k] * xnk;
+            let xhk = x[hk];
+            let xnhk = x[n - hk];
+            let vrh = self.bw_re[hk] * xhk + self.bw_im[hk] * xnhk;
+            let vih = self.bw_im[hk] * xhk - self.bw_re[hk] * xnhk;
+            let zer = 0.5 * (vrk + vrh);
+            let zei = 0.5 * (vik - vih);
+            let dr = 0.5 * (vrk - vrh);
+            let di = 0.5 * (vik + vih);
+            let zor = twr[k] * dr + twi[k] * di; // conj(tw)·D
+            let zoi = twr[k] * di - twi[k] * dr;
+            zre[k] = zer - zoi;
+            zim[k] = zei + zor;
         }
-        // Undo the missing ε on the X[N-k] pickup at k=0..: handled by xnk=0
-        // at k=0; for k>0, scale' == scale_k only when ε_k == ε_{n-k} == 1,
-        // true for 0 < k < n. (k = 0 row has xnk = 0.)
-        self.fft.inverse(re, im);
-        for j in 0..n / 2 {
-            x[2 * j] = re[j];
-            x[2 * j + 1] = re[n - 1 - j];
-        }
-        if n == 1 {
-            x[0] = re[0];
+        self.rfft.half().inverse(zre, zim);
+        let src = self.rfft.src();
+        for j in 0..h {
+            x[src[2 * j] as usize] = zre[j];
+            x[src[2 * j + 1] as usize] = zim[j];
         }
     }
 

@@ -1,0 +1,550 @@
+//! Runtime-dispatched SIMD kernels for the SoA panel hot loops.
+//!
+//! The batched engine's inner loops all operate on [`LANES`] = 8
+//! contiguous f32 lanes — exactly one 256-bit vector register. This
+//! module provides two implementations of each panel kernel:
+//!
+//! * **scalar** — the portable fixed-8 loops (the mandatory fallback;
+//!   LLVM auto-vectorizes them on most targets);
+//! * **avx2** — explicit `std::arch` intrinsics (`x86_64` only), selected
+//!   once per process behind an `is_x86_feature_detected!("avx2")` check.
+//!
+//! Both arms execute **identical arithmetic in identical order** (mul/add
+//! only, never FMA), so their outputs are bit-identical — pinned by
+//! `tests/property_realfft.rs`, which runs every kernel under both
+//! dispatches. The active dispatch is resolved once by [`active`];
+//! setting `ACDC_SIMD=scalar` (or `=avx2`) in the environment forces an
+//! arm, which is how CI exercises the fallback on AVX2 hosts.
+//!
+//! Three kernels make up one fused `ACDC⁻¹` panel (see
+//! [`crate::dct::batch`] for the surrounding data flow):
+//!
+//! 1. `fft_soa` — the radix-2 complex FFT over lane blocks, now run at
+//!    **N/2** (the real-FFT Makhoul packing);
+//! 2. `real_fwd` — un-twist of the half-size spectrum + DCT-II forward
+//!    post-twiddle, with the ACDC `d`/`bias` optionally fused in;
+//! 3. `real_inv` — DCT-III pre-twiddle + twist back down to the half
+//!    spectrum fed to the inverse FFT.
+
+use std::sync::OnceLock;
+
+use super::batch::{lane, lane_mut, lane_pair, LANES};
+
+/// Coefficient tables one real-FFT twist stage needs. `c_*` is the DCT
+/// post-twiddle (`fw_*`, forward) or pre-twiddle (`bw_*`, inverse) of the
+/// full size-N plan; `tw_*` is the full-size FFT twiddle table
+/// e^{-2πik/N} for k in 0..N/2, which doubles as the Makhoul twist.
+pub(crate) struct RealStage<'a> {
+    /// Full (real) transform size N; the packed spectrum has N/2 bins.
+    pub n: usize,
+    /// DCT twiddle, real parts (length N).
+    pub c_re: &'a [f32],
+    /// DCT twiddle, imaginary parts (length N).
+    pub c_im: &'a [f32],
+    /// Twist twiddle e^{-2πik/N}, real parts (length N/2).
+    pub tw_re: &'a [f32],
+    /// Twist twiddle e^{-2πik/N}, imaginary parts (length N/2).
+    pub tw_im: &'a [f32],
+    /// Fused spectral diagonal (the ACDC `d`); `None` = ones.
+    pub d: Option<&'a [f32]>,
+    /// Fused spectral bias; `None` = zeros.
+    pub bias: Option<&'a [f32]>,
+}
+
+impl<'a> RealStage<'a> {
+    /// The fused diagonal/bias coefficients at bin `k` (1/0 when absent —
+    /// `x*1 + 0` only canonicalizes `-0.0`, which no consumer observes).
+    #[inline]
+    fn coeff(&self, k: usize) -> (f32, f32) {
+        (
+            self.d.map_or(1.0, |d| d[k]),
+            self.bias.map_or(0.0, |b| b[k]),
+        )
+    }
+}
+
+type FftSoaFn = fn(&mut [f32], &mut [f32], usize, &[u32], &[f32], &[f32], bool);
+type RealFwdFn = fn(&RealStage, &[f32], &[f32], &mut [f32]);
+type RealInvFn = fn(&RealStage, &[f32], &mut [f32], &mut [f32]);
+
+/// One resolved kernel set (scalar or avx2). Obtain via [`active`],
+/// [`scalar`] or [`avx2`]; the engine stores the reference it was built
+/// with, so tests and benches can pin an arm explicitly.
+pub struct Dispatch {
+    name: &'static str,
+    pub(crate) fft_soa: FftSoaFn,
+    pub(crate) real_fwd: RealFwdFn,
+    pub(crate) real_inv: RealInvFn,
+}
+
+impl Dispatch {
+    /// The arm's name (`"scalar"` or `"avx2"`).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl std::fmt::Debug for Dispatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Dispatch").field("name", &self.name).finish()
+    }
+}
+
+static SCALAR: Dispatch = Dispatch {
+    name: "scalar",
+    fft_soa: scalar_fft_soa,
+    real_fwd: scalar_real_fwd,
+    real_inv: scalar_real_inv,
+};
+
+/// The portable kernel set — always available, and the reference the
+/// SIMD arms must match bit for bit.
+pub fn scalar() -> &'static Dispatch {
+    &SCALAR
+}
+
+/// The AVX2 kernel set, when this host supports it (`None` elsewhere —
+/// non-x86_64 builds compile only the scalar arm).
+pub fn avx2() -> Option<&'static Dispatch> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(&x86::AVX2);
+        }
+    }
+    None
+}
+
+/// The process-wide kernel set, resolved once: `ACDC_SIMD=scalar` forces
+/// the portable arm, `ACDC_SIMD=avx2` requests AVX2 (falling back to
+/// scalar if unavailable), anything else auto-detects.
+pub fn active() -> &'static Dispatch {
+    static ACTIVE: OnceLock<&'static Dispatch> = OnceLock::new();
+    ACTIVE.get_or_init(|| match std::env::var("ACDC_SIMD").as_deref() {
+        Ok("scalar") => scalar(),
+        _ => avx2().unwrap_or_else(scalar),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Scalar arm (the portable reference)
+// ---------------------------------------------------------------------------
+
+/// Radix-2 complex FFT over SoA lane buffers: element `(k, l)` lives at
+/// `k*LANES + l`. Identical schedule (bit-reversal + Danielson–Lanczos,
+/// shared twiddle tables) to the scalar [`crate::dct::fft::FftPlan`],
+/// with the butterfly applied to all [`LANES`] lanes per twiddle load.
+/// The inverse includes the 1/n scaling, matching `FftPlan::inverse`.
+fn scalar_fft_soa(
+    re: &mut [f32],
+    im: &mut [f32],
+    n: usize,
+    rev: &[u32],
+    tw_re: &[f32],
+    tw_im: &[f32],
+    invert: bool,
+) {
+    debug_assert_eq!(re.len(), n * LANES);
+    debug_assert_eq!(im.len(), n * LANES);
+    if n == 1 {
+        return;
+    }
+    fft_soa_bitrev(re, im, n, rev);
+    let mut len = 2;
+    while len <= n {
+        let half = len / 2;
+        let step = n / len;
+        for start in (0..n).step_by(len) {
+            let mut tidx = 0;
+            for k in start..start + half {
+                let wr = tw_re[tidx];
+                let wi = if invert { -tw_im[tidx] } else { tw_im[tidx] };
+                let m = k + half;
+                // Disjoint lane blocks at k and m (k < m always).
+                let (re_k, re_m) = lane_pair(re, k, m);
+                let (im_k, im_m) = lane_pair(im, k, m);
+                for l in 0..LANES {
+                    let xr = re_m[l] * wr - im_m[l] * wi;
+                    let xi = re_m[l] * wi + im_m[l] * wr;
+                    re_m[l] = re_k[l] - xr;
+                    im_m[l] = im_k[l] - xi;
+                    re_k[l] += xr;
+                    im_k[l] += xi;
+                }
+                tidx += step;
+            }
+        }
+        len <<= 1;
+    }
+    if invert {
+        fft_soa_scale(re, im, n);
+    }
+}
+
+/// Bit-reversal reorder of whole lane blocks (shared by both arms — pure
+/// swaps, bit-identical by construction).
+fn fft_soa_bitrev(re: &mut [f32], im: &mut [f32], n: usize, rev: &[u32]) {
+    for i in 0..n {
+        let j = rev[i] as usize;
+        if i < j {
+            for l in 0..LANES {
+                re.swap(i * LANES + l, j * LANES + l);
+                im.swap(i * LANES + l, j * LANES + l);
+            }
+        }
+    }
+}
+
+/// The inverse transform's 1/n scaling (shared by both arms).
+fn fft_soa_scale(re: &mut [f32], im: &mut [f32], n: usize) {
+    let inv = 1.0 / n as f32;
+    for v in re.iter_mut() {
+        *v *= inv;
+    }
+    for v in im.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Forward un-twist + DCT-II post-twiddle (+ fused `d`/`bias`): from the
+/// half-size spectrum lanes `Z` to the spectral-domain lanes
+/// `out[k] = X[k]·d[k] + bias[k]` for k in 0..N.
+///
+/// Bin math (h = N/2, kk = h-k; Z[h] ≡ Z[0]):
+/// `Ze = (Z[k]+conj(Z[kk]))/2`, `Zo = (Z[k]-conj(Z[kk]))/2i`,
+/// `V[k] = Ze + tw[k]·Zo`, `X[k] = Re(fw[k]·V[k])`,
+/// `X[N-k] = fw_re[N-k]·Vr + fw_im[N-k]·Vi` (Hermitian pickup).
+fn scalar_real_fwd(st: &RealStage, zre: &[f32], zim: &[f32], out: &mut [f32]) {
+    let n = st.n;
+    let h = n / 2;
+    debug_assert!(h >= 1);
+    // k = 0 carries bins 0 and h: V[0] = ReZ0 + ImZ0, V[h] = ReZ0 - ImZ0.
+    {
+        let zr = lane(zre, 0);
+        let zi = lane(zim, 0);
+        let (f0, fh) = (st.c_re[0], st.c_re[h]);
+        let (d0, b0) = st.coeff(0);
+        let (dh, bh) = st.coeff(h);
+        for l in 0..LANES {
+            let v0 = zr[l] + zi[l];
+            let vh = zr[l] - zi[l];
+            out[l] = (f0 * v0) * d0 + b0;
+            out[h * LANES + l] = (fh * vh) * dh + bh;
+        }
+    }
+    for k in 1..h {
+        let kk = h - k;
+        let (twr, twi) = (st.tw_re[k], st.tw_im[k]);
+        let (fkr, fki) = (st.c_re[k], st.c_im[k]);
+        let (fnr, fni) = (st.c_re[n - k], st.c_im[n - k]);
+        let (dk, bk) = st.coeff(k);
+        let (dn, bn) = st.coeff(n - k);
+        let zrk = lane(zre, k);
+        let zik = lane(zim, k);
+        let zrkk = lane(zre, kk);
+        let zikk = lane(zim, kk);
+        // Two disjoint output lane blocks (k < h < n-k for k in 1..h).
+        let (out_k, out_nk) = lane_pair(out, k, n - k);
+        for l in 0..LANES {
+            let zer = 0.5 * (zrk[l] + zrkk[l]);
+            let zei = 0.5 * (zik[l] - zikk[l]);
+            let zor = 0.5 * (zik[l] + zikk[l]);
+            let zoi = -0.5 * (zrk[l] - zrkk[l]);
+            let vr = zer + (twr * zor - twi * zoi);
+            let vi = zei + (twr * zoi + twi * zor);
+            out_k[l] = (fkr * vr - fki * vi) * dk + bk;
+            out_nk[l] = (fnr * vr + fni * vi) * dn + bn;
+        }
+    }
+}
+
+/// Inverse pre-twiddle + twist down: from spectral lanes `x` (bins 0..N)
+/// to the half-size spectrum lanes `Z` fed to the inverse FFT.
+///
+/// Bin math (hk = h-k in 1..=h; x[N] ≡ 0):
+/// `V[j] = bw[j]·(x[j] - i·x[N-j])`,
+/// `Ze = (V[k]+conj(V[hk]))/2`, `D = (V[k]-conj(V[hk]))/2`,
+/// `Zo = conj(tw[k])·D`, `Z[k] = Ze + i·Zo`.
+fn scalar_real_inv(st: &RealStage, x: &[f32], zre: &mut [f32], zim: &mut [f32]) {
+    let n = st.n;
+    let h = n / 2;
+    debug_assert!(h >= 1);
+    for k in 0..h {
+        let hk = h - k; // 1..=h — never 0, so x[n - hk] is always in range
+        let (ckr, cki) = (st.c_re[k], st.c_im[k]);
+        let (chr, chi) = (st.c_re[hk], st.c_im[hk]);
+        let (twr, twi) = (st.tw_re[k], st.tw_im[k]);
+        let xk = lane(x, k);
+        let xhk = lane(x, hk);
+        let xnhk = lane(x, n - hk);
+        let zr = lane_mut(zre, k);
+        // k = 0 has no x[n-k] partner (x[N] ≡ 0 in Makhoul's recurrence).
+        if k == 0 {
+            let zi = lane_mut(zim, 0);
+            for l in 0..LANES {
+                let vrk = ckr * xk[l];
+                let vik = cki * xk[l];
+                let vrh = chr * xhk[l] + chi * xnhk[l];
+                let vih = chi * xhk[l] - chr * xnhk[l];
+                let zer = 0.5 * (vrk + vrh);
+                let zei = 0.5 * (vik - vih);
+                let dr = 0.5 * (vrk - vrh);
+                let di = 0.5 * (vik + vih);
+                let zor = twr * dr + twi * di;
+                let zoi = twr * di - twi * dr;
+                zr[l] = zer - zoi;
+                zi[l] = zei + zor;
+            }
+            continue;
+        }
+        let xnk = lane(x, n - k);
+        let zi = lane_mut(zim, k);
+        for l in 0..LANES {
+            let vrk = ckr * xk[l] + cki * xnk[l];
+            let vik = cki * xk[l] - ckr * xnk[l];
+            let vrh = chr * xhk[l] + chi * xnhk[l];
+            let vih = chi * xhk[l] - chr * xnhk[l];
+            let zer = 0.5 * (vrk + vrh);
+            let zei = 0.5 * (vik - vih);
+            let dr = 0.5 * (vrk - vrh);
+            let di = 0.5 * (vik + vih);
+            let zor = twr * dr + twi * di;
+            let zoi = twr * di - twi * dr;
+            zr[l] = zer - zoi;
+            zi[l] = zei + zor;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 arm (x86_64 only) — identical op order, one __m256 per lane block
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    pub(super) static AVX2: Dispatch = Dispatch {
+        name: "avx2",
+        fft_soa,
+        real_fwd,
+        real_inv,
+    };
+
+    /// Load one 8-lane block. Unaligned load: `Vec<f32>` only guarantees
+    /// 4-byte alignment.
+    #[inline]
+    unsafe fn ld(b: &[f32; LANES]) -> __m256 {
+        _mm256_loadu_ps(b.as_ptr())
+    }
+
+    #[inline]
+    unsafe fn st_(b: &mut [f32; LANES], v: __m256) {
+        _mm256_storeu_ps(b.as_mut_ptr(), v)
+    }
+
+    // Safe wrappers: only reachable through `avx2()`, which gates on
+    // `is_x86_feature_detected!("avx2")`, so the target-feature calls are
+    // sound on every path that can obtain this Dispatch.
+
+    fn fft_soa(
+        re: &mut [f32],
+        im: &mut [f32],
+        n: usize,
+        rev: &[u32],
+        tw_re: &[f32],
+        tw_im: &[f32],
+        invert: bool,
+    ) {
+        unsafe { fft_soa_avx2(re, im, n, rev, tw_re, tw_im, invert) }
+    }
+
+    fn real_fwd(stg: &RealStage, zre: &[f32], zim: &[f32], out: &mut [f32]) {
+        unsafe { real_fwd_avx2(stg, zre, zim, out) }
+    }
+
+    fn real_inv(stg: &RealStage, x: &[f32], zre: &mut [f32], zim: &mut [f32]) {
+        unsafe { real_inv_avx2(stg, x, zre, zim) }
+    }
+
+    /// [`super::scalar_fft_soa`] with the 8-lane butterfly in explicit
+    /// AVX2 (mul/add/sub only — no FMA, so rounding matches scalar).
+    #[target_feature(enable = "avx2")]
+    unsafe fn fft_soa_avx2(
+        re: &mut [f32],
+        im: &mut [f32],
+        n: usize,
+        rev: &[u32],
+        tw_re: &[f32],
+        tw_im: &[f32],
+        invert: bool,
+    ) {
+        debug_assert_eq!(re.len(), n * LANES);
+        debug_assert_eq!(im.len(), n * LANES);
+        if n == 1 {
+            return;
+        }
+        fft_soa_bitrev(re, im, n, rev);
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            let step = n / len;
+            for start in (0..n).step_by(len) {
+                let mut tidx = 0;
+                for k in start..start + half {
+                    let wr = _mm256_set1_ps(tw_re[tidx]);
+                    let wi = _mm256_set1_ps(if invert { -tw_im[tidx] } else { tw_im[tidx] });
+                    let m = k + half;
+                    let (re_k, re_m) = lane_pair(re, k, m);
+                    let (im_k, im_m) = lane_pair(im, k, m);
+                    let rm = ld(re_m);
+                    let imm = ld(im_m);
+                    let rk = ld(re_k);
+                    let imk = ld(im_k);
+                    // xr = rm*wr - imm*wi; xi = rm*wi + imm*wr
+                    let xr = _mm256_sub_ps(_mm256_mul_ps(rm, wr), _mm256_mul_ps(imm, wi));
+                    let xi = _mm256_add_ps(_mm256_mul_ps(rm, wi), _mm256_mul_ps(imm, wr));
+                    st_(re_m, _mm256_sub_ps(rk, xr));
+                    st_(im_m, _mm256_sub_ps(imk, xi));
+                    st_(re_k, _mm256_add_ps(rk, xr));
+                    st_(im_k, _mm256_add_ps(imk, xi));
+                    tidx += step;
+                }
+            }
+            len <<= 1;
+        }
+        if invert {
+            fft_soa_scale(re, im, n);
+        }
+    }
+
+    /// [`super::scalar_real_fwd`] in AVX2 (same op order).
+    #[target_feature(enable = "avx2")]
+    unsafe fn real_fwd_avx2(stg: &RealStage, zre: &[f32], zim: &[f32], out: &mut [f32]) {
+        let n = stg.n;
+        let h = n / 2;
+        let half_ = _mm256_set1_ps(0.5);
+        let neg_half = _mm256_set1_ps(-0.5);
+        {
+            let zr = ld(lane(zre, 0));
+            let zi = ld(lane(zim, 0));
+            let v0 = _mm256_add_ps(zr, zi);
+            let vh = _mm256_sub_ps(zr, zi);
+            let (d0, b0) = stg.coeff(0);
+            let (dh, bh) = stg.coeff(h);
+            let x0 = _mm256_mul_ps(_mm256_set1_ps(stg.c_re[0]), v0);
+            let xh = _mm256_mul_ps(_mm256_set1_ps(stg.c_re[h]), vh);
+            let o0 = _mm256_add_ps(_mm256_mul_ps(x0, _mm256_set1_ps(d0)), _mm256_set1_ps(b0));
+            let oh = _mm256_add_ps(_mm256_mul_ps(xh, _mm256_set1_ps(dh)), _mm256_set1_ps(bh));
+            st_(lane_mut(out, 0), o0);
+            st_(lane_mut(out, h), oh);
+        }
+        for k in 1..h {
+            let kk = h - k;
+            let twr = _mm256_set1_ps(stg.tw_re[k]);
+            let twi = _mm256_set1_ps(stg.tw_im[k]);
+            let fkr = _mm256_set1_ps(stg.c_re[k]);
+            let fki = _mm256_set1_ps(stg.c_im[k]);
+            let fnr = _mm256_set1_ps(stg.c_re[n - k]);
+            let fni = _mm256_set1_ps(stg.c_im[n - k]);
+            let (dk, bk) = stg.coeff(k);
+            let (dn, bn) = stg.coeff(n - k);
+            let zrk = ld(lane(zre, k));
+            let zik = ld(lane(zim, k));
+            let zrkk = ld(lane(zre, kk));
+            let zikk = ld(lane(zim, kk));
+            let zer = _mm256_mul_ps(half_, _mm256_add_ps(zrk, zrkk));
+            let zei = _mm256_mul_ps(half_, _mm256_sub_ps(zik, zikk));
+            let zor = _mm256_mul_ps(half_, _mm256_add_ps(zik, zikk));
+            let zoi = _mm256_mul_ps(neg_half, _mm256_sub_ps(zrk, zrkk));
+            let vr = _mm256_add_ps(
+                zer,
+                _mm256_sub_ps(_mm256_mul_ps(twr, zor), _mm256_mul_ps(twi, zoi)),
+            );
+            let vi = _mm256_add_ps(
+                zei,
+                _mm256_add_ps(_mm256_mul_ps(twr, zoi), _mm256_mul_ps(twi, zor)),
+            );
+            let xk = _mm256_sub_ps(_mm256_mul_ps(fkr, vr), _mm256_mul_ps(fki, vi));
+            let xnk = _mm256_add_ps(_mm256_mul_ps(fnr, vr), _mm256_mul_ps(fni, vi));
+            let ok = _mm256_add_ps(_mm256_mul_ps(xk, _mm256_set1_ps(dk)), _mm256_set1_ps(bk));
+            let onk = _mm256_add_ps(_mm256_mul_ps(xnk, _mm256_set1_ps(dn)), _mm256_set1_ps(bn));
+            let (out_k, out_nk) = lane_pair(out, k, n - k);
+            st_(out_k, ok);
+            st_(out_nk, onk);
+        }
+    }
+
+    /// [`super::scalar_real_inv`] in AVX2 (same op order).
+    #[target_feature(enable = "avx2")]
+    unsafe fn real_inv_avx2(stg: &RealStage, x: &[f32], zre: &mut [f32], zim: &mut [f32]) {
+        let n = stg.n;
+        let h = n / 2;
+        let half_ = _mm256_set1_ps(0.5);
+        for k in 0..h {
+            let hk = h - k;
+            let ckr = _mm256_set1_ps(stg.c_re[k]);
+            let cki = _mm256_set1_ps(stg.c_im[k]);
+            let chr = _mm256_set1_ps(stg.c_re[hk]);
+            let chi = _mm256_set1_ps(stg.c_im[hk]);
+            let twr = _mm256_set1_ps(stg.tw_re[k]);
+            let twi = _mm256_set1_ps(stg.tw_im[k]);
+            let xk = ld(lane(x, k));
+            let xhk = ld(lane(x, hk));
+            let xnhk = ld(lane(x, n - hk));
+            let (vrk, vik) = if k == 0 {
+                (_mm256_mul_ps(ckr, xk), _mm256_mul_ps(cki, xk))
+            } else {
+                let xnk = ld(lane(x, n - k));
+                (
+                    _mm256_add_ps(_mm256_mul_ps(ckr, xk), _mm256_mul_ps(cki, xnk)),
+                    _mm256_sub_ps(_mm256_mul_ps(cki, xk), _mm256_mul_ps(ckr, xnk)),
+                )
+            };
+            let vrh = _mm256_add_ps(_mm256_mul_ps(chr, xhk), _mm256_mul_ps(chi, xnhk));
+            let vih = _mm256_sub_ps(_mm256_mul_ps(chi, xhk), _mm256_mul_ps(chr, xnhk));
+            let zer = _mm256_mul_ps(half_, _mm256_add_ps(vrk, vrh));
+            let zei = _mm256_mul_ps(half_, _mm256_sub_ps(vik, vih));
+            let dr = _mm256_mul_ps(half_, _mm256_sub_ps(vrk, vrh));
+            let di = _mm256_mul_ps(half_, _mm256_add_ps(vik, vih));
+            let zor = _mm256_add_ps(_mm256_mul_ps(twr, dr), _mm256_mul_ps(twi, di));
+            let zoi = _mm256_sub_ps(_mm256_mul_ps(twr, di), _mm256_mul_ps(twi, dr));
+            st_(lane_mut(zre, k), _mm256_sub_ps(zer, zoi));
+            st_(lane_mut(zim, k), _mm256_add_ps(zei, zor));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_dispatch_always_available() {
+        assert_eq!(scalar().name(), "scalar");
+    }
+
+    #[test]
+    fn active_dispatch_is_scalar_or_avx2() {
+        let d = active();
+        assert!(d.name() == "scalar" || d.name() == "avx2", "{}", d.name());
+        // The env override is resolved once; forcing scalar must always
+        // be possible on any host.
+        assert!(std::ptr::eq(scalar(), scalar()));
+    }
+
+    #[test]
+    fn avx2_reports_consistently_with_detection() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let detected = std::arch::is_x86_feature_detected!("avx2");
+            assert_eq!(avx2().is_some(), detected);
+            if let Some(d) = avx2() {
+                assert_eq!(d.name(), "avx2");
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(avx2().is_none());
+    }
+}

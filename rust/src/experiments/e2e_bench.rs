@@ -1,0 +1,209 @@
+//! E12 — unified end-to-end inference bench: engine bandwidth + loopback
+//! gateway latency, emitted as one provenance-stamped report
+//! (`BENCH_e2e_infer.json`, the `acdc bench --all` output).
+//!
+//! Two legs:
+//!
+//! 1. **engine** — the E9 per-row vs SoA comparison
+//!    ([`crate::experiments::engine_bench`]) including the §5 traffic-model
+//!    GB/s of the real-FFT SoA path;
+//! 2. **gateway** — a closed-loop load-generator run against a loopback
+//!    gateway serving a native ACDC cascade (real sockets, keep-alive,
+//!    the zero-allocation request path): p50/p95/p99/mean latency and
+//!    goodput.
+//!
+//! Every report stamps provenance (host, OS/arch, thread count, SIMD
+//! dispatch, method string) so committed numbers are auditable and
+//! reproducible: regenerate with `acdc bench --all`.
+
+use std::time::Duration;
+
+use super::engine_bench::{self, EngineBenchRow};
+use crate::config::{GatewayConfig, ServeConfig};
+use crate::gateway::loadgen::{self, ArrivalMode, LoadReport, LoadgenConfig};
+use crate::gateway::Gateway;
+use crate::registry::{ModelRegistry, SellModel};
+use crate::sell::acdc::AcdcCascade;
+use crate::sell::init::DiagInit;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// Knobs of the gateway loopback leg.
+#[derive(Debug, Clone)]
+pub struct LoopbackSpec {
+    /// Model width N.
+    pub n: usize,
+    /// Cascade depth K.
+    pub depth: usize,
+    /// Closed-loop client connections.
+    pub concurrency: usize,
+    /// Run length.
+    pub duration: Duration,
+    /// Rows-per-request mix.
+    pub rows_mix: Vec<usize>,
+}
+
+impl Default for LoopbackSpec {
+    fn default() -> Self {
+        LoopbackSpec {
+            n: 256,
+            depth: 12,
+            concurrency: 8,
+            duration: Duration::from_secs(3),
+            rows_mix: vec![1, 1, 1, 8],
+        }
+    }
+}
+
+/// Start an ephemeral loopback gateway over a native ACDC cascade and
+/// drive it with the closed-loop load generator.
+pub fn gateway_loopback(spec: &LoopbackSpec) -> Result<LoadReport, String> {
+    let mut rng = Pcg32::seeded(1);
+    let cascade = AcdcCascade::nonlinear(spec.n, spec.depth, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8, 32, 128],
+        max_wait_us: 1_000,
+        workers: 2,
+        queue_cap: 8_192,
+        ..Default::default()
+    };
+    let metrics = std::sync::Arc::new(crate::metrics::Registry::new());
+    let registry = std::sync::Arc::new(ModelRegistry::new(cfg, metrics));
+    registry
+        .load("bench", SellModel::Acdc(cascade), None)
+        .map_err(|e| e.to_string())?;
+    let gateway = Gateway::start_registry(
+        registry,
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 4_096,
+            rate_rps: 0.0,
+            ..Default::default()
+        },
+    )?;
+    let report = loadgen::run(&LoadgenConfig {
+        addr: gateway.local_addr().to_string(),
+        mode: ArrivalMode::Closed,
+        concurrency: spec.concurrency,
+        duration: spec.duration,
+        width: spec.n,
+        rows_mix: spec.rows_mix.clone(),
+        timeout: Duration::from_secs(30),
+        seed: 7,
+    })?;
+    gateway.shutdown();
+    Ok(report)
+}
+
+/// Provenance block: where these numbers came from (host identity, SIMD
+/// arm, method). `method` should name the exact command or mirror used.
+pub fn provenance(method: &str) -> Json {
+    obj(vec![
+        (
+            "host",
+            Json::Str(std::env::var("HOSTNAME").unwrap_or_else(|_| "unknown".into())),
+        ),
+        ("os", Json::Str(std::env::consts::OS.to_string())),
+        ("arch", Json::Str(std::env::consts::ARCH.to_string())),
+        (
+            "threads",
+            Json::Num(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(0) as f64,
+            ),
+        ),
+        (
+            "simd_dispatch",
+            Json::Str(crate::dct::simd::active().name().to_string()),
+        ),
+        ("method", Json::Str(method.to_string())),
+    ])
+}
+
+/// The unified report (the `BENCH_e2e_infer.json` payload).
+pub fn to_json(
+    engine_rows: &[EngineBenchRow],
+    gateway: Option<&LoadReport>,
+    spec: &LoopbackSpec,
+    method: &str,
+) -> Json {
+    let gw = match gateway {
+        Some(r) => obj(vec![
+            ("mode", Json::Str("closed-loop loopback".into())),
+            ("width", Json::Num(spec.n as f64)),
+            ("depth", Json::Num(spec.depth as f64)),
+            ("concurrency", Json::Num(spec.concurrency as f64)),
+            (
+                "rows_mix",
+                Json::Arr(spec.rows_mix.iter().map(|&r| Json::Num(r as f64)).collect()),
+            ),
+            ("report", r.to_json()),
+        ]),
+        None => Json::Null,
+    };
+    obj(vec![
+        ("bench", Json::Str("e2e_infer".into())),
+        ("provenance", provenance(method)),
+        ("engine", engine_bench::to_json(engine_rows, method)),
+        ("gateway", gw),
+    ])
+}
+
+/// Write the unified report to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    engine_rows: &[EngineBenchRow],
+    gateway: Option<&LoadReport>,
+    spec: &LoopbackSpec,
+    method: &str,
+) -> Result<(), String> {
+    std::fs::write(path, to_json(engine_rows, gateway, spec, method).to_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bench::Bench;
+
+    #[test]
+    fn unified_report_shape() {
+        let rows = engine_bench::run(
+            &[(32, 8)],
+            &Bench {
+                warmup: Duration::from_millis(2),
+                measure: Duration::from_millis(10),
+                min_iters: 2,
+                max_iters: 10_000,
+            },
+        );
+        let spec = LoopbackSpec {
+            n: 32,
+            depth: 2,
+            concurrency: 2,
+            duration: Duration::from_millis(200),
+            rows_mix: vec![1],
+        };
+        let j = to_json(&rows, None, &spec, "unit test");
+        let re = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(re.get("bench").unwrap().as_str(), Some("e2e_infer"));
+        assert!(re.get("provenance").unwrap().get("method").is_some());
+        assert!(re.get("engine").unwrap().get("rows").is_some());
+        assert_eq!(re.get("gateway").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn loopback_leg_produces_traffic() {
+        let spec = LoopbackSpec {
+            n: 16,
+            depth: 2,
+            concurrency: 2,
+            duration: Duration::from_millis(300),
+            rows_mix: vec![1, 4],
+        };
+        let report = gateway_loopback(&spec).expect("loopback");
+        assert!(report.ok > 0, "no successful requests: {report:?}");
+        assert_eq!(report.errors, 0, "{report:?}");
+    }
+}

@@ -10,8 +10,11 @@
 //! * [`engine_bench`] — E9: per-row vs batched-SoA ACDC engine comparison
 //!   (the `BENCH_acdc_batch.json` source, see DESIGN.md §4);
 //! * [`trainer_bench`] — E11 throughput leg: full-SGD-step sweep over
-//!   layer width (the `BENCH_trainer_step.json` source, DESIGN.md §6).
+//!   layer width (the `BENCH_trainer_step.json` source, DESIGN.md §6);
+//! * [`e2e_bench`] — E12: unified engine GB/s + loopback gateway latency
+//!   report (the `BENCH_e2e_infer.json` source, `acdc bench --all`).
 
+pub mod e2e_bench;
 pub mod engine_bench;
 pub mod fig2;
 pub mod fig3;

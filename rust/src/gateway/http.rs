@@ -193,9 +193,19 @@ fn read_body<R: BufRead>(
     deadline: Instant,
 ) -> Result<Vec<u8>, HttpError> {
     let mut body = vec![0u8; len];
+    read_exact_retry(r, &mut body, deadline)?;
+    Ok(body)
+}
+
+/// Fill `buf` exactly, retrying short read-timeouts until `deadline`.
+fn read_exact_retry<R: BufRead>(
+    r: &mut R,
+    buf: &mut [u8],
+    deadline: Instant,
+) -> Result<(), HttpError> {
     let mut filled = 0usize;
-    while filled < len {
-        match r.read(&mut body[filled..]) {
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
             Ok(0) => return Err(HttpError::Io("eof mid-body".into())),
             Ok(n) => filled += n,
             Err(e) if is_timeout(&e) => {
@@ -207,7 +217,7 @@ fn read_body<R: BufRead>(
             Err(e) => return Err(HttpError::Io(e.to_string())),
         }
     }
-    Ok(body)
+    Ok(())
 }
 
 fn find_header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
@@ -227,38 +237,206 @@ fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
 }
 
 /// Parse one request. See [`ReadOutcome`] for the idle/EOF contract.
+///
+/// Thin wrapper over [`read_request_reusing`] (one shared parse pipeline
+/// — this allocating form is for clients/tests; the gateway's keep-alive
+/// loop uses the scratch form directly).
 pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<ReadOutcome, HttpError> {
+    let mut s = RequestScratch::new();
+    match read_request_reusing(r, max_body, &mut s)? {
+        ScratchOutcome::Eof => Ok(ReadOutcome::Eof),
+        ScratchOutcome::Idle => Ok(ReadOutcome::Idle),
+        ScratchOutcome::Request => {
+            s.headers.truncate(s.hdr_live);
+            Ok(ReadOutcome::Request(Request {
+                method: s.method,
+                path: s.path,
+                version: s.version,
+                headers: s.headers,
+                body: s.body,
+            }))
+        }
+    }
+}
+
+/// Reusable per-connection request parse state: every buffer (line,
+/// method/path/version, header names/values, body) is retained across
+/// requests on a keep-alive connection, so steady-state request parsing
+/// performs **zero heap allocations** once the buffers have grown to the
+/// connection's request shape.
+///
+/// The accessors mirror [`Request`]; [`read_request_reusing`] fills it.
+#[derive(Debug, Default)]
+pub struct RequestScratch {
+    line: String,
+    /// HTTP method (e.g. `GET`, `POST`).
+    pub method: String,
+    /// Request target as sent (may include a query string).
+    pub path: String,
+    /// Protocol version (`HTTP/1.0` or `HTTP/1.1`).
+    pub version: String,
+    /// Header slots; only the first `hdr_live` are current.
+    headers: Vec<(String, String)>,
+    hdr_live: usize,
+    /// Length-delimited body (empty without `Content-Length`).
+    pub body: Vec<u8>,
+}
+
+impl RequestScratch {
+    /// Empty scratch (buffers grow on first use).
+    pub fn new() -> RequestScratch {
+        RequestScratch::default()
+    }
+
+    /// Case-insensitive header lookup (current request only).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        find_header(self.headers(), name)
+    }
+
+    /// The current request's headers, names lowercased.
+    pub fn headers(&self) -> &[(String, String)] {
+        &self.headers[..self.hdr_live]
+    }
+
+    /// Path with any query string stripped (routing key).
+    pub fn route_path(&self) -> &str {
+        self.path.split('?').next().unwrap_or("")
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+    /// HTTP/1.0 requires an explicit `Connection: keep-alive`.
+    pub fn wants_keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        if self.version == "HTTP/1.0" {
+            conn.eq_ignore_ascii_case("keep-alive")
+        } else {
+            !conn.eq_ignore_ascii_case("close")
+        }
+    }
+}
+
+/// Store one header into the scratch's slot pool, reusing the slot's
+/// strings when one exists (free function so the caller can hold a borrow
+/// of the scratch's line buffer at the same time).
+fn push_header_reusing(
+    headers: &mut Vec<(String, String)>,
+    live: &mut usize,
+    name: &str,
+    value: &str,
+) {
+    if *live < headers.len() {
+        let (k, v) = &mut headers[*live];
+        k.clear();
+        for c in name.chars() {
+            k.push(c.to_ascii_lowercase());
+        }
+        v.clear();
+        v.push_str(value);
+    } else {
+        headers.push((name.to_ascii_lowercase(), value.to_string()));
+    }
+    *live += 1;
+}
+
+/// What one [`read_request_reusing`] attempt produced (on `Request` the
+/// scratch holds the parsed request).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScratchOutcome {
+    /// A complete request is in the scratch.
+    Request,
+    /// Clean close at a message boundary.
+    Eof,
+    /// Read timeout with no bytes — connection parked; poll and retry.
+    Idle,
+}
+
+/// [`read_request`] into reusable buffers — the gateway's keep-alive hot
+/// path (no allocation once the scratch has warmed up). Same framing
+/// contract and error behaviour as [`read_request`].
+pub fn read_request_reusing<R: BufRead>(
+    r: &mut R,
+    max_body: usize,
+    s: &mut RequestScratch,
+) -> Result<ScratchOutcome, HttpError> {
     let deadline = Instant::now() + STALL_DEADLINE;
-    let mut line = String::new();
-    match read_line_retry(r, &mut line, true, deadline)? {
+    s.line.clear();
+    match read_line_retry(r, &mut s.line, true, deadline)? {
         LineRead::Line => {}
-        LineRead::Eof => return Ok(ReadOutcome::Eof),
-        LineRead::Idle => return Ok(ReadOutcome::Idle),
+        LineRead::Eof => return Ok(ScratchOutcome::Eof),
+        LineRead::Idle => return Ok(ScratchOutcome::Idle),
     }
-    let trimmed = line.trim_end_matches(['\r', '\n']);
-    let mut parts = trimmed.splitn(3, ' ');
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let version = parts.next().unwrap_or("").to_string();
-    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
-        return Err(HttpError::Malformed(format!("bad request line '{trimmed}'")));
+    s.method.clear();
+    s.path.clear();
+    s.version.clear();
+    {
+        let trimmed = s.line.trim_end_matches(['\r', '\n']);
+        let mut parts = trimmed.splitn(3, ' ');
+        let m = parts.next().unwrap_or("");
+        let p = parts.next().unwrap_or("");
+        let v = parts.next().unwrap_or("");
+        if m.is_empty() || p.is_empty() || !v.starts_with("HTTP/1.") {
+            return Err(HttpError::Malformed(format!("bad request line '{trimmed}'")));
+        }
+        s.method.push_str(m);
+        s.path.push_str(p);
+        s.version.push_str(v);
     }
-    let headers = read_headers(r, deadline)?;
-    if find_header(&headers, "transfer-encoding").is_some() {
+    s.hdr_live = 0;
+    let mut total = 0usize;
+    loop {
+        s.line.clear();
+        match read_line_retry(r, &mut s.line, false, deadline)? {
+            LineRead::Line => {}
+            _ => return Err(HttpError::Io("eof in headers".into())),
+        }
+        let trimmed = s.line.trim_end_matches(['\r', '\n']);
+        if trimmed.is_empty() {
+            break;
+        }
+        total += s.line.len();
+        if total > MAX_HEADER_BYTES {
+            return Err(HttpError::Malformed("header section too large".into()));
+        }
+        let (name, value) = trimmed
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("bad header line '{trimmed}'")))?;
+        push_header_reusing(&mut s.headers, &mut s.hdr_live, name.trim(), value.trim());
+    }
+    if find_header(s.headers(), "transfer-encoding").is_some() {
         return Err(HttpError::Malformed("transfer-encoding not supported".into()));
     }
-    let len = content_length(&headers)?;
+    let len = content_length(s.headers())?;
     if len > max_body {
         return Err(HttpError::BodyTooLarge(len));
     }
-    let body = read_body(r, len, deadline)?;
-    Ok(ReadOutcome::Request(Request {
-        method,
-        path,
-        version,
-        headers,
-        body,
-    }))
+    s.body.clear();
+    s.body.resize(len, 0);
+    read_exact_retry(r, &mut s.body, deadline)?;
+    Ok(ScratchOutcome::Request)
+}
+
+/// Serialize a response head into `head` (cleared first): status line,
+/// content-type, explicit `content-length` for a body of `body_len`
+/// bytes, and the `connection` header. Writing into a retained buffer
+/// keeps the streamed response path allocation-free.
+pub fn write_head(
+    head: &mut Vec<u8>,
+    status: u16,
+    content_type: &str,
+    body_len: usize,
+    keep_alive: bool,
+) {
+    use std::io::Write as _;
+    head.clear();
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body_len,
+        if keep_alive { "keep-alive" } else { "close" },
+    );
 }
 
 /// Canonical reason phrase for the statuses the gateway emits.
@@ -566,6 +744,72 @@ mod tests {
             other => panic!("{other:?}"),
         };
         assert_eq!(req.body, b"{\"features\":[1]}");
+    }
+
+    #[test]
+    fn scratch_reader_matches_allocating_reader_and_reuses_buffers() {
+        let raw = "POST /v1/infer HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: 4\r\n\r\nabcd\
+                   GET /metrics?x=1 HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let mut c = Cursor::new(raw.as_bytes().to_vec());
+        let mut s = RequestScratch::new();
+        assert_eq!(
+            read_request_reusing(&mut c, 1 << 20, &mut s).unwrap(),
+            ScratchOutcome::Request
+        );
+        assert_eq!(s.method, "POST");
+        assert_eq!(s.route_path(), "/v1/infer");
+        assert_eq!(s.header("Content-Type"), Some("application/json"));
+        assert_eq!(s.body, b"abcd");
+        assert!(s.wants_keep_alive());
+        // Second request reuses the same scratch; stale headers/body from
+        // the first must not leak through.
+        assert_eq!(
+            read_request_reusing(&mut c, 1 << 20, &mut s).unwrap(),
+            ScratchOutcome::Request
+        );
+        assert_eq!(s.method, "GET");
+        assert_eq!(s.route_path(), "/metrics");
+        assert_eq!(s.header("content-type"), None, "stale header leaked");
+        assert!(s.body.is_empty());
+        assert!(!s.wants_keep_alive());
+        assert_eq!(
+            read_request_reusing(&mut c, 1 << 20, &mut s).unwrap(),
+            ScratchOutcome::Eof
+        );
+    }
+
+    #[test]
+    fn scratch_reader_rejects_oversize_and_garbage() {
+        let mut s = RequestScratch::new();
+        let mut c = Cursor::new(b"POST / HTTP/1.1\r\ncontent-length: 99\r\n\r\n".to_vec());
+        assert!(matches!(
+            read_request_reusing(&mut c, 10, &mut s),
+            Err(HttpError::BodyTooLarge(99))
+        ));
+        let mut c = Cursor::new(b"NONSENSE\r\n\r\n".to_vec());
+        assert!(matches!(
+            read_request_reusing(&mut c, 1 << 20, &mut s),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn write_head_roundtrips_through_client_parser() {
+        let mut head = Vec::new();
+        write_head(&mut head, 200, "application/json", 2, true);
+        let mut wire = head.clone();
+        wire.extend_from_slice(b"[]");
+        let mut c = Cursor::new(wire);
+        let parsed = read_response(&mut c).unwrap();
+        assert_eq!(parsed.status, 200);
+        assert_eq!(parsed.header("content-type"), Some("application/json"));
+        assert_eq!(parsed.body_str(), "[]");
+        assert!(parsed.keep_alive());
+        // Reuse clears the previous head.
+        write_head(&mut head, 503, "text/plain", 0, false);
+        let s = String::from_utf8(head.clone()).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503"), "{s}");
+        assert!(s.contains("connection: close"));
     }
 
     #[test]

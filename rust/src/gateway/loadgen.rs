@@ -261,6 +261,10 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
     };
     let mut conn: Option<(TcpStream, BufReader<TcpStream>)> = None;
     let mut mix_at = wi; // stagger the mix cycle across workers
+    // Reused payload buffer: the worker renders every request body into
+    // one retained String, so payload generation stops allocating once
+    // the largest mix entry has been seen.
+    let mut body = String::new();
     while Instant::now() < deadline {
         if let Some(iv) = interval {
             let now = Instant::now();
@@ -273,7 +277,7 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
         }
         let rows = cfg.rows_mix[mix_at % cfg.rows_mix.len()];
         mix_at += 1;
-        let body = request_body(rows, cfg.width, &mut rng);
+        render_body_into(&mut body, rows, cfg.width, &mut rng);
         if conn.is_none() {
             conn = connect(&cfg.addr, cfg.timeout);
             if conn.is_none() {
@@ -339,23 +343,42 @@ fn connect(addr: &str, timeout: Duration) -> Option<(TcpStream, BufReader<TcpStr
 /// JSON body for one request: `features` for a single row, `rows` batch
 /// otherwise.
 fn request_body(rows: usize, width: usize, rng: &mut Pcg32) -> String {
-    let row_json = |rng: &mut Pcg32| {
-        Json::Arr(
-            rng.normal_vec(width, 0.0, 1.0)
-                .into_iter()
-                .map(|v| Json::Num(v as f64))
-                .collect(),
-        )
+    let mut out = String::new();
+    render_body_into(&mut out, rows, width, rng);
+    out
+}
+
+/// Render one request body into a reused buffer — no `Json` tree, no
+/// per-request String (the canonical shapes the gateway's fast parser
+/// consumes without touching its own DOM parser).
+fn render_body_into(buf: &mut String, rows: usize, width: usize, rng: &mut Pcg32) {
+    use std::fmt::Write as _;
+    buf.clear();
+    let mut row = |buf: &mut String, rng: &mut Pcg32| {
+        buf.push('[');
+        for i in 0..width {
+            if i > 0 {
+                buf.push(',');
+            }
+            let v = rng.normal_with(0.0, 1.0) as f32;
+            let _ = write!(buf, "{v}");
+        }
+        buf.push(']');
     };
-    let v = if rows == 1 {
-        obj(vec![("features", row_json(rng))])
+    if rows == 1 {
+        buf.push_str("{\"features\":");
+        row(buf, rng);
     } else {
-        obj(vec![(
-            "rows",
-            Json::Arr((0..rows).map(|_| row_json(rng)).collect()),
-        )])
-    };
-    v.to_string()
+        buf.push_str("{\"rows\":[");
+        for r in 0..rows {
+            if r > 0 {
+                buf.push(',');
+            }
+            row(buf, rng);
+        }
+        buf.push(']');
+    }
+    buf.push('}');
 }
 
 #[cfg(test)]

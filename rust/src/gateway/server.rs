@@ -45,7 +45,7 @@
 //! every connection thread signals on exit — the drain is event-driven
 //! (no sleep-polling), bounded by `drain_timeout_ms`.
 
-use std::io::{BufReader, ErrorKind};
+use std::io::{BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -54,8 +54,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::admission::{Admission, AdmitError};
-use super::http::{self, HttpError, ReadOutcome, Request, Response};
+use super::http::{self, HttpError, RequestScratch, Response, ScratchOutcome};
 use crate::config::{GatewayConfig, TrainerConfig};
+use crate::coordinator::request::{ResponseSlot, RowRef};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
@@ -337,6 +338,112 @@ impl Drop for ConnSlot {
     }
 }
 
+/// All reusable per-connection buffers: HTTP parse scratch, the inference
+/// arena, and the response head/body write buffers. Everything grows to
+/// the connection's request shape once and is then reused — the basis of
+/// the zero-allocation steady state (pinned by `tests/zero_alloc.rs`).
+struct ConnBufs {
+    req: RequestScratch,
+    arena: InferArena,
+    head: Vec<u8>,
+    body: Vec<u8>,
+}
+
+impl ConnBufs {
+    fn new() -> ConnBufs {
+        ConnBufs {
+            req: RequestScratch::new(),
+            arena: InferArena::default(),
+            head: Vec::new(),
+            body: Vec::new(),
+        }
+    }
+}
+
+/// The connection-owned inference arena: flat `[rows × width]` input and
+/// output buffers, plus the reusable completion slots and per-row
+/// metadata. Workers copy rows in/out of `rows`/`outs` under the slot
+/// protocol ([`crate::coordinator::request::ResponseSlot`]).
+#[derive(Default)]
+struct InferArena {
+    /// Row-major `[rows, width]` parsed input features.
+    rows: Vec<f32>,
+    /// Row-major `[rows, width]` output destination (stride = width).
+    outs: Vec<f32>,
+    /// Reusable completion slots, one per concurrent row of one request.
+    slots: Vec<Arc<ResponseSlot>>,
+    /// Sequence numbers of the current request's slot uses.
+    seqs: Vec<u64>,
+    /// Output row lengths (≤ width) of the current request.
+    out_lens: Vec<usize>,
+    /// Batch bucket each row was served in.
+    batch_sizes: Vec<usize>,
+}
+
+impl InferArena {
+    /// Grow (never shrink) the output/metadata buffers for a request of
+    /// `rows` rows of `width` features. Called before any slot is issued,
+    /// so no outstanding [`RowRef`] can observe a reallocation.
+    fn ensure(&mut self, rows: usize, width: usize) {
+        let need = rows * width;
+        if self.outs.len() < need {
+            self.outs.resize(need, 0.0);
+        }
+        while self.slots.len() < rows {
+            self.slots.push(Arc::new(ResponseSlot::new()));
+        }
+        if self.seqs.len() < rows {
+            self.seqs.resize(rows, 0);
+        }
+        if self.out_lens.len() < rows {
+            self.out_lens.resize(rows, 0);
+        }
+        if self.batch_sizes.len() < rows {
+            self.batch_sizes.resize(rows, 0);
+        }
+    }
+}
+
+/// Abandons every issued slot use on drop, so no exit path (timeout,
+/// shed, executor error, panic) can leave a worker holding live pointers
+/// into an arena the connection is about to reuse. Abandoning a completed
+/// use is a no-op, so the guard is safe to drop on success too.
+struct SlotReaper<'a> {
+    slots: &'a [Arc<ResponseSlot>],
+    seqs: &'a [u64],
+    count: usize,
+}
+
+impl Drop for SlotReaper<'_> {
+    fn drop(&mut self) {
+        for r in 0..self.count {
+            self.slots[r].abandon(self.seqs[r]);
+        }
+    }
+}
+
+/// The `{name}` of a well-formed `/v1/models/{name}/infer` path — the
+/// single source of the model-name rules shared by the fast-path
+/// interceptor and `route`'s 404/405 leftovers.
+fn infer_model_name(path: &str) -> Option<&str> {
+    path.strip_prefix("/v1/models/")
+        .and_then(|rest| rest.strip_suffix("/infer"))
+        .filter(|name| !name.is_empty() && !name.contains('/'))
+}
+
+/// If `method`/`path` is an inference POST, the (optional) model name:
+/// `Some(None)` = default-model `/v1/infer`, `Some(Some(name))` = the
+/// per-model route. These run on the streaming fast path, not `route`.
+fn infer_route<'a>(method: &str, path: &'a str) -> Option<Option<&'a str>> {
+    if method != "POST" {
+        return None;
+    }
+    if path == "/v1/infer" {
+        return Some(None);
+    }
+    infer_model_name(path).map(Some)
+}
+
 fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     let _slot = ConnSlot(Arc::clone(&shared));
     let _ = stream.set_nonblocking(false);
@@ -348,27 +455,61 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     };
     let mut reader = BufReader::new(reader_stream);
     let mut writer = stream;
+    let mut bufs = ConnBufs::new();
     loop {
-        match http::read_request(&mut reader, shared.cfg.max_body_bytes) {
-            Ok(ReadOutcome::Idle) => {
+        let ConnBufs {
+            req,
+            arena,
+            head,
+            body,
+        } = &mut bufs;
+        match http::read_request_reusing(&mut reader, shared.cfg.max_body_bytes, req) {
+            Ok(ScratchOutcome::Idle) => {
                 if shared.stop.load(Ordering::Acquire) || shared.admission.is_draining() {
                     break;
                 }
             }
-            Ok(ReadOutcome::Eof) => break,
-            Ok(ReadOutcome::Request(req)) => {
+            Ok(ScratchOutcome::Eof) => break,
+            Ok(ScratchOutcome::Request) => {
                 let t0 = Instant::now();
                 shared.requests.inc();
-                let resp = route(&shared, &req);
-                shared.request_ns.record(t0.elapsed());
-                if resp.status == 200 {
-                    shared.responses_ok.inc();
-                }
                 let keep = req.wants_keep_alive()
                     && !shared.stop.load(Ordering::Acquire)
                     && !shared.admission.is_draining();
-                if resp.write_to(&mut writer, keep).is_err() || !keep {
-                    break;
+                if let Some(model) = infer_route(&req.method, req.route_path()) {
+                    // Streaming fast path: parse into the arena, serve
+                    // through the slot protocol, serialize straight into
+                    // the connection's write buffers — no allocation after
+                    // warmup.
+                    match infer(&shared, req, model, arena, body) {
+                        Ok(()) => {
+                            shared.responses_ok.inc();
+                            http::write_head(head, 200, "application/json", body.len(), keep);
+                            shared.request_ns.record(t0.elapsed());
+                            let wrote = writer
+                                .write_all(head)
+                                .and_then(|()| writer.write_all(body))
+                                .and_then(|()| writer.flush());
+                            if wrote.is_err() || !keep {
+                                break;
+                            }
+                        }
+                        Err(resp) => {
+                            shared.request_ns.record(t0.elapsed());
+                            if resp.write_to(&mut writer, keep).is_err() || !keep {
+                                break;
+                            }
+                        }
+                    }
+                } else {
+                    let resp = route(&shared, req);
+                    shared.request_ns.record(t0.elapsed());
+                    if resp.status == 200 {
+                        shared.responses_ok.inc();
+                    }
+                    if resp.write_to(&mut writer, keep).is_err() || !keep {
+                        break;
+                    }
                 }
             }
             Err(HttpError::BodyTooLarge(n)) => {
@@ -387,32 +528,31 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     }
 }
 
-fn route(shared: &Arc<Shared>, req: &Request) -> Response {
+fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
     let path = req.route_path();
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => return healthz(shared),
         ("GET", "/metrics") => return Response::text(200, &shared.metrics.prometheus()),
         ("GET", "/v1/models") => return list_models(shared),
-        ("POST", "/v1/infer") => return infer(shared, req, None),
         ("GET", "/v1/jobs") => return list_jobs(shared),
+        // POST /v1/infer is served on the streaming fast path before
+        // `route`; everything landing here is a bad method.
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer")
         | (_, "/v1/jobs") => {
             return Response::json(405, &err_json("method not allowed"));
         }
         _ => {}
     }
-    // /v1/models/{name}/infer
-    if let Some(name) = path
-        .strip_prefix("/v1/models/")
-        .and_then(|rest| rest.strip_suffix("/infer"))
-    {
-        if name.is_empty() || name.contains('/') {
-            return Response::json(404, &err_json("not found"));
+    // /v1/models/{name}/infer — POST with a valid name is intercepted on
+    // the streaming fast path; here only bad names / bad methods remain.
+    if let Some(rest) = path.strip_prefix("/v1/models/") {
+        if rest.strip_suffix("/infer").is_some() {
+            return if infer_model_name(path).is_some() {
+                Response::json(405, &err_json("method not allowed"))
+            } else {
+                Response::json(404, &err_json("not found"))
+            };
         }
-        if req.method != "POST" {
-            return Response::json(405, &err_json("method not allowed"));
-        }
-        return infer(shared, req, Some(name));
     }
     // /v1/models/{name}/train — submit a background training job
     if let Some(name) = path
@@ -534,7 +674,7 @@ fn registry_error(e: &RegistryError) -> Response {
     Response::json(e.status(), &err_json(&e.to_string()))
 }
 
-fn admin_body(req: &Request) -> Result<Json, Response> {
+fn admin_body(req: &RequestScratch) -> Result<Json, Response> {
     let body = std::str::from_utf8(&req.body)
         .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
     if body.trim().is_empty() {
@@ -543,7 +683,7 @@ fn admin_body(req: &Request) -> Result<Json, Response> {
     Json::parse(body).map_err(|e| Response::json(400, &err_json(&format!("bad json: {e}"))))
 }
 
-fn admin_load(shared: &Arc<Shared>, req: &Request, name: &str) -> Response {
+fn admin_load(shared: &Arc<Shared>, req: &RequestScratch, name: &str) -> Response {
     let body = match admin_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -586,7 +726,7 @@ fn admin_unload(shared: &Arc<Shared>, name: &str) -> Response {
     }
 }
 
-fn admin_alias(shared: &Arc<Shared>, req: &Request, alias: &str) -> Response {
+fn admin_alias(shared: &Arc<Shared>, req: &RequestScratch, alias: &str) -> Response {
     let body = match admin_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -607,7 +747,7 @@ fn admin_alias(shared: &Arc<Shared>, req: &Request, alias: &str) -> Response {
     }
 }
 
-fn admin_default(shared: &Arc<Shared>, req: &Request) -> Response {
+fn admin_default(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
     let body = match admin_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -737,7 +877,7 @@ fn job_spec_from_body(defaults: &JobSpec, body: &Json) -> Result<JobSpec, String
     Ok(spec)
 }
 
-fn train_submit(shared: &Arc<Shared>, req: &Request, name: &str) -> Response {
+fn train_submit(shared: &Arc<Shared>, req: &RequestScratch, name: &str) -> Response {
     let body = match admin_body(req) {
         Ok(v) => v,
         Err(resp) => return resp,
@@ -789,117 +929,391 @@ fn job_action(shared: &Arc<Shared>, id: u64, action: &str) -> Response {
     }
 }
 
-fn infer(shared: &Arc<Shared>, req: &Request, model: Option<&str>) -> Response {
+/// Serve one inference request on the zero-allocation streaming path.
+///
+/// Flow: admission permit → epoch handle → parse the body straight into
+/// the connection arena (specialized scanner; non-canonical bodies fall
+/// back to the DOM parser) → issue slot sequences → submit borrowed rows
+/// → wait on the slots → serialize floats directly into the connection's
+/// write buffer. On success `body_out` holds the complete JSON body and
+/// nothing was heap-allocated (after warmup); on failure the returned
+/// [`Response`] carries the error exactly as the legacy path did.
+fn infer(
+    shared: &Arc<Shared>,
+    req: &RequestScratch,
+    model: Option<&str>,
+    arena: &mut InferArena,
+    body_out: &mut Vec<u8>,
+) -> Result<(), Response> {
     // The permit holds an in-flight slot for the whole submit → response
     // window; dropping it on any exit path releases the slot.
-    let _permit = match shared.admission.try_admit() {
-        Ok(p) => p,
-        Err(e) => return shed_response(shared, e),
-    };
+    let _permit = shared.admission.try_admit().map_err(|e| shed_response(shared, e))?;
+    let t0 = Instant::now();
     // The handle pins this request to one (model, version) epoch: the
     // request survives a concurrent hot swap on the version it was
     // admitted against, and blocks unload until it completes.
     let handle: ModelHandle = match model {
-        Some(name) => match shared.registry.resolve(name) {
-            Ok(h) => h,
-            Err(e) => return registry_error(&e),
-        },
-        None => match shared.registry.resolve_default() {
-            Ok(h) => h,
-            Err(e) => return registry_error(&e),
-        },
+        Some(name) => shared.registry.resolve(name),
+        None => shared.registry.resolve_default(),
+    }
+    .map_err(|e| registry_error(&e))?;
+    let width = handle.width();
+    let body = std::str::from_utf8(&req.body)
+        .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
+    let rows = match parse_infer_fast(body, width, shared.cfg.max_rows_per_request, &mut arena.rows)
+    {
+        Ok(Some(rows)) => rows,
+        Ok(None) => {
+            // Non-canonical body (extra keys, odd spacing, bad numbers):
+            // the DOM parser preserves the legacy validation semantics.
+            let parsed = Json::parse(body)
+                .map_err(|e| Response::json(400, &err_json(&format!("bad json: {e}"))))?;
+            extract_rows_dom(&parsed, width, shared.cfg.max_rows_per_request, &mut arena.rows)
+                .map_err(|msg| Response::json(400, &err_json(&msg)))?
+        }
+        Err(msg) => return Err(Response::json(400, &err_json(&msg))),
     };
-    let body = match std::str::from_utf8(&req.body) {
-        Ok(s) => s,
-        Err(_) => return Response::json(400, &err_json("body is not valid utf-8")),
+    debug_assert_eq!(arena.rows.len(), rows * width);
+    // Grow the output arena and slot pool *before* issuing any sequence,
+    // so no outstanding RowRef can observe a reallocation.
+    arena.ensure(rows, width);
+    for r in 0..rows {
+        arena.seqs[r] = arena.slots[r].issue();
+    }
+    // From here on every exit path runs the reaper, so no worker can
+    // touch the arena after this function returns.
+    let reaper = SlotReaper {
+        slots: &arena.slots,
+        seqs: &arena.seqs,
+        count: rows,
     };
-    let parsed = match Json::parse(body) {
-        Ok(v) => v,
-        Err(e) => return Response::json(400, &err_json(&format!("bad json: {e}"))),
-    };
-    let rows = match extract_rows(&parsed, handle.width(), shared.cfg.max_rows_per_request) {
-        Ok(rows) => rows,
-        Err(msg) => return Response::json(400, &err_json(&msg)),
-    };
-    let mut rxs = Vec::with_capacity(rows.len());
-    for row in rows {
-        match handle.submit(row) {
-            Ok(rx) => rxs.push(rx),
+    for r in 0..rows {
+        // SAFETY: the input/output regions live in the connection arena,
+        // are disjoint per row (stride = width), and stay untouched until
+        // the slot use is observed done or the reaper abandons it.
+        let row = unsafe {
+            RowRef::new(
+                arena.rows.as_ptr().add(r * width),
+                width,
+                arena.outs.as_mut_ptr().add(r * width),
+                width,
+                arena.seqs[r],
+            )
+        };
+        match handle.submit_slot(row, &arena.slots[r]) {
+            Ok(()) => {}
             Err(SubmitError::QueueFull) => {
                 shared.admission.note_queue_full();
-                return shed_retry_after(shared, 503, "coordinator queue full");
+                return Err(shed_retry_after(shared, 503, "coordinator queue full"));
             }
             Err(SubmitError::Closed) => {
-                return shed_retry_after(shared, 503, "coordinator shutting down");
+                return Err(shed_retry_after(shared, 503, "coordinator shutting down"));
             }
         }
     }
-    // Rows submitted before a mid-batch shed are still answered by the
-    // coordinator; their receivers simply drop here.
+    // Rows submitted before a mid-batch shed are abandoned by the reaper;
+    // the workers then skip them without touching the arena.
     let deadline = Instant::now() + Duration::from_millis(shared.cfg.request_timeout_ms);
-    let mut outputs = Vec::with_capacity(rxs.len());
-    let mut batch_sizes = Vec::with_capacity(rxs.len());
     let mut queue_us = 0u64;
     let mut execute_us = 0u64;
-    for rx in rxs {
-        let remaining = deadline.saturating_duration_since(Instant::now());
-        match rx.recv_timeout(remaining) {
-            Ok(resp) => {
-                queue_us = queue_us.max(resp.queue_us);
-                execute_us = execute_us.max(resp.execute_us);
-                batch_sizes.push(Json::Num(resp.batch_size as f64));
-                match resp.output {
-                    Ok(row) => outputs.push(Json::Arr(
-                        row.into_iter().map(|v| Json::Num(v as f64)).collect(),
-                    )),
+    for r in 0..rows {
+        match arena.slots[r].wait(arena.seqs[r], deadline) {
+            Some(reply) => {
+                queue_us = queue_us.max(reply.queue_us);
+                execute_us = execute_us.max(reply.execute_us);
+                arena.batch_sizes[r] = reply.batch_size;
+                match reply.output {
+                    Ok(len) => arena.out_lens[r] = len,
                     Err(e) => {
-                        return Response::json(500, &err_json(&format!("executor: {e}")))
+                        return Err(Response::json(500, &err_json(&format!("executor: {e}"))))
                     }
                 }
             }
-            Err(_) => {
+            None => {
                 shared.timeouts.inc();
-                return Response::json(504, &err_json("inference timed out"));
+                return Err(Response::json(504, &err_json("inference timed out")));
             }
         }
     }
-    let mut pairs = vec![
-        ("model", Json::Str(handle.name().to_string())),
-        ("version", Json::Num(handle.version() as f64)),
-        ("rows", Json::Num(outputs.len() as f64)),
-        ("queue_us", Json::Num(queue_us as f64)),
-        ("execute_us", Json::Num(execute_us as f64)),
-        ("batch_sizes", Json::Arr(batch_sizes)),
-    ];
-    if outputs.len() == 1 {
-        pairs.push(("output", outputs[0].clone()));
-    }
-    pairs.push(("outputs", Json::Arr(outputs)));
-    Response::json(200, &obj(pairs))
+    // All rows completed — reaping is now a no-op; drop the guard so the
+    // serializer below can borrow the arena freely.
+    drop(reaper);
+    handle.observe_request(t0.elapsed());
+    write_infer_body(
+        body_out,
+        handle.name(),
+        handle.version(),
+        rows,
+        width,
+        queue_us,
+        execute_us,
+        arena,
+    );
+    Ok(())
 }
 
-/// Feature rows from a request body: `{"features": [...]}` (one row) or
-/// `{"rows": [[...], ...]}` (a batch).
-fn extract_rows(v: &Json, width: usize, max_rows: usize) -> Result<Vec<Vec<f32>>, String> {
-    let parse_row = |arr: &[Json]| -> Result<Vec<f32>, String> {
+/// Specialized scanner for the canonical inference bodies
+/// (`{"features": [...]}` / `{"rows": [[...], ...]}`): parses the floats
+/// straight into `out` with zero allocation. Returns `Ok(None)` when the
+/// body deviates from the canonical shape — the caller then falls back to
+/// the DOM parser, which preserves the legacy validation semantics
+/// (extra keys, duplicate keys, overflow literals, trailing garbage).
+fn parse_infer_fast(
+    body: &str,
+    width: usize,
+    max_rows: usize,
+    out: &mut Vec<f32>,
+) -> Result<Option<usize>, String> {
+    let b = body.as_bytes();
+    let mut i = 0usize;
+    out.clear();
+    skip_ws(b, &mut i);
+    if next_byte(b, &mut i) != Some(b'{') {
+        return Ok(None);
+    }
+    skip_ws(b, &mut i);
+    let Some(key) = scan_plain_key(b, &mut i) else {
+        return Ok(None);
+    };
+    skip_ws(b, &mut i);
+    if next_byte(b, &mut i) != Some(b':') {
+        return Ok(None);
+    }
+    skip_ws(b, &mut i);
+    let rows = if key == b"features" {
+        match scan_num_row(b, &mut i, width, out)? {
+            Some(()) => 1,
+            None => return Ok(None),
+        }
+    } else if key == b"rows" {
+        if next_byte(b, &mut i) != Some(b'[') {
+            return Ok(None);
+        }
+        skip_ws(b, &mut i);
+        if peek_byte(b, i) == Some(b']') {
+            return Err("'rows' must not be empty".into());
+        }
+        let mut rows = 0usize;
+        loop {
+            if scan_num_row(b, &mut i, width, out)?.is_none() {
+                return Ok(None);
+            }
+            rows += 1;
+            if rows > max_rows {
+                // The DOM path reports the exact count; counting the
+                // remainder here just to echo it back is not worth it.
+                return Err(format!("too many rows ({rows}+ > {max_rows})"));
+            }
+            skip_ws(b, &mut i);
+            match next_byte(b, &mut i) {
+                Some(b',') => skip_ws(b, &mut i),
+                Some(b']') => break,
+                _ => return Ok(None),
+            }
+        }
+        rows
+    } else {
+        return Ok(None);
+    };
+    skip_ws(b, &mut i);
+    if next_byte(b, &mut i) != Some(b'}') {
+        return Ok(None);
+    }
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Ok(None);
+    }
+    Ok(Some(rows))
+}
+
+#[inline]
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+#[inline]
+fn peek_byte(b: &[u8], i: usize) -> Option<u8> {
+    b.get(i).copied()
+}
+
+#[inline]
+fn next_byte(b: &[u8], i: &mut usize) -> Option<u8> {
+    let v = b.get(*i).copied();
+    if v.is_some() {
+        *i += 1;
+    }
+    v
+}
+
+/// A quoted key with no escapes; returns the raw bytes between quotes.
+fn scan_plain_key<'a>(b: &'a [u8], i: &mut usize) -> Option<&'a [u8]> {
+    if next_byte(b, i) != Some(b'"') {
+        return None;
+    }
+    let start = *i;
+    while let Some(c) = peek_byte(b, *i) {
+        match c {
+            b'"' => {
+                let key = &b[start..*i];
+                *i += 1;
+                return Some(key);
+            }
+            b'\\' => return None, // escapes → DOM fallback
+            _ => *i += 1,
+        }
+    }
+    None
+}
+
+/// One `[num, num, ...]` row of exactly `width` finite numbers, appended
+/// to `out`. `Ok(None)` = not canonical (fall back to the DOM parser,
+/// which also owns the overflow/NaN error wording); `Err` = definitively
+/// invalid with the legacy message.
+fn scan_num_row(
+    b: &[u8],
+    i: &mut usize,
+    width: usize,
+    out: &mut Vec<f32>,
+) -> Result<Option<()>, String> {
+    if next_byte(b, i) != Some(b'[') {
+        return Ok(None);
+    }
+    let row_start = out.len();
+    let mut count = 0usize;
+    skip_ws(b, i);
+    if peek_byte(b, *i) == Some(b']') {
+        *i += 1;
+        return Err(format!("row has 0 features, model width is {width}"));
+    }
+    loop {
+        skip_ws(b, i);
+        let start = *i;
+        while let Some(c) = peek_byte(b, *i) {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                *i += 1;
+            } else {
+                break;
+            }
+        }
+        if start == *i || !is_json_number(&b[start..*i]) {
+            // Not a strict JSON number literal (strings, null, "+1", "1.",
+            // leading zeros, …) — the DOM parser owns those verdicts.
+            out.truncate(row_start);
+            return Ok(None);
+        }
+        // This slice is ASCII by construction.
+        let text = std::str::from_utf8(&b[start..*i]).unwrap_or("");
+        let Ok(v) = text.parse::<f64>() else {
+            out.truncate(row_start);
+            return Ok(None);
+        };
+        if !v.is_finite() {
+            // Overflow literals ("1e999"): let the DOM parser reject with
+            // the canonical "number out of range" wording.
+            out.truncate(row_start);
+            return Ok(None);
+        }
+        count += 1;
+        if count <= width {
+            out.push(v as f32);
+        }
+        skip_ws(b, i);
+        match next_byte(b, i) {
+            Some(b',') => {}
+            Some(b']') => break,
+            _ => {
+                out.truncate(row_start);
+                return Ok(None);
+            }
+        }
+    }
+    if count != width {
+        out.truncate(row_start);
+        return Err(format!(
+            "row has {count} features, model width is {width}"
+        ));
+    }
+    Ok(Some(()))
+}
+
+/// Strict JSON number grammar check
+/// (`-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`) — keeps the fast
+/// scanner exactly as strict as [`Json::parse`], falling anything laxer
+/// back to the DOM.
+fn is_json_number(t: &[u8]) -> bool {
+    let mut i = 0usize;
+    if t.first() == Some(&b'-') {
+        i += 1;
+    }
+    match t.get(i) {
+        Some(b'0') => i += 1,
+        Some(c) if c.is_ascii_digit() => {
+            while t.get(i).is_some_and(|c| c.is_ascii_digit()) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if t.get(i) == Some(&b'.') {
+        i += 1;
+        let s = i;
+        while t.get(i).is_some_and(|c| c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == s {
+            return false;
+        }
+    }
+    if matches!(t.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(t.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        let s = i;
+        while t.get(i).is_some_and(|c| c.is_ascii_digit()) {
+            i += 1;
+        }
+        if i == s {
+            return false;
+        }
+    }
+    i == t.len()
+}
+
+/// Feature rows from an already-parsed body into the flat arena buffer:
+/// `{"features": [...]}` (one row) or `{"rows": [[...], ...]}` (a batch).
+/// The DOM fallback of [`parse_infer_fast`] — preserves the legacy
+/// validation wording exactly.
+fn extract_rows_dom(
+    v: &Json,
+    width: usize,
+    max_rows: usize,
+    out: &mut Vec<f32>,
+) -> Result<usize, String> {
+    out.clear();
+    let mut push_row = |arr: &[Json], out: &mut Vec<f32>| -> Result<(), String> {
         if arr.len() != width {
             return Err(format!(
                 "row has {} features, model width is {width}",
                 arr.len()
             ));
         }
-        arr.iter()
-            .map(|x| {
-                x.as_f64()
-                    .map(|f| f as f32)
-                    .filter(|f| f.is_finite())
-                    .ok_or_else(|| "features must be finite numbers".to_string())
-            })
-            .collect()
+        for x in arr {
+            let f = x
+                .as_f64()
+                .map(|f| f as f32)
+                .filter(|f| f.is_finite())
+                .ok_or_else(|| "features must be finite numbers".to_string())?;
+            out.push(f);
+        }
+        Ok(())
     };
     if let Some(features) = v.get("features") {
         let arr = features.as_arr().ok_or("'features' must be an array")?;
-        return Ok(vec![parse_row(arr)?]);
+        push_row(arr, out)?;
+        return Ok(1);
     }
     if let Some(rows) = v.get("rows") {
         let rows = rows.as_arr().ok_or("'rows' must be an array of arrays")?;
@@ -909,12 +1323,79 @@ fn extract_rows(v: &Json, width: usize, max_rows: usize) -> Result<Vec<Vec<f32>>
         if rows.len() > max_rows {
             return Err(format!("too many rows ({} > {max_rows})", rows.len()));
         }
-        return rows
-            .iter()
-            .map(|row| parse_row(row.as_arr().ok_or("'rows' must be an array of arrays")?))
-            .collect();
+        for row in rows {
+            push_row(row.as_arr().ok_or("'rows' must be an array of arrays")?, out)?;
+        }
+        return Ok(rows.len());
     }
     Err("body must carry 'features' (one row) or 'rows' (a batch)".into())
+}
+
+/// Serialize the success response body straight into the connection's
+/// reusable write buffer — no `Json` tree, no row clones (the response
+/// serialization satellite). Field set and key order match the legacy
+/// `obj(...)` (BTreeMap-alphabetical) rendering.
+#[allow(clippy::too_many_arguments)]
+fn write_infer_body(
+    buf: &mut Vec<u8>,
+    model: &str,
+    version: u64,
+    rows: usize,
+    width: usize,
+    queue_us: u64,
+    execute_us: u64,
+    arena: &InferArena,
+) {
+    buf.clear();
+    buf.extend_from_slice(b"{\"batch_sizes\":[");
+    for r in 0..rows {
+        if r > 0 {
+            buf.push(b',');
+        }
+        let _ = write!(buf, "{}", arena.batch_sizes[r]);
+    }
+    let _ = write!(buf, "],\"execute_us\":{execute_us},\"model\":\"{model}\"");
+    if rows == 1 {
+        buf.extend_from_slice(b",\"output\":");
+        write_row_json(buf, &arena.outs[..arena.out_lens[0]]);
+    }
+    buf.extend_from_slice(b",\"outputs\":[");
+    for r in 0..rows {
+        if r > 0 {
+            buf.push(b',');
+        }
+        let start = r * width;
+        write_row_json(buf, &arena.outs[start..start + arena.out_lens[r]]);
+    }
+    let _ = write!(
+        buf,
+        "],\"queue_us\":{queue_us},\"rows\":{rows},\"version\":{version}}}"
+    );
+}
+
+/// One output row as a JSON array of numbers.
+fn write_row_json(buf: &mut Vec<u8>, vals: &[f32]) {
+    buf.push(b'[');
+    for (i, &v) in vals.iter().enumerate() {
+        if i > 0 {
+            buf.push(b',');
+        }
+        write_json_f32(buf, v);
+    }
+    buf.push(b']');
+}
+
+/// One float in the same rendering `Json::Num` uses: integral magnitudes
+/// below 1e15 print as integers, non-finite values as `null`.
+fn write_json_f32(buf: &mut Vec<u8>, v: f32) {
+    let n = v as f64;
+    if !n.is_finite() {
+        buf.extend_from_slice(b"null");
+    } else if n.fract() == 0.0 && n.abs() < 1e15 {
+        let _ = write!(buf, "{}", n as i64);
+    } else {
+        let _ = write!(buf, "{n}");
+    }
 }
 
 fn shed_response(shared: &Arc<Shared>, e: AdmitError) -> Response {
@@ -934,29 +1415,175 @@ fn err_json(msg: &str) -> Json {
 mod tests {
     use super::*;
 
+    fn dom_rows(body: &str, width: usize, max_rows: usize) -> Result<(usize, Vec<f32>), String> {
+        let v = Json::parse(body).map_err(|e| e.to_string())?;
+        let mut out = Vec::new();
+        let rows = extract_rows_dom(&v, width, max_rows, &mut out)?;
+        Ok((rows, out))
+    }
+
     #[test]
-    fn extract_rows_single_and_batch() {
-        let v = Json::parse(r#"{"features": [1.0, 2.0]}"#).unwrap();
-        assert_eq!(extract_rows(&v, 2, 8).unwrap(), vec![vec![1.0, 2.0]]);
-        let v = Json::parse(r#"{"rows": [[1, 2], [3, 4], [5, 6]]}"#).unwrap();
+    fn extract_rows_dom_single_and_batch() {
         assert_eq!(
-            extract_rows(&v, 2, 8).unwrap(),
-            vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]
+            dom_rows(r#"{"features": [1.0, 2.0]}"#, 2, 8).unwrap(),
+            (1, vec![1.0, 2.0])
+        );
+        assert_eq!(
+            dom_rows(r#"{"rows": [[1, 2], [3, 4], [5, 6]]}"#, 2, 8).unwrap(),
+            (3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
         );
     }
 
     #[test]
-    fn extract_rows_validates_width_count_and_values() {
-        let v = Json::parse(r#"{"features": [1.0]}"#).unwrap();
-        assert!(extract_rows(&v, 2, 8).unwrap_err().contains("width"));
-        let v = Json::parse(r#"{"rows": []}"#).unwrap();
-        assert!(extract_rows(&v, 2, 8).is_err());
-        let v = Json::parse(r#"{"rows": [[1,2],[3,4],[5,6]]}"#).unwrap();
-        assert!(extract_rows(&v, 2, 2).unwrap_err().contains("too many"));
-        let v = Json::parse(r#"{"features": [1.0, "x"]}"#).unwrap();
-        assert!(extract_rows(&v, 2, 8).is_err());
-        let v = Json::parse(r#"{"nope": 1}"#).unwrap();
-        assert!(extract_rows(&v, 2, 8).is_err());
+    fn extract_rows_dom_validates_width_count_and_values() {
+        assert!(dom_rows(r#"{"features": [1.0]}"#, 2, 8)
+            .unwrap_err()
+            .contains("width"));
+        assert!(dom_rows(r#"{"rows": []}"#, 2, 8).is_err());
+        assert!(dom_rows(r#"{"rows": [[1,2],[3,4],[5,6]]}"#, 2, 2)
+            .unwrap_err()
+            .contains("too many"));
+        assert!(dom_rows(r#"{"features": [1.0, "x"]}"#, 2, 8).is_err());
+        assert!(dom_rows(r#"{"nope": 1}"#, 2, 8).is_err());
+    }
+
+    #[test]
+    fn fast_parser_accepts_canonical_bodies() {
+        let mut out = Vec::new();
+        assert_eq!(
+            parse_infer_fast(r#"{"features": [1.0, -2.5]}"#, 2, 8, &mut out).unwrap(),
+            Some(1)
+        );
+        assert_eq!(out, vec![1.0, -2.5]);
+        assert_eq!(
+            parse_infer_fast(r#"{ "rows" : [[1,2],[3.5,4e1]] }"#, 2, 8, &mut out).unwrap(),
+            Some(2)
+        );
+        assert_eq!(out, vec![1.0, 2.0, 3.5, 40.0]);
+        // Exactly what the load generator emits.
+        assert_eq!(
+            parse_infer_fast(r#"{"features":[0.5,0.25]}"#, 2, 8, &mut out).unwrap(),
+            Some(1)
+        );
+        assert_eq!(out, vec![0.5, 0.25]);
+    }
+
+    #[test]
+    fn fast_parser_falls_back_on_non_canonical_shapes() {
+        let mut out = Vec::new();
+        // Extra keys, strings, escapes, lax numbers → DOM fallback.
+        for body in [
+            r#"{"features": [1, 2], "extra": 1}"#,
+            r#"{"rows": [[1, "x"]]}"#,
+            r#"{"features": [+1, 2]}"#,
+            r#"{"features": [1., 2]}"#,
+            r#"{"features": [01, 2]}"#,
+            r#"{"features": [1e999, 2]}"#,
+            r#"["features"]"#,
+            r#"{"features": [1, 2]} trailing"#,
+        ] {
+            assert_eq!(
+                parse_infer_fast(body, 2, 8, &mut out).unwrap(),
+                None,
+                "{body}"
+            );
+        }
+    }
+
+    #[test]
+    fn fast_parser_reports_definite_errors() {
+        let mut out = Vec::new();
+        assert!(parse_infer_fast(r#"{"features": [1.0]}"#, 2, 8, &mut out)
+            .unwrap_err()
+            .contains("width"));
+        assert!(parse_infer_fast(r#"{"rows": []}"#, 2, 8, &mut out)
+            .unwrap_err()
+            .contains("empty"));
+        assert!(parse_infer_fast(r#"{"rows": [[1,2],[3,4],[5,6]]}"#, 2, 2, &mut out)
+            .unwrap_err()
+            .contains("too many"));
+    }
+
+    #[test]
+    fn fast_parser_agrees_with_dom_on_canonical_bodies() {
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        for rows in [1usize, 3] {
+            let width = 4;
+            let vals = rng.normal_vec(rows * width, 0.0, 1.0);
+            let body = if rows == 1 {
+                format!(
+                    "{{\"features\":[{}]}}",
+                    vals.iter()
+                        .map(|v| format!("{v}"))
+                        .collect::<Vec<_>>()
+                        .join(",")
+                )
+            } else {
+                let rows_json: Vec<String> = vals
+                    .chunks(width)
+                    .map(|row| {
+                        format!(
+                            "[{}]",
+                            row.iter()
+                                .map(|v| format!("{v}"))
+                                .collect::<Vec<_>>()
+                                .join(",")
+                        )
+                    })
+                    .collect();
+                format!("{{\"rows\":[{}]}}", rows_json.join(","))
+            };
+            let mut fast = Vec::new();
+            let got = parse_infer_fast(&body, width, 8, &mut fast).unwrap();
+            assert_eq!(got, Some(rows), "{body}");
+            let (dom_n, dom) = dom_rows(&body, width, 8).unwrap();
+            assert_eq!(dom_n, rows);
+            assert_eq!(fast, dom, "fast and DOM parses must agree bitwise");
+        }
+    }
+
+    #[test]
+    fn infer_route_matches_inference_posts_only() {
+        assert_eq!(infer_route("POST", "/v1/infer"), Some(None));
+        assert_eq!(infer_route("POST", "/v1/models/m/infer"), Some(Some("m")));
+        assert_eq!(infer_route("GET", "/v1/infer"), None);
+        assert_eq!(infer_route("POST", "/v1/models//infer"), None);
+        assert_eq!(infer_route("POST", "/v1/models/a/b/infer"), None);
+        assert_eq!(infer_route("POST", "/v1/models"), None);
+    }
+
+    #[test]
+    fn response_body_writer_matches_json_rendering() {
+        let mut arena = InferArena::default();
+        arena.ensure(2, 3);
+        arena.rows.resize(6, 0.0);
+        arena.outs[..6].copy_from_slice(&[1.0, 2.5, -3.0, 0.5, f32::NAN, 7.0]);
+        arena.out_lens[0] = 3;
+        arena.out_lens[1] = 3;
+        arena.batch_sizes[0] = 4;
+        arena.batch_sizes[1] = 4;
+        let mut buf = Vec::new();
+        write_infer_body(&mut buf, "demo", 3, 2, 3, 17, 42, &arena);
+        let parsed = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str(), Some("demo"));
+        assert_eq!(parsed.get("version").unwrap().as_f64(), Some(3.0));
+        assert_eq!(parsed.get("rows").unwrap().as_f64(), Some(2.0));
+        assert_eq!(parsed.get("queue_us").unwrap().as_f64(), Some(17.0));
+        assert_eq!(parsed.get("execute_us").unwrap().as_f64(), Some(42.0));
+        let outs = parsed.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].as_arr().unwrap()[1].as_f64(), Some(2.5));
+        // NaN renders as null, exactly like Json::Num.
+        assert_eq!(outs[1].as_arr().unwrap()[1], Json::Null);
+        assert!(parsed.get("output").is_none(), "single-row field only at rows=1");
+        // Single-row rendering carries both "output" and "outputs".
+        write_infer_body(&mut buf, "demo", 1, 1, 3, 0, 0, &arena);
+        let parsed = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        assert_eq!(
+            parsed.get("output").unwrap().as_arr().unwrap().len(),
+            3,
+            "{parsed}"
+        );
     }
 
     #[test]

@@ -32,10 +32,10 @@ use std::time::Duration;
 
 use crate::checkpoint::Checkpoint;
 use crate::config::ServeConfig;
-use crate::coordinator::request::InferResponse;
+use crate::coordinator::request::{InferResponse, ResponseSlot, RowRef};
 use crate::coordinator::worker::{BatchExecutor, ExecutorFactory};
 use crate::coordinator::SubmitError;
-use crate::metrics::{Counter, Gauge, Registry};
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::serve::Server;
 
 /// Why a registry operation failed. Maps onto HTTP statuses at the
@@ -118,6 +118,10 @@ struct ModelEntry {
     swaps: Arc<Counter>,
     version_gauge: Arc<Gauge>,
     inflight_gauge: Arc<Gauge>,
+    /// Per-model end-to-end request latency, resolved once at install so
+    /// the per-request hot path is a relaxed-atomic record — never a
+    /// `format!` + registry lookup.
+    request_ns: Arc<Histogram>,
 }
 
 /// RAII admission ticket: pins one epoch of one model for the lifetime of
@@ -153,9 +157,22 @@ impl ModelHandle {
         self.epoch.server.submit(features)
     }
 
+    /// Submit one arena row on the zero-allocation slot path (see
+    /// [`crate::coordinator::Coordinator::submit_slot`]).
+    pub fn submit_slot(&self, row: RowRef, slot: &Arc<ResponseSlot>) -> Result<(), SubmitError> {
+        self.epoch.server.submit_slot(row, slot)
+    }
+
     /// Submit one row and block for the answer.
     pub fn infer(&self, features: Vec<f32>, timeout: Duration) -> Result<Vec<f32>, String> {
         self.epoch.server.infer(features, timeout)
+    }
+
+    /// Record one completed request's end-to-end latency into the model's
+    /// cached histogram handle (`model.{name}.request_ns`) — one relaxed
+    /// atomic op, no name formatting on the hot path.
+    pub fn observe_request(&self, elapsed: Duration) {
+        self.entry.request_ns.record(elapsed);
     }
 }
 
@@ -245,9 +262,7 @@ impl ModelRegistry {
         // Build the new epoch's coordinator *before* taking the registry
         // lock — worker-thread spawning must not serialize admissions.
         let factory: ExecutorFactory = Arc::new(move || {
-            Ok(Box::new(SellModelExecutor {
-                model: model.clone(),
-            }) as Box<dyn BatchExecutor>)
+            Ok(Box::new(SellModelExecutor::new(model.clone())) as Box<dyn BatchExecutor>)
         });
         // Coordinator/worker instruments share the registry-wide metrics,
         // so `GET /metrics` aggregates them fleet-wide.
@@ -339,6 +354,7 @@ impl ModelRegistry {
                         swaps: self.metrics.counter(&format!("model.{name}.swaps")),
                         version_gauge: self.metrics.gauge(&format!("model.{name}.version")),
                         inflight_gauge: self.metrics.gauge(&format!("model.{name}.inflight")),
+                        request_ns: self.metrics.histogram(&format!("model.{name}.request_ns")),
                     });
                     entry.loads.inc();
                     entry.version_gauge.set(v);
@@ -434,27 +450,22 @@ impl ModelRegistry {
     }
 
     /// Admit one request: pin the current epoch of `name` (model or
-    /// alias) behind a [`ModelHandle`].
+    /// alias) behind a [`ModelHandle`]. Allocation-free on success (the
+    /// admission fast path): name resolution borrows, the handle is two
+    /// `Arc` clones, and every metric handle was cached at install.
     pub fn resolve(&self, name: &str) -> Result<ModelHandle, RegistryError> {
         let inner = self.inner.lock().unwrap();
-        let canonical = resolve_name(&inner, name)?;
-        let entry = Arc::clone(&inner.models[&canonical]);
-        // Counted under the registry lock so unload's busy check can't
-        // miss a handle being minted concurrently.
-        entry.inflight.fetch_add(1, Ordering::AcqRel);
-        entry.inflight_gauge.inc();
-        entry.requests.inc();
-        let epoch = Arc::clone(&entry.current.lock().unwrap());
-        drop(inner);
-        Ok(ModelHandle { entry, epoch })
+        mint_handle(&inner, name)
     }
 
-    /// [`ModelRegistry::resolve`] on the default model.
+    /// [`ModelRegistry::resolve`] on the default model (also
+    /// allocation-free on success — one lock, no name cloning).
     pub fn resolve_default(&self) -> Result<ModelHandle, RegistryError> {
-        let name = self
-            .default_model()
-            .ok_or_else(|| RegistryError::NotFound("(no default model)".to_string()))?;
-        self.resolve(&name)
+        let inner = self.inner.lock().unwrap();
+        match &inner.default_model {
+            Some(name) => mint_handle(&inner, name),
+            None => Err(RegistryError::NotFound("(no default model)".to_string())),
+        }
     }
 
     /// Whether `name` is currently an alias (loads — and training jobs —
@@ -508,6 +519,27 @@ impl ModelRegistry {
         out.sort_by(|a, b| a.name.cmp(&b.name));
         out
     }
+}
+
+/// Pin the current epoch of `name` (model or alias) under the held
+/// registry lock. Allocation-free on success: name resolution borrows,
+/// the handle is two `Arc` clones, and every metric handle was cached at
+/// install. Counting under the lock keeps unload's busy check race-free.
+fn mint_handle(inner: &Inner, name: &str) -> Result<ModelHandle, RegistryError> {
+    let entry = match inner.models.get(name) {
+        Some(e) => e,
+        None => inner
+            .aliases
+            .get(name)
+            .and_then(|target| inner.models.get(target))
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))?,
+    };
+    let entry = Arc::clone(entry);
+    entry.inflight.fetch_add(1, Ordering::AcqRel);
+    entry.inflight_gauge.inc();
+    entry.requests.inc();
+    let epoch = Arc::clone(&entry.current.lock().unwrap());
+    Ok(ModelHandle { entry, epoch })
 }
 
 /// Canonical model name for `name` (resolving one level of alias).
@@ -720,6 +752,10 @@ mod tests {
         assert_eq!(metrics.counter("model.m.requests").get(), 1);
         assert_eq!(metrics.gauge("model.m.version").get(), 1);
         assert_eq!(metrics.gauge("model.m.inflight").get(), 1);
+        // The latency histogram handle is cached at install and recorded
+        // through the handle (satellite: no per-request name formatting).
+        _h.observe_request(Duration::from_micros(250));
+        assert_eq!(metrics.histogram("model.m.request_ns").count(), 1);
         reg.load("m", SellModel::Acdc(cascade(2, 8)), None).unwrap();
         assert_eq!(metrics.counter("model.m.swaps").get(), 1);
         assert_eq!(metrics.gauge("model.m.version").get(), 2);

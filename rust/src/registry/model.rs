@@ -287,10 +287,25 @@ fn tensor_to_perm(t: &Tensor, n: usize) -> Result<Vec<u32>, String> {
 /// [`BatchExecutor`] over any [`SellModel`] — the registry's per-worker
 /// executor. ACDC cascades ride the batched SoA engine exactly like
 /// [`crate::coordinator::worker::NativeCascadeExecutor`] (pooled panels
-/// for buckets ≥ 32); the other families use their own batch forwards.
+/// for buckets ≥ 32, otherwise the allocation-free worker-local
+/// [`crate::sell::acdc::CascadeScratch`] path); the other families use
+/// their own batch forwards.
 pub struct SellModelExecutor {
     /// The model evaluated per batch (one clone per worker thread).
     pub model: SellModel,
+    /// Worker-local reusable forward buffers (ACDC path).
+    scratch: crate::sell::acdc::CascadeScratch,
+}
+
+impl SellModelExecutor {
+    /// Executor over `model` with fresh (lazily grown) scratch.
+    pub fn new(model: SellModel) -> SellModelExecutor {
+        let n = model.width();
+        SellModelExecutor {
+            model,
+            scratch: crate::sell::acdc::CascadeScratch::new(n, 1),
+        }
+    }
 }
 
 impl BatchExecutor for SellModelExecutor {
@@ -302,7 +317,12 @@ impl BatchExecutor for SellModelExecutor {
         self.model.width()
     }
 
-    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute_into(
+        &mut self,
+        bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
         let n = self.model.width();
         if padded.len() != bucket * n {
             return Err(format!(
@@ -310,14 +330,25 @@ impl BatchExecutor for SellModelExecutor {
                 padded.len()
             ));
         }
-        let x = Tensor::from_vec(&[bucket, n], padded.to_vec());
+        if out.len() != bucket * n {
+            return Err(format!(
+                "output buffer {} != bucket {bucket} × n {n}",
+                out.len()
+            ));
+        }
         if let SellModel::Acdc(cascade) = &self.model {
             if bucket >= 32 {
                 let pool = crate::util::threadpool::global();
-                return Ok(cascade.forward_pooled(&x, pool).into_vec());
+                let x = Tensor::from_vec(&[bucket, n], padded.to_vec());
+                out.copy_from_slice(cascade.forward_pooled(&x, pool).data());
+            } else {
+                cascade.forward_rows_into(padded, bucket, out, &mut self.scratch);
             }
+            return Ok(());
         }
-        Ok(self.model.forward(&x).into_vec())
+        let x = Tensor::from_vec(&[bucket, n], padded.to_vec());
+        out.copy_from_slice(self.model.forward(&x).data());
+        Ok(())
     }
 }
 
@@ -410,11 +441,35 @@ mod tests {
         let mut rng = Pcg32::seeded(6);
         let model = SellModel::LowRank(LowRankLayer::random(8, 2, &mut rng));
         let x = Tensor::from_vec(&[4, 8], rng.normal_vec(32, 0.0, 1.0));
-        let mut exe = SellModelExecutor {
-            model: model.clone(),
-        };
-        let got = exe.execute(4, x.data()).unwrap();
+        let mut exe = SellModelExecutor::new(model.clone());
+        let mut got = vec![0.0f32; 32];
+        exe.execute_into(4, x.data(), &mut got).unwrap();
         assert_eq!(got, model.forward(&x).data());
-        assert!(exe.execute(4, &[0.0; 3]).is_err(), "bad buffer length");
+        let mut bad = vec![0.0f32; 32];
+        assert!(
+            exe.execute_into(4, &[0.0; 3], &mut bad).is_err(),
+            "bad buffer length"
+        );
+    }
+
+    #[test]
+    fn acdc_executor_matches_direct_forward_across_buckets() {
+        let mut rng = Pcg32::seeded(7);
+        let cascade = AcdcCascade::nonlinear(16, 2, DiagInit::CAFFENET, &mut rng);
+        let model = SellModel::Acdc(cascade);
+        let mut exe = SellModelExecutor::new(model.clone());
+        for bucket in [1usize, 4, 8] {
+            let x = Tensor::from_vec(
+                &[bucket, 16],
+                rng.normal_vec(bucket * 16, 0.0, 1.0),
+            );
+            let mut got = vec![0.0f32; bucket * 16];
+            exe.execute_into(bucket, x.data(), &mut got).unwrap();
+            let want = model.forward(&x);
+            // The scratch path must be bit-identical to the direct forward.
+            for (g, w) in got.iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "bucket={bucket}");
+            }
+        }
     }
 }

@@ -19,7 +19,7 @@
 use std::sync::Arc;
 
 use super::LinearOp;
-use crate::dct::{BatchEngine, DctPlan, PlanCache, MIN_SOA_ROWS};
+use crate::dct::{BatchEngine, DctPlan, PanelScratch, PlanCache, MIN_SOA_ROWS};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 use crate::util::threadpool::ThreadPool;
@@ -512,6 +512,102 @@ impl AcdcCascade {
         h
     }
 
+    /// Allocation-free forward over a flat `[rows, n]` buffer — the
+    /// serving executors' steady-state hot path. Numerically identical to
+    /// [`AcdcCascade::forward`] (same per-rows-count engine selection,
+    /// same kernels, bit for bit); all intermediates live in `scratch`,
+    /// which is grown on first use and reused across batches, so the
+    /// steady state performs **zero heap allocations**.
+    pub fn forward_rows_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        scratch: &mut CascadeScratch,
+    ) {
+        let n = self.n();
+        assert_eq!(x.len(), rows * n, "x len vs rows × n");
+        assert_eq!(out.len(), rows * n, "out len vs rows × n");
+        scratch.ensure(n, rows);
+        if rows < MIN_SOA_ROWS {
+            return self.forward_scalar_into(x, rows, out, scratch);
+        }
+        let CascadeScratch {
+            panel,
+            buf_a,
+            buf_b,
+            ..
+        } = scratch;
+        let engine = BatchEngine::new(Arc::clone(&self.layers[0].plan));
+        let mut cur: &mut [f32] = &mut buf_a[..rows * n];
+        let mut nxt: &mut [f32] = &mut buf_b[..rows * n];
+        cur.copy_from_slice(x);
+        let last = self.layers.len() - 1;
+        for (li, layer) in self.layers.iter().enumerate() {
+            engine.acdc_rows_with_scratch(&layer.a, &layer.d, &layer.bias, cur, nxt, rows, panel);
+            if let Some(perms) = &self.perms {
+                // Gather the permutation back into `cur` (same column
+                // gather as `apply_perm`, no allocation).
+                let perm = &perms[li];
+                for r in 0..rows {
+                    let src = &nxt[r * n..(r + 1) * n];
+                    let dst = &mut cur[r * n..(r + 1) * n];
+                    for (i, &p) in perm.iter().enumerate() {
+                        dst[i] = src[p as usize];
+                    }
+                }
+            } else {
+                std::mem::swap(&mut cur, &mut nxt);
+            }
+            if self.relu && li != last {
+                for v in cur.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        out.copy_from_slice(cur);
+    }
+
+    /// The scalar fused leg of [`AcdcCascade::forward_rows_into`]: one row
+    /// rides the whole cascade while it sits in scratch (mirrors
+    /// `forward_scalar` op for op, so both produce identical bits).
+    fn forward_scalar_into(
+        &self,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        scratch: &mut CascadeScratch,
+    ) {
+        let n = self.n();
+        let CascadeScratch { row, tmp, fft, .. } = scratch;
+        let row = &mut row[..n];
+        let tmp = &mut tmp[..n];
+        let fft = &mut fft[..3 * n];
+        for r in 0..rows {
+            row.copy_from_slice(&x[r * n..(r + 1) * n]);
+            for (li, layer) in self.layers.iter().enumerate() {
+                layer.forward_row_fused(row, tmp, fft);
+                if let Some(perms) = &self.perms {
+                    for (i, &p) in perms[li].iter().enumerate() {
+                        row[i] = tmp[p as usize];
+                    }
+                } else {
+                    row.copy_from_slice(tmp);
+                }
+                if self.relu && li != self.layers.len() - 1 {
+                    for v in row.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+            out[r * n..(r + 1) * n].copy_from_slice(row);
+        }
+    }
+
     /// Forward keeping per-layer inputs for the backward pass.
     pub fn forward_train(&self, x: &Tensor) -> (Tensor, CascadeCache) {
         self.forward_train_inner(x, None)
@@ -599,6 +695,58 @@ impl AcdcCascade {
     pub fn materialize(&self) -> Tensor {
         assert!(!self.relu, "materialize is only meaningful for linear cascades");
         self.forward(&Tensor::eye(self.n()))
+    }
+}
+
+/// Reusable buffers for [`AcdcCascade::forward_rows_into`]: the SoA panel
+/// scratch, two ping-pong `[rows, n]` activation buffers for the batched
+/// leg, and the row/tmp/FFT scratch of the scalar leg. Grown on demand
+/// (never shrunk), so a long-lived holder — one per serving worker —
+/// allocates only until it has seen its largest batch.
+#[derive(Debug)]
+pub struct CascadeScratch {
+    panel: PanelScratch,
+    buf_a: Vec<f32>,
+    buf_b: Vec<f32>,
+    row: Vec<f32>,
+    tmp: Vec<f32>,
+    fft: Vec<f32>,
+    n: usize,
+    rows_cap: usize,
+}
+
+impl CascadeScratch {
+    /// Scratch sized for `[rows, n]` batches.
+    pub fn new(n: usize, rows: usize) -> CascadeScratch {
+        CascadeScratch {
+            panel: PanelScratch::new(n),
+            buf_a: vec![0.0; rows * n],
+            buf_b: vec![0.0; rows * n],
+            row: vec![0.0; n],
+            tmp: vec![0.0; n],
+            fft: vec![0.0; 3 * n],
+            n,
+            rows_cap: rows,
+        }
+    }
+
+    /// Grow (never shrink) to serve `[rows, n]` batches.
+    pub fn ensure(&mut self, n: usize, rows: usize) {
+        self.panel.ensure(n);
+        if n > self.n {
+            self.row.resize(n, 0.0);
+            self.tmp.resize(n, 0.0);
+            self.fft.resize(3 * n, 0.0);
+            self.n = n;
+        }
+        if rows > self.rows_cap {
+            self.rows_cap = rows;
+        }
+        let need = self.rows_cap * self.n;
+        if self.buf_a.len() < need {
+            self.buf_a.resize(need, 0.0);
+            self.buf_b.resize(need, 0.0);
+        }
     }
 }
 
@@ -719,6 +867,30 @@ mod tests {
         let pool = crate::util::threadpool::ThreadPool::new(2);
         let pooled = cascade.forward_pooled(&x, &pool);
         assert!(scalar.max_abs_diff(&pooled) < 1e-4);
+    }
+
+    #[test]
+    fn forward_rows_into_is_bit_identical_to_forward() {
+        // The allocation-free serving path must match the allocating
+        // forward bit for bit on both the scalar (<MIN_SOA_ROWS) and the
+        // batched leg, including with perms + ReLU, across scratch reuse.
+        let mut rng = Pcg32::seeded(30);
+        let n = 32;
+        for cascade in [
+            AcdcCascade::linear(n, 3, DiagInit::CAFFENET, &mut rng),
+            AcdcCascade::nonlinear(n, 3, DiagInit::CAFFENET, &mut rng),
+        ] {
+            let mut scratch = CascadeScratch::new(n, 1);
+            for rows in [1usize, 2, 3, 4, 9, 17] {
+                let x = rand_tensor(&mut rng, &[rows, n]);
+                let want = cascade.forward(&x);
+                let mut got = vec![0.0f32; rows * n];
+                cascade.forward_rows_into(x.data(), rows, &mut got, &mut scratch);
+                for (g, w) in got.iter().zip(want.data()) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "rows={rows}");
+                }
+            }
+        }
     }
 
     #[test]

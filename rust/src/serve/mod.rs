@@ -161,7 +161,12 @@ impl BatchExecutor for PjrtCascadeExecutor {
         self.classes
     }
 
-    fn execute(&mut self, bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute_into(
+        &mut self,
+        bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
         let (meta, exe) = self
             .compiled
             .get(&bucket)
@@ -171,8 +176,17 @@ impl BatchExecutor for PjrtCascadeExecutor {
             shape: vec![bucket, self.n],
             data: padded.to_vec(),
         });
-        let out = crate::runtime::execute_artifact(meta, exe, &inputs)?;
-        Ok(out[0].as_f32().to_vec())
+        let result = crate::runtime::execute_artifact(meta, exe, &inputs)?;
+        let vals = result[0].as_f32();
+        if vals.len() != out.len() {
+            return Err(format!(
+                "artifact returned {} values, expected {}",
+                vals.len(),
+                out.len()
+            ));
+        }
+        out.copy_from_slice(vals);
+        Ok(())
     }
 }
 
@@ -218,9 +232,11 @@ impl Server {
     pub fn start_native(cfg: &ServeConfig, cascade: crate::sell::acdc::AcdcCascade) -> Server {
         let n = cascade.n();
         let factory: ExecutorFactory = Arc::new(move || {
-            Ok(Box::new(crate::coordinator::worker::NativeCascadeExecutor {
-                cascade: cascade.clone(),
-            }) as Box<dyn BatchExecutor>)
+            Ok(
+                Box::new(crate::coordinator::worker::NativeCascadeExecutor::new(
+                    cascade.clone(),
+                )) as Box<dyn BatchExecutor>,
+            )
         });
         Server::start_custom(cfg, n, factory)
     }
@@ -267,6 +283,16 @@ impl Server {
     ) -> Result<std::sync::mpsc::Receiver<crate::coordinator::request::InferResponse>, SubmitError>
     {
         self.coordinator.submit(features)
+    }
+
+    /// Submit one arena row on the zero-allocation slot path (see
+    /// [`Coordinator::submit_slot`]).
+    pub fn submit_slot(
+        &self,
+        row: crate::coordinator::request::RowRef,
+        slot: &Arc<crate::coordinator::request::ResponseSlot>,
+    ) -> Result<(), SubmitError> {
+        self.coordinator.submit_slot(row, slot)
     }
 
     /// Text metrics report.

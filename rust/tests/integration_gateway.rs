@@ -195,9 +195,15 @@ impl BatchExecutor for SlowEcho {
     fn out_width(&self) -> usize {
         self.n
     }
-    fn execute(&mut self, _bucket: usize, padded: &[f32]) -> Result<Vec<f32>, String> {
+    fn execute_into(
+        &mut self,
+        _bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
         std::thread::sleep(self.delay);
-        Ok(padded.to_vec())
+        out.copy_from_slice(padded);
+        Ok(())
     }
 }
 

@@ -1,0 +1,209 @@
+//! Zero-allocation steady state: a counting global allocator pins that
+//! the `/v1/infer` keep-alive path performs **0 heap allocations per
+//! request after warmup** — request parse (reused scratch), admission,
+//! registry resolve, slot submit, batch formation (recycled buffers),
+//! worker padding/execution (thread-local scratch), arena write-back and
+//! response serialization (reused write buffers) included.
+//!
+//! Gated behind the `count-allocs` cargo feature so the allocator shim
+//! never taxes ordinary test runs:
+//! `cargo test --features count-allocs --test zero_alloc`.
+//!
+//! The client side of this test is deliberately raw: requests are
+//! pre-rendered byte buffers and responses are parsed with fixed-size
+//! stack buffers, so the measuring thread itself allocates nothing inside
+//! the measured window (the counter is process-global).
+#![cfg(feature = "count-allocs")]
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use acdc::config::{GatewayConfig, ServeConfig};
+use acdc::gateway::Gateway;
+use acdc::metrics::Registry;
+use acdc::registry::{ModelRegistry, SellModel};
+use acdc::sell::acdc::AcdcCascade;
+use acdc::sell::init::DiagInit;
+use acdc::util::rng::Pcg32;
+
+/// Counts every allocation and reallocation process-wide.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// Send `req` and read one complete HTTP response using only the caller's
+/// fixed buffer. Returns the response's total length. Panics on anything
+/// but a 200 (the steady state must be all-success).
+fn roundtrip(stream: &mut TcpStream, req: &[u8], buf: &mut [u8]) -> usize {
+    stream.write_all(req).expect("write request");
+    // Read until the header/body split, then drain content-length bytes.
+    let mut filled = 0usize;
+    let (head_end, content_len) = loop {
+        let n = stream.read(&mut buf[filled..]).expect("read response");
+        assert!(n > 0, "server closed mid-response");
+        filled += n;
+        if let Some(pos) = find_subslice(&buf[..filled], b"\r\n\r\n") {
+            let head = &buf[..pos];
+            assert!(
+                head.starts_with(b"HTTP/1.1 200"),
+                "non-200 in steady state: {}",
+                String::from_utf8_lossy(head)
+            );
+            let cl = parse_content_length(head).expect("content-length header");
+            break (pos + 4, cl);
+        }
+        assert!(filled < buf.len(), "response larger than client buffer");
+    };
+    let total = head_end + content_len;
+    while filled < total {
+        let n = stream.read(&mut buf[filled..]).expect("read body");
+        assert!(n > 0, "server closed mid-body");
+        filled += n;
+    }
+    total
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+/// `content-length: N` (the gateway always writes it lowercase).
+fn parse_content_length(head: &[u8]) -> Option<usize> {
+    let key = b"content-length:";
+    let pos = find_subslice(head, key)?;
+    let mut v = 0usize;
+    let mut seen = false;
+    for &c in &head[pos + key.len()..] {
+        match c {
+            b' ' if !seen => {}
+            b'0'..=b'9' => {
+                seen = true;
+                v = v * 10 + (c - b'0') as usize;
+            }
+            _ => break,
+        }
+    }
+    seen.then_some(v)
+}
+
+#[test]
+fn keep_alive_infer_path_is_allocation_free_after_warmup() {
+    const N: usize = 32;
+    let mut rng = Pcg32::seeded(1);
+    let cascade = AcdcCascade::nonlinear(N, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        // Serial engine buckets (< 32): the pooled fan-out path is the
+        // one deliberate exception to the zero-alloc guarantee.
+        buckets: vec![1, 8],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 256,
+        ..Default::default()
+    };
+    let metrics = Arc::new(Registry::new());
+    let registry = Arc::new(ModelRegistry::new(cfg.clone(), metrics));
+    registry
+        .load("demo", SellModel::Acdc(cascade), None)
+        .expect("load model");
+    let gateway = Gateway::start_registry(
+        registry,
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 64,
+            rate_rps: 0.0, // rate limiting off: nothing sheds in steady state
+            request_timeout_ms: 30_000,
+            ..Default::default()
+        },
+    )
+    .expect("gateway");
+
+    // Pre-render both request shapes (1-row "features", 8-row "rows") so
+    // the client allocates nothing inside the measured window.
+    let mut single = String::from("{\"features\":[");
+    for i in 0..N {
+        if i > 0 {
+            single.push(',');
+        }
+        single.push_str("0.125");
+    }
+    single.push_str("]}");
+    let mut batch = String::from("{\"rows\":[");
+    for r in 0..8 {
+        if r > 0 {
+            batch.push(',');
+        }
+        batch.push('[');
+        for i in 0..N {
+            if i > 0 {
+                batch.push(',');
+            }
+            batch.push_str("-0.5");
+        }
+        batch.push(']');
+    }
+    batch.push_str("]}");
+    let render = |body: &str| {
+        format!(
+            "POST /v1/infer HTTP/1.1\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .into_bytes()
+    };
+    let req_single = render(&single);
+    let req_batch = render(&batch);
+
+    let mut stream = TcpStream::connect(gateway.local_addr()).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    let mut buf = vec![0u8; 1 << 20];
+
+    // Warmup: grow every reusable buffer (connection scratch, arena,
+    // batcher queue + recycle pool, worker padding/output, cascade
+    // scratch) and let every lazy init (thread parkers, waker queues)
+    // happen.
+    for i in 0..256 {
+        let req = if i % 3 == 0 { &req_batch } else { &req_single };
+        roundtrip(&mut stream, req, &mut buf);
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let measured = 64usize;
+    for i in 0..measured {
+        let req = if i % 3 == 0 { &req_batch } else { &req_single };
+        roundtrip(&mut stream, req, &mut buf);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state keep-alive inference must not allocate: \
+         {delta} allocations across {measured} requests"
+    );
+    drop(stream);
+    gateway.shutdown();
+}
