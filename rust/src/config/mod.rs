@@ -258,6 +258,9 @@ pub struct GatewayConfig {
     pub max_body_bytes: usize,
     /// Cap on feature rows in one `POST /v1/infer` batch request.
     pub max_rows_per_request: usize,
+    /// Tracing + logging knobs (`[trace]` section; carried here so every
+    /// gateway constructor path sees them).
+    pub trace: TraceConfig,
 }
 
 impl Default for GatewayConfig {
@@ -273,6 +276,7 @@ impl Default for GatewayConfig {
             retry_after_s: 1,
             max_body_bytes: 4 << 20,
             max_rows_per_request: 128,
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -298,6 +302,7 @@ impl GatewayConfig {
             max_body_bytes: cfg.get_usize("gateway.max_body_bytes", d.max_body_bytes),
             max_rows_per_request: cfg
                 .get_usize("gateway.max_rows_per_request", d.max_rows_per_request),
+            trace: TraceConfig::from_config(cfg)?,
         };
         gc.validate()?;
         Ok(gc)
@@ -326,7 +331,7 @@ impl GatewayConfig {
         if self.max_rows_per_request == 0 {
             return Err("gateway.max_rows_per_request must be >= 1".into());
         }
-        Ok(())
+        self.trace.validate()
     }
 }
 
@@ -552,6 +557,80 @@ impl TrainerConfig {
     }
 }
 
+/// Tracing + logging configuration (`[trace]` section): per-request
+/// pipeline spans, the slow-request capture ring behind
+/// `GET /v1/debug/slow`, and the structured JSON-lines logger.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Master switch for per-request span capture (on by default — the
+    /// span record lives in the connection arena, so tracing costs no
+    /// allocations).
+    pub enabled: bool,
+    /// Requests with end-to-end latency ≥ this land in the slow ring.
+    pub slow_ms: u64,
+    /// Slots in the slow-request ring.
+    pub ring_capacity: usize,
+    /// Trace 1 out of every N requests (1 = every request).
+    pub sample_every: u64,
+    /// Logger level: `off`, `error`, `warn`, `info` or `debug`
+    /// (the `ACDC_LOG` env var overrides this at startup).
+    pub log_level: String,
+    /// Cap on emitted log lines per second (0 = uncapped); excess events
+    /// are counted and summarized when the window rolls.
+    pub log_max_per_s: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            enabled: true,
+            slow_ms: 250,
+            ring_capacity: 64,
+            sample_every: 1,
+            log_level: "info".into(),
+            log_max_per_s: 200,
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Build from a parsed config's `[trace]` section (defaults fill
+    /// missing keys).
+    pub fn from_config(cfg: &Config) -> Result<TraceConfig, String> {
+        let d = TraceConfig::default();
+        let tc = TraceConfig {
+            enabled: cfg.get_bool("trace.enabled", d.enabled),
+            slow_ms: cfg.get_usize("trace.slow_ms", d.slow_ms as usize) as u64,
+            ring_capacity: cfg.get_usize("trace.ring_capacity", d.ring_capacity),
+            sample_every: cfg.get_usize("trace.sample_every", d.sample_every as usize) as u64,
+            log_level: cfg.get_str("trace.log_level", &d.log_level),
+            log_max_per_s: cfg.get_usize("trace.log_max_per_s", d.log_max_per_s as usize) as u64,
+        };
+        tc.validate()?;
+        Ok(tc)
+    }
+
+    /// Sanity-check ring size, sampling and level name.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.ring_capacity == 0 {
+            return Err("trace.ring_capacity must be >= 1".into());
+        }
+        if self.sample_every == 0 {
+            return Err("trace.sample_every must be >= 1".into());
+        }
+        if self.slow_ms == 0 {
+            return Err("trace.slow_ms must be >= 1".into());
+        }
+        if crate::trace::log::Level::parse(&self.log_level).is_none() {
+            return Err(format!(
+                "trace.log_level must be off|error|warn|info|debug, got '{}'",
+                self.log_level
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -747,6 +826,11 @@ depth = 4
 checkpoint_every = 100
 checkpoint_dir = "out/ckpts"
 target_ratio = 0.05
+
+[trace]
+slow_ms = 40
+ring_capacity = 16
+log_level = "debug"
 "#;
 
     #[test]
@@ -977,9 +1061,48 @@ target_ratio = 0.05
     }
 
     #[test]
+    fn trace_config_from_config_and_validation() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let tc = TraceConfig::from_config(&cfg).unwrap();
+        assert!(tc.enabled, "tracing defaults on");
+        assert_eq!(tc.slow_ms, 40);
+        assert_eq!(tc.ring_capacity, 16);
+        assert_eq!(tc.log_level, "debug");
+        // Unspecified keys fall back to defaults; the gateway section
+        // embeds the same knobs.
+        assert_eq!(tc.sample_every, TraceConfig::default().sample_every);
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.gateway.trace.slow_ms, 40);
+        // Bad values are rejected.
+        for bad in [
+            TraceConfig {
+                ring_capacity: 0,
+                ..Default::default()
+            },
+            TraceConfig {
+                sample_every: 0,
+                ..Default::default()
+            },
+            TraceConfig {
+                slow_ms: 0,
+                ..Default::default()
+            },
+            TraceConfig {
+                log_level: "loud".into(),
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+        let bad = Config::parse("[trace]\nlog_level = \"loud\"").unwrap();
+        assert!(TraceConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
     fn defaults_are_valid() {
         assert!(ServeConfig::default().validate().is_ok());
         assert!(TrainConfig::default().validate().is_ok());
         assert!(TrainerConfig::default().validate().is_ok());
+        assert!(TraceConfig::default().validate().is_ok());
     }
 }

@@ -15,9 +15,11 @@
 //! threads); [`run_batcher`] wires it to channels.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::request::{FormedBatch, InferRequest};
+use crate::metrics::Gauge;
 
 /// Pure batch-formation policy over sorted buckets.
 #[derive(Debug, Clone)]
@@ -102,13 +104,23 @@ impl BatchPolicy {
 /// (a bounded array channel, so the handoff itself never allocates);
 /// steady-state batch formation therefore reuses a fixed pool of buffers
 /// instead of allocating one `Vec` per formed batch.
+///
+/// `depth` (when present) is kept at the batcher's live queue length —
+/// the `coordinator.queue_depth` series on `/metrics`, the direct
+/// observable for "is latency queueing or compute".
 pub fn run_batcher(
     policy: BatchPolicy,
     rx: Receiver<InferRequest>,
     tx: SyncSender<FormedBatch>,
     recycle: Receiver<Vec<InferRequest>>,
+    depth: Option<Arc<Gauge>>,
 ) {
     let mut queue: Vec<InferRequest> = Vec::new();
+    let set_depth = |len: usize| {
+        if let Some(g) = &depth {
+            g.set(len as u64);
+        }
+    };
     let mut form = |queue: &mut Vec<InferRequest>, bucket: usize, take: usize, now: Instant| {
         let mut requests = recycle.try_recv().unwrap_or_default();
         requests.clear();
@@ -125,6 +137,7 @@ pub fn run_batcher(
         match decision {
             Decision::Dispatch { bucket, take } => {
                 let batch = form(&mut queue, bucket, take, now);
+                set_depth(queue.len());
                 if tx.send(batch).is_err() {
                     return; // workers gone
                 }
@@ -139,6 +152,7 @@ pub fn run_batcher(
                             Err(_) => break,
                         }
                     }
+                    set_depth(queue.len());
                 }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
@@ -147,6 +161,7 @@ pub fn run_batcher(
                         let take = queue.len().min(policy.max_bucket());
                         let bucket = policy.bucket_for(take).unwrap();
                         let batch = form(&mut queue, bucket, take, Instant::now());
+                        set_depth(queue.len());
                         if tx.send(batch).is_err() {
                             return;
                         }
@@ -241,6 +256,7 @@ mod tests {
         (
             InferRequest {
                 id,
+                trace: 0,
                 features: super::super::request::Features::Owned(vec![0.0; 4]),
                 enqueued_at: Instant::now(),
                 reply: Reply::Channel(tx),
@@ -255,7 +271,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_millis(1));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
         let mut keep = vec![];
         for id in 0..3 {
             let (r, rx) = mk_req(id);
@@ -275,7 +291,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_secs(60)); // never deadline
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
         let mut keep = vec![];
         for id in 0..6 {
             let (r, rx) = mk_req(id);
@@ -295,7 +311,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![2], Duration::from_secs(60));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
         // A recycled buffer round-trips back into batch formation.
         rtx.send(Vec::with_capacity(2)).unwrap();
         let mut keep = vec![];

@@ -82,9 +82,12 @@ impl Coordinator {
             cfg.buckets.clone(),
             Duration::from_micros(cfg.max_wait_us),
         );
+        // Live queue length on /metrics — the direct observable for
+        // "is latency queueing or compute" when reading a slow trace.
+        let depth = metrics.gauge("coordinator.queue_depth");
         let batcher = std::thread::Builder::new()
             .name("acdc-batcher".into())
-            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx, recycle_rx))
+            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx, recycle_rx, Some(depth)))
             .expect("spawn batcher");
         let pool = WorkerPool::spawn(
             cfg.workers,
@@ -117,12 +120,15 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Submit one feature row; returns the response receiver.
+    /// Submit one feature row; returns the response receiver. Requests on
+    /// this convenience path are untraced (`trace` 0) — the gateway's slot
+    /// path is where trace IDs travel.
     pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<InferResponse>, SubmitError> {
         assert_eq!(features.len(), self.width, "feature width mismatch");
         let (tx, rx) = std::sync::mpsc::channel();
         self.enqueue(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            trace: 0,
             features: Features::Owned(features),
             enqueued_at: Instant::now(),
             reply: Reply::Channel(tx),
@@ -133,11 +139,19 @@ impl Coordinator {
     /// Submit one arena row on the zero-allocation path: the worker copies
     /// the input out of — and the output back into — the buffers behind
     /// `row`, and signals `slot` (whose current sequence `row` must carry,
-    /// see [`ResponseSlot::issue`]). No allocation on success.
-    pub fn submit_slot(&self, row: RowRef, slot: &Arc<ResponseSlot>) -> Result<(), SubmitError> {
+    /// see [`ResponseSlot::issue`]). `trace` is the request's trace ID
+    /// (0 = untraced), carried so worker-side log events can name the
+    /// request. No allocation on success.
+    pub fn submit_slot(
+        &self,
+        row: RowRef,
+        slot: &Arc<ResponseSlot>,
+        trace: u64,
+    ) -> Result<(), SubmitError> {
         assert_eq!(row.len(), self.width, "feature width mismatch");
         self.enqueue(InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            trace,
             features: Features::Borrowed(row),
             enqueued_at: Instant::now(),
             reply: Reply::Slot(Arc::clone(slot)),

@@ -134,6 +134,7 @@ struct SlotState {
     done: bool,
     abandoned: bool,
     queue_us: u64,
+    form_us: u64,
     execute_us: u64,
     batch_size: usize,
     outcome: SlotOutcome,
@@ -155,6 +156,9 @@ pub struct ResponseSlot {
 pub struct SlotReply {
     /// Time spent queued before batch formation (µs).
     pub queue_us: u64,
+    /// Batch handoff time — formation until the worker started executing
+    /// (channel transit + input gather/padding, µs).
+    pub form_us: u64,
     /// Batch execution wall time (µs).
     pub execute_us: u64,
     /// Bucket size this row was served in.
@@ -171,6 +175,7 @@ impl Default for ResponseSlot {
                 done: true,
                 abandoned: false,
                 queue_us: 0,
+                form_us: 0,
                 execute_us: 0,
                 batch_size: 0,
                 outcome: SlotOutcome::Pending,
@@ -195,6 +200,7 @@ impl ResponseSlot {
         s.done = false;
         s.abandoned = false;
         s.queue_us = 0;
+        s.form_us = 0;
         s.execute_us = 0;
         s.batch_size = 0;
         s.outcome = SlotOutcome::Pending;
@@ -225,6 +231,7 @@ impl ResponseSlot {
                 };
                 return Some(SlotReply {
                     queue_us: s.queue_us,
+                    form_us: s.form_us,
                     execute_us: s.execute_us,
                     batch_size: s.batch_size,
                     output,
@@ -265,6 +272,7 @@ impl ResponseSlot {
         row: &RowRef,
         output: Result<&[f32], &str>,
         queue_us: u64,
+        form_us: u64,
         execute_us: u64,
         batch_size: usize,
     ) {
@@ -293,6 +301,7 @@ impl ResponseSlot {
             Err(e) => SlotOutcome::Err(e.to_string()),
         };
         s.queue_us = queue_us;
+        s.form_us = form_us;
         s.execute_us = execute_us;
         s.batch_size = batch_size;
         s.done = true;
@@ -306,6 +315,10 @@ impl ResponseSlot {
 pub struct InferRequest {
     /// Unique id assigned at submit time.
     pub id: RequestId,
+    /// Trace ID minted at admission (0 = untraced); rides the request
+    /// through batcher and worker so log events on those threads stay
+    /// correlated with the originating HTTP request.
+    pub trace: u64,
     /// Feature vector (length = model width N).
     pub features: Features,
     /// Enqueue timestamp for latency accounting.
@@ -323,6 +336,8 @@ pub struct InferResponse {
     pub output: Result<Vec<f32>, String>,
     /// Time spent queued before batch formation.
     pub queue_us: u64,
+    /// Batch handoff time (formation → execution start).
+    pub form_us: u64,
     /// Batch execution wall time.
     pub execute_us: u64,
     /// Bucket size this request was served in.
@@ -365,12 +380,14 @@ mod tests {
             requests: vec![
                 InferRequest {
                     id: 1,
+                    trace: 0,
                     features: Features::Owned(vec![1.0, 2.0]),
                     enqueued_at: Instant::now(),
                     reply: Reply::Channel(std::sync::mpsc::channel().0),
                 },
                 InferRequest {
                     id: 2,
+                    trace: 0,
                     features: Features::Owned(vec![3.0, 4.0]),
                     enqueued_at: Instant::now(),
                     reply: Reply::Channel(std::sync::mpsc::channel().0),
@@ -393,10 +410,13 @@ mod tests {
         let mut dst = [0.0f32; 3];
         assert!(slot.copy_input(&row, &mut dst));
         assert_eq!(dst, input);
-        slot.complete(&row, Ok(&[9.0, 8.0, 7.0]), 5, 11, 4);
+        slot.complete(&row, Ok(&[9.0, 8.0, 7.0]), 5, 7, 11, 4);
         let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
         assert_eq!(reply.output.unwrap(), 3);
-        assert_eq!((reply.queue_us, reply.execute_us, reply.batch_size), (5, 11, 4));
+        assert_eq!(
+            (reply.queue_us, reply.form_us, reply.execute_us, reply.batch_size),
+            (5, 7, 11, 4)
+        );
         assert_eq!(output, [9.0, 8.0, 7.0]);
     }
 
@@ -410,7 +430,7 @@ mod tests {
         slot.abandon(seq);
         let mut dst = [0.0f32];
         assert!(!slot.copy_input(&row, &mut dst), "abandoned input must not be read");
-        slot.complete(&row, Ok(&[5.0]), 0, 0, 1);
+        slot.complete(&row, Ok(&[5.0]), 0, 0, 0, 1);
         assert_eq!(output, [0.0], "abandoned output must not be written");
         assert!(wait_slot(&slot, seq, Duration::from_millis(20)).is_none());
     }
@@ -423,7 +443,7 @@ mod tests {
         let old_seq = slot.issue();
         let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 1, old_seq) };
         let new_seq = slot.issue(); // reuse supersedes the old use
-        slot.complete(&row, Ok(&[5.0]), 0, 0, 1);
+        slot.complete(&row, Ok(&[5.0]), 0, 0, 0, 1);
         assert_eq!(output, [0.0], "stale completion must not touch the arena");
         assert!(wait_slot(&slot, new_seq, Duration::from_millis(20)).is_none());
     }
@@ -435,7 +455,7 @@ mod tests {
         let mut output = [0.0f32; 2];
         let seq = slot.issue();
         let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 2, seq) };
-        slot.complete(&row, Ok(&[1.0, 2.0, 3.0]), 0, 0, 1);
+        slot.complete(&row, Ok(&[1.0, 2.0, 3.0]), 0, 0, 0, 1);
         let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
         assert!(reply.output.unwrap_err().contains("exceeds"));
         assert_eq!(output, [0.0, 0.0]);
@@ -451,7 +471,7 @@ mod tests {
         let slot2 = Arc::clone(&slot);
         let t = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
-            slot2.complete(&row, Ok(&[4.0]), 1, 2, 1);
+            slot2.complete(&row, Ok(&[4.0]), 1, 1, 2, 1);
         });
         let reply = wait_slot(&slot, seq, Duration::from_secs(5)).unwrap();
         assert_eq!(reply.output.unwrap(), 1);

@@ -20,6 +20,7 @@ use std::time::Instant;
 
 use super::request::{Features, FormedBatch, InferRequest, InferResponse, Reply};
 use crate::metrics::Registry;
+use crate::trace::log::{self, Field, Level};
 
 /// Executes one padded batch: input is the padded [bucket, n] row-major
 /// feature buffer; the executor writes `bucket × out_width` outputs into
@@ -98,6 +99,9 @@ fn worker_loop(
     let errors = metrics.counter("worker.errors");
     let exec_hist = metrics.histogram("worker.execute_ns");
     let queue_hist = metrics.histogram("worker.queue_wait_ns");
+    // Live (un-padded) rows per executed batch — the occupancy series
+    // that tells whether the batcher is filling its buckets.
+    let occupancy = metrics.histogram("worker.batch_occupancy_rows");
     // Thread-persistent batch buffers: grown to the largest bucket seen,
     // then reused forever — no per-batch allocation.
     let mut padded: Vec<f32> = Vec::new();
@@ -116,8 +120,12 @@ fn worker_loop(
         batches.inc();
         rows.add(requests.len() as u64);
         padded_rows.add((bucket - requests.len()) as u64);
+        occupancy.record_ns(requests.len() as u64);
 
         let t0 = Instant::now();
+        // Batch-form handoff: formation to the moment this worker started
+        // executing (time spent in the bounded worker channel).
+        let form_us = t0.saturating_duration_since(formed_at).as_micros() as u64;
         let mut out_w = 0;
         let result: Result<(), String> = match &mut executor {
             Ok(exe) => {
@@ -164,8 +172,32 @@ fn worker_loop(
         };
         let execute_us = t0.elapsed().as_micros() as u64;
         exec_hist.record_ns(t0.elapsed().as_nanos() as u64);
-        if result.is_err() {
+        if let Err(e) = &result {
             errors.inc();
+            log::event(
+                Level::Error,
+                "worker",
+                "batch_failed",
+                requests.first().map(|r| r.trace).unwrap_or(0),
+                &[
+                    ("error", Field::Str(e)),
+                    ("bucket", Field::U64(bucket as u64)),
+                    ("rows", Field::U64(requests.len() as u64)),
+                ],
+            );
+        } else if log::enabled(Level::Debug) {
+            log::event(
+                Level::Debug,
+                "worker",
+                "batch_executed",
+                requests.first().map(|r| r.trace).unwrap_or(0),
+                &[
+                    ("bucket", Field::U64(bucket as u64)),
+                    ("rows", Field::U64(requests.len() as u64)),
+                    ("execute_us", Field::U64(execute_us)),
+                    ("form_us", Field::U64(form_us)),
+                ],
+            );
         }
 
         for (i, req) in requests.iter().enumerate() {
@@ -194,13 +226,14 @@ fn worker_loop(
                         id: req.id,
                         output,
                         queue_us,
+                        form_us,
                         execute_us,
                         batch_size: bucket,
                     });
                 }
                 Reply::Slot(slot) => {
                     if let Features::Borrowed(r) = &req.features {
-                        slot.complete(r, row_out, queue_us, execute_us, bucket);
+                        slot.complete(r, row_out, queue_us, form_us, execute_us, bucket);
                     }
                 }
             }
@@ -328,6 +361,7 @@ mod tests {
             let (rtx, rrx) = channel();
             requests.push(InferRequest {
                 id,
+                trace: 0,
                 features: Features::Owned(vec![id as f32; n]),
                 enqueued_at: Instant::now(),
                 reply: Reply::Channel(rtx),
@@ -397,6 +431,7 @@ mod tests {
             bucket: 1,
             requests: vec![InferRequest {
                 id: 7,
+                trace: 0,
                 features: Features::Borrowed(row),
                 enqueued_at: Instant::now(),
                 reply: Reply::Slot(Arc::clone(&slot)),

@@ -439,6 +439,31 @@ pub fn write_head(
     );
 }
 
+/// [`write_head`] plus an `x-trace-id` response header: the trace ID is
+/// hex-formatted straight into the retained head buffer, so echoing the
+/// ID on the inference fast path stays allocation-free.
+pub fn write_head_with_trace(
+    head: &mut Vec<u8>,
+    status: u16,
+    content_type: &str,
+    body_len: usize,
+    keep_alive: bool,
+    trace_id: u64,
+) {
+    use std::io::Write as _;
+    head.clear();
+    let _ = write!(
+        head,
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nx-trace-id: {:016x}\r\nconnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body_len,
+        trace_id,
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+}
+
 /// Canonical reason phrase for the statuses the gateway emits.
 pub fn reason(status: u16) -> &'static str {
     match status {
@@ -810,6 +835,19 @@ mod tests {
         let s = String::from_utf8(head.clone()).unwrap();
         assert!(s.starts_with("HTTP/1.1 503"), "{s}");
         assert!(s.contains("connection: close"));
+    }
+
+    #[test]
+    fn write_head_with_trace_carries_hex_trace_id() {
+        let mut head = Vec::new();
+        write_head_with_trace(&mut head, 200, "application/json", 2, true, 0xab);
+        let mut wire = head.clone();
+        wire.extend_from_slice(b"[]");
+        let mut c = Cursor::new(wire);
+        let parsed = read_response(&mut c).unwrap();
+        assert_eq!(parsed.status, 200);
+        assert_eq!(parsed.header("X-Trace-Id"), Some("00000000000000ab"));
+        assert_eq!(parsed.body_str(), "[]");
     }
 
     #[test]

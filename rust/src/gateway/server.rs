@@ -35,7 +35,18 @@
 //!   registry under live traffic.
 //! * `GET /healthz` — liveness + drain state + in-flight gauge.
 //! * `GET /metrics` — Prometheus text from [`crate::metrics::Registry`]
-//!   (gateway + admission + per-model `acdc_model_*` series).
+//!   (gateway + admission + per-model `acdc_model_*` series, plus the
+//!   per-stage `acdc_trace_*_ns` pipeline histograms).
+//! * `GET /v1/debug/slow` — the slow-request ring ([`crate::trace`]):
+//!   per-stage latency breakdowns of recent requests over the `[trace]`
+//!   threshold, newest first (followed live by `acdc tail`).
+//!
+//! Every sampled inference request (all of them at the default
+//! `sample_every = 1`) carries an `x-trace-id` response header; sending
+//! `X-Acdc-Debug: 1` returns the stage breakdown inline in the response
+//! body. Span records live in the per-connection arena and the slow ring
+//! is lock-free, so tracing on by default preserves the zero-allocation
+//! steady state (`tests/zero_alloc.rs`).
 //!
 //! The admin surface is unauthenticated by design — deploy it on a
 //! trusted network or behind a fronting proxy.
@@ -48,7 +59,7 @@
 use std::io::{BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -61,6 +72,8 @@ use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
 use crate::serve::Server;
+use crate::trace::log::{self, Field, Level};
+use crate::trace::{self, SlowRing, SpanRecord, Stage};
 use crate::trainer::{JobSpec, JobStatus, TrainerError, TrainerPool};
 use crate::util::json::{obj, Json};
 
@@ -155,6 +168,15 @@ struct Shared {
     http_errors: Arc<Counter>,
     timeouts: Arc<Counter>,
     request_ns: Arc<Histogram>,
+    /// Bounded capture of requests over the `[trace]` slow threshold,
+    /// served by `GET /v1/debug/slow` and followed by `acdc tail`.
+    slow_ring: Arc<SlowRing>,
+    /// Request counter driving `trace.sample_every` (1 = trace all).
+    trace_seq: AtomicU64,
+    /// Per-stage latency histograms (`trace.{stage}_ns`), cached at
+    /// startup so recording a span is pure atomics — indexed by
+    /// [`Stage::index`].
+    stage_ns: [Arc<Histogram>; Stage::COUNT],
 }
 
 impl Gateway {
@@ -208,6 +230,17 @@ impl Gateway {
             .map_err(|e| format!("gateway set_nonblocking: {e}"))?;
         let metrics = Arc::clone(registry.metrics());
         let admission = Arc::new(Admission::new(&cfg, &metrics));
+        // Logger knobs come from the `[trace]` section; ACDC_LOG overrides
+        // the level inside init.
+        log::init(
+            Level::parse(&cfg.trace.log_level).unwrap_or(Level::Info),
+            cfg.trace.log_max_per_s,
+        );
+        let slow_ring = Arc::new(SlowRing::new(
+            cfg.trace.ring_capacity,
+            Duration::from_millis(cfg.trace.slow_ms),
+        ));
+        let stage_ns = Stage::ALL.map(|s| metrics.histogram(&format!("trace.{}_ns", s.name())));
         let shared = Arc::new(Shared {
             registry,
             trainer,
@@ -221,9 +254,24 @@ impl Gateway {
             http_errors: metrics.counter("gateway.http_errors"),
             timeouts: metrics.counter("gateway.timeouts"),
             request_ns: metrics.histogram("gateway.request_ns"),
+            slow_ring,
+            trace_seq: AtomicU64::new(0),
+            stage_ns,
             metrics,
             stop: AtomicBool::new(false),
         });
+        let addr_str = addr.to_string();
+        log::event(
+            Level::Info,
+            "gateway",
+            "listening",
+            0,
+            &[
+                ("addr", Field::Str(&addr_str)),
+                ("slow_ms", Field::U64(shared.cfg.trace.slow_ms)),
+                ("ring_capacity", Field::U64(shared.cfg.trace.ring_capacity as u64)),
+            ],
+        );
         let accept_shared = Arc::clone(&shared);
         let accept = std::thread::Builder::new()
             .name("acdc-gw-accept".into())
@@ -271,6 +319,13 @@ impl Drop for Gateway {
     fn drop(&mut self) {
         self.shared.admission.begin_drain();
         self.shared.stop.store(true, Ordering::Release);
+        log::event(
+            Level::Info,
+            "gateway",
+            "drain_begin",
+            0,
+            &[("open_connections", Field::U64(self.shared.conns.open()))],
+        );
         if let Some(h) = self.accept.take() {
             let _ = h.join();
         }
@@ -280,7 +335,14 @@ impl Drop for Gateway {
         // and deterministic: it returns the moment the last connection
         // exits, or at the deadline.
         let deadline = Instant::now() + Duration::from_millis(self.shared.cfg.drain_timeout_ms);
-        self.shared.conns.wait_idle(deadline);
+        let drained = self.shared.conns.wait_idle(deadline);
+        log::event(
+            Level::Info,
+            "gateway",
+            "drain_complete",
+            0,
+            &[("clean", Field::Bool(drained))],
+        );
         // Training jobs are part of the drain contract: cancel and join
         // them so no background thread outlives the gateway.
         self.shared.trainer.shutdown();
@@ -378,6 +440,9 @@ struct InferArena {
     out_lens: Vec<usize>,
     /// Batch bucket each row was served in.
     batch_sizes: Vec<usize>,
+    /// The current request's span record — arena-resident so tracing
+    /// being on by default performs no per-request allocation.
+    span: SpanRecord,
 }
 
 impl InferArena {
@@ -484,19 +549,44 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
                     match infer(&shared, req, model, arena, body) {
                         Ok(()) => {
                             shared.responses_ok.inc();
-                            http::write_head(head, 200, "application/json", body.len(), keep);
+                            if arena.span.trace_id != 0 {
+                                http::write_head_with_trace(
+                                    head,
+                                    200,
+                                    "application/json",
+                                    body.len(),
+                                    keep,
+                                    arena.span.trace_id,
+                                );
+                            } else {
+                                http::write_head(head, 200, "application/json", body.len(), keep);
+                            }
                             shared.request_ns.record(t0.elapsed());
+                            let w0 = Instant::now();
                             let wrote = writer
                                 .write_all(head)
                                 .and_then(|()| writer.write_all(body))
                                 .and_then(|()| writer.flush());
+                            arena.span.set(Stage::Write, w0.elapsed());
+                            finish_span(&shared, &mut arena.span, 200, t0.elapsed());
                             if wrote.is_err() || !keep {
                                 break;
                             }
                         }
                         Err(resp) => {
                             shared.request_ns.record(t0.elapsed());
-                            if resp.write_to(&mut writer, keep).is_err() || !keep {
+                            let resp = if arena.span.trace_id != 0 {
+                                resp.with_header(
+                                    "x-trace-id",
+                                    &format!("{:016x}", arena.span.trace_id),
+                                )
+                            } else {
+                                resp
+                            };
+                            let status = resp.status;
+                            let write_ok = resp.write_to(&mut writer, keep).is_ok();
+                            finish_span(&shared, &mut arena.span, status, t0.elapsed());
+                            if !write_ok || !keep {
                                 break;
                             }
                         }
@@ -535,10 +625,11 @@ fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
         ("GET", "/metrics") => return Response::text(200, &shared.metrics.prometheus()),
         ("GET", "/v1/models") => return list_models(shared),
         ("GET", "/v1/jobs") => return list_jobs(shared),
+        ("GET", "/v1/debug/slow") => return debug_slow(shared),
         // POST /v1/infer is served on the streaming fast path before
         // `route`; everything landing here is a bad method.
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer")
-        | (_, "/v1/jobs") => {
+        | (_, "/v1/jobs") | (_, "/v1/debug/slow") => {
             return Response::json(405, &err_json("method not allowed"));
         }
         _ => {}
@@ -636,6 +727,54 @@ fn healthz(shared: &Arc<Shared>) -> Response {
                 "open_connections",
                 Json::Num(shared.conns.open() as f64),
             ),
+        ]),
+    )
+}
+
+/// `GET /v1/debug/slow` — the slow-request ring, newest first. A debug
+/// surface: allocation here is fine, only the capture path is hot.
+fn debug_slow(shared: &Arc<Shared>) -> Response {
+    let entries: Vec<Json> = shared
+        .slow_ring
+        .snapshot()
+        .iter()
+        .map(|rec| {
+            let stages = Json::Obj(
+                Stage::ALL
+                    .iter()
+                    .map(|s| {
+                        (
+                            format!("{}_us", s.name()),
+                            Json::Num((rec.get(*s) / 1_000) as f64),
+                        )
+                    })
+                    .collect(),
+            );
+            obj(vec![
+                ("trace_id", Json::Str(format!("{:016x}", rec.trace_id))),
+                ("total_us", Json::Num((rec.total_ns / 1_000) as f64)),
+                ("status", Json::Num(rec.status as f64)),
+                ("rows", Json::Num(rec.rows as f64)),
+                ("batch_size", Json::Num(rec.batch as f64)),
+                ("unix_ms", Json::Num(rec.unix_ms as f64)),
+                ("slowest", Json::Str(rec.slowest().name().to_string())),
+                ("stages", stages),
+            ])
+        })
+        .collect();
+    Response::json(
+        200,
+        &obj(vec![
+            (
+                "threshold_us",
+                Json::Num((shared.slow_ring.threshold_ns() / 1_000) as f64),
+            ),
+            (
+                "capacity",
+                Json::Num(shared.slow_ring.capacity() as f64),
+            ),
+            ("recorded", Json::Num(shared.slow_ring.recorded() as f64)),
+            ("entries", Json::Arr(entries)),
         ]),
     )
 }
@@ -945,9 +1084,30 @@ fn infer(
     arena: &mut InferArena,
     body_out: &mut Vec<u8>,
 ) -> Result<(), Response> {
+    // Span setup: reset the arena-resident record and mint a trace ID for
+    // sampled requests (every request at the default `sample_every = 1`).
+    // Both are allocation-free, preserving the zero-allocation invariant
+    // with tracing on by default.
+    arena.span.reset();
+    if shared.cfg.trace.enabled {
+        let seq = shared.trace_seq.fetch_add(1, Ordering::Relaxed);
+        if seq % shared.cfg.trace.sample_every.max(1) == 0 {
+            arena.span.trace_id = trace::mint_trace_id();
+        }
+    }
     // The permit holds an in-flight slot for the whole submit → response
     // window; dropping it on any exit path releases the slot.
-    let _permit = shared.admission.try_admit().map_err(|e| shed_response(shared, e))?;
+    let a0 = Instant::now();
+    let _permit = shared.admission.try_admit().map_err(|e| {
+        log::event(
+            Level::Debug,
+            "gateway",
+            "request_shed",
+            arena.span.trace_id,
+            &[("reason", Field::Str(e.as_str()))],
+        );
+        shed_response(shared, e)
+    })?;
     let t0 = Instant::now();
     // The handle pins this request to one (model, version) epoch: the
     // request survives a concurrent hot swap on the version it was
@@ -957,9 +1117,12 @@ fn infer(
         None => shared.registry.resolve_default(),
     }
     .map_err(|e| registry_error(&e))?;
+    // Admission covers the gate (permit) plus model/epoch resolution.
+    arena.span.set(Stage::Admission, a0.elapsed());
     let width = handle.width();
     let body = std::str::from_utf8(&req.body)
         .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
+    let p0 = Instant::now();
     let rows = match parse_infer_fast(body, width, shared.cfg.max_rows_per_request, &mut arena.rows)
     {
         Ok(Some(rows)) => rows,
@@ -973,6 +1136,8 @@ fn infer(
         }
         Err(msg) => return Err(Response::json(400, &err_json(&msg))),
     };
+    arena.span.set(Stage::Parse, p0.elapsed());
+    arena.span.rows = rows as u32;
     debug_assert_eq!(arena.rows.len(), rows * width);
     // Grow the output arena and slot pool *before* issuing any sequence,
     // so no outstanding RowRef can observe a reallocation.
@@ -1000,7 +1165,7 @@ fn infer(
                 arena.seqs[r],
             )
         };
-        match handle.submit_slot(row, &arena.slots[r]) {
+        match handle.submit_slot(row, &arena.slots[r], arena.span.trace_id) {
             Ok(()) => {}
             Err(SubmitError::QueueFull) => {
                 shared.admission.note_queue_full();
@@ -1015,12 +1180,16 @@ fn infer(
     // the workers then skip them without touching the arena.
     let deadline = Instant::now() + Duration::from_millis(shared.cfg.request_timeout_ms);
     let mut queue_us = 0u64;
+    let mut form_us = 0u64;
     let mut execute_us = 0u64;
+    let mut max_batch = 0usize;
     for r in 0..rows {
         match arena.slots[r].wait(arena.seqs[r], deadline) {
             Some(reply) => {
                 queue_us = queue_us.max(reply.queue_us);
+                form_us = form_us.max(reply.form_us);
                 execute_us = execute_us.max(reply.execute_us);
+                max_batch = max_batch.max(reply.batch_size);
                 arena.batch_sizes[r] = reply.batch_size;
                 match reply.output {
                     Ok(len) => arena.out_lens[r] = len,
@@ -1035,10 +1204,21 @@ fn infer(
             }
         }
     }
+    // Pipeline stages measured off-thread travel back on the slot replies
+    // (maxima across the request's rows).
+    arena.span.set(Stage::QueueWait, Duration::from_micros(queue_us));
+    arena.span.set(Stage::BatchForm, Duration::from_micros(form_us));
+    arena.span.set(Stage::Execute, Duration::from_micros(execute_us));
+    arena.span.batch = max_batch as u32;
     // All rows completed — reaping is now a no-op; drop the guard so the
     // serializer below can borrow the arena freely.
     drop(reaper);
     handle.observe_request(t0.elapsed());
+    // Opt-in inline breakdown: `X-Acdc-Debug: 1` adds a "trace" object to
+    // the response body (serialize/write aren't finished yet, so those two
+    // stages appear only in the ring and the /metrics histograms).
+    let debug_breakdown = arena.span.trace_id != 0 && req.header("x-acdc-debug") == Some("1");
+    let s0 = Instant::now();
     write_infer_body(
         body_out,
         handle.name(),
@@ -1048,8 +1228,57 @@ fn infer(
         queue_us,
         execute_us,
         arena,
+        debug_breakdown,
     );
+    arena.span.set(Stage::Serialize, s0.elapsed());
     Ok(())
+}
+
+/// Close out a request's span on the connection thread: record every
+/// stage into the `trace.{stage}_ns` histograms (successes only, so error
+/// zeros don't skew the series), publish to the slow ring when the total
+/// crossed the threshold, and emit the request-scoped log event.
+fn finish_span(shared: &Arc<Shared>, span: &mut SpanRecord, status: u16, total: Duration) {
+    if span.trace_id == 0 {
+        return; // tracing disabled or request sampled out
+    }
+    span.total_ns = total.as_nanos() as u64;
+    span.status = status;
+    if status == 200 {
+        for s in Stage::ALL {
+            shared.stage_ns[s.index()].record_ns(span.get(s));
+        }
+    }
+    if span.total_ns >= shared.slow_ring.threshold_ns() {
+        span.unix_ms = trace::unix_ms();
+        shared.slow_ring.record(span);
+        log::event(
+            Level::Warn,
+            "gateway",
+            "slow_request",
+            span.trace_id,
+            &[
+                ("total_us", Field::U64(span.total_ns / 1_000)),
+                ("status", Field::U64(status as u64)),
+                ("slowest", Field::Str(span.slowest().name())),
+                (
+                    "slowest_us",
+                    Field::U64(span.get(span.slowest()) / 1_000),
+                ),
+            ],
+        );
+    } else if log::enabled(Level::Debug) {
+        log::event(
+            Level::Debug,
+            "gateway",
+            "request_done",
+            span.trace_id,
+            &[
+                ("total_us", Field::U64(span.total_ns / 1_000)),
+                ("status", Field::U64(status as u64)),
+            ],
+        );
+    }
 }
 
 /// Specialized scanner for the canonical inference bodies
@@ -1334,7 +1563,9 @@ fn extract_rows_dom(
 /// Serialize the success response body straight into the connection's
 /// reusable write buffer — no `Json` tree, no row clones (the response
 /// serialization satellite). Field set and key order match the legacy
-/// `obj(...)` (BTreeMap-alphabetical) rendering.
+/// `obj(...)` (BTreeMap-alphabetical) rendering. With `debug` set
+/// (`X-Acdc-Debug: 1`) a `"trace"` object carries the request's inline
+/// stage breakdown from `arena.span`.
 #[allow(clippy::too_many_arguments)]
 fn write_infer_body(
     buf: &mut Vec<u8>,
@@ -1345,6 +1576,7 @@ fn write_infer_body(
     queue_us: u64,
     execute_us: u64,
     arena: &InferArena,
+    debug: bool,
 ) {
     buf.clear();
     buf.extend_from_slice(b"{\"batch_sizes\":[");
@@ -1367,10 +1599,25 @@ fn write_infer_body(
         let start = r * width;
         write_row_json(buf, &arena.outs[start..start + arena.out_lens[r]]);
     }
-    let _ = write!(
-        buf,
-        "],\"queue_us\":{queue_us},\"rows\":{rows},\"version\":{version}}}"
-    );
+    let _ = write!(buf, "],\"queue_us\":{queue_us},\"rows\":{rows}");
+    if debug {
+        // Serialize/write haven't happened yet when the body is built —
+        // those two stages are visible via the slow ring and /metrics.
+        let span = &arena.span;
+        let us = |s: Stage| span.get(s) / 1_000;
+        let _ = write!(
+            buf,
+            ",\"trace\":{{\"admission_us\":{},\"batch_form_us\":{},\"execute_us\":{},\
+             \"id\":\"{:016x}\",\"parse_us\":{},\"queue_wait_us\":{}}}",
+            us(Stage::Admission),
+            us(Stage::BatchForm),
+            us(Stage::Execute),
+            span.trace_id,
+            us(Stage::Parse),
+            us(Stage::QueueWait),
+        );
+    }
+    let _ = write!(buf, ",\"version\":{version}}}");
 }
 
 /// One output row as a JSON array of numbers.
@@ -1563,13 +1810,14 @@ mod tests {
         arena.batch_sizes[0] = 4;
         arena.batch_sizes[1] = 4;
         let mut buf = Vec::new();
-        write_infer_body(&mut buf, "demo", 3, 2, 3, 17, 42, &arena);
+        write_infer_body(&mut buf, "demo", 3, 2, 3, 17, 42, &arena, false);
         let parsed = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
         assert_eq!(parsed.get("model").unwrap().as_str(), Some("demo"));
         assert_eq!(parsed.get("version").unwrap().as_f64(), Some(3.0));
         assert_eq!(parsed.get("rows").unwrap().as_f64(), Some(2.0));
         assert_eq!(parsed.get("queue_us").unwrap().as_f64(), Some(17.0));
         assert_eq!(parsed.get("execute_us").unwrap().as_f64(), Some(42.0));
+        assert!(parsed.get("trace").is_none(), "trace object is opt-in");
         let outs = parsed.get("outputs").unwrap().as_arr().unwrap();
         assert_eq!(outs.len(), 2);
         assert_eq!(outs[0].as_arr().unwrap()[1].as_f64(), Some(2.5));
@@ -1577,13 +1825,39 @@ mod tests {
         assert_eq!(outs[1].as_arr().unwrap()[1], Json::Null);
         assert!(parsed.get("output").is_none(), "single-row field only at rows=1");
         // Single-row rendering carries both "output" and "outputs".
-        write_infer_body(&mut buf, "demo", 1, 1, 3, 0, 0, &arena);
+        write_infer_body(&mut buf, "demo", 1, 1, 3, 0, 0, &arena, false);
         let parsed = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
         assert_eq!(
             parsed.get("output").unwrap().as_arr().unwrap().len(),
             3,
             "{parsed}"
         );
+    }
+
+    #[test]
+    fn response_body_debug_trace_object_renders_stage_breakdown() {
+        let mut arena = InferArena::default();
+        arena.ensure(1, 2);
+        arena.rows.resize(2, 0.0);
+        arena.outs[..2].copy_from_slice(&[1.0, 2.0]);
+        arena.out_lens[0] = 2;
+        arena.batch_sizes[0] = 4;
+        arena.span.trace_id = 0xab;
+        arena.span.set(Stage::Parse, Duration::from_micros(3));
+        arena.span.set(Stage::Admission, Duration::from_micros(1));
+        arena.span.set(Stage::QueueWait, Duration::from_micros(250));
+        arena.span.set(Stage::BatchForm, Duration::from_micros(9));
+        arena.span.set(Stage::Execute, Duration::from_micros(700));
+        let mut buf = Vec::new();
+        write_infer_body(&mut buf, "demo", 1, 1, 2, 250, 700, &arena, true);
+        let parsed = Json::parse(std::str::from_utf8(&buf).unwrap()).unwrap();
+        let tr = parsed.get("trace").expect("trace object present");
+        assert_eq!(tr.get("id").unwrap().as_str(), Some("00000000000000ab"));
+        assert_eq!(tr.get("parse_us").unwrap().as_f64(), Some(3.0));
+        assert_eq!(tr.get("queue_wait_us").unwrap().as_f64(), Some(250.0));
+        assert_eq!(tr.get("batch_form_us").unwrap().as_f64(), Some(9.0));
+        assert_eq!(tr.get("execute_us").unwrap().as_f64(), Some(700.0));
+        assert_eq!(tr.get("admission_us").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

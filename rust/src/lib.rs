@@ -54,5 +54,6 @@ pub mod runtime;
 pub mod sell;
 pub mod serve;
 pub mod tensor;
+pub mod trace;
 pub mod trainer;
 pub mod util;

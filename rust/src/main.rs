@@ -13,6 +13,7 @@
 //! acdc serve  [--config f.toml]     serving demo over the coordinator (E7)
 //! acdc gateway [--addr host:port]   HTTP serving gateway (E8)
 //! acdc loadgen [--addr host:port]   closed/open-loop load generator (E8)
+//! acdc tail   [--addr host:port]    follow a gateway's slow-request ring
 //! ```
 
 use acdc::config::{Config, ServeConfig, TrainConfig, TrainerConfig};
@@ -68,6 +69,7 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "gateway" => cmd_gateway(rest),
         "loadgen" => cmd_loadgen(rest),
         "registry" => cmd_registry(rest),
+        "tail" => cmd_tail(rest),
         "help" | "--help" | "-h" => {
             println!("{}", HELP);
             Ok(())
@@ -101,6 +103,8 @@ subcommands:
   loadgen     closed/open-loop load generator against a running gateway
   registry    admin client: list | load | unload | alias | default against a
               running gateway's model registry
+  tail        follow a running gateway's slow-request ring (GET /v1/debug/slow)
+              and print one stage-attributed line per captured request
 run `acdc <subcommand> --help` for options";
 
 fn common_opts() -> Vec<acdc::util::cli::OptSpec> {
@@ -781,6 +785,78 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
     print!("{}", report.render());
     println!("{}", report.to_json().to_pretty());
     Ok(())
+}
+
+/// Render one slow-ring entry (from `GET /v1/debug/slow`) as a single
+/// human-readable line: trace id, total latency, status, shape, and the
+/// per-stage µs breakdown with the slowest stage called out.
+fn slow_line(e: &Json) -> String {
+    let trace = e.get("trace_id").and_then(|x| x.as_str()).unwrap_or("?");
+    let total_us = e.get("total_us").and_then(|x| x.as_i64()).unwrap_or(0);
+    let status = e.get("status").and_then(|x| x.as_i64()).unwrap_or(0);
+    let rows = e.get("rows").and_then(|x| x.as_i64()).unwrap_or(0);
+    let batch = e.get("batch_size").and_then(|x| x.as_i64()).unwrap_or(0);
+    let slowest = e.get("slowest").and_then(|x| x.as_str()).unwrap_or("?");
+    let stages = e
+        .get("stages")
+        .and_then(|s| s.as_obj())
+        .map(|o| {
+            // Alphabetical key order from the JSON object is fine here: the
+            // slowest stage is already called out by name.
+            o.iter()
+                .map(|(k, v)| {
+                    let us = v.as_i64().unwrap_or(0);
+                    format!("{}={}µs", k.trim_end_matches("_us"), us)
+                })
+                .collect::<Vec<_>>()
+                .join(" ")
+        })
+        .unwrap_or_default();
+    format!(
+        "trace {trace}  {:.1}ms  status {status}  rows {rows}  batch {batch}  slowest {slowest}  [{stages}]",
+        total_us as f64 / 1000.0,
+    )
+}
+
+fn cmd_tail(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt("addr", "gateway address", Some("127.0.0.1:7878")),
+        opt("interval-ms", "poll interval", Some("1000")),
+        flag("once", "print the current ring contents and exit"),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let addr = args.get("addr").unwrap().to_string();
+    let interval = Duration::from_millis(args.get_usize("interval-ms")?.unwrap() as u64);
+    let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+    let mut first = true;
+    loop {
+        let v = admin_call(&addr, "GET", "/v1/debug/slow", None)?;
+        if first {
+            let threshold_us = v.get("threshold_us").and_then(|x| x.as_i64()).unwrap_or(0);
+            let capacity = v.get("capacity").and_then(|x| x.as_i64()).unwrap_or(0);
+            println!(
+                "tailing http://{addr}/v1/debug/slow (threshold {:.0}ms, ring capacity {capacity})",
+                threshold_us as f64 / 1000.0,
+            );
+            first = false;
+        }
+        let entries = v
+            .get("entries")
+            .and_then(|x| x.as_arr())
+            .ok_or("malformed /v1/debug/slow response")?;
+        // The ring reports newest-first; print oldest-first so the terminal
+        // reads top-to-bottom in arrival order, and dedupe across polls.
+        for e in entries.iter().rev() {
+            let trace = e.get("trace_id").and_then(|x| x.as_str()).unwrap_or("?");
+            if seen.insert(trace.to_string()) {
+                println!("{}", slow_line(e));
+            }
+        }
+        if args.flag("once") {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 /// One admin HTTP exchange against a running gateway.

@@ -150,13 +150,27 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Consistent point-in-time copy of the bucket counts (plus sum and
+    /// max). Every read-side query goes through one snapshot: loading
+    /// each bucket lazily while writers keep recording would let the
+    /// cumulative walk see a total that never matches the per-bucket sum
+    /// (torn-read drift), so the rank targets and the rendered series
+    /// must all be derived from the same copy.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; 64];
+        for (dst, src) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+
     /// Mean sample in nanoseconds (0 when empty).
     pub fn mean_ns(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            return 0.0;
-        }
-        self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        self.snapshot().mean_ns()
     }
 
     /// Largest sample seen, in nanoseconds.
@@ -171,6 +185,41 @@ impl Histogram {
 
     /// Approximate percentile (upper bucket bound at the target rank).
     pub fn percentile_ns(&self, pct: f64) -> u64 {
+        self.snapshot().percentile_ns(pct)
+    }
+}
+
+/// Point-in-time copy of a [`Histogram`]'s state. The count is derived
+/// from the bucket copy itself, so percentile ranks computed from a
+/// snapshot are always consistent with its cumulative bucket counts —
+/// concurrent `record` calls between bucket loads cannot skew them.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    /// Bucket i counts samples with `floor(log2(ns)) == i`.
+    pub buckets: [u64; 64],
+    /// Sum of all samples, in nanoseconds.
+    pub sum_ns: u64,
+    /// Largest sample seen, in nanoseconds.
+    pub max_ns: u64,
+}
+
+impl HistSnapshot {
+    /// Total samples in the snapshot (sum of the bucket copy).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Mean sample in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / c as f64
+    }
+
+    /// Approximate percentile (upper bucket bound at the target rank).
+    pub fn percentile_ns(&self, pct: f64) -> u64 {
         let total = self.count();
         if total == 0 {
             return 0;
@@ -178,13 +227,48 @@ impl Histogram {
         let target = ((pct / 100.0) * total as f64).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
+            seen += b;
             if seen >= target {
-                return 1u64 << (i + 1); // upper bound of bucket i
+                return upper_bound(i);
             }
         }
-        self.max_ns()
+        self.max_ns
     }
+}
+
+/// Upper bound (exclusive) of log₂ bucket `i`, saturating at `u64::MAX`
+/// for the top bucket.
+fn upper_bound(i: usize) -> u64 {
+    if i >= 63 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
+    }
+}
+
+/// Compiled cargo features, comma-joined (`"default"` when none) — the
+/// `features` label of `acdc_build_info`.
+pub fn build_features() -> &'static str {
+    match (cfg!(feature = "pjrt"), cfg!(feature = "count-allocs")) {
+        (true, true) => "pjrt,count-allocs",
+        (true, false) => "pjrt",
+        (false, true) => "count-allocs",
+        (false, false) => "default",
+    }
+}
+
+/// Process start in Unix seconds, captured on first call (callers render
+/// metrics early in startup, so this tracks actual process start closely
+/// enough to correlate dashboards with deploys).
+pub fn process_start_time_seconds() -> u64 {
+    use std::sync::OnceLock;
+    static START: OnceLock<u64> = OnceLock::new();
+    *START.get_or_init(|| {
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap_or_default()
+            .as_secs()
+    })
 }
 
 /// Named instrument registry with a text report.
@@ -199,6 +283,9 @@ pub struct Registry {
 impl Registry {
     /// Empty registry.
     pub fn new() -> Self {
+        // Pin the process-start stamp as early as the first registry, so
+        // `process_start_time_seconds` reflects startup, not first render.
+        process_start_time_seconds();
         Self::default()
     }
 
@@ -248,12 +335,23 @@ impl Registry {
 
     /// Prometheus text exposition (served by the gateway's `GET /metrics`).
     ///
-    /// Counters and gauges render as `acdc_<name> <value>`; histograms as
-    /// summaries with `quantile` labels plus `_sum` and `_count` series.
-    /// Every histogram in this registry records nanoseconds and is named
-    /// `*_ns`, so quantiles and `_sum` are both emitted in nanoseconds to
-    /// keep the series self-consistent. Names are sanitized to `[a-z0-9_]`
+    /// Counters and gauges render as `acdc_<name> <value>`; histograms
+    /// render twice: as summaries with `quantile` labels plus `_sum` and
+    /// `_count` series (the original dashboards read these), and as true
+    /// histogram exposition under `<name>_hist` — cumulative
+    /// `_bucket{le="..."}` series over the log₂ bucket bounds ending at
+    /// `le="+Inf"`, plus `_hist_sum`/`_hist_count`. Both views of one
+    /// histogram are rendered from a single [`Histogram::snapshot`], so
+    /// the `+Inf` bucket, `_count` and the quantile ranks always agree
+    /// even under concurrent recording. Every histogram in this registry
+    /// records nanoseconds and is named `*_ns`, so bounds, quantiles and
+    /// `_sum` are all in nanoseconds. Names are sanitized to `[a-z0-9_]`
     /// so `worker.execute_ns` becomes `acdc_worker_execute_ns`.
+    ///
+    /// The exposition also carries two deploy-correlation series:
+    /// `acdc_build_info` (crate version, compiled features, active SIMD
+    /// dispatch arm as labels, value always 1) and
+    /// `process_start_time_seconds`.
     pub fn prometheus(&self) -> String {
         fn sanitize(name: &str) -> String {
             let mut out = String::with_capacity(name.len() + 5);
@@ -268,6 +366,16 @@ impl Registry {
             out
         }
         let mut out = String::new();
+        out.push_str(&format!(
+            "# TYPE acdc_build_info gauge\nacdc_build_info{{version=\"{}\",features=\"{}\",simd=\"{}\"}} 1\n",
+            env!("CARGO_PKG_VERSION"),
+            build_features(),
+            crate::dct::simd::active().name(),
+        ));
+        out.push_str(&format!(
+            "# TYPE process_start_time_seconds gauge\nprocess_start_time_seconds {}\n",
+            process_start_time_seconds()
+        ));
         for (name, c) in self.counters.lock().unwrap().iter() {
             let n = sanitize(name);
             out.push_str(&format!("# TYPE {n} counter\n{n} {}\n", c.get()));
@@ -282,15 +390,38 @@ impl Registry {
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             let n = sanitize(name);
+            let snap = h.snapshot();
+            let total = snap.count();
             out.push_str(&format!("# TYPE {n} summary\n"));
             for (q, pct) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
                 out.push_str(&format!(
                     "{n}{{quantile=\"{q}\"}} {}\n",
-                    h.percentile_ns(pct)
+                    snap.percentile_ns(pct)
                 ));
             }
-            out.push_str(&format!("{n}_sum {}\n", h.sum_ns()));
-            out.push_str(&format!("{n}_count {}\n", h.count()));
+            out.push_str(&format!("{n}_sum {}\n", snap.sum_ns));
+            out.push_str(&format!("{n}_count {total}\n"));
+            // True histogram exposition over the same snapshot. Buckets
+            // are cumulative and rendered up to the highest non-empty
+            // log₂ bucket; `+Inf` always equals `_count`.
+            out.push_str(&format!("# TYPE {n}_hist histogram\n"));
+            let top = snap
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .map(|i| i + 1)
+                .unwrap_or(0);
+            let mut cum = 0u64;
+            for i in 0..top {
+                cum += snap.buckets[i];
+                out.push_str(&format!(
+                    "{n}_hist_bucket{{le=\"{}\"}} {cum}\n",
+                    upper_bound(i)
+                ));
+            }
+            out.push_str(&format!("{n}_hist_bucket{{le=\"+Inf\"}} {total}\n"));
+            out.push_str(&format!("{n}_hist_sum {}\n", snap.sum_ns));
+            out.push_str(&format!("{n}_hist_count {total}\n"));
         }
         out
     }
@@ -419,6 +550,78 @@ mod tests {
         assert!((256..=1024).contains(&p50), "p50={p50}");
         let p99 = h.percentile_ns(99.0);
         assert!(p99 >= 65_536, "p99={p99}");
+    }
+
+    #[test]
+    fn prometheus_histogram_exposition_is_cumulative_and_consistent() {
+        let r = Registry::new();
+        let h = r.histogram("gateway.request_ns");
+        for ns in [100u64, 200, 400, 800, 100_000] {
+            h.record_ns(ns);
+        }
+        let text = r.prometheus();
+        assert!(
+            text.contains("# TYPE acdc_gateway_request_ns_hist histogram"),
+            "{text}"
+        );
+        assert!(
+            text.contains("acdc_gateway_request_ns_hist_bucket{le=\"+Inf\"} 5"),
+            "{text}"
+        );
+        assert!(text.contains("acdc_gateway_request_ns_hist_count 5"), "{text}");
+        assert!(
+            text.contains("acdc_gateway_request_ns_hist_sum 101500"),
+            "{text}"
+        );
+        // Bucket series are cumulative and non-decreasing.
+        let mut last = 0u64;
+        let mut bucket_lines = 0;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("acdc_gateway_request_ns_hist_bucket{le=\"") {
+                let v: u64 = rest.split("} ").nth(1).unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone bucket series: {line}");
+                last = v;
+                bucket_lines += 1;
+            }
+        }
+        assert!(bucket_lines >= 2, "{text}");
+        assert_eq!(last, 5, "+Inf bucket must equal count");
+    }
+
+    #[test]
+    fn prometheus_build_info_and_start_time() {
+        let r = Registry::new();
+        let text = r.prometheus();
+        assert!(text.contains("# TYPE acdc_build_info gauge"), "{text}");
+        assert!(
+            text.contains(&format!("version=\"{}\"", env!("CARGO_PKG_VERSION"))),
+            "{text}"
+        );
+        assert!(text.contains("simd=\""), "{text}");
+        assert!(text.contains("# TYPE process_start_time_seconds gauge"), "{text}");
+        let start: u64 = text
+            .lines()
+            .find(|l| l.starts_with("process_start_time_seconds "))
+            .unwrap()
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert!(start > 1_600_000_000, "implausible start time {start}");
+    }
+
+    #[test]
+    fn snapshot_count_matches_bucket_sum_and_top_bucket_saturates() {
+        let h = Histogram::new();
+        h.record_ns(u64::MAX); // lands in bucket 63
+        h.record_ns(1);
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 2);
+        // p99 rank falls in the top bucket whose upper bound saturates
+        // instead of overflowing the shift.
+        assert_eq!(snap.percentile_ns(99.0), u64::MAX);
     }
 
     #[test]

@@ -37,6 +37,7 @@ use crate::coordinator::worker::{BatchExecutor, ExecutorFactory};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::serve::Server;
+use crate::trace::log::{self, Field, Level};
 
 /// Why a registry operation failed. Maps onto HTTP statuses at the
 /// gateway (404 / 409 / 400).
@@ -158,9 +159,15 @@ impl ModelHandle {
     }
 
     /// Submit one arena row on the zero-allocation slot path (see
-    /// [`crate::coordinator::Coordinator::submit_slot`]).
-    pub fn submit_slot(&self, row: RowRef, slot: &Arc<ResponseSlot>) -> Result<(), SubmitError> {
-        self.epoch.server.submit_slot(row, slot)
+    /// [`crate::coordinator::Coordinator::submit_slot`]). `trace` is the
+    /// request's trace ID (0 = untraced).
+    pub fn submit_slot(
+        &self,
+        row: RowRef,
+        slot: &Arc<ResponseSlot>,
+        trace: u64,
+    ) -> Result<(), SubmitError> {
+        self.epoch.server.submit_slot(row, slot, trace)
     }
 
     /// Submit one row and block for the answer.
@@ -365,9 +372,17 @@ impl ModelRegistry {
                 }
             }
         }
+        let swapped = old_epoch.is_some();
         // Drop the swapped-out epoch outside every lock: if no handles
         // pin it, its coordinator drains right here.
         drop(old_epoch);
+        log::event(
+            Level::Info,
+            "registry",
+            if swapped { "model_swapped" } else { "model_loaded" },
+            0,
+            &[("model", Field::Str(name)), ("version", Field::U64(v))],
+        );
         Ok(v)
     }
 
@@ -406,6 +421,13 @@ impl ModelRegistry {
         // Last registry reference: the epoch (and its coordinator) drain
         // here, outside the lock.
         drop(entry);
+        log::event(
+            Level::Info,
+            "registry",
+            "model_unloaded",
+            0,
+            &[("model", Field::Str(name))],
+        );
         Ok(())
     }
 

@@ -286,13 +286,15 @@ impl Server {
     }
 
     /// Submit one arena row on the zero-allocation slot path (see
-    /// [`Coordinator::submit_slot`]).
+    /// [`Coordinator::submit_slot`]). `trace` is the request's trace ID
+    /// (0 = untraced).
     pub fn submit_slot(
         &self,
         row: crate::coordinator::request::RowRef,
         slot: &Arc<crate::coordinator::request::ResponseSlot>,
+        trace: u64,
     ) -> Result<(), SubmitError> {
-        self.coordinator.submit_slot(row, slot)
+        self.coordinator.submit_slot(row, slot, trace)
     }
 
     /// Text metrics report.

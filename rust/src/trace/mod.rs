@@ -1,0 +1,449 @@
+//! Per-request pipeline tracing: trace IDs, fixed-slot span records, and
+//! a bounded lock-free slow-request ring.
+//!
+//! The serving pipeline spans gateway → admission → batcher → worker →
+//! engine → serializer; end-to-end percentiles alone cannot say *where* a
+//! p99 request spent its time. This module provides the pieces the
+//! gateway threads through that path:
+//!
+//! * [`mint_trace_id`] — an allocation-free 64-bit trace ID minted at
+//!   admission, echoed back as the `x-trace-id` response header and
+//!   attached to every structured log event ([`log`]);
+//! * [`SpanRecord`] — a fixed-size per-request record with one nanosecond
+//!   slot per [`Stage`]. It lives inside the per-connection arena, so
+//!   tracing being on by default costs **zero heap allocations** per
+//!   request (the PR-5 invariant);
+//! * [`SlowRing`] — a bounded, lock-free ring of the most recent requests
+//!   whose total latency crossed the configured threshold, served by
+//!   `GET /v1/debug/slow` and followed by `acdc tail`.
+//!
+//! Everything here is dependency-free and built on word-sized atomics:
+//! the ring is a per-slot seqlock over `AtomicU64` words, so readers
+//! never block writers and a torn snapshot is detected and skipped, not
+//! returned.
+
+pub mod log;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+/// One measured pipeline stage, in request order.
+///
+/// The gateway stamps `Parse`/`Admission`/`Serialize`/`Write` on the
+/// connection thread; `QueueWait`/`BatchForm`/`Execute` are measured by
+/// the batcher/worker and travel back on the response slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// JSON feature parsing of the request body.
+    Parse,
+    /// Admission control: drain gate, in-flight cap, token bucket.
+    Admission,
+    /// Enqueue until the batcher formed a batch containing the request.
+    QueueWait,
+    /// Batch handoff: formation until the worker starts executing
+    /// (channel transit plus input gather/padding).
+    BatchForm,
+    /// Executor call (the SELL transform itself).
+    Execute,
+    /// Response-body serialization into the retained write buffer.
+    Serialize,
+    /// Socket write of head + body.
+    Write,
+}
+
+impl Stage {
+    /// Number of stages (the span record's slot count).
+    pub const COUNT: usize = 7;
+
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Parse,
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::Execute,
+        Stage::Serialize,
+        Stage::Write,
+    ];
+
+    /// Slot index of this stage.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable snake_case name used in metrics, JSON, and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::Execute => "execute",
+            Stage::Serialize => "serialize",
+            Stage::Write => "write",
+        }
+    }
+}
+
+/// Fixed-size per-request span record: one nanosecond slot per [`Stage`]
+/// plus identity and outcome. `Copy` and word-packable so it can live in
+/// the connection arena and be published through the lock-free ring
+/// without ever touching the heap.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Trace ID minted at admission (0 = unset / untraced request).
+    pub trace_id: u64,
+    /// Per-stage latency in nanoseconds, indexed by [`Stage::index`].
+    pub stage_ns: [u64; Stage::COUNT],
+    /// End-to-end latency (request read complete → response flushed).
+    pub total_ns: u64,
+    /// Wall-clock capture time in Unix milliseconds (set when the record
+    /// is published to the slow ring).
+    pub unix_ms: u64,
+    /// HTTP status the request was answered with.
+    pub status: u16,
+    /// Feature rows in the request.
+    pub rows: u32,
+    /// Executed batch bucket the request rode in (max across rows).
+    pub batch: u32,
+}
+
+/// Packed width of a [`SpanRecord`] in `u64` words (ring slot size).
+const WORDS: usize = Stage::COUNT + 4;
+
+impl SpanRecord {
+    /// Clear every field (the arena reuses one record per connection).
+    pub fn reset(&mut self) {
+        *self = SpanRecord::default();
+    }
+
+    /// Store a stage duration.
+    pub fn set(&mut self, stage: Stage, d: Duration) {
+        self.stage_ns[stage.index()] = d.as_nanos() as u64;
+    }
+
+    /// Stage duration in nanoseconds.
+    pub fn get(&self, stage: Stage) -> u64 {
+        self.stage_ns[stage.index()]
+    }
+
+    /// The stage that consumed the most time (ties: earliest wins).
+    pub fn slowest(&self) -> Stage {
+        let mut best = Stage::ALL[0];
+        for s in Stage::ALL {
+            if self.stage_ns[s.index()] > self.stage_ns[best.index()] {
+                best = s;
+            }
+        }
+        best
+    }
+
+    fn to_words(self) -> [u64; WORDS] {
+        let mut w = [0u64; WORDS];
+        w[0] = self.trace_id;
+        w[1..1 + Stage::COUNT].copy_from_slice(&self.stage_ns);
+        w[Stage::COUNT + 1] = self.total_ns;
+        w[Stage::COUNT + 2] = self.unix_ms;
+        w[Stage::COUNT + 3] =
+            ((self.rows as u64) << 32) | ((self.batch as u64) << 16) | self.status as u64;
+        w
+    }
+
+    fn from_words(w: &[u64; WORDS]) -> SpanRecord {
+        let mut stage_ns = [0u64; Stage::COUNT];
+        stage_ns.copy_from_slice(&w[1..1 + Stage::COUNT]);
+        let packed = w[Stage::COUNT + 3];
+        SpanRecord {
+            trace_id: w[0],
+            stage_ns,
+            total_ns: w[Stage::COUNT + 1],
+            unix_ms: w[Stage::COUNT + 2],
+            status: (packed & 0xffff) as u16,
+            rows: (packed >> 32) as u32,
+            batch: ((packed >> 16) & 0xffff) as u32,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace IDs
+// ---------------------------------------------------------------------------
+
+static NEXT_TRACE: AtomicU64 = AtomicU64::new(1);
+static TRACE_SEED: OnceLock<u64> = OnceLock::new();
+
+/// SplitMix64 finalizer — full-avalanche mixing of a counter into an ID
+/// that doesn't leak request ordering across restarts.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Mint a new nonzero trace ID. Allocation-free after the first call (a
+/// process-wide seed is derived once from wall clock + pid), so it is
+/// safe on the zero-allocation inference hot path.
+pub fn mint_trace_id() -> u64 {
+    let seed = *TRACE_SEED.get_or_init(|| {
+        let t = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .unwrap_or_default();
+        (t.as_nanos() as u64) ^ ((std::process::id() as u64) << 32)
+    });
+    let n = NEXT_TRACE.fetch_add(1, Ordering::Relaxed);
+    let id = mix64(n ^ seed);
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Current wall clock in Unix milliseconds.
+pub fn unix_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default()
+        .as_millis() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Slow-request ring
+// ---------------------------------------------------------------------------
+
+/// One ring slot: a per-slot seqlock (`seq` odd = write in progress) over
+/// the record's packed words. Readers copy the words and re-check `seq`;
+/// a concurrent write makes the copy torn, which the re-check detects and
+/// the reader skips the slot. Writers never wait: a slot already being
+/// written (only possible after the ring index wraps under extreme load)
+/// drops the new sample instead of blocking.
+struct Slot {
+    seq: AtomicU64,
+    words: [AtomicU64; WORDS],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            words: [0u64; WORDS].map(AtomicU64::new),
+        }
+    }
+}
+
+/// Bounded lock-free ring of the most recent slow requests.
+///
+/// `record` is wait-free for the common case (claim an index with one
+/// `fetch_add`, write the words, bump the seqlock) and performs no heap
+/// allocation, so publishing a slow request does not break the
+/// zero-allocation steady state. `snapshot` (the `/v1/debug/slow`
+/// handler) allocates freely — it is a debug surface, not a hot path.
+pub struct SlowRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+    threshold_ns: u64,
+}
+
+impl SlowRing {
+    /// Ring with `capacity` slots capturing requests slower than
+    /// `threshold` end-to-end. Capacity is clamped to at least 1.
+    pub fn new(capacity: usize, threshold: Duration) -> SlowRing {
+        let cap = capacity.max(1);
+        SlowRing {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            head: AtomicU64::new(0),
+            threshold_ns: threshold.as_nanos() as u64,
+        }
+    }
+
+    /// Capture threshold in nanoseconds.
+    pub fn threshold_ns(&self) -> u64 {
+        self.threshold_ns
+    }
+
+    /// Number of slots.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total records ever published (not clamped to capacity).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Publish one record. Lock-free and allocation-free; drops the
+    /// sample if the claimed slot is mid-write by a lapped writer.
+    pub fn record(&self, rec: &SpanRecord) {
+        let i = (self.head.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        let slot = &self.slots[i];
+        let seq = slot.seq.load(Ordering::Relaxed);
+        if seq & 1 == 1 {
+            return; // lapped writer still in the slot: drop this sample
+        }
+        if slot
+            .seq
+            .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        let words = rec.to_words();
+        for (w, v) in slot.words.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.seq.store(seq + 2, Ordering::Release);
+    }
+
+    /// Consistent copies of the captured records, newest first. Slots
+    /// that are empty or mid-write are skipped.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let head = self.head.load(Ordering::Acquire);
+        let cap = self.slots.len() as u64;
+        let live = head.min(cap);
+        let mut out = Vec::with_capacity(live as usize);
+        for back in 1..=live {
+            let i = ((head - back) % cap) as usize;
+            let slot = &self.slots[i];
+            // Two read attempts: a slot under sustained rewrite is
+            // skipped rather than spun on.
+            for _ in 0..2 {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 & 1 == 1 {
+                    continue;
+                }
+                let mut words = [0u64; WORDS];
+                for (dst, src) in words.iter_mut().zip(slot.words.iter()) {
+                    *dst = src.load(Ordering::Relaxed);
+                }
+                if slot.seq.load(Ordering::Acquire) == s1 {
+                    let rec = SpanRecord::from_words(&words);
+                    if rec.trace_id != 0 {
+                        out.push(rec);
+                    }
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn stage_names_are_unique_and_ordered() {
+        let names: Vec<_> = Stage::ALL.iter().map(|s| s.name()).collect();
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), Stage::COUNT);
+        assert_eq!(Stage::ALL[0].index(), 0);
+        assert_eq!(Stage::ALL[Stage::COUNT - 1].index(), Stage::COUNT - 1);
+    }
+
+    #[test]
+    fn span_record_pack_roundtrip() {
+        let mut rec = SpanRecord {
+            trace_id: 0xdead_beef_1234_5678,
+            total_ns: 7_000_001,
+            unix_ms: 1_700_000_000_123,
+            status: 504,
+            rows: 9,
+            batch: 128,
+            ..Default::default()
+        };
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            rec.set(*s, Duration::from_nanos(1_000 * (i as u64 + 1)));
+        }
+        let back = SpanRecord::from_words(&rec.to_words());
+        assert_eq!(back, rec);
+        assert_eq!(back.get(Stage::Write), 7_000);
+    }
+
+    #[test]
+    fn slowest_stage_picks_max() {
+        let mut rec = SpanRecord::default();
+        rec.set(Stage::QueueWait, Duration::from_micros(10));
+        rec.set(Stage::Execute, Duration::from_micros(900));
+        rec.set(Stage::Serialize, Duration::from_micros(20));
+        assert_eq!(rec.slowest(), Stage::Execute);
+    }
+
+    #[test]
+    fn trace_ids_are_nonzero_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            let id = mint_trace_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate trace id {id:#x}");
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_wraps() {
+        let ring = SlowRing::new(4, Duration::from_millis(1));
+        for i in 1..=10u64 {
+            let rec = SpanRecord {
+                trace_id: i,
+                total_ns: i * 1_000,
+                ..Default::default()
+            };
+            ring.record(&rec);
+        }
+        let snap = ring.snapshot();
+        let ids: Vec<u64> = snap.iter().map(|r| r.trace_id).collect();
+        assert_eq!(ids, vec![10, 9, 8, 7]);
+        assert_eq!(ring.recorded(), 10);
+        assert_eq!(ring.capacity(), 4);
+    }
+
+    #[test]
+    fn empty_ring_snapshot_is_empty() {
+        let ring = SlowRing::new(8, Duration::from_millis(1));
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn concurrent_writers_and_readers_never_see_torn_records() {
+        // Writers publish records whose words are all equal to the trace
+        // ID; a torn read would surface as a mismatched word.
+        let ring = Arc::new(SlowRing::new(8, Duration::from_millis(1)));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..2_000u64 {
+                    let v = t * 1_000_000 + i + 1;
+                    let rec = SpanRecord {
+                        trace_id: v,
+                        stage_ns: [v; Stage::COUNT],
+                        total_ns: v,
+                        unix_ms: v,
+                        ..Default::default()
+                    };
+                    r.record(&rec);
+                }
+            }));
+        }
+        let reader = {
+            let r = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                for _ in 0..500 {
+                    for rec in r.snapshot() {
+                        assert_eq!(rec.stage_ns, [rec.trace_id; Stage::COUNT]);
+                        assert_eq!(rec.total_ns, rec.trace_id);
+                    }
+                }
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        reader.join().unwrap();
+    }
+}

@@ -93,6 +93,7 @@ use crate::metrics::{Counter, FloatGauge, Gauge, Registry};
 use crate::registry::{ModelRegistry, SellModel};
 use crate::sell::acdc::{AcdcCascade, AcdcGrads};
 use crate::sell::init::DiagInit;
+use crate::trace::log::{self, Field, Level};
 use crate::util::rng::Pcg32;
 
 /// Why a trainer operation failed. Maps onto HTTP statuses at the
@@ -421,6 +422,7 @@ impl TrainerPool {
         }
         let id = inner.next_id;
         inner.next_id += 1;
+        let steps = spec.steps;
         let shared = Arc::new(JobShared {
             id,
             model: model.to_string(),
@@ -454,6 +456,17 @@ impl TrainerPool {
             shared,
             handle: Some(handle),
         });
+        log::event(
+            Level::Info,
+            "trainer",
+            "job_submitted",
+            0,
+            &[
+                ("job", Field::U64(id)),
+                ("model", Field::Str(model)),
+                ("steps", Field::U64(steps as u64)),
+            ],
+        );
         Ok(id)
     }
 
@@ -690,6 +703,30 @@ fn finish(shared: &JobShared, state: JobState, error: Option<String>) {
             ctl.error = error;
         }
     }
+    let (final_state, step, err) = (ctl.state, ctl.step, ctl.error.clone());
+    drop(ctl);
+    let base = [
+        ("job", Field::U64(shared.id)),
+        ("model", Field::Str(&shared.model)),
+        ("state", Field::Str(final_state.as_str())),
+        ("step", Field::U64(step as u64)),
+    ];
+    match &err {
+        // A Failed job (or a kept non-fatal promotion error) carries its
+        // message; clean exits stay at info so default logging shows the
+        // full submitted → finished arc without per-step noise.
+        Some(e) => {
+            let level = if final_state == JobState::Failed {
+                Level::Error
+            } else {
+                Level::Info
+            };
+            let mut fields = base.to_vec();
+            fields.push(("error", Field::Str(e)));
+            log::event(level, "trainer", "job_finished", 0, &fields);
+        }
+        None => log::event(Level::Info, "trainer", "job_finished", 0, &base),
+    }
     shared.cv.notify_all();
 }
 
@@ -746,10 +783,24 @@ fn promote(
     let version = registry
         .load_path(&shared.model, &path, None)
         .map_err(|e| format!("promote '{}': {e}", shared.model))?;
-    let mut ctl = shared.ctl.lock().unwrap();
-    ctl.promotions += 1;
-    ctl.promoted_version = Some(version);
+    {
+        let mut ctl = shared.ctl.lock().unwrap();
+        ctl.promotions += 1;
+        ctl.promoted_version = Some(version);
+    }
     shared.m_promotions.inc();
+    log::event(
+        Level::Info,
+        "trainer",
+        "job_promoted",
+        0,
+        &[
+            ("job", Field::U64(shared.id)),
+            ("model", Field::Str(&shared.model)),
+            ("version", Field::U64(version)),
+            ("step", Field::U64(step as u64)),
+        ],
+    );
     Ok(version)
 }
 

@@ -1,0 +1,287 @@
+//! Integration: per-request tracing end-to-end over ephemeral ports.
+//!
+//! Covers the observability acceptance path: a synthetic worker stall is
+//! attributed to the `execute` stage in `GET /v1/debug/slow` under the
+//! same trace ID the client saw in its `x-trace-id` response header; the
+//! opt-in `x-acdc-debug: 1` header returns the inline stage breakdown;
+//! disabling `[trace]` removes the header and records nothing; and
+//! `sample_every` thins the minted IDs deterministically.
+
+use acdc::config::{GatewayConfig, ServeConfig, TraceConfig};
+use acdc::coordinator::worker::{BatchExecutor, ExecutorFactory};
+use acdc::gateway::http;
+use acdc::gateway::Gateway;
+use acdc::serve::Server;
+use acdc::util::json::Json;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One HTTP exchange on a fresh connection, with caller-chosen headers.
+fn one_shot(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(&mut stream, method, path, headers, body).expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+const JSON_CT: (&str, &str) = ("content-type", "application/json");
+
+fn infer_body(row: &[f32]) -> Vec<u8> {
+    let features = Json::Arr(row.iter().map(|v| Json::Num(*v as f64)).collect());
+    acdc::util::json::obj(vec![("features", features)])
+        .to_string()
+        .into_bytes()
+}
+
+/// Echo executor with a configurable service time: the injected stall.
+struct SlowEcho {
+    n: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for SlowEcho {
+    fn width(&self) -> usize {
+        self.n
+    }
+    fn out_width(&self) -> usize {
+        self.n
+    }
+    fn execute_into(
+        &mut self,
+        _bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
+        std::thread::sleep(self.delay);
+        out.copy_from_slice(padded);
+        Ok(())
+    }
+}
+
+fn traced_gateway(n: usize, delay: Duration, trace: TraceConfig) -> Gateway {
+    let cfg = ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 1,
+        workers: 1,
+        queue_cap: 16,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 64,
+            request_timeout_ms: 30_000,
+            trace,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let factory: ExecutorFactory =
+        Arc::new(move || Ok(Box::new(SlowEcho { n, delay }) as Box<dyn BatchExecutor>));
+    let server = Server::start_custom(&cfg, n, factory);
+    Gateway::start(server, cfg.gateway.clone()).unwrap()
+}
+
+fn assert_hex16(id: &str) {
+    assert_eq!(id.len(), 16, "trace id '{id}' is not 16 hex chars");
+    assert!(
+        id.chars().all(|c| c.is_ascii_hexdigit()),
+        "trace id '{id}' is not hex"
+    );
+}
+
+#[test]
+fn worker_stall_lands_in_slow_ring_attributed_to_execute() {
+    // 200ms execute against a 50ms threshold: every request is slow, and
+    // the slow stage is unambiguously the worker's execute.
+    let gateway = traced_gateway(
+        8,
+        Duration::from_millis(200),
+        TraceConfig {
+            slow_ms: 50,
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+
+    let resp = one_shot(addr, "POST", "/v1/infer", &[JSON_CT], &infer_body(&[1.0; 8]));
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let tid = resp
+        .header("x-trace-id")
+        .expect("traced response must echo x-trace-id")
+        .to_string();
+    assert_hex16(&tid);
+    // Without the debug header the body carries no inline breakdown.
+    let v = Json::parse(resp.body_str()).unwrap();
+    assert!(v.get("trace").is_none(), "{}", resp.body_str());
+
+    // The ring records just after the response flush: poll briefly so a
+    // fast client can't outrun the recording connection thread.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let entry = loop {
+        let debug = one_shot(addr, "GET", "/v1/debug/slow", &[], b"");
+        assert_eq!(debug.status, 200, "{}", debug.body_str());
+        let d = Json::parse(debug.body_str()).unwrap();
+        assert_eq!(d.get("threshold_us").unwrap().as_i64(), Some(50_000));
+        assert!(d.get("capacity").unwrap().as_i64().unwrap() >= 1);
+        let hit = d
+            .get("entries")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|e| e.get("trace_id").and_then(|x| x.as_str()) == Some(tid.as_str()))
+            .cloned();
+        if let Some(entry) = hit {
+            assert!(d.get("recorded").unwrap().as_i64().unwrap() >= 1);
+            break entry;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "trace {tid} never captured in {}",
+            debug.body_str()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let entry = &entry;
+
+    // The stall is attributed to the execute stage, under the right ID.
+    assert_eq!(entry.get("slowest").unwrap().as_str(), Some("execute"));
+    assert_eq!(entry.get("status").unwrap().as_i64(), Some(200));
+    assert_eq!(entry.get("rows").unwrap().as_i64(), Some(1));
+    assert!(entry.get("batch_size").unwrap().as_i64().unwrap() >= 1);
+    assert!(entry.get("unix_ms").unwrap().as_i64().unwrap() > 0);
+    let stages = entry.get("stages").unwrap();
+    let execute_us = stages.get("execute_us").unwrap().as_i64().unwrap();
+    assert!(execute_us >= 100_000, "execute stage lost the stall: {execute_us}µs");
+    let total_us = entry.get("total_us").unwrap().as_i64().unwrap();
+    assert!(total_us >= execute_us, "total {total_us} < execute {execute_us}");
+    // Every stage renders, even the cheap ones.
+    for key in [
+        "parse_us",
+        "admission_us",
+        "queue_wait_us",
+        "batch_form_us",
+        "serialize_us",
+        "write_us",
+    ] {
+        assert!(stages.get(key).is_some(), "missing stage {key}");
+    }
+
+    // The debug endpoint is GET-only.
+    assert_eq!(one_shot(addr, "POST", "/v1/debug/slow", &[], b"").status, 405);
+    gateway.shutdown();
+}
+
+#[test]
+fn debug_header_returns_inline_stage_breakdown() {
+    let gateway = traced_gateway(8, Duration::from_millis(0), TraceConfig::default());
+    let addr = gateway.local_addr();
+    let resp = one_shot(
+        addr,
+        "POST",
+        "/v1/infer",
+        &[JSON_CT, ("x-acdc-debug", "1")],
+        &infer_body(&[0.5; 8]),
+    );
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let tid = resp.header("x-trace-id").expect("x-trace-id").to_string();
+    let v = Json::parse(resp.body_str()).unwrap();
+    let trace = v
+        .get("trace")
+        .unwrap_or_else(|| panic!("no trace object in {}", resp.body_str()));
+    // The inline object carries the same ID the header echoed, plus the
+    // µs stage values known at serialization time.
+    assert_eq!(trace.get("id").and_then(|x| x.as_str()), Some(tid.as_str()));
+    for key in [
+        "parse_us",
+        "admission_us",
+        "queue_wait_us",
+        "batch_form_us",
+        "execute_us",
+    ] {
+        assert!(
+            trace.get(key).and_then(|x| x.as_f64()).is_some(),
+            "missing numeric {key} in {}",
+            resp.body_str()
+        );
+    }
+    // The ordinary (non-debug) response shape is untouched.
+    let plain = one_shot(addr, "POST", "/v1/infer", &[JSON_CT], &infer_body(&[0.5; 8]));
+    assert_eq!(plain.status, 200);
+    assert!(plain.header("x-trace-id").is_some());
+    let pv = Json::parse(plain.body_str()).unwrap();
+    assert!(pv.get("trace").is_none(), "{}", plain.body_str());
+    gateway.shutdown();
+}
+
+#[test]
+fn disabled_tracing_omits_header_and_records_nothing() {
+    // Even with every request far past the 1ms threshold, disabled
+    // tracing mints no IDs, echoes no header and fills no ring.
+    let gateway = traced_gateway(
+        8,
+        Duration::from_millis(20),
+        TraceConfig {
+            enabled: false,
+            slow_ms: 1,
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+    for _ in 0..3 {
+        let resp = one_shot(addr, "POST", "/v1/infer", &[JSON_CT], &infer_body(&[2.0; 8]));
+        assert_eq!(resp.status, 200);
+        assert!(resp.header("x-trace-id").is_none(), "untraced response grew a header");
+    }
+    // The debug header is also inert without a minted trace.
+    let dbg = one_shot(
+        addr,
+        "POST",
+        "/v1/infer",
+        &[JSON_CT, ("x-acdc-debug", "1")],
+        &infer_body(&[2.0; 8]),
+    );
+    assert_eq!(dbg.status, 200);
+    let dv = Json::parse(dbg.body_str()).unwrap();
+    assert!(dv.get("trace").is_none(), "{}", dbg.body_str());
+    let debug = one_shot(addr, "GET", "/v1/debug/slow", &[], b"");
+    let d = Json::parse(debug.body_str()).unwrap();
+    assert_eq!(d.get("recorded").unwrap().as_i64(), Some(0));
+    assert_eq!(d.get("entries").unwrap().as_arr().unwrap().len(), 0);
+    gateway.shutdown();
+}
+
+#[test]
+fn sample_every_thins_minted_trace_ids_deterministically() {
+    let gateway = traced_gateway(
+        8,
+        Duration::from_millis(0),
+        TraceConfig {
+            sample_every: 2,
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+    // The global sequence starts at 0 and only /v1/infer admissions
+    // advance it: serial requests alternate traced / untraced.
+    let mut traced = 0;
+    for _ in 0..4 {
+        let resp = one_shot(addr, "POST", "/v1/infer", &[JSON_CT], &infer_body(&[0.1; 8]));
+        assert_eq!(resp.status, 200);
+        if let Some(tid) = resp.header("x-trace-id") {
+            assert_hex16(tid);
+            traced += 1;
+        }
+    }
+    assert_eq!(traced, 2, "sample_every=2 must trace exactly half of 4 requests");
+    gateway.shutdown();
+}

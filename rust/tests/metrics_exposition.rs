@@ -1,0 +1,394 @@
+//! Integration: the full `GET /metrics` payload of a live gateway parses
+//! as strict Prometheus text exposition.
+//!
+//! A small hand-rolled parser walks every line of the real payload —
+//! `# TYPE` declarations, bare samples, labeled samples — and enforces
+//! the format invariants Prometheus scrapers rely on: valid metric and
+//! label names, every sample covered by a declared family, histogram
+//! `_bucket` series with increasing `le` bounds and non-decreasing
+//! cumulative counts ending at `+Inf == _count`, and summary quantile
+//! lines carrying a `quantile` label. It also pins the presence of the
+//! deploy-correlation series (`acdc_build_info`,
+//! `process_start_time_seconds`) and the per-stage trace histograms
+//! after traffic.
+
+use acdc::config::{GatewayConfig, ServeConfig};
+use acdc::gateway::http;
+use acdc::gateway::Gateway;
+use acdc::sell::acdc::AcdcCascade;
+use acdc::sell::init::DiagInit;
+use acdc::serve::Server;
+use acdc::util::json::Json;
+use acdc::util::rng::Pcg32;
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        body,
+    )
+    .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*` — Prometheus metric-name charset.
+fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// `[a-zA-Z_][a-zA-Z0-9_]*` — label-name charset (no colons).
+fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+#[derive(Debug)]
+struct Sample {
+    name: String,
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+impl Sample {
+    fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse one sample line: `name value` or `name{k="v",...} value`.
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let (name, labels, rest) = match line.find('{') {
+        Some(open) => {
+            let close = line.rfind('}').ok_or("unterminated label set")?;
+            let name = &line[..open];
+            let mut labels = Vec::new();
+            // Walk `k="v"` pairs left to right; commas may legally appear
+            // *inside* quoted values (e.g. features="pjrt,count-allocs"),
+            // so split on the closing quote, not on commas.
+            let mut rest = &line[open + 1..close];
+            while !rest.is_empty() {
+                let eq = rest
+                    .find('=')
+                    .ok_or_else(|| format!("label segment '{rest}' has no '='"))?;
+                let key = &rest[..eq];
+                if !valid_label_name(key) {
+                    return Err(format!("bad label name '{key}'"));
+                }
+                let after = &rest[eq + 1..];
+                if !after.starts_with('"') {
+                    return Err(format!("unquoted label value after '{key}'"));
+                }
+                let end = after[1..]
+                    .find('"')
+                    .ok_or_else(|| format!("unterminated value for '{key}'"))?
+                    + 1;
+                let inner = &after[1..end];
+                if inner.contains('\\') || inner.contains('\n') {
+                    return Err(format!("unescaped char in label value '{inner}'"));
+                }
+                labels.push((key.to_string(), inner.to_string()));
+                rest = &after[end + 1..];
+                if let Some(stripped) = rest.strip_prefix(',') {
+                    if stripped.is_empty() {
+                        return Err("trailing comma in label set".into());
+                    }
+                    rest = stripped;
+                } else if !rest.is_empty() {
+                    return Err(format!("junk after label value: '{rest}'"));
+                }
+            }
+            (name, labels, &line[close + 1..])
+        }
+        None => {
+            let sp = line.find(' ').ok_or("sample has no value")?;
+            (&line[..sp], Vec::new(), &line[sp..])
+        }
+    };
+    if !valid_metric_name(name) {
+        return Err(format!("bad metric name '{name}'"));
+    }
+    let value_str = rest.trim();
+    if value_str.is_empty() || value_str.contains(' ') {
+        return Err(format!("malformed value field '{value_str}'"));
+    }
+    let value: f64 = value_str
+        .parse()
+        .map_err(|e| format!("value '{value_str}': {e}"))?;
+    Ok(Sample {
+        name: name.to_string(),
+        labels,
+        value,
+    })
+}
+
+/// Map a sample name back to its declared family: exact match, or a
+/// `_sum` / `_count` / `_bucket` suffix of a summary/histogram family.
+fn family_of<'a>(types: &'a BTreeMap<String, String>, sample: &Sample) -> Option<(&'a str, &'a str)> {
+    if let Some((name, ty)) = types.get_key_value(&sample.name) {
+        return Some((name.as_str(), ty.as_str()));
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample.name.strip_suffix(suffix) {
+            if let Some((name, ty)) = types.get_key_value(base) {
+                let suffix_ok = match ty.as_str() {
+                    "histogram" => true,
+                    "summary" => suffix != "_bucket",
+                    _ => false,
+                };
+                if suffix_ok {
+                    return Some((name.as_str(), ty.as_str()));
+                }
+            }
+        }
+    }
+    None
+}
+
+#[test]
+fn full_metrics_payload_is_strict_prometheus_exposition() {
+    let n = 16;
+    let mut rng = Pcg32::seeded(61);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 4],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+
+    // Traffic first, so every request-path series has recorded samples:
+    // single-row and multi-row requests through the traced infer path.
+    let single = {
+        let features = Json::Arr((0..n).map(|_| Json::Num(0.25)).collect());
+        acdc::util::json::obj(vec![("features", features)]).to_string()
+    };
+    let batch = {
+        let row = Json::Arr((0..n).map(|_| Json::Num(-0.5)).collect());
+        let rows = Json::Arr(vec![row.clone(), row.clone(), row]);
+        acdc::util::json::obj(vec![("rows", rows)]).to_string()
+    };
+    for i in 0..6 {
+        let body = if i % 2 == 0 { &single } else { &batch };
+        let resp = one_shot(addr, "POST", "/v1/infer", body.as_bytes());
+        assert_eq!(resp.status, 200, "{}", resp.body_str());
+    }
+
+    // Spans are recorded just after each response flush: poll until the
+    // 6th request's stages have landed so the counts below are exact.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let text = loop {
+        let metrics = one_shot(addr, "GET", "/metrics", b"");
+        assert_eq!(metrics.status, 200);
+        let t = metrics.body_str().to_string();
+        if t.contains("acdc_trace_write_ns_hist_count 6") {
+            break t;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "trace histograms never reached 6 requests:\n{t}"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    gateway.shutdown();
+
+    // ---- strict parse of every line ----
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut samples: Vec<Sample> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let ctx = |e: String| format!("line {}: '{line}': {e}", lineno + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it.next().unwrap_or("");
+            let ty = it.next().unwrap_or("");
+            assert!(it.next().is_none(), "{}", ctx("trailing TYPE tokens".into()));
+            assert!(valid_metric_name(name), "{}", ctx("bad family name".into()));
+            assert!(
+                matches!(ty, "counter" | "gauge" | "summary" | "histogram"),
+                "{}",
+                ctx(format!("unknown type '{ty}'"))
+            );
+            assert!(
+                types.insert(name.to_string(), ty.to_string()).is_none(),
+                "{}",
+                ctx("duplicate TYPE declaration".into())
+            );
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment lines are legal, uninterpreted.
+        }
+        match parse_sample(line) {
+            Ok(s) => samples.push(s),
+            Err(e) => panic!("{}", ctx(e)),
+        }
+    }
+
+    // Every sample belongs to a declared family; suffix/label shape match.
+    for s in &samples {
+        let (family, ty) = family_of(&types, s)
+            .unwrap_or_else(|| panic!("sample '{}' has no TYPE declaration", s.name));
+        match ty {
+            "histogram" if s.name.ends_with("_bucket") => {
+                assert!(s.label("le").is_some(), "{} bucket without le", s.name);
+            }
+            "summary" if s.name == family => {
+                assert!(
+                    s.label("quantile").is_some(),
+                    "summary base sample '{}' without quantile label",
+                    s.name
+                );
+            }
+            _ => {}
+        }
+    }
+    // Every declared family rendered at least one sample.
+    for family in types.keys() {
+        assert!(
+            samples
+                .iter()
+                .any(|s| family_of(&types, s).is_some_and(|(f, _)| f == family.as_str())),
+            "TYPE {family} declared but no samples rendered"
+        );
+    }
+
+    // ---- histogram invariants, family by family ----
+    let hist_families: Vec<&String> = types
+        .iter()
+        .filter(|(_, ty)| ty.as_str() == "histogram")
+        .map(|(name, _)| name)
+        .collect();
+    assert!(!hist_families.is_empty(), "no histogram families rendered");
+    for family in hist_families {
+        let buckets: Vec<&Sample> = samples
+            .iter()
+            .filter(|s| s.name == format!("{family}_bucket"))
+            .collect();
+        assert!(!buckets.is_empty(), "{family}: no _bucket series");
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_count = 0.0f64;
+        for (i, b) in buckets.iter().enumerate() {
+            let le_str = b.label("le").unwrap();
+            let le = if le_str == "+Inf" {
+                assert_eq!(i, buckets.len() - 1, "{family}: +Inf bucket not last");
+                f64::INFINITY
+            } else {
+                le_str.parse::<f64>().unwrap_or_else(|e| {
+                    panic!("{family}: unparsable le '{le_str}': {e}")
+                })
+            };
+            assert!(le > last_le, "{family}: le not increasing at '{le_str}'");
+            assert!(
+                b.value >= last_count,
+                "{family}: cumulative count regressed at le='{le_str}'"
+            );
+            last_le = le;
+            last_count = b.value;
+        }
+        assert_eq!(
+            buckets.last().unwrap().label("le"),
+            Some("+Inf"),
+            "{family}: bucket series must end at +Inf"
+        );
+        let count = samples
+            .iter()
+            .find(|s| s.name == format!("{family}_count"))
+            .unwrap_or_else(|| panic!("{family}: missing _count"));
+        assert_eq!(
+            buckets.last().unwrap().value,
+            count.value,
+            "{family}: +Inf bucket disagrees with _count"
+        );
+        assert!(
+            samples.iter().any(|s| s.name == format!("{family}_sum")),
+            "{family}: missing _sum"
+        );
+    }
+
+    // ---- deploy-correlation and observability series presence ----
+    let build = samples
+        .iter()
+        .find(|s| s.name == "acdc_build_info")
+        .expect("acdc_build_info sample");
+    assert_eq!(build.value, 1.0);
+    for label in ["version", "features", "simd"] {
+        assert!(
+            build.label(label).is_some_and(|v| !v.is_empty()),
+            "acdc_build_info missing label {label}"
+        );
+    }
+    let start = samples
+        .iter()
+        .find(|s| s.name == "process_start_time_seconds")
+        .expect("process_start_time_seconds sample");
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs() as f64;
+    assert!(
+        start.value > 1.6e9 && start.value <= now + 10.0,
+        "implausible process start time {}",
+        start.value
+    );
+
+    // The per-stage trace histograms are live after traffic: the execute
+    // stage saw all 6 requests end-to-end.
+    for stage in [
+        "parse",
+        "admission",
+        "queue_wait",
+        "batch_form",
+        "execute",
+        "serialize",
+        "write",
+    ] {
+        let name = format!("acdc_trace_{stage}_ns_hist_count");
+        let s = samples
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("missing trace stage histogram {name}"));
+        assert_eq!(s.value, 6.0, "{name} missed requests");
+    }
+    // Batch-occupancy and queue-depth series from the coordinator side.
+    assert!(
+        samples.iter().any(|s| s.name == "acdc_worker_batch_occupancy_rows_count"),
+        "missing worker batch-occupancy histogram"
+    );
+    assert!(
+        samples.iter().any(|s| s.name == "acdc_coordinator_queue_depth"),
+        "missing coordinator queue-depth gauge"
+    );
+}

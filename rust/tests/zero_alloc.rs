@@ -3,7 +3,10 @@
 //! request after warmup** — request parse (reused scratch), admission,
 //! registry resolve, slot submit, batch formation (recycled buffers),
 //! worker padding/execution (thread-local scratch), arena write-back and
-//! response serialization (reused write buffers) included.
+//! response serialization (reused write buffers) included — **with
+//! request tracing enabled at default (every-request) sampling**, so the
+//! span capture, stage histograms and `x-trace-id` response header are
+//! all inside the 0-alloc envelope.
 //!
 //! Gated behind the `count-allocs` cargo feature so the allocator shim
 //! never taxes ordinary test runs:
@@ -22,7 +25,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use acdc::config::{GatewayConfig, ServeConfig};
+use acdc::config::{GatewayConfig, ServeConfig, TraceConfig};
 use acdc::gateway::Gateway;
 use acdc::metrics::Registry;
 use acdc::registry::{ModelRegistry, SellModel};
@@ -135,6 +138,13 @@ fn keep_alive_infer_path_is_allocation_free_after_warmup() {
             max_inflight: 64,
             rate_rps: 0.0, // rate limiting off: nothing sheds in steady state
             request_timeout_ms: 30_000,
+            // Tracing ON, every request sampled: the zero-alloc guarantee
+            // must hold with span capture + trace-id header enabled.
+            trace: TraceConfig {
+                enabled: true,
+                sample_every: 1,
+                ..Default::default()
+            },
             ..Default::default()
         },
     )
@@ -191,6 +201,15 @@ fn keep_alive_infer_path_is_allocation_free_after_warmup() {
         let req = if i % 3 == 0 { &req_batch } else { &req_single };
         roundtrip(&mut stream, req, &mut buf);
     }
+
+    // Tracing really is active: every sampled response carries the minted
+    // trace id in its head (written from the retained head buffer).
+    let len = roundtrip(&mut stream, &req_single, &mut buf);
+    assert!(
+        find_subslice(&buf[..len], b"x-trace-id: ").is_some(),
+        "tracing must be on during the zero-alloc window: {}",
+        String::from_utf8_lossy(&buf[..len.min(512)])
+    );
 
     let before = ALLOCS.load(Ordering::Relaxed);
     let measured = 64usize;
