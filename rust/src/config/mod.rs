@@ -394,10 +394,17 @@ pub struct TrainerConfig {
     pub lr_decay: f64,
     /// Steps between learning-rate decays (0 = never decay).
     pub lr_decay_every: usize,
-    /// Cascade width N (must be a power of two).
+    /// SELL family to train: `acdc`, `fastfood`, `lowrank` or `circulant`.
+    pub model_kind: String,
+    /// Cascade width N (must be a power of two for the transform-based
+    /// families; `lowrank` accepts any width in range).
     pub width: usize,
-    /// Cascade depth K.
+    /// Cascade depth K (`acdc`/`circulant`; the single-block `fastfood`
+    /// and `lowrank` families ignore it).
     pub depth: usize,
+    /// Low-rank factorization rank r (0 = auto: width/2). Must satisfy
+    /// 1 ≤ r ≤ width; ignored by the other families.
+    pub rank: usize,
     /// Mean of the diagonal init (the paper's working init is A = D = 1
     /// plus small Gaussian noise — mean 1.0).
     pub init_mean: f64,
@@ -436,8 +443,10 @@ impl Default for TrainerConfig {
             momentum: 0.9,
             lr_decay: 1.0,
             lr_decay_every: 0,
+            model_kind: "acdc".into(),
             width: 32,
             depth: 2,
+            rank: 0,
             init_mean: 1.0,
             init_sigma: 0.1,
             nonlinear: false,
@@ -465,8 +474,10 @@ impl TrainerConfig {
             momentum: cfg.get_f64("trainer.momentum", d.momentum),
             lr_decay: cfg.get_f64("trainer.lr_decay", d.lr_decay),
             lr_decay_every: cfg.get_usize("trainer.lr_decay_every", d.lr_decay_every),
+            model_kind: cfg.get_str("trainer.model_kind", &d.model_kind),
             width: cfg.get_usize("trainer.width", d.width),
             depth: cfg.get_usize("trainer.depth", d.depth),
+            rank: cfg.get_usize("trainer.rank", d.rank),
             init_mean: cfg.get_f64("trainer.init_mean", d.init_mean),
             init_sigma: cfg.get_f64("trainer.init_sigma", d.init_sigma),
             nonlinear: cfg.get_bool("trainer.nonlinear", d.nonlinear),
@@ -493,10 +504,21 @@ impl TrainerConfig {
     /// cache the backward pass keeps).
     pub const MAX_STEP_ELEMS: usize = 1 << 24;
 
-    /// Sanity-check the knobs. Rejecting a non-power-of-two width here is
-    /// what keeps a bad HTTP train request a 400 instead of a panic in
-    /// the DCT plan constructor; the size caps keep a hostile spec a 400
-    /// instead of an allocation abort.
+    /// The low-rank factorization rank after resolving the 0 = auto
+    /// default (width/2, floored at 1).
+    pub fn effective_rank(&self) -> usize {
+        if self.rank == 0 {
+            (self.width / 2).max(1)
+        } else {
+            self.rank
+        }
+    }
+
+    /// Sanity-check the knobs. Rejecting an unknown `model_kind` or a
+    /// non-power-of-two width for the transform families here is what
+    /// keeps a bad HTTP train request a 400 instead of a panic in the
+    /// DCT/FFT plan constructors; the size caps keep a hostile spec a
+    /// 400 instead of an allocation abort.
     pub fn validate(&self) -> Result<(), String> {
         if self.steps == 0 {
             return Err("trainer.steps must be >= 1".into());
@@ -516,11 +538,32 @@ impl TrainerConfig {
         if !self.lr_decay.is_finite() || self.lr_decay <= 0.0 || self.lr_decay > 1.0 {
             return Err("trainer.lr_decay must be in (0, 1]".into());
         }
-        if self.width < 2 || self.width > 16_384 || !self.width.is_power_of_two() {
+        let kind = crate::sell::ModelKind::parse(&self.model_kind).ok_or_else(|| {
+            format!(
+                "trainer.model_kind must be one of acdc, fastfood, lowrank, circulant; got '{}'",
+                self.model_kind
+            )
+        })?;
+        if self.width < 2 || self.width > 16_384 {
+            return Err(format!(
+                "trainer.width must be in [2, 16384], got {}",
+                self.width
+            ));
+        }
+        if kind.needs_pow2_width() && !self.width.is_power_of_two() {
             return Err(format!(
                 "trainer.width must be a power of two in [2, 16384], got {}",
                 self.width
             ));
+        }
+        if kind == crate::sell::ModelKind::LowRank {
+            let r = self.effective_rank();
+            if r == 0 || r > self.width {
+                return Err(format!(
+                    "trainer.rank must be in [1, trainer.width={}], got {r}",
+                    self.width
+                ));
+            }
         }
         if self.depth == 0 || self.depth > 64 {
             return Err("trainer.depth must be in [1, 64]".into());
@@ -821,6 +864,7 @@ steps = 1200
 batch = 32
 lr = 0.005
 momentum = 0.5
+model_kind = "acdc"
 width = 64
 depth = 4
 checkpoint_every = 100
@@ -994,6 +1038,9 @@ log_level = "debug"
         assert!((tc.lr - 0.005).abs() < 1e-12);
         assert!((tc.momentum - 0.5).abs() < 1e-12);
         assert_eq!((tc.width, tc.depth), (64, 4));
+        assert_eq!(tc.model_kind, "acdc");
+        assert_eq!(tc.rank, 0);
+        assert_eq!(tc.effective_rank(), 32); // 0 = auto: width/2
         assert_eq!(tc.checkpoint_every, 100);
         assert_eq!(tc.checkpoint_dir, "out/ckpts");
         assert!((tc.target_ratio - 0.05).abs() < 1e-12);
@@ -1007,9 +1054,32 @@ log_level = "debug"
     fn trainer_config_validation() {
         let ok = TrainerConfig::default();
         assert!(ok.validate().is_ok());
+        // Low-rank is exempt from the power-of-two width rule.
+        let lr_ok = TrainerConfig {
+            model_kind: "lowrank".into(),
+            width: 48,
+            rank: 12,
+            ..Default::default()
+        };
+        assert!(lr_ok.validate().is_ok());
         for bad in [
             TrainerConfig {
                 width: 48, // not a power of two → must be a 400, not a panic
+                ..Default::default()
+            },
+            TrainerConfig {
+                model_kind: "dense".into(), // unknown family → typed 400
+                ..Default::default()
+            },
+            TrainerConfig {
+                model_kind: "circulant".into(),
+                width: 48, // transform family keeps the pow2 rule
+                ..Default::default()
+            },
+            TrainerConfig {
+                model_kind: "lowrank".into(),
+                width: 32,
+                rank: 64, // rank > width → typed 400
                 ..Default::default()
             },
             TrainerConfig {

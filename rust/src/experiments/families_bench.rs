@@ -1,0 +1,233 @@
+//! E13 — SELL-family comparison grid: params × final MSE × inference
+//! rows/s for every trainable family (`acdc`, `fastfood`, `lowrank`,
+//! `circulant`) at matched parameter budgets, Table-1 style.
+//!
+//! Each family trains on the same eq.-(15) regression task through the
+//! family-generic [`FamilyTrainer`] with its mirror-validated
+//! [`FamilyTuning`] knobs, then serves its trained snapshot through the
+//! same [`SellModel::forward`] path the registry uses. At width N the
+//! shapes are chosen so the budgets land within ~2× of each other
+//! (N = 64: acdc 384, fastfood 192, lowrank 256, circulant 256 params)
+//! — the regime where the paper's structured-vs-dense trade-off is
+//! interesting. The default grid runs at N = 16, where the
+//! [`FamilyTuning`] presets are mirror-validated; the per-parameter
+//! gradient scale grows with width, so larger widths need retuned
+//! learning rates (pass `--n`/`--steps` to override).
+//!
+//! `acdc bench-families` renders the table and writes
+//! `BENCH_families.json` with provenance, like the engine (E9) and
+//! trainer (E11) benches.
+
+use crate::config::TrainerConfig;
+use crate::data::regression::RegressionTask;
+use crate::sell::ModelKind;
+use crate::tensor::Tensor;
+use crate::trainer::{FamilyTrainer, FamilyTuning, JobSpec, StepDecay};
+use crate::util::bench::{black_box, Bench, Table};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Pcg32;
+
+/// One family's measured row.
+#[derive(Debug, Clone)]
+pub struct FamilyBenchRow {
+    /// Which family.
+    pub kind: ModelKind,
+    /// Operator width N.
+    pub n: usize,
+    /// Learnable parameter count (the Table-1 quantity).
+    pub params: usize,
+    /// First-step minibatch MSE (the convergence baseline).
+    pub first_mse: f64,
+    /// Final-step minibatch MSE after the family's step budget.
+    pub final_mse: f64,
+    /// Single-row inference on the trained snapshot, ns.
+    pub infer_row_ns: f64,
+}
+
+impl FamilyBenchRow {
+    /// final / first MSE (lower is better; the trainer's convergence
+    /// ratio).
+    pub fn ratio(&self) -> f64 {
+        if self.first_mse > 0.0 {
+            self.final_mse / self.first_mse
+        } else {
+            f64::NAN
+        }
+    }
+
+    /// Inference throughput on the trained snapshot, rows/s.
+    pub fn rows_per_s(&self) -> f64 {
+        1e9 / self.infer_row_ns
+    }
+}
+
+/// The bench's JobSpec for one family at width `n`: matched-budget
+/// shapes (depth 2 for the cascade families, rank 2 for low-rank) with
+/// the family's [`FamilyTuning`] SGD knobs.
+pub fn family_spec(kind: ModelKind, n: usize) -> JobSpec {
+    let t = FamilyTuning::for_kind(kind);
+    JobSpec {
+        model_kind: kind,
+        width: n,
+        depth: 2,
+        rank: 2,
+        steps: t.steps,
+        batch: 32,
+        dataset_rows: 512,
+        lr: t.lr,
+        momentum: t.momentum,
+        seed: 11,
+        checkpoint_every: 0,
+        target_ratio: t.target_ratio,
+        ..JobSpec::from_config(&TrainerConfig::default())
+    }
+}
+
+/// Train and measure every family at width `n`. `steps` overrides each
+/// family's step budget when `Some` (the quick-test path); `None` runs
+/// the full [`FamilyTuning`] budgets.
+pub fn run(n: usize, steps: Option<usize>, bench: &Bench) -> Vec<FamilyBenchRow> {
+    let mut rows = Vec::with_capacity(ModelKind::ALL.len());
+    for kind in ModelKind::ALL {
+        let spec = family_spec(kind, n);
+        let task = RegressionTask::generate(
+            spec.dataset_rows,
+            spec.width,
+            spec.dataset_noise,
+            spec.seed,
+        );
+        let mut trainer = FamilyTrainer::new(&spec);
+        let budget = steps.unwrap_or(spec.steps);
+        let curve = trainer.run(&task, budget, spec.batch, &StepDecay::constant(spec.lr));
+        let model = trainer.snapshot();
+        let mut rng = Pcg32::seeded(23);
+        let x = Tensor::from_vec(&[1, n], rng.normal_vec(n, 0.0, 1.0));
+        let m = bench.run(&format!("infer {kind} n={n}"), || {
+            black_box(model.forward(&x).data()[0]);
+        });
+        rows.push(FamilyBenchRow {
+            kind,
+            n,
+            params: trainer.param_count(),
+            first_mse: curve.first().unwrap_or(f64::NAN),
+            final_mse: curve.last().unwrap_or(f64::NAN),
+            infer_row_ns: m.median_ns,
+        });
+    }
+    rows
+}
+
+/// Text table of the grid.
+pub fn render(rows: &[FamilyBenchRow]) -> String {
+    let mut t = Table::new(&[
+        "family",
+        "N",
+        "params",
+        "first MSE",
+        "final MSE",
+        "ratio",
+        "infer row",
+        "rows/s",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.kind.to_string(),
+            r.n.to_string(),
+            r.params.to_string(),
+            format!("{:.3e}", r.first_mse),
+            format!("{:.3e}", r.final_mse),
+            format!("{:.3}", r.ratio()),
+            crate::util::bench::fmt_ns(r.infer_row_ns),
+            format!("{:.0}", r.rows_per_s()),
+        ]);
+    }
+    format!(
+        "SELL-family grid (matched parameter budgets, eq.-(15) task)\n{}",
+        t.render()
+    )
+}
+
+/// JSON report (the `BENCH_families.json` payload).
+pub fn to_json(rows: &[FamilyBenchRow], provenance: &str) -> Json {
+    obj(vec![
+        ("bench", Json::Str("families".into())),
+        ("provenance", Json::Str(provenance.to_string())),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("family", Json::Str(r.kind.to_string())),
+                            ("n", Json::Num(r.n as f64)),
+                            ("params", Json::Num(r.params as f64)),
+                            ("first_mse", Json::Num(r.first_mse)),
+                            ("final_mse", Json::Num(r.final_mse)),
+                            ("ratio", Json::Num(r.ratio())),
+                            ("infer_row_ns", Json::Num(r.infer_row_ns)),
+                            ("rows_per_s", Json::Num(r.rows_per_s())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Write the JSON report to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    rows: &[FamilyBenchRow],
+    provenance: &str,
+) -> Result<(), String> {
+    std::fs::write(path, to_json(rows, provenance).to_pretty())
+        .map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn quick() -> Bench {
+        Bench {
+            warmup: Duration::from_millis(2),
+            measure: Duration::from_millis(15),
+            min_iters: 2,
+            max_iters: 10_000,
+        }
+    }
+
+    #[test]
+    fn matched_budgets_within_2x_at_n64() {
+        let params: Vec<usize> = ModelKind::ALL
+            .iter()
+            .map(|&k| {
+                let spec = family_spec(k, 64);
+                let mut rng = Pcg32::seeded(1);
+                let model = crate::trainer::build_trainable(&spec, &mut rng);
+                model.param_sizes().iter().sum()
+            })
+            .collect();
+        assert_eq!(params, vec![384, 192, 256, 256]);
+        let (min, max) = (params.iter().min().unwrap(), params.iter().max().unwrap());
+        assert!(*max <= 2 * *min, "budgets not matched: {params:?}");
+    }
+
+    #[test]
+    fn runs_renders_and_serializes() {
+        // 40 steps per family: enough to move the loss, fast enough for CI.
+        let rows = run(16, Some(40), &quick());
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.params > 0 && r.infer_row_ns > 0.0, "{:?}", r.kind);
+            assert!(r.first_mse.is_finite() && r.final_mse.is_finite(), "{:?}", r.kind);
+        }
+        let s = render(&rows);
+        assert!(s.contains("rows/s") && s.contains("circulant"), "{s}");
+        let j = to_json(&rows, "unit test");
+        let re = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(re.get("bench").unwrap().as_str(), Some("families"));
+        assert_eq!(re.get("rows").unwrap().as_arr().unwrap().len(), 4);
+    }
+}

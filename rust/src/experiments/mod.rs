@@ -12,10 +12,14 @@
 //! * [`trainer_bench`] — E11 throughput leg: full-SGD-step sweep over
 //!   layer width (the `BENCH_trainer_step.json` source, DESIGN.md §6);
 //! * [`e2e_bench`] — E12: unified engine GB/s + loopback gateway latency
-//!   report (the `BENCH_e2e_infer.json` source, `acdc bench --all`).
+//!   report (the `BENCH_e2e_infer.json` source, `acdc bench --all`);
+//! * [`families_bench`] — E13: params × final MSE × inference rows/s for
+//!   every trainable SELL family at matched parameter budgets (the
+//!   `BENCH_families.json` source, `acdc bench-families`).
 
 pub mod e2e_bench;
 pub mod engine_bench;
+pub mod families_bench;
 pub mod fig2;
 pub mod fig3;
 pub mod table1;

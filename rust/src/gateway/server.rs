@@ -24,10 +24,12 @@
 //! * `POST /v1/admin/default` — body `{"model": "name"}`.
 //! * `POST /v1/models/{name}/train` — start a background training job
 //!   toward model `name` ([`crate::trainer`]); body keys (all optional)
-//!   override the `[trainer]` defaults: `steps`, `batch`, `lr`,
-//!   `momentum`, `lr_decay`, `lr_decay_every`, `width`, `depth`, `rows`,
-//!   `noise`, `seed`, `checkpoint_every`, `target_ratio`, `init_mean`,
-//!   `init_sigma`, `nonlinear`, `promote` (`"auto"` | `"manual"`).
+//!   override the `[trainer]` defaults: `model_kind` (`"acdc"` |
+//!   `"fastfood"` | `"lowrank"` | `"circulant"`), `steps`, `batch`,
+//!   `lr`, `momentum`, `lr_decay`, `lr_decay_every`, `width`, `depth`,
+//!   `rank`, `rows`, `noise`, `seed`, `checkpoint_every`,
+//!   `target_ratio`, `init_mean`, `init_sigma`, `nonlinear`, `promote`
+//!   (`"auto"` | `"manual"`).
 //! * `GET /v1/jobs` — list training jobs (state, step, loss, lr,
 //!   promotions, last checkpoint).
 //! * `POST /v1/jobs/{id}/{pause|resume|cancel|promote}` — job controls;
@@ -71,6 +73,7 @@ use crate::coordinator::request::{ResponseSlot, RowRef};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
+use crate::sell::ModelKind;
 use crate::serve::Server;
 use crate::trace::log::{self, Field, Level};
 use crate::trace::{self, SlowRing, SpanRecord, Stage};
@@ -983,6 +986,7 @@ fn job_spec_from_body(defaults: &JobSpec, body: &Json) -> Result<JobSpec, String
     };
     usize_field("width", &mut spec.width)?;
     usize_field("depth", &mut spec.depth)?;
+    usize_field("rank", &mut spec.rank)?;
     usize_field("steps", &mut spec.steps)?;
     usize_field("batch", &mut spec.batch)?;
     usize_field("rows", &mut spec.dataset_rows)?;
@@ -998,6 +1002,17 @@ fn job_spec_from_body(defaults: &JobSpec, body: &Json) -> Result<JobSpec, String
     let mut seed = spec.seed as usize;
     usize_field("seed", &mut seed)?;
     spec.seed = seed as u64;
+    match body.get("model_kind") {
+        None => {}
+        Some(v) => match v.as_str().and_then(ModelKind::parse) {
+            Some(k) => spec.model_kind = k,
+            None => {
+                return Err(
+                    "'model_kind' must be one of acdc, fastfood, lowrank, circulant".into(),
+                )
+            }
+        },
+    }
     match body.get("nonlinear") {
         None => {}
         Some(v) => match v.as_bool() {

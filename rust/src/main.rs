@@ -65,6 +65,7 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "train-cnn" => cmd_train_cnn(rest),
         "jobs" => cmd_jobs(rest),
         "bench-trainer" => cmd_bench_trainer(rest),
+        "bench-families" => cmd_bench_families(rest),
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
         "loadgen" => cmd_loadgen(rest),
@@ -88,6 +89,8 @@ subcommands:
               gateway leg and writes the unified BENCH_e2e_infer.json (E12)
   bench-trainer  full-SGD-step throughput sweep (E11, writes
               BENCH_trainer_step.json)
+  bench-families  params × final MSE × rows/s grid over every trainable
+              SELL family at matched budgets (E13, writes BENCH_families.json)
   fig2        Figure-2 runtime sweep (dense vs fused vs batched vs multipass ACDC)
   fig3        Figure-3 operator-approximation grid
   table1      Table-1 measured MiniCaffeNet leg
@@ -308,8 +311,10 @@ fn train_opts() -> Vec<OptSpec> {
         opt("momentum", "momentum coefficient", Some("0.9")),
         opt("lr-decay", "lr multiplier per decay (1.0 = constant)", Some("1.0")),
         opt("lr-decay-every", "steps between decays (0 = never)", Some("0")),
-        opt("width", "cascade width N (power of two)", Some("32")),
-        opt("depth", "cascade depth K", Some("2")),
+        opt("kind", "model family: acdc | fastfood | lowrank | circulant", Some("acdc")),
+        opt("width", "width N (power of two for transform families)", Some("32")),
+        opt("depth", "cascade depth K (acdc/circulant)", Some("2")),
+        opt("rank", "low-rank factorization rank (0 = width/2)", Some("0")),
         opt("init-mean", "diagonal init mean (paper: 1.0)", Some("1.0")),
         opt("init-sigma", "diagonal init noise sigma", Some("0.1")),
         opt("rows", "regression dataset rows", Some("4096")),
@@ -334,8 +339,10 @@ fn trainer_config_from_args(args: &Args) -> Result<TrainerConfig, String> {
         momentum: args.get_f64("momentum")?.unwrap(),
         lr_decay: args.get_f64("lr-decay")?.unwrap(),
         lr_decay_every: args.get_usize("lr-decay-every")?.unwrap(),
+        model_kind: args.get("kind").unwrap().to_string(),
         width: args.get_usize("width")?.unwrap(),
         depth: args.get_usize("depth")?.unwrap(),
+        rank: args.get_usize("rank")?.unwrap(),
         init_mean: args.get_f64("init-mean")?.unwrap(),
         init_sigma: args.get_f64("init-sigma")?.unwrap(),
         nonlinear: args.flag("nonlinear"),
@@ -387,6 +394,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
     }
     let addr = args.get("addr").unwrap().to_string();
     let body = obj(vec![
+        ("model_kind", Json::Str(tc.model_kind.clone())),
         ("steps", Json::Num(tc.steps as f64)),
         ("batch", Json::Num(tc.batch as f64)),
         ("lr", Json::Num(tc.lr)),
@@ -395,6 +403,7 @@ fn cmd_train(rest: &[String]) -> Result<(), String> {
         ("lr_decay_every", Json::Num(tc.lr_decay_every as f64)),
         ("width", Json::Num(tc.width as f64)),
         ("depth", Json::Num(tc.depth as f64)),
+        ("rank", Json::Num(tc.rank as f64)),
         ("init_mean", Json::Num(tc.init_mean)),
         ("init_sigma", Json::Num(tc.init_sigma)),
         ("nonlinear", Json::Bool(tc.nonlinear)),
@@ -450,8 +459,8 @@ fn train_standalone(args: &Args, tc: &TrainerConfig, model: &str) -> Result<(), 
     let pool = TrainerPool::new(Arc::clone(&registry), metrics, tc.clone());
     let spec = JobSpec::from_config(tc);
     println!(
-        "standalone: training '{model}' — N={} K={} batch={} lr={} ({} steps max)",
-        tc.width, tc.depth, tc.batch, tc.lr, tc.steps
+        "standalone: training '{model}' — {} N={} K={} batch={} lr={} ({} steps max)",
+        tc.model_kind, tc.width, tc.depth, tc.batch, tc.lr, tc.steps
     );
     let id = pool.submit(model, spec).map_err(|e| e.to_string())?;
     let t0 = Instant::now();
@@ -559,6 +568,36 @@ fn cmd_bench_trainer(rest: &[String]) -> Result<(), String> {
     print!("{}", trainer_bench::render(&rows));
     let out = args.get("out").unwrap();
     trainer_bench::write_json(Path::new(out), &rows, "acdc bench-trainer (local cargo run)")?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_bench_families(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt("n", "operator width (FamilyTuning is validated at 16)", Some("16")),
+        opt("steps", "per-family step override (0 = family budgets)", Some("0")),
+        opt("out", "JSON report path", Some("BENCH_families.json")),
+        flag("fast", "shrink measurement windows for smoke runs"),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let n = args.get_usize("n")?.unwrap();
+    let steps = match args.get_usize("steps")?.unwrap() {
+        0 => None,
+        s => Some(s),
+    };
+    let bench = if args.flag("fast") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    };
+    let rows = acdc::experiments::families_bench::run(n, steps, &bench);
+    print!("{}", acdc::experiments::families_bench::render(&rows));
+    let out = args.get("out").unwrap();
+    acdc::experiments::families_bench::write_json(
+        Path::new(out),
+        &rows,
+        "acdc bench-families (local cargo run)",
+    )?;
     println!("wrote {out}");
     Ok(())
 }

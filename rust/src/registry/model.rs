@@ -8,7 +8,8 @@
 //! `save → load → infer` cycle reproduces the in-memory model's outputs
 //! to the last ulp on the same execution path.
 //!
-//! Layout (all under reserved `sell.`/`acdc.`/`ff.`/`lr.` key prefixes):
+//! Layout (all under reserved `sell.`/`acdc.`/`ff.`/`lr.`/`dc.` key
+//! prefixes):
 //!
 //! ```text
 //! sell.meta            [_, ...]   kind code + shape header (see below)
@@ -16,6 +17,7 @@
 //! acdc.perm{i}              [n]   optional §6.2 permutations
 //! ff.{s,g,b,perm}           [n]   adaptive Fastfood diagonals + perm
 //! lr.u / lr.v         [n,r]/[r,n] low-rank factors
+//! dc.layer{i}.{signs,r,d}   [n]   diagonal-circulant cascade layers
 //! ```
 
 use std::sync::Arc;
@@ -24,6 +26,7 @@ use crate::checkpoint::Checkpoint;
 use crate::coordinator::worker::BatchExecutor;
 use crate::dct::PlanCache;
 use crate::sell::acdc::{AcdcCascade, AcdcLayer};
+use crate::sell::circulant::{DiagonalCirculantCascade, DiagonalCirculantLayer};
 use crate::sell::fastfood::FastfoodLayer;
 use crate::sell::lowrank::LowRankLayer;
 use crate::tensor::Tensor;
@@ -34,6 +37,8 @@ const KIND_ACDC: f32 = 0.0;
 const KIND_FASTFOOD: f32 = 1.0;
 /// Kind code for [`LowRankLayer`].
 const KIND_LOWRANK: f32 = 2.0;
+/// Kind code for [`DiagonalCirculantCascade`].
+const KIND_CIRCULANT: f32 = 3.0;
 
 /// Permutation indices are stored as f32; exact only below 2^24.
 const MAX_EXACT_U32: u32 = 1 << 24;
@@ -51,6 +56,8 @@ pub enum SellModel {
     Fastfood(FastfoodLayer),
     /// Low-rank `U·V` factorization.
     LowRank(LowRankLayer),
+    /// Deep diagonal-circulant cascade (Araujo et al. 2019).
+    Circulant(DiagonalCirculantCascade),
 }
 
 impl SellModel {
@@ -60,6 +67,7 @@ impl SellModel {
             SellModel::Acdc(c) => c.n(),
             SellModel::Fastfood(f) => crate::sell::LinearOp::width(f),
             SellModel::LowRank(l) => crate::sell::LinearOp::width(l),
+            SellModel::Circulant(c) => c.n(),
         }
     }
 
@@ -69,6 +77,7 @@ impl SellModel {
             SellModel::Acdc(_) => "acdc",
             SellModel::Fastfood(_) => "fastfood",
             SellModel::LowRank(_) => "lowrank",
+            SellModel::Circulant(_) => "circulant",
         }
     }
 
@@ -78,6 +87,7 @@ impl SellModel {
             SellModel::Acdc(c) => c.param_count(),
             SellModel::Fastfood(f) => crate::sell::LinearOp::param_count(f),
             SellModel::LowRank(l) => crate::sell::LinearOp::param_count(l),
+            SellModel::Circulant(c) => crate::sell::LinearOp::param_count(c),
         }
     }
 
@@ -87,6 +97,7 @@ impl SellModel {
             SellModel::Acdc(c) => c.forward(x),
             SellModel::Fastfood(f) => crate::sell::LinearOp::forward(f, x),
             SellModel::LowRank(l) => crate::sell::LinearOp::forward(l, x),
+            SellModel::Circulant(c) => crate::sell::LinearOp::forward(c, x),
         }
     }
 
@@ -146,6 +157,24 @@ impl SellModel {
                 );
                 ckpt.insert("lr.u", l.u.clone());
                 ckpt.insert("lr.v", l.v.clone());
+            }
+            SellModel::Circulant(c) => {
+                let n = c.n();
+                let k = c.depth();
+                ckpt.insert(
+                    "sell.meta",
+                    Tensor::from_vec(&[3], vec![KIND_CIRCULANT, n as f32, k as f32]),
+                );
+                for (i, layer) in c.layers.iter().enumerate() {
+                    // Signs are ±1.0 — exactly representable, so the
+                    // roundtrip stays bit-exact like the stored perms.
+                    ckpt.insert(
+                        &format!("dc.layer{i}.signs"),
+                        Tensor::from_vec(&[n], layer.signs.clone()),
+                    );
+                    ckpt.insert(&format!("dc.layer{i}.r"), Tensor::from_vec(&[n], layer.r.clone()));
+                    ckpt.insert(&format!("dc.layer{i}.d"), Tensor::from_vec(&[n], layer.d.clone()));
+                }
             }
         }
         Ok(ckpt)
@@ -231,6 +260,34 @@ impl SellModel {
                 ));
             }
             Ok(SellModel::LowRank(LowRankLayer::new(u, v)))
+        } else if kind == KIND_CIRCULANT {
+            if m.len() != 3 {
+                return Err(format!(
+                    "circulant sell.meta must have 3 entries, got {}",
+                    m.len()
+                ));
+            }
+            let n = meta_usize(m[1], "n")?;
+            let k = meta_usize(m[2], "k")?;
+            if k == 0 {
+                return Err("circulant cascade depth k must be >= 1".into());
+            }
+            // Guard before FftPlan::new, whose constructor asserts —
+            // a corrupt manifest must error, not panic.
+            if !n.is_power_of_two() {
+                return Err(format!("circulant width must be a power of two, got {n}"));
+            }
+            let mut layers = Vec::with_capacity(k);
+            for i in 0..k {
+                let signs = vec_entry(ckpt, &format!("dc.layer{i}.signs"), n)?;
+                if let Some(bad) = signs.iter().find(|&&s| s != 1.0 && s != -1.0) {
+                    return Err(format!("'dc.layer{i}.signs' entry {bad} is not ±1"));
+                }
+                let r = vec_entry(ckpt, &format!("dc.layer{i}.r"), n)?;
+                let d = vec_entry(ckpt, &format!("dc.layer{i}.d"), n)?;
+                layers.push(DiagonalCirculantLayer::new(signs, r, d));
+            }
+            Ok(SellModel::Circulant(DiagonalCirculantCascade::new(layers)))
         } else {
             Err(format!("unknown sell kind code {kind}"))
         }
@@ -411,6 +468,67 @@ mod tests {
         assert_eq!(re.param_count(), 2 * 24 * 4);
         let x = Tensor::from_vec(&[2, 24], rng.normal_vec(48, 0.0, 1.0));
         assert!(exact_eq(&model.forward(&x), &re.forward(&x)));
+    }
+
+    #[test]
+    fn circulant_checkpoint_roundtrip_is_bit_exact() {
+        let mut rng = Pcg32::seeded(8);
+        let cascade = DiagonalCirculantCascade::init(16, 2, DiagInit::CAFFENET, &mut rng);
+        let model = SellModel::Circulant(cascade);
+        let re = SellModel::from_checkpoint(&model.to_checkpoint().unwrap()).unwrap();
+        assert_eq!(re.kind(), "circulant");
+        assert_eq!(re.width(), 16);
+        assert_eq!(re.param_count(), 2 * 16 * 2);
+        // Signs survive as exactly-representable ±1 integers.
+        match (&model, &re) {
+            (SellModel::Circulant(a), SellModel::Circulant(b)) => {
+                for (la, lb) in a.layers.iter().zip(&b.layers) {
+                    assert_eq!(la.signs, lb.signs);
+                    assert!(lb.signs.iter().all(|&s| s == 1.0 || s == -1.0));
+                }
+            }
+            _ => unreachable!(),
+        }
+        let x = Tensor::from_vec(&[5, 16], rng.normal_vec(80, 0.0, 1.0));
+        assert!(exact_eq(&model.forward(&x), &re.forward(&x)));
+    }
+
+    #[test]
+    fn circulant_from_checkpoint_rejects_corrupt_manifests() {
+        let mut rng = Pcg32::seeded(9);
+        let model = SellModel::Circulant(DiagonalCirculantCascade::init(
+            16,
+            2,
+            DiagInit::CAFFENET,
+            &mut rng,
+        ));
+        let good = model.to_checkpoint().unwrap();
+        // Each corruption must surface as Err — never a panic.
+        let mut bad = good.clone();
+        bad.entries.remove("dc.layer1.r");
+        assert!(SellModel::from_checkpoint(&bad)
+            .unwrap_err()
+            .contains("dc.layer1.r"));
+        // Non-±1 sign entry.
+        let mut bad = good.clone();
+        let mut signs = vec![1.0f32; 16];
+        signs[3] = 0.25;
+        bad.insert("dc.layer0.signs", Tensor::from_vec(&[16], signs));
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("±1"));
+        // Non-pow2 width must Err before the FFT plan's assert can fire.
+        let mut bad = good.clone();
+        bad.insert("sell.meta", Tensor::from_vec(&[3], vec![3.0, 12.0, 2.0]));
+        assert!(SellModel::from_checkpoint(&bad)
+            .unwrap_err()
+            .contains("power of two"));
+        // Zero depth.
+        let mut bad = good.clone();
+        bad.insert("sell.meta", Tensor::from_vec(&[3], vec![3.0, 16.0, 0.0]));
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("depth"));
+        // Wrong-length bank.
+        let mut bad = good.clone();
+        bad.insert("dc.layer0.d", Tensor::from_vec(&[4], vec![1.0; 4]));
+        assert!(SellModel::from_checkpoint(&bad).unwrap_err().contains("shape"));
     }
 
     #[test]

@@ -4,9 +4,19 @@
 //! product is computed as a circular convolution via the FFT substrate.
 //! The adaptive variant (this paper's framing) learns the defining vector
 //! `r`; the `D̃` sign diagonal stays fixed random, as in the original.
+//!
+//! [`DiagonalCirculantLayer`] is the trainable extension: the
+//! diagonal-circulant block `y = conv(x ⊙ signs, r) ⊙ d` of Araujo et al.
+//! (2019, arXiv:1901.10255), with both `r` and the output diagonal `d`
+//! learned. A single fixed-sign block cannot represent matrices whose
+//! dominant component is rank-1 (the signs force sign changes across rows),
+//! so the trainable family is a depth-K [`DiagonalCirculantCascade`] — the
+//! deep diagonal-circulant network of 1901.10255, where K ≥ 2 already
+//! removes the obstruction.
 
 use std::sync::Arc;
 
+use super::init::DiagInit;
 use super::LinearOp;
 use crate::dct::fft::FftPlan;
 use crate::tensor::Tensor;
@@ -107,6 +117,270 @@ impl LinearOp for CirculantLayer {
     }
 }
 
+/// Gradients of one [`DiagonalCirculantLayer`], summed over batch rows.
+#[derive(Debug, Clone)]
+pub struct DiagonalCirculantGrads {
+    /// ∂L/∂r.
+    pub r: Vec<f32>,
+    /// ∂L/∂d.
+    pub d: Vec<f32>,
+}
+
+/// Trainable diagonal-circulant block (Araujo et al. 2019, eq. 2):
+/// `y = conv(x ⊙ signs, r) ⊙ d` with learned `r` and `d`, fixed ±1 signs.
+///
+/// Unlike the serve-only [`CirculantLayer`], the spectrum of `r` is *not*
+/// cached: the trainer mutates `r` in place every step, and recomputing
+/// one length-n FFT per forward keeps the layer impossible to desync and
+/// bit-exactly deterministic for the checkpoint/serve comparison tests.
+#[derive(Debug, Clone)]
+pub struct DiagonalCirculantLayer {
+    /// Fixed random ±1 input diagonal D̃ (Cheng et al. 2015).
+    pub signs: Vec<f32>,
+    /// Learned circulant-defining vector (first column of R).
+    pub r: Vec<f32>,
+    /// Learned output diagonal (Araujo et al. 2019).
+    pub d: Vec<f32>,
+    plan: Arc<FftPlan>,
+}
+
+impl DiagonalCirculantLayer {
+    /// Layer from explicit parts. `n` must be a power of two (FFT substrate);
+    /// every `signs` entry must be exactly ±1.
+    pub fn new(signs: Vec<f32>, r: Vec<f32>, d: Vec<f32>) -> DiagonalCirculantLayer {
+        let n = r.len();
+        assert_eq!(signs.len(), n);
+        assert_eq!(d.len(), n);
+        assert!(
+            signs.iter().all(|&s| s == 1.0 || s == -1.0),
+            "signs must be exactly ±1"
+        );
+        let plan = Arc::new(FftPlan::new(n));
+        DiagonalCirculantLayer { signs, r, d, plan }
+    }
+
+    /// Identity-flavored trainable init: `r = mean·e₀ + σ·noise`,
+    /// `d = mean·1 + σ·noise`. With `DiagInit::IDENTITY` the layer is
+    /// exactly `x ⊙ signs`; the paper's §6 recipe (mean 1, small σ) keeps
+    /// deep cascades trainable the same way it does for ACDC.
+    pub fn init(n: usize, init: DiagInit, rng: &mut Pcg32) -> DiagonalCirculantLayer {
+        let signs = rng.sign_vec(n);
+        let mut r = rng.normal_vec(n, 0.0, init.sigma);
+        r[0] += init.mean as f32;
+        let d = rng.normal_vec(n, init.mean, init.sigma);
+        DiagonalCirculantLayer::new(signs, r, d)
+    }
+
+    /// Width n.
+    pub fn n(&self) -> usize {
+        self.r.len()
+    }
+
+    /// `out = conv(x ⊙ signs, r)` for one row (no `d`): the pre-diagonal
+    /// activation, also needed by the backward pass.
+    fn convolve_row(&self, x: &[f32], r_spec: &(Vec<f32>, Vec<f32>), out: &mut [f32]) {
+        let n = x.len();
+        let mut re: Vec<f32> = x.iter().zip(&self.signs).map(|(&v, &s)| v * s).collect();
+        let mut im = vec![0.0f32; n];
+        self.plan.forward(&mut re, &mut im);
+        for i in 0..n {
+            let (ar, ai) = (re[i], im[i]);
+            re[i] = ar * r_spec.0[i] - ai * r_spec.1[i];
+            im[i] = ar * r_spec.1[i] + ai * r_spec.0[i];
+        }
+        self.plan.inverse(&mut re, &mut im);
+        out.copy_from_slice(&re);
+    }
+
+    fn r_spectrum(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.n();
+        let mut re = self.r.clone();
+        let mut im = vec![0.0f32; n];
+        self.plan.forward(&mut re, &mut im);
+        (re, im)
+    }
+
+    /// Batched backward. Returns `(∂L/∂x, grads)` with parameter gradients
+    /// summed over rows.
+    ///
+    /// With `v = x ⊙ signs`, `c = conv(v, r)`, `y = c ⊙ d`:
+    ///   ∂L/∂d  = Σ_rows gy ⊙ c
+    ///   gc     = gy ⊙ d
+    ///   ∂L/∂r  = Σ_rows corr(gc, v)      (circular cross-correlation)
+    ///   ∂L/∂x  = corr(gc, r) ⊙ signs
+    /// Correlations ride the same FFT: `corr(a, b) = IFFT(FFT(a)·conj(FFT(b)))`.
+    /// The row sum for ∂L/∂r is taken in the spectral domain (IFFT is
+    /// linear), so the whole backward is three FFTs + one IFFT per row
+    /// plus a single final IFFT.
+    pub fn backward(&self, x: &Tensor, gy: &Tensor) -> (Tensor, DiagonalCirculantGrads) {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        assert_eq!(gy.shape(), x.shape());
+        let rows = x.rows();
+        let r_spec = self.r_spectrum();
+        let mut gx = Tensor::zeros(&[rows, n]);
+        let mut gd = vec![0.0f32; n];
+        // Accumulated spectrum of Σ_rows FFT(gc)·conj(FFT(v)).
+        let (mut acc_re, mut acc_im) = (vec![0.0f32; n], vec![0.0f32; n]);
+        let mut c = vec![0.0f32; n];
+        for rix in 0..rows {
+            let xr = x.row(rix);
+            self.convolve_row(xr, &r_spec, &mut c);
+            let gyr = gy.row(rix);
+            // v = x ⊙ signs, spectral.
+            let mut v_re: Vec<f32> = xr.iter().zip(&self.signs).map(|(&a, &s)| a * s).collect();
+            let mut v_im = vec![0.0f32; n];
+            self.plan.forward(&mut v_re, &mut v_im);
+            // gc = gy ⊙ d, spectral; dd accumulates in the signal domain.
+            let mut gc_re = vec![0.0f32; n];
+            let mut gc_im = vec![0.0f32; n];
+            for i in 0..n {
+                gd[i] += gyr[i] * c[i];
+                gc_re[i] = gyr[i] * self.d[i];
+            }
+            self.plan.forward(&mut gc_re, &mut gc_im);
+            // dr spectrum += GC · conj(V).
+            for i in 0..n {
+                acc_re[i] += gc_re[i] * v_re[i] + gc_im[i] * v_im[i];
+                acc_im[i] += gc_im[i] * v_re[i] - gc_re[i] * v_im[i];
+            }
+            // gx = IFFT(GC · conj(R)) ⊙ signs.
+            for i in 0..n {
+                let (ar, ai) = (gc_re[i], gc_im[i]);
+                gc_re[i] = ar * r_spec.0[i] + ai * r_spec.1[i];
+                gc_im[i] = ai * r_spec.0[i] - ar * r_spec.1[i];
+            }
+            self.plan.inverse(&mut gc_re, &mut gc_im);
+            let dst = gx.row_mut(rix);
+            for i in 0..n {
+                dst[i] = gc_re[i] * self.signs[i];
+            }
+        }
+        self.plan.inverse(&mut acc_re, &mut acc_im);
+        (gx, DiagonalCirculantGrads { r: acc_re, d: gd })
+    }
+}
+
+impl LinearOp for DiagonalCirculantLayer {
+    fn width(&self) -> usize {
+        self.n()
+    }
+
+    fn param_count(&self) -> usize {
+        2 * self.n() // r and d are learned; signs are fixed random
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let n = self.n();
+        assert_eq!(x.cols(), n);
+        let r_spec = self.r_spectrum();
+        let mut out = Tensor::zeros(&[x.rows(), n]);
+        let mut c = vec![0.0f32; n];
+        for rix in 0..x.rows() {
+            self.convolve_row(x.row(rix), &r_spec, &mut c);
+            let dst = out.row_mut(rix);
+            for i in 0..n {
+                dst[i] = c[i] * self.d[i];
+            }
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "diagonal-circulant"
+    }
+}
+
+/// Depth-K stack of [`DiagonalCirculantLayer`]s — the deep diagonal-
+/// circulant network of Araujo et al. (2019). The trainable `circulant`
+/// model kind; K ≥ 2 is required to fit general dense targets because a
+/// single fixed-sign block has a rank-1 representational obstruction.
+#[derive(Debug, Clone)]
+pub struct DiagonalCirculantCascade {
+    /// Layers applied first-to-last.
+    pub layers: Vec<DiagonalCirculantLayer>,
+}
+
+impl DiagonalCirculantCascade {
+    /// Cascade from explicit layers (non-empty, equal widths).
+    pub fn new(layers: Vec<DiagonalCirculantLayer>) -> DiagonalCirculantCascade {
+        assert!(!layers.is_empty());
+        let n = layers[0].n();
+        assert!(layers.iter().all(|l| l.n() == n));
+        DiagonalCirculantCascade { layers }
+    }
+
+    /// K identity-flavored layers (the trainer's init path).
+    pub fn init(n: usize, k: usize, init: DiagInit, rng: &mut Pcg32) -> DiagonalCirculantCascade {
+        DiagonalCirculantCascade::new(
+            (0..k.max(1))
+                .map(|_| DiagonalCirculantLayer::init(n, init, rng))
+                .collect(),
+        )
+    }
+
+    /// Width n.
+    pub fn n(&self) -> usize {
+        self.layers[0].n()
+    }
+
+    /// Depth K.
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Forward that also returns each layer's input — the activation cache
+    /// consumed by [`DiagonalCirculantCascade::backward`].
+    pub fn forward_train(&self, x: &Tensor) -> (Tensor, Vec<Tensor>) {
+        let mut acts = Vec::with_capacity(self.layers.len());
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            let next = layer.forward(&cur);
+            acts.push(cur);
+            cur = next;
+        }
+        (cur, acts)
+    }
+
+    /// Backprop through the stack. `acts` is the cache from
+    /// [`DiagonalCirculantCascade::forward_train`]; returns `(∂L/∂x, grads)`
+    /// with one [`DiagonalCirculantGrads`] per layer, first-to-last.
+    pub fn backward(&self, acts: &[Tensor], gy: &Tensor) -> (Tensor, Vec<DiagonalCirculantGrads>) {
+        assert_eq!(acts.len(), self.layers.len());
+        let mut grads = Vec::with_capacity(self.layers.len());
+        let mut g = gy.clone();
+        for (i, layer) in self.layers.iter().enumerate().rev() {
+            let (gx, lg) = layer.backward(&acts[i], &g);
+            grads.push(lg);
+            g = gx;
+        }
+        grads.reverse();
+        (g, grads)
+    }
+}
+
+impl LinearOp for DiagonalCirculantCascade {
+    fn width(&self) -> usize {
+        self.n()
+    }
+
+    fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    fn forward(&self, x: &Tensor) -> Tensor {
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.forward(&cur);
+        }
+        cur
+    }
+
+    fn name(&self) -> &'static str {
+        "diagonal-circulant-cascade"
+    }
+}
+
 /// O(N²) oracle: y_j = Σ_i v_i · r_{(j-i) mod n} with v = x ⊙ signs.
 pub fn naive_circulant(signs: &[f32], r: &[f32], x: &[f32]) -> Vec<f32> {
     let n = r.len();
@@ -175,6 +449,99 @@ mod tests {
         let lhs = layer.forward(&x1.add(&x2));
         let rhs = layer.forward(&x1).add(&layer.forward(&x2));
         assert!(lhs.max_abs_diff(&rhs) < 1e-4);
+    }
+
+    #[test]
+    fn diagonal_circulant_matches_naive_oracle() {
+        let mut rng = Pcg32::seeded(6);
+        for n in [4usize, 16, 64] {
+            let layer = DiagonalCirculantLayer::new(
+                rng.sign_vec(n),
+                rng.normal_vec(n, 0.0, 1.0),
+                rng.normal_vec(n, 0.0, 1.0),
+            );
+            let x = rng.normal_vec(n, 0.0, 1.0);
+            let conv = naive_circulant(&layer.signs, &layer.r, &x);
+            let got = layer.forward(&Tensor::from_vec(&[1, n], x));
+            for i in 0..n {
+                let want = conv[i] * layer.d[i];
+                assert!((got.data()[i] - want).abs() < 1e-3, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_init_is_signed_identity() {
+        let mut rng = Pcg32::seeded(7);
+        let n = 16;
+        let layer = DiagonalCirculantLayer::init(n, DiagInit::IDENTITY, &mut rng);
+        let x = rng.normal_vec(n, 0.0, 1.0);
+        let y = layer.forward(&Tensor::from_vec(&[1, n], x.clone()));
+        for i in 0..n {
+            assert!((y.data()[i] - x[i] * layer.signs[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "signs must be exactly")]
+    fn rejects_non_sign_diagonal() {
+        DiagonalCirculantLayer::new(vec![0.5; 4], vec![0.0; 4], vec![1.0; 4]);
+    }
+
+    #[test]
+    fn cascade_forward_train_matches_forward() {
+        let mut rng = Pcg32::seeded(8);
+        let n = 16;
+        let cascade = DiagonalCirculantCascade::init(n, 3, DiagInit::CAFFENET, &mut rng);
+        assert_eq!(cascade.param_count(), 2 * n * 3);
+        let x = Tensor::from_vec(&[5, n], rng.normal_vec(5 * n, 0.0, 1.0));
+        let (y, acts) = cascade.forward_train(&x);
+        assert_eq!(acts.len(), 3);
+        assert_eq!(y.max_abs_diff(&cascade.forward(&x)), 0.0);
+        // Backward runs and shapes line up.
+        let (gx, grads) = cascade.backward(&acts, &y);
+        assert_eq!(gx.shape(), x.shape());
+        assert_eq!(grads.len(), 3);
+        assert!(grads.iter().all(|g| g.r.len() == n && g.d.len() == n));
+    }
+
+    #[test]
+    fn backward_gradients_match_finite_differences() {
+        // Full per-parameter FD coverage lives in tests/property_backward.rs;
+        // this is the in-module smoke pin at one shape.
+        let mut rng = Pcg32::seeded(9);
+        let n = 8;
+        let rows = 3;
+        let mut layer = DiagonalCirculantLayer::new(
+            rng.sign_vec(n),
+            rng.normal_vec(n, 0.0, 0.7),
+            rng.normal_vec(n, 0.5, 0.7),
+        );
+        let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+        let y = layer.forward(&x);
+        let (_, grads) = layer.backward(&x, &y); // gy = y ⇒ L = ½Σy²
+        let loss = |l: &DiagonalCirculantLayer| -> f64 {
+            l.forward(&x).data().iter().map(|&v| 0.5 * v as f64 * v as f64).sum()
+        };
+        let eps = 1e-3;
+        for i in 0..n {
+            let keep = layer.r[i];
+            layer.r[i] = keep + eps;
+            let up = loss(&layer);
+            layer.r[i] = keep - eps;
+            let dn = loss(&layer);
+            layer.r[i] = keep;
+            let fd = (up - dn) / (2.0 * eps as f64);
+            assert!((grads.r[i] as f64 - fd).abs() < 3e-2 * fd.abs().max(1.0), "r[{i}]");
+            let keep = layer.d[i];
+            layer.d[i] = keep + eps;
+            let up = loss(&layer);
+            layer.d[i] = keep - eps;
+            let dn = loss(&layer);
+            layer.d[i] = keep;
+            let fd = (up - dn) / (2.0 * eps as f64);
+            assert!((grads.d[i] as f64 - fd).abs() < 3e-2 * fd.abs().max(1.0), "d[{i}]");
+        }
     }
 
     #[test]

@@ -76,6 +76,17 @@ pub fn fwht_soa_normalized(x: &mut [f32], n: usize) {
     }
 }
 
+/// Gradients of one [`FastfoodLayer`], summed over batch rows.
+#[derive(Debug, Clone)]
+pub struct FastfoodGrads {
+    /// ∂L/∂s.
+    pub s: Vec<f32>,
+    /// ∂L/∂g.
+    pub g: Vec<f32>,
+    /// ∂L/∂b.
+    pub b: Vec<f32>,
+}
+
 /// Adaptive Fastfood layer: `y = ((((x ⊙ b)·H)[perm] ⊙ g)·H) ⊙ s`,
 /// H orthonormal Hadamard, `b`, `g`, `s` learned diagonals, `perm` fixed.
 #[derive(Debug, Clone)]
@@ -164,6 +175,172 @@ impl FastfoodLayer {
             let row = &mut out[(r0 + l) * n..(r0 + l + 1) * n];
             for (k, v) in row.iter_mut().enumerate() {
                 *v = buf2[k * LANES + l] * self.s[k];
+            }
+        }
+    }
+
+    /// Batched backward. Returns `(∂L/∂x, grads)` with parameter gradients
+    /// summed over rows. Intermediates are recomputed (two extra FWHTs) so
+    /// the forward stays allocation-free; like `forward`, small batches
+    /// run per-row and larger ones ride the SoA lane panels.
+    ///
+    /// With `t1 = H(x ⊙ b)`, `t2 = t1[perm]`, `t4 = H(t2 ⊙ g)`,
+    /// `y = t4 ⊙ s` (H symmetric orthonormal, so Hᵀ = H):
+    ///   ∂L/∂s = Σ gy ⊙ t4,  gt3 = H(gy ⊙ s),  ∂L/∂g = Σ gt3 ⊙ t2,
+    ///   gt1[perm[k]] = gt3[k]·g[k],  gt0 = H(gt1),
+    ///   ∂L/∂b = Σ gt0 ⊙ x,  ∂L/∂x = gt0 ⊙ b.
+    pub fn backward(&self, x: &Tensor, gy: &Tensor) -> (Tensor, FastfoodGrads) {
+        let n = self.width();
+        assert_eq!(x.cols(), n);
+        assert_eq!(gy.shape(), x.shape());
+        let rows = x.rows();
+        let mut gx = Tensor::zeros(&[rows, n]);
+        let mut acc = FastfoodGrads {
+            s: vec![0.0; n],
+            g: vec![0.0; n],
+            b: vec![0.0; n],
+        };
+        if rows < MIN_SOA_ROWS {
+            for r in 0..rows {
+                let src = x.row(r).to_vec();
+                let gyr = gy.row(r).to_vec();
+                self.backward_row(&src, &gyr, gx.row_mut(r), &mut acc);
+            }
+            return (gx, acc);
+        }
+        let mut p_t2 = vec![0.0f32; n * LANES];
+        let mut p_t4 = vec![0.0f32; n * LANES];
+        let mut p_w = vec![0.0f32; n * LANES];
+        let mut p_sc = vec![0.0f32; n * LANES];
+        let mut r = 0;
+        while r < rows {
+            let take = LANES.min(rows - r);
+            self.backward_panel(
+                x.data(),
+                gy.data(),
+                gx.data_mut(),
+                r,
+                take,
+                &mut p_t2,
+                &mut p_t4,
+                &mut p_w,
+                &mut p_sc,
+                &mut acc,
+            );
+            r += take;
+        }
+        (gx, acc)
+    }
+
+    fn backward_row(&self, x: &[f32], gy: &[f32], gx: &mut [f32], acc: &mut FastfoodGrads) {
+        let n = x.len();
+        // Recompute the forward intermediates.
+        let mut t1: Vec<f32> = x.iter().zip(&self.b).map(|(&v, &b)| v * b).collect();
+        fwht_normalized(&mut t1);
+        let t2: Vec<f32> = self.perm.iter().map(|&p| t1[p as usize]).collect();
+        let mut t4: Vec<f32> = t2.iter().zip(&self.g).map(|(&v, &g)| v * g).collect();
+        fwht_normalized(&mut t4);
+        let mut w = vec![0.0f32; n];
+        for k in 0..n {
+            acc.s[k] += gy[k] * t4[k];
+            w[k] = gy[k] * self.s[k];
+        }
+        fwht_normalized(&mut w); // gt3
+        let mut gt1 = vec![0.0f32; n];
+        for k in 0..n {
+            acc.g[k] += w[k] * t2[k];
+            // t2[k] = t1[perm[k]] ⇒ gt1[perm[k]] = gt3[k]·g[k]; perm is a
+            // bijection, so plain assignment writes every slot exactly once.
+            gt1[self.perm[k] as usize] = w[k] * self.g[k];
+        }
+        fwht_normalized(&mut gt1); // gt0
+        for k in 0..n {
+            acc.b[k] += gt1[k] * x[k];
+            gx[k] = gt1[k] * self.b[k];
+        }
+    }
+
+    /// SoA lane-panel backward: the same pack/gather/unpack layout as
+    /// [`FastfoodLayer::forward_panel`]. Padding lanes are zero-filled on
+    /// both the `x` and `gy` packs, so their contributions to the summed
+    /// parameter gradients vanish through the linear chain.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_panel(
+        &self,
+        x: &[f32],
+        gy: &[f32],
+        gx: &mut [f32],
+        r0: usize,
+        take: usize,
+        p_t2: &mut [f32],
+        p_t4: &mut [f32],
+        p_w: &mut [f32],
+        p_sc: &mut [f32],
+        acc: &mut FastfoodGrads,
+    ) {
+        let n = self.width();
+        // Forward recompute: p_sc holds t1, p_t2 the raw permuted copy
+        // (kept un-scaled for ∂L/∂g), p_t4 the second transform.
+        p_sc.fill(0.0);
+        for l in 0..take {
+            let row = &x[(r0 + l) * n..(r0 + l + 1) * n];
+            for k in 0..n {
+                p_sc[k * LANES + l] = row[k] * self.b[k];
+            }
+        }
+        fwht_soa_normalized(p_sc, n); // t1
+        for (k, &p) in self.perm.iter().enumerate() {
+            let gk = self.g[k];
+            let src = lane(p_sc, p as usize);
+            lane_mut(p_t2, k).copy_from_slice(src);
+            let dst = lane_mut(p_t4, k);
+            for l in 0..LANES {
+                dst[l] = src[l] * gk;
+            }
+        }
+        fwht_soa_normalized(p_t4, n); // t4
+        // Backward sweep.
+        p_w.fill(0.0);
+        for l in 0..take {
+            let row = &gy[(r0 + l) * n..(r0 + l + 1) * n];
+            for k in 0..n {
+                p_w[k * LANES + l] = row[k];
+            }
+        }
+        for k in 0..n {
+            let sk = self.s[k];
+            let wl = lane_mut(p_w, k);
+            let t4l = lane(p_t4, k);
+            let mut ssum = 0.0f32;
+            for l in 0..LANES {
+                ssum += wl[l] * t4l[l];
+                wl[l] *= sk;
+            }
+            acc.s[k] += ssum;
+        }
+        fwht_soa_normalized(p_w, n); // gt3
+        // ∂L/∂g rides the scatter: gt1[perm[k]] = gt3[k]·g[k] into p_sc
+        // (t1 is dead past this point; bijection ⇒ every lane written once).
+        for (k, &p) in self.perm.iter().enumerate() {
+            let gk = self.g[k];
+            let wl = lane(p_w, k);
+            let t2l = lane(p_t2, k);
+            let dst = lane_mut(p_sc, p as usize);
+            let mut gsum = 0.0f32;
+            for l in 0..LANES {
+                gsum += wl[l] * t2l[l];
+                dst[l] = wl[l] * gk;
+            }
+            acc.g[k] += gsum;
+        }
+        fwht_soa_normalized(p_sc, n); // gt0
+        for l in 0..take {
+            let xrow = &x[(r0 + l) * n..(r0 + l + 1) * n];
+            let gxrow = &mut gx[(r0 + l) * n..(r0 + l + 1) * n];
+            for k in 0..n {
+                let g0 = p_sc[k * LANES + l];
+                acc.b[k] += g0 * xrow[k];
+                gxrow[k] = g0 * self.b[k];
             }
         }
     }
@@ -332,6 +509,61 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn backward_panel_matches_per_row() {
+        let mut rng = Pcg32::seeded(8);
+        for n in [8usize, 32] {
+            let layer = FastfoodLayer::random(n, &mut rng);
+            for rows in [4usize, 9, 17] {
+                let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+                let gy = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+                let (gx_p, acc_p) = layer.backward(&x, &gy); // rows ≥ MIN_SOA_ROWS → panels
+                let mut gx_s = Tensor::zeros(&[rows, n]);
+                let mut acc_s = FastfoodGrads {
+                    s: vec![0.0; n],
+                    g: vec![0.0; n],
+                    b: vec![0.0; n],
+                };
+                for r in 0..rows {
+                    let (src, gyr) = (x.row(r).to_vec(), gy.row(r).to_vec());
+                    layer.backward_row(&src, &gyr, gx_s.row_mut(r), &mut acc_s);
+                }
+                assert!(gx_p.max_abs_diff(&gx_s) < 1e-4, "n={n} rows={rows} gx");
+                for k in 0..n {
+                    assert!((acc_p.s[k] - acc_s.s[k]).abs() < 1e-3, "n={n} rows={rows} s[{k}]");
+                    assert!((acc_p.g[k] - acc_s.g[k]).abs() < 1e-3, "n={n} rows={rows} g[{k}]");
+                    assert!((acc_p.b[k] - acc_s.b[k]).abs() < 1e-3, "n={n} rows={rows} b[{k}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_matches_dense_chain_gradients() {
+        // The dense chain M = diag(b)·H·P·diag(g)·H·diag(s) gives closed-form
+        // gradients for L = ½Σy²: gx = gy·Mᵀ with gy = y = x·M.
+        let mut rng = Pcg32::seeded(9);
+        let n = 16;
+        let layer = FastfoodLayer::random(n, &mut rng);
+        let h = hadamard_matrix(n);
+        let mut db = Tensor::zeros(&[n, n]);
+        let mut dg = Tensor::zeros(&[n, n]);
+        let mut ds = Tensor::zeros(&[n, n]);
+        let mut p = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            db.set2(i, i, layer.b[i]);
+            dg.set2(i, i, layer.g[i]);
+            ds.set2(i, i, layer.s[i]);
+            p.set2(layer.perm[i] as usize, i, 1.0);
+        }
+        let chain = db.matmul(&h).matmul(&p).matmul(&dg).matmul(&h).matmul(&ds);
+        let x = Tensor::from_vec(&[5, n], rng.normal_vec(5 * n, 0.0, 1.0));
+        let y = layer.forward(&x);
+        let (gx, _) = layer.backward(&x, &y);
+        let want = y.matmul(&chain.transpose());
+        assert!(gx.max_abs_diff(&want) < 1e-3);
     }
 
     #[test]

@@ -57,6 +57,29 @@ impl LowRankLayer {
     pub fn rank(&self) -> usize {
         self.u.cols()
     }
+
+    /// Batched backward. Returns `(∂L/∂x, grads)` with factor gradients
+    /// summed over rows. With `z = x·U`, `y = z·V`:
+    ///   ∂L/∂V = zᵀ·gy,  dz = gy·Vᵀ,  ∂L/∂U = xᵀ·dz,  ∂L/∂x = dz·Uᵀ.
+    pub fn backward(&self, x: &Tensor, gy: &Tensor) -> (Tensor, LowRankGrads) {
+        assert_eq!(x.cols(), self.width());
+        assert_eq!(gy.shape(), x.shape());
+        let z = x.matmul(&self.u);
+        let dv = z.transpose().matmul(gy);
+        let dz = gy.matmul(&self.v.transpose());
+        let du = x.transpose().matmul(&dz);
+        let gx = dz.matmul(&self.u.transpose());
+        (gx, LowRankGrads { u: du, v: dv })
+    }
+}
+
+/// Gradients of one [`LowRankLayer`], summed over batch rows.
+#[derive(Debug, Clone)]
+pub struct LowRankGrads {
+    /// ∂L/∂U, shape `[n, r]`.
+    pub u: Tensor,
+    /// ∂L/∂V, shape `[r, n]`.
+    pub v: Tensor,
 }
 
 /// In-place modified Gram–Schmidt on the columns of q [n, r].
@@ -121,6 +144,25 @@ mod tests {
         let l = LowRankLayer::random(16, 4, &mut rng);
         let x = Tensor::from_vec(&[3, 16], rng.normal_vec(48, 0.0, 1.0));
         assert_eq!(l.forward(&x).shape(), &[3, 16]);
+    }
+
+    #[test]
+    fn backward_matches_dense_gradients() {
+        // y = x·M with M = U·V gives gx = gy·Mᵀ; factor gradients check
+        // against the closed forms dU = xᵀ·gy·Vᵀ and dV = Uᵀ·xᵀ·gy.
+        let mut rng = Pcg32::seeded(6);
+        let (n, r, rows) = (16, 4, 5);
+        let l = LowRankLayer::random(n, r, &mut rng);
+        let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+        let y = l.forward(&x);
+        let (gx, grads) = l.backward(&x, &y);
+        let m = l.u.matmul(&l.v);
+        assert!(gx.max_abs_diff(&y.matmul(&m.transpose())) < 1e-4);
+        let xtgy = x.transpose().matmul(&y);
+        assert!(grads.u.max_abs_diff(&xtgy.matmul(&l.v.transpose())) < 1e-4);
+        assert!(grads.v.max_abs_diff(&l.u.transpose().matmul(&xtgy)) < 1e-4);
+        assert_eq!(grads.u.shape(), &[n, r]);
+        assert_eq!(grads.v.shape(), &[r, n]);
     }
 
     #[test]

@@ -27,6 +27,58 @@ pub mod params;
 
 use crate::tensor::Tensor;
 
+/// The trainable/servable SELL families, as selected by the trainer's
+/// `model_kind` knob and recorded in checkpoint manifests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Deep ACDC cascade (the paper's family).
+    Acdc,
+    /// Adaptive Fastfood `S·H·G·P·H·B` (Yang et al. 2015).
+    Fastfood,
+    /// Low-rank factorization `U·V` (the Finetuned-SVD rows).
+    LowRank,
+    /// Deep diagonal-circulant cascade (Araujo et al. 2019).
+    Circulant,
+}
+
+impl ModelKind {
+    /// Every family, in the order they appear in docs and benches.
+    pub const ALL: [ModelKind; 4] = [
+        ModelKind::Acdc,
+        ModelKind::Fastfood,
+        ModelKind::LowRank,
+        ModelKind::Circulant,
+    ];
+
+    /// Wire name, as accepted by config and the HTTP train body.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Acdc => "acdc",
+            ModelKind::Fastfood => "fastfood",
+            ModelKind::LowRank => "lowrank",
+            ModelKind::Circulant => "circulant",
+        }
+    }
+
+    /// Parse a wire name; `None` on unknown kinds (callers turn this into
+    /// a typed 400 / config error listing [`ModelKind::ALL`]).
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        ModelKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Whether the family's transform substrate (DCT/FWHT/FFT) restricts
+    /// the width to powers of two. Low-rank is plain matmul and is exempt.
+    pub fn needs_pow2_width(&self) -> bool {
+        !matches!(self, ModelKind::LowRank)
+    }
+}
+
+impl std::fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// A square linear(ish) operator on row-major batches.
 ///
 /// Object-safe so harnesses can sweep heterogeneous layer families; the
@@ -54,6 +106,18 @@ pub fn materialize(op: &dyn LinearOp) -> Tensor {
 mod tests {
     use super::*;
     use crate::util::rng::Pcg32;
+
+    #[test]
+    fn model_kind_round_trips_and_rejects_unknowns() {
+        for kind in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(kind.as_str()), Some(kind));
+            assert_eq!(format!("{kind}"), kind.as_str());
+        }
+        assert_eq!(ModelKind::parse("dense"), None);
+        assert_eq!(ModelKind::parse("ACDC"), None); // case-sensitive wire names
+        assert!(!ModelKind::LowRank.needs_pow2_width());
+        assert!(ModelKind::Circulant.needs_pow2_width());
+    }
 
     #[test]
     fn materialize_dense_recovers_matrix() {

@@ -2,9 +2,12 @@
 //!
 //! This module closes the train → checkpoint → load → hot-swap loop
 //! (DESIGN.md §6): a [`TrainerPool`] owns named background jobs, each
-//! running minibatch SGD on an ACDC cascade over the synthetic eq.-(15)
-//! regression task, on the batched SoA engine
-//! ([`crate::sell::acdc::AcdcCascade::forward_train_pooled`]). Every
+//! running minibatch SGD on a SELL-family model over the synthetic
+//! eq.-(15) regression task. The job's `model_kind` knob selects the
+//! family — an ACDC cascade on the batched SoA engine
+//! ([`crate::sell::acdc::AcdcCascade::forward_train_pooled`]) by
+//! default, or Adaptive Fastfood, low-rank and diagonal-circulant
+//! models behind the same [`TrainableModel`] interface. Every
 //! `checkpoint_every` steps a job serializes its cascade through the
 //! bit-exact [`SellModel`] manifest codec; on convergence (or on demand
 //! via [`TrainerPool::promote`]) it loads that manifest into the
@@ -75,10 +78,14 @@
 //! pool.shutdown();
 //! ```
 
+pub mod model;
 pub mod orchestrator;
 pub mod sgd;
 
-pub use orchestrator::{CnnTrainer, CnnVariant, EvalResult, Fig3NativeTrainer, Fig3Trainer};
+pub use model::{build_trainable, FamilyTuning, TrainableModel};
+pub use orchestrator::{
+    CnnTrainer, CnnVariant, EvalResult, FamilyTrainer, Fig3NativeTrainer, Fig3Trainer,
+};
 pub use sgd::{LossCurve, Momentum, StepDecay};
 
 use std::path::{Path, PathBuf};
@@ -93,6 +100,7 @@ use crate::metrics::{Counter, FloatGauge, Gauge, Registry};
 use crate::registry::{ModelRegistry, SellModel};
 use crate::sell::acdc::{AcdcCascade, AcdcGrads};
 use crate::sell::init::DiagInit;
+use crate::sell::ModelKind;
 use crate::trace::log::{self, Field, Level};
 use crate::util::rng::Pcg32;
 
@@ -172,10 +180,16 @@ impl JobState {
 /// fails at submit time (HTTP 400) instead of inside the worker thread.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
-    /// Cascade width N (power of two).
+    /// Which SELL family to train (see [`ModelKind`]).
+    pub model_kind: ModelKind,
+    /// Width N (power of two for the transform families; low-rank takes
+    /// any width ≥ 2).
     pub width: usize,
-    /// Cascade depth K.
+    /// Cascade depth K (acdc and circulant; ignored by fastfood/lowrank).
     pub depth: usize,
+    /// Low-rank factorization rank r (0 = width/2; ignored by the other
+    /// families).
+    pub rank: usize,
     /// SGD step budget.
     pub steps: usize,
     /// Minibatch rows.
@@ -210,8 +224,12 @@ impl JobSpec {
     /// A spec carrying the `[trainer]` config defaults.
     pub fn from_config(cfg: &TrainerConfig) -> JobSpec {
         JobSpec {
+            // Unknown kinds are rejected by TrainerConfig::validate at
+            // startup; the fallback only covers hand-built configs.
+            model_kind: ModelKind::parse(&cfg.model_kind).unwrap_or(ModelKind::Acdc),
             width: cfg.width,
             depth: cfg.depth,
+            rank: cfg.rank,
             steps: cfg.steps,
             batch: cfg.batch,
             lr: cfg.lr,
@@ -236,8 +254,10 @@ impl JobSpec {
     /// source of truth for the knob ranges).
     pub fn validate(&self) -> Result<(), String> {
         let probe = TrainerConfig {
+            model_kind: self.model_kind.as_str().to_string(),
             width: self.width,
             depth: self.depth,
+            rank: self.rank,
             steps: self.steps,
             batch: self.batch,
             lr: self.lr,
@@ -256,6 +276,16 @@ impl JobSpec {
             ..Default::default()
         };
         probe.validate()
+    }
+
+    /// The low-rank factorization rank this spec resolves to (`rank` with
+    /// the 0-means-width/2 default applied).
+    pub fn effective_rank(&self) -> usize {
+        if self.rank == 0 {
+            (self.width / 2).max(1)
+        } else {
+            self.rank
+        }
     }
 }
 
@@ -754,16 +784,16 @@ fn run_job(shared: Arc<JobShared>, registry: Arc<ModelRegistry>, ckpt_dir: PathB
     }
 }
 
-/// Write the cascade as a bit-exact checkpoint manifest.
+/// Write the model as a bit-exact checkpoint manifest.
 fn write_checkpoint(
     dir: &Path,
     shared: &JobShared,
     step: usize,
-    cascade: &AcdcCascade,
+    model: &SellModel,
 ) -> Result<PathBuf, String> {
     std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
     let path = dir.join(format!("{}-job{}-step{}.ckpt", shared.model, shared.id, step));
-    SellModel::Acdc(cascade.clone()).to_checkpoint()?.save(&path)?;
+    model.to_checkpoint()?.save(&path)?;
     let mut ctl = shared.ctl.lock().unwrap();
     ctl.last_checkpoint = Some(path.clone());
     Ok(path)
@@ -777,9 +807,9 @@ fn promote(
     shared: &JobShared,
     registry: &ModelRegistry,
     step: usize,
-    cascade: &AcdcCascade,
+    model: &SellModel,
 ) -> Result<u64, String> {
-    let path = write_checkpoint(dir, shared, step, cascade)?;
+    let path = write_checkpoint(dir, shared, step, model)?;
     let version = registry
         .load_path(&shared.model, &path, None)
         .map_err(|e| format!("promote '{}': {e}", shared.model))?;
@@ -850,13 +880,8 @@ fn train_loop(
         spec.dataset_noise,
         spec.seed,
     );
-    let mut cascade = if spec.nonlinear {
-        AcdcCascade::nonlinear(spec.width, spec.depth, spec.init, &mut rng)
-    } else {
-        AcdcCascade::linear(spec.width, spec.depth, spec.init, &mut rng)
-    };
-    let sizes = vec![spec.width; 3 * spec.depth];
-    let mut momentum = Momentum::new(spec.momentum as f32, &sizes);
+    let mut model = build_trainable(&spec, &mut rng);
+    let mut momentum = Momentum::new(spec.momentum as f32, &model.param_sizes());
     let schedule = if spec.lr_decay_every == 0 || spec.lr_decay >= 1.0 {
         StepDecay::constant(spec.lr)
     } else {
@@ -877,7 +902,7 @@ fn train_loop(
                     // A failed promotion (e.g. the model name turned into
                     // an alias) must not kill hours of training: record
                     // it and keep stepping — the checkpoint is on disk.
-                    if let Err(e) = promote(ckpt_dir, shared, registry, step, &cascade) {
+                    if let Err(e) = promote(ckpt_dir, shared, registry, step, &model.snapshot()) {
                         shared.ctl.lock().unwrap().error = Some(e);
                     }
                 }
@@ -886,9 +911,10 @@ fn train_loop(
 
         let idx = cursor.next_indices();
         let (bx, by) = task.gather(&idx);
-        // The trainer hot path rides the pooled batched SoA engine —
-        // bit-identical to the serial engine (property-pinned).
-        let (pred, cache) = cascade.forward_train_pooled(&bx, pool);
+        // Family-generic hot path: ACDC rides the pooled batched SoA
+        // engine (bit-identical to the serial engine, property-pinned);
+        // the other families use their batched backward kernels.
+        let pred = model.forward_train(&bx, pool);
         let diff = pred.sub(&by);
         let loss = diff.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
             / spec.batch as f64;
@@ -897,9 +923,8 @@ fn train_loop(
         }
         let mut g = diff;
         g.scale(2.0 / spec.batch as f32);
-        let (_, mut grads) = cascade.backward(&cache, &g);
         let lr = schedule.lr_at(step) as f32;
-        apply_momentum_update(&mut cascade, &mut grads, &mut momentum, lr);
+        model.backward_step(&g, &mut momentum, lr);
 
         if first_loss.is_nan() {
             first_loss = loss;
@@ -917,7 +942,7 @@ fn train_loop(
         shared.m_lr.set(lr as f64);
 
         if spec.checkpoint_every > 0 && last_step % spec.checkpoint_every == 0 {
-            write_checkpoint(ckpt_dir, shared, last_step, &cascade)?;
+            write_checkpoint(ckpt_dir, shared, last_step, &model.snapshot())?;
         }
         if loss <= first_loss * spec.target_ratio {
             break;
@@ -941,9 +966,10 @@ fn train_loop(
     }
     // Final checkpoint always exists, so promote-after-completion works
     // even with checkpoint_every = 0.
-    write_checkpoint(ckpt_dir, shared, last_step, &cascade)?;
+    let snapshot = model.snapshot();
+    write_checkpoint(ckpt_dir, shared, last_step, &snapshot)?;
     if spec.promote_on_complete || promote_pending {
-        if let Err(e) = promote(ckpt_dir, shared, registry, last_step, &cascade) {
+        if let Err(e) = promote(ckpt_dir, shared, registry, last_step, &snapshot) {
             shared.ctl.lock().unwrap().error = Some(e);
         }
     }
@@ -1072,6 +1098,92 @@ mod tests {
         drop(handle);
         pool.shutdown();
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_family_converges_and_promotes_bit_exact() {
+        // The convergence pass/fail knobs are per family, not the ACDC
+        // recipe everywhere: fastfood wants a smaller learning rate with
+        // momentum, and a depth-1 circulant floors well above the target
+        // ratio (the rank-1 limit). FamilyTuning carries each family's
+        // mirror-validated preset; the assertions below are identical
+        // across kinds.
+        for kind in ModelKind::ALL {
+            let (pool, registry, dir) =
+                pool_with(&format!("family_{kind}"), TrainerConfig::default());
+            let spec = FamilyTuning::quick_spec(kind, pool.defaults());
+            let width = spec.width;
+            let id = pool.submit("fam", spec).unwrap();
+            let status = pool.join(id, Duration::from_secs(300)).expect("join");
+            assert_eq!(status.state, JobState::Completed, "{kind}: {:?}", status.error);
+            assert!(
+                status.loss <= status.first_loss * 0.2,
+                "{kind}: loss {} vs first {}",
+                status.loss,
+                status.first_loss
+            );
+            assert_eq!(
+                (status.promotions, status.promoted_version),
+                (1, Some(1)),
+                "{kind}"
+            );
+            let handle = registry.resolve("fam").unwrap();
+            assert_eq!(handle.width(), width, "{kind}");
+            // The promoted version serves bit-exactly what the on-disk
+            // manifest deserializes to, for every family's codec.
+            let path = PathBuf::from(status.last_checkpoint.unwrap());
+            let model =
+                SellModel::from_checkpoint(&crate::checkpoint::Checkpoint::load(&path).unwrap())
+                    .unwrap();
+            assert_eq!(model.kind(), kind.as_str());
+            let mut rng = Pcg32::seeded(11);
+            let x = rng.normal_vec(width, 0.0, 1.0);
+            let got = handle.infer(x.clone(), Duration::from_secs(10)).unwrap();
+            let want = model.forward(&Tensor::from_vec(&[1, width], x));
+            for (g, w) in got.iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{kind}: registry infer vs manifest");
+            }
+            drop(handle);
+            pool.shutdown();
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn family_spec_validation_round_trips_config_rules() {
+        let defaults = TrainerConfig::default();
+        let base = JobSpec::from_config(&defaults);
+        assert_eq!(base.model_kind, ModelKind::Acdc);
+        // Transform families require pow2 widths; lowrank is exempt but
+        // caps its rank at the width.
+        let ff = JobSpec {
+            model_kind: ModelKind::Fastfood,
+            width: 48,
+            ..base.clone()
+        };
+        assert!(ff.validate().is_err());
+        let lr_ok = JobSpec {
+            model_kind: ModelKind::LowRank,
+            width: 48,
+            rank: 12,
+            ..base.clone()
+        };
+        assert!(lr_ok.validate().is_ok());
+        assert_eq!(lr_ok.effective_rank(), 12);
+        let lr_bad = JobSpec {
+            model_kind: ModelKind::LowRank,
+            width: 32,
+            rank: 64,
+            ..base.clone()
+        };
+        assert!(lr_bad.validate().is_err());
+        // rank 0 resolves to width/2.
+        let auto = JobSpec {
+            width: 16,
+            rank: 0,
+            ..base
+        };
+        assert_eq!(auto.effective_rank(), 8);
     }
 
     #[test]

@@ -1,0 +1,398 @@
+//! The family-generic training surface: every SELL family behind one
+//! forward / backward / update interface ([`TrainableModel`]), so the
+//! pool's SGD loop, the checkpoint cadence and the promotion path are the
+//! exact same code for `acdc`, `fastfood`, `lowrank` and `circulant` jobs
+//! (DESIGN.md §6).
+//!
+//! Each wrapper owns its concrete layer plus the activation cache its
+//! backward pass needs; `backward_step` folds the gradient computation and
+//! the momentum-SGD update into one call so parameter banks and velocity
+//! buffers can never disagree on layout.
+
+use crate::registry::SellModel;
+use crate::sell::acdc::{AcdcCascade, CascadeCache};
+use crate::sell::circulant::DiagonalCirculantCascade;
+use crate::sell::fastfood::FastfoodLayer;
+use crate::sell::lowrank::LowRankLayer;
+use crate::sell::ModelKind;
+use crate::tensor::Tensor;
+use crate::trainer::sgd::Momentum;
+use crate::util::rng::Pcg32;
+use crate::util::threadpool::ThreadPool;
+
+use super::JobSpec;
+
+/// A SELL model the trainer pool can run minibatch SGD on.
+///
+/// The contract mirrors the ACDC training hot path: `forward_train`
+/// evaluates a batch and caches whatever the backward pass needs;
+/// `backward_step` consumes that cache, computes parameter gradients and
+/// applies one momentum-SGD update. `snapshot` produces the servable
+/// [`SellModel`] the checkpoint codec and the registry promote.
+pub trait TrainableModel: Send {
+    /// Which family this is.
+    fn kind(&self) -> ModelKind;
+    /// Input/output width N.
+    fn width(&self) -> usize;
+    /// Parameter-bank sizes, in the fixed order `backward_step` applies
+    /// updates — this is the [`Momentum::new`] buffer layout.
+    fn param_sizes(&self) -> Vec<usize>;
+    /// Forward a `[batch, N]` minibatch, caching activations for the
+    /// matching `backward_step` call.
+    fn forward_train(&mut self, x: &Tensor, pool: &ThreadPool) -> Tensor;
+    /// Backprop `gy` through the cached activations and apply one
+    /// momentum-SGD update at rate `lr`.
+    fn backward_step(&mut self, gy: &Tensor, momentum: &mut Momentum, lr: f32);
+    /// The current parameters as a servable / checkpointable model.
+    fn snapshot(&self) -> SellModel;
+}
+
+/// Build the trainable model a [`JobSpec`] asks for, drawing its init
+/// from `rng` (the job's seeded generator, after the dataset draw).
+pub fn build_trainable(spec: &JobSpec, rng: &mut Pcg32) -> Box<dyn TrainableModel> {
+    match spec.model_kind {
+        ModelKind::Acdc => {
+            let cascade = if spec.nonlinear {
+                AcdcCascade::nonlinear(spec.width, spec.depth, spec.init, rng)
+            } else {
+                AcdcCascade::linear(spec.width, spec.depth, spec.init, rng)
+            };
+            Box::new(TrainableAcdc {
+                cascade,
+                cache: None,
+            })
+        }
+        ModelKind::Fastfood => Box::new(TrainableFastfood {
+            layer: FastfoodLayer::random(spec.width, rng),
+            input: None,
+        }),
+        ModelKind::LowRank => Box::new(TrainableLowRank {
+            layer: LowRankLayer::random(spec.width, spec.effective_rank(), rng),
+            input: None,
+        }),
+        ModelKind::Circulant => Box::new(TrainableCirculant {
+            cascade: DiagonalCirculantCascade::init(spec.width, spec.depth, spec.init, rng),
+            acts: None,
+        }),
+    }
+}
+
+/// Mirror-validated per-family SGD knobs for the eq.-(15) regression task
+/// at small widths (the deterministic-test and bench presets). The
+/// families condition differently — the S·H·G·P·H·B chain concentrates
+/// curvature in the two diagonals around the dense Hadamard mixing, and a
+/// circulant cascade needs depth ≥ 2 to escape its rank-1 floor — so each
+/// family carries its own learning rate, momentum and step budget,
+/// cross-checked against the NumPy mirror of the training loop at
+/// multiple seeds with ≥ 3× margin on the target ratio.
+#[derive(Debug, Clone, Copy)]
+pub struct FamilyTuning {
+    /// Learning rate that converges without divergence at widths 8–64.
+    pub lr: f64,
+    /// Momentum coefficient β.
+    pub momentum: f64,
+    /// Step budget that reaches `target_ratio` with margin at fixed seeds.
+    pub steps: usize,
+    /// Pass/fail convergence ratio for deterministic tests.
+    pub target_ratio: f64,
+}
+
+impl FamilyTuning {
+    /// The validated preset for one family.
+    pub fn for_kind(kind: ModelKind) -> FamilyTuning {
+        match kind {
+            ModelKind::Acdc => FamilyTuning {
+                lr: 5e-3,
+                momentum: 0.0,
+                steps: 2_500,
+                target_ratio: 0.2,
+            },
+            // lr 5e-3 overflows within ~10³ steps at every tested seed;
+            // 1e-3 with heavy-ball momentum converges in a few 10³ steps.
+            ModelKind::Fastfood => FamilyTuning {
+                lr: 1e-3,
+                momentum: 0.9,
+                steps: 8_000,
+                target_ratio: 0.2,
+            },
+            ModelKind::LowRank => FamilyTuning {
+                lr: 5e-3,
+                momentum: 0.0,
+                steps: 2_500,
+                target_ratio: 0.2,
+            },
+            // Depth ≥ 2 is load-bearing: one fixed-sign block floors at a
+            // ~0.1–0.3 loss ratio on eq. (15) (rank-1 obstruction), while
+            // the K = 2 cascade trains through it.
+            ModelKind::Circulant => FamilyTuning {
+                lr: 2e-3,
+                momentum: 0.0,
+                steps: 4_000,
+                target_ratio: 0.2,
+            },
+        }
+    }
+
+    /// A [`JobSpec`] preset for deterministic family tests and benches:
+    /// the family's validated knobs over `defaults`, with the quick-test
+    /// dataset shape shared by every family.
+    pub fn quick_spec(kind: ModelKind, defaults: &crate::config::TrainerConfig) -> JobSpec {
+        let t = FamilyTuning::for_kind(kind);
+        JobSpec {
+            model_kind: kind,
+            width: 16,
+            depth: 2,
+            rank: 0,
+            steps: t.steps,
+            batch: 32,
+            dataset_rows: 256,
+            lr: t.lr,
+            momentum: t.momentum,
+            seed: 1,
+            checkpoint_every: 0,
+            target_ratio: t.target_ratio,
+            ..JobSpec::from_config(defaults)
+        }
+    }
+}
+
+/// ACDC wrapper: the pooled batched SoA engine plus
+/// [`super::apply_momentum_update`], exactly the pre-trait hot path.
+struct TrainableAcdc {
+    cascade: AcdcCascade,
+    cache: Option<CascadeCache>,
+}
+
+impl TrainableModel for TrainableAcdc {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Acdc
+    }
+
+    fn width(&self) -> usize {
+        self.cascade.n()
+    }
+
+    fn param_sizes(&self) -> Vec<usize> {
+        vec![self.cascade.n(); 3 * self.cascade.k()]
+    }
+
+    fn forward_train(&mut self, x: &Tensor, pool: &ThreadPool) -> Tensor {
+        let (pred, cache) = self.cascade.forward_train_pooled(x, pool);
+        self.cache = Some(cache);
+        pred
+    }
+
+    fn backward_step(&mut self, gy: &Tensor, momentum: &mut Momentum, lr: f32) {
+        let cache = self.cache.take().expect("backward_step before forward_train");
+        let (_, mut grads) = self.cascade.backward(&cache, gy);
+        super::apply_momentum_update(&mut self.cascade, &mut grads, momentum, lr);
+    }
+
+    fn snapshot(&self) -> SellModel {
+        SellModel::Acdc(self.cascade.clone())
+    }
+}
+
+/// Adaptive Fastfood wrapper: banks ordered (s, g, b).
+struct TrainableFastfood {
+    layer: FastfoodLayer,
+    input: Option<Tensor>,
+}
+
+impl TrainableModel for TrainableFastfood {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Fastfood
+    }
+
+    fn width(&self) -> usize {
+        crate::sell::LinearOp::width(&self.layer)
+    }
+
+    fn param_sizes(&self) -> Vec<usize> {
+        vec![self.width(); 3]
+    }
+
+    fn forward_train(&mut self, x: &Tensor, _pool: &ThreadPool) -> Tensor {
+        let pred = crate::sell::LinearOp::forward(&self.layer, x);
+        self.input = Some(x.clone());
+        pred
+    }
+
+    fn backward_step(&mut self, gy: &Tensor, momentum: &mut Momentum, lr: f32) {
+        let x = self.input.take().expect("backward_step before forward_train");
+        let (_, grads) = self.layer.backward(&x, gy);
+        let mut params: Vec<&mut [f32]> = vec![
+            self.layer.s.as_mut_slice(),
+            self.layer.g.as_mut_slice(),
+            self.layer.b.as_mut_slice(),
+        ];
+        let gs: Vec<&[f32]> = vec![&grads.s, &grads.g, &grads.b];
+        momentum.apply(&mut params, &gs, lr);
+    }
+
+    fn snapshot(&self) -> SellModel {
+        SellModel::Fastfood(self.layer.clone())
+    }
+}
+
+/// Low-rank wrapper: banks ordered (U, V), each flattened row-major.
+struct TrainableLowRank {
+    layer: LowRankLayer,
+    input: Option<Tensor>,
+}
+
+impl TrainableModel for TrainableLowRank {
+    fn kind(&self) -> ModelKind {
+        ModelKind::LowRank
+    }
+
+    fn width(&self) -> usize {
+        crate::sell::LinearOp::width(&self.layer)
+    }
+
+    fn param_sizes(&self) -> Vec<usize> {
+        vec![self.layer.u.numel(), self.layer.v.numel()]
+    }
+
+    fn forward_train(&mut self, x: &Tensor, _pool: &ThreadPool) -> Tensor {
+        let pred = crate::sell::LinearOp::forward(&self.layer, x);
+        self.input = Some(x.clone());
+        pred
+    }
+
+    fn backward_step(&mut self, gy: &Tensor, momentum: &mut Momentum, lr: f32) {
+        let x = self.input.take().expect("backward_step before forward_train");
+        let (_, grads) = self.layer.backward(&x, gy);
+        let mut params: Vec<&mut [f32]> = vec![
+            self.layer.u.data_mut(),
+            self.layer.v.data_mut(),
+        ];
+        let gs: Vec<&[f32]> = vec![grads.u.data(), grads.v.data()];
+        momentum.apply(&mut params, &gs, lr);
+    }
+
+    fn snapshot(&self) -> SellModel {
+        SellModel::LowRank(self.layer.clone())
+    }
+}
+
+/// Diagonal-circulant wrapper: banks ordered (r, d) per layer,
+/// first-to-last.
+struct TrainableCirculant {
+    cascade: DiagonalCirculantCascade,
+    acts: Option<Vec<Tensor>>,
+}
+
+impl TrainableModel for TrainableCirculant {
+    fn kind(&self) -> ModelKind {
+        ModelKind::Circulant
+    }
+
+    fn width(&self) -> usize {
+        self.cascade.n()
+    }
+
+    fn param_sizes(&self) -> Vec<usize> {
+        vec![self.cascade.n(); 2 * self.cascade.depth()]
+    }
+
+    fn forward_train(&mut self, x: &Tensor, _pool: &ThreadPool) -> Tensor {
+        let (pred, acts) = self.cascade.forward_train(x);
+        self.acts = Some(acts);
+        pred
+    }
+
+    fn backward_step(&mut self, gy: &Tensor, momentum: &mut Momentum, lr: f32) {
+        let acts = self.acts.take().expect("backward_step before forward_train");
+        let (_, grads) = self.cascade.backward(&acts, gy);
+        let mut params: Vec<&mut [f32]> = Vec::with_capacity(2 * self.cascade.depth());
+        for layer in self.cascade.layers.iter_mut() {
+            let (r, d) = (&mut layer.r, &mut layer.d);
+            params.push(r.as_mut_slice());
+            params.push(d.as_mut_slice());
+        }
+        let gs: Vec<&[f32]> = grads
+            .iter()
+            .flat_map(|g| [g.r.as_slice(), g.d.as_slice()])
+            .collect();
+        momentum.apply(&mut params, &gs, lr);
+    }
+
+    fn snapshot(&self) -> SellModel {
+        SellModel::Circulant(self.cascade.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainerConfig;
+
+    #[test]
+    fn build_trainable_covers_every_kind() {
+        let defaults = TrainerConfig::default();
+        for kind in ModelKind::ALL {
+            let spec = FamilyTuning::quick_spec(kind, &defaults);
+            let mut rng = Pcg32::seeded(spec.seed);
+            let model = build_trainable(&spec, &mut rng);
+            assert_eq!(model.kind(), kind);
+            assert_eq!(model.width(), spec.width);
+            let sizes = model.param_sizes();
+            assert!(!sizes.is_empty());
+            // The snapshot serves the same family and width.
+            let snap = model.snapshot();
+            assert_eq!(snap.kind(), kind.as_str());
+            assert_eq!(snap.width(), spec.width);
+            assert_eq!(snap.param_count(), sizes.iter().sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn forward_train_matches_snapshot_forward() {
+        let defaults = TrainerConfig::default();
+        let pool = crate::util::threadpool::global();
+        for kind in ModelKind::ALL {
+            let spec = FamilyTuning::quick_spec(kind, &defaults);
+            let mut rng = Pcg32::seeded(3);
+            let mut model = build_trainable(&spec, &mut rng);
+            let x = Tensor::from_vec(&[6, 16], rng.normal_vec(96, 0.0, 1.0));
+            let pred = model.forward_train(&x, pool);
+            let want = model.snapshot().forward(&x);
+            assert!(
+                pred.max_abs_diff(&want) < 1e-4,
+                "{kind}: train-path forward drifted from the serve path"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_step_moves_parameters_downhill() {
+        // One SGD step on gy = y must reduce ‖y‖² for every family (lr
+        // small enough that the quadratic term cannot dominate).
+        let defaults = TrainerConfig::default();
+        let pool = crate::util::threadpool::global();
+        for kind in ModelKind::ALL {
+            let spec = FamilyTuning::quick_spec(kind, &defaults);
+            let mut rng = Pcg32::seeded(5);
+            let mut model = build_trainable(&spec, &mut rng);
+            let mut momentum = Momentum::new(0.0, &model.param_sizes());
+            let x = Tensor::from_vec(&[8, 16], rng.normal_vec(128, 0.0, 1.0));
+            let before: f64 = model
+                .forward_train(&x, pool)
+                .data()
+                .iter()
+                .map(|&v| (v as f64).powi(2))
+                .sum();
+            let y = model.snapshot().forward(&x);
+            model.backward_step(&y.map(|v| 2.0 * v), &mut momentum, 1e-4);
+            let after: f64 = model
+                .snapshot()
+                .forward(&x)
+                .data()
+                .iter()
+                .map(|&v| (v as f64).powi(2))
+                .sum();
+            assert!(after < before, "{kind}: {after} !< {before}");
+        }
+    }
+}

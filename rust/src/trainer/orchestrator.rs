@@ -1,7 +1,7 @@
 //! Training orchestrators: drive the AOT train-step artifacts (and the
 //! native reference implementations) over the synthetic workloads.
 //!
-//! Two experiments:
+//! Three experiments:
 //! * **Figure 3** — `Fig3Trainer` fits an `ACDC_K` cascade (or the dense
 //!   baseline) to the eq. (15) regression, via the `fig3_step_k{K}` /
 //!   `fig3_dense_step` artifacts; `Fig3NativeTrainer` is the pure-rust
@@ -9,17 +9,23 @@
 //! * **Table 1 / E6** — `CnnTrainer` trains MiniCaffeNet (ACDC or dense
 //!   FC variant) on the synthimg corpus via the `cnn_*_train_step`
 //!   artifacts, with held-out evaluation through `cnn_*_eval`.
+//! * **Families grid** — `FamilyTrainer` runs any [`TrainableModel`]
+//!   family through the same minibatch-SGD loop, for the
+//!   `bench-families` params × MSE comparison.
 
 use crate::checkpoint::Checkpoint;
 use crate::data::regression::RegressionTask;
 use crate::data::synthimg::ImageCorpus;
 use crate::data::BatchCursor;
+use crate::registry::SellModel;
 use crate::runtime::values::HostValue;
 use crate::runtime::Engine;
 use crate::sell::acdc::AcdcCascade;
 use crate::sell::init::DiagInit;
 use crate::tensor::Tensor;
-use crate::trainer::sgd::{LossCurve, StepDecay};
+use crate::trainer::model::{build_trainable, TrainableModel};
+use crate::trainer::sgd::{LossCurve, Momentum, StepDecay};
+use crate::trainer::JobSpec;
 use crate::util::rng::Pcg32;
 
 // ---------------------------------------------------------------------------
@@ -171,6 +177,69 @@ impl Fig3NativeTrainer {
             }
         }
         curve
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Families grid: family-generic native training
+// ---------------------------------------------------------------------------
+
+/// Family-generic native trainer: any [`TrainableModel`] behind the same
+/// minibatch-SGD loop as [`Fig3NativeTrainer`]. Powers the
+/// `bench-families` params × MSE grid and cross-checks the trainer
+/// pool's loop outside the job machinery.
+pub struct FamilyTrainer {
+    model: Box<dyn TrainableModel>,
+    momentum: Momentum,
+}
+
+impl FamilyTrainer {
+    /// Fresh model per `spec` — the same construction path (and RNG
+    /// stream) as the pool's background jobs.
+    pub fn new(spec: &JobSpec) -> FamilyTrainer {
+        let mut rng = Pcg32::seeded(spec.seed);
+        let model = build_trainable(spec, &mut rng);
+        let momentum = Momentum::new(spec.momentum as f32, &model.param_sizes());
+        FamilyTrainer { model, momentum }
+    }
+
+    /// Run SGD for `steps` minibatch steps; returns the loss curve.
+    pub fn run(
+        &mut self,
+        task: &RegressionTask,
+        steps: usize,
+        batch: usize,
+        schedule: &StepDecay,
+    ) -> LossCurve {
+        let mut cursor = BatchCursor::new(task.rows(), batch);
+        let mut curve = LossCurve::new(&format!("native {}", self.model.kind()));
+        let pool = crate::util::threadpool::global();
+        for step in 0..steps {
+            let idx = cursor.next_indices();
+            let (bx, by) = task.gather(&idx);
+            let pred = self.model.forward_train(&bx, pool);
+            let diff = pred.sub(&by);
+            let loss = diff.data().iter().map(|v| (*v as f64).powi(2)).sum::<f64>()
+                / batch as f64;
+            let mut g = diff;
+            g.scale(2.0 / batch as f32);
+            self.model.backward_step(&g, &mut self.momentum, schedule.lr_at(step) as f32);
+            curve.push(step, loss);
+            if !loss.is_finite() {
+                break;
+            }
+        }
+        curve
+    }
+
+    /// The current parameters as a servable / checkpointable model.
+    pub fn snapshot(&self) -> SellModel {
+        self.model.snapshot()
+    }
+
+    /// Learnable parameter count (the Table-1 quantity).
+    pub fn param_count(&self) -> usize {
+        self.model.param_sizes().iter().sum()
     }
 }
 
@@ -449,6 +518,29 @@ mod tests {
         let curve = t.run(&task, 200, 128, &StepDecay::constant(5e-3));
         let ratio = curve.improvement_ratio().unwrap_or(1.0);
         assert!(ratio > 0.5, "standard init unexpectedly trained: {ratio}");
+    }
+
+    #[test]
+    fn family_trainer_converges_for_every_kind() {
+        use crate::config::TrainerConfig;
+        use crate::sell::ModelKind;
+        use crate::trainer::FamilyTuning;
+        let defaults = TrainerConfig::default();
+        for kind in ModelKind::ALL {
+            let spec = FamilyTuning::quick_spec(kind, &defaults);
+            let task = RegressionTask::generate(
+                spec.dataset_rows,
+                spec.width,
+                spec.dataset_noise,
+                spec.seed,
+            );
+            let mut t = FamilyTrainer::new(&spec);
+            assert!(t.param_count() > 0);
+            let curve = t.run(&task, spec.steps, spec.batch, &StepDecay::constant(spec.lr));
+            let ratio = curve.improvement_ratio().unwrap();
+            assert!(ratio < spec.target_ratio, "{kind}: ratio={ratio}");
+            assert_eq!(t.snapshot().kind(), kind.as_str());
+        }
     }
 
     #[test]

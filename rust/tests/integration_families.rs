@@ -1,0 +1,380 @@
+//! Integration: the SELL-family training matrix over HTTP.
+//!
+//! For every `model_kind` (`acdc`, `fastfood`, `lowrank`, `circulant`)
+//! the same acceptance path must hold: `POST /v1/models/{name}/train`
+//! with the family knob → loss drops ≥ 5× from init → auto-promote →
+//! the served model is *bit-exact* with the checkpoint manifest on disk
+//! under 4 keep-alive clients with zero failed requests — and reloading
+//! that manifest through `registry.load_path` serves identically.
+//! Low-rank trains at a non-pow2 width (12) to pin the relaxation of
+//! the transform families' power-of-two constraint end to end.
+//!
+//! A second test pins the typed-error matrix: unknown `model_kind`,
+//! non-pow2 widths for the transform families, and `rank > width` are
+//! all 400s, never panics.
+
+use acdc::checkpoint::Checkpoint;
+use acdc::config::{GatewayConfig, ServeConfig, TrainerConfig};
+use acdc::gateway::http;
+use acdc::gateway::Gateway;
+use acdc::metrics::Registry;
+use acdc::registry::{ModelRegistry, SellModel};
+use acdc::tensor::Tensor;
+use acdc::trainer::TrainerPool;
+use acdc::util::json::{obj, Json};
+use acdc::util::rng::Pcg32;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("acdc_it_families_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Single-bucket template: every request is its own bucket-1 batch, so
+/// the executor runs the exact same code path as a direct `[1, n]`
+/// forward — the precondition for bit-exact comparison.
+fn template() -> ServeConfig {
+    ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 100,
+        workers: 1,
+        queue_cap: 4_096,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn gateway_with_trainer(tag: &str) -> (Gateway, Arc<ModelRegistry>, PathBuf) {
+    let dir = temp_dir(tag);
+    let template = template();
+    let metrics = Arc::new(Registry::new());
+    let registry = Arc::new(ModelRegistry::new(template.clone(), Arc::clone(&metrics)));
+    let trainer_defaults = TrainerConfig {
+        checkpoint_dir: dir.display().to_string(),
+        ..TrainerConfig::default()
+    };
+    let trainer = Arc::new(TrainerPool::new(
+        Arc::clone(&registry),
+        metrics,
+        trainer_defaults,
+    ));
+    let gateway =
+        Gateway::start_registry_with_trainer(Arc::clone(&registry), trainer, template.gateway)
+            .unwrap();
+    (gateway, registry, dir)
+}
+
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        body,
+    )
+    .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+/// One family's training recipe: the mirror-validated SGD knobs from
+/// `FamilyTuning`, expressed as an HTTP train body.
+struct Family {
+    kind: &'static str,
+    width: usize,
+    depth: usize,
+    rank: usize,
+    steps: usize,
+    lr: f64,
+    momentum: f64,
+}
+
+const FAMILIES: [Family; 4] = [
+    Family { kind: "acdc", width: 16, depth: 2, rank: 0, steps: 2_500, lr: 5e-3, momentum: 0.0 },
+    Family { kind: "fastfood", width: 16, depth: 1, rank: 0, steps: 8_000, lr: 1e-3, momentum: 0.9 },
+    Family { kind: "lowrank", width: 12, depth: 1, rank: 6, steps: 2_500, lr: 5e-3, momentum: 0.0 },
+    Family { kind: "circulant", width: 16, depth: 2, rank: 0, steps: 4_000, lr: 2e-3, momentum: 0.0 },
+];
+
+impl Family {
+    fn train_body(&self) -> String {
+        obj(vec![
+            ("model_kind", Json::Str(self.kind.into())),
+            ("width", Json::Num(self.width as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+            ("rank", Json::Num(self.rank as f64)),
+            ("steps", Json::Num(self.steps as f64)),
+            ("batch", Json::Num(32.0)),
+            ("rows", Json::Num(512.0)),
+            ("lr", Json::Num(self.lr)),
+            ("momentum", Json::Num(self.momentum)),
+            ("seed", Json::Num(1.0)),
+            ("checkpoint_every", Json::Num(0.0)),
+            ("target_ratio", Json::Num(0.2)),
+            ("promote", Json::Str("auto".into())),
+        ])
+        .to_string()
+    }
+}
+
+struct JobView {
+    state: String,
+    loss: f64,
+    first_loss: f64,
+    promotions: i64,
+    promoted_version: Option<i64>,
+    last_checkpoint: Option<String>,
+}
+
+fn job_view(addr: SocketAddr, id: i64) -> JobView {
+    let resp = one_shot(addr, "GET", "/v1/jobs", b"");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = Json::parse(resp.body_str()).unwrap();
+    let jobs = v.get("jobs").unwrap().as_arr().unwrap();
+    let job = jobs
+        .iter()
+        .find(|j| j.get("id").and_then(|x| x.as_i64()) == Some(id))
+        .unwrap_or_else(|| panic!("job {id} not listed"));
+    JobView {
+        state: job.get("state").and_then(|x| x.as_str()).unwrap().to_string(),
+        loss: job.get("loss").and_then(|x| x.as_f64()).unwrap_or(f64::NAN),
+        first_loss: job
+            .get("first_loss")
+            .and_then(|x| x.as_f64())
+            .unwrap_or(f64::NAN),
+        promotions: job.get("promotions").and_then(|x| x.as_i64()).unwrap_or(0),
+        promoted_version: job.get("promoted_version").and_then(|x| x.as_i64()),
+        last_checkpoint: job
+            .get("last_checkpoint")
+            .and_then(|x| x.as_str())
+            .map(str::to_string),
+    }
+}
+
+/// POST one infer and return (status, output f32 bits). JSON numbers
+/// round-trip f64 exactly (shortest-representation formatting), and
+/// every f32 is exactly representable as f64, so `output[i] as f32`
+/// recovers the served f32 bit for bit.
+fn infer_bits(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    path: &str,
+    features: &[f32],
+) -> (u16, Vec<u32>) {
+    let body = obj(vec![(
+        "features",
+        Json::Arr(features.iter().map(|&f| Json::Num(f as f64)).collect()),
+    )])
+    .to_string();
+    http::write_request(
+        stream,
+        "POST",
+        path,
+        &[("content-type", "application/json")],
+        body.as_bytes(),
+    )
+    .expect("write");
+    let resp = http::read_response(reader).expect("response");
+    if resp.status != 200 {
+        return (resp.status, Vec::new());
+    }
+    let v = Json::parse(resp.body_str()).unwrap();
+    let bits = v
+        .get("output")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| (x.as_f64().unwrap() as f32).to_bits())
+        .collect();
+    (resp.status, bits)
+}
+
+#[test]
+fn http_train_matrix_every_family_promotes_and_serves_bit_exact() {
+    let (gateway, registry, dir) = gateway_with_trainer("matrix");
+    let addr = gateway.local_addr();
+
+    for fam in &FAMILIES {
+        let kind = fam.kind;
+        // Submit the family's job; the model name is the family name.
+        let resp = one_shot(
+            addr,
+            "POST",
+            &format!("/v1/models/{kind}/train"),
+            fam.train_body().as_bytes(),
+        );
+        assert_eq!(resp.status, 200, "{kind}: {}", resp.body_str());
+        let id = Json::parse(resp.body_str())
+            .unwrap()
+            .get("job")
+            .and_then(|x| x.as_i64())
+            .expect("job id");
+
+        // Train to completion; the ≥5× loss drop is the acceptance bar.
+        let deadline = Instant::now() + Duration::from_secs(300);
+        let done = loop {
+            let view = job_view(addr, id);
+            if view.state == "completed" {
+                break view;
+            }
+            assert_eq!(view.state, "running", "{kind}: unexpected state");
+            assert!(Instant::now() < deadline, "{kind}: training never completed");
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        assert!(
+            done.loss <= done.first_loss * 0.2,
+            "{kind}: loss {} did not drop 5x from {}",
+            done.loss,
+            done.first_loss
+        );
+        assert_eq!(done.promotions, 1, "{kind}: exactly one auto-promotion");
+        assert_eq!(done.promoted_version, Some(1), "{kind}: promoted v1");
+
+        // The promoted checkpoint manifest is the ground truth.
+        let path = PathBuf::from(done.last_checkpoint.expect("checkpoint path"));
+        let model = SellModel::from_checkpoint(&Checkpoint::load(&path).unwrap()).unwrap();
+        assert_eq!(model.kind(), kind, "manifest records the family");
+        assert_eq!(model.width(), fam.width);
+
+        // 4 keep-alive clients, each with a precomputed bit-exact
+        // expectation per request; zero failures allowed.
+        let n = fam.width;
+        let expected: Vec<Vec<(Vec<f32>, Vec<u32>)>> = (0..4)
+            .map(|c| {
+                let mut rng = Pcg32::seeded(500 + c as u64);
+                (0..25)
+                    .map(|_| {
+                        let x = rng.normal_vec(n, 0.0, 1.0);
+                        let want = model.forward(&Tensor::from_vec(&[1, n], x.clone()));
+                        let bits = want.data().iter().map(|w| w.to_bits()).collect();
+                        (x, bits)
+                    })
+                    .collect()
+            })
+            .collect();
+        let clients: Vec<_> = expected
+            .into_iter()
+            .map(|reqs| {
+                let path = format!("/v1/models/{kind}/infer");
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(addr).expect("connect");
+                    stream
+                        .set_read_timeout(Some(Duration::from_secs(60)))
+                        .unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut failures = 0usize;
+                    for (x, want) in &reqs {
+                        let (status, got) = infer_bits(&mut stream, &mut reader, &path, x);
+                        if status != 200 || got != *want {
+                            failures += 1;
+                        }
+                    }
+                    failures
+                })
+            })
+            .collect();
+        let failures: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(failures, 0, "{kind}: served output diverged from the manifest");
+
+        // Reload the same manifest under a second name: identical serving.
+        let reload = format!("{kind}_reload");
+        assert_eq!(registry.load_path(&reload, &path, None).unwrap(), 1);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut rng = Pcg32::seeded(900);
+        for _ in 0..5 {
+            let x = rng.normal_vec(n, 0.0, 1.0);
+            let want: Vec<u32> = model
+                .forward(&Tensor::from_vec(&[1, n], x.clone()))
+                .data()
+                .iter()
+                .map(|w| w.to_bits())
+                .collect();
+            let (status, got) =
+                infer_bits(&mut stream, &mut reader, &format!("/v1/models/{reload}/infer"), &x);
+            assert_eq!(status, 200, "{reload}");
+            assert_eq!(got, want, "{reload}: reloaded checkpoint serves differently");
+        }
+    }
+
+    gateway.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_spec_typed_error_matrix() {
+    let (gateway, _registry, dir) = gateway_with_trainer("errors");
+    let addr = gateway.local_addr();
+    let submit = |name: &str, pairs: Vec<(&str, Json)>| -> http::ClientResponse {
+        one_shot(
+            addr,
+            "POST",
+            &format!("/v1/models/{name}/train"),
+            obj(pairs).to_string().as_bytes(),
+        )
+    };
+
+    // Unknown family name is a 400 naming the knob, not a panic.
+    let resp = submit(
+        "bad_kind",
+        vec![("model_kind", Json::Str("dense".into())), ("width", Json::Num(16.0))],
+    );
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    assert!(resp.body_str().contains("model_kind"), "{}", resp.body_str());
+
+    // Transform families require power-of-two widths…
+    for kind in ["acdc", "fastfood", "circulant"] {
+        let resp = submit(
+            &format!("bad_{kind}"),
+            vec![
+                ("model_kind", Json::Str(kind.into())),
+                ("width", Json::Num(48.0)),
+            ],
+        );
+        assert_eq!(resp.status, 400, "{kind}: {}", resp.body_str());
+    }
+
+    // …low-rank does not, but rejects rank > width.
+    let resp = submit(
+        "bad_rank",
+        vec![
+            ("model_kind", Json::Str("lowrank".into())),
+            ("width", Json::Num(12.0)),
+            ("rank", Json::Num(24.0)),
+        ],
+    );
+    assert_eq!(resp.status, 400, "{}", resp.body_str());
+    let resp = submit(
+        "ok_lowrank",
+        vec![
+            ("model_kind", Json::Str("lowrank".into())),
+            ("width", Json::Num(12.0)),
+            ("rank", Json::Num(6.0)),
+            ("steps", Json::Num(10.0)),
+            ("batch", Json::Num(8.0)),
+            ("rows", Json::Num(32.0)),
+            ("momentum", Json::Num(0.0)),
+            ("promote", Json::Str("manual".into())),
+        ],
+    );
+    assert_eq!(resp.status, 200, "non-pow2 lowrank: {}", resp.body_str());
+
+    gateway.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

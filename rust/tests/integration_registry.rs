@@ -14,6 +14,7 @@ use acdc::gateway::Gateway;
 use acdc::metrics::Registry;
 use acdc::registry::{ModelRegistry, SellModel};
 use acdc::sell::acdc::{AcdcCascade, AcdcLayer};
+use acdc::sell::circulant::DiagonalCirculantCascade;
 use acdc::sell::fastfood::FastfoodLayer;
 use acdc::sell::init::DiagInit;
 use acdc::sell::lowrank::LowRankLayer;
@@ -60,6 +61,15 @@ fn checkpoint_load_infer_roundtrip_is_bit_exact_across_sell_types() {
         (
             "lowrank",
             SellModel::LowRank(LowRankLayer::random(12, 3, &mut rng)),
+        ),
+        (
+            "circulant",
+            SellModel::Circulant(DiagonalCirculantCascade::init(
+                16,
+                2,
+                DiagInit::CAFFENET,
+                &mut rng,
+            )),
         ),
     ];
     let dir = temp_dir("roundtrip");

@@ -1,20 +1,34 @@
-//! Property test: finite-difference gradient checks for
-//! `AcdcLayer::backward` (paper eqs. 10–14).
+//! Property test: finite-difference gradient checks for every SELL
+//! family's backward pass — `AcdcLayer` (paper eqs. 10–14),
+//! `FastfoodLayer` (S/G/B through the FWHT chain), `LowRankLayer` (U/V)
+//! and `DiagonalCirculantLayer` (r/d through the FFT).
 //!
-//! The backward pass has two implementations picked by batch size: the
-//! scalar per-row path below `MIN_SOA_ROWS` and the batched SoA path from
-//! `MIN_SOA_ROWS` up. This sweep drives both across several widths N and
-//! batch sizes that straddle the path boundary and are deliberately not
-//! multiples of the 8-lane panel (so padded tail lanes are exercised).
-//! N itself is constrained to powers of two by `DctPlan` (the paper's
-//! radix-2 FFT substrate); the sweep covers the even-N family end to end
-//! and pins that constraint in a test so a silent relaxation would fail
-//! loudly here.
+//! The ACDC and Fastfood backward passes have two implementations picked
+//! by batch size: the scalar per-row path below `MIN_SOA_ROWS` and the
+//! batched SoA path from `MIN_SOA_ROWS` up. The sweeps drive both across
+//! several widths N and batch sizes that straddle the path boundary and
+//! are deliberately not multiples of the 8-lane panel (so padded tail
+//! lanes are exercised). N itself is constrained to powers of two by
+//! `DctPlan` (the paper's radix-2 FFT substrate); the sweep covers the
+//! even-N family end to end and pins that constraint in a test so a
+//! silent relaxation would fail loudly here. Low-rank is plain matmul —
+//! its sweep includes a non-pow2 width to pin the exemption.
 
 use acdc::dct::{DctPlan, MIN_SOA_ROWS};
 use acdc::sell::acdc::AcdcLayer;
+use acdc::sell::circulant::DiagonalCirculantLayer;
+use acdc::sell::fastfood::FastfoodLayer;
+use acdc::sell::init::DiagInit;
+use acdc::sell::lowrank::LowRankLayer;
+use acdc::sell::LinearOp;
 use acdc::tensor::Tensor;
 use acdc::util::rng::Pcg32;
+
+/// Widths × batch shapes for the family sweeps: rows straddle the
+/// scalar/SoA boundary (MIN_SOA_ROWS = 4) and avoid multiples of the
+/// 8-lane panel, so 5, 9 and 12 leave partially-filled tail panels.
+const FAMILY_WIDTHS: [usize; 3] = [8, 16, 64];
+const FAMILY_ROWS: [usize; 5] = [1, 3, 5, 9, 12];
 
 /// Central finite difference of the scalar loss `L = 0.5·Σ y²` under a
 /// single-parameter perturbation.
@@ -82,6 +96,193 @@ fn backward_matches_finite_differences_on_both_paths() {
                 };
                 let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
                 fd_check(gx.get2(r, i), fd, &format!("n={n} rows={rows} x[{r},{i}]"));
+            }
+        }
+    }
+}
+
+/// `L = 0.5·Σ y²` through any family's serve-path forward.
+fn op_loss(op: &dyn LinearOp, x: &Tensor) -> f64 {
+    op.forward(x)
+        .data()
+        .iter()
+        .map(|v| 0.5 * (*v as f64).powi(2))
+        .sum()
+}
+
+#[test]
+fn fastfood_backward_matches_finite_differences_on_both_paths() {
+    let eps = 1e-3_f32;
+    for n in FAMILY_WIDTHS {
+        for rows in FAMILY_ROWS {
+            let mut rng = Pcg32::seeded(2000 + (n * 31 + rows) as u64);
+            let layer = FastfoodLayer::random(n, &mut rng);
+            let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+            // L = 0.5·||y||² ⇒ ∂L/∂y = y.
+            let y = layer.forward(&x);
+            let (gx, grads) = layer.backward(&x, &y);
+
+            for idx in [0usize, n / 2, n - 1] {
+                for (param, got) in [("s", grads.s[idx]), ("g", grads.g[idx]), ("b", grads.b[idx])]
+                {
+                    let perturb = |dir: f32| {
+                        let mut l = layer.clone();
+                        match param {
+                            "s" => l.s[idx] += dir * eps,
+                            "g" => l.g[idx] += dir * eps,
+                            _ => l.b[idx] += dir * eps,
+                        }
+                        op_loss(&l, &x)
+                    };
+                    let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
+                    fd_check(got, fd, &format!("fastfood n={n} rows={rows} {param}[{idx}]"));
+                }
+            }
+
+            for (r, i) in [(0usize, 0usize), (rows / 2, n / 2), (rows - 1, n - 1)] {
+                let perturb = |dir: f32| {
+                    let mut xp = x.clone();
+                    let v = xp.get2(r, i) + dir * eps;
+                    xp.set2(r, i, v);
+                    op_loss(&layer, &xp)
+                };
+                let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
+                fd_check(gx.get2(r, i), fd, &format!("fastfood n={n} rows={rows} x[{r},{i}]"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fastfood_backward_paths_agree_at_the_boundary() {
+    // Scalar per-row gradients (rows < MIN_SOA_ROWS) padded with one zero
+    // row must match the SoA panel path — the pad lanes of the panel
+    // buffers are zero-filled, so summed parameter gradients can't pick
+    // up garbage from uninitialized tail lanes.
+    let n = 16;
+    let mut rng = Pcg32::seeded(17);
+    let layer = FastfoodLayer::random(n, &mut rng);
+    let small = MIN_SOA_ROWS - 1;
+    let x_small = Tensor::from_vec(&[small, n], rng.normal_vec(small * n, 0.0, 1.0));
+    let g_small = Tensor::from_vec(&[small, n], rng.normal_vec(small * n, 0.0, 1.0));
+    let (gx_small, grads_small) = layer.backward(&x_small, &g_small);
+
+    let mut x_pad = x_small.data().to_vec();
+    x_pad.extend(vec![0.0; n]);
+    let mut g_pad = g_small.data().to_vec();
+    g_pad.extend(vec![0.0; n]);
+    let x_big = Tensor::from_vec(&[MIN_SOA_ROWS, n], x_pad);
+    let g_big = Tensor::from_vec(&[MIN_SOA_ROWS, n], g_pad);
+    let (gx_big, grads_big) = layer.backward(&x_big, &g_big);
+
+    for i in 0..n {
+        assert!((grads_small.s[i] - grads_big.s[i]).abs() < 1e-3, "s[{i}]");
+        assert!((grads_small.g[i] - grads_big.g[i]).abs() < 1e-3, "g[{i}]");
+        assert!((grads_small.b[i] - grads_big.b[i]).abs() < 1e-3, "b[{i}]");
+    }
+    for r in 0..small {
+        for i in 0..n {
+            assert!(
+                (gx_small.get2(r, i) - gx_big.get2(r, i)).abs() < 1e-4,
+                "gx[{r},{i}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn lowrank_backward_matches_finite_differences_including_non_pow2() {
+    // Width 12 rides along: low-rank is plain matmul and is exempt from
+    // the pow2 constraint the transform families carry.
+    let eps = 1e-3_f32;
+    for n in [8usize, 12, 16, 64] {
+        for rows in FAMILY_ROWS {
+            let rank = (n / 2).max(1);
+            let mut rng = Pcg32::seeded(3000 + (n * 31 + rows) as u64);
+            let layer = LowRankLayer::random(n, rank, &mut rng);
+            let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+            let y = layer.forward(&x);
+            let (gx, grads) = layer.backward(&x, &y);
+
+            for (i, j) in [(0usize, 0usize), (n / 2, rank / 2), (n - 1, rank - 1)] {
+                let fd_u = {
+                    let perturb = |dir: f32| {
+                        let mut l = layer.clone();
+                        let v = l.u.get2(i, j) + dir * eps;
+                        l.u.set2(i, j, v);
+                        op_loss(&l, &x)
+                    };
+                    (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64)
+                };
+                fd_check(grads.u.get2(i, j), fd_u, &format!("lowrank n={n} rows={rows} u[{i},{j}]"));
+                let fd_v = {
+                    let perturb = |dir: f32| {
+                        let mut l = layer.clone();
+                        let v = l.v.get2(j, i) + dir * eps;
+                        l.v.set2(j, i, v);
+                        op_loss(&l, &x)
+                    };
+                    (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64)
+                };
+                fd_check(grads.v.get2(j, i), fd_v, &format!("lowrank n={n} rows={rows} v[{j},{i}]"));
+            }
+
+            for (r, i) in [(0usize, 0usize), (rows / 2, n / 2), (rows - 1, n - 1)] {
+                let perturb = |dir: f32| {
+                    let mut xp = x.clone();
+                    let v = xp.get2(r, i) + dir * eps;
+                    xp.set2(r, i, v);
+                    op_loss(&layer, &xp)
+                };
+                let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
+                fd_check(gx.get2(r, i), fd, &format!("lowrank n={n} rows={rows} x[{r},{i}]"));
+            }
+        }
+    }
+}
+
+#[test]
+fn circulant_backward_matches_finite_differences() {
+    let eps = 1e-3_f32;
+    for n in FAMILY_WIDTHS {
+        for rows in FAMILY_ROWS {
+            let mut rng = Pcg32::seeded(4000 + (n * 31 + rows) as u64);
+            let layer = DiagonalCirculantLayer::init(
+                n,
+                DiagInit {
+                    mean: 1.0,
+                    sigma: 0.2,
+                },
+                &mut rng,
+            );
+            let x = Tensor::from_vec(&[rows, n], rng.normal_vec(rows * n, 0.0, 1.0));
+            let y = layer.forward(&x);
+            let (gx, grads) = layer.backward(&x, &y);
+
+            for idx in [0usize, n / 2, n - 1] {
+                for (param, got) in [("r", grads.r[idx]), ("d", grads.d[idx])] {
+                    let perturb = |dir: f32| {
+                        let mut l = layer.clone();
+                        match param {
+                            "r" => l.r[idx] += dir * eps,
+                            _ => l.d[idx] += dir * eps,
+                        }
+                        op_loss(&l, &x)
+                    };
+                    let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
+                    fd_check(got, fd, &format!("circulant n={n} rows={rows} {param}[{idx}]"));
+                }
+            }
+
+            for (r, i) in [(0usize, 0usize), (rows / 2, n / 2), (rows - 1, n - 1)] {
+                let perturb = |dir: f32| {
+                    let mut xp = x.clone();
+                    let v = xp.get2(r, i) + dir * eps;
+                    xp.set2(r, i, v);
+                    op_loss(&layer, &xp)
+                };
+                let fd = (perturb(1.0) - perturb(-1.0)) / (2.0 * eps as f64);
+                fd_check(gx.get2(r, i), fd, &format!("circulant n={n} rows={rows} x[{r},{i}]"));
             }
         }
     }
