@@ -135,6 +135,7 @@ fn main() {
         rows_mix: vec![1, 1, 1, 8],
         timeout: Duration::from_secs(30),
         seed: 7,
+        binary: false,
     })
     .expect("loadgen");
     println!("loopback closed-loop, native ACDC-12 (N=256), 8 workers, mix 3×1+1×8 rows:");

@@ -258,9 +258,53 @@ pub struct GatewayConfig {
     pub max_body_bytes: usize,
     /// Cap on feature rows in one `POST /v1/infer` batch request.
     pub max_rows_per_request: usize,
+    /// Gateway I/O architecture: `"reactor"` (epoll event loops),
+    /// `"threaded"` (thread-per-connection fallback), or `""`/`"auto"`
+    /// (the `ACDC_GW_MODE` environment variable, defaulting to the
+    /// reactor). See [`GatewayConfig::resolved_mode`].
+    pub mode: String,
+    /// Event-loop shard count in reactor mode (each shard owns an epoll
+    /// instance and its parked connections).
+    pub shards: usize,
+    /// Dispatch-pool worker count in reactor mode: the bound on requests
+    /// concurrently in the parse → infer → write pipeline.
+    pub dispatch_threads: usize,
+    /// Budget for a blocked response write before the connection is
+    /// evicted — a peer that stops reading cannot wedge a worker (reactor
+    /// mode polls `POLLOUT` against this; threaded mode sets it as the
+    /// socket write timeout).
+    pub write_stall_ms: u64,
     /// Tracing + logging knobs (`[trace]` section; carried here so every
     /// gateway constructor path sees them).
     pub trace: TraceConfig,
+}
+
+/// A resolved `gateway.mode` (see [`GatewayConfig::resolved_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GatewayMode {
+    /// Epoll reactor: one acceptor, N event-loop shards, a bounded
+    /// dispatch pool. The default.
+    Reactor,
+    /// Thread-per-connection fallback.
+    Threaded,
+}
+
+impl GatewayMode {
+    /// The config-file spelling of this mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            GatewayMode::Reactor => "reactor",
+            GatewayMode::Threaded => "threaded",
+        }
+    }
+
+    fn parse(s: &str) -> Option<GatewayMode> {
+        match s {
+            "reactor" => Some(GatewayMode::Reactor),
+            "threaded" => Some(GatewayMode::Threaded),
+            _ => None,
+        }
+    }
 }
 
 impl Default for GatewayConfig {
@@ -276,6 +320,10 @@ impl Default for GatewayConfig {
             retry_after_s: 1,
             max_body_bytes: 4 << 20,
             max_rows_per_request: 128,
+            mode: String::new(),
+            shards: 4,
+            dispatch_threads: 32,
+            write_stall_ms: 5_000,
             trace: TraceConfig::default(),
         }
     }
@@ -302,6 +350,11 @@ impl GatewayConfig {
             max_body_bytes: cfg.get_usize("gateway.max_body_bytes", d.max_body_bytes),
             max_rows_per_request: cfg
                 .get_usize("gateway.max_rows_per_request", d.max_rows_per_request),
+            mode: cfg.get_str("gateway.mode", &d.mode),
+            shards: cfg.get_usize("gateway.shards", d.shards),
+            dispatch_threads: cfg.get_usize("gateway.dispatch_threads", d.dispatch_threads),
+            write_stall_ms: cfg.get_usize("gateway.write_stall_ms", d.write_stall_ms as usize)
+                as u64,
             trace: TraceConfig::from_config(cfg)?,
         };
         gc.validate()?;
@@ -331,7 +384,36 @@ impl GatewayConfig {
         if self.max_rows_per_request == 0 {
             return Err("gateway.max_rows_per_request must be >= 1".into());
         }
+        let m = self.mode.trim();
+        if !m.is_empty() && m != "auto" && GatewayMode::parse(m).is_none() {
+            return Err("gateway.mode must be \"reactor\", \"threaded\" or \"auto\"".into());
+        }
+        if self.shards == 0 {
+            return Err("gateway.shards must be >= 1".into());
+        }
+        if self.dispatch_threads == 0 {
+            return Err("gateway.dispatch_threads must be >= 1".into());
+        }
+        if self.write_stall_ms == 0 {
+            return Err("gateway.write_stall_ms must be >= 1".into());
+        }
         self.trace.validate()
+    }
+
+    /// Resolve the `mode` knob to an architecture: an explicit config
+    /// value wins; `""`/`"auto"` defers to the `ACDC_GW_MODE` environment
+    /// variable (so CI lanes can pin a mode fleet-wide without touching
+    /// configs); anything else falls through to the reactor.
+    pub fn resolved_mode(&self) -> GatewayMode {
+        if let Some(m) = GatewayMode::parse(self.mode.trim()) {
+            return m;
+        }
+        if let Ok(env) = std::env::var("ACDC_GW_MODE") {
+            if let Some(m) = GatewayMode::parse(env.trim()) {
+                return m;
+            }
+        }
+        GatewayMode::Reactor
     }
 }
 
@@ -990,6 +1072,54 @@ log_level = "debug"
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+        for (mode, ok) in [
+            ("", true),
+            ("auto", true),
+            ("reactor", true),
+            ("threaded", true),
+            ("epoll", false),
+        ] {
+            let gc = GatewayConfig {
+                mode: mode.into(),
+                ..Default::default()
+            };
+            assert_eq!(gc.validate().is_ok(), ok, "mode {mode:?}");
+        }
+        for bad in [
+            GatewayConfig {
+                shards: 0,
+                ..Default::default()
+            },
+            GatewayConfig {
+                dispatch_threads: 0,
+                ..Default::default()
+            },
+            GatewayConfig {
+                write_stall_ms: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn gateway_mode_explicit_config_wins() {
+        // An explicit mode resolves regardless of the environment (CI
+        // lanes pin modes via ACDC_GW_MODE, so only the explicit paths
+        // are asserted here).
+        let gc = GatewayConfig {
+            mode: "threaded".into(),
+            ..Default::default()
+        };
+        assert_eq!(gc.resolved_mode(), GatewayMode::Threaded);
+        let gc = GatewayConfig {
+            mode: " reactor ".into(),
+            ..Default::default()
+        };
+        assert_eq!(gc.resolved_mode(), GatewayMode::Reactor);
+        assert_eq!(GatewayMode::Reactor.name(), "reactor");
+        assert_eq!(GatewayMode::Threaded.name(), "threaded");
     }
 
     #[test]

@@ -90,6 +90,7 @@ pub fn gateway_loopback(spec: &LoopbackSpec) -> Result<LoadReport, String> {
         rows_mix: spec.rows_mix.clone(),
         timeout: Duration::from_secs(30),
         seed: 7,
+        binary: false,
     })?;
     gateway.shutdown();
     Ok(report)

@@ -74,16 +74,27 @@ impl Request {
         self.path.split('?').next().unwrap_or("")
     }
 
-    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
-    /// HTTP/1.0 requires an explicit `Connection: keep-alive`.
+    /// HTTP/1.1 defaults to keep-alive unless `Connection` carries a
+    /// `close` token; HTTP/1.0 requires an explicit `keep-alive` token.
     pub fn wants_keep_alive(&self) -> bool {
         let conn = self.header("connection").unwrap_or("");
         if self.version == "HTTP/1.0" {
-            conn.eq_ignore_ascii_case("keep-alive")
+            connection_has_token(conn, "keep-alive")
         } else {
-            !conn.eq_ignore_ascii_case("close")
+            !connection_has_token(conn, "close")
         }
     }
+}
+
+/// Whether a `Connection` header value carries `token` — the value is a
+/// comma-separated token list (RFC 9110 §7.6.1), so `close, x-foo` must
+/// count as close. Comparing the whole value against a single token (the
+/// old behaviour) silently turned legal token lists into keep-alives and
+/// left the peer waiting for an EOF that never came.
+fn connection_has_token(value: &str, token: &str) -> bool {
+    value
+        .split(',')
+        .any(|t| t.trim().eq_ignore_ascii_case(token))
 }
 
 /// What one read attempt produced.
@@ -227,12 +238,143 @@ fn find_header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a st
         .map(|(_, v)| v.as_str())
 }
 
+/// The message's `Content-Length`, rejecting duplicates outright. Two
+/// `Content-Length` headers (even with equal values) are the classic
+/// request-smuggling/desync vector — a front-end and back-end that pick
+/// different ones disagree on where this message ends — so both the
+/// server and client parsers refuse the message instead of guessing.
 fn content_length(headers: &[(String, String)]) -> Result<usize, HttpError> {
-    match find_header(headers, "content-length") {
+    let mut found: Option<&str> = None;
+    for (k, v) in headers {
+        if k.eq_ignore_ascii_case("content-length") {
+            if found.is_some() {
+                return Err(HttpError::Malformed(
+                    "duplicate content-length header".into(),
+                ));
+            }
+            found = Some(v.as_str());
+        }
+    }
+    match found {
         None => Ok(0),
         Some(v) => v
             .parse::<usize>()
             .map_err(|_| HttpError::Malformed(format!("bad content-length '{v}'"))),
+    }
+}
+
+/// Result of a non-destructive scan for one complete request frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameScan {
+    /// The header section is still incomplete; more bytes are needed.
+    Partial,
+    /// The header section is complete and well-framed, but the body is
+    /// not fully buffered yet: the frame is complete at exactly this
+    /// many total bytes. Callers can cache the figure and compare
+    /// against it on later reads instead of rescanning the header.
+    NeedBody(usize),
+    /// A parse attempt is guaranteed to terminate: either a complete
+    /// head + body is buffered, or the buffered prefix already commits
+    /// the parser to a deterministic error (oversize line, duplicate or
+    /// malformed framing headers, over-cap body).
+    Ready,
+}
+
+/// Decide whether `buf` holds enough of one request for
+/// [`read_request_reusing`] to parse without blocking on more input —
+/// the reactor shards call this on every read so a connection is only
+/// handed to a dispatch worker once the parse cannot stall. The scanner
+/// is deliberately *not* a validator: on any framing anomaly it reports
+/// [`FrameScan::Ready`] and lets the authoritative parser produce the
+/// error and status, so framing verdicts stay single-sourced.
+pub fn scan_request_frame(buf: &[u8], max_body: usize) -> FrameScan {
+    // A blank first line can never become a request; the parser answers
+    // 400 from exactly these bytes.
+    if buf.starts_with(b"\n") || buf.starts_with(b"\r\n") {
+        return FrameScan::Ready;
+    }
+    let mut line_start = 0usize;
+    let mut first_line = true;
+    let mut header_total = 0usize;
+    let mut head_end = None;
+    let mut i = 0usize;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            let line_len = i + 1 - line_start;
+            if line_len > MAX_LINE_BYTES + 2 {
+                return FrameScan::Ready; // parser: "line too long"
+            }
+            let line = &buf[line_start..i];
+            let content = match line.last() {
+                Some(b'\r') => &line[..line.len() - 1],
+                _ => line,
+            };
+            if !first_line {
+                if content.is_empty() {
+                    head_end = Some(i + 1);
+                    break;
+                }
+                header_total += line_len;
+                if header_total > MAX_HEADER_BYTES {
+                    return FrameScan::Ready; // parser: "header section too large"
+                }
+            }
+            first_line = false;
+            line_start = i + 1;
+        }
+        i += 1;
+    }
+    let Some(head_end) = head_end else {
+        // No header terminator yet. An over-cap trailing partial line
+        // already commits the parser to "line too long".
+        if buf.len() - line_start > MAX_LINE_BYTES + 2 {
+            return FrameScan::Ready;
+        }
+        return FrameScan::Partial;
+    };
+    // Body framing: find the (single) content-length. Any anomaly —
+    // duplicate, unparsable, non-UTF-8 name, colonless line, chunked
+    // transfer — is Ready: the parser owns the verdict.
+    let mut content_len = 0usize;
+    let mut seen_cl = false;
+    for line in buf[..head_end].split(|&c| c == b'\n').skip(1) {
+        let line = match line.last() {
+            Some(b'\r') => &line[..line.len() - 1],
+            _ => line,
+        };
+        if line.is_empty() {
+            continue;
+        }
+        let Some(colon) = line.iter().position(|&c| c == b':') else {
+            return FrameScan::Ready; // parser: "bad header line"
+        };
+        let Ok(name) = std::str::from_utf8(&line[..colon]) else {
+            return FrameScan::Ready; // parser: invalid UTF-8
+        };
+        let name = name.trim();
+        if name.eq_ignore_ascii_case("transfer-encoding") {
+            return FrameScan::Ready; // parser: unsupported
+        }
+        if name.eq_ignore_ascii_case("content-length") {
+            if seen_cl {
+                return FrameScan::Ready; // parser: duplicate content-length
+            }
+            seen_cl = true;
+            let value = std::str::from_utf8(&line[colon + 1..]).unwrap_or("x");
+            match value.trim().parse::<usize>() {
+                Ok(n) => content_len = n,
+                Err(_) => return FrameScan::Ready, // parser: bad content-length
+            }
+        }
+    }
+    if content_len > max_body {
+        return FrameScan::Ready; // parser: 413
+    }
+    let total = head_end + content_len;
+    if buf.len() >= total {
+        FrameScan::Ready
+    } else {
+        FrameScan::NeedBody(total)
     }
 }
 
@@ -303,14 +445,14 @@ impl RequestScratch {
         self.path.split('?').next().unwrap_or("")
     }
 
-    /// HTTP/1.1 defaults to keep-alive unless `Connection: close`;
-    /// HTTP/1.0 requires an explicit `Connection: keep-alive`.
+    /// HTTP/1.1 defaults to keep-alive unless `Connection` carries a
+    /// `close` token; HTTP/1.0 requires an explicit `keep-alive` token.
     pub fn wants_keep_alive(&self) -> bool {
         let conn = self.header("connection").unwrap_or("");
         if self.version == "HTTP/1.0" {
-            conn.eq_ignore_ascii_case("keep-alive")
+            connection_has_token(conn, "keep-alive")
         } else {
-            !conn.eq_ignore_ascii_case("close")
+            !connection_has_token(conn, "close")
         }
     }
 }
@@ -580,12 +722,10 @@ impl ClientResponse {
         std::str::from_utf8(&self.body).unwrap_or("")
     }
 
-    /// Whether the server will keep the connection open.
+    /// Whether the server will keep the connection open (`Connection` is
+    /// a token list: `close, x-foo` counts as close).
     pub fn keep_alive(&self) -> bool {
-        !self
-            .header("connection")
-            .unwrap_or("keep-alive")
-            .eq_ignore_ascii_case("close")
+        !connection_has_token(self.header("connection").unwrap_or(""), "close")
     }
 }
 
@@ -679,6 +819,112 @@ mod tests {
         assert!(!req.wants_keep_alive(), "1.0 defaults to close");
         let req = must_request("GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n");
         assert!(req.wants_keep_alive());
+    }
+
+    #[test]
+    fn connection_token_list_close_disables_keep_alive() {
+        // `Connection` is a comma-separated token list: `close, x-foo` is
+        // a close, and a token that merely *contains* "close" is not.
+        let req = must_request("GET / HTTP/1.1\r\nconnection: close, x-foo\r\n\r\n");
+        assert!(!req.wants_keep_alive());
+        let req = must_request("GET / HTTP/1.1\r\nconnection: x-foo , CLOSE\r\n\r\n");
+        assert!(!req.wants_keep_alive());
+        let req = must_request("GET / HTTP/1.1\r\nconnection: not-close\r\n\r\n");
+        assert!(req.wants_keep_alive());
+        let req = must_request("GET / HTTP/1.0\r\nconnection: keep-alive, upgrade\r\n\r\n");
+        assert!(req.wants_keep_alive());
+        // Scratch parser shares the token-list fix.
+        let mut c = Cursor::new(b"GET / HTTP/1.1\r\nconnection: close, x-foo\r\n\r\n".to_vec());
+        let mut s = RequestScratch::new();
+        assert_eq!(
+            read_request_reusing(&mut c, 1 << 20, &mut s).unwrap(),
+            ScratchOutcome::Request
+        );
+        assert!(!s.wants_keep_alive());
+    }
+
+    #[test]
+    fn duplicate_content_length_is_rejected() {
+        // Request smuggling guard: two Content-Length headers (even with
+        // equal values) must be refused, not first-match-wins.
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\ncontent-length: 4\r\ncontent-length: 4\r\n\r\nabcd"),
+            Err(HttpError::Malformed(m)) if m.contains("duplicate content-length")
+        ));
+        assert!(matches!(
+            parse("POST / HTTP/1.1\r\ncontent-length: 4\r\nContent-Length: 9\r\n\r\nabcd"),
+            Err(HttpError::Malformed(m)) if m.contains("duplicate content-length")
+        ));
+        // The client-side response parser enforces the same rule.
+        let wire = b"HTTP/1.1 200 OK\r\ncontent-length: 2\r\ncontent-length: 2\r\n\r\nhi".to_vec();
+        let mut c = Cursor::new(wire);
+        assert!(matches!(
+            read_response(&mut c),
+            Err(HttpError::Malformed(m)) if m.contains("duplicate content-length")
+        ));
+    }
+
+    #[test]
+    fn frame_scan_tracks_the_parser() {
+        let full = b"POST / HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd";
+        let head_end = full.len() - 4;
+        assert_eq!(scan_request_frame(full, 1 << 20), FrameScan::Ready);
+        // Every strict prefix is not-yet-Ready: Partial while the head
+        // is incomplete, NeedBody(total) once it is.
+        for cut in 1..full.len() {
+            let want = if cut < head_end {
+                FrameScan::Partial
+            } else {
+                FrameScan::NeedBody(full.len())
+            };
+            assert_eq!(scan_request_frame(&full[..cut], 1 << 20), want, "cut at {cut}");
+        }
+        // No body: ready at the blank line, partial before it.
+        assert_eq!(
+            scan_request_frame(b"GET / HTTP/1.1\r\n\r\n", 1 << 20),
+            FrameScan::Ready
+        );
+        assert_eq!(
+            scan_request_frame(b"GET / HTTP/1.1\r\n", 1 << 20),
+            FrameScan::Partial
+        );
+        // Bare-LF framing counts too.
+        assert_eq!(
+            scan_request_frame(b"GET / HTTP/1.1\nhost: x\n\n", 1 << 20),
+            FrameScan::Ready
+        );
+        // Anomalies are Ready — the parser owns the verdict: duplicate
+        // content-length, bad value, chunked, over-cap body, blank first
+        // line, colonless header.
+        for anomaly in [
+            &b"POST / HTTP/1.1\r\ncontent-length: 4\r\ncontent-length: 4\r\n\r\n"[..],
+            b"POST / HTTP/1.1\r\ncontent-length: nope\r\n\r\n",
+            b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+            b"\r\nGET / HTTP/1.1\r\n\r\n",
+            b"GET / HTTP/1.1\r\nnocolon\r\n\r\n",
+        ] {
+            assert_eq!(
+                scan_request_frame(anomaly, 1 << 20),
+                FrameScan::Ready,
+                "{}",
+                String::from_utf8_lossy(anomaly)
+            );
+        }
+        // Over-cap declared body is Ready without waiting for the bytes
+        // (the parser answers 413 from the head alone).
+        assert_eq!(
+            scan_request_frame(b"POST / HTTP/1.1\r\ncontent-length: 999\r\n\r\n", 10),
+            FrameScan::Ready
+        );
+        // A peer streaming a newline-free line is Ready once the parser
+        // is committed to "line too long".
+        let mut endless = b"GET /".to_vec();
+        endless.extend(std::iter::repeat(b'a').take(MAX_LINE_BYTES + 8));
+        assert_eq!(scan_request_frame(&endless, 1 << 20), FrameScan::Ready);
+        assert_eq!(
+            scan_request_frame(&endless[..MAX_LINE_BYTES], 1 << 20),
+            FrameScan::Partial
+        );
     }
 
     #[test]

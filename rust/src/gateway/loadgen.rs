@@ -14,12 +14,27 @@
 //! the report carries exact p50/p95/p99 latency over every successful
 //! request plus shed/error tallies and goodput, renderable as text or
 //! JSON.
+//!
+//! Latency is reported twice. The *raw* percentiles measure from the
+//! moment each request was actually written. Under open-loop pacing that
+//! systematically under-reports server trouble: a synchronous worker that
+//! is stuck waiting on a slow response cannot fire the arrivals it was
+//! scheduled to fire, so exactly the requests that would have seen the
+//! congestion are silently omitted (coordinated omission). The
+//! *corrected* percentiles therefore measure each request from its
+//! **intended** send time on the arrival schedule — generator stall
+//! counts against the server, and `corrected >= raw` always holds. In
+//! closed mode there is no schedule and the two sets coincide.
+//!
+//! With `binary: true` the generator speaks the gateway's length-prefixed
+//! [`wire`] frame (`Content-Type: application/x-acdc-f32`) instead of
+//! JSON, exercising the zero-parse fast path.
 
 use std::io::BufReader;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use super::http;
+use super::{http, wire};
 use crate::util::bench::percentile;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Pcg32;
@@ -57,6 +72,8 @@ pub struct LoadgenConfig {
     pub timeout: Duration,
     /// RNG seed for the feature payloads.
     pub seed: u64,
+    /// Send the binary [`wire`] frame instead of JSON bodies.
+    pub binary: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -70,6 +87,7 @@ impl Default for LoadgenConfig {
             rows_mix: vec![1],
             timeout: Duration::from_secs(5),
             seed: 0,
+            binary: false,
         }
     }
 }
@@ -120,6 +138,12 @@ pub struct LoadReport {
     pub mean_ms: f64,
     /// Worst latency, milliseconds.
     pub max_ms: f64,
+    /// Coordinated-omission-corrected median (from intended send time).
+    pub corrected_p50_ms: f64,
+    /// Coordinated-omission-corrected 95th percentile.
+    pub corrected_p95_ms: f64,
+    /// Coordinated-omission-corrected 99th percentile.
+    pub corrected_p99_ms: f64,
 }
 
 impl LoadReport {
@@ -158,6 +182,9 @@ impl LoadReport {
             ("p99_ms", Json::Num(self.p99_ms)),
             ("mean_ms", Json::Num(self.mean_ms)),
             ("max_ms", Json::Num(self.max_ms)),
+            ("corrected_p50_ms", Json::Num(self.corrected_p50_ms)),
+            ("corrected_p95_ms", Json::Num(self.corrected_p95_ms)),
+            ("corrected_p99_ms", Json::Num(self.corrected_p99_ms)),
         ])
     }
 
@@ -166,7 +193,8 @@ impl LoadReport {
         format!(
             "loadgen: sent {} | ok {} | shed {} | errors {} | rows {}\n\
              wall {:.2}s  throughput {:.0} req/s  goodput {:.0} req/s\n\
-             latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}\n",
+             latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}\n\
+             corrected ms (from intended send): p50 {:.2}  p95 {:.2}  p99 {:.2}\n",
             self.sent,
             self.ok,
             self.shed,
@@ -180,6 +208,9 @@ impl LoadReport {
             self.p99_ms,
             self.mean_ms,
             self.max_ms,
+            self.corrected_p50_ms,
+            self.corrected_p95_ms,
+            self.corrected_p99_ms,
         )
     }
 }
@@ -192,6 +223,16 @@ struct WorkerStats {
     errors: u64,
     rows_ok: u64,
     latencies_ms: Vec<f64>,
+    corrected_ms: Vec<f64>,
+}
+
+/// Coordinated-omission-corrected latency for one request: measured from
+/// the *intended* send time on the arrival schedule rather than the
+/// actual write, so generator stall (a worker wedged behind a slow
+/// response) counts against the server instead of vanishing. Clamps to
+/// zero if the schedule ran ahead of the clock.
+fn corrected_latency_ms(intended: Instant, completed: Instant) -> f64 {
+    completed.saturating_duration_since(intended).as_secs_f64() * 1e3
 }
 
 /// Drive the gateway; blocks for `cfg.duration` and returns the report.
@@ -216,10 +257,13 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         stats.errors += w.errors;
         stats.rows_ok += w.rows_ok;
         stats.latencies_ms.extend(w.latencies_ms);
+        stats.corrected_ms.extend(w.corrected_ms);
     }
     let wall_s = t0.elapsed().as_secs_f64();
     let mut lats = stats.latencies_ms;
     lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut corr = stats.corrected_ms;
+    corr.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = if lats.is_empty() {
         0.0
     } else {
@@ -228,6 +272,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
     // percentile() yields NaN on empty input, which would poison the JSON
     // report — an all-shed run reports zeros instead.
     let pct = |p: f64| if lats.is_empty() { 0.0 } else { percentile(&lats, p) };
+    let cpct = |p: f64| if corr.is_empty() { 0.0 } else { percentile(&corr, p) };
     Ok(LoadReport {
         sent: stats.sent,
         ok: stats.ok,
@@ -240,6 +285,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         p99_ms: pct(99.0),
         mean_ms: mean,
         max_ms: lats.last().copied().unwrap_or(0.0),
+        corrected_p50_ms: cpct(50.0),
+        corrected_p95_ms: cpct(95.0),
+        corrected_p99_ms: cpct(99.0),
     })
 }
 
@@ -261,23 +309,45 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
     };
     let mut conn: Option<(TcpStream, BufReader<TcpStream>)> = None;
     let mut mix_at = wi; // stagger the mix cycle across workers
-    // Reused payload buffer: the worker renders every request body into
-    // one retained String, so payload generation stops allocating once
-    // the largest mix entry has been seen.
+    // Reused payload buffers: every request body renders into one
+    // retained String (JSON) or f32/byte pair (binary), so payload
+    // generation stops allocating once the largest mix entry has been
+    // seen.
     let mut body = String::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut frame: Vec<u8> = Vec::new();
     while Instant::now() < deadline {
-        if let Some(iv) = interval {
+        // The *intended* send time of this arrival. Open loop: the
+        // scheduled fire instant, captured before the schedule advances —
+        // the anchor for coordinated-omission correction. Closed loop: no
+        // schedule exists, so the actual send time is the anchor and the
+        // corrected percentiles coincide with the raw ones.
+        let intended = if let Some(iv) = interval {
             let now = Instant::now();
             if now < next_fire {
                 std::thread::sleep(next_fire - now);
             }
+            let at = next_fire;
             // Schedule the next arrival independently of completion time
             // (back-to-back catch-up when the previous request overran).
             next_fire += iv;
-        }
+            Some(at)
+        } else {
+            None
+        };
         let rows = cfg.rows_mix[mix_at % cfg.rows_mix.len()];
         mix_at += 1;
-        render_body_into(&mut body, rows, cfg.width, &mut rng);
+        let (payload, content_type): (&[u8], &str) = if cfg.binary {
+            vals.clear();
+            for _ in 0..rows * cfg.width {
+                vals.push(rng.normal_with(0.0, 1.0) as f32);
+            }
+            wire::write_binary_request(&mut frame, cfg.width, &vals);
+            (&frame, wire::CONTENT_TYPE)
+        } else {
+            render_body_into(&mut body, rows, cfg.width, &mut rng);
+            (body.as_bytes(), "application/json")
+        };
         if conn.is_none() {
             conn = connect(&cfg.addr, cfg.timeout);
             if conn.is_none() {
@@ -294,8 +364,8 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
             stream,
             "POST",
             "/v1/infer",
-            &[("content-type", "application/json")],
-            body.as_bytes(),
+            &[("content-type", content_type)],
+            payload,
         );
         if wrote.is_err() {
             stats.errors += 1;
@@ -306,9 +376,14 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
             Ok(resp) => {
                 match resp.status {
                     200 => {
+                        let done = Instant::now();
                         stats.ok += 1;
                         stats.rows_ok += rows as u64;
-                        stats.latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                        stats
+                            .latencies_ms
+                            .push(done.duration_since(t).as_secs_f64() * 1e3);
+                        let anchor = intended.unwrap_or(t);
+                        stats.corrected_ms.push(corrected_latency_ms(anchor, done));
                     }
                     429 | 503 => stats.shed += 1,
                     _ => stats.errors += 1,
@@ -430,13 +505,52 @@ mod tests {
             p99_ms: 3.0,
             mean_ms: 1.2,
             max_ms: 4.0,
+            corrected_p50_ms: 1.5,
+            corrected_p95_ms: 9.0,
+            corrected_p99_ms: 42.0,
         };
         assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
         assert!((r.goodput_rps() - 40.0).abs() < 1e-9);
         let j = r.to_json();
         assert_eq!(j.get("shed").unwrap().as_f64(), Some(15.0));
         assert_eq!(j.get("p99_ms").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("corrected_p99_ms").unwrap().as_f64(), Some(42.0));
         assert!(r.render().contains("goodput 40"));
+        assert!(r.render().contains("corrected ms"));
+    }
+
+    #[test]
+    fn corrected_latency_counts_generator_stall() {
+        // A request that was *scheduled* 40ms before it was actually
+        // written, then served in 10ms: raw latency says 10ms, corrected
+        // says 50ms — the stall the generator coordinated away.
+        let intended = Instant::now();
+        let sent = intended + Duration::from_millis(40);
+        let done = sent + Duration::from_millis(10);
+        let raw = done.duration_since(sent).as_secs_f64() * 1e3;
+        let corrected = corrected_latency_ms(intended, done);
+        assert!(corrected >= raw, "corrected must dominate raw");
+        assert!((corrected - 50.0).abs() < 1.0);
+        // When the anchor IS the send time (closed loop), they coincide.
+        assert!((corrected_latency_ms(sent, done) - raw).abs() < 1e-9);
+        // A schedule that ran ahead of the clock clamps to zero rather
+        // than going negative.
+        assert_eq!(corrected_latency_ms(done, intended), 0.0);
+    }
+
+    #[test]
+    fn binary_bodies_match_the_wire_contract() {
+        let mut rng = Pcg32::seeded(7);
+        let mut vals: Vec<f32> = Vec::new();
+        for _ in 0..3 * 4 {
+            vals.push(rng.normal_with(0.0, 1.0) as f32);
+        }
+        let mut frame = Vec::new();
+        wire::write_binary_request(&mut frame, 4, &vals);
+        let mut parsed = Vec::new();
+        let rows = wire::parse_binary_request(&frame, 4, 64, &mut parsed).unwrap();
+        assert_eq!(rows, 3);
+        assert_eq!(parsed, vals);
     }
 
     #[test]

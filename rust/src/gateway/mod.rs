@@ -6,7 +6,10 @@
 //! it can absorb and shape real concurrent traffic:
 //!
 //! ```text
-//!   clients ──TCP──▶ accept loop ──▶ conn threads (HTTP/1.1 keep-alive)
+//!   clients ──TCP──▶ acceptor ──▶ epoll shards (10k+ keep-alive conns)
+//!                                        │ complete frame
+//!                                  dispatch pool (bounded workers;
+//!                                  threaded mode: one thread per conn)
 //!                                        │
 //!                                 admission control
 //!                            (drain → in-flight cap → token bucket)
@@ -21,10 +24,16 @@
 //! ```
 //!
 //! * [`http`] — dependency-free HTTP/1.1 framing (server + client side);
+//! * [`wire`] — the length-prefixed binary f32 inference frame
+//!   (`Content-Type: application/x-acdc-f32`), bit-identical to JSON;
 //! * [`admission`] — token bucket, in-flight cap, drain gate, shed
 //!   accounting;
-//! * [`server`] — [`Gateway`]: listener, routing, graceful drain;
-//! * [`loadgen`] — closed/open-loop traffic with a p50/p95/p99 report.
+//! * [`server`] — [`Gateway`]: routing, the shared request pipeline,
+//!   graceful drain, and the thread-per-connection fallback;
+//! * `reactor` — the dependency-free epoll event loop behind the default
+//!   `gateway.mode = "reactor"`;
+//! * [`loadgen`] — closed/open-loop traffic with raw and
+//!   coordinated-omission-corrected p50/p95/p99 reports.
 //!
 //! Every shed path is observable: `429`/`503` responses carry
 //! `Retry-After`, and `GET /metrics` exposes per-class shed counters next
@@ -33,6 +42,8 @@
 pub mod admission;
 pub mod http;
 pub mod loadgen;
+mod reactor;
 pub mod server;
+pub mod wire;
 
 pub use server::Gateway;

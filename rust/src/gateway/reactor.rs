@@ -1,0 +1,694 @@
+//! Dependency-free epoll reactor: the default gateway I/O architecture.
+//!
+//! One acceptor thread feeds accepted sockets to N event-loop shards.
+//! Each shard owns an epoll instance and parks its connections there —
+//! parked connections cost one fd and one arena, no thread, which is
+//! what lets an integration test hold 10k+ idle keep-alive connections.
+//! A shard accumulates inbound bytes per connection and asks
+//! [`http::scan_request_frame`] whether a parse attempt can terminate;
+//! only then does it hand the connection (a `Box` moved by pointer, no
+//! copy) to the bounded dispatch pool, which runs the same
+//! `serve_request` pipeline as the threaded fallback — parse → admission
+//! → infer → serialize → write — and then re-registers the connection
+//! with its shard for the next request.
+//!
+//! Per-connection state machine:
+//!
+//! ```text
+//!   accept ─▶ [shard: read header ─▶ read body] ─▶ dispatch pool
+//!                 ▲      (epoll-driven, non-blocking)     │
+//!                 │                                       ▼
+//!                 └──────── re-register ◀─── serve_request + write
+//! ```
+//!
+//! Everything here is `libc`-level via four `extern "C"` declarations
+//! (`epoll_create1`/`epoll_ctl`/`epoll_wait`, `eventfd`, `poll`) — no
+//! new crates. Responses are written by the dispatch worker through a
+//! poll-bounded non-blocking writer: a peer that stops reading trips the
+//! `gateway.write_stall_ms` deadline and is evicted instead of wedging a
+//! worker (the write-stall bug this PR fixes on both paths).
+//!
+//! Drain protocol (`Gateway::drop` → [`Reactor::shutdown`]): the stop
+//! flag is already set; shutdown marks the dispatch queue stopped, wakes
+//! every shard's eventfd and the pool condvar, then joins. Shards close
+//! parked and mid-frame connections and mark their inboxes closed (a
+//! worker returning a connection afterwards drops it instead); workers
+//! finish in-flight requests — bounded by the request and write-stall
+//! deadlines — writing `connection: close` responses. Every connection's
+//! `ConnSlot` releases its `ConnTracker` slot on drop, so the tracker
+//! reads zero when shutdown returns and the gateway's `wait_idle`
+//! barrier is immediate.
+//!
+//! The zero-allocation steady state survives the handoffs: connection
+//! state is boxed once at accept, the shard map and queues retain their
+//! capacity, frame scanning borrows the read buffer, and the dispatch
+//! queue is a mutex-guarded `VecDeque` (std's mpsc channel allocates per
+//! send; this does not). `tests/zero_alloc.rs` pins this on both wire
+//! formats.
+
+use std::collections::{HashMap, VecDeque};
+use std::fs::File;
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::http::{self, FrameScan, ScratchOutcome};
+use super::server::{self, ConnBufs, ConnSlot, Shared};
+
+/// Raw syscall surface. Numeric constants are the x86-64/aarch64 Linux
+/// ABI values (uapi `eventpoll.h`, `eventfd.h`, `poll.h`).
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    pub const EPOLL_CLOEXEC: c_int = 0x80000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EFD_CLOEXEC: c_int = 0x80000;
+    pub const EFD_NONBLOCK: c_int = 0x800;
+    pub const POLLOUT: i16 = 0x4;
+
+    /// Mirrors `struct epoll_event`. Packed on x86-64 (the kernel ABI is
+    /// 12 bytes there), naturally aligned elsewhere.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    /// Mirrors `struct pollfd`.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout_ms: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout_ms: c_int) -> c_int;
+    }
+}
+
+/// `epoll_event.data` sentinel for a shard's wake eventfd (fds are
+/// non-negative `i32`s, so this can never collide).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// Shard tick: epoll timeout bounding how fast parked connections notice
+/// a drain (mirrors the threaded path's `IDLE_POLL`).
+const TICK_MS: i32 = 50;
+
+/// A connection stuck mid-frame longer than this is closed by the stall
+/// sweep (mirrors the blocking parser's read-stall deadline).
+const STALL_DEADLINE: Duration = Duration::from_secs(10);
+
+/// How often a shard runs its stall sweep.
+const SWEEP_EVERY: Duration = Duration::from_secs(1);
+
+/// Read-buffer growth step; bounded by [`frame_cap`].
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Epoll events drained per `epoll_wait` call.
+const EVENT_BATCH: usize = 256;
+
+/// Upper bound on buffered bytes for one frame: the body cap plus the
+/// header-section cap plus request-line slack. At this size the scanner
+/// is guaranteed to report `Ready` (complete frame or committed parse
+/// error), so `pump_read` dispatching at the cap cannot spin.
+fn frame_cap(max_body: usize) -> usize {
+    max_body + http::MAX_HEADER_BYTES + 64 * 1024
+}
+
+/// One reactor-owned connection: the socket, its accumulated inbound
+/// bytes, and the same reusable per-request buffers a threaded
+/// connection owns. Boxed once at accept and moved (a pointer) between
+/// shard and dispatch pool thereafter.
+pub(super) struct Conn {
+    stream: TcpStream,
+    /// Accumulated inbound bytes not yet consumed by the parser.
+    rbuf: Vec<u8>,
+    /// Valid prefix of `rbuf`.
+    rlen: usize,
+    /// Total frame size once the header section is complete
+    /// ([`FrameScan::NeedBody`]); 0 = unknown. Saves rescanning the
+    /// header while a large body streams in.
+    need: usize,
+    /// Arrival time of the oldest unconsumed byte (stall-sweep clock).
+    partial_since: Option<Instant>,
+    /// Parse scratch, inference arena, response write buffers.
+    bufs: ConnBufs,
+    /// Index of the shard that owns this connection.
+    shard: usize,
+    /// Releases the `ConnTracker` slot when the connection drops.
+    _slot: ConnSlot,
+}
+
+/// What a shard should do with a connection after draining its socket.
+enum Pump {
+    /// Stay parked; wait for more bytes.
+    Park,
+    /// A parse attempt terminates: hand to the dispatch pool.
+    Dispatch,
+    /// Peer closed or errored: drop the connection.
+    Close,
+}
+
+/// Shard state shared between the shard thread, the acceptor and the
+/// dispatch workers.
+struct Shard {
+    /// The shard's epoll instance.
+    epfd: OwnedFd,
+    /// Eventfd the acceptor/workers write to interrupt `epoll_wait`
+    /// (`File` so std's `Read`/`Write` impls cover the fd I/O).
+    wake: File,
+    /// Connections queued for this shard to adopt (freshly accepted, or
+    /// returned by a dispatch worker after a response).
+    inbox: Mutex<Inbox>,
+}
+
+#[derive(Default)]
+struct Inbox {
+    queue: VecDeque<Box<Conn>>,
+    /// Set under the lock when the shard exits: a connection pushed
+    /// afterwards would never be adopted, so the pusher drops it.
+    closed: bool,
+}
+
+impl Shard {
+    fn new() -> io::Result<Shard> {
+        let ep = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if ep < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let epfd = unsafe { OwnedFd::from_raw_fd(ep) };
+        let efd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) };
+        if efd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        let wake = File::from(unsafe { OwnedFd::from_raw_fd(efd) });
+        let mut ev = sys::EpollEvent {
+            events: sys::EPOLLIN,
+            data: WAKE_TOKEN,
+        };
+        let rc = unsafe {
+            sys::epoll_ctl(
+                epfd.as_raw_fd(),
+                sys::EPOLL_CTL_ADD,
+                wake.as_raw_fd(),
+                &mut ev,
+            )
+        };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Shard {
+            epfd,
+            wake,
+            inbox: Mutex::new(Inbox::default()),
+        })
+    }
+
+    /// Interrupt this shard's `epoll_wait` (inbox push, drain).
+    fn wake(&self) {
+        let _ = (&self.wake).write_all(&1u64.to_le_bytes());
+    }
+
+    /// Reset the wake eventfd's counter after an interrupt.
+    fn drain_wake(&self) {
+        let mut buf = [0u8; 8];
+        let _ = (&self.wake).read(&mut buf);
+    }
+
+    /// Queue a connection for adoption unless the shard already exited;
+    /// returns whether it was accepted (a refused conn should be
+    /// dropped, releasing its tracker slot).
+    fn adopt(&self, conn: Box<Conn>) -> bool {
+        {
+            let mut inbox = self.inbox.lock().unwrap();
+            if inbox.closed {
+                return false;
+            }
+            inbox.queue.push_back(conn);
+        }
+        self.wake();
+        true
+    }
+}
+
+/// The bounded dispatch pool: workers pull complete-frame connections
+/// and run the shared request pipeline. A mutex + condvar around a
+/// `VecDeque` (not std mpsc, which allocates per send).
+struct DispatchPool {
+    q: Mutex<PoolQueue>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct PoolQueue {
+    queue: VecDeque<Box<Conn>>,
+    stop: bool,
+}
+
+impl DispatchPool {
+    fn submit(&self, conn: Box<Conn>) {
+        {
+            let mut q = self.q.lock().unwrap();
+            q.queue.push_back(conn);
+        }
+        self.cv.notify_one();
+    }
+}
+
+/// Running reactor handle: shard/worker/acceptor threads and their
+/// shared queues. Owned by the `Gateway`.
+pub(super) struct Reactor {
+    shards: Arc<Vec<Shard>>,
+    pool: Arc<DispatchPool>,
+    accept: JoinHandle<()>,
+    shard_threads: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Reactor {
+    /// Spawn the acceptor, `gateway.shards` event loops and
+    /// `gateway.dispatch_threads` workers over an already-bound
+    /// non-blocking listener.
+    pub(super) fn start(shared: Arc<Shared>, listener: TcpListener) -> Result<Reactor, String> {
+        let nshards = shared.cfg.shards.max(1);
+        let nworkers = shared.cfg.dispatch_threads.max(1);
+        let mut shards = Vec::with_capacity(nshards);
+        for i in 0..nshards {
+            shards.push(Shard::new().map_err(|e| format!("gateway shard {i}: {e}"))?);
+        }
+        let shards = Arc::new(shards);
+        let pool = Arc::new(DispatchPool {
+            q: Mutex::new(PoolQueue::default()),
+            cv: Condvar::new(),
+        });
+        let mut shard_threads = Vec::with_capacity(nshards);
+        for i in 0..nshards {
+            let (sh, sd, pl) = (Arc::clone(&shared), Arc::clone(&shards), Arc::clone(&pool));
+            let h = std::thread::Builder::new()
+                .name(format!("acdc-gw-shard-{i}"))
+                .spawn(move || shard_loop(sh, sd, i, pl))
+                .map_err(|e| format!("spawn gateway shard {i}: {e}"))?;
+            shard_threads.push(h);
+        }
+        let mut workers = Vec::with_capacity(nworkers);
+        for i in 0..nworkers {
+            let (sh, sd, pl) = (Arc::clone(&shared), Arc::clone(&shards), Arc::clone(&pool));
+            let h = std::thread::Builder::new()
+                .name(format!("acdc-gw-dispatch-{i}"))
+                .spawn(move || dispatch_loop(sh, sd, pl))
+                .map_err(|e| format!("spawn gateway dispatch {i}: {e}"))?;
+            workers.push(h);
+        }
+        let (sh, sd) = (Arc::clone(&shared), Arc::clone(&shards));
+        let accept = std::thread::Builder::new()
+            .name("acdc-gw-accept".into())
+            .spawn(move || accept_loop(listener, sh, sd))
+            .map_err(|e| format!("spawn accept loop: {e}"))?;
+        Ok(Reactor {
+            shards,
+            pool,
+            accept,
+            shard_threads,
+            workers,
+        })
+    }
+
+    /// Drain and join (see the module docs for the protocol). The
+    /// gateway has already set `Shared.stop`; every connection is closed
+    /// and every tracker slot released when this returns.
+    pub(super) fn shutdown(self) {
+        {
+            let mut q = self.pool.q.lock().unwrap();
+            q.stop = true;
+        }
+        self.pool.cv.notify_all();
+        for s in self.shards.iter() {
+            s.wake();
+        }
+        let _ = self.accept.join();
+        for h in self.shard_threads {
+            let _ = h.join();
+        }
+        for h in self.workers {
+            let _ = h.join();
+        }
+        // A connection submitted between a worker's last queue check and
+        // its shard closing would sit here unserved; drop any stragglers
+        // so their tracker slots release before the drain barrier.
+        self.pool.q.lock().unwrap().queue.clear();
+    }
+}
+
+/// Reactor-mode acceptor: cap-check against the `ConnTracker`, then
+/// round-robin the boxed connection to a shard.
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shards: Arc<Vec<Shard>>) {
+    let mut next = 0usize;
+    loop {
+        if shared.stop.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conns_total.inc();
+                if !shared.conns.try_enter(shared.cfg.max_open_conns as u64) {
+                    shared.conns_rejected.inc();
+                    server::reject_connection(stream, shared.cfg.retry_after_s);
+                    continue;
+                }
+                let slot = ConnSlot(Arc::clone(&shared));
+                if stream.set_nonblocking(true).is_err() {
+                    continue; // dropping `slot` releases the count
+                }
+                let _ = stream.set_nodelay(true);
+                let idx = next % shards.len();
+                next = next.wrapping_add(1);
+                let conn = Box::new(Conn {
+                    stream,
+                    rbuf: Vec::new(),
+                    rlen: 0,
+                    need: 0,
+                    partial_since: None,
+                    bufs: ConnBufs::new(),
+                    shard: idx,
+                    _slot: slot,
+                });
+                // `adopt` refusing it (shard already exited) drops the
+                // conn, releasing its tracker slot.
+                shards[idx].adopt(conn);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// One event-loop shard: park connections in epoll, accumulate bytes,
+/// dispatch complete frames, sweep stalled peers, close everything on
+/// drain.
+fn shard_loop(shared: Arc<Shared>, shards: Arc<Vec<Shard>>, idx: usize, pool: Arc<DispatchPool>) {
+    let me = &shards[idx];
+    let ep = me.epfd.as_raw_fd();
+    let max_body = shared.cfg.max_body_bytes;
+    let mut conns: HashMap<RawFd, Box<Conn>> = HashMap::new();
+    let zero = sys::EpollEvent { events: 0, data: 0 };
+    let mut events = vec![zero; EVENT_BATCH];
+    let mut sweep: Vec<RawFd> = Vec::new();
+    let mut last_sweep = Instant::now();
+    loop {
+        if shared.stop.load(Ordering::Acquire) || shared.admission.is_draining() {
+            break;
+        }
+        let n = unsafe { sys::epoll_wait(ep, events.as_mut_ptr(), events.len() as i32, TICK_MS) };
+        if n < 0 {
+            if io::Error::last_os_error().kind() == ErrorKind::Interrupted {
+                continue;
+            }
+            break; // unrecoverable epoll failure; drain cleans up below
+        }
+        for ev in &events[..n as usize] {
+            let data = ev.data;
+            if data == WAKE_TOKEN {
+                me.drain_wake();
+                continue;
+            }
+            let fd = data as RawFd;
+            // Level-triggered: a stale event for an fd the pool now owns
+            // cannot arrive — the fd is deleted from epoll before the
+            // conn moves.
+            let Some(conn) = conns.get_mut(&fd) else {
+                continue;
+            };
+            match pump_read(conn, max_body) {
+                Pump::Park => {}
+                Pump::Dispatch => {
+                    epoll_del(ep, fd);
+                    if let Some(conn) = conns.remove(&fd) {
+                        pool.submit(conn);
+                    }
+                }
+                Pump::Close => {
+                    epoll_del(ep, fd);
+                    conns.remove(&fd);
+                }
+            }
+        }
+        // Adopt inbox connections (accepted, or returned by a worker). A
+        // returned conn can already hold a complete pipelined frame — in
+        // that case it goes straight back to the pool.
+        loop {
+            let conn = { me.inbox.lock().unwrap().queue.pop_front() };
+            let Some(mut conn) = conn else { break };
+            match http::scan_request_frame(&conn.rbuf[..conn.rlen], max_body) {
+                FrameScan::Ready => pool.submit(conn),
+                scan => {
+                    if let FrameScan::NeedBody(total) = scan {
+                        conn.need = total;
+                    }
+                    register(ep, conn, &mut conns);
+                }
+            }
+        }
+        // Stall sweep: a peer stuck mid-frame past the deadline is
+        // closed (the non-blocking mirror of the parser's read-stall
+        // deadline on the threaded path).
+        let now = Instant::now();
+        if now.duration_since(last_sweep) >= SWEEP_EVERY {
+            last_sweep = now;
+            sweep.clear();
+            for (fd, conn) in conns.iter() {
+                if let Some(t0) = conn.partial_since {
+                    if now.duration_since(t0) >= STALL_DEADLINE {
+                        sweep.push(*fd);
+                    }
+                }
+            }
+            for fd in &sweep {
+                epoll_del(ep, *fd);
+                conns.remove(fd);
+            }
+        }
+    }
+    // Drain: close every parked connection (their ConnSlots release the
+    // tracker), then refuse future adoptions.
+    for (fd, _conn) in conns.drain() {
+        epoll_del(ep, fd);
+    }
+    let mut inbox = me.inbox.lock().unwrap();
+    inbox.closed = true;
+    inbox.queue.clear();
+}
+
+/// Register a connection with the shard's epoll instance.
+fn register(ep: RawFd, conn: Box<Conn>, conns: &mut HashMap<RawFd, Box<Conn>>) {
+    let fd = conn.stream.as_raw_fd();
+    let mut ev = sys::EpollEvent {
+        events: sys::EPOLLIN | sys::EPOLLRDHUP,
+        data: fd as u32 as u64,
+    };
+    let rc = unsafe { sys::epoll_ctl(ep, sys::EPOLL_CTL_ADD, fd, &mut ev) };
+    if rc < 0 {
+        return; // dropping the conn closes it and releases the slot
+    }
+    conns.insert(fd, conn);
+}
+
+fn epoll_del(ep: RawFd, fd: RawFd) {
+    let rc = unsafe { sys::epoll_ctl(ep, sys::EPOLL_CTL_DEL, fd, std::ptr::null_mut()) };
+    debug_assert!(rc == 0, "EPOLL_CTL_DEL on a registered fd cannot fail");
+}
+
+/// Drain the socket into the connection's read buffer until it would
+/// block, a frame completes, or the peer goes away.
+fn pump_read(conn: &mut Conn, max_body: usize) -> Pump {
+    loop {
+        if conn.rlen == conn.rbuf.len() {
+            let cap = frame_cap(max_body);
+            if conn.rbuf.len() >= cap {
+                // Over-cap frame: by construction the scanner reported
+                // Ready before this point; defensively dispatch so the
+                // parser can answer rather than spinning here.
+                return Pump::Dispatch;
+            }
+            let grown = (conn.rbuf.len() + READ_CHUNK).min(cap);
+            conn.rbuf.resize(grown, 0);
+        }
+        match conn.stream.read(&mut conn.rbuf[conn.rlen..]) {
+            Ok(0) => return Pump::Close,
+            Ok(n) => {
+                conn.rlen += n;
+                if conn.partial_since.is_none() {
+                    conn.partial_since = Some(Instant::now());
+                }
+                if conn.need != 0 {
+                    // Header already scanned; just wait out the body.
+                    if conn.rlen >= conn.need {
+                        return Pump::Dispatch;
+                    }
+                    continue;
+                }
+                match http::scan_request_frame(&conn.rbuf[..conn.rlen], max_body) {
+                    FrameScan::Ready => return Pump::Dispatch,
+                    FrameScan::NeedBody(total) => conn.need = total,
+                    FrameScan::Partial => {}
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Pump::Park,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return Pump::Close,
+        }
+    }
+}
+
+/// Dispatch worker: serve complete-frame connections through the shared
+/// request pipeline, then hand them back to their shard (or close).
+fn dispatch_loop(shared: Arc<Shared>, shards: Arc<Vec<Shard>>, pool: Arc<DispatchPool>) {
+    loop {
+        let conn = {
+            let mut q = pool.q.lock().unwrap();
+            loop {
+                if let Some(c) = q.queue.pop_front() {
+                    break Some(c);
+                }
+                if q.stop {
+                    break None;
+                }
+                q = pool.cv.wait(q).unwrap();
+            }
+        };
+        let Some(conn) = conn else { return };
+        serve_conn(&shared, conn, &shards);
+    }
+}
+
+/// Serve every complete frame buffered on `conn`, then park it back on
+/// its shard (keep-alive) or drop it (close). Consumes the connection.
+fn serve_conn(shared: &Arc<Shared>, mut conn: Box<Conn>, shards: &[Shard]) {
+    let stall = Duration::from_millis(shared.cfg.write_stall_ms);
+    let max_body = shared.cfg.max_body_bytes;
+    loop {
+        let outcome;
+        let consumed;
+        {
+            let Conn {
+                rbuf, rlen, bufs, ..
+            } = &mut *conn;
+            let mut slice: &[u8] = &rbuf[..*rlen];
+            let before = slice.len();
+            outcome = http::read_request_reusing(&mut slice, max_body, &mut bufs.req);
+            consumed = before - slice.len();
+        }
+        conn.rbuf.copy_within(consumed..conn.rlen, 0);
+        conn.rlen -= consumed;
+        conn.need = 0;
+        match outcome {
+            Ok(ScratchOutcome::Request) => {
+                let keep;
+                {
+                    let Conn { stream, bufs, .. } = &mut *conn;
+                    let mut w = StallWriter {
+                        stream,
+                        deadline: Instant::now() + stall,
+                    };
+                    keep = server::serve_request(shared, bufs, &mut w);
+                }
+                if !keep {
+                    return; // drop: closes the socket, releases the slot
+                }
+                // Serve pipelined frames already buffered; anything
+                // partial goes back to the shard.
+                let next = http::scan_request_frame(&conn.rbuf[..conn.rlen], max_body);
+                match next {
+                    FrameScan::Ready => continue,
+                    FrameScan::NeedBody(total) => {
+                        conn.need = total;
+                        break;
+                    }
+                    FrameScan::Partial => break,
+                }
+            }
+            Ok(_) => return, // Eof/Idle cannot follow a Ready scan; close
+            Err(e) => {
+                let Conn { stream, .. } = &mut *conn;
+                let mut w = StallWriter {
+                    stream,
+                    deadline: Instant::now() + stall,
+                };
+                server::respond_parse_error(shared, &e, &mut w);
+                return;
+            }
+        }
+    }
+    conn.partial_since = (conn.rlen > 0).then(Instant::now);
+    let shard = &shards[conn.shard];
+    // `adopt` refusing it (shard exited during drain) drops the conn.
+    shard.adopt(conn);
+}
+
+/// Bounded writer over a non-blocking socket: optimistic `write`, and on
+/// `WouldBlock` a `poll(POLLOUT)` wait against the connection's write
+/// deadline. A peer that stops reading gets evicted with `TimedOut`
+/// instead of wedging a dispatch worker — the reactor-side fix for the
+/// write-stall bug.
+struct StallWriter<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+}
+
+impl Write for StallWriter<'_> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        loop {
+            let mut sock = self.stream;
+            match sock.write(buf) {
+                Ok(n) => return Ok(n),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    let now = Instant::now();
+                    if now >= self.deadline {
+                        return Err(ErrorKind::TimedOut.into());
+                    }
+                    let wait = (self.deadline - now).as_millis().min(i32::MAX as u128) as i32;
+                    let mut pfd = sys::PollFd {
+                        fd: self.stream.as_raw_fd(),
+                        events: sys::POLLOUT,
+                        revents: 0,
+                    };
+                    let rc = unsafe { sys::poll(&mut pfd, 1, wait.max(1)) };
+                    if rc < 0 {
+                        let err = io::Error::last_os_error();
+                        if err.kind() != ErrorKind::Interrupted {
+                            return Err(err);
+                        }
+                    }
+                    // rc == 0 (poll timeout) re-checks the deadline above;
+                    // rc > 0 retries the write.
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(()) // unbuffered: every write goes straight to the socket
+    }
+}

@@ -1,15 +1,25 @@
 //! The network gateway: a TCP/HTTP front-end over the model registry.
 //!
-//! Thread-per-connection accept loop with keep-alive; every inference
-//! request passes admission control ([`super::admission`]) before
-//! resolving a [`ModelHandle`] and touching that model's coordinator.
-//! Endpoints:
+//! Two interchangeable I/O architectures serve one request pipeline
+//! (`gateway.mode`, default `reactor`): the epoll reactor
+//! (`super::reactor` — one acceptor, N event-loop shards, a bounded
+//! dispatch pool; built for tens of thousands of keep-alive
+//! connections) and the thread-per-connection fallback in this module.
+//! Both call `serve_request` for every parsed request, so routing,
+//! admission, tracing and wire semantics cannot drift between modes.
+//! Every inference request passes admission control
+//! ([`super::admission`]) before resolving a [`ModelHandle`] and
+//! touching that model's coordinator. Endpoints:
 //!
 //! * `POST /v1/models/{name}/infer` — JSON body `{"features": [f32; N]}`
 //!   for one row or `{"rows": [[f32; N], ...]}` for a batch against the
 //!   named model (or alias); replies with outputs, the serving model +
 //!   version, queue/execute timings and the batch buckets used. Sheds
 //!   map to 429/503 with `Retry-After`, coordinator timeouts to 504.
+//!   Sending `Content-Type: application/x-acdc-f32` switches request
+//!   *and* response bodies to the length-prefixed binary f32 frame
+//!   ([`super::wire`]) — bit-identical outputs, no float text on the
+//!   wire; errors stay JSON with identical validation wording.
 //! * `POST /v1/infer` — same wire format against the registry's default
 //!   model (the single-model legacy route).
 //! * `GET /v1/models` — registry listing: per-model version, kind,
@@ -54,9 +64,11 @@
 //! trusted network or behind a fronting proxy.
 //!
 //! Shutdown is a graceful drain: stop accepting, refuse new work at
-//! admission, let in-flight requests finish, then wait on a condvar that
-//! every connection thread signals on exit — the drain is event-driven
-//! (no sleep-polling), bounded by `drain_timeout_ms`.
+//! admission, let in-flight requests finish (the reactor additionally
+//! closes parked idle connections and joins its shard/dispatch
+//! threads), then wait on a condvar that every connection signals on
+//! exit — the drain is event-driven (no sleep-polling), bounded by
+//! `drain_timeout_ms`.
 
 use std::io::{BufReader, ErrorKind, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -68,7 +80,9 @@ use std::time::{Duration, Instant};
 
 use super::admission::{Admission, AdmitError};
 use super::http::{self, HttpError, RequestScratch, Response, ScratchOutcome};
-use crate::config::{GatewayConfig, TrainerConfig};
+use super::reactor::Reactor;
+use super::wire;
+use crate::config::{GatewayConfig, GatewayMode, TrainerConfig};
 use crate::coordinator::request::{ResponseSlot, RowRef};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
@@ -93,14 +107,17 @@ pub const LEGACY_MODEL: &str = "default";
 pub struct Gateway {
     shared: Arc<Shared>,
     addr: SocketAddr,
+    /// Threaded-mode acceptor thread (`None` in reactor mode).
     accept: Option<JoinHandle<()>>,
+    /// Reactor-mode event machinery (`None` in threaded mode).
+    reactor: Option<Reactor>,
 }
 
 /// Connection-count tracker: the accept-side cap, the exported
 /// `gateway.open_connections` gauge, and the event-driven drain barrier —
 /// one count, updated in one place. Connection threads signal `cv` on
 /// exit, so shutdown blocks on real events instead of sleep-polling.
-struct ConnTracker {
+pub(super) struct ConnTracker {
     count: Mutex<u64>,
     cv: Condvar,
     /// Prometheus mirror of `count`, kept in lockstep by enter/exit.
@@ -117,7 +134,7 @@ impl ConnTracker {
     }
 
     /// Claim a connection slot unless the cap is reached.
-    fn try_enter(&self, max: u64) -> bool {
+    pub(super) fn try_enter(&self, max: u64) -> bool {
         let mut c = self.count.lock().unwrap();
         if *c >= max {
             return false;
@@ -156,16 +173,16 @@ impl ConnTracker {
     }
 }
 
-struct Shared {
+pub(super) struct Shared {
     registry: Arc<ModelRegistry>,
     trainer: Arc<TrainerPool>,
-    cfg: GatewayConfig,
-    admission: Arc<Admission>,
+    pub(super) cfg: GatewayConfig,
+    pub(super) admission: Arc<Admission>,
     metrics: Arc<Registry>,
-    stop: AtomicBool,
-    conns: ConnTracker,
-    conns_total: Arc<Counter>,
-    conns_rejected: Arc<Counter>,
+    pub(super) stop: AtomicBool,
+    pub(super) conns: ConnTracker,
+    pub(super) conns_total: Arc<Counter>,
+    pub(super) conns_rejected: Arc<Counter>,
     requests: Arc<Counter>,
     responses_ok: Arc<Counter>,
     http_errors: Arc<Counter>,
@@ -263,6 +280,7 @@ impl Gateway {
             metrics,
             stop: AtomicBool::new(false),
         });
+        let mode = shared.cfg.resolved_mode();
         let addr_str = addr.to_string();
         log::event(
             Level::Info,
@@ -271,19 +289,30 @@ impl Gateway {
             0,
             &[
                 ("addr", Field::Str(&addr_str)),
+                ("mode", Field::Str(mode.name())),
                 ("slow_ms", Field::U64(shared.cfg.trace.slow_ms)),
                 ("ring_capacity", Field::U64(shared.cfg.trace.ring_capacity as u64)),
             ],
         );
-        let accept_shared = Arc::clone(&shared);
-        let accept = std::thread::Builder::new()
-            .name("acdc-gw-accept".into())
-            .spawn(move || accept_loop(listener, accept_shared))
-            .map_err(|e| format!("spawn accept loop: {e}"))?;
+        let (accept, reactor) = match mode {
+            GatewayMode::Reactor => {
+                let r = Reactor::start(Arc::clone(&shared), listener)?;
+                (None, Some(r))
+            }
+            GatewayMode::Threaded => {
+                let accept_shared = Arc::clone(&shared);
+                let h = std::thread::Builder::new()
+                    .name("acdc-gw-accept".into())
+                    .spawn(move || accept_loop(listener, accept_shared))
+                    .map_err(|e| format!("spawn accept loop: {e}"))?;
+                (Some(h), None)
+            }
+        };
         Ok(Gateway {
             shared,
             addr,
-            accept: Some(accept),
+            accept,
+            reactor,
         })
     }
 
@@ -331,6 +360,15 @@ impl Drop for Gateway {
         );
         if let Some(h) = self.accept.take() {
             let _ = h.join();
+        }
+        if let Some(r) = self.reactor.take() {
+            // The reactor owns its connections: shutdown wakes every
+            // shard and dispatch worker, closes parked idle connections,
+            // lets in-flight requests finish (bounded by the request and
+            // write-stall deadlines) and joins the threads — every
+            // tracker slot is released on return, so the wait below is
+            // immediate in reactor mode.
+            r.shutdown();
         }
         // Connection threads finish their in-flight request, write the
         // response and signal the tracker on exit (idle connections
@@ -385,7 +423,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 }
 
 /// Over the connection cap: answer 503 on the raw socket and close.
-fn reject_connection(mut stream: TcpStream, retry_after_s: u64) {
+pub(super) fn reject_connection(mut stream: TcpStream, retry_after_s: u64) {
     let _ = stream.set_nonblocking(false);
     let resp = Response::json(503, &err_json("too many connections"))
         .with_header("retry-after", &retry_after_s.to_string());
@@ -395,7 +433,7 @@ fn reject_connection(mut stream: TcpStream, retry_after_s: u64) {
 /// Releases the connection slot even if the connection thread unwinds (a
 /// leaked slot would wedge admission — and the drain barrier — behind
 /// `max_open_conns`).
-struct ConnSlot(Arc<Shared>);
+pub(super) struct ConnSlot(pub(super) Arc<Shared>);
 
 impl Drop for ConnSlot {
     fn drop(&mut self) {
@@ -407,15 +445,17 @@ impl Drop for ConnSlot {
 /// arena, and the response head/body write buffers. Everything grows to
 /// the connection's request shape once and is then reused — the basis of
 /// the zero-allocation steady state (pinned by `tests/zero_alloc.rs`).
-struct ConnBufs {
-    req: RequestScratch,
+pub(super) struct ConnBufs {
+    /// HTTP request parse scratch (the reactor's dispatch workers parse
+    /// into this from the connection's accumulated read buffer).
+    pub(super) req: RequestScratch,
     arena: InferArena,
     head: Vec<u8>,
     body: Vec<u8>,
 }
 
 impl ConnBufs {
-    fn new() -> ConnBufs {
+    pub(super) fn new() -> ConnBufs {
         ConnBufs {
             req: RequestScratch::new(),
             arena: InferArena::default(),
@@ -517,6 +557,10 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_POLL));
+    // A peer that stops reading must not wedge this thread in `write_all`
+    // forever: bound blocking writes the same way the reactor's
+    // poll-based writer bounds its non-blocking ones.
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(shared.cfg.write_stall_ms)));
     let reader_stream = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -525,13 +569,7 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
     let mut writer = stream;
     let mut bufs = ConnBufs::new();
     loop {
-        let ConnBufs {
-            req,
-            arena,
-            head,
-            body,
-        } = &mut bufs;
-        match http::read_request_reusing(&mut reader, shared.cfg.max_body_bytes, req) {
+        match http::read_request_reusing(&mut reader, shared.cfg.max_body_bytes, &mut bufs.req) {
             Ok(ScratchOutcome::Idle) => {
                 if shared.stop.load(Ordering::Acquire) || shared.admission.is_draining() {
                     break;
@@ -539,85 +577,114 @@ fn handle_connection(shared: Arc<Shared>, stream: TcpStream) {
             }
             Ok(ScratchOutcome::Eof) => break,
             Ok(ScratchOutcome::Request) => {
-                let t0 = Instant::now();
-                shared.requests.inc();
-                let keep = req.wants_keep_alive()
-                    && !shared.stop.load(Ordering::Acquire)
-                    && !shared.admission.is_draining();
-                if let Some(model) = infer_route(&req.method, req.route_path()) {
-                    // Streaming fast path: parse into the arena, serve
-                    // through the slot protocol, serialize straight into
-                    // the connection's write buffers — no allocation after
-                    // warmup.
-                    match infer(&shared, req, model, arena, body) {
-                        Ok(()) => {
-                            shared.responses_ok.inc();
-                            if arena.span.trace_id != 0 {
-                                http::write_head_with_trace(
-                                    head,
-                                    200,
-                                    "application/json",
-                                    body.len(),
-                                    keep,
-                                    arena.span.trace_id,
-                                );
-                            } else {
-                                http::write_head(head, 200, "application/json", body.len(), keep);
-                            }
-                            shared.request_ns.record(t0.elapsed());
-                            let w0 = Instant::now();
-                            let wrote = writer
-                                .write_all(head)
-                                .and_then(|()| writer.write_all(body))
-                                .and_then(|()| writer.flush());
-                            arena.span.set(Stage::Write, w0.elapsed());
-                            finish_span(&shared, &mut arena.span, 200, t0.elapsed());
-                            if wrote.is_err() || !keep {
-                                break;
-                            }
-                        }
-                        Err(resp) => {
-                            shared.request_ns.record(t0.elapsed());
-                            let resp = if arena.span.trace_id != 0 {
-                                resp.with_header(
-                                    "x-trace-id",
-                                    &format!("{:016x}", arena.span.trace_id),
-                                )
-                            } else {
-                                resp
-                            };
-                            let status = resp.status;
-                            let write_ok = resp.write_to(&mut writer, keep).is_ok();
-                            finish_span(&shared, &mut arena.span, status, t0.elapsed());
-                            if !write_ok || !keep {
-                                break;
-                            }
-                        }
-                    }
-                } else {
-                    let resp = route(&shared, req);
-                    shared.request_ns.record(t0.elapsed());
-                    if resp.status == 200 {
-                        shared.responses_ok.inc();
-                    }
-                    if resp.write_to(&mut writer, keep).is_err() || !keep {
-                        break;
-                    }
+                if !serve_request(&shared, &mut bufs, &mut writer) {
+                    break;
                 }
             }
-            Err(HttpError::BodyTooLarge(n)) => {
-                shared.http_errors.inc();
-                let msg = format!("body too large ({n} > {} bytes)", shared.cfg.max_body_bytes);
-                let _ = Response::json(413, &err_json(&msg)).write_to(&mut writer, false);
+            Err(e) => {
+                respond_parse_error(&shared, &e, &mut writer);
                 break;
             }
-            Err(HttpError::Malformed(m)) => {
-                shared.http_errors.inc();
-                let _ = Response::json(400, &err_json(&m)).write_to(&mut writer, false);
-                break;
-            }
-            Err(HttpError::Io(_)) => break,
         }
+    }
+}
+
+/// Serve the request currently parsed into `bufs.req`, writing the
+/// response through `writer`; returns whether the connection should be
+/// kept open. This is the single request pipeline shared verbatim by the
+/// threaded fallback path and the reactor's dispatch workers, so wire
+/// semantics cannot drift between the two gateway modes.
+pub(super) fn serve_request<W: Write>(
+    shared: &Arc<Shared>,
+    bufs: &mut ConnBufs,
+    writer: &mut W,
+) -> bool {
+    let ConnBufs {
+        req,
+        arena,
+        head,
+        body,
+    } = bufs;
+    let t0 = Instant::now();
+    shared.requests.inc();
+    let keep = req.wants_keep_alive()
+        && !shared.stop.load(Ordering::Acquire)
+        && !shared.admission.is_draining();
+    if let Some(model) = infer_route(&req.method, req.route_path()) {
+        // Streaming fast path: parse into the arena, serve through the
+        // slot protocol, serialize straight into the connection's write
+        // buffers — no allocation after warmup. `Content-Type:
+        // application/x-acdc-f32` selects the binary f32 frame for both
+        // directions.
+        let binary = wire::is_binary_content_type(req.header("content-type").unwrap_or(""));
+        match infer(shared, req, model, arena, body, binary) {
+            Ok(()) => {
+                shared.responses_ok.inc();
+                let content_type = if binary {
+                    wire::CONTENT_TYPE
+                } else {
+                    "application/json"
+                };
+                if arena.span.trace_id != 0 {
+                    http::write_head_with_trace(
+                        head,
+                        200,
+                        content_type,
+                        body.len(),
+                        keep,
+                        arena.span.trace_id,
+                    );
+                } else {
+                    http::write_head(head, 200, content_type, body.len(), keep);
+                }
+                shared.request_ns.record(t0.elapsed());
+                let w0 = Instant::now();
+                let wrote = writer
+                    .write_all(head)
+                    .and_then(|()| writer.write_all(body))
+                    .and_then(|()| writer.flush());
+                arena.span.set(Stage::Write, w0.elapsed());
+                finish_span(shared, &mut arena.span, 200, t0.elapsed());
+                wrote.is_ok() && keep
+            }
+            Err(resp) => {
+                shared.request_ns.record(t0.elapsed());
+                let resp = if arena.span.trace_id != 0 {
+                    resp.with_header("x-trace-id", &format!("{:016x}", arena.span.trace_id))
+                } else {
+                    resp
+                };
+                let status = resp.status;
+                let write_ok = resp.write_to(writer, keep).is_ok();
+                finish_span(shared, &mut arena.span, status, t0.elapsed());
+                write_ok && keep
+            }
+        }
+    } else {
+        let resp = route(shared, req);
+        shared.request_ns.record(t0.elapsed());
+        if resp.status == 200 {
+            shared.responses_ok.inc();
+        }
+        resp.write_to(writer, keep).is_ok() && keep
+    }
+}
+
+/// Answer a request-parse error on `writer`. Parse errors always close
+/// the connection (the stream position is indeterminate), so there is no
+/// keep-alive verdict to return. Shared by both gateway modes.
+pub(super) fn respond_parse_error<W: Write>(shared: &Arc<Shared>, e: &HttpError, writer: &mut W) {
+    match e {
+        HttpError::BodyTooLarge(n) => {
+            shared.http_errors.inc();
+            let msg = format!("body too large ({n} > {} bytes)", shared.cfg.max_body_bytes);
+            let _ = Response::json(413, &err_json(&msg)).write_to(writer, false);
+        }
+        HttpError::Malformed(m) => {
+            shared.http_errors.inc();
+            let _ = Response::json(400, &err_json(m)).write_to(writer, false);
+        }
+        HttpError::Io(_) => {}
     }
 }
 
@@ -1089,15 +1156,18 @@ fn job_action(shared: &Arc<Shared>, id: u64, action: &str) -> Response {
 /// the connection arena (specialized scanner; non-canonical bodies fall
 /// back to the DOM parser) → issue slot sequences → submit borrowed rows
 /// → wait on the slots → serialize floats directly into the connection's
-/// write buffer. On success `body_out` holds the complete JSON body and
-/// nothing was heap-allocated (after warmup); on failure the returned
-/// [`Response`] carries the error exactly as the legacy path did.
+/// write buffer. On success `body_out` holds the complete response body
+/// (JSON, or the binary f32 frame when `binary` is set) and nothing was
+/// heap-allocated (after warmup); on failure the returned [`Response`]
+/// carries the error exactly as the legacy path did — errors are always
+/// JSON, with identical wording on both wire formats.
 fn infer(
     shared: &Arc<Shared>,
     req: &RequestScratch,
     model: Option<&str>,
     arena: &mut InferArena,
     body_out: &mut Vec<u8>,
+    binary: bool,
 ) -> Result<(), Response> {
     // Span setup: reset the arena-resident record and mint a trace ID for
     // sampled requests (every request at the default `sample_every = 1`).
@@ -1135,21 +1205,34 @@ fn infer(
     // Admission covers the gate (permit) plus model/epoch resolution.
     arena.span.set(Stage::Admission, a0.elapsed());
     let width = handle.width();
-    let body = std::str::from_utf8(&req.body)
-        .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
     let p0 = Instant::now();
-    let rows = match parse_infer_fast(body, width, shared.cfg.max_rows_per_request, &mut arena.rows)
-    {
-        Ok(Some(rows)) => rows,
-        Ok(None) => {
-            // Non-canonical body (extra keys, odd spacing, bad numbers):
-            // the DOM parser preserves the legacy validation semantics.
-            let parsed = Json::parse(body)
-                .map_err(|e| Response::json(400, &err_json(&format!("bad json: {e}"))))?;
-            extract_rows_dom(&parsed, width, shared.cfg.max_rows_per_request, &mut arena.rows)
-                .map_err(|msg| Response::json(400, &err_json(&msg)))?
+    let rows = if binary {
+        // Binary frame: raw little-endian f32 rows, no float text parsing
+        // or UTF-8 requirement. Validation wording is pinned to the JSON
+        // path's exactly ([`wire::parse_binary_request`]).
+        wire::parse_binary_request(
+            &req.body,
+            width,
+            shared.cfg.max_rows_per_request,
+            &mut arena.rows,
+        )
+        .map_err(|msg| Response::json(400, &err_json(&msg)))?
+    } else {
+        let body = std::str::from_utf8(&req.body)
+            .map_err(|_| Response::json(400, &err_json("body is not valid utf-8")))?;
+        match parse_infer_fast(body, width, shared.cfg.max_rows_per_request, &mut arena.rows) {
+            Ok(Some(rows)) => rows,
+            Ok(None) => {
+                // Non-canonical body (extra keys, odd spacing, bad
+                // numbers): the DOM parser preserves the legacy
+                // validation semantics.
+                let parsed = Json::parse(body)
+                    .map_err(|e| Response::json(400, &err_json(&format!("bad json: {e}"))))?;
+                extract_rows_dom(&parsed, width, shared.cfg.max_rows_per_request, &mut arena.rows)
+                    .map_err(|msg| Response::json(400, &err_json(&msg)))?
+            }
+            Err(msg) => return Err(Response::json(400, &err_json(&msg))),
         }
-        Err(msg) => return Err(Response::json(400, &err_json(&msg))),
     };
     arena.span.set(Stage::Parse, p0.elapsed());
     arena.span.rows = rows as u32;
@@ -1231,20 +1314,35 @@ fn infer(
     handle.observe_request(t0.elapsed());
     // Opt-in inline breakdown: `X-Acdc-Debug: 1` adds a "trace" object to
     // the response body (serialize/write aren't finished yet, so those two
-    // stages appear only in the ring and the /metrics histograms).
-    let debug_breakdown = arena.span.trace_id != 0 && req.header("x-acdc-debug") == Some("1");
+    // stages appear only in the ring and the /metrics histograms). The
+    // binary frame has no trace field; use the JSON path to debug.
+    let debug_breakdown =
+        !binary && arena.span.trace_id != 0 && req.header("x-acdc-debug") == Some("1");
     let s0 = Instant::now();
-    write_infer_body(
-        body_out,
-        handle.name(),
-        handle.version(),
-        rows,
-        width,
-        queue_us,
-        execute_us,
-        arena,
-        debug_breakdown,
-    );
+    if binary {
+        wire::write_binary_response(
+            body_out,
+            rows,
+            width,
+            handle.version(),
+            queue_us,
+            execute_us,
+            &arena.outs,
+            &arena.out_lens,
+        );
+    } else {
+        write_infer_body(
+            body_out,
+            handle.name(),
+            handle.version(),
+            rows,
+            width,
+            queue_us,
+            execute_us,
+            arena,
+            debug_breakdown,
+        );
+    }
     arena.span.set(Stage::Serialize, s0.elapsed());
     Ok(())
 }

@@ -1,0 +1,324 @@
+//! Length-prefixed binary wire frames for `/v1/infer`.
+//!
+//! The JSON wire format spends the inference hot path formatting and
+//! re-parsing decimal floats — at small model widths that costs more than
+//! the transform itself. This module defines a raw little-endian f32
+//! frame, negotiated per request via `Content-Type:
+//! application/x-acdc-f32`, that skips float text entirely while keeping
+//! the JSON path as the compatibility fallback:
+//!
+//! ```text
+//!   request  = "ACF1" ‖ rows:u32le ‖ width:u32le ‖ rows×width f32le
+//!   response = "ACR1" ‖ rows:u32le ‖ width:u32le ‖ version:u64le
+//!              ‖ queue_us:u64le ‖ execute_us:u64le ‖ rows×width f32le
+//! ```
+//!
+//! Both frames travel as ordinary HTTP bodies (`Content-Length`-framed,
+//! keep-alive preserved), so admission control, tracing, and every error
+//! path stay identical to the JSON route — errors are always answered as
+//! JSON with the **same validation wording** the text parser uses.
+//!
+//! Bit-identity contract: the payload carries the exact f32 bits of the
+//! connection arena, and the JSON path renders those same f32s through
+//! shortest-roundtrip decimal — so for identical input rows the two wire
+//! formats decode to identical output bits (pinned by the
+//! `binary_and_json_paths_agree_bitwise` integration test).
+
+/// The negotiated content type for binary inference frames.
+pub const CONTENT_TYPE: &str = "application/x-acdc-f32";
+
+/// Request frame magic (`ACdc F32 v1`).
+pub const REQ_MAGIC: [u8; 4] = *b"ACF1";
+
+/// Response frame magic.
+pub const RESP_MAGIC: [u8; 4] = *b"ACR1";
+
+/// Request frame header length: magic + rows + width.
+pub const REQ_HEADER_BYTES: usize = 12;
+
+/// Response frame header length: magic + rows + width + version +
+/// queue_us + execute_us.
+pub const RESP_HEADER_BYTES: usize = 36;
+
+/// Whether a request's `Content-Type` selects the binary frame.
+pub fn is_binary_content_type(value: &str) -> bool {
+    value.trim().eq_ignore_ascii_case(CONTENT_TYPE)
+}
+
+#[inline]
+fn read_u32le(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+#[inline]
+fn read_u64le(b: &[u8], at: usize) -> u64 {
+    let mut buf = [0u8; 8];
+    buf.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(buf)
+}
+
+/// Parse one binary request frame into the connection arena, appending
+/// `rows × width` f32s to `out` (cleared first) and returning the row
+/// count. Validation semantics — and error wording — match the JSON
+/// parsers exactly: empty batches, over-cap batches, width mismatches and
+/// non-finite features are rejected with the same messages, so a client
+/// switching wire formats sees identical 400s. Zero-allocation once `out`
+/// has grown to the request shape.
+pub fn parse_binary_request(
+    body: &[u8],
+    width: usize,
+    max_rows: usize,
+    out: &mut Vec<f32>,
+) -> Result<usize, String> {
+    out.clear();
+    if body.len() < REQ_HEADER_BYTES {
+        return Err(format!(
+            "bad binary frame: {} bytes is shorter than the {REQ_HEADER_BYTES}-byte header",
+            body.len()
+        ));
+    }
+    if body[..4] != REQ_MAGIC {
+        return Err("bad binary frame: wrong magic (expected ACF1)".into());
+    }
+    let rows = read_u32le(body, 4) as usize;
+    let frame_width = read_u32le(body, 8) as usize;
+    if rows == 0 {
+        return Err("'rows' must not be empty".into());
+    }
+    if rows > max_rows {
+        return Err(format!("too many rows ({rows} > {max_rows})"));
+    }
+    if frame_width != width {
+        return Err(format!(
+            "row has {frame_width} features, model width is {width}"
+        ));
+    }
+    // rows ≤ max_rows and width was validated against the model, so this
+    // product cannot overflow in practice; checked anyway to keep the
+    // frame parser total.
+    let payload = rows
+        .checked_mul(width)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| "bad binary frame: payload size overflow".to_string())?;
+    if body.len() != REQ_HEADER_BYTES + payload {
+        return Err(format!(
+            "bad binary frame: {} payload bytes, header declares {payload}",
+            body.len() - REQ_HEADER_BYTES
+        ));
+    }
+    out.reserve(rows * width);
+    for chunk in body[REQ_HEADER_BYTES..].chunks_exact(4) {
+        let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        if !v.is_finite() {
+            out.clear();
+            return Err("features must be finite numbers".into());
+        }
+        out.push(v);
+    }
+    Ok(rows)
+}
+
+/// Render one binary request frame into a reused buffer: `vals` holds
+/// `rows × width` row-major features. The load generator's `--binary`
+/// mode and the wire tests share this writer.
+pub fn write_binary_request(buf: &mut Vec<u8>, width: usize, vals: &[f32]) {
+    debug_assert!(width > 0 && vals.len() % width == 0);
+    let rows = vals.len() / width;
+    buf.clear();
+    buf.extend_from_slice(&REQ_MAGIC);
+    buf.extend_from_slice(&(rows as u32).to_le_bytes());
+    buf.extend_from_slice(&(width as u32).to_le_bytes());
+    for v in vals {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Serialize a success response frame straight into the connection's
+/// reusable write buffer — the binary counterpart of the JSON body
+/// writer. `outs` is the arena's row-major `[rows, stride]` output
+/// buffer; each row carries `out_lens[r]` valid floats (uniform across
+/// rows — one model, one output width).
+#[allow(clippy::too_many_arguments)]
+pub fn write_binary_response(
+    buf: &mut Vec<u8>,
+    rows: usize,
+    stride: usize,
+    version: u64,
+    queue_us: u64,
+    execute_us: u64,
+    outs: &[f32],
+    out_lens: &[usize],
+) {
+    let out_width = out_lens.first().copied().unwrap_or(0);
+    debug_assert!(out_lens[..rows].iter().all(|&l| l == out_width));
+    buf.clear();
+    buf.extend_from_slice(&RESP_MAGIC);
+    buf.extend_from_slice(&(rows as u32).to_le_bytes());
+    buf.extend_from_slice(&(out_width as u32).to_le_bytes());
+    buf.extend_from_slice(&version.to_le_bytes());
+    buf.extend_from_slice(&queue_us.to_le_bytes());
+    buf.extend_from_slice(&execute_us.to_le_bytes());
+    for r in 0..rows {
+        let start = r * stride;
+        for v in &outs[start..start + out_lens[r]] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Decoded response frame header (client side: loadgen, tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BinaryResponseHead {
+    /// Output row count.
+    pub rows: usize,
+    /// Floats per output row.
+    pub width: usize,
+    /// Serving model version.
+    pub version: u64,
+    /// Worst per-row coordinator queue wait, microseconds.
+    pub queue_us: u64,
+    /// Worst per-row executor time, microseconds.
+    pub execute_us: u64,
+}
+
+/// Parse one response frame, appending the payload floats to `out`
+/// (cleared first). Exact bits are preserved — this is the comparison
+/// side of the binary/JSON bit-identity contract.
+pub fn parse_binary_response(
+    body: &[u8],
+    out: &mut Vec<f32>,
+) -> Result<BinaryResponseHead, String> {
+    out.clear();
+    if body.len() < RESP_HEADER_BYTES {
+        return Err(format!(
+            "bad binary frame: {} bytes is shorter than the {RESP_HEADER_BYTES}-byte header",
+            body.len()
+        ));
+    }
+    if body[..4] != RESP_MAGIC {
+        return Err("bad binary frame: wrong magic (expected ACR1)".into());
+    }
+    let head = BinaryResponseHead {
+        rows: read_u32le(body, 4) as usize,
+        width: read_u32le(body, 8) as usize,
+        version: read_u64le(body, 12),
+        queue_us: read_u64le(body, 20),
+        execute_us: read_u64le(body, 28),
+    };
+    let payload = head
+        .rows
+        .checked_mul(head.width)
+        .and_then(|n| n.checked_mul(4))
+        .ok_or_else(|| "bad binary frame: payload size overflow".to_string())?;
+    if body.len() != RESP_HEADER_BYTES + payload {
+        return Err(format!(
+            "bad binary frame: {} payload bytes, header declares {payload}",
+            body.len() - RESP_HEADER_BYTES
+        ));
+    }
+    out.reserve(head.rows * head.width);
+    for chunk in body[RESP_HEADER_BYTES..].chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(head)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_frame_roundtrips_bit_exact() {
+        let vals: Vec<f32> = vec![1.0, -2.5, 3.0e-8, f32::MIN_POSITIVE, 0.0, -0.0];
+        let mut buf = Vec::new();
+        write_binary_request(&mut buf, 3, &vals);
+        assert_eq!(buf.len(), REQ_HEADER_BYTES + vals.len() * 4);
+        let mut out = Vec::new();
+        let rows = parse_binary_request(&buf, 3, 8, &mut out).unwrap();
+        assert_eq!(rows, 2);
+        for (a, b) in vals.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits(), "payload bits must survive");
+        }
+    }
+
+    #[test]
+    fn request_validation_matches_json_wording() {
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        // Width mismatch: the frame says 3, the model says 4.
+        write_binary_request(&mut buf, 3, &[0.0; 3]);
+        let err = parse_binary_request(&buf, 4, 8, &mut out).unwrap_err();
+        assert_eq!(err, "row has 3 features, model width is 4");
+        // Empty batch.
+        let mut empty = Vec::new();
+        empty.extend_from_slice(&REQ_MAGIC);
+        empty.extend_from_slice(&0u32.to_le_bytes());
+        empty.extend_from_slice(&3u32.to_le_bytes());
+        let err = parse_binary_request(&empty, 3, 8, &mut out).unwrap_err();
+        assert_eq!(err, "'rows' must not be empty");
+        // Over-cap batch.
+        write_binary_request(&mut buf, 2, &[0.0; 6]);
+        let err = parse_binary_request(&buf, 2, 2, &mut out).unwrap_err();
+        assert_eq!(err, "too many rows (3 > 2)");
+        // Non-finite features carry the JSON wording too.
+        write_binary_request(&mut buf, 2, &[1.0, f32::NAN]);
+        let err = parse_binary_request(&buf, 2, 8, &mut out).unwrap_err();
+        assert_eq!(err, "features must be finite numbers");
+        assert!(out.is_empty(), "rejected frames must not leak rows");
+    }
+
+    #[test]
+    fn request_frame_anomalies_are_rejected() {
+        let mut out = Vec::new();
+        assert!(parse_binary_request(b"ACF1", 2, 8, &mut out)
+            .unwrap_err()
+            .contains("shorter than"));
+        let mut bad_magic = Vec::new();
+        write_binary_request(&mut bad_magic, 2, &[0.0; 2]);
+        bad_magic[0] = b'X';
+        assert!(parse_binary_request(&bad_magic, 2, 8, &mut out)
+            .unwrap_err()
+            .contains("magic"));
+        // Truncated / padded payloads never parse.
+        let mut frame = Vec::new();
+        write_binary_request(&mut frame, 2, &[0.5; 2]);
+        assert!(parse_binary_request(&frame[..frame.len() - 1], 2, 8, &mut out).is_err());
+        frame.push(0);
+        assert!(parse_binary_request(&frame, 2, 8, &mut out).is_err());
+    }
+
+    #[test]
+    fn response_frame_roundtrips_header_and_bits() {
+        // Arena layout: stride 4, two rows of 3 valid floats each.
+        let outs = [1.0f32, 2.0, 3.0, 99.0, -1.0, -2.0, -3.0, 99.0];
+        let out_lens = [3usize, 3];
+        let mut buf = Vec::new();
+        write_binary_response(&mut buf, 2, 4, 7, 17, 42, &outs, &out_lens);
+        assert_eq!(buf.len(), RESP_HEADER_BYTES + 2 * 3 * 4);
+        let mut payload = Vec::new();
+        let head = parse_binary_response(&buf, &mut payload).unwrap();
+        assert_eq!(
+            head,
+            BinaryResponseHead {
+                rows: 2,
+                width: 3,
+                version: 7,
+                queue_us: 17,
+                execute_us: 42,
+            }
+        );
+        let want = [1.0f32, 2.0, 3.0, -1.0, -2.0, -3.0];
+        assert_eq!(payload.len(), want.len());
+        for (a, b) in want.iter().zip(&payload) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn content_type_negotiation() {
+        assert!(is_binary_content_type("application/x-acdc-f32"));
+        assert!(is_binary_content_type(" Application/X-ACDC-F32 "));
+        assert!(!is_binary_content_type("application/json"));
+        assert!(!is_binary_content_type(""));
+    }
+}

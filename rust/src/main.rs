@@ -797,6 +797,7 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         opt("rows", "rows-per-request mix, e.g. 1,1,8", Some("1")),
         opt("timeout-ms", "per-request timeout", Some("5000")),
         opt("seed", "rng seed", Some("0")),
+        flag("binary", "send the binary f32 wire frame instead of JSON"),
     ];
     let args = Args::parse_from(rest, opts)?;
     let mode = match args.get("mode").unwrap() {
@@ -815,10 +816,15 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         rows_mix: args.get_usize_list("rows")?.unwrap(),
         timeout: Duration::from_millis(args.get_usize("timeout-ms")?.unwrap() as u64),
         seed: args.get_usize("seed")?.unwrap() as u64,
+        binary: args.flag("binary"),
     };
     println!(
-        "loadgen: {:?} × {} workers for {:?} against {}",
-        cfg.mode, cfg.concurrency, cfg.duration, cfg.addr
+        "loadgen: {:?} × {} workers for {:?} against {} ({})",
+        cfg.mode,
+        cfg.concurrency,
+        cfg.duration,
+        cfg.addr,
+        if cfg.binary { "binary frame" } else { "json" },
     );
     let report = acdc::gateway::loadgen::run(&cfg)?;
     print!("{}", report.render());

@@ -2,13 +2,17 @@
 //!
 //! Covers the acceptance path for the serving gateway: concurrent
 //! `POST /v1/infer` traffic against a native-executor server, the load
-//! generator's latency/shed report under saturation, and the
-//! queue-full → 503 → drain contract.
+//! generator's latency/shed report under saturation, the
+//! queue-full → 503 → drain contract, the HTTP framing regressions
+//! (duplicate `Content-Length`, `Connection` token lists), stalled-reader
+//! eviction and mass idle keep-alive on the epoll reactor, and the
+//! binary-wire-format ↔ JSON bit-identity contract.
 
 use acdc::config::{GatewayConfig, ServeConfig};
 use acdc::coordinator::worker::{BatchExecutor, ExecutorFactory};
 use acdc::gateway::http;
 use acdc::gateway::loadgen::{ArrivalMode, LoadgenConfig};
+use acdc::gateway::wire;
 use acdc::gateway::Gateway;
 use acdc::sell::acdc::AcdcCascade;
 use acdc::sell::init::DiagInit;
@@ -28,6 +32,18 @@ fn one_shot(
     path: &str,
     body: &[u8],
 ) -> http::ClientResponse {
+    one_shot_typed(addr, method, path, "application/json", body)
+}
+
+/// One HTTP exchange on a fresh connection, with an explicit
+/// `Content-Type` (the binary wire frame negotiates through it).
+fn one_shot_typed(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    content_type: &str,
+    body: &[u8],
+) -> http::ClientResponse {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream
         .set_read_timeout(Some(Duration::from_secs(60)))
@@ -37,10 +53,22 @@ fn one_shot(
         &mut stream,
         method,
         path,
-        &[("content-type", "application/json")],
+        &[("content-type", content_type)],
         body,
     )
     .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+/// Write raw request bytes and read one response — for wire-level cases
+/// `http::write_request` cannot produce (duplicate headers, token lists).
+fn raw_exchange(stream: &mut TcpStream, req: &[u8]) -> http::ClientResponse {
+    use std::io::Write;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    stream.write_all(req).expect("write raw request");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
     http::read_response(&mut reader).expect("read response")
 }
 
@@ -243,6 +271,7 @@ fn loadgen_reports_latency_and_nonzero_sheds_past_queue_cap() {
         rows_mix: vec![1],
         timeout: Duration::from_secs(30),
         seed: 3,
+        binary: false,
     })
     .unwrap();
 
@@ -363,6 +392,396 @@ fn shutdown_drains_promptly_with_idle_keepalive_connections() {
         Ok(n) => panic!("unexpected {n} bytes on a drained idle connection"),
         Err(e) => panic!("idle connection not closed by drain: {e}"),
     }
+}
+
+/// A small native gateway pinned to an explicit I/O mode (the regression
+/// tests below run once per mode so neither path can drift).
+fn mode_gateway(n: usize, mode: &str) -> Gateway {
+    let mut rng = Pcg32::seeded(61);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            mode: mode.into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    Gateway::start(server, cfg.gateway.clone()).unwrap()
+}
+
+#[test]
+fn duplicate_content_length_is_rejected_on_the_wire_in_both_modes() {
+    // Request smuggling guard: two Content-Length headers (even agreeing
+    // ones) must die with a 400 from the authoritative parser, in both
+    // I/O architectures.
+    for mode in ["reactor", "threaded"] {
+        let gateway = mode_gateway(8, mode);
+        let mut stream = TcpStream::connect(gateway.local_addr()).unwrap();
+        let req = b"POST /v1/infer HTTP/1.1\r\n\
+                    content-type: application/json\r\n\
+                    content-length: 2\r\n\
+                    content-length: 2\r\n\
+                    \r\n{}";
+        let resp = raw_exchange(&mut stream, req);
+        assert_eq!(resp.status, 400, "mode {mode}: {}", resp.body_str());
+        assert!(
+            resp.body_str().contains("duplicate content-length"),
+            "mode {mode}: {}",
+            resp.body_str()
+        );
+        gateway.shutdown();
+    }
+}
+
+#[test]
+fn connection_close_inside_a_token_list_actually_closes_in_both_modes() {
+    // `Connection: close, x-experimental` is a token list; the old
+    // whole-value comparison kept such connections alive. The server must
+    // answer with `connection: close` and then really close the socket.
+    for mode in ["reactor", "threaded"] {
+        let gateway = mode_gateway(8, mode);
+        let mut stream = TcpStream::connect(gateway.local_addr()).unwrap();
+        let body = infer_body(&[0.5; 8]);
+        let head = format!(
+            "POST /v1/infer HTTP/1.1\r\n\
+             content-type: application/json\r\n\
+             connection: close, x-experimental\r\n\
+             content-length: {}\r\n\r\n",
+            body.len()
+        );
+        let mut req = head.into_bytes();
+        req.extend_from_slice(&body);
+        let resp = raw_exchange(&mut stream, &req);
+        assert_eq!(resp.status, 200, "mode {mode}: {}", resp.body_str());
+        assert!(!resp.keep_alive(), "mode {mode}: response promised keep-alive");
+        // The next read must see EOF, not a parked keep-alive socket.
+        use std::io::Read;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut buf = [0u8; 8];
+        match stream.read(&mut buf) {
+            Ok(0) => {}
+            Ok(k) => panic!("mode {mode}: {k} bytes after connection: close"),
+            Err(e) => panic!("mode {mode}: socket not closed after close token: {e}"),
+        }
+        gateway.shutdown();
+    }
+}
+
+/// Shrink a connected socket's receive buffer so the peer's writes hit
+/// flow control almost immediately (stalled-reader simulation).
+fn shrink_rcvbuf(stream: &TcpStream) {
+    use std::os::fd::AsRawFd;
+    const SOL_SOCKET: i32 = 1;
+    const SO_RCVBUF: i32 = 8;
+    extern "C" {
+        fn setsockopt(
+            fd: i32,
+            level: i32,
+            name: i32,
+            value: *const core::ffi::c_void,
+            len: u32,
+        ) -> i32;
+    }
+    let sz: i32 = 4096;
+    let rc = unsafe {
+        setsockopt(
+            stream.as_raw_fd(),
+            SOL_SOCKET,
+            SO_RCVBUF,
+            &sz as *const i32 as *const core::ffi::c_void,
+            std::mem::size_of::<i32>() as u32,
+        )
+    };
+    assert_eq!(rc, 0, "setsockopt(SO_RCVBUF) failed");
+}
+
+#[test]
+fn stalled_reader_is_evicted_instead_of_wedging_a_server_thread() {
+    // A client that requests an 8 MB response and then never reads: the
+    // kernel can buffer ~4-5 MB (server send buffer + client receive
+    // buffer, shrunk here), after which the server's write stalls. With
+    // `write_stall_ms` bounding the stall, both I/O modes must abandon
+    // the write and evict the connection while staying healthy for
+    // everyone else.
+    let n = 256usize;
+    let rows = 8_192usize;
+    for mode in ["reactor", "threaded"] {
+        let cfg = ServeConfig {
+            buckets: vec![256],
+            max_wait_us: 100,
+            workers: 1,
+            queue_cap: 16_384,
+            gateway: GatewayConfig {
+                addr: "127.0.0.1:0".into(),
+                mode: mode.into(),
+                max_body_bytes: 16 << 20,
+                max_rows_per_request: rows,
+                request_timeout_ms: 60_000,
+                write_stall_ms: 300,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let factory: ExecutorFactory = Arc::new(move || {
+            Ok(Box::new(SlowEcho {
+                n,
+                delay: Duration::ZERO,
+            }) as Box<dyn BatchExecutor>)
+        });
+        let server = Server::start_custom(&cfg, n, factory);
+        let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+        let addr = gateway.local_addr();
+
+        let mut vals = vec![0f32; rows * n];
+        for (i, v) in vals.iter_mut().enumerate() {
+            *v = ((i % 2048) as f32 - 1024.0) / 1024.0;
+        }
+        let mut frame = Vec::new();
+        wire::write_binary_request(&mut frame, n, &vals);
+
+        let mut stream = TcpStream::connect(addr).unwrap();
+        shrink_rcvbuf(&stream);
+        stream
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        http::write_request(
+            &mut stream,
+            "POST",
+            "/v1/infer",
+            &[("content-type", wire::CONTENT_TYPE)],
+            &frame,
+        )
+        .expect("write request");
+        // Stall: don't read. write_stall_ms=300 must fire well within
+        // this window and the gateway must keep serving others meanwhile.
+        std::thread::sleep(Duration::from_millis(1_500));
+        let health = one_shot(addr, "GET", "/healthz", b"");
+        assert_eq!(health.status, 200, "mode {mode}: gateway wedged");
+
+        // Now drain what the kernel buffered. The connection must be
+        // closed early: strictly fewer body bytes than the frame header
+        // promised, ending in EOF or a reset — never a still-open socket.
+        use std::io::Read;
+        let full = wire::RESP_HEADER_BYTES + rows * n * 4;
+        let mut total = 0usize;
+        let mut buf = vec![0u8; 64 * 1024];
+        let closed = loop {
+            match stream.read(&mut buf) {
+                Ok(0) => break true,
+                Ok(k) => {
+                    total += k;
+                    if total > 2 * full {
+                        break false;
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    break false;
+                }
+                Err(_) => break true,
+            }
+        };
+        assert!(closed, "mode {mode}: stalled connection was never evicted");
+        assert!(
+            total < full,
+            "mode {mode}: full {full}-byte response delivered ({total}) — write never stalled"
+        );
+        gateway.shutdown();
+    }
+}
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+/// Soft `RLIMIT_NOFILE`, after a best-effort raise toward the hard cap
+/// (CI runners often default the soft limit to 1024). Both ends of every
+/// test connection live in this process, so the parked-connection count
+/// budgets against this.
+fn nofile_soft_limit() -> u64 {
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut Rlimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const Rlimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    let mut r = Rlimit { cur: 0, max: 0 };
+    if unsafe { getrlimit(RLIMIT_NOFILE, &mut r) } != 0 {
+        return 1_024;
+    }
+    let want = r.max.min(25_000);
+    if want > r.cur {
+        let raised = Rlimit { cur: want, max: r.max };
+        if unsafe { setrlimit(RLIMIT_NOFILE, &raised) } == 0 {
+            return want;
+        }
+    }
+    r.cur
+}
+
+#[test]
+fn reactor_parks_ten_thousand_idle_keepalive_conns_and_drains_cleanly() {
+    // The tentpole capacity claim: thousands of idle keep-alive
+    // connections parked on the epoll shards (10k+ where the fd limit
+    // allows — each connection consumes two fds here, client and server
+    // end both being in-process), live traffic still served through and
+    // around them, and a drain that closes every parked socket promptly.
+    let limit = nofile_soft_limit();
+    let target = 10_000u64.min(limit.saturating_sub(600) / 2) as usize;
+    assert!(
+        target >= 512,
+        "RLIMIT_NOFILE {limit} leaves no room for a mass-connection test"
+    );
+    let n = 8;
+    let mut rng = Pcg32::seeded(71);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            mode: "reactor".into(),
+            max_open_conns: target + 64,
+            drain_timeout_ms: 30_000,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+
+    let mut conns: Vec<TcpStream> = Vec::with_capacity(target);
+    for i in 0..target {
+        let s = TcpStream::connect(addr)
+            .unwrap_or_else(|e| panic!("connect {i}/{target} failed: {e}"));
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        conns.push(s);
+    }
+
+    // The parked mass must not starve live traffic: requests through a
+    // sample of the parked connections and through a fresh one all serve.
+    for idx in [0, target / 2, target - 1] {
+        let stream = &mut conns[idx];
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        http::write_request(
+            stream,
+            "POST",
+            "/v1/infer",
+            &[("content-type", "application/json")],
+            &infer_body(&[0.25; 8]),
+        )
+        .expect("write through parked conn");
+        let resp = http::read_response(&mut reader).expect("response");
+        assert_eq!(resp.status, 200, "conn {idx}: {}", resp.body_str());
+    }
+    let health = one_shot(addr, "GET", "/healthz", b"");
+    assert_eq!(health.status, 200);
+
+    let t0 = std::time::Instant::now();
+    gateway.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "drain stalled against {target} idle connections: {:?}",
+        t0.elapsed()
+    );
+    // Every parked socket was really closed by the drain: sampled reads
+    // see EOF, not a timeout against a half-open connection.
+    use std::io::Read;
+    for idx in [0, 1, target / 2, target - 1] {
+        let mut buf = [0u8; 8];
+        match conns[idx].read(&mut buf) {
+            Ok(0) | Err(_) => {}
+            Ok(k) => panic!("conn {idx}: {k} unexpected bytes after drain"),
+        }
+    }
+}
+
+#[test]
+fn binary_frame_is_bit_identical_to_json_and_shares_error_wording() {
+    let n = 16usize;
+    let mut rng = Pcg32::seeded(81);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1, 8],
+        max_wait_us: 200,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+
+    // Inputs on the 2^-10 grid are exact in both f32 and f64, so the JSON
+    // request path (decimal → f64 parse → f32 cast) and the binary path
+    // (raw little-endian f32) feed the executor identical bits; any
+    // output divergence is then the serving paths' fault.
+    let rows = 6usize;
+    let mut vals: Vec<f32> = Vec::with_capacity(rows * n);
+    let mut k: i64 = -700;
+    for _ in 0..rows * n {
+        vals.push(k as f32 / 1024.0);
+        k += 13;
+    }
+
+    let json_rows: Vec<Json> = vals
+        .chunks(n)
+        .map(|row| Json::Arr(row.iter().map(|v| Json::Num(*v as f64)).collect()))
+        .collect();
+    let jbody =
+        acdc::util::json::obj(vec![("rows", Json::Arr(json_rows))]).to_string();
+    let jresp = one_shot(addr, "POST", "/v1/infer", jbody.as_bytes());
+    assert_eq!(jresp.status, 200, "{}", jresp.body_str());
+    assert_eq!(jresp.header("content-type"), Some("application/json"));
+    let jv = Json::parse(jresp.body_str()).unwrap();
+    let mut json_bits: Vec<u32> = Vec::new();
+    for row in jv.get("outputs").unwrap().as_arr().unwrap() {
+        for x in row.as_arr().unwrap() {
+            json_bits.push((x.as_f64().unwrap() as f32).to_bits());
+        }
+    }
+
+    let mut frame = Vec::new();
+    wire::write_binary_request(&mut frame, n, &vals);
+    let bresp = one_shot_typed(addr, "POST", "/v1/infer", wire::CONTENT_TYPE, &frame);
+    assert_eq!(bresp.status, 200, "{}", bresp.body_str());
+    assert_eq!(bresp.header("content-type"), Some(wire::CONTENT_TYPE));
+    let mut outs: Vec<f32> = Vec::new();
+    let head = wire::parse_binary_response(&bresp.body, &mut outs).unwrap();
+    assert_eq!(head.rows, rows);
+    assert_eq!(head.width, n);
+    let bin_bits: Vec<u32> = outs.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(json_bits.len(), rows * n);
+    assert_eq!(json_bits, bin_bits, "binary output bits diverge from JSON");
+
+    // Validation is single-sourced: a width-mismatched binary frame gets
+    // the very wording the JSON path uses.
+    let bad_vals = vec![0.0f32; n + 1];
+    let mut bad = Vec::new();
+    wire::write_binary_request(&mut bad, n + 1, &bad_vals);
+    let err = one_shot_typed(addr, "POST", "/v1/infer", wire::CONTENT_TYPE, &bad);
+    assert_eq!(err.status, 400, "{}", err.body_str());
+    let want = format!("row has {} features, model width is {n}", n + 1);
+    assert!(err.body_str().contains(&want), "{}", err.body_str());
+    gateway.shutdown();
 }
 
 #[test]

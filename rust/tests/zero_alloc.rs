@@ -6,7 +6,8 @@
 //! response serialization (reused write buffers) included — **with
 //! request tracing enabled at default (every-request) sampling**, so the
 //! span capture, stage histograms and `x-trace-id` response header are
-//! all inside the 0-alloc envelope.
+//! all inside the 0-alloc envelope. Both wire formats are measured: the
+//! JSON body and the binary `application/x-acdc-f32` frame.
 //!
 //! Gated behind the `count-allocs` cargo feature so the allocator shim
 //! never taxes ordinary test runs:
@@ -221,6 +222,46 @@ fn keep_alive_infer_path_is_allocation_free_after_warmup() {
     assert_eq!(
         delta, 0,
         "steady-state keep-alive inference must not allocate: \
+         {delta} allocations across {measured} requests"
+    );
+
+    // The binary wire frame must live inside the same 0-alloc envelope
+    // (same connection scratch, same arena, no float text on either
+    // side). Both windows run in one test because the allocation counter
+    // is process-global — a second concurrent #[test] would pollute it.
+    let render_binary = |vals: &[f32]| {
+        let mut frame = Vec::new();
+        acdc::gateway::wire::write_binary_request(&mut frame, N, vals);
+        let mut req = format!(
+            "POST /v1/infer HTTP/1.1\r\ncontent-type: application/x-acdc-f32\r\ncontent-length: {}\r\n\r\n",
+            frame.len()
+        )
+        .into_bytes();
+        req.extend_from_slice(&frame);
+        req
+    };
+    let bin_single = render_binary(&[0.125f32; N]);
+    let bin_batch = render_binary(&[-0.5f32; 8 * N]);
+    // Binary warmup: the parse/serialize branches differ from JSON even
+    // though every reusable buffer is already grown.
+    for i in 0..64 {
+        let req = if i % 3 == 0 { &bin_batch } else { &bin_single };
+        roundtrip(&mut stream, req, &mut buf);
+    }
+    let len = roundtrip(&mut stream, &bin_single, &mut buf);
+    assert!(
+        find_subslice(&buf[..len], b"x-trace-id: ").is_some(),
+        "tracing must stay on during the binary zero-alloc window"
+    );
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for i in 0..measured {
+        let req = if i % 3 == 0 { &bin_batch } else { &bin_single };
+        roundtrip(&mut stream, req, &mut buf);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state binary-frame inference must not allocate: \
          {delta} allocations across {measured} requests"
     );
     drop(stream);
