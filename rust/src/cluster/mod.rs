@@ -1,0 +1,22 @@
+//! Cluster mode: sharded, replicated serving.
+//!
+//! One process serves one registry; cluster mode composes N of them. A
+//! **shard** (`acdc shard`) is the ordinary gateway+registry serving a
+//! subset of models; a **router** (`acdc router`) fronts the shards,
+//! placing each model on the consistent-hash ring ([`ring::Ring`]),
+//! replicating it `replication` ways, and forwarding inference traffic
+//! with least-loaded fan-out, transport-failure retry, and latency
+//! hedging ([`router::RouterCore`]). Membership is a static TOML
+//! topology (`[cluster]`, see [`crate::config::ClusterConfig`]) kept
+//! live by `/healthz` probes with mark-down/mark-up hysteresis.
+//!
+//! The registry's Arc-epoch hot swap extends to a cluster-wide
+//! **rolling swap**: `POST /v1/admin/cluster/models/{name}/load` on the
+//! router drains and upgrades one replica at a time under live traffic,
+//! so a version promotion completes with zero failed requests.
+
+pub mod ring;
+pub mod router;
+
+pub use ring::{Ring, DEFAULT_VNODES};
+pub use router::{ProxyReply, RouterCore};

@@ -1,0 +1,738 @@
+//! The router role's core: upstream shard table, health-checked
+//! membership, least-loaded replica fan-out, request hedging, and the
+//! cluster-wide rolling swap.
+//!
+//! A [`RouterCore`] owns one upstream entry per `[cluster] shards`
+//! address. Inference requests are placed on the consistent-hash ring
+//! ([`super::ring::Ring`]) by model name, the replica set is filtered to
+//! healthy, non-draining shards, and the least-loaded survivor gets the
+//! request over a pooled keep-alive connection. Three reliability
+//! mechanisms stack on top:
+//!
+//! * **retry** — a transport failure (connect refused, write error, EOF
+//!   mid-response) marks the shard and moves to the next distinct
+//!   replica. Inference is idempotent, so replaying the byte-identical
+//!   body is safe; a SIGKILLed shard costs a retry, not a client error.
+//! * **hedging** — if the chosen shard has not answered within a delay
+//!   derived from its own latency percentile (`hedge_pct`, floored at
+//!   `hedge_min_ms`), the same request is fired at the next replica and
+//!   the first response wins.
+//! * **hysteresis** — `down_after` consecutive failures (probe or
+//!   request) mark a shard down; `up_after` consecutive `/healthz` probe
+//!   successes mark it back up. A flapping shard cannot oscillate per
+//!   request.
+//!
+//! The rolling swap ([`RouterCore::rolling_swap`]) upgrades a model
+//! version across its replica set one shard at a time: mark the shard
+//! draining (new placements skip it), poll the shard's per-model
+//! in-flight count to zero, POST the shard-local hot-swap (the Arc-epoch
+//! handoff in [`crate::registry`]), then re-admit. Traffic keeps flowing
+//! to the other replicas throughout, so a promotion proceeds under live
+//! load with zero failed requests.
+//!
+//! Everything here allocates freely — the router hop is a network proxy,
+//! not the shard-local zero-allocation inference path.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::ring::Ring;
+use crate::config::ClusterConfig;
+use crate::gateway::http;
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::trace::log::{self, Field, Level};
+use crate::util::json::{obj, Json};
+
+/// Raw `poll(2)` surface for hedged response waits (the router blocks on
+/// one or two upstream sockets at once; constants are the Linux ABI).
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    pub const POLLIN: i16 = 0x1;
+    pub const POLLERR: i16 = 0x8;
+    pub const POLLHUP: i16 = 0x10;
+    pub const POLLNVAL: i16 = 0x20;
+
+    /// Mirrors `struct pollfd`.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout_ms: c_int) -> c_int;
+    }
+}
+
+/// Keep-alive connections retained per upstream.
+const POOL_CAP: usize = 8;
+
+/// Socket read timeout slice: `read_response_within` retries these until
+/// its own deadline, so the slice only bounds shutdown latency.
+const READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Poll cadence of the rolling swap's drain wait.
+const DRAIN_POLL: Duration = Duration::from_millis(20);
+
+/// One upstream shard: address, health/drain state, hysteresis counters,
+/// the keep-alive connection pool, and the cached per-shard metric
+/// handles (`cluster.shard{i}.*`).
+struct Upstream {
+    addr: String,
+    healthy: AtomicBool,
+    draining: AtomicBool,
+    /// Requests currently outstanding against this shard (least-loaded
+    /// fan-out key; includes hedges).
+    inflight: AtomicU64,
+    consec_fail: AtomicU64,
+    consec_ok: AtomicU64,
+    pool: Mutex<Vec<Live>>,
+    healthy_gauge: Arc<Gauge>,
+    requests: Arc<Counter>,
+    errors: Arc<Counter>,
+    hedges: Arc<Counter>,
+    request_ns: Arc<Histogram>,
+}
+
+/// A dialed upstream connection with its buffered reader half.
+struct Live {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+/// What [`RouterCore::proxy`] hands back to the gateway for a successful
+/// upstream exchange (any HTTP status — a shard's 4xx/5xx is passed
+/// through verbatim, it is not a router failure).
+pub struct ProxyReply {
+    /// Upstream HTTP status, forwarded as-is.
+    pub status: u16,
+    /// Upstream `content-type` (JSON or the binary f32 frame).
+    pub content_type: String,
+    /// Upstream response body, forwarded byte-for-byte.
+    pub body: Vec<u8>,
+    /// Topology index of the shard that answered (echoed to the client
+    /// as the `x-acdc-upstream` header).
+    pub upstream: usize,
+    /// Whether a hedge request was fired for this exchange.
+    pub hedged: bool,
+}
+
+/// Shared router state: ring, upstream table, prober thread, counters.
+pub struct RouterCore {
+    cfg: ClusterConfig,
+    ring: Ring,
+    upstreams: Vec<Upstream>,
+    proxy_requests: Arc<Counter>,
+    proxy_errors: Arc<Counter>,
+    proxy_retries: Arc<Counter>,
+    proxy_hedges: Arc<Counter>,
+    rolling_swaps: Arc<Counter>,
+    stop: AtomicBool,
+    prober: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl RouterCore {
+    /// Validate `cfg`, build the ring and upstream table (every shard
+    /// starts healthy — optimistic admission until the first probe says
+    /// otherwise), and spawn the background `/healthz` prober.
+    pub fn start(cfg: ClusterConfig, metrics: &Arc<Registry>) -> Result<Arc<RouterCore>, String> {
+        cfg.validate()?;
+        let ring = Ring::new(&cfg.shards, cfg.vnodes);
+        let upstreams = cfg
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| {
+                let healthy_gauge = metrics.gauge(&format!("cluster.shard{i}.healthy"));
+                healthy_gauge.set(1);
+                Upstream {
+                    addr: addr.clone(),
+                    healthy: AtomicBool::new(true),
+                    draining: AtomicBool::new(false),
+                    inflight: AtomicU64::new(0),
+                    consec_fail: AtomicU64::new(0),
+                    consec_ok: AtomicU64::new(0),
+                    pool: Mutex::new(Vec::new()),
+                    healthy_gauge,
+                    requests: metrics.counter(&format!("cluster.shard{i}.requests")),
+                    errors: metrics.counter(&format!("cluster.shard{i}.errors")),
+                    hedges: metrics.counter(&format!("cluster.shard{i}.hedges")),
+                    request_ns: metrics.histogram(&format!("cluster.shard{i}.request_ns")),
+                }
+            })
+            .collect();
+        let core = Arc::new(RouterCore {
+            ring,
+            upstreams,
+            proxy_requests: metrics.counter("cluster.proxy_requests"),
+            proxy_errors: metrics.counter("cluster.proxy_errors"),
+            proxy_retries: metrics.counter("cluster.proxy_retries"),
+            proxy_hedges: metrics.counter("cluster.proxy_hedges"),
+            rolling_swaps: metrics.counter("cluster.rolling_swaps"),
+            stop: AtomicBool::new(false),
+            prober: Mutex::new(None),
+            cfg,
+        });
+        let prober_core = Arc::clone(&core);
+        let handle = std::thread::Builder::new()
+            .name("acdc-cluster-probe".into())
+            .spawn(move || prober_core.prober_loop())
+            .map_err(|e| format!("spawn cluster prober: {e}"))?;
+        *core.prober.lock().unwrap() = Some(handle);
+        Ok(core)
+    }
+
+    /// The cluster topology knobs this router was built from.
+    pub fn cfg(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Stop and join the prober thread (idempotent; called from the
+    /// gateway's drain path).
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.prober.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+
+    // -- health ------------------------------------------------------------
+
+    fn prober_loop(&self) {
+        let interval = Duration::from_millis(self.cfg.probe_interval_ms);
+        while !self.stop.load(Ordering::Acquire) {
+            for (i, u) in self.upstreams.iter().enumerate() {
+                if self.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if self.probe(u) {
+                    self.note_success(i);
+                } else {
+                    self.note_failure(i);
+                }
+            }
+            // Sleep in short slices so shutdown is prompt.
+            let deadline = Instant::now() + interval;
+            while Instant::now() < deadline {
+                if self.stop.load(Ordering::Acquire) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(25).min(interval));
+            }
+        }
+    }
+
+    /// One `/healthz` probe on a fresh connection (the pool is for
+    /// request traffic; a probe must measure dial reachability too).
+    fn probe(&self, u: &Upstream) -> bool {
+        let Ok(mut live) = self.dial(&u.addr) else {
+            return false;
+        };
+        if http::write_request(&mut live.stream, "GET", "/healthz", &[], &[]).is_err() {
+            return false;
+        }
+        matches!(
+            http::read_response_within(
+                &mut live.reader,
+                Duration::from_millis(self.cfg.connect_timeout_ms),
+            ),
+            Ok(resp) if resp.status == 200
+        )
+    }
+
+    /// A successful probe or request exchange: reset the failure streak,
+    /// and mark the shard back up after `up_after` consecutive successes.
+    fn note_success(&self, i: usize) {
+        let u = &self.upstreams[i];
+        u.consec_fail.store(0, Ordering::Relaxed);
+        let ok = u.consec_ok.fetch_add(1, Ordering::Relaxed) + 1;
+        if !u.healthy.load(Ordering::Acquire) && ok >= self.cfg.up_after {
+            u.healthy.store(true, Ordering::Release);
+            u.healthy_gauge.set(1);
+            log::event(
+                Level::Info,
+                "cluster",
+                "shard_up",
+                0,
+                &[("shard", Field::U64(i as u64)), ("addr", Field::Str(&u.addr))],
+            );
+        }
+    }
+
+    /// A failed probe or transport-failed exchange: reset the success
+    /// streak, and mark the shard down after `down_after` consecutive
+    /// failures.
+    fn note_failure(&self, i: usize) {
+        let u = &self.upstreams[i];
+        u.consec_ok.store(0, Ordering::Relaxed);
+        u.errors.inc();
+        let fails = u.consec_fail.fetch_add(1, Ordering::Relaxed) + 1;
+        if u.healthy.load(Ordering::Acquire) && fails >= self.cfg.down_after {
+            u.healthy.store(false, Ordering::Release);
+            u.healthy_gauge.set(0);
+            // Dead shard: drop its pooled connections so no request
+            // wastes a retry on a stale socket after re-admission.
+            u.pool.lock().unwrap().clear();
+            log::event(
+                Level::Warn,
+                "cluster",
+                "shard_down",
+                0,
+                &[("shard", Field::U64(i as u64)), ("addr", Field::Str(&u.addr))],
+            );
+        }
+    }
+
+    // -- connections -------------------------------------------------------
+
+    fn dial(&self, addr: &str) -> Result<Live, String> {
+        let sa = addr
+            .to_socket_addrs()
+            .map_err(|e| format!("resolve {addr}: {e}"))?
+            .next()
+            .ok_or_else(|| format!("resolve {addr}: no address"))?;
+        let stream =
+            TcpStream::connect_timeout(&sa, Duration::from_millis(self.cfg.connect_timeout_ms))
+                .map_err(|e| format!("connect {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(READ_SLICE));
+        let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok(Live { stream, reader })
+    }
+
+    fn checkout(&self, i: usize) -> Option<Live> {
+        self.upstreams[i].pool.lock().unwrap().pop()
+    }
+
+    fn checkin(&self, i: usize, live: Live) {
+        let mut pool = self.upstreams[i].pool.lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(live);
+        }
+    }
+
+    /// Write one request on a pooled or fresh connection. A stale pooled
+    /// socket (closed by the shard since checkout) costs one silent
+    /// redial, not a shard failure mark.
+    fn fire(&self, i: usize, path: &str, content_type: &str, body: &[u8]) -> Result<Live, String> {
+        let headers = [("content-type", content_type)];
+        if let Some(mut live) = self.checkout(i) {
+            if http::write_request(&mut live.stream, "POST", path, &headers, body).is_ok() {
+                return Ok(live);
+            }
+        }
+        let mut live = self.dial(&self.upstreams[i].addr)?;
+        http::write_request(&mut live.stream, "POST", path, &headers, body)
+            .map_err(|e| format!("write {}: {e}", self.upstreams[i].addr))?;
+        Ok(live)
+    }
+
+    // -- selection ---------------------------------------------------------
+
+    /// The replica set of `key` ordered for attempts: healthy
+    /// non-draining shards by ascending in-flight count, then (only if
+    /// none exist — e.g. a single-replica model mid-swap) healthy
+    /// draining shards. Down shards never appear.
+    fn candidates(&self, key: &str) -> Vec<usize> {
+        let replicas = self.ring.place(key, self.cfg.replication);
+        let mut open: Vec<usize> = replicas
+            .iter()
+            .copied()
+            .filter(|&i| {
+                self.upstreams[i].healthy.load(Ordering::Acquire)
+                    && !self.upstreams[i].draining.load(Ordering::Acquire)
+            })
+            .collect();
+        open.sort_by_key(|&i| self.upstreams[i].inflight.load(Ordering::Acquire));
+        if open.is_empty() {
+            open = replicas
+                .iter()
+                .copied()
+                .filter(|&i| self.upstreams[i].healthy.load(Ordering::Acquire))
+                .collect();
+            open.sort_by_key(|&i| self.upstreams[i].inflight.load(Ordering::Acquire));
+        }
+        open
+    }
+
+    /// Hedge trigger delay for shard `i`: its own `hedge_pct` latency
+    /// percentile, floored at `hedge_min_ms` (the floor also covers a
+    /// cold histogram).
+    fn hedge_delay(&self, i: usize) -> Duration {
+        let pct_ms = self.upstreams[i].request_ns.percentile_ns(self.cfg.hedge_pct) / 1_000_000;
+        Duration::from_millis(pct_ms.max(self.cfg.hedge_min_ms))
+    }
+
+    // -- the proxy path ----------------------------------------------------
+
+    /// Forward one inference request (`path` + `body` verbatim, placed by
+    /// `key`) to the cluster; returns the winning shard's response or a
+    /// router-level `(status, message)` failure. Retries distinct
+    /// replicas on transport errors and hedges a slow shard against the
+    /// next replica — any HTTP status from a shard (including 4xx/5xx)
+    /// is a *successful* exchange and is passed through.
+    pub fn proxy(
+        &self,
+        key: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<ProxyReply, (u16, String)> {
+        self.proxy_requests.inc();
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.request_timeout_ms);
+        let mut tried: Vec<usize> = Vec::new();
+        let mut last_err = String::from("no healthy replica");
+        let mut any_candidate = false;
+        loop {
+            let cands: Vec<usize> = self
+                .candidates(key)
+                .into_iter()
+                .filter(|i| !tried.contains(i))
+                .collect();
+            let Some(&primary) = cands.first() else {
+                break;
+            };
+            any_candidate = true;
+            if !tried.is_empty() {
+                self.proxy_retries.inc();
+            }
+            tried.push(primary);
+            match self.exchange(primary, &cands[1..], &mut tried, path, content_type, body, deadline)
+            {
+                Ok(reply) => return Ok(reply),
+                Err(e) => last_err = e,
+            }
+            if Instant::now() >= deadline {
+                self.proxy_errors.inc();
+                return Err((504, format!("upstream deadline exceeded: {last_err}")));
+            }
+        }
+        self.proxy_errors.inc();
+        if any_candidate {
+            Err((502, format!("all replicas failed: {last_err}")))
+        } else {
+            Err((503, last_err))
+        }
+    }
+
+    /// One hedged exchange: fire at `primary`, optionally fire at the
+    /// first viable hedge from `hedge_pool` after the hedge delay, and
+    /// return the first complete response. Shards that transport-fail
+    /// here are marked and appended to `tried`.
+    #[allow(clippy::too_many_arguments)]
+    fn exchange(
+        &self,
+        primary: usize,
+        hedge_pool: &[usize],
+        tried: &mut Vec<usize>,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+        deadline: Instant,
+    ) -> Result<ProxyReply, String> {
+        let t0 = Instant::now();
+        self.upstreams[primary].requests.inc();
+        self.upstreams[primary].inflight.fetch_add(1, Ordering::AcqRel);
+        let fired = self.fire(primary, path, content_type, body);
+        let mut pending: Vec<(usize, Live)> = match fired {
+            Ok(live) => vec![(primary, live)],
+            Err(e) => {
+                self.upstreams[primary].inflight.fetch_sub(1, Ordering::AcqRel);
+                self.note_failure(primary);
+                return Err(e);
+            }
+        };
+        let mut hedged = false;
+        let result = loop {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break Err("upstream timeout".to_string());
+            }
+            // Before the hedge fires, wait only up to the hedge delay.
+            let hedge_at = if !hedged && !hedge_pool.is_empty() {
+                Some(self.hedge_delay(primary))
+            } else {
+                None
+            };
+            let wait = match hedge_at {
+                Some(d) => d.saturating_sub(t0.elapsed()).min(remaining),
+                None => remaining,
+            };
+            let fds: Vec<i32> = pending.iter().map(|(_, l)| l.stream.as_raw_fd()).collect();
+            match poll_readable(&fds, wait) {
+                Some(idx) => {
+                    let (ui, mut live) = pending.remove(idx);
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    match http::read_response_within(&mut live.reader, remaining) {
+                        Ok(resp) => {
+                            self.upstreams[ui].inflight.fetch_sub(1, Ordering::AcqRel);
+                            self.note_success(ui);
+                            self.upstreams[ui].request_ns.record(t0.elapsed());
+                            if resp.keep_alive() {
+                                self.checkin(ui, live);
+                            }
+                            break Ok((ui, resp));
+                        }
+                        Err(e) => {
+                            self.upstreams[ui].inflight.fetch_sub(1, Ordering::AcqRel);
+                            self.note_failure(ui);
+                            if ui != primary {
+                                tried.push(ui);
+                            }
+                            if pending.is_empty() {
+                                break Err(format!("read {}: {e}", self.upstreams[ui].addr));
+                            }
+                        }
+                    }
+                }
+                None => {
+                    // Poll timed out: either the hedge window elapsed
+                    // (fire the hedge and keep waiting on both) or the
+                    // request deadline did (loop back and time out).
+                    if hedge_at.is_some() && t0.elapsed() >= hedge_at.unwrap() {
+                        hedged = true;
+                        if let Some(&hi) = hedge_pool.iter().find(|i| !tried.contains(i)) {
+                            self.upstreams[hi].requests.inc();
+                            self.upstreams[hi].hedges.inc();
+                            self.proxy_hedges.inc();
+                            self.upstreams[hi].inflight.fetch_add(1, Ordering::AcqRel);
+                            match self.fire(hi, path, content_type, body) {
+                                Ok(live) => pending.push((hi, live)),
+                                Err(_) => {
+                                    self.upstreams[hi].inflight.fetch_sub(1, Ordering::AcqRel);
+                                    self.note_failure(hi);
+                                    tried.push(hi);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        };
+        // Losers (a hedge that lost the race, or the primary after the
+        // hedge won) carry an unread response: close them, never pool.
+        for (ui, _live) in pending {
+            self.upstreams[ui].inflight.fetch_sub(1, Ordering::AcqRel);
+        }
+        let (ui, resp) = result?;
+        Ok(ProxyReply {
+            status: resp.status,
+            content_type: resp
+                .header("content-type")
+                .unwrap_or("application/json")
+                .to_string(),
+            body: resp.body,
+            upstream: ui,
+            hedged,
+        })
+    }
+
+    // -- admin / rolling swap ----------------------------------------------
+
+    /// One-shot admin exchange against a shard (fresh connection; the
+    /// pool is reserved for the proxy hot path).
+    fn admin_exchange(
+        &self,
+        addr: &str,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<(u16, Json), String> {
+        let mut live = self.dial(addr)?;
+        http::write_request(
+            &mut live.stream,
+            method,
+            path,
+            &[("content-type", "application/json")],
+            body,
+        )
+        .map_err(|e| format!("write {addr}: {e}"))?;
+        let resp = http::read_response_within(&mut live.reader, Duration::from_secs(10))
+            .map_err(|e| format!("read {addr}: {e}"))?;
+        let json = Json::parse(resp.body_str())
+            .map_err(|e| format!("{addr} answered unparseable JSON: {e}"))?;
+        Ok((resp.status, json))
+    }
+
+    /// Block until `name`'s in-flight count on the shard at `addr` is
+    /// zero, or the drain deadline passes (a single-replica model under
+    /// sustained traffic cannot drain; the shard-local Arc-epoch swap is
+    /// safe regardless, so the swap proceeds either way).
+    fn wait_drained(&self, addr: &str, name: &str) -> bool {
+        let deadline = Instant::now() + Duration::from_millis(self.cfg.drain_timeout_ms);
+        let path = format!("/v1/models/{name}");
+        while Instant::now() < deadline {
+            match self.admin_exchange(addr, "GET", &path, &[]) {
+                Ok((200, v)) => {
+                    if v.get("inflight").and_then(|x| x.as_i64()) == Some(0) {
+                        return true;
+                    }
+                }
+                // 404 (model not yet loaded on this shard) drains
+                // trivially; transport errors retry until the deadline.
+                Ok((404, _)) => return true,
+                Ok(_) | Err(_) => {}
+            }
+            std::thread::sleep(DRAIN_POLL);
+        }
+        false
+    }
+
+    /// Cluster-wide rolling version swap of `name` from checkpoint
+    /// `ckpt_path`: for each replica in ring (drain) order — mark the
+    /// shard draining, wait its per-model in-flight count to zero, POST
+    /// the shard-local hot swap, verify, re-admit. Returns the per-shard
+    /// outcome list, or `(status, message)` on the first failed shard
+    /// (already-swapped shards keep the new version; the failed shard is
+    /// re-admitted on its old one).
+    pub fn rolling_swap(
+        &self,
+        name: &str,
+        ckpt_path: &str,
+        version: Option<u64>,
+    ) -> Result<Json, (u16, String)> {
+        let replicas = self.ring.place(name, self.cfg.replication);
+        let mut body_pairs = vec![("path", Json::Str(ckpt_path.to_string()))];
+        if let Some(v) = version {
+            body_pairs.push(("version", Json::Num(v as f64)));
+        }
+        let body = obj(body_pairs).to_string().into_bytes();
+        let mut results: Vec<Json> = Vec::with_capacity(replicas.len());
+        for &si in &replicas {
+            let u = &self.upstreams[si];
+            u.draining.store(true, Ordering::Release);
+            let drained = self.wait_drained(&u.addr, name);
+            let load = self.admin_exchange(
+                &u.addr,
+                "POST",
+                &format!("/v1/admin/models/{name}/load"),
+                &body,
+            );
+            u.draining.store(false, Ordering::Release);
+            // Stale pooled sockets from before the swap are fine (the
+            // shard never closed them), but drop them anyway so the next
+            // requests observe the new version immediately rather than
+            // after a pool cycle.
+            u.pool.lock().unwrap().clear();
+            match load {
+                Ok((200, v)) => {
+                    let loaded = v.get("version").and_then(|x| x.as_i64()).unwrap_or(-1);
+                    log::event(
+                        Level::Info,
+                        "cluster",
+                        "rolling_swap_shard",
+                        0,
+                        &[
+                            ("model", Field::Str(name)),
+                            ("shard", Field::U64(si as u64)),
+                            ("version", Field::U64(loaded.max(0) as u64)),
+                            ("drained", Field::Bool(drained)),
+                        ],
+                    );
+                    results.push(obj(vec![
+                        ("shard", Json::Num(si as f64)),
+                        ("addr", Json::Str(u.addr.clone())),
+                        ("version", Json::Num(loaded as f64)),
+                        ("drained", Json::Bool(drained)),
+                    ]));
+                }
+                Ok((status, v)) => {
+                    let msg = v
+                        .get("error")
+                        .and_then(|e| e.as_str())
+                        .unwrap_or("(no error body)")
+                        .to_string();
+                    return Err((502, format!("shard {si} ({}) answered {status}: {msg}", u.addr)));
+                }
+                Err(e) => return Err((502, format!("shard {si}: {e}"))),
+            }
+        }
+        self.rolling_swaps.inc();
+        Ok(obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("status", Json::Str("swapped".to_string())),
+            ("replicas", Json::Arr(results)),
+        ]))
+    }
+
+    /// Topology + live health snapshot for `GET /v1/cluster`.
+    pub fn topology_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .upstreams
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                obj(vec![
+                    ("index", Json::Num(i as f64)),
+                    ("addr", Json::Str(u.addr.clone())),
+                    ("healthy", Json::Bool(u.healthy.load(Ordering::Acquire))),
+                    ("draining", Json::Bool(u.draining.load(Ordering::Acquire))),
+                    (
+                        "inflight",
+                        Json::Num(u.inflight.load(Ordering::Acquire) as f64),
+                    ),
+                    ("requests", Json::Num(u.requests.get() as f64)),
+                    ("errors", Json::Num(u.errors.get() as f64)),
+                    ("hedges", Json::Num(u.hedges.get() as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("replication", Json::Num(self.cfg.replication as f64)),
+            ("vnodes", Json::Num(self.cfg.vnodes as f64)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+}
+
+impl Drop for RouterCore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Wait until one of `fds` is readable (or error/hangup-ready, which a
+/// subsequent read surfaces as the actual error). Returns the index of
+/// the first ready fd, or `None` on timeout. `EINTR` retries within the
+/// budget.
+fn poll_readable(fds: &[i32], timeout: Duration) -> Option<usize> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let mut pfds: Vec<sys::PollFd> = fds
+            .iter()
+            .map(|&fd| sys::PollFd {
+                fd,
+                events: sys::POLLIN,
+                revents: 0,
+            })
+            .collect();
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        let timeout_ms = remaining.as_millis().min(i32::MAX as u128) as i32;
+        let rc = unsafe { sys::poll(pfds.as_mut_ptr(), pfds.len() as _, timeout_ms) };
+        if rc > 0 {
+            for (i, p) in pfds.iter().enumerate() {
+                if p.revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP | sys::POLLNVAL) != 0 {
+                    return Some(i);
+                }
+            }
+        }
+        if rc == 0 || Instant::now() >= deadline {
+            return None;
+        }
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                // Treat a hard poll failure as "first fd ready": the
+                // caller's read will produce the real error.
+                return Some(0);
+            }
+        }
+    }
+}

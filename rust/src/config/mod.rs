@@ -912,6 +912,152 @@ impl TrainConfig {
     }
 }
 
+/// Cluster topology configuration (`[cluster]` section): the static
+/// shard membership an `acdc router` process fronts, plus the placement,
+/// health-check, and hedging knobs. See `DESIGN.md` §8.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Shard gateway addresses in topology order (`host:port`). The
+    /// index into this array is the shard's identity everywhere: the
+    /// consistent-hash ring, per-shard metric names
+    /// (`cluster.shard{i}.*`), and the `x-acdc-upstream` header.
+    pub shards: Vec<String>,
+    /// Replicas per model (clamped to the shard count at placement).
+    pub replication: usize,
+    /// Virtual nodes per shard on the consistent-hash ring.
+    pub vnodes: usize,
+    /// Milliseconds between `/healthz` probe rounds.
+    pub probe_interval_ms: u64,
+    /// Consecutive failures (probe or request transport error) before a
+    /// shard is marked down.
+    pub down_after: u64,
+    /// Consecutive probe successes before a down shard is re-admitted.
+    pub up_after: u64,
+    /// Latency percentile of the chosen shard's own history that arms
+    /// the hedge timer (e.g. 99.0 = hedge past its p99).
+    pub hedge_pct: f64,
+    /// Floor on the hedge delay in milliseconds (also the effective
+    /// delay while a shard's latency histogram is still cold).
+    pub hedge_min_ms: u64,
+    /// Upstream TCP connect budget in milliseconds.
+    pub connect_timeout_ms: u64,
+    /// End-to-end budget for one proxied request across all retries and
+    /// hedges, in milliseconds.
+    pub request_timeout_ms: u64,
+    /// Rolling-swap bound on waiting for one replica's per-model
+    /// in-flight count to reach zero (the swap proceeds regardless when
+    /// it expires — the shard-local Arc-epoch swap is always safe).
+    pub drain_timeout_ms: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            shards: Vec::new(),
+            replication: 2,
+            vnodes: 128,
+            probe_interval_ms: 500,
+            down_after: 3,
+            up_after: 2,
+            hedge_pct: 99.0,
+            hedge_min_ms: 20,
+            connect_timeout_ms: 1_000,
+            request_timeout_ms: 5_000,
+            drain_timeout_ms: 10_000,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Build from a parsed config's `[cluster]` section. `shards` is an
+    /// array of `"host:port"` strings and is required.
+    pub fn from_config(cfg: &Config) -> Result<ClusterConfig, String> {
+        let d = ClusterConfig::default();
+        let mut cc = ClusterConfig {
+            shards: Vec::new(),
+            replication: cfg.get_usize("cluster.replication", d.replication),
+            vnodes: cfg.get_usize("cluster.vnodes", d.vnodes),
+            probe_interval_ms: cfg
+                .get_usize("cluster.probe_interval_ms", d.probe_interval_ms as usize)
+                as u64,
+            down_after: cfg.get_usize("cluster.down_after", d.down_after as usize) as u64,
+            up_after: cfg.get_usize("cluster.up_after", d.up_after as usize) as u64,
+            hedge_pct: cfg.get_f64("cluster.hedge_pct", d.hedge_pct),
+            hedge_min_ms: cfg.get_usize("cluster.hedge_min_ms", d.hedge_min_ms as usize) as u64,
+            connect_timeout_ms: cfg
+                .get_usize("cluster.connect_timeout_ms", d.connect_timeout_ms as usize)
+                as u64,
+            request_timeout_ms: cfg
+                .get_usize("cluster.request_timeout_ms", d.request_timeout_ms as usize)
+                as u64,
+            drain_timeout_ms: cfg
+                .get_usize("cluster.drain_timeout_ms", d.drain_timeout_ms as usize)
+                as u64,
+        };
+        if let Some(v) = cfg.get("cluster.shards") {
+            let arr = v
+                .as_array()
+                .ok_or("cluster.shards must be an array of \"host:port\" strings")?;
+            for item in arr {
+                let s = item
+                    .as_str()
+                    .ok_or("cluster.shards entries must be strings")?;
+                cc.shards.push(s.to_string());
+            }
+        }
+        cc.validate()?;
+        Ok(cc)
+    }
+
+    /// Sanity-check the topology (shards present and distinct, replication
+    /// within bounds, hysteresis/hedging/timeout knobs ≥ 1).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards.is_empty() {
+            return Err("cluster.shards must list at least one shard address".into());
+        }
+        for (i, s) in self.shards.iter().enumerate() {
+            if s.is_empty() {
+                return Err("cluster.shards entries must not be empty".into());
+            }
+            if self.shards[..i].contains(s) {
+                return Err(format!("cluster.shards lists '{s}' twice"));
+            }
+        }
+        if self.replication == 0 || self.replication > self.shards.len() {
+            return Err(format!(
+                "cluster.replication must be in [1, {}] (the shard count), got {}",
+                self.shards.len(),
+                self.replication
+            ));
+        }
+        if self.vnodes == 0 {
+            return Err("cluster.vnodes must be >= 1".into());
+        }
+        if self.probe_interval_ms == 0 {
+            return Err("cluster.probe_interval_ms must be >= 1".into());
+        }
+        if self.down_after == 0 {
+            return Err("cluster.down_after must be >= 1".into());
+        }
+        if self.up_after == 0 {
+            return Err("cluster.up_after must be >= 1".into());
+        }
+        if !self.hedge_pct.is_finite() || self.hedge_pct <= 0.0 || self.hedge_pct > 100.0 {
+            return Err("cluster.hedge_pct must be in (0, 100]".into());
+        }
+        if self.connect_timeout_ms == 0 {
+            return Err("cluster.connect_timeout_ms must be >= 1".into());
+        }
+        if self.request_timeout_ms == 0 {
+            return Err("cluster.request_timeout_ms must be >= 1".into());
+        }
+        if self.drain_timeout_ms == 0 {
+            return Err("cluster.drain_timeout_ms must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1296,6 +1442,81 @@ log_level = "debug"
         }
         let bad = Config::parse("[trace]\nlog_level = \"loud\"").unwrap();
         assert!(TraceConfig::from_config(&bad).is_err());
+    }
+
+    #[test]
+    fn cluster_config_from_config() {
+        let text = r#"
+[cluster]
+shards = ["127.0.0.1:9101", "127.0.0.1:9102", "127.0.0.1:9103"]
+replication = 2
+vnodes = 64
+probe_interval_ms = 100
+down_after = 2
+up_after = 2
+hedge_pct = 95.0
+hedge_min_ms = 5
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let cc = ClusterConfig::from_config(&cfg).unwrap();
+        assert_eq!(cc.shards.len(), 3);
+        assert_eq!(cc.shards[1], "127.0.0.1:9102");
+        assert_eq!(cc.replication, 2);
+        assert_eq!(cc.vnodes, 64);
+        assert_eq!(cc.probe_interval_ms, 100);
+        assert_eq!(cc.hedge_pct, 95.0);
+        assert_eq!(cc.hedge_min_ms, 5);
+        // Unspecified keys fall back to defaults.
+        let d = ClusterConfig::default();
+        assert_eq!(cc.connect_timeout_ms, d.connect_timeout_ms);
+        assert_eq!(cc.request_timeout_ms, d.request_timeout_ms);
+        assert_eq!(cc.drain_timeout_ms, d.drain_timeout_ms);
+    }
+
+    #[test]
+    fn cluster_config_validation() {
+        let two = || ClusterConfig {
+            shards: vec!["a:1".into(), "b:2".into()],
+            ..Default::default()
+        };
+        assert!(two().validate().is_ok());
+        // No shards at all (the default) is invalid for a router.
+        assert!(ClusterConfig::default().validate().is_err());
+        // Replication beyond the shard count.
+        let bad = ClusterConfig {
+            replication: 3,
+            ..two()
+        };
+        assert!(bad.validate().is_err());
+        // Duplicate shard addresses.
+        let bad = ClusterConfig {
+            shards: vec!["a:1".into(), "a:1".into()],
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // Hedge percentile out of range.
+        let bad = ClusterConfig {
+            hedge_pct: 0.0,
+            ..two()
+        };
+        assert!(bad.validate().is_err());
+        // Hysteresis knobs must be >= 1.
+        let bad = ClusterConfig {
+            down_after: 0,
+            ..two()
+        };
+        assert!(bad.validate().is_err());
+        let bad = ClusterConfig {
+            up_after: 0,
+            ..two()
+        };
+        assert!(bad.validate().is_err());
+        // from_config without a [cluster] section fails on empty shards.
+        let cfg = Config::parse("[gateway]\naddr = \"127.0.0.1:0\"").unwrap();
+        assert!(ClusterConfig::from_config(&cfg).is_err());
+        // Non-string shard entries are rejected.
+        let cfg = Config::parse("[cluster]\nshards = [1, 2]").unwrap();
+        assert!(ClusterConfig::from_config(&cfg).is_err());
     }
 
     #[test]

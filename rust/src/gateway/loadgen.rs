@@ -58,6 +58,14 @@ pub enum ArrivalMode {
 pub struct LoadgenConfig {
     /// Gateway address, e.g. `"127.0.0.1:7878"`.
     pub addr: String,
+    /// Additional target addresses for cluster runs (`--targets`).
+    /// Empty means "just `addr`"; otherwise workers are spread
+    /// round-robin across this list (worker *i* owns `targets[i % len]`)
+    /// and a worker whose target stops connecting rotates to the next
+    /// address, so a killed shard degrades throughput instead of
+    /// idling a worker. Percentile math is unchanged — including the
+    /// coordinated-omission-corrected set.
+    pub targets: Vec<String>,
     /// Arrival process (closed or open loop).
     pub mode: ArrivalMode,
     /// Worker threads (each with its own keep-alive connection).
@@ -80,6 +88,7 @@ impl Default for LoadgenConfig {
     fn default() -> Self {
         LoadgenConfig {
             addr: "127.0.0.1:7878".into(),
+            targets: Vec::new(),
             mode: ArrivalMode::Closed,
             concurrency: 8,
             duration: Duration::from_secs(5),
@@ -103,6 +112,9 @@ impl LoadgenConfig {
         }
         if self.rows_mix.is_empty() || self.rows_mix.contains(&0) {
             return Err("rows mix must be non-empty positive row counts".into());
+        }
+        if self.targets.iter().any(|t| t.is_empty()) {
+            return Err("loadgen targets must not contain empty addresses".into());
         }
         if let ArrivalMode::Open { rps } = self.mode {
             if !rps.is_finite() || rps <= 0.0 {
@@ -294,6 +306,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
 fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
     let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(wi as u64 * 7919 + 1));
     let mut stats = WorkerStats::default();
+    // Cluster runs spread workers round-robin over `targets`; a worker
+    // rotates to the next address when its target stops connecting.
+    let targets: &[String] = if cfg.targets.is_empty() {
+        std::slice::from_ref(&cfg.addr)
+    } else {
+        &cfg.targets
+    };
+    let mut target_at = wi % targets.len();
     let deadline = Instant::now() + cfg.duration;
     let interval = match cfg.mode {
         ArrivalMode::Closed => None,
@@ -349,10 +369,11 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
             (body.as_bytes(), "application/json")
         };
         if conn.is_none() {
-            conn = connect(&cfg.addr, cfg.timeout);
+            conn = connect(&targets[target_at], cfg.timeout);
             if conn.is_none() {
                 stats.sent += 1;
                 stats.errors += 1;
+                target_at = (target_at + 1) % targets.len();
                 std::thread::sleep(Duration::from_millis(10));
                 continue;
             }
@@ -475,6 +496,17 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = LoadgenConfig {
             mode: ArrivalMode::Open { rps: 0.0 },
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        // Multi-target lists are fine; empty addresses inside one are not.
+        let ok = LoadgenConfig {
+            targets: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
+        let bad = LoadgenConfig {
+            targets: vec!["127.0.0.1:1".into(), String::new()],
             ..Default::default()
         };
         assert!(bad.validate().is_err());

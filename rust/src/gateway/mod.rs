@@ -33,11 +33,19 @@
 //! * `reactor` — the dependency-free epoll event loop behind the default
 //!   `gateway.mode = "reactor"`;
 //! * [`loadgen`] — closed/open-loop traffic with raw and
-//!   coordinated-omission-corrected p50/p95/p99 reports.
+//!   coordinated-omission-corrected p50/p95/p99 reports, single- or
+//!   multi-target (`--targets` across shards or routers).
 //!
 //! Every shed path is observable: `429`/`503` responses carry
 //! `Retry-After`, and `GET /metrics` exposes per-class shed counters next
 //! to the coordinator's own instruments.
+//!
+//! In **cluster mode** ([`crate::cluster`]) this same gateway serves two
+//! roles: a *shard* is exactly the pipeline above, while a *router*
+//! (started via [`Gateway::start_router`]) intercepts inference routes
+//! before the local pipeline and proxies them across the shard topology
+//! with replication, health-checked retry, and hedging — both I/O modes
+//! included, since they share `server::serve_request`.
 
 pub mod admission;
 pub mod http;

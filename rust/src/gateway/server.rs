@@ -82,11 +82,12 @@ use super::admission::{Admission, AdmitError};
 use super::http::{self, HttpError, RequestScratch, Response, ScratchOutcome};
 use super::reactor::Reactor;
 use super::wire;
-use crate::config::{GatewayConfig, GatewayMode, TrainerConfig};
+use crate::cluster::RouterCore;
+use crate::config::{ClusterConfig, GatewayConfig, GatewayMode, TrainerConfig};
 use crate::coordinator::request::{ResponseSlot, RowRef};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
-use crate::registry::{ModelHandle, ModelRegistry, RegistryError};
+use crate::registry::{ModelHandle, ModelInfo, ModelRegistry, RegistryError};
 use crate::sell::ModelKind;
 use crate::serve::Server;
 use crate::trace::log::{self, Field, Level};
@@ -197,6 +198,12 @@ pub(super) struct Shared {
     /// startup so recording a span is pure atomics — indexed by
     /// [`Stage::index`].
     stage_ns: [Arc<Histogram>; Stage::COUNT],
+    /// Cluster router core when this gateway runs the router role
+    /// (`None` on shards and standalone gateways). With a router
+    /// present, inference routes are proxied to upstream shards instead
+    /// of the local registry — on both I/O modes, since the reactor's
+    /// dispatch workers and the threaded fallback share `serve_request`.
+    router: Option<Arc<RouterCore>>,
 }
 
 impl Gateway {
@@ -239,6 +246,40 @@ impl Gateway {
         trainer: Arc<TrainerPool>,
         cfg: GatewayConfig,
     ) -> Result<Gateway, String> {
+        Gateway::start_inner(registry, trainer, cfg, None)
+    }
+
+    /// Start the cluster **router** role: a gateway whose inference
+    /// routes are proxied across the `[cluster]` shard topology (ring
+    /// placement, replication, health-checked retry, hedging) instead of
+    /// a local registry. The admin surface gains `GET /v1/cluster` and
+    /// the rolling swap at `POST /v1/admin/cluster/models/{name}/load`;
+    /// the local registry stays empty, so shard-only admin routes answer
+    /// 404/"not found" as they would on a modelless gateway.
+    pub fn start_router(cluster: ClusterConfig, cfg: GatewayConfig) -> Result<Gateway, String> {
+        let metrics = Arc::new(Registry::new());
+        let router = RouterCore::start(cluster, &metrics)?;
+        let registry = Arc::new(ModelRegistry::new(
+            crate::config::ServeConfig::default(),
+            Arc::clone(&metrics),
+        ));
+        let trainer = Arc::new(TrainerPool::new(
+            Arc::clone(&registry),
+            metrics,
+            TrainerConfig::default(),
+        ));
+        Gateway::start_inner(registry, trainer, cfg, Some(router))
+    }
+
+    /// Shared constructor behind every public `start_*`: bind, build the
+    /// [`Shared`] state (with or without a router core), and launch the
+    /// configured I/O mode.
+    fn start_inner(
+        registry: Arc<ModelRegistry>,
+        trainer: Arc<TrainerPool>,
+        cfg: GatewayConfig,
+        router: Option<Arc<RouterCore>>,
+    ) -> Result<Gateway, String> {
         cfg.validate()?;
         let listener = TcpListener::bind(&cfg.addr)
             .map_err(|e| format!("gateway bind {}: {e}", cfg.addr))?;
@@ -277,6 +318,7 @@ impl Gateway {
             slow_ring,
             trace_seq: AtomicU64::new(0),
             stage_ns,
+            router,
             metrics,
             stop: AtomicBool::new(false),
         });
@@ -387,6 +429,10 @@ impl Drop for Gateway {
         // Training jobs are part of the drain contract: cancel and join
         // them so no background thread outlives the gateway.
         self.shared.trainer.shutdown();
+        // On the router role, stop and join the health prober too.
+        if let Some(router) = &self.shared.router {
+            router.shutdown();
+        }
         // Model coordinators drain when the registry's last Arc drops
         // (ours, or a straggler connection past the deadline) — in-flight
         // work is answered either way.
@@ -611,6 +657,12 @@ pub(super) fn serve_request<W: Write>(
         && !shared.stop.load(Ordering::Acquire)
         && !shared.admission.is_draining();
     if let Some(model) = infer_route(&req.method, req.route_path()) {
+        // Router role: inference routes are forwarded to upstream shards
+        // (the body travels byte-for-byte, so the binary f32 frame needs
+        // no reparsing here). Everything else still routes locally.
+        if shared.router.is_some() {
+            return proxy_infer(shared, req, model, &mut arena.span, writer, t0, keep);
+        }
         // Streaming fast path: parse into the arena, serve through the
         // slot protocol, serialize straight into the connection's write
         // buffers — no allocation after warmup. `Content-Type:
@@ -688,6 +740,91 @@ pub(super) fn respond_parse_error<W: Write>(shared: &Arc<Shared>, e: &HttpError,
     }
 }
 
+/// Serve one inference request on the router role: admit, place by model
+/// name on the ring, and forward through [`RouterCore::proxy`] (retry +
+/// hedging live there). The upstream's body travels byte-for-byte in both
+/// directions — JSON and the binary f32 frame proxy identically — and the
+/// winning shard's topology index is echoed as `x-acdc-upstream`. Returns
+/// the keep-alive verdict, mirroring the local fast path.
+fn proxy_infer<W: Write>(
+    shared: &Arc<Shared>,
+    req: &RequestScratch,
+    model: Option<&str>,
+    span: &mut SpanRecord,
+    writer: &mut W,
+    t0: Instant,
+    keep: bool,
+) -> bool {
+    span.reset();
+    if shared.cfg.trace.enabled {
+        let seq = shared.trace_seq.fetch_add(1, Ordering::Relaxed);
+        if seq % shared.cfg.trace.sample_every.max(1) == 0 {
+            span.trace_id = trace::mint_trace_id();
+        }
+    }
+    let a0 = Instant::now();
+    let resp = match shared.admission.try_admit() {
+        Err(e) => {
+            log::event(
+                Level::Debug,
+                "gateway",
+                "request_shed",
+                span.trace_id,
+                &[("reason", Field::Str(e.as_str()))],
+            );
+            shed_response(shared, e)
+        }
+        // The permit holds an in-flight slot for the whole upstream
+        // exchange; it drops when this arm's response is built.
+        Ok(_permit) => {
+            span.set(Stage::Admission, a0.elapsed());
+            let key = model.unwrap_or(LEGACY_MODEL);
+            let content_type = req.header("content-type").unwrap_or("application/json");
+            let router = shared.router.as_ref().expect("proxy_infer requires a router");
+            let u0 = Instant::now();
+            let result = router.proxy(key, req.route_path(), content_type, &req.body);
+            span.set(Stage::Upstream, u0.elapsed());
+            match result {
+                Ok(reply) => {
+                    let mut resp = Response {
+                        status: reply.status,
+                        headers: vec![("content-type".into(), reply.content_type)],
+                        body: reply.body,
+                    }
+                    .with_header("x-acdc-upstream", &reply.upstream.to_string());
+                    if reply.hedged {
+                        resp = resp.with_header("x-acdc-hedged", "1");
+                    }
+                    resp
+                }
+                Err((status, msg)) => {
+                    if status == 504 {
+                        shared.timeouts.inc();
+                    } else {
+                        shared.http_errors.inc();
+                    }
+                    Response::json(status, &err_json(&msg))
+                }
+            }
+        }
+    };
+    let status = resp.status;
+    if status == 200 {
+        shared.responses_ok.inc();
+    }
+    shared.request_ns.record(t0.elapsed());
+    let resp = if span.trace_id != 0 {
+        resp.with_header("x-trace-id", &format!("{:016x}", span.trace_id))
+    } else {
+        resp
+    };
+    let w0 = Instant::now();
+    let write_ok = resp.write_to(writer, keep).is_ok();
+    span.set(Stage::Write, w0.elapsed());
+    finish_span(shared, span, status, t0.elapsed());
+    write_ok && keep
+}
+
 fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
     let path = req.route_path();
     match (req.method.as_str(), path) {
@@ -696,10 +833,11 @@ fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
         ("GET", "/v1/models") => return list_models(shared),
         ("GET", "/v1/jobs") => return list_jobs(shared),
         ("GET", "/v1/debug/slow") => return debug_slow(shared),
+        ("GET", "/v1/cluster") => return cluster_topology(shared),
         // POST /v1/infer is served on the streaming fast path before
         // `route`; everything landing here is a bad method.
         (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/infer")
-        | (_, "/v1/jobs") | (_, "/v1/debug/slow") => {
+        | (_, "/v1/jobs") | (_, "/v1/debug/slow") | (_, "/v1/cluster") => {
             return Response::json(405, &err_json("method not allowed"));
         }
         _ => {}
@@ -728,6 +866,20 @@ fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
         }
         return train_submit(shared, req, name);
     }
+    // /v1/models/{name} — single-model snapshot. The cluster router
+    // polls this during a rolling swap: the `inflight` field reaching
+    // zero is the drain signal for the replica being upgraded.
+    if let Some(name) = path.strip_prefix("/v1/models/") {
+        if !name.is_empty() && !name.contains('/') {
+            if req.method != "GET" {
+                return Response::json(405, &err_json("method not allowed"));
+            }
+            return match shared.registry.info(name) {
+                Some(m) => Response::json(200, &model_json(&m)),
+                None => Response::json(404, &err_json(&format!("model '{name}' not found"))),
+            };
+        }
+    }
     // /v1/jobs/{id}/{pause|resume|cancel|promote}
     if let Some(rest) = path.strip_prefix("/v1/jobs/") {
         if let Some((id_str, action)) = rest.split_once('/') {
@@ -753,6 +905,20 @@ fn route(shared: &Arc<Shared>, req: &RequestScratch) -> Response {
                     "load" => admin_load(shared, req, name),
                     _ => admin_unload(shared, name),
                 };
+            }
+        }
+        return Response::json(404, &err_json("not found"));
+    }
+    // /v1/admin/cluster/models/{name}/load — router-only rolling swap:
+    // drain and upgrade one replica at a time across the model's ring
+    // placement (404 on shards and standalone gateways).
+    if let Some(rest) = path.strip_prefix("/v1/admin/cluster/models/") {
+        if let Some(name) = rest.strip_suffix("/load") {
+            if !name.is_empty() && !name.contains('/') {
+                if req.method != "POST" {
+                    return Response::json(405, &err_json("method not allowed"));
+                }
+                return cluster_load(shared, req, name);
             }
         }
         return Response::json(404, &err_json("not found"));
@@ -849,26 +1015,27 @@ fn debug_slow(shared: &Arc<Shared>) -> Response {
     )
 }
 
+/// One model's JSON rendering, shared by `GET /v1/models` and the
+/// single-model `GET /v1/models/{name}` route.
+fn model_json(m: &ModelInfo) -> Json {
+    obj(vec![
+        ("name", Json::Str(m.name.clone())),
+        ("version", Json::Num(m.version as f64)),
+        ("kind", Json::Str(m.kind.clone())),
+        ("width", Json::Num(m.width as f64)),
+        ("params", Json::Num(m.params as f64)),
+        ("inflight", Json::Num(m.inflight as f64)),
+        (
+            "aliases",
+            Json::Arr(m.aliases.iter().cloned().map(Json::Str).collect()),
+        ),
+        ("default", Json::Bool(m.is_default)),
+    ])
+}
+
 fn list_models(shared: &Arc<Shared>) -> Response {
     let infos = shared.registry.list();
-    let models: Vec<Json> = infos
-        .iter()
-        .map(|m| {
-            obj(vec![
-                ("name", Json::Str(m.name.clone())),
-                ("version", Json::Num(m.version as f64)),
-                ("kind", Json::Str(m.kind.clone())),
-                ("width", Json::Num(m.width as f64)),
-                ("params", Json::Num(m.params as f64)),
-                ("inflight", Json::Num(m.inflight as f64)),
-                (
-                    "aliases",
-                    Json::Arr(m.aliases.iter().cloned().map(Json::Str).collect()),
-                ),
-                ("default", Json::Bool(m.is_default)),
-            ])
-        })
-        .collect();
+    let models: Vec<Json> = infos.iter().map(model_json).collect();
     let default = match shared.registry.default_model() {
         Some(name) => Json::Str(name),
         None => Json::Null,
@@ -877,6 +1044,45 @@ fn list_models(shared: &Arc<Shared>) -> Response {
         200,
         &obj(vec![("models", Json::Arr(models)), ("default", default)]),
     )
+}
+
+/// `GET /v1/cluster` — topology + live health snapshot on the router
+/// role; 404 elsewhere (a shard has no cluster view).
+fn cluster_topology(shared: &Arc<Shared>) -> Response {
+    match &shared.router {
+        Some(router) => Response::json(200, &router.topology_json()),
+        None => Response::json(404, &err_json("not a cluster router")),
+    }
+}
+
+/// `POST /v1/admin/cluster/models/{name}/load` — the cluster-wide
+/// rolling swap. Body matches the shard-local load (`{"path": ...,
+/// "version"?: n}`); the router drains and upgrades each replica of
+/// `name` in ring order under live traffic.
+fn cluster_load(shared: &Arc<Shared>, req: &RequestScratch, name: &str) -> Response {
+    let Some(router) = &shared.router else {
+        return Response::json(404, &err_json("not a cluster router"));
+    };
+    let body = match admin_body(req) {
+        Ok(b) => b,
+        Err(resp) => return resp,
+    };
+    let Some(path) = body.get("path").and_then(|p| p.as_str()) else {
+        return Response::json(400, &err_json("body must carry a checkpoint 'path'"));
+    };
+    let version = match body.get("version") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(n) => Some(n as u64),
+            None => {
+                return Response::json(400, &err_json("'version' must be a non-negative integer"))
+            }
+        },
+    };
+    match router.rolling_swap(name, path, version) {
+        Ok(report) => Response::json(200, &report),
+        Err((status, msg)) => Response::json(status, &err_json(&msg)),
+    }
 }
 
 fn registry_error(e: &RegistryError) -> Response {

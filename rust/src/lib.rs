@@ -41,6 +41,7 @@
 #![warn(missing_docs)]
 
 pub mod checkpoint;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

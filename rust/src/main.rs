@@ -12,11 +12,15 @@
 //! acdc train-cnn [--config f.toml]  E6 end-to-end CNN training
 //! acdc serve  [--config f.toml]     serving demo over the coordinator (E7)
 //! acdc gateway [--addr host:port]   HTTP serving gateway (E8)
+//! acdc shard  [--config topo.toml]  cluster shard (a gateway serving its
+//!                                   slice of the topology)
+//! acdc router [--config topo.toml]  cluster router: ring placement,
+//!                                   replication, health checks, hedging
 //! acdc loadgen [--addr host:port]   closed/open-loop load generator (E8)
 //! acdc tail   [--addr host:port]    follow a gateway's slow-request ring
 //! ```
 
-use acdc::config::{Config, ServeConfig, TrainConfig, TrainerConfig};
+use acdc::config::{ClusterConfig, Config, GatewayConfig, ServeConfig, TrainConfig, TrainerConfig};
 use acdc::data::regression::RegressionTask;
 use acdc::data::synthimg::ImageCorpus;
 use acdc::experiments::{fig2, fig3, table1, trainer_bench};
@@ -68,6 +72,11 @@ fn run(sub: &str, rest: &[String]) -> Result<(), String> {
         "bench-families" => cmd_bench_families(rest),
         "serve" => cmd_serve(rest),
         "gateway" => cmd_gateway(rest),
+        // A shard IS a gateway (registry + trainer + HTTP front-end);
+        // the separate name exists so topologies read correctly and so
+        // shard-specific defaults can diverge later without a rename.
+        "shard" => cmd_gateway(rest),
+        "router" => cmd_router(rest),
         "loadgen" => cmd_loadgen(rest),
         "registry" => cmd_registry(rest),
         "tail" => cmd_tail(rest),
@@ -103,7 +112,13 @@ subcommands:
   serve       serving demo over the dynamic-batching coordinator
   gateway     multi-model HTTP serving gateway (POST /v1/models/{name}/infer,
               GET /v1/models, /healthz, /metrics, hot-swap admin endpoints)
+  shard       cluster shard: a gateway serving its slice of a topology
+              (alias of `gateway`; use --addr-file for ephemeral ports)
+  router      cluster router: consistent-hash placement + replication +
+              health-checked retry/hedging across [cluster] shards, and
+              the rolling swap (POST /v1/admin/cluster/models/{name}/load)
   loadgen     closed/open-loop load generator against a running gateway
+              (--targets a,b,c spreads workers across a cluster)
   registry    admin client: list | load | unload | alias | default against a
               running gateway's model registry
   tail        follow a running gateway's slow-request ring (GET /v1/debug/slow)
@@ -694,6 +709,11 @@ fn cmd_gateway(rest: &[String]) -> Result<(), String> {
     let mut opts = common_opts();
     opts.push(opt("config", "TOML config file ([gateway]/[registry] sections)", None));
     opts.push(opt("addr", "listen address (overrides config)", None));
+    opts.push(opt(
+        "addr-file",
+        "write the bound address to this file (ephemeral-port discovery)",
+        None,
+    ));
     opts.push(opt("n", "demo model width", Some("256")));
     opts.push(opt("k", "demo cascade depth", Some("12")));
     opts.push(opt("demo-model", "name the demo model registers under", Some("demo")));
@@ -765,6 +785,7 @@ fn cmd_gateway(rest: &[String]) -> Result<(), String> {
         sc.trainer.clone(),
     ));
     let gateway = Gateway::start_registry_with_trainer(registry, trainer, sc.gateway.clone())?;
+    write_addr_file(&args, gateway.local_addr())?;
     println!("gateway listening on http://{}", gateway.local_addr());
     println!("  POST /v1/models/{{name}}/infer  {{\"features\": [...]}} or {{\"rows\": [[...], ...]}}");
     println!("  POST /v1/infer                 same, against the default model");
@@ -786,6 +807,66 @@ fn cmd_gateway(rest: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// Write the bound address to `--addr-file` if the flag was given —
+/// multi-process tests spawn shards/routers on port 0 and read the file
+/// to discover where each child actually landed.
+fn write_addr_file(args: &Args, addr: std::net::SocketAddr) -> Result<(), String> {
+    if let Some(path) = args.get("addr-file") {
+        std::fs::write(path, format!("{addr}\n")).map_err(|e| format!("write {path}: {e}"))?;
+    }
+    Ok(())
+}
+
+fn cmd_router(rest: &[String]) -> Result<(), String> {
+    let opts = vec![
+        opt(
+            "config",
+            "TOML topology file ([cluster] + [gateway] sections)",
+            None,
+        ),
+        opt("addr", "listen address (overrides config)", None),
+        opt(
+            "addr-file",
+            "write the bound address to this file (ephemeral-port discovery)",
+            None,
+        ),
+        opt("duration-s", "serve N seconds then drain (0 = forever)", Some("0")),
+    ];
+    let args = Args::parse_from(rest, opts)?;
+    let Some(path) = args.get("config") else {
+        return Err("router requires --config with a [cluster] shard topology".into());
+    };
+    let cfg = Config::from_file(Path::new(path))?;
+    let cluster = ClusterConfig::from_config(&cfg)?;
+    let mut gw = GatewayConfig::from_config(&cfg)?;
+    if let Some(addr) = args.get("addr") {
+        gw.addr = addr.to_string();
+    }
+    let shard_count = cluster.shards.len();
+    let replication = cluster.replication;
+    let gateway = Gateway::start_router(cluster, gw)?;
+    write_addr_file(&args, gateway.local_addr())?;
+    println!(
+        "router listening on http://{}  ({shard_count} shards, R={replication})",
+        gateway.local_addr()
+    );
+    println!("  POST /v1/infer | /v1/models/{{name}}/infer   proxied across the ring");
+    println!("  POST /v1/admin/cluster/models/{{name}}/load  rolling version swap");
+    println!("  GET  /v1/cluster                            topology + shard health");
+    println!("  GET  /healthz /metrics                      liveness, Prometheus text");
+    let duration_s = args.get_usize("duration-s")?.unwrap();
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_s as u64));
+    println!("draining...");
+    gateway.shutdown();
+    println!("router stopped");
+    Ok(())
+}
+
 fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
     let opts = vec![
         opt("addr", "gateway address", Some("127.0.0.1:7878")),
@@ -797,6 +878,11 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         opt("rows", "rows-per-request mix, e.g. 1,1,8", Some("1")),
         opt("timeout-ms", "per-request timeout", Some("5000")),
         opt("seed", "rng seed", Some("0")),
+        opt(
+            "targets",
+            "comma-separated addresses to spread workers across (cluster runs)",
+            None,
+        ),
         flag("binary", "send the binary f32 wire frame instead of JSON"),
     ];
     let args = Args::parse_from(rest, opts)?;
@@ -816,14 +902,23 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         rows_mix: args.get_usize_list("rows")?.unwrap(),
         timeout: Duration::from_millis(args.get_usize("timeout-ms")?.unwrap() as u64),
         seed: args.get_usize("seed")?.unwrap() as u64,
+        targets: args
+            .get("targets")
+            .map(|s| s.split(',').map(|t| t.trim().to_string()).collect())
+            .unwrap_or_default(),
         binary: args.flag("binary"),
+    };
+    let against = if cfg.targets.is_empty() {
+        cfg.addr.clone()
+    } else {
+        cfg.targets.join(",")
     };
     println!(
         "loadgen: {:?} × {} workers for {:?} against {} ({})",
         cfg.mode,
         cfg.concurrency,
         cfg.duration,
-        cfg.addr,
+        against,
         if cfg.binary { "binary frame" } else { "json" },
     );
     let report = acdc::gateway::loadgen::run(&cfg)?;

@@ -507,6 +507,38 @@ impl ModelRegistry {
         self.len() == 0
     }
 
+    /// Snapshot of one model (or alias) by name, or `None` if not
+    /// loaded. Backs the shard's `GET /v1/models/{name}` route — the
+    /// cluster router polls the `inflight` field to decide when a
+    /// replica has drained during a rolling swap.
+    pub fn info(&self, name: &str) -> Option<ModelInfo> {
+        let inner = self.inner.lock().unwrap();
+        let canonical = resolve_name(&inner, name).ok()?;
+        let entry = inner.models.get(&canonical)?;
+        let epoch = entry.current.lock().unwrap();
+        let mut aliases: Vec<String> = inner
+            .aliases
+            .iter()
+            .filter(|(_, target)| **target == canonical)
+            .map(|(alias, _)| alias.clone())
+            .collect();
+        aliases.sort();
+        let default_canonical = inner
+            .default_model
+            .as_ref()
+            .and_then(|d| resolve_name(&inner, d).ok());
+        Some(ModelInfo {
+            name: canonical.clone(),
+            version: epoch.version,
+            kind: epoch.kind.clone(),
+            width: epoch.width,
+            params: epoch.params,
+            inflight: entry.inflight.load(Ordering::Acquire),
+            aliases,
+            is_default: default_canonical.as_deref() == Some(canonical.as_str()),
+        })
+    }
+
     /// Snapshot of every loaded model, sorted by name.
     pub fn list(&self) -> Vec<ModelInfo> {
         let inner = self.inner.lock().unwrap();

@@ -39,6 +39,9 @@ pub enum Stage {
     Parse,
     /// Admission control: drain gate, in-flight cap, token bucket.
     Admission,
+    /// Upstream proxy exchange on the router role (connect + write +
+    /// wait + read across retries/hedges); zero on shard gateways.
+    Upstream,
     /// Enqueue until the batcher formed a batch containing the request.
     QueueWait,
     /// Batch handoff: formation until the worker starts executing
@@ -54,12 +57,13 @@ pub enum Stage {
 
 impl Stage {
     /// Number of stages (the span record's slot count).
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
 
     /// All stages in pipeline order.
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::Parse,
         Stage::Admission,
+        Stage::Upstream,
         Stage::QueueWait,
         Stage::BatchForm,
         Stage::Execute,
@@ -77,6 +81,7 @@ impl Stage {
         match self {
             Stage::Parse => "parse",
             Stage::Admission => "admission",
+            Stage::Upstream => "upstream",
             Stage::QueueWait => "queue_wait",
             Stage::BatchForm => "batch_form",
             Stage::Execute => "execute",

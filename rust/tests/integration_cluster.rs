@@ -1,0 +1,468 @@
+//! Integration: cluster mode end-to-end, multi-process.
+//!
+//! Spawns real `acdc shard` and `acdc router` processes (via
+//! `CARGO_BIN_EXE_acdc`) on ephemeral ports and drives them over HTTP:
+//!
+//! * **rolling swap under live traffic** — a router fronting 3 shards
+//!   (R=2) promotes a model version with 4 keep-alive clients hammering
+//!   it: zero failed requests, per-upstream version tags monotonic (each
+//!   shard swaps exactly once, in ring drain order), outputs always
+//!   consistent with the version the response claims;
+//! * **fault injection** — SIGKILL one replica mid-traffic: zero
+//!   client-visible errors (transparent retry/hedge onto the surviving
+//!   replica), the kill is visible as `acdc_cluster_shard{i}_healthy 0`
+//!   in the router's `/metrics`, and a restarted shard is re-admitted
+//!   after the `up_after` probe hysteresis and serves again.
+//!
+//! Children inherit `ACDC_GW_MODE`, so the CI cluster job runs this
+//! whole file under both the reactor and threaded gateways. Run with
+//! `--test-threads=1`: each test owns a process fleet.
+
+use acdc::cluster::Ring;
+use acdc::gateway::http;
+use acdc::registry::SellModel;
+use acdc::sell::acdc::{AcdcCascade, AcdcLayer};
+use acdc::util::json::{obj, Json};
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Vnodes the router uses (config default) — placement computed in-test
+/// with the same ring must agree with the router's.
+const VNODES: usize = 128;
+
+const V1_TAG: f64 = 0.0;
+const V2_TAG: f64 = 3.0;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("acdc_cluster_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Identity ACDC layer plus a spectral bias tuned so `y = x + tag`
+/// elementwise — the version tag readable off any response body.
+fn tagged_model(n: usize, tag: f32) -> SellModel {
+    let mut layer = AcdcLayer::identity(n);
+    if tag != 0.0 {
+        let mut bias = vec![tag; n];
+        let mut scratch = vec![0.0f32; 2 * n];
+        layer.plan().dct2(&mut bias, &mut scratch);
+        layer.bias = bias;
+    }
+    SellModel::Acdc(AcdcCascade {
+        layers: vec![layer],
+        perms: None,
+        relu: false,
+        train_bias: false,
+    })
+}
+
+/// A spawned child that is SIGKILLed when the test (or a panic unwind)
+/// drops it — no orphaned gateways after a failed assertion.
+struct Proc(std::process::Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+fn spawn(args: &[&str]) -> Proc {
+    Proc(
+        Command::new(env!("CARGO_BIN_EXE_acdc"))
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn acdc"),
+    )
+}
+
+/// Poll the `--addr-file` a child writes once its listener is bound.
+fn wait_addr(path: &Path) -> SocketAddr {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while Instant::now() < deadline {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            if let Ok(a) = s.trim().parse() {
+                return a;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("no address appeared in {}", path.display());
+}
+
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(
+        &mut stream,
+        method,
+        path,
+        &[("content-type", "application/json")],
+        body,
+    )
+    .expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+/// Poll the router's `GET /v1/cluster` until shard `index` reports
+/// `healthy == want` (index `None` = all shards), within 15s.
+fn wait_health(router: SocketAddr, index: Option<usize>, want: bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut last = Json::Null;
+    while Instant::now() < deadline {
+        let resp = one_shot(router, "GET", "/v1/cluster", b"");
+        if resp.status == 200 {
+            last = Json::parse(resp.body_str()).unwrap();
+            let shards = last.get("shards").and_then(|s| s.as_arr()).unwrap();
+            let ok = match index {
+                Some(i) => shards[i].get("healthy").and_then(|h| h.as_bool()) == Some(want),
+                None => shards
+                    .iter()
+                    .all(|s| s.get("healthy").and_then(|h| h.as_bool()) == Some(want)),
+            };
+            if ok {
+                return last;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("cluster never reached healthy={want} for {index:?}; last: {last}");
+}
+
+/// One keep-alive inference exchange through the router. Returns
+/// `(status, version, tag, upstream)`; non-200 responses carry
+/// placeholder payload fields.
+fn infer_once(
+    stream: &mut TcpStream,
+    reader: &mut BufReader<TcpStream>,
+    n: usize,
+) -> (u16, i64, f64, i64) {
+    let features = Json::Arr((0..n).map(|_| Json::Num(1.0)).collect());
+    let body = obj(vec![("features", features)]).to_string();
+    http::write_request(
+        stream,
+        "POST",
+        "/v1/models/m/infer",
+        &[("content-type", "application/json")],
+        body.as_bytes(),
+    )
+    .expect("write");
+    let resp = http::read_response(reader).expect("response");
+    let upstream = resp
+        .header("x-acdc-upstream")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(-1);
+    if resp.status != 200 {
+        return (resp.status, -1, f64::NAN, upstream);
+    }
+    let v = Json::parse(resp.body_str()).unwrap();
+    let version = v.get("version").and_then(|x| x.as_i64()).unwrap_or(-1);
+    let out0 = v.get("output").unwrap().as_arr().unwrap()[0]
+        .as_f64()
+        .unwrap();
+    // Probe row is all-ones, model is identity + tag: out = 1 + tag.
+    (resp.status, version, out0 - 1.0, upstream)
+}
+
+struct Cluster {
+    dir: PathBuf,
+    shard_cfg: PathBuf,
+    shards: Vec<Proc>,
+    shard_addrs: Vec<SocketAddr>,
+    _router: Proc,
+    router_addr: SocketAddr,
+    v2_path: PathBuf,
+}
+
+/// Boot a full fleet: v1/v2 checkpoints, 3 shards preloading v1, and a
+/// router with R=2 and fast probe/hysteresis knobs for test turnaround.
+fn boot(tag: &str, n: usize) -> Cluster {
+    let dir = temp_dir(tag);
+    let v1_path = dir.join("m_v1.ckpt");
+    let v2_path = dir.join("m_v2.ckpt");
+    tagged_model(n, V1_TAG as f32)
+        .to_checkpoint()
+        .unwrap()
+        .save(&v1_path)
+        .unwrap();
+    tagged_model(n, V2_TAG as f32)
+        .to_checkpoint()
+        .unwrap()
+        .save(&v2_path)
+        .unwrap();
+
+    let shard_cfg = dir.join("shard.toml");
+    std::fs::write(
+        &shard_cfg,
+        format!(
+            "[serve]\nbuckets = [1, 8]\nmax_wait_us = 200\nworkers = 2\n\n\
+             [gateway]\naddr = \"127.0.0.1:0\"\n\n\
+             [registry]\nmodels = [\"m={}\"]\ndefault_model = \"m\"\n",
+            v1_path.display()
+        ),
+    )
+    .unwrap();
+
+    let mut shards = Vec::new();
+    let mut shard_addrs = Vec::new();
+    for i in 0..3 {
+        let addr_file = dir.join(format!("shard{i}.addr"));
+        std::fs::remove_file(&addr_file).ok();
+        shards.push(spawn(&[
+            "shard",
+            "--config",
+            shard_cfg.to_str().unwrap(),
+            "--no-demo",
+            "--addr-file",
+            addr_file.to_str().unwrap(),
+        ]));
+        shard_addrs.push(wait_addr(&addr_file));
+    }
+
+    let router_cfg = dir.join("router.toml");
+    let shard_list = shard_addrs
+        .iter()
+        .map(|a| format!("\"{a}\""))
+        .collect::<Vec<_>>()
+        .join(", ");
+    std::fs::write(
+        &router_cfg,
+        format!(
+            "[cluster]\nshards = [{shard_list}]\nreplication = 2\nvnodes = {VNODES}\n\
+             probe_interval_ms = 100\ndown_after = 2\nup_after = 2\nhedge_min_ms = 100\n\n\
+             [gateway]\naddr = \"127.0.0.1:0\"\n"
+        ),
+    )
+    .unwrap();
+    let router_addr_file = dir.join("router.addr");
+    let router = spawn(&[
+        "router",
+        "--config",
+        router_cfg.to_str().unwrap(),
+        "--addr-file",
+        router_addr_file.to_str().unwrap(),
+    ]);
+    let router_addr = wait_addr(&router_addr_file);
+    wait_health(router_addr, None, true);
+
+    Cluster {
+        dir,
+        shard_cfg,
+        shards,
+        shard_addrs,
+        _router: router,
+        router_addr,
+        v2_path,
+    }
+}
+
+/// The model's replica set in drain order, computed with the same ring
+/// the router builds from the topology.
+fn replica_set(c: &Cluster) -> Vec<usize> {
+    let addrs: Vec<String> = c.shard_addrs.iter().map(|a| a.to_string()).collect();
+    Ring::new(&addrs, VNODES).place("m", 2)
+}
+
+/// A client thread's observation log: (status, version, tag, upstream).
+type Seen = Vec<(u16, i64, f64, i64)>;
+
+fn client_loop(router: SocketAddr, n: usize, run_for: Duration) -> Seen {
+    let mut stream = TcpStream::connect(router).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let t_end = Instant::now() + run_for;
+    let mut seen = Vec::new();
+    while Instant::now() < t_end {
+        seen.push(infer_once(&mut stream, &mut reader, n));
+    }
+    seen
+}
+
+/// Every observation is a 200, its output tag matches the version the
+/// response claims, and per upstream the version never goes backwards
+/// (each shard swaps 1 → 2 exactly once).
+fn check_seen(seen: &Seen, ctx: &str) {
+    let mut last_version: HashMap<i64, i64> = HashMap::new();
+    for &(status, version, tag, upstream) in seen {
+        assert_eq!(status, 200, "{ctx}: client-visible failure");
+        let want = if version == 1 { V1_TAG } else { V2_TAG };
+        assert!(
+            (tag - want).abs() < 1e-3,
+            "{ctx}: response claims v{version} but output tag is {tag}"
+        );
+        let prev = last_version.entry(upstream).or_insert(version);
+        assert!(
+            version >= *prev,
+            "{ctx}: upstream {upstream} went backwards v{prev} -> v{version}"
+        );
+        *prev = version;
+    }
+}
+
+#[test]
+fn rolling_swap_under_live_traffic_loses_nothing() {
+    let n = 16;
+    let c = boot("swap", n);
+    let replicas = replica_set(&c);
+    assert_eq!(replicas.len(), 2);
+
+    // Pre-swap: v1 everywhere, answered by a shard in the replica set.
+    let mut probe = TcpStream::connect(c.router_addr).unwrap();
+    probe
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut probe_reader = BufReader::new(probe.try_clone().unwrap());
+    let (status, version, tag, upstream) = infer_once(&mut probe, &mut probe_reader, n);
+    assert_eq!((status, version), (200, 1));
+    assert!((tag - V1_TAG).abs() < 1e-3);
+    assert!(
+        replicas.contains(&(upstream as usize)),
+        "answered by shard {upstream}, expected one of {replicas:?}"
+    );
+
+    // 4 keep-alive clients hammer the model across the swap.
+    let router = c.router_addr;
+    let clients: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(move || client_loop(router, n, Duration::from_millis(1500))))
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(300));
+    let body = obj(vec![
+        ("path", Json::Str(c.v2_path.display().to_string())),
+        ("version", Json::Num(2.0)),
+    ])
+    .to_string();
+    let resp = one_shot(
+        c.router_addr,
+        "POST",
+        "/v1/admin/cluster/models/m/load",
+        body.as_bytes(),
+    );
+    assert_eq!(resp.status, 200, "rolling swap failed: {}", resp.body_str());
+    let swap = Json::parse(resp.body_str()).unwrap();
+    assert_eq!(swap.get("status").and_then(|s| s.as_str()), Some("swapped"));
+    let done = swap.get("replicas").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(done.len(), replicas.len(), "one outcome per replica");
+    for (entry, &want_shard) in done.iter().zip(&replicas) {
+        // Outcomes are listed in ring order — the drain order.
+        assert_eq!(
+            entry.get("shard").and_then(|s| s.as_i64()),
+            Some(want_shard as i64)
+        );
+        assert_eq!(entry.get("version").and_then(|v| v.as_i64()), Some(2));
+    }
+
+    for (i, cl) in clients.into_iter().enumerate() {
+        let seen = cl.join().unwrap();
+        assert!(!seen.is_empty());
+        check_seen(&seen, &format!("client {i}"));
+    }
+
+    // Post-swap: the probe connection (admitted pre-swap) sees v2 now.
+    let (status, version, tag, _) = infer_once(&mut probe, &mut probe_reader, n);
+    assert_eq!((status, version), (200, 2), "post-swap admission on v2");
+    assert!((tag - V2_TAG).abs() < 1e-3);
+
+    // The swap is visible in the router's own telemetry.
+    let metrics = one_shot(c.router_addr, "GET", "/metrics", b"");
+    assert_eq!(metrics.status, 200);
+    assert!(
+        metrics.body_str().contains("acdc_cluster_rolling_swaps 1"),
+        "rolling_swaps counter missing from /metrics"
+    );
+    wait_health(c.router_addr, None, true);
+
+    std::fs::remove_dir_all(&c.dir).ok();
+}
+
+#[test]
+fn sigkill_failover_is_invisible_and_restart_readmits() {
+    let n = 16;
+    let mut c = boot("kill", n);
+    let replicas = replica_set(&c);
+    let victim = replicas[0];
+    let victim_addr = c.shard_addrs[victim];
+
+    // Traffic across the kill: 4 keep-alive clients for ~2s, SIGKILL the
+    // model's primary replica 500ms in. Every request must still answer
+    // 200 — the router retries/hedges onto the surviving replica.
+    let router = c.router_addr;
+    let clients: Vec<_> = (0..4)
+        .map(|_| std::thread::spawn(move || client_loop(router, n, Duration::from_millis(2000))))
+        .collect();
+    std::thread::sleep(Duration::from_millis(500));
+    c.shards[victim].0.kill().expect("SIGKILL shard");
+
+    for (i, cl) in clients.into_iter().enumerate() {
+        let seen = cl.join().unwrap();
+        assert!(!seen.is_empty());
+        check_seen(&seen, &format!("client {i}"));
+        // After the kill no response may come from the dead shard, and
+        // the survivor must actually have answered.
+        let survivor = replicas[1] as i64;
+        assert!(
+            seen.iter().any(|&(_, _, _, u)| u == survivor),
+            "client {i} never reached surviving replica {survivor}"
+        );
+    }
+
+    // The kill is observable: probes mark the shard down (hysteresis:
+    // down_after=2 at 100ms) and the gauge flips in /metrics.
+    wait_health(c.router_addr, Some(victim), false);
+    let metrics = one_shot(c.router_addr, "GET", "/metrics", b"");
+    assert!(
+        metrics
+            .body_str()
+            .contains(&format!("acdc_cluster_shard{victim}_healthy 0")),
+        "mark-down not visible in router /metrics"
+    );
+
+    // Restart the shard on its original topology address; `up_after`
+    // consecutive probe successes re-admit it.
+    c.shards[victim] = spawn(&[
+        "shard",
+        "--config",
+        c.shard_cfg.to_str().unwrap(),
+        "--no-demo",
+        "--addr",
+        &victim_addr.to_string(),
+    ]);
+    wait_health(c.router_addr, Some(victim), true);
+    let metrics = one_shot(c.router_addr, "GET", "/metrics", b"");
+    assert!(
+        metrics
+            .body_str()
+            .contains(&format!("acdc_cluster_shard{victim}_healthy 1")),
+        "re-admission not visible in router /metrics"
+    );
+
+    // The re-admitted fleet serves: drive enough fresh requests that the
+    // least-loaded fan-out reaches the restarted replica again.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut stream = TcpStream::connect(c.router_addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut hit_restarted = false;
+    while Instant::now() < deadline && !hit_restarted {
+        let (status, version, _, upstream) = infer_once(&mut stream, &mut reader, n);
+        assert_eq!((status, version), (200, 1), "post-restart inference");
+        hit_restarted = upstream as usize == victim;
+    }
+    assert!(hit_restarted, "restarted shard never served a request");
+
+    std::fs::remove_dir_all(&c.dir).ok();
+}
