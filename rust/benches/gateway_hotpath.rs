@@ -136,6 +136,7 @@ fn main() {
         timeout: Duration::from_secs(30),
         seed: 7,
         binary: false,
+        ..Default::default()
     })
     .expect("loadgen");
     println!("loopback closed-loop, native ACDC-12 (N=256), 8 workers, mix 3×1+1×8 rows:");

@@ -21,6 +21,19 @@
 //!   request) mark a shard down; `up_after` consecutive `/healthz` probe
 //!   successes mark it back up. A flapping shard cannot oscillate per
 //!   request.
+//! * **circuit breaking** — independently of probe health, each upstream
+//!   carries a breaker fed only by *request-path* outcomes: when
+//!   `breaker_trip_ratio` of the last `breaker_window` exchanges failed,
+//!   the breaker opens and placement skips the shard. After
+//!   `breaker_cooldown_ms` one request is admitted as a half-open probe;
+//!   its success closes the breaker, its failure re-opens it. This
+//!   catches a shard that answers `/healthz` but fails or stalls real
+//!   work (the probe path never feeds the breaker, and vice versa).
+//! * **deadline budget** — the gateway hands `proxy` the request's
+//!   remaining deadline budget; every hop forwards the live remainder as
+//!   the `x-acdc-deadline-ms` header, and a retry or hedge is refused
+//!   when the remainder is below the target shard's live p50 latency —
+//!   no attempt is started that the client will not wait for.
 //!
 //! The rolling swap ([`RouterCore::rolling_swap`]) upgrades a model
 //! version across its replica set one shard at a time: mark the shard
@@ -82,8 +95,8 @@ const READ_SLICE: Duration = Duration::from_millis(50);
 const DRAIN_POLL: Duration = Duration::from_millis(20);
 
 /// One upstream shard: address, health/drain state, hysteresis counters,
-/// the keep-alive connection pool, and the cached per-shard metric
-/// handles (`cluster.shard{i}.*`).
+/// the request-path circuit breaker, the keep-alive connection pool, and
+/// the cached per-shard metric handles (`cluster.shard{i}.*`).
 struct Upstream {
     addr: String,
     healthy: AtomicBool,
@@ -94,11 +107,141 @@ struct Upstream {
     consec_fail: AtomicU64,
     consec_ok: AtomicU64,
     pool: Mutex<Vec<Live>>,
+    /// Circuit breaker over request-path outcomes only (probes never
+    /// feed it).
+    breaker: Mutex<Breaker>,
     healthy_gauge: Arc<Gauge>,
+    /// 1 while the breaker is open or half-open, 0 when closed.
+    breaker_gauge: Arc<Gauge>,
     requests: Arc<Counter>,
     errors: Arc<Counter>,
     hedges: Arc<Counter>,
     request_ns: Arc<Histogram>,
+}
+
+/// Circuit-breaker position.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BreakerState {
+    /// Normal service; outcomes fill the rolling window.
+    Closed,
+    /// Tripped; the shard is skipped until the cooldown elapses.
+    Open,
+    /// Cooldown elapsed; one request probes the shard.
+    HalfOpen,
+}
+
+/// Per-upstream circuit breaker (guarded by the upstream's mutex). The
+/// rolling window is a bitmask — `breaker_window` is capped at 64 by
+/// config validation — so recording an outcome is a shift and a popcount.
+struct Breaker {
+    /// Newest outcome in bit 0; a set bit is a failure.
+    window: u64,
+    /// Valid bits in `window` (a breaker only trips on a full window, so
+    /// a fresh or just-closed breaker needs `breaker_window` outcomes).
+    len: u32,
+    state: BreakerState,
+    opened_at: Instant,
+    /// A half-open probe request is in flight; admits block until its
+    /// outcome is recorded.
+    probing: bool,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker {
+            window: 0,
+            len: 0,
+            state: BreakerState::Closed,
+            opened_at: Instant::now(),
+            probing: false,
+        }
+    }
+
+    /// Record one request-path outcome; returns the new state if this
+    /// outcome moved the breaker.
+    fn record(
+        &mut self,
+        ok: bool,
+        window: u32,
+        trip_ratio: f64,
+        now: Instant,
+    ) -> Option<BreakerState> {
+        match self.state {
+            BreakerState::HalfOpen => {
+                self.probing = false;
+                if ok {
+                    self.state = BreakerState::Closed;
+                    self.window = 0;
+                    self.len = 0;
+                    Some(BreakerState::Closed)
+                } else {
+                    self.state = BreakerState::Open;
+                    self.opened_at = now;
+                    Some(BreakerState::Open)
+                }
+            }
+            // A straggler outcome from an exchange fired before the trip
+            // carries no new information about the open shard.
+            BreakerState::Open => None,
+            BreakerState::Closed => {
+                let mask = if window >= 64 {
+                    u64::MAX
+                } else {
+                    (1u64 << window) - 1
+                };
+                self.window = ((self.window << 1) | u64::from(!ok)) & mask;
+                self.len = (self.len + 1).min(window);
+                let fails = self.window.count_ones();
+                if self.len >= window && f64::from(fails) >= trip_ratio * f64::from(window) {
+                    self.state = BreakerState::Open;
+                    self.opened_at = now;
+                    self.window = 0;
+                    self.len = 0;
+                    Some(BreakerState::Open)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Whether a request may be sent to this upstream right now. An open
+    /// breaker past its cooldown flips to half-open and admits the
+    /// caller as the probe candidate.
+    fn admit(&mut self, cooldown: Duration, now: Instant) -> bool {
+        match self.state {
+            BreakerState::Closed => true,
+            BreakerState::Open => {
+                if now.saturating_duration_since(self.opened_at) >= cooldown {
+                    self.state = BreakerState::HalfOpen;
+                    self.probing = false;
+                    true
+                } else {
+                    false
+                }
+            }
+            BreakerState::HalfOpen => !self.probing,
+        }
+    }
+
+    /// Mark the half-open probe as actually fired — further admits block
+    /// until [`Breaker::record`] lands its outcome. (If an admitted
+    /// candidate is never fired at, the next request simply probes
+    /// instead; nothing can wedge.)
+    fn on_fire(&mut self) {
+        if self.state == BreakerState::HalfOpen {
+            self.probing = true;
+        }
+    }
+
+    /// State name for the topology snapshot.
+    fn state_name(&self) -> &'static str {
+        match self.state {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
 }
 
 /// A dialed upstream connection with its buffered reader half.
@@ -134,6 +277,9 @@ pub struct RouterCore {
     proxy_retries: Arc<Counter>,
     proxy_hedges: Arc<Counter>,
     rolling_swaps: Arc<Counter>,
+    breaker_trips: Arc<Counter>,
+    /// Hedging master switch — the brownout ladder's level-1 action.
+    hedging: AtomicBool,
     stop: AtomicBool,
     prober: Mutex<Option<JoinHandle<()>>>,
 }
@@ -160,7 +306,9 @@ impl RouterCore {
                     consec_fail: AtomicU64::new(0),
                     consec_ok: AtomicU64::new(0),
                     pool: Mutex::new(Vec::new()),
+                    breaker: Mutex::new(Breaker::new()),
                     healthy_gauge,
+                    breaker_gauge: metrics.gauge(&format!("cluster.shard{i}.breaker_open")),
                     requests: metrics.counter(&format!("cluster.shard{i}.requests")),
                     errors: metrics.counter(&format!("cluster.shard{i}.errors")),
                     hedges: metrics.counter(&format!("cluster.shard{i}.hedges")),
@@ -176,6 +324,8 @@ impl RouterCore {
             proxy_retries: metrics.counter("cluster.proxy_retries"),
             proxy_hedges: metrics.counter("cluster.proxy_hedges"),
             rolling_swaps: metrics.counter("cluster.rolling_swaps"),
+            breaker_trips: metrics.counter("cluster.breaker_trips"),
+            hedging: AtomicBool::new(true),
             stop: AtomicBool::new(false),
             prober: Mutex::new(None),
             cfg,
@@ -192,6 +342,13 @@ impl RouterCore {
     /// The cluster topology knobs this router was built from.
     pub fn cfg(&self) -> &ClusterConfig {
         &self.cfg
+    }
+
+    /// Enable or disable request hedging (the brownout ladder's level-1
+    /// action — duplicate upstream work is the first cost to shed).
+    /// Retries are unaffected.
+    pub fn set_hedging(&self, enabled: bool) {
+        self.hedging.store(enabled, Ordering::Release);
     }
 
     /// Stop and join the prober thread (idempotent; called from the
@@ -290,6 +447,62 @@ impl RouterCore {
         }
     }
 
+    /// Feed one request-path outcome into shard `i`'s circuit breaker
+    /// (never called from the prober — a shard that answers `/healthz`
+    /// but fails real work must still trip). Transitions are logged and
+    /// mirrored into `cluster.shard{i}.breaker_open`.
+    fn breaker_record(&self, i: usize, ok: bool) {
+        let u = &self.upstreams[i];
+        let changed = u.breaker.lock().unwrap().record(
+            ok,
+            self.cfg.breaker_window as u32,
+            self.cfg.breaker_trip_ratio,
+            Instant::now(),
+        );
+        match changed {
+            Some(BreakerState::Open) => {
+                self.breaker_trips.inc();
+                u.breaker_gauge.set(1);
+                log::event(
+                    Level::Warn,
+                    "cluster",
+                    "breaker_open",
+                    0,
+                    &[("shard", Field::U64(i as u64)), ("addr", Field::Str(&u.addr))],
+                );
+            }
+            Some(BreakerState::Closed) => {
+                u.breaker_gauge.set(0);
+                log::event(
+                    Level::Info,
+                    "cluster",
+                    "breaker_closed",
+                    0,
+                    &[("shard", Field::U64(i as u64)), ("addr", Field::Str(&u.addr))],
+                );
+            }
+            _ => {}
+        }
+    }
+
+    /// Whether shard `i`'s breaker admits a request right now (an open
+    /// breaker past its cooldown flips half-open and admits the probe).
+    fn breaker_admit(&self, i: usize) -> bool {
+        self.upstreams[i].breaker.lock().unwrap().admit(
+            Duration::from_millis(self.cfg.breaker_cooldown_ms),
+            Instant::now(),
+        )
+    }
+
+    /// Whether the remaining budget plausibly covers one more attempt at
+    /// shard `i`: its live p50 must fit inside the remainder. A cold
+    /// histogram reads 0 and always fits, so a fresh cluster is never
+    /// gated on data it does not have.
+    fn budget_covers_p50(&self, i: usize, deadline: Instant) -> bool {
+        let p50 = Duration::from_nanos(self.upstreams[i].request_ns.percentile_ns(50.0));
+        deadline.saturating_duration_since(Instant::now()) >= p50
+    }
+
     // -- connections -------------------------------------------------------
 
     fn dial(&self, addr: &str) -> Result<Live, String> {
@@ -318,38 +531,61 @@ impl RouterCore {
         }
     }
 
-    /// Write one request on a pooled or fresh connection. A stale pooled
-    /// socket (closed by the shard since checkout) costs one silent
-    /// redial, not a shard failure mark.
-    fn fire(&self, i: usize, path: &str, content_type: &str, body: &[u8]) -> Result<Live, String> {
-        let headers = [("content-type", content_type)];
+    /// Write one request on a pooled or fresh connection, forwarding the
+    /// live remaining deadline budget as `x-acdc-deadline-ms` so the
+    /// shard's own pipeline can reap work this hop has already given up
+    /// on. A stale pooled socket (closed by the shard since checkout)
+    /// costs one silent redial, not a shard failure mark.
+    fn fire(
+        &self,
+        i: usize,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+        remaining_ms: u64,
+    ) -> Result<Live, String> {
+        let ms = remaining_ms.to_string();
+        let headers = [
+            ("content-type", content_type),
+            ("x-acdc-deadline-ms", ms.as_str()),
+        ];
         if let Some(mut live) = self.checkout(i) {
             if http::write_request(&mut live.stream, "POST", path, &headers, body).is_ok() {
+                self.upstreams[i].breaker.lock().unwrap().on_fire();
                 return Ok(live);
             }
         }
         let mut live = self.dial(&self.upstreams[i].addr)?;
         http::write_request(&mut live.stream, "POST", path, &headers, body)
             .map_err(|e| format!("write {}: {e}", self.upstreams[i].addr))?;
+        self.upstreams[i].breaker.lock().unwrap().on_fire();
         Ok(live)
     }
 
     // -- selection ---------------------------------------------------------
 
     /// The replica set of `key` ordered for attempts: healthy
-    /// non-draining shards by ascending in-flight count, then (only if
-    /// none exist — e.g. a single-replica model mid-swap) healthy
-    /// draining shards. Down shards never appear.
+    /// non-draining shards whose breakers admit, by ascending in-flight
+    /// count. If every breaker is open the breaker filter is dropped
+    /// (a fully-tripped replica set degrades to pre-breaker behavior
+    /// instead of refusing all traffic); if even that is empty, healthy
+    /// draining shards (e.g. a single-replica model mid-swap). Down
+    /// shards never appear.
     fn candidates(&self, key: &str) -> Vec<usize> {
         let replicas = self.ring.place(key, self.cfg.replication);
+        let alive = |i: &usize| {
+            self.upstreams[*i].healthy.load(Ordering::Acquire)
+                && !self.upstreams[*i].draining.load(Ordering::Acquire)
+        };
         let mut open: Vec<usize> = replicas
             .iter()
             .copied()
-            .filter(|&i| {
-                self.upstreams[i].healthy.load(Ordering::Acquire)
-                    && !self.upstreams[i].draining.load(Ordering::Acquire)
-            })
+            .filter(alive)
+            .filter(|&i| self.breaker_admit(i))
             .collect();
+        if open.is_empty() {
+            open = replicas.iter().copied().filter(alive).collect();
+        }
         open.sort_by_key(|&i| self.upstreams[i].inflight.load(Ordering::Acquire));
         if open.is_empty() {
             open = replicas
@@ -378,34 +614,64 @@ impl RouterCore {
     /// replicas on transport errors and hedges a slow shard against the
     /// next replica — any HTTP status from a shard (including 4xx/5xx)
     /// is a *successful* exchange and is passed through.
+    ///
+    /// `budget` is the request's remaining deadline budget at this hop
+    /// (the gateway's clamped `x-acdc-deadline-ms` mint); the effective
+    /// deadline is the tighter of it and `request_timeout_ms`, decremented
+    /// by elapsed time at every decision point. A retry is refused when
+    /// the remainder no longer covers the target shard's live p50.
     pub fn proxy(
         &self,
         key: &str,
         path: &str,
         content_type: &str,
         body: &[u8],
+        budget: Duration,
     ) -> Result<ProxyReply, (u16, String)> {
         self.proxy_requests.inc();
-        let deadline = Instant::now() + Duration::from_millis(self.cfg.request_timeout_ms);
+        let total = Duration::from_millis(self.cfg.request_timeout_ms).min(budget);
+        if total.is_zero() {
+            self.proxy_errors.inc();
+            return Err((504, "deadline exceeded before forwarding".to_string()));
+        }
+        let deadline = Instant::now() + total;
         let mut tried: Vec<usize> = Vec::new();
         let mut last_err = String::from("no healthy replica");
         let mut any_candidate = false;
+        let mut budget_refused = false;
         loop {
-            let cands: Vec<usize> = self
+            let untried: Vec<usize> = self
                 .candidates(key)
                 .into_iter()
                 .filter(|i| !tried.contains(i))
                 .collect();
+            // The first attempt always goes out; a *retry* is refused
+            // against a shard whose p50 exceeds the remaining budget.
+            let first = tried.is_empty();
+            let cands: Vec<usize> = untried
+                .iter()
+                .copied()
+                .filter(|&i| first || self.budget_covers_p50(i, deadline))
+                .collect();
             let Some(&primary) = cands.first() else {
+                budget_refused = !untried.is_empty();
                 break;
             };
             any_candidate = true;
-            if !tried.is_empty() {
+            if !first {
                 self.proxy_retries.inc();
             }
             tried.push(primary);
-            match self.exchange(primary, &cands[1..], &mut tried, path, content_type, body, deadline)
-            {
+            let res = self.exchange(
+                primary,
+                &cands[1..],
+                &mut tried,
+                path,
+                content_type,
+                body,
+                deadline,
+            );
+            match res {
                 Ok(reply) => return Ok(reply),
                 Err(e) => last_err = e,
             }
@@ -415,7 +681,10 @@ impl RouterCore {
             }
         }
         self.proxy_errors.inc();
-        if any_candidate {
+        if budget_refused {
+            // Replicas remain, but none the remaining budget can cover.
+            Err((504, format!("deadline budget too low to retry: {last_err}")))
+        } else if any_candidate {
             Err((502, format!("all replicas failed: {last_err}")))
         } else {
             Err((503, last_err))
@@ -440,12 +709,13 @@ impl RouterCore {
         let t0 = Instant::now();
         self.upstreams[primary].requests.inc();
         self.upstreams[primary].inflight.fetch_add(1, Ordering::AcqRel);
-        let fired = self.fire(primary, path, content_type, body);
+        let fired = self.fire(primary, path, content_type, body, remaining_ms(deadline));
         let mut pending: Vec<(usize, Live)> = match fired {
             Ok(live) => vec![(primary, live)],
             Err(e) => {
                 self.upstreams[primary].inflight.fetch_sub(1, Ordering::AcqRel);
                 self.note_failure(primary);
+                self.breaker_record(primary, false);
                 return Err(e);
             }
         };
@@ -453,10 +723,22 @@ impl RouterCore {
         let result = loop {
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
+                // Deadline with responses still outstanding: every
+                // pending shard timed out this exchange — a request-path
+                // failure for the health hysteresis and the breaker both.
+                for (ui, _) in &pending {
+                    self.note_failure(*ui);
+                    self.breaker_record(*ui, false);
+                }
                 break Err("upstream timeout".to_string());
             }
-            // Before the hedge fires, wait only up to the hedge delay.
-            let hedge_at = if !hedged && !hedge_pool.is_empty() {
+            // Before the hedge fires, wait only up to the hedge delay
+            // (hedging can be switched off wholesale by the brownout
+            // ladder's first rung).
+            let hedge_at = if !hedged
+                && !hedge_pool.is_empty()
+                && self.hedging.load(Ordering::Acquire)
+            {
                 Some(self.hedge_delay(primary))
             } else {
                 None
@@ -474,6 +756,7 @@ impl RouterCore {
                         Ok(resp) => {
                             self.upstreams[ui].inflight.fetch_sub(1, Ordering::AcqRel);
                             self.note_success(ui);
+                            self.breaker_record(ui, true);
                             self.upstreams[ui].request_ns.record(t0.elapsed());
                             if resp.keep_alive() {
                                 self.checkin(ui, live);
@@ -483,6 +766,7 @@ impl RouterCore {
                         Err(e) => {
                             self.upstreams[ui].inflight.fetch_sub(1, Ordering::AcqRel);
                             self.note_failure(ui);
+                            self.breaker_record(ui, false);
                             if ui != primary {
                                 tried.push(ui);
                             }
@@ -498,16 +782,23 @@ impl RouterCore {
                     // request deadline did (loop back and time out).
                     if hedge_at.is_some() && t0.elapsed() >= hedge_at.unwrap() {
                         hedged = true;
-                        if let Some(&hi) = hedge_pool.iter().find(|i| !tried.contains(i)) {
+                        // A hedge is refused against a shard whose live
+                        // p50 exceeds the remaining budget — the extra
+                        // attempt could not answer in time anyway.
+                        if let Some(&hi) = hedge_pool
+                            .iter()
+                            .find(|i| !tried.contains(i) && self.budget_covers_p50(**i, deadline))
+                        {
                             self.upstreams[hi].requests.inc();
                             self.upstreams[hi].hedges.inc();
                             self.proxy_hedges.inc();
                             self.upstreams[hi].inflight.fetch_add(1, Ordering::AcqRel);
-                            match self.fire(hi, path, content_type, body) {
+                            match self.fire(hi, path, content_type, body, remaining_ms(deadline)) {
                                 Ok(live) => pending.push((hi, live)),
                                 Err(_) => {
                                     self.upstreams[hi].inflight.fetch_sub(1, Ordering::AcqRel);
                                     self.note_failure(hi);
+                                    self.breaker_record(hi, false);
                                     tried.push(hi);
                                 }
                             }
@@ -675,6 +966,10 @@ impl RouterCore {
                     ("healthy", Json::Bool(u.healthy.load(Ordering::Acquire))),
                     ("draining", Json::Bool(u.draining.load(Ordering::Acquire))),
                     (
+                        "breaker",
+                        Json::Str(u.breaker.lock().unwrap().state_name().to_string()),
+                    ),
+                    (
                         "inflight",
                         Json::Num(u.inflight.load(Ordering::Acquire) as f64),
                     ),
@@ -696,6 +991,16 @@ impl Drop for RouterCore {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The live remainder until `deadline` in whole milliseconds, floored at
+/// 1 — a just-in-time hop still tells the shard it has *some* budget
+/// (forwarding 0 would clamp up to 1 downstream anyway).
+fn remaining_ms(deadline: Instant) -> u64 {
+    deadline
+        .saturating_duration_since(Instant::now())
+        .as_millis()
+        .max(1) as u64
 }
 
 /// Wait until one of `fds` is readable (or error/hangup-ready, which a
@@ -734,5 +1039,108 @@ fn poll_readable(fds: &[i32], timeout: Duration) -> Option<usize> {
                 return Some(0);
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const WINDOW: u32 = 4;
+    const RATIO: f64 = 0.5;
+    const COOLDOWN: Duration = Duration::from_millis(100);
+
+    #[test]
+    fn breaker_trips_only_on_a_full_window_at_the_ratio() {
+        let mut b = Breaker::new();
+        let t = Instant::now();
+        // Three failures in a row: window not yet full, no trip.
+        assert_eq!(b.record(false, WINDOW, RATIO, t), None);
+        assert_eq!(b.record(false, WINDOW, RATIO, t), None);
+        assert_eq!(b.record(false, WINDOW, RATIO, t), None);
+        assert!(b.admit(COOLDOWN, t), "closed breaker admits");
+        // Fourth outcome fills the window; 3/4 ≥ 0.5 trips.
+        assert_eq!(b.record(true, WINDOW, RATIO, t), Some(BreakerState::Open));
+        assert!(!b.admit(COOLDOWN, t), "open breaker blocks inside cooldown");
+    }
+
+    #[test]
+    fn breaker_stays_closed_below_the_ratio() {
+        let mut b = Breaker::new();
+        let t = Instant::now();
+        // Alternating outcomes: 2 failures in a window of 4 at ratio
+        // 0.75 never trips.
+        for _ in 0..16 {
+            assert_eq!(b.record(false, WINDOW, 0.75, t), None);
+            assert_eq!(b.record(true, WINDOW, 0.75, t), None);
+        }
+        assert!(b.admit(COOLDOWN, t));
+    }
+
+    #[test]
+    fn breaker_half_open_probe_closes_on_success_reopens_on_failure() {
+        let mut b = Breaker::new();
+        let t = Instant::now();
+        for _ in 0..WINDOW {
+            b.record(false, WINDOW, RATIO, t);
+        }
+        assert!(!b.admit(COOLDOWN, t), "fresh trip blocks");
+        // Cooldown elapses: one probe is admitted, a second is blocked
+        // once the probe has actually fired.
+        let after = t + COOLDOWN;
+        assert!(b.admit(COOLDOWN, after), "cooldown elapsed → half-open");
+        b.on_fire();
+        assert!(!b.admit(COOLDOWN, after), "probe in flight blocks");
+        // Probe failure re-opens and restarts the cooldown…
+        assert_eq!(
+            b.record(false, WINDOW, RATIO, after),
+            Some(BreakerState::Open)
+        );
+        assert!(!b.admit(COOLDOWN, after + Duration::from_millis(1)));
+        // …second probe succeeds and the breaker closes fully.
+        let later = after + COOLDOWN;
+        assert!(b.admit(COOLDOWN, later));
+        b.on_fire();
+        assert_eq!(
+            b.record(true, WINDOW, RATIO, later),
+            Some(BreakerState::Closed)
+        );
+        assert!(b.admit(COOLDOWN, later));
+        // The window restarted: one failure cannot re-trip it.
+        assert_eq!(b.record(false, WINDOW, RATIO, later), None);
+    }
+
+    #[test]
+    fn breaker_admitted_but_unfired_probe_cannot_wedge() {
+        let mut b = Breaker::new();
+        let t = Instant::now();
+        for _ in 0..WINDOW {
+            b.record(false, WINDOW, RATIO, t);
+        }
+        let after = t + COOLDOWN;
+        assert!(b.admit(COOLDOWN, after));
+        // The admitted request was never fired at this shard (it lost
+        // the least-loaded sort): the next request probes instead.
+        assert!(b.admit(COOLDOWN, after), "no on_fire → still admitting");
+    }
+
+    #[test]
+    fn breaker_ignores_stragglers_while_open() {
+        let mut b = Breaker::new();
+        let t = Instant::now();
+        for _ in 0..WINDOW {
+            b.record(false, WINDOW, RATIO, t);
+        }
+        // An exchange fired before the trip lands its outcome late:
+        // no state change, no panic, cooldown clock untouched.
+        assert_eq!(b.record(true, WINDOW, RATIO, t), None);
+        assert_eq!(b.state_name(), "open");
+    }
+
+    #[test]
+    fn remaining_ms_floors_at_one() {
+        assert_eq!(remaining_ms(Instant::now() - Duration::from_secs(1)), 1);
+        let ms = remaining_ms(Instant::now() + Duration::from_millis(500));
+        assert!((400..=500).contains(&ms), "got {ms}");
     }
 }

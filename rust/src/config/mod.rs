@@ -277,6 +277,11 @@ pub struct GatewayConfig {
     /// Tracing + logging knobs (`[trace]` section; carried here so every
     /// gateway constructor path sees them).
     pub trace: TraceConfig,
+    /// Request-deadline limits (`[limits]` section; carried here so the
+    /// admission edge can mint a deadline for every request).
+    pub limits: LimitsConfig,
+    /// Brownout-degradation knobs (`[brownout]` section).
+    pub brownout: BrownoutConfig,
 }
 
 /// A resolved `gateway.mode` (see [`GatewayConfig::resolved_mode`]).
@@ -325,6 +330,8 @@ impl Default for GatewayConfig {
             dispatch_threads: 32,
             write_stall_ms: 5_000,
             trace: TraceConfig::default(),
+            limits: LimitsConfig::default(),
+            brownout: BrownoutConfig::default(),
         }
     }
 }
@@ -356,6 +363,8 @@ impl GatewayConfig {
             write_stall_ms: cfg.get_usize("gateway.write_stall_ms", d.write_stall_ms as usize)
                 as u64,
             trace: TraceConfig::from_config(cfg)?,
+            limits: LimitsConfig::from_config(cfg)?,
+            brownout: BrownoutConfig::from_config(cfg)?,
         };
         gc.validate()?;
         Ok(gc)
@@ -397,7 +406,9 @@ impl GatewayConfig {
         if self.write_stall_ms == 0 {
             return Err("gateway.write_stall_ms must be >= 1".into());
         }
-        self.trace.validate()
+        self.trace.validate()?;
+        self.limits.validate()?;
+        self.brownout.validate()
     }
 
     /// Resolve the `mode` knob to an architecture: an explicit config
@@ -756,6 +767,269 @@ impl TraceConfig {
     }
 }
 
+/// Request-deadline limits (`[limits]` section): every request is minted
+/// a deadline at admission — either the client's `x-acdc-deadline-ms`
+/// header clamped to `[1, max_deadline_ms]`, or `default_deadline_ms`
+/// when the header is absent. The deadline rides on the request through
+/// batcher, worker and router so expired work is reaped instead of
+/// executed. See `DESIGN.md` §9.
+#[derive(Debug, Clone)]
+pub struct LimitsConfig {
+    /// Deadline in milliseconds for requests that send no
+    /// `x-acdc-deadline-ms` header.
+    pub default_deadline_ms: u64,
+    /// Upper clamp on client-requested deadlines in milliseconds.
+    pub max_deadline_ms: u64,
+}
+
+impl Default for LimitsConfig {
+    fn default() -> Self {
+        LimitsConfig {
+            default_deadline_ms: 5_000,
+            max_deadline_ms: 30_000,
+        }
+    }
+}
+
+impl LimitsConfig {
+    /// Build from a parsed config's `[limits]` section (defaults fill
+    /// missing keys).
+    pub fn from_config(cfg: &Config) -> Result<LimitsConfig, String> {
+        let d = LimitsConfig::default();
+        let lc = LimitsConfig {
+            default_deadline_ms: cfg
+                .get_usize("limits.default_deadline_ms", d.default_deadline_ms as usize)
+                as u64,
+            max_deadline_ms: cfg.get_usize("limits.max_deadline_ms", d.max_deadline_ms as usize)
+                as u64,
+        };
+        lc.validate()?;
+        Ok(lc)
+    }
+
+    /// Sanity-check the deadline bounds.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.default_deadline_ms == 0 {
+            return Err("limits.default_deadline_ms must be >= 1".into());
+        }
+        if self.max_deadline_ms == 0 {
+            return Err("limits.max_deadline_ms must be >= 1".into());
+        }
+        if self.default_deadline_ms > self.max_deadline_ms {
+            return Err("limits.default_deadline_ms must not exceed limits.max_deadline_ms".into());
+        }
+        Ok(())
+    }
+
+    /// Resolve a client-requested deadline (milliseconds, `None` when no
+    /// header was sent) against these limits: absent → the default, and
+    /// every result is clamped to `[1, max_deadline_ms]`. Pure, so the
+    /// property suite can pin the clamp behavior.
+    pub fn clamp_deadline_ms(&self, requested: Option<u64>) -> u64 {
+        requested
+            .unwrap_or(self.default_deadline_ms)
+            .clamp(1, self.max_deadline_ms)
+    }
+}
+
+/// Brownout-degradation configuration (`[brownout]` section): the gateway
+/// controller that walks a degradation ladder under sustained pressure
+/// (level 1 disables hedging, 2 coarsens trace sampling, 3 sheds
+/// multi-row requests, 4 sheds all non-health traffic), with hysteresis
+/// in both directions. See `DESIGN.md` §9.
+#[derive(Debug, Clone)]
+pub struct BrownoutConfig {
+    /// Master switch for the brownout controller thread.
+    pub enabled: bool,
+    /// Milliseconds between controller pressure samples.
+    pub tick_ms: u64,
+    /// A tick is "hot" when in-flight requests exceed this fraction of
+    /// `gateway.max_inflight` (or the coordinator queue passes
+    /// `hot_queue_depth`).
+    pub hot_inflight_pct: f64,
+    /// A tick is "hot" when the coordinator queue depth reaches this
+    /// many waiting requests (0 disables the queue-depth trigger).
+    pub hot_queue_depth: u64,
+    /// Consecutive hot ticks before the ladder steps up one level.
+    pub up_after: u64,
+    /// Consecutive cool ticks before the ladder steps down one level.
+    pub down_after: u64,
+    /// Multiplier applied to `trace.sample_every` at level ≥ 2.
+    pub sample_coarsen: u64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        BrownoutConfig {
+            enabled: true,
+            tick_ms: 100,
+            hot_inflight_pct: 0.8,
+            hot_queue_depth: 0,
+            up_after: 3,
+            down_after: 5,
+            sample_coarsen: 16,
+        }
+    }
+}
+
+impl BrownoutConfig {
+    /// Build from a parsed config's `[brownout]` section (defaults fill
+    /// missing keys).
+    pub fn from_config(cfg: &Config) -> Result<BrownoutConfig, String> {
+        let d = BrownoutConfig::default();
+        let bc = BrownoutConfig {
+            enabled: cfg.get_bool("brownout.enabled", d.enabled),
+            tick_ms: cfg.get_usize("brownout.tick_ms", d.tick_ms as usize) as u64,
+            hot_inflight_pct: cfg.get_f64("brownout.hot_inflight_pct", d.hot_inflight_pct),
+            hot_queue_depth: cfg
+                .get_usize("brownout.hot_queue_depth", d.hot_queue_depth as usize)
+                as u64,
+            up_after: cfg.get_usize("brownout.up_after", d.up_after as usize) as u64,
+            down_after: cfg.get_usize("brownout.down_after", d.down_after as usize) as u64,
+            sample_coarsen: cfg.get_usize("brownout.sample_coarsen", d.sample_coarsen as usize)
+                as u64,
+        };
+        bc.validate()?;
+        Ok(bc)
+    }
+
+    /// Sanity-check the controller knobs.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tick_ms == 0 {
+            return Err("brownout.tick_ms must be >= 1".into());
+        }
+        if !self.hot_inflight_pct.is_finite()
+            || self.hot_inflight_pct <= 0.0
+            || self.hot_inflight_pct > 1.0
+        {
+            return Err("brownout.hot_inflight_pct must be in (0, 1]".into());
+        }
+        if self.up_after == 0 {
+            return Err("brownout.up_after must be >= 1".into());
+        }
+        if self.down_after == 0 {
+            return Err("brownout.down_after must be >= 1".into());
+        }
+        if self.sample_coarsen == 0 {
+            return Err("brownout.sample_coarsen must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Deterministic fault-injection configuration (`[faults]` section): a
+/// seeded SplitMix64 stream decides, per executed batch, whether the
+/// wrapped executor sleeps (`delay`/`stall`) or fails (`error`). Off by
+/// default; the chaos suite turns it on to drive overload without flaky
+/// wall-clock sleeps. The `ACDC_FAULTS` environment variable (a
+/// `key=value` comma list, e.g. `delay_ms=200,delay_prob=1`) overrides
+/// any file config at coordinator startup.
+#[derive(Debug, Clone)]
+pub struct FaultsConfig {
+    /// Master switch; when false the executor is never wrapped.
+    pub enabled: bool,
+    /// Seed for the SplitMix64 decision stream.
+    pub seed: u64,
+    /// Injected delay in milliseconds before a batch executes.
+    pub delay_ms: u64,
+    /// Per-batch probability of the injected delay, in `[0, 1]`.
+    pub delay_prob: f64,
+    /// Per-batch probability of an injected executor error, in `[0, 1]`.
+    pub error_prob: f64,
+    /// Injected long stall in milliseconds (models a wedged device).
+    pub stall_ms: u64,
+    /// Per-batch probability of the injected stall, in `[0, 1]`.
+    pub stall_prob: f64,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            enabled: false,
+            seed: 0x5eed_face,
+            delay_ms: 0,
+            delay_prob: 0.0,
+            error_prob: 0.0,
+            stall_ms: 0,
+            stall_prob: 0.0,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Build from a parsed config's `[faults]` section (defaults fill
+    /// missing keys).
+    pub fn from_config(cfg: &Config) -> Result<FaultsConfig, String> {
+        let d = FaultsConfig::default();
+        let fc = FaultsConfig {
+            enabled: cfg.get_bool("faults.enabled", d.enabled),
+            seed: cfg.get_usize("faults.seed", d.seed as usize) as u64,
+            delay_ms: cfg.get_usize("faults.delay_ms", d.delay_ms as usize) as u64,
+            delay_prob: cfg.get_f64("faults.delay_prob", d.delay_prob),
+            error_prob: cfg.get_f64("faults.error_prob", d.error_prob),
+            stall_ms: cfg.get_usize("faults.stall_ms", d.stall_ms as usize) as u64,
+            stall_prob: cfg.get_f64("faults.stall_prob", d.stall_prob),
+        };
+        fc.validate()?;
+        Ok(fc)
+    }
+
+    /// Sanity-check the probabilities.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, p) in [
+            ("faults.delay_prob", self.delay_prob),
+            ("faults.error_prob", self.error_prob),
+            ("faults.stall_prob", self.stall_prob),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!("{name} must be in [0, 1]"));
+            }
+        }
+        Ok(())
+    }
+
+    /// True when injection is on and at least one fault can fire.
+    pub fn active(&self) -> bool {
+        self.enabled && (self.delay_prob > 0.0 || self.error_prob > 0.0 || self.stall_prob > 0.0)
+    }
+
+    /// Apply `ACDC_FAULTS` environment overrides (a comma-separated
+    /// `key=value` list; setting any key implies `enabled=true` unless
+    /// `enabled=false` is given explicitly). Unknown keys or malformed
+    /// values are reported as errors so a typo'd chaos run cannot
+    /// silently test nothing.
+    pub fn with_env_overrides(&self) -> Result<FaultsConfig, String> {
+        let spec = match std::env::var("ACDC_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => s,
+            _ => return Ok(self.clone()),
+        };
+        let mut fc = self.clone();
+        fc.enabled = true;
+        for pair in spec.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("ACDC_FAULTS entry '{pair}' must be key=value"))?;
+            let bad = |e: &str| format!("ACDC_FAULTS {k}={v}: {e}");
+            match k.trim() {
+                "enabled" => fc.enabled = v.parse().map_err(|_| bad("expected bool"))?,
+                "seed" => fc.seed = v.parse().map_err(|_| bad("expected u64"))?,
+                "delay_ms" => fc.delay_ms = v.parse().map_err(|_| bad("expected u64"))?,
+                "delay_prob" => fc.delay_prob = v.parse().map_err(|_| bad("expected f64"))?,
+                "error_prob" => fc.error_prob = v.parse().map_err(|_| bad("expected f64"))?,
+                "stall_ms" => fc.stall_ms = v.parse().map_err(|_| bad("expected u64"))?,
+                "stall_prob" => fc.stall_prob = v.parse().map_err(|_| bad("expected f64"))?,
+                other => return Err(format!("ACDC_FAULTS: unknown key '{other}'")),
+            }
+        }
+        fc.validate()?;
+        Ok(fc)
+    }
+}
+
 /// Serving coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -775,6 +1049,8 @@ pub struct ServeConfig {
     pub registry: RegistryConfig,
     /// Training-job defaults (`[trainer]` section).
     pub trainer: TrainerConfig,
+    /// Deterministic fault-injection knobs (`[faults]` section).
+    pub faults: FaultsConfig,
 }
 
 impl Default for ServeConfig {
@@ -788,6 +1064,7 @@ impl Default for ServeConfig {
             gateway: GatewayConfig::default(),
             registry: RegistryConfig::default(),
             trainer: TrainerConfig::default(),
+            faults: FaultsConfig::default(),
         }
     }
 }
@@ -803,6 +1080,7 @@ impl ServeConfig {
             gateway: GatewayConfig::from_config(cfg)?,
             registry: RegistryConfig::from_config(cfg)?,
             trainer: TrainerConfig::from_config(cfg)?,
+            faults: FaultsConfig::from_config(cfg)?,
             ..Default::default()
         };
         if let Some(v) = cfg.get("serve.buckets") {
@@ -833,7 +1111,8 @@ impl ServeConfig {
             return Err("queue_cap must be >= 1".into());
         }
         self.gateway.validate()?;
-        self.trainer.validate()
+        self.trainer.validate()?;
+        self.faults.validate()
     }
 }
 
@@ -948,6 +1227,15 @@ pub struct ClusterConfig {
     /// in-flight count to reach zero (the swap proceeds regardless when
     /// it expires — the shard-local Arc-epoch swap is always safe).
     pub drain_timeout_ms: u64,
+    /// Request outcomes in each upstream's rolling circuit-breaker
+    /// window (capped at 64 — the window is a bitmask).
+    pub breaker_window: u64,
+    /// Failure ratio within a full window that opens the breaker, in
+    /// `(0, 1]`.
+    pub breaker_trip_ratio: f64,
+    /// Milliseconds an open breaker waits before admitting one
+    /// half-open probe request.
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for ClusterConfig {
@@ -964,6 +1252,9 @@ impl Default for ClusterConfig {
             connect_timeout_ms: 1_000,
             request_timeout_ms: 5_000,
             drain_timeout_ms: 10_000,
+            breaker_window: 16,
+            breaker_trip_ratio: 0.5,
+            breaker_cooldown_ms: 1_000,
         }
     }
 }
@@ -992,6 +1283,12 @@ impl ClusterConfig {
                 as u64,
             drain_timeout_ms: cfg
                 .get_usize("cluster.drain_timeout_ms", d.drain_timeout_ms as usize)
+                as u64,
+            breaker_window: cfg.get_usize("cluster.breaker_window", d.breaker_window as usize)
+                as u64,
+            breaker_trip_ratio: cfg.get_f64("cluster.breaker_trip_ratio", d.breaker_trip_ratio),
+            breaker_cooldown_ms: cfg
+                .get_usize("cluster.breaker_cooldown_ms", d.breaker_cooldown_ms as usize)
                 as u64,
         };
         if let Some(v) = cfg.get("cluster.shards") {
@@ -1054,6 +1351,18 @@ impl ClusterConfig {
         if self.drain_timeout_ms == 0 {
             return Err("cluster.drain_timeout_ms must be >= 1".into());
         }
+        if self.breaker_window == 0 || self.breaker_window > 64 {
+            return Err("cluster.breaker_window must be in [1, 64]".into());
+        }
+        if !self.breaker_trip_ratio.is_finite()
+            || self.breaker_trip_ratio <= 0.0
+            || self.breaker_trip_ratio > 1.0
+        {
+            return Err("cluster.breaker_trip_ratio must be in (0, 1]".into());
+        }
+        if self.breaker_cooldown_ms == 0 {
+            return Err("cluster.breaker_cooldown_ms must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -1103,6 +1412,22 @@ target_ratio = 0.05
 slow_ms = 40
 ring_capacity = 16
 log_level = "debug"
+
+[limits]
+default_deadline_ms = 2000
+max_deadline_ms = 8000
+
+[brownout]
+tick_ms = 50
+hot_inflight_pct = 0.75
+up_after = 2
+down_after = 4
+
+[faults]
+enabled = true
+seed = 7
+delay_ms = 20
+delay_prob = 0.25
 "#;
 
     #[test]
@@ -1445,6 +1770,114 @@ log_level = "debug"
     }
 
     #[test]
+    fn limits_config_from_config_and_clamp() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let lc = LimitsConfig::from_config(&cfg).unwrap();
+        assert_eq!(lc.default_deadline_ms, 2000);
+        assert_eq!(lc.max_deadline_ms, 8000);
+        // The gateway section embeds the same knobs.
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert_eq!(sc.gateway.limits.max_deadline_ms, 8000);
+        // Clamp semantics: absent → default, 0 → 1, over-max → max.
+        assert_eq!(lc.clamp_deadline_ms(None), 2000);
+        assert_eq!(lc.clamp_deadline_ms(Some(0)), 1);
+        assert_eq!(lc.clamp_deadline_ms(Some(500)), 500);
+        assert_eq!(lc.clamp_deadline_ms(Some(u64::MAX)), 8000);
+        // Bad values are rejected.
+        for bad in [
+            LimitsConfig {
+                default_deadline_ms: 0,
+                ..Default::default()
+            },
+            LimitsConfig {
+                max_deadline_ms: 0,
+                ..Default::default()
+            },
+            LimitsConfig {
+                default_deadline_ms: 10,
+                max_deadline_ms: 5,
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn brownout_config_from_config_and_validation() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let bc = BrownoutConfig::from_config(&cfg).unwrap();
+        assert_eq!(bc.tick_ms, 50);
+        assert!((bc.hot_inflight_pct - 0.75).abs() < 1e-12);
+        assert_eq!((bc.up_after, bc.down_after), (2, 4));
+        assert_eq!(bc.sample_coarsen, BrownoutConfig::default().sample_coarsen);
+        for bad in [
+            BrownoutConfig {
+                tick_ms: 0,
+                ..Default::default()
+            },
+            BrownoutConfig {
+                hot_inflight_pct: 0.0,
+                ..Default::default()
+            },
+            BrownoutConfig {
+                hot_inflight_pct: 1.5,
+                ..Default::default()
+            },
+            BrownoutConfig {
+                up_after: 0,
+                ..Default::default()
+            },
+            BrownoutConfig {
+                down_after: 0,
+                ..Default::default()
+            },
+            BrownoutConfig {
+                sample_coarsen: 0,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn faults_config_from_config_and_validation() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let fc = FaultsConfig::from_config(&cfg).unwrap();
+        assert!(fc.enabled);
+        assert_eq!(fc.seed, 7);
+        assert_eq!(fc.delay_ms, 20);
+        assert!((fc.delay_prob - 0.25).abs() < 1e-12);
+        assert!(fc.active());
+        // Enabled with all probabilities zero injects nothing.
+        let idle = FaultsConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        assert!(!idle.active());
+        assert!(!FaultsConfig::default().active());
+        // ServeConfig embeds the section.
+        let sc = ServeConfig::from_config(&cfg).unwrap();
+        assert!(sc.faults.enabled);
+        for bad in [
+            FaultsConfig {
+                delay_prob: -0.1,
+                ..Default::default()
+            },
+            FaultsConfig {
+                error_prob: 1.5,
+                ..Default::default()
+            },
+            FaultsConfig {
+                stall_prob: f64::NAN,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
+    }
+
+    #[test]
     fn cluster_config_from_config() {
         let text = r#"
 [cluster]
@@ -1517,6 +1950,31 @@ hedge_min_ms = 5
         // Non-string shard entries are rejected.
         let cfg = Config::parse("[cluster]\nshards = [1, 2]").unwrap();
         assert!(ClusterConfig::from_config(&cfg).is_err());
+        // Circuit-breaker knobs must be in range.
+        for bad in [
+            ClusterConfig {
+                breaker_window: 0,
+                ..two()
+            },
+            ClusterConfig {
+                breaker_window: 65,
+                ..two()
+            },
+            ClusterConfig {
+                breaker_trip_ratio: 0.0,
+                ..two()
+            },
+            ClusterConfig {
+                breaker_trip_ratio: 1.5,
+                ..two()
+            },
+            ClusterConfig {
+                breaker_cooldown_ms: 0,
+                ..two()
+            },
+        ] {
+            assert!(bad.validate().is_err());
+        }
     }
 
     #[test]
@@ -1525,5 +1983,8 @@ hedge_min_ms = 5
         assert!(TrainConfig::default().validate().is_ok());
         assert!(TrainerConfig::default().validate().is_ok());
         assert!(TraceConfig::default().validate().is_ok());
+        assert!(LimitsConfig::default().validate().is_ok());
+        assert!(BrownoutConfig::default().validate().is_ok());
+        assert!(FaultsConfig::default().validate().is_ok());
     }
 }

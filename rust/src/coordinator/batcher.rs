@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::request::{FormedBatch, InferRequest};
-use crate::metrics::Gauge;
+use crate::metrics::{Counter, Gauge};
 
 /// Pure batch-formation policy over sorted buckets.
 #[derive(Debug, Clone)]
@@ -108,12 +108,21 @@ impl BatchPolicy {
 /// `depth` (when present) is kept at the batcher's live queue length —
 /// the `coordinator.queue_depth` series on `/metrics`, the direct
 /// observable for "is latency queueing or compute".
+///
+/// `reaped` (when present) counts requests whose deadline passed while
+/// they were still queued: at every batch-formation pass the queue is
+/// swept and expired requests are answered with the typed
+/// deadline-exceeded outcome ([`InferRequest::reap`]) instead of being
+/// dispatched — past saturation, no cycle is spent on work nobody is
+/// waiting for. The counter is the shared `gateway.deadline_reaped`
+/// series.
 pub fn run_batcher(
     policy: BatchPolicy,
     rx: Receiver<InferRequest>,
     tx: SyncSender<FormedBatch>,
     recycle: Receiver<Vec<InferRequest>>,
     depth: Option<Arc<Gauge>>,
+    reaped: Option<Arc<Counter>>,
 ) {
     let mut queue: Vec<InferRequest> = Vec::new();
     let set_depth = |len: usize| {
@@ -133,6 +142,9 @@ pub fn run_batcher(
     };
     loop {
         let now = Instant::now();
+        if reap_expired(&mut queue, now, reaped.as_deref()) > 0 {
+            set_depth(queue.len());
+        }
         let decision = policy.decide(queue.len(), queue.first().map(|r| r.enqueued_at), now);
         match decision {
             Decision::Dispatch { bucket, take } => {
@@ -171,6 +183,29 @@ pub fn run_batcher(
             },
         }
     }
+}
+
+/// Sweep `queue` for requests whose deadline has passed: each one is
+/// answered with the typed deadline-exceeded outcome and removed (FIFO
+/// order of the survivors is preserved). Returns how many were reaped.
+/// Allocation-free — removal shifts in place within the queue's existing
+/// buffer.
+fn reap_expired(queue: &mut Vec<InferRequest>, now: Instant, reaped: Option<&Counter>) -> usize {
+    let mut n = 0;
+    let mut i = 0;
+    while i < queue.len() {
+        if queue[i].expired(now) {
+            let req = queue.remove(i);
+            req.reap(now);
+            if let Some(c) = reaped {
+                c.inc();
+            }
+            n += 1;
+        } else {
+            i += 1;
+        }
+    }
+    n
 }
 
 #[cfg(test)]
@@ -259,6 +294,7 @@ mod tests {
                 trace: 0,
                 features: super::super::request::Features::Owned(vec![0.0; 4]),
                 enqueued_at: Instant::now(),
+                deadline: None,
                 reply: Reply::Channel(tx),
             },
             rx,
@@ -271,7 +307,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_millis(1));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None, None));
         let mut keep = vec![];
         for id in 0..3 {
             let (r, rx) = mk_req(id);
@@ -291,7 +327,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (_rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![4, 16], Duration::from_secs(60)); // never deadline
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None, None));
         let mut keep = vec![];
         for id in 0..6 {
             let (r, rx) = mk_req(id);
@@ -311,7 +347,7 @@ mod tests {
         let (batch_tx, batch_rx) = sync_channel(16);
         let (rtx, rrx) = sync_channel(4);
         let p = BatchPolicy::new(vec![2], Duration::from_secs(60));
-        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None));
+        let handle = std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None, None));
         // A recycled buffer round-trips back into batch formation.
         rtx.send(Vec::with_capacity(2)).unwrap();
         let mut keep = vec![];
@@ -324,6 +360,42 @@ mod tests {
         let b2 = batch_rx.recv_timeout(Duration::from_millis(500)).unwrap();
         assert_eq!(b1.requests.len(), 2);
         assert_eq!(b2.requests.len(), 2);
+        drop(req_tx);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn expired_requests_reaped_at_formation_not_dispatched() {
+        let reaped = Arc::new(Counter::default());
+        let (req_tx, req_rx) = channel();
+        let (batch_tx, batch_rx) = sync_channel(16);
+        let (_rtx, rrx) = sync_channel(4);
+        let p = BatchPolicy::new(vec![4], Duration::from_millis(1));
+        let c = Arc::clone(&reaped);
+        let handle =
+            std::thread::spawn(move || run_batcher(p, req_rx, batch_tx, rrx, None, Some(c)));
+        // Two requests whose deadline already passed, one fresh one.
+        let mut keep = vec![];
+        for id in 0..2 {
+            let (mut r, rx) = mk_req(id);
+            r.deadline = Some(Instant::now() - Duration::from_millis(5));
+            keep.push(rx);
+            req_tx.send(r).unwrap();
+        }
+        let (mut live, live_rx) = mk_req(9);
+        live.deadline = Some(Instant::now() + Duration::from_secs(60));
+        keep.push(live_rx);
+        req_tx.send(live).unwrap();
+        // The dispatched batch holds only the live request.
+        let batch = batch_rx.recv_timeout(Duration::from_millis(500)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.requests[0].id, 9);
+        assert_eq!(reaped.get(), 2);
+        // Reaped requests were answered with the deadline error.
+        for rx in &keep[..2] {
+            let resp = rx.recv_timeout(Duration::from_millis(500)).unwrap();
+            assert!(resp.output.unwrap_err().contains("deadline"));
+        }
         drop(req_tx);
         handle.join().unwrap();
     }

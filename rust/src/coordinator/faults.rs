@@ -1,0 +1,236 @@
+//! Deterministic executor fault injection for the chaos suite.
+//!
+//! [`FaultInjector`] wraps any [`BatchExecutor`] and, per executed batch,
+//! draws from a seeded SplitMix64 stream to decide whether to inject a
+//! delay, a long stall, or an error before delegating to the inner
+//! executor. The stream is the whole point: a chaos test that sets
+//! `delay_prob = 1.0` gets the fault on *every* batch, and a partial
+//! probability replays identically under the same seed — no wall-clock
+//! races deciding whether the test exercised anything.
+//!
+//! Activation is config-driven (`[faults]`, see
+//! [`crate::config::FaultsConfig`]) with an `ACDC_FAULTS` environment
+//! override, applied in [`crate::coordinator::Coordinator::start`] via
+//! [`wrap_factory`]. Each worker thread builds its own injector whose
+//! stream is derived from the base seed and a per-instance index, so the
+//! decision sequence is reproducible per worker regardless of how the OS
+//! schedules them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::worker::{BatchExecutor, ExecutorFactory};
+use crate::config::FaultsConfig;
+
+/// A SplitMix64 stream (Steele et al.) — the same finalizer the trace-ID
+/// and ring-hash code uses, run as a sequential generator here.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Stream seeded with `seed`.
+    pub fn new(seed: u64) -> SplitMix64 {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next draw as a uniform f64 in `[0, 1)` (53-bit mantissa).
+    pub fn next_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Executor wrapper injecting seeded delay/stall/error faults per batch.
+pub struct FaultInjector {
+    inner: Box<dyn BatchExecutor>,
+    cfg: FaultsConfig,
+    rng: SplitMix64,
+}
+
+impl FaultInjector {
+    /// Wrap `inner`, drawing decisions from a stream seeded by the config
+    /// seed XOR an instance discriminator (one per worker).
+    pub fn new(inner: Box<dyn BatchExecutor>, cfg: FaultsConfig, instance: u64) -> FaultInjector {
+        // Spread instances across the stream space; the odd multiplier is
+        // the SplitMix64 increment, guaranteeing distinct seeds per worker.
+        let seed = cfg
+            .seed
+            .wrapping_add(instance.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        FaultInjector {
+            inner,
+            cfg,
+            rng: SplitMix64::new(seed),
+        }
+    }
+}
+
+impl BatchExecutor for FaultInjector {
+    fn width(&self) -> usize {
+        self.inner.width()
+    }
+
+    fn out_width(&self) -> usize {
+        self.inner.out_width()
+    }
+
+    fn execute_into(
+        &mut self,
+        bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
+        // Fixed draw order (delay, stall, error) keeps the stream
+        // deterministic regardless of which probabilities are set.
+        let delay = self.rng.next_unit() < self.cfg.delay_prob;
+        let stall = self.rng.next_unit() < self.cfg.stall_prob;
+        let error = self.rng.next_unit() < self.cfg.error_prob;
+        if delay && self.cfg.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.cfg.delay_ms));
+        }
+        if stall && self.cfg.stall_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.cfg.stall_ms));
+        }
+        if error {
+            return Err("injected fault (faults.error_prob)".to_string());
+        }
+        self.inner.execute_into(bucket, padded, out)
+    }
+}
+
+/// Wrap an [`ExecutorFactory`] so every executor it builds carries a
+/// [`FaultInjector`] with its own per-worker decision stream.
+pub fn wrap_factory(inner: ExecutorFactory, cfg: FaultsConfig) -> ExecutorFactory {
+    let instance = Arc::new(AtomicU64::new(0));
+    Arc::new(move || {
+        let exe = inner()?;
+        let i = instance.fetch_add(1, Ordering::Relaxed);
+        Ok(Box::new(FaultInjector::new(exe, cfg.clone(), i)) as Box<dyn BatchExecutor>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    struct EchoExecutor {
+        n: usize,
+    }
+
+    impl BatchExecutor for EchoExecutor {
+        fn width(&self) -> usize {
+            self.n
+        }
+        fn out_width(&self) -> usize {
+            self.n
+        }
+        fn execute_into(
+            &mut self,
+            _bucket: usize,
+            padded: &[f32],
+            out: &mut [f32],
+        ) -> Result<(), String> {
+            out.copy_from_slice(padded);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn splitmix_stream_is_deterministic_and_uniformish() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let mut sum = 0.0;
+        for _ in 0..1000 {
+            let u = a.next_unit();
+            assert_eq!(u, b.next_unit(), "same seed → same stream");
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean} far from uniform");
+        assert_ne!(
+            SplitMix64::new(1).next_u64(),
+            SplitMix64::new(2).next_u64(),
+            "different seeds diverge"
+        );
+    }
+
+    #[test]
+    fn error_prob_one_fails_every_batch() {
+        let cfg = FaultsConfig {
+            enabled: true,
+            error_prob: 1.0,
+            ..Default::default()
+        };
+        let mut inj = FaultInjector::new(Box::new(EchoExecutor { n: 2 }), cfg, 0);
+        let mut out = [0.0f32; 2];
+        for _ in 0..5 {
+            let err = inj.execute_into(1, &[1.0, 2.0], &mut out).unwrap_err();
+            assert!(err.contains("injected"));
+        }
+    }
+
+    #[test]
+    fn delay_prob_one_delays_and_still_computes() {
+        let cfg = FaultsConfig {
+            enabled: true,
+            delay_ms: 30,
+            delay_prob: 1.0,
+            ..Default::default()
+        };
+        let mut inj = FaultInjector::new(Box::new(EchoExecutor { n: 2 }), cfg, 0);
+        let mut out = [0.0f32; 2];
+        let t0 = Instant::now();
+        inj.execute_into(1, &[3.0, 4.0], &mut out).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(out, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn zero_probs_inject_nothing() {
+        let cfg = FaultsConfig {
+            enabled: true,
+            ..Default::default()
+        };
+        let mut inj = FaultInjector::new(Box::new(EchoExecutor { n: 1 }), cfg, 3);
+        let mut out = [0.0f32; 1];
+        for _ in 0..100 {
+            inj.execute_into(1, &[7.0], &mut out).unwrap();
+            assert_eq!(out, [7.0]);
+        }
+    }
+
+    #[test]
+    fn wrapped_factory_gives_each_worker_its_own_stream() {
+        let inner: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(EchoExecutor { n: 1 }) as Box<dyn BatchExecutor>));
+        let cfg = FaultsConfig {
+            enabled: true,
+            error_prob: 0.5,
+            ..Default::default()
+        };
+        let wrapped = wrap_factory(inner, cfg);
+        let mut a = wrapped().unwrap();
+        let mut b = wrapped().unwrap();
+        // Streams differ per instance; over many draws the outcome
+        // sequences must not be identical.
+        let mut out = [0.0f32; 1];
+        let seq = |exe: &mut Box<dyn BatchExecutor>, out: &mut [f32; 1]| {
+            (0..64)
+                .map(|_| exe.execute_into(1, &[1.0], out).is_ok())
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(seq(&mut a, &mut out), seq(&mut b, &mut out));
+    }
+}

@@ -14,6 +14,7 @@
 //! at the submit edge — which the network gateway maps to HTTP 503.
 
 pub mod batcher;
+pub mod faults;
 pub mod request;
 pub mod worker;
 
@@ -68,6 +69,18 @@ impl Coordinator {
         metrics: Arc<Registry>,
     ) -> Coordinator {
         cfg.validate().expect("invalid serve config");
+        // Deterministic fault injection (chaos tests): when the [faults]
+        // config (or the ACDC_FAULTS env var) is active, every worker's
+        // executor is wrapped in a seeded delay/error/stall injector.
+        let faults = cfg
+            .faults
+            .with_env_overrides()
+            .expect("invalid ACDC_FAULTS");
+        let factory = if faults.active() {
+            faults::wrap_factory(factory, faults)
+        } else {
+            factory
+        };
         let (req_tx, req_rx) = sync_channel::<InferRequest>(cfg.queue_cap);
         // Bounded so a slow worker pool backpressures batch formation
         // instead of letting formed batches pile up unboundedly; 2× the
@@ -85,9 +98,21 @@ impl Coordinator {
         // Live queue length on /metrics — the direct observable for
         // "is latency queueing or compute" when reading a slow trace.
         let depth = metrics.gauge("coordinator.queue_depth");
+        // Shared by name with the worker pool's reap point: one
+        // gateway.deadline_reaped series covers both.
+        let reaped = metrics.counter("gateway.deadline_reaped");
         let batcher = std::thread::Builder::new()
             .name("acdc-batcher".into())
-            .spawn(move || batcher::run_batcher(policy, req_rx, batch_tx, recycle_rx, Some(depth)))
+            .spawn(move || {
+                batcher::run_batcher(
+                    policy,
+                    req_rx,
+                    batch_tx,
+                    recycle_rx,
+                    Some(depth),
+                    Some(reaped),
+                )
+            })
             .expect("spawn batcher");
         let pool = WorkerPool::spawn(
             cfg.workers,
@@ -131,6 +156,7 @@ impl Coordinator {
             trace: 0,
             features: Features::Owned(features),
             enqueued_at: Instant::now(),
+            deadline: None,
             reply: Reply::Channel(tx),
         })
         .map(|()| rx)
@@ -141,12 +167,16 @@ impl Coordinator {
     /// `row`, and signals `slot` (whose current sequence `row` must carry,
     /// see [`ResponseSlot::issue`]). `trace` is the request's trace ID
     /// (0 = untraced), carried so worker-side log events can name the
-    /// request. No allocation on success.
+    /// request. `deadline` is the request's admission-minted deadline:
+    /// past it, the batcher/worker reap the request
+    /// ([`request::SlotError::Expired`]) instead of executing it. No
+    /// allocation on success.
     pub fn submit_slot(
         &self,
         row: RowRef,
         slot: &Arc<ResponseSlot>,
         trace: u64,
+        deadline: Option<Instant>,
     ) -> Result<(), SubmitError> {
         assert_eq!(row.len(), self.width, "feature width mismatch");
         self.enqueue(InferRequest {
@@ -154,6 +184,7 @@ impl Coordinator {
             trace,
             features: Features::Borrowed(row),
             enqueued_at: Instant::now(),
+            deadline,
             reply: Reply::Slot(Arc::clone(slot)),
         })
     }

@@ -126,6 +126,28 @@ enum SlotOutcome {
     Ok(usize),
     /// Executor (or pipeline) error.
     Err(String),
+    /// Deadline passed before execution; the request was reaped.
+    Expired,
+}
+
+/// Typed failure of one slot use, so the gateway can answer a reaped
+/// request with 504 (deadline exceeded) instead of a generic 500.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SlotError {
+    /// The request's deadline passed before execution; the coordinator
+    /// reaped it without computing anything.
+    Expired,
+    /// Executor (or pipeline) error.
+    Exec(String),
+}
+
+impl std::fmt::Display for SlotError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SlotError::Expired => write!(f, "deadline exceeded before execution"),
+            SlotError::Exec(e) => write!(f, "{e}"),
+        }
+    }
 }
 
 #[derive(Debug)]
@@ -163,8 +185,8 @@ pub struct SlotReply {
     pub execute_us: u64,
     /// Bucket size this row was served in.
     pub batch_size: usize,
-    /// Output row length written into the arena, or the error.
-    pub output: Result<usize, String>,
+    /// Output row length written into the arena, or the typed error.
+    pub output: Result<usize, SlotError>,
 }
 
 impl Default for ResponseSlot {
@@ -226,8 +248,11 @@ impl ResponseSlot {
             if s.seq == seq && s.done {
                 let output = match std::mem::replace(&mut s.outcome, SlotOutcome::Pending) {
                     SlotOutcome::Ok(len) => Ok(len),
-                    SlotOutcome::Err(e) => Err(e),
-                    SlotOutcome::Pending => Err("slot completed without outcome".to_string()),
+                    SlotOutcome::Err(e) => Err(SlotError::Exec(e)),
+                    SlotOutcome::Expired => Err(SlotError::Expired),
+                    SlotOutcome::Pending => {
+                        Err(SlotError::Exec("slot completed without outcome".to_string()))
+                    }
                 };
                 return Some(SlotReply {
                     queue_us: s.queue_us,
@@ -241,7 +266,10 @@ impl ResponseSlot {
             if now >= deadline {
                 return None;
             }
-            let (guard, _) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _) = self
+                .cv
+                .wait_timeout(s, deadline.saturating_duration_since(now))
+                .unwrap();
             s = guard;
         }
     }
@@ -308,6 +336,26 @@ impl ResponseSlot {
         drop(s);
         self.cv.notify_all();
     }
+
+    /// Coordinator side: finish use `row.seq` with the typed
+    /// deadline-exceeded outcome without touching the arena (there is no
+    /// output to write — the request was reaped, not computed). Stale or
+    /// abandoned uses are dropped silently, exactly like
+    /// [`ResponseSlot::complete`].
+    pub fn expire(&self, row: &RowRef, queue_us: u64) {
+        let mut s = self.state.lock().unwrap();
+        if s.seq != row.seq || s.abandoned {
+            return;
+        }
+        s.outcome = SlotOutcome::Expired;
+        s.queue_us = queue_us;
+        s.form_us = 0;
+        s.execute_us = 0;
+        s.batch_size = 0;
+        s.done = true;
+        drop(s);
+        self.cv.notify_all();
+    }
 }
 
 /// An inference request: a feature row destined for a SELL classifier.
@@ -323,8 +371,45 @@ pub struct InferRequest {
     pub features: Features,
     /// Enqueue timestamp for latency accounting.
     pub enqueued_at: Instant,
+    /// Absolute deadline minted at admission (`None` = no deadline; the
+    /// legacy `submit` path). The batcher reaps expired requests at batch
+    /// formation and the worker re-checks before execute, so past this
+    /// instant the row is answered [`SlotError::Expired`] instead of
+    /// computed.
+    pub deadline: Option<Instant>,
     /// Where the response is delivered.
     pub reply: Reply,
+}
+
+impl InferRequest {
+    /// True when the request carries a deadline that `now` has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Answer the request with the typed deadline-exceeded outcome and
+    /// drop it (cooperative cancellation: the work is reaped, never
+    /// computed). Slot-path requests signal [`SlotError::Expired`]
+    /// through their slot; channel-path requests get an error response.
+    pub fn reap(self, now: Instant) {
+        let queue_us = now.saturating_duration_since(self.enqueued_at).as_micros() as u64;
+        match (self.reply, self.features) {
+            (Reply::Slot(slot), Features::Borrowed(row)) => slot.expire(&row, queue_us),
+            (Reply::Channel(tx), _) => {
+                let _ = tx.send(InferResponse {
+                    id: self.id,
+                    output: Err(SlotError::Expired.to_string()),
+                    queue_us,
+                    form_us: 0,
+                    execute_us: 0,
+                    batch_size: 0,
+                });
+            }
+            // Slot reply without an arena row cannot be signalled; the
+            // waiter's own timeout covers it. Does not occur in practice.
+            (Reply::Slot(_), Features::Owned(_)) => {}
+        }
+    }
 }
 
 /// The coordinator's answer (legacy channel path).
@@ -383,6 +468,7 @@ mod tests {
                     trace: 0,
                     features: Features::Owned(vec![1.0, 2.0]),
                     enqueued_at: Instant::now(),
+                    deadline: None,
                     reply: Reply::Channel(std::sync::mpsc::channel().0),
                 },
                 InferRequest {
@@ -390,6 +476,7 @@ mod tests {
                     trace: 0,
                     features: Features::Owned(vec![3.0, 4.0]),
                     enqueued_at: Instant::now(),
+                    deadline: None,
                     reply: Reply::Channel(std::sync::mpsc::channel().0),
                 },
             ],
@@ -457,8 +544,57 @@ mod tests {
         let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 2, seq) };
         slot.complete(&row, Ok(&[1.0, 2.0, 3.0]), 0, 0, 0, 1);
         let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
-        assert!(reply.output.unwrap_err().contains("exceeds"));
+        assert!(reply.output.unwrap_err().to_string().contains("exceeds"));
         assert_eq!(output, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn expired_slot_reports_typed_error_without_touching_arena() {
+        let slot = Arc::new(ResponseSlot::new());
+        let input = [1.0f32];
+        let mut output = [0.0f32];
+        let seq = slot.issue();
+        let row = unsafe { RowRef::new(input.as_ptr(), 1, output.as_mut_ptr(), 1, seq) };
+        slot.expire(&row, 42);
+        let reply = wait_slot(&slot, seq, Duration::from_secs(1)).unwrap();
+        assert_eq!(reply.output, Err(SlotError::Expired));
+        assert_eq!(reply.queue_us, 42);
+        assert_eq!(output, [0.0], "reaped request must not write output");
+        // A stale expire is dropped like a stale complete.
+        let new_seq = slot.issue();
+        slot.expire(&row, 0);
+        assert!(wait_slot(&slot, new_seq, Duration::from_millis(20)).is_none());
+    }
+
+    #[test]
+    fn deadline_expiry_and_reap() {
+        let now = Instant::now();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let req = InferRequest {
+            id: 7,
+            trace: 0,
+            features: Features::Owned(vec![1.0]),
+            enqueued_at: now,
+            deadline: Some(now + Duration::from_millis(10)),
+            reply: Reply::Channel(tx),
+        };
+        assert!(!req.expired(now));
+        let late = now + Duration::from_millis(11);
+        assert!(req.expired(late));
+        req.reap(late);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert!(resp.output.unwrap_err().contains("deadline"));
+        // No deadline → never expires.
+        let req = InferRequest {
+            id: 8,
+            trace: 0,
+            features: Features::Owned(vec![1.0]),
+            enqueued_at: now,
+            deadline: None,
+            reply: Reply::Channel(std::sync::mpsc::channel().0),
+        };
+        assert!(!req.expired(late + Duration::from_secs(3600)));
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::request::{Features, FormedBatch, InferRequest, InferResponse, Reply};
+use super::request::{Features, FormedBatch, InferRequest, InferResponse, Reply, SlotError};
 use crate::metrics::Registry;
 use crate::trace::log::{self, Field, Level};
 
@@ -97,6 +97,12 @@ fn worker_loop(
     let rows = metrics.counter("worker.rows");
     let padded_rows = metrics.counter("worker.padded_rows");
     let errors = metrics.counter("worker.errors");
+    // Shared with the batcher by registry name: every reap point feeds
+    // the one gateway.deadline_reaped series.
+    let reaped_c = metrics.counter("gateway.deadline_reaped");
+    // Batches the worker dropped whole because every row had expired by
+    // the time it reached the executor (formed-but-stale).
+    let dropped = metrics.counter("worker.batches_dropped");
     let exec_hist = metrics.histogram("worker.execute_ns");
     let queue_hist = metrics.histogram("worker.queue_wait_ns");
     // Live (un-padded) rows per executed batch — the occupancy series
@@ -118,16 +124,28 @@ fn worker_loop(
             formed_at,
         } = batch;
         batches.inc();
-        rows.add(requests.len() as u64);
         padded_rows.add((bucket - requests.len()) as u64);
-        occupancy.record_ns(requests.len() as u64);
 
         let t0 = Instant::now();
+        // Deadline re-check before execute: rows that expired while the
+        // batch sat in the worker channel are reaped here (left zero in
+        // the padded buffer, answered SlotError::Expired below) — and a
+        // batch with no live rows left is dropped whole rather than
+        // computed. Both loops classify against the same `t0`, so a row
+        // is consistently live or expired throughout this batch.
+        let live = requests.iter().filter(|r| !r.expired(t0)).count();
+        rows.add(live as u64);
+        occupancy.record_ns(live as u64);
         // Batch-form handoff: formation to the moment this worker started
         // executing (time spent in the bounded worker channel).
         let form_us = t0.saturating_duration_since(formed_at).as_micros() as u64;
         let mut out_w = 0;
         let result: Result<(), String> = match &mut executor {
+            Ok(exe) if live == 0 && !requests.is_empty() => {
+                dropped.inc();
+                out_w = exe.out_width();
+                Ok(())
+            }
             Ok(exe) => {
                 let n = exe.width();
                 out_w = exe.out_width();
@@ -135,6 +153,9 @@ fn worker_loop(
                 padded.resize(bucket * n, 0.0);
                 let mut width_err = None;
                 for (i, req) in requests.iter().enumerate() {
+                    if req.expired(t0) {
+                        continue; // reaped below; its lane stays zero
+                    }
                     let dst = &mut padded[i * n..(i + 1) * n];
                     match &req.features {
                         Features::Owned(v) => {
@@ -205,6 +226,27 @@ fn worker_loop(
                 .saturating_duration_since(req.enqueued_at)
                 .as_micros() as u64;
             queue_hist.record_ns(queue_us * 1_000);
+            if req.expired(t0) {
+                reaped_c.inc();
+                match &req.reply {
+                    Reply::Channel(tx) => {
+                        let _ = tx.send(InferResponse {
+                            id: req.id,
+                            output: Err(SlotError::Expired.to_string()),
+                            queue_us,
+                            form_us,
+                            execute_us: 0,
+                            batch_size: 0,
+                        });
+                    }
+                    Reply::Slot(slot) => {
+                        if let Features::Borrowed(r) = &req.features {
+                            slot.expire(r, queue_us);
+                        }
+                    }
+                }
+                continue;
+            }
             let row_out: Result<&[f32], &str> = match &result {
                 Ok(()) => {
                     let start = i * out_w;
@@ -364,6 +406,7 @@ mod tests {
                 trace: 0,
                 features: Features::Owned(vec![id as f32; n]),
                 enqueued_at: Instant::now(),
+                deadline: None,
                 reply: Reply::Channel(rtx),
             });
             rxs.push(rrx);
@@ -434,6 +477,7 @@ mod tests {
                 trace: 0,
                 features: Features::Borrowed(row),
                 enqueued_at: Instant::now(),
+                deadline: None,
                 reply: Reply::Slot(Arc::clone(&slot)),
             }],
             formed_at: Instant::now(),
@@ -467,6 +511,51 @@ mod tests {
         exe.execute_into(4, x.data(), &mut out).unwrap();
         let want = cascade.forward(&x);
         assert_eq!(out, want.data());
+    }
+
+    #[test]
+    fn expired_rows_reaped_before_execute_and_stale_batch_dropped() {
+        let (btx, brx) = channel();
+        let metrics = Arc::new(Registry::new());
+        let factory: ExecutorFactory =
+            Arc::new(|| Ok(Box::new(DoubleExecutor { n: 2 }) as Box<dyn BatchExecutor>));
+        let pool = WorkerPool::spawn(1, factory, brx, Arc::clone(&metrics), None);
+        // A batch whose every row expired between formation and execute.
+        let past = Instant::now() - Duration::from_millis(5);
+        let mut rxs = vec![];
+        let mut requests = vec![];
+        for id in 0..2u64 {
+            let (rtx, rrx) = channel();
+            requests.push(InferRequest {
+                id,
+                trace: 0,
+                features: Features::Owned(vec![1.0; 2]),
+                enqueued_at: past,
+                deadline: Some(past),
+                reply: Reply::Channel(rtx),
+            });
+            rxs.push(rrx);
+        }
+        btx.send(FormedBatch {
+            bucket: 2,
+            requests,
+            formed_at: past,
+        })
+        .unwrap();
+        for rx in &rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert!(resp.output.unwrap_err().contains("deadline"));
+        }
+        // A live batch afterwards still executes normally.
+        let live_rxs = submit(&btx, &[5], 1, 2);
+        let resp = live_rxs[0].recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(resp.output.unwrap(), vec![10.0, 10.0]);
+        drop(btx);
+        pool.join();
+        assert_eq!(metrics.counter("gateway.deadline_reaped").get(), 2);
+        assert_eq!(metrics.counter("worker.batches_dropped").get(), 1);
+        // Only the live row was counted as executed work.
+        assert_eq!(metrics.counter("worker.rows").get(), 1);
     }
 
     #[test]

@@ -91,6 +91,7 @@ pub fn gateway_loopback(spec: &LoopbackSpec) -> Result<LoadReport, String> {
         timeout: Duration::from_secs(30),
         seed: 7,
         binary: false,
+        ..Default::default()
     })?;
     gateway.shutdown();
     Ok(report)

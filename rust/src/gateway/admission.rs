@@ -178,6 +178,12 @@ impl Admission {
         self.inflight.get()
     }
 
+    /// The configured in-flight cap (the brownout controller's pressure
+    /// denominator).
+    pub fn max_inflight(&self) -> u64 {
+        self.max_inflight
+    }
+
     /// Total sheds across every class (rate, inflight, queue, drain).
     pub fn shed_total(&self) -> u64 {
         self.shed_rate.get() + self.shed_inflight.get() + self.shed_queue.get()

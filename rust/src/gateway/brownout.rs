@@ -1,0 +1,348 @@
+//! Brownout degradation: a gateway under sustained pressure walks a
+//! ladder of progressively cheaper service levels instead of falling
+//! over, and walks back down when the pressure clears.
+//!
+//! The controller thread samples two pressure signals every
+//! `brownout.tick_ms`: the admission in-flight gauge against its cap
+//! (`hot_inflight_pct`) and the coordinator queue depth
+//! (`hot_queue_depth`, 0 = disabled). `up_after` consecutive hot ticks
+//! raise the level by one; `down_after` consecutive cool ticks lower it
+//! by one — hysteresis in both directions, so a flapping signal cannot
+//! oscillate the service level per tick. The levels:
+//!
+//! | level | degradation                                             |
+//! |-------|---------------------------------------------------------|
+//! | 0     | normal service                                          |
+//! | 1     | cluster hedging disabled (no duplicate upstream work)   |
+//! | 2     | trace sampling coarsened by `sample_coarsen`            |
+//! | 3     | multi-row (batch) inference requests shed with 503      |
+//! | 4     | everything but `/healthz` and `/metrics` shed with 503  |
+//!
+//! Each level includes the ones below it. The current level is exported
+//! as the `brownout.level` gauge (`acdc_brownout_level` on
+//! `GET /metrics`), sheds are counted in `gateway.brownout_shed`, and
+//! every transition emits a structured `brownout_level` log event.
+//!
+//! The ladder itself ([`Ladder`]) is a pure state machine over "was this
+//! tick hot" booleans, so the hysteresis is unit-testable without
+//! threads or clocks.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::admission::Admission;
+use crate::cluster::RouterCore;
+use crate::config::BrownoutConfig;
+use crate::metrics::{Counter, Gauge, Registry};
+use crate::trace::log::{self, Field, Level};
+
+/// Level at which cluster hedging is disabled.
+pub const LEVEL_NO_HEDGE: u64 = 1;
+/// Level at which trace sampling is coarsened.
+pub const LEVEL_COARSE_TRACE: u64 = 2;
+/// Level at which multi-row requests are shed.
+pub const LEVEL_SHED_BATCH: u64 = 3;
+/// Level at which all non-health traffic is shed.
+pub const LEVEL_SHED_ALL: u64 = 4;
+/// The ladder's top rung.
+pub const MAX_LEVEL: u64 = 4;
+
+/// Shared brownout state read on the request path: the current level,
+/// the effective trace sampling stride, and the shed counter. All reads
+/// are single atomics — level 0 costs one load per request.
+pub struct Brownout {
+    level: AtomicU64,
+    /// Effective `trace.sample_every` (base value, or base × coarsen at
+    /// [`LEVEL_COARSE_TRACE`] and above).
+    sample_every: AtomicU64,
+    base_sample_every: u64,
+    coarsen: u64,
+    shed: Arc<Counter>,
+    gauge: Arc<Gauge>,
+}
+
+impl Brownout {
+    /// Fresh state at level 0. `base_sample_every` is the configured
+    /// `trace.sample_every` (already floored at 1 by the caller).
+    pub fn new(base_sample_every: u64, coarsen: u64, metrics: &Registry) -> Brownout {
+        Brownout {
+            level: AtomicU64::new(0),
+            sample_every: AtomicU64::new(base_sample_every),
+            base_sample_every,
+            coarsen: coarsen.max(1),
+            shed: metrics.counter("gateway.brownout_shed"),
+            gauge: metrics.gauge("brownout.level"),
+        }
+    }
+
+    /// Current degradation level (0 = normal service).
+    pub fn level(&self) -> u64 {
+        self.level.load(Ordering::Acquire)
+    }
+
+    /// The trace sampling stride the gateway should use right now.
+    pub fn effective_sample_every(&self) -> u64 {
+        self.sample_every.load(Ordering::Relaxed).max(1)
+    }
+
+    /// Count one request shed by a brownout level.
+    pub fn note_shed(&self) {
+        self.shed.inc();
+    }
+
+    /// Apply `level`: store it, mirror the gauge, and recompute the
+    /// effective sampling stride. Called by the controller on ladder
+    /// transitions (and by tests directly).
+    pub fn apply(&self, level: u64) {
+        let level = level.min(MAX_LEVEL);
+        self.level.store(level, Ordering::Release);
+        self.gauge.set(level);
+        let stride = if level >= LEVEL_COARSE_TRACE {
+            self.base_sample_every.saturating_mul(self.coarsen)
+        } else {
+            self.base_sample_every
+        };
+        self.sample_every.store(stride.max(1), Ordering::Relaxed);
+    }
+}
+
+/// The pure hysteresis ladder: consecutive hot ticks climb, consecutive
+/// cool ticks descend, and any flip of the signal resets the opposing
+/// streak.
+pub struct Ladder {
+    level: u64,
+    hot_streak: u64,
+    cool_streak: u64,
+    up_after: u64,
+    down_after: u64,
+}
+
+impl Ladder {
+    /// Ladder at level 0 with the given hysteresis thresholds (both
+    /// floored at 1).
+    pub fn new(up_after: u64, down_after: u64) -> Ladder {
+        Ladder {
+            level: 0,
+            hot_streak: 0,
+            cool_streak: 0,
+            up_after: up_after.max(1),
+            down_after: down_after.max(1),
+        }
+    }
+
+    /// Current level.
+    pub fn level(&self) -> u64 {
+        self.level
+    }
+
+    /// Feed one tick's pressure verdict; returns `Some(new_level)` when
+    /// the level changed. A climb or descent consumes the streak that
+    /// triggered it, so moving two rungs takes two full streaks.
+    pub fn tick(&mut self, hot: bool) -> Option<u64> {
+        if hot {
+            self.cool_streak = 0;
+            self.hot_streak += 1;
+            if self.hot_streak >= self.up_after && self.level < MAX_LEVEL {
+                self.hot_streak = 0;
+                self.level += 1;
+                return Some(self.level);
+            }
+        } else {
+            self.hot_streak = 0;
+            self.cool_streak += 1;
+            if self.cool_streak >= self.down_after && self.level > 0 {
+                self.cool_streak = 0;
+                self.level -= 1;
+                return Some(self.level);
+            }
+        }
+        None
+    }
+}
+
+/// Whether a tick is "hot" given the two pressure readings and their
+/// thresholds. `max_inflight == 0` or `hot_queue_depth == 0` disables
+/// the respective signal.
+pub fn is_hot(
+    inflight: u64,
+    max_inflight: u64,
+    queue_depth: u64,
+    hot_inflight_pct: f64,
+    hot_queue_depth: u64,
+) -> bool {
+    let inflight_hot =
+        max_inflight > 0 && inflight as f64 >= hot_inflight_pct * max_inflight as f64;
+    let queue_hot = hot_queue_depth > 0 && queue_depth >= hot_queue_depth;
+    inflight_hot || queue_hot
+}
+
+/// The background controller: owns the sampling thread driving a
+/// [`Ladder`] against live gauges and applying transitions to the shared
+/// [`Brownout`] state (and the router's hedging switch).
+pub struct Controller {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Controller {
+    /// Spawn the controller thread. `depth` is the coordinator
+    /// queue-depth gauge (stays 0 on the router role, where the
+    /// in-flight signal carries the pressure).
+    pub fn start(
+        cfg: BrownoutConfig,
+        state: Arc<Brownout>,
+        admission: Arc<Admission>,
+        depth: Arc<Gauge>,
+        router: Option<Arc<RouterCore>>,
+    ) -> Result<Controller, String> {
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("acdc-gw-brownout".into())
+            .spawn(move || {
+                let tick = Duration::from_millis(cfg.tick_ms.max(1));
+                let mut ladder = Ladder::new(cfg.up_after, cfg.down_after);
+                while !thread_stop.load(Ordering::Acquire) {
+                    std::thread::sleep(tick);
+                    let inflight = admission.inflight();
+                    let queue_depth = depth.get();
+                    let hot = is_hot(
+                        inflight,
+                        admission.max_inflight(),
+                        queue_depth,
+                        cfg.hot_inflight_pct,
+                        cfg.hot_queue_depth,
+                    );
+                    if let Some(level) = ladder.tick(hot) {
+                        state.apply(level);
+                        if let Some(router) = &router {
+                            router.set_hedging(level < LEVEL_NO_HEDGE);
+                        }
+                        log::event(
+                            Level::Warn,
+                            "gateway",
+                            "brownout_level",
+                            0,
+                            &[
+                                ("level", Field::U64(level)),
+                                ("inflight", Field::U64(inflight)),
+                                ("queue_depth", Field::U64(queue_depth)),
+                                (
+                                    "sample_every",
+                                    Field::U64(state.effective_sample_every()),
+                                ),
+                            ],
+                        );
+                    }
+                }
+                // Leave the gateway at full service on shutdown so a
+                // restart-free controller swap never strands a level.
+                state.apply(0);
+                if let Some(router) = &router {
+                    router.set_hedging(true);
+                }
+            })
+            .map_err(|e| format!("spawn brownout controller: {e}"))?;
+        Ok(Controller {
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// Stop and join the controller thread (idempotent).
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Controller {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_climbs_after_up_after_hot_ticks_only() {
+        let mut l = Ladder::new(3, 2);
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(true), Some(1), "third consecutive hot tick climbs");
+        // The streak was consumed: the next rung takes three more.
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(true), Some(2));
+    }
+
+    #[test]
+    fn ladder_cool_tick_resets_hot_streak() {
+        let mut l = Ladder::new(2, 5);
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(false), None, "cool tick resets the hot streak");
+        assert_eq!(l.tick(true), None);
+        assert_eq!(l.tick(true), Some(1));
+    }
+
+    #[test]
+    fn ladder_descends_with_its_own_hysteresis_and_floors_at_zero() {
+        let mut l = Ladder::new(1, 2);
+        assert_eq!(l.tick(true), Some(1));
+        assert_eq!(l.tick(true), Some(2));
+        assert_eq!(l.tick(false), None);
+        assert_eq!(l.tick(false), Some(1), "two cool ticks descend one rung");
+        assert_eq!(l.tick(false), None);
+        assert_eq!(l.tick(false), Some(0));
+        assert_eq!(l.tick(false), None, "level saturates at 0");
+        assert_eq!(l.level(), 0);
+    }
+
+    #[test]
+    fn ladder_caps_at_max_level() {
+        let mut l = Ladder::new(1, 1);
+        for want in 1..=MAX_LEVEL {
+            assert_eq!(l.tick(true), Some(want));
+        }
+        assert_eq!(l.tick(true), None, "level saturates at MAX_LEVEL");
+        assert_eq!(l.level(), MAX_LEVEL);
+    }
+
+    #[test]
+    fn hot_predicate_combines_inflight_and_queue_signals() {
+        // 80% of 10 = 8.
+        assert!(is_hot(8, 10, 0, 0.8, 0));
+        assert!(!is_hot(7, 10, 0, 0.8, 0));
+        // Queue signal disabled at 0, active otherwise.
+        assert!(!is_hot(0, 10, 100, 0.8, 0));
+        assert!(is_hot(0, 10, 100, 0.8, 50));
+        assert!(!is_hot(0, 10, 49, 0.8, 50));
+        // max_inflight = 0 disables the in-flight signal.
+        assert!(!is_hot(5, 0, 0, 0.8, 0));
+    }
+
+    #[test]
+    fn brownout_state_applies_levels_and_sampling_stride() {
+        let metrics = Registry::new();
+        let b = Brownout::new(2, 8, &metrics);
+        assert_eq!(b.level(), 0);
+        assert_eq!(b.effective_sample_every(), 2);
+        b.apply(LEVEL_NO_HEDGE);
+        assert_eq!(b.effective_sample_every(), 2, "level 1 keeps sampling");
+        b.apply(LEVEL_COARSE_TRACE);
+        assert_eq!(b.effective_sample_every(), 16, "level 2 coarsens ×8");
+        assert_eq!(metrics.gauge("brownout.level").get(), 2);
+        b.apply(0);
+        assert_eq!(b.effective_sample_every(), 2);
+        b.apply(99);
+        assert_eq!(b.level(), MAX_LEVEL, "apply clamps to the top rung");
+        b.note_shed();
+        assert_eq!(metrics.counter("gateway.brownout_shed").get(), 1);
+    }
+}

@@ -82,6 +82,11 @@ pub struct LoadgenConfig {
     pub seed: u64,
     /// Send the binary [`wire`] frame instead of JSON bodies.
     pub binary: bool,
+    /// Per-request deadline budget sent as `x-acdc-deadline-ms`. `None`
+    /// leaves the header off, so the gateway applies its configured
+    /// default. Responses with status 504 (budget exhausted server-side)
+    /// are tallied separately from sheds and transport errors.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for LoadgenConfig {
@@ -97,6 +102,7 @@ impl Default for LoadgenConfig {
             timeout: Duration::from_secs(5),
             seed: 0,
             binary: false,
+            deadline_ms: None,
         }
     }
 }
@@ -121,6 +127,9 @@ impl LoadgenConfig {
                 return Err("open-loop rate must be a positive number".into());
             }
         }
+        if self.deadline_ms == Some(0) {
+            return Err("deadline must be >= 1 millisecond".into());
+        }
         Ok(())
     }
 }
@@ -134,7 +143,12 @@ pub struct LoadReport {
     pub ok: u64,
     /// 429/503 shed responses.
     pub shed: u64,
-    /// Transport failures and non-shed error statuses.
+    /// 504 responses — the request's deadline budget ran out server-side
+    /// (reaped in queue, stale at the worker, or refused on the router's
+    /// budget gate). Kept apart from `shed` and `errors` because it is
+    /// the signal the deadline experiments assert on.
+    pub deadline_exceeded: u64,
+    /// Transport failures and non-shed, non-deadline error statuses.
     pub errors: u64,
     /// Feature rows carried by successful requests.
     pub rows_ok: u64,
@@ -184,6 +198,7 @@ impl LoadReport {
             ("sent", Json::Num(self.sent as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("shed", Json::Num(self.shed as f64)),
+            ("deadline_exceeded", Json::Num(self.deadline_exceeded as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("rows_ok", Json::Num(self.rows_ok as f64)),
             ("wall_s", Json::Num(self.wall_s)),
@@ -203,13 +218,14 @@ impl LoadReport {
     /// Human-readable multi-line summary.
     pub fn render(&self) -> String {
         format!(
-            "loadgen: sent {} | ok {} | shed {} | errors {} | rows {}\n\
+            "loadgen: sent {} | ok {} | shed {} | deadline-exceeded {} | errors {} | rows {}\n\
              wall {:.2}s  throughput {:.0} req/s  goodput {:.0} req/s\n\
              latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}\n\
              corrected ms (from intended send): p50 {:.2}  p95 {:.2}  p99 {:.2}\n",
             self.sent,
             self.ok,
             self.shed,
+            self.deadline_exceeded,
             self.errors,
             self.rows_ok,
             self.wall_s,
@@ -232,6 +248,7 @@ struct WorkerStats {
     sent: u64,
     ok: u64,
     shed: u64,
+    deadline_exceeded: u64,
     errors: u64,
     rows_ok: u64,
     latencies_ms: Vec<f64>,
@@ -266,6 +283,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         stats.sent += w.sent;
         stats.ok += w.ok;
         stats.shed += w.shed;
+        stats.deadline_exceeded += w.deadline_exceeded;
         stats.errors += w.errors;
         stats.rows_ok += w.rows_ok;
         stats.latencies_ms.extend(w.latencies_ms);
@@ -289,6 +307,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport, String> {
         sent: stats.sent,
         ok: stats.ok,
         shed: stats.shed,
+        deadline_exceeded: stats.deadline_exceeded,
         errors: stats.errors,
         rows_ok: stats.rows_ok,
         wall_s,
@@ -336,6 +355,8 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
     let mut body = String::new();
     let mut vals: Vec<f32> = Vec::new();
     let mut frame: Vec<u8> = Vec::new();
+    // Rendered once: the deadline budget is the same on every request.
+    let deadline_hdr = cfg.deadline_ms.map(|ms| ms.to_string());
     while Instant::now() < deadline {
         // The *intended* send time of this arrival. Open loop: the
         // scheduled fire instant, captured before the schedule advances —
@@ -381,13 +402,11 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
         let (stream, reader) = conn.as_mut().unwrap();
         stats.sent += 1;
         let t = Instant::now();
-        let wrote = http::write_request(
-            stream,
-            "POST",
-            "/v1/infer",
-            &[("content-type", content_type)],
-            payload,
-        );
+        let mut headers: Vec<(&str, &str)> = vec![("content-type", content_type)];
+        if let Some(ms) = deadline_hdr.as_deref() {
+            headers.push(("x-acdc-deadline-ms", ms));
+        }
+        let wrote = http::write_request(stream, "POST", "/v1/infer", &headers, payload);
         if wrote.is_err() {
             stats.errors += 1;
             conn = None;
@@ -407,6 +426,7 @@ fn worker(cfg: &LoadgenConfig, wi: usize) -> WorkerStats {
                         stats.corrected_ms.push(corrected_latency_ms(anchor, done));
                     }
                     429 | 503 => stats.shed += 1,
+                    504 => stats.deadline_exceeded += 1,
                     _ => stats.errors += 1,
                 }
                 if !resp.keep_alive() {
@@ -510,6 +530,17 @@ mod tests {
             ..Default::default()
         };
         assert!(bad.validate().is_err());
+        // A zero deadline could never be met; require at least 1ms.
+        let bad = LoadgenConfig {
+            deadline_ms: Some(0),
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+        let ok = LoadgenConfig {
+            deadline_ms: Some(50),
+            ..Default::default()
+        };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]
@@ -528,7 +559,8 @@ mod tests {
         let r = LoadReport {
             sent: 100,
             ok: 80,
-            shed: 15,
+            shed: 12,
+            deadline_exceeded: 3,
             errors: 5,
             rows_ok: 80,
             wall_s: 2.0,
@@ -544,10 +576,12 @@ mod tests {
         assert!((r.throughput_rps() - 50.0).abs() < 1e-9);
         assert!((r.goodput_rps() - 40.0).abs() < 1e-9);
         let j = r.to_json();
-        assert_eq!(j.get("shed").unwrap().as_f64(), Some(15.0));
+        assert_eq!(j.get("shed").unwrap().as_f64(), Some(12.0));
+        assert_eq!(j.get("deadline_exceeded").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("p99_ms").unwrap().as_f64(), Some(3.0));
         assert_eq!(j.get("corrected_p99_ms").unwrap().as_f64(), Some(42.0));
         assert!(r.render().contains("goodput 40"));
+        assert!(r.render().contains("deadline-exceeded 3"));
         assert!(r.render().contains("corrected ms"));
     }
 

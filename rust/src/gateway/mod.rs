@@ -28,6 +28,9 @@
 //!   (`Content-Type: application/x-acdc-f32`), bit-identical to JSON;
 //! * [`admission`] — token bucket, in-flight cap, drain gate, shed
 //!   accounting;
+//! * [`brownout`] — the degradation ladder a pressured gateway walks
+//!   (disable hedging → coarsen tracing → shed batches → shed all but
+//!   health traffic) with hysteresis in both directions;
 //! * [`server`] — [`Gateway`]: routing, the shared request pipeline,
 //!   graceful drain, and the thread-per-connection fallback;
 //! * `reactor` — the dependency-free epoll event loop behind the default
@@ -48,6 +51,7 @@
 //! included, since they share `server::serve_request`.
 
 pub mod admission;
+pub mod brownout;
 pub mod http;
 pub mod loadgen;
 mod reactor;

@@ -667,7 +667,11 @@ impl Write for StallWriter<'_> {
                     if now >= self.deadline {
                         return Err(ErrorKind::TimedOut.into());
                     }
-                    let wait = (self.deadline - now).as_millis().min(i32::MAX as u128) as i32;
+                    let wait = self
+                        .deadline
+                        .saturating_duration_since(now)
+                        .as_millis()
+                        .min(i32::MAX as u128) as i32;
                     let mut pfd = sys::PollFd {
                         fd: self.stream.as_raw_fd(),
                         events: sys::POLLOUT,

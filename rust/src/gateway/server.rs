@@ -79,12 +79,13 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::admission::{Admission, AdmitError};
+use super::brownout::{self, Brownout};
 use super::http::{self, HttpError, RequestScratch, Response, ScratchOutcome};
 use super::reactor::Reactor;
 use super::wire;
 use crate::cluster::RouterCore;
 use crate::config::{ClusterConfig, GatewayConfig, GatewayMode, TrainerConfig};
-use crate::coordinator::request::{ResponseSlot, RowRef};
+use crate::coordinator::request::{ResponseSlot, RowRef, SlotError};
 use crate::coordinator::SubmitError;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::registry::{ModelHandle, ModelInfo, ModelRegistry, RegistryError};
@@ -112,6 +113,8 @@ pub struct Gateway {
     accept: Option<JoinHandle<()>>,
     /// Reactor-mode event machinery (`None` in threaded mode).
     reactor: Option<Reactor>,
+    /// Brownout controller thread (`None` when `[brownout]` is disabled).
+    brownout_ctl: Option<brownout::Controller>,
 }
 
 /// Connection-count tracker: the accept-side cap, the exported
@@ -167,7 +170,10 @@ impl ConnTracker {
             if now >= deadline {
                 return false;
             }
-            let (guard, _) = self.cv.wait_timeout(c, deadline - now).unwrap();
+            let (guard, _) = self
+                .cv
+                .wait_timeout(c, deadline.saturating_duration_since(now))
+                .unwrap();
             c = guard;
         }
         true
@@ -204,6 +210,9 @@ pub(super) struct Shared {
     /// of the local registry — on both I/O modes, since the reactor's
     /// dispatch workers and the threaded fallback share `serve_request`.
     router: Option<Arc<RouterCore>>,
+    /// Brownout ladder state, read on every request (level + effective
+    /// trace sampling stride); driven by the controller thread.
+    brownout: Arc<Brownout>,
 }
 
 impl Gateway {
@@ -302,6 +311,11 @@ impl Gateway {
             Duration::from_millis(cfg.trace.slow_ms),
         ));
         let stage_ns = Stage::ALL.map(|s| metrics.histogram(&format!("trace.{}_ns", s.name())));
+        let brownout_state = Arc::new(Brownout::new(
+            cfg.trace.sample_every.max(1),
+            cfg.brownout.sample_coarsen,
+            &metrics,
+        ));
         let shared = Arc::new(Shared {
             registry,
             trainer,
@@ -319,9 +333,21 @@ impl Gateway {
             trace_seq: AtomicU64::new(0),
             stage_ns,
             router,
+            brownout: Arc::clone(&brownout_state),
             metrics,
             stop: AtomicBool::new(false),
         });
+        let brownout_ctl = if shared.cfg.brownout.enabled {
+            Some(brownout::Controller::start(
+                shared.cfg.brownout.clone(),
+                brownout_state,
+                Arc::clone(&shared.admission),
+                shared.metrics.gauge("coordinator.queue_depth"),
+                shared.router.clone(),
+            )?)
+        } else {
+            None
+        };
         let mode = shared.cfg.resolved_mode();
         let addr_str = addr.to_string();
         log::event(
@@ -355,6 +381,7 @@ impl Gateway {
             addr,
             accept,
             reactor,
+            brownout_ctl,
         })
     }
 
@@ -393,6 +420,11 @@ impl Drop for Gateway {
     fn drop(&mut self) {
         self.shared.admission.begin_drain();
         self.shared.stop.store(true, Ordering::Release);
+        // The brownout controller reads gauges other subsystems own;
+        // stop it first so teardown order cannot race a tick.
+        if let Some(mut ctl) = self.brownout_ctl.take() {
+            ctl.shutdown();
+        }
         log::event(
             Level::Info,
             "gateway",
@@ -656,6 +688,16 @@ pub(super) fn serve_request<W: Write>(
     let keep = req.wants_keep_alive()
         && !shared.stop.load(Ordering::Acquire)
         && !shared.admission.is_draining();
+    // Brownout top rung: everything but the health/observability surface
+    // is shed before any routing or parsing work is spent on it.
+    if shared.brownout.level() >= brownout::LEVEL_SHED_ALL
+        && !matches!(req.route_path(), "/healthz" | "/metrics")
+    {
+        shared.brownout.note_shed();
+        let resp = shed_retry_after(shared, 503, "brownout: shedding non-health traffic");
+        shared.request_ns.record(t0.elapsed());
+        return resp.write_to(writer, keep).is_ok() && keep;
+    }
     if let Some(model) = infer_route(&req.method, req.route_path()) {
         // Router role: inference routes are forwarded to upstream shards
         // (the body travels byte-for-byte, so the binary f32 frame needs
@@ -758,55 +800,77 @@ fn proxy_infer<W: Write>(
     span.reset();
     if shared.cfg.trace.enabled {
         let seq = shared.trace_seq.fetch_add(1, Ordering::Relaxed);
-        if seq % shared.cfg.trace.sample_every.max(1) == 0 {
+        if seq % shared.brownout.effective_sample_every() == 0 {
             span.trace_id = trace::mint_trace_id();
         }
     }
     let a0 = Instant::now();
-    let resp = match shared.admission.try_admit() {
-        Err(e) => {
-            log::event(
-                Level::Debug,
-                "gateway",
-                "request_shed",
-                span.trace_id,
-                &[("reason", Field::Str(e.as_str()))],
-            );
-            shed_response(shared, e)
+    let resp = match deadline_budget_ms(shared, req) {
+        Err(resp) => {
+            shared.http_errors.inc();
+            resp
         }
-        // The permit holds an in-flight slot for the whole upstream
-        // exchange; it drops when this arm's response is built.
-        Ok(_permit) => {
-            span.set(Stage::Admission, a0.elapsed());
-            let key = model.unwrap_or(LEGACY_MODEL);
-            let content_type = req.header("content-type").unwrap_or("application/json");
-            let router = shared.router.as_ref().expect("proxy_infer requires a router");
-            let u0 = Instant::now();
-            let result = router.proxy(key, req.route_path(), content_type, &req.body);
-            span.set(Stage::Upstream, u0.elapsed());
-            match result {
-                Ok(reply) => {
-                    let mut resp = Response {
-                        status: reply.status,
-                        headers: vec![("content-type".into(), reply.content_type)],
-                        body: reply.body,
+        Ok(budget_ms) => match shared.admission.try_admit() {
+            Err(e) => {
+                log::event(
+                    Level::Debug,
+                    "gateway",
+                    "request_shed",
+                    span.trace_id,
+                    &[("reason", Field::Str(e.as_str()))],
+                );
+                shed_response(shared, e)
+            }
+            // The permit holds an in-flight slot for the whole upstream
+            // exchange; it drops when this arm's response is built.
+            Ok(_permit) => {
+                span.set(Stage::Admission, a0.elapsed());
+                let key = model.unwrap_or(LEGACY_MODEL);
+                let content_type = req.header("content-type").unwrap_or("application/json");
+                let router = shared.router.as_ref().expect("proxy_infer requires a router");
+                let u0 = Instant::now();
+                let result = router.proxy(
+                    key,
+                    req.route_path(),
+                    content_type,
+                    &req.body,
+                    Duration::from_millis(budget_ms),
+                );
+                span.set(Stage::Upstream, u0.elapsed());
+                match result {
+                    Ok(reply) => {
+                        let mut resp = Response {
+                            status: reply.status,
+                            headers: vec![("content-type".into(), reply.content_type)],
+                            body: reply.body,
+                        }
+                        .with_header("x-acdc-upstream", &reply.upstream.to_string());
+                        if reply.hedged {
+                            resp = resp.with_header("x-acdc-hedged", "1");
+                        }
+                        resp
                     }
-                    .with_header("x-acdc-upstream", &reply.upstream.to_string());
-                    if reply.hedged {
-                        resp = resp.with_header("x-acdc-hedged", "1");
+                    Err((status, msg)) => {
+                        if status == 504 {
+                            shared.timeouts.inc();
+                        } else {
+                            shared.http_errors.inc();
+                        }
+                        let resp = Response::json(status, &err_json(&msg));
+                        if matches!(status, 503 | 504) {
+                            // Router-level shed/timeout: tell the client
+                            // when to come back, like the local path.
+                            resp.with_header(
+                                "retry-after",
+                                &shared.cfg.retry_after_s.to_string(),
+                            )
+                        } else {
+                            resp
+                        }
                     }
-                    resp
-                }
-                Err((status, msg)) => {
-                    if status == 504 {
-                        shared.timeouts.inc();
-                    } else {
-                        shared.http_errors.inc();
-                    }
-                    Response::json(status, &err_json(&msg))
                 }
             }
-        }
+        },
     };
     let status = resp.status;
     if status == 200 {
@@ -1382,10 +1446,16 @@ fn infer(
     arena.span.reset();
     if shared.cfg.trace.enabled {
         let seq = shared.trace_seq.fetch_add(1, Ordering::Relaxed);
-        if seq % shared.cfg.trace.sample_every.max(1) == 0 {
+        // The stride is the configured `trace.sample_every` until
+        // brownout level 2 coarsens it.
+        if seq % shared.brownout.effective_sample_every() == 0 {
             arena.span.trace_id = trace::mint_trace_id();
         }
     }
+    // Deadline mint: the header-requested budget clamped by `[limits]`
+    // (or the default). Parsed before admission so a malformed header
+    // costs a 400, not an admission permit.
+    let budget_ms = deadline_budget_ms(shared, req)?;
     // The permit holds an in-flight slot for the whole submit → response
     // window; dropping it on any exit path releases the slot.
     let a0 = Instant::now();
@@ -1400,6 +1470,10 @@ fn infer(
         shed_response(shared, e)
     })?;
     let t0 = Instant::now();
+    // The deadline is fixed at admission and travels with every row
+    // through batcher and worker; each downstream stage re-checks it
+    // rather than computing work no one is waiting for.
+    let deadline = t0 + Duration::from_millis(budget_ms);
     // The handle pins this request to one (model, version) epoch: the
     // request survives a concurrent hot swap on the version it was
     // admitted against, and blocks unload until it completes.
@@ -1442,6 +1516,16 @@ fn infer(
     };
     arena.span.set(Stage::Parse, p0.elapsed());
     arena.span.rows = rows as u32;
+    // Brownout level 3+: multi-row requests are the largest unit of
+    // executor work — shed them and keep single-row traffic answering.
+    if rows > 1 && shared.brownout.level() >= brownout::LEVEL_SHED_BATCH {
+        shared.brownout.note_shed();
+        return Err(shed_retry_after(
+            shared,
+            503,
+            "brownout: shedding batch requests",
+        ));
+    }
     debug_assert_eq!(arena.rows.len(), rows * width);
     // Grow the output arena and slot pool *before* issuing any sequence,
     // so no outstanding RowRef can observe a reallocation.
@@ -1469,7 +1553,7 @@ fn infer(
                 arena.seqs[r],
             )
         };
-        match handle.submit_slot(row, &arena.slots[r], arena.span.trace_id) {
+        match handle.submit_slot(row, &arena.slots[r], arena.span.trace_id, Some(deadline)) {
             Ok(()) => {}
             Err(SubmitError::QueueFull) => {
                 shared.admission.note_queue_full();
@@ -1481,14 +1565,17 @@ fn infer(
         }
     }
     // Rows submitted before a mid-batch shed are abandoned by the reaper;
-    // the workers then skip them without touching the arena.
-    let deadline = Instant::now() + Duration::from_millis(shared.cfg.request_timeout_ms);
+    // the workers then skip them without touching the arena. The slot
+    // wait honors whichever bound is tighter: the request's own deadline
+    // or the gateway-wide `request_timeout_ms` backstop.
+    let wait_deadline =
+        deadline.min(Instant::now() + Duration::from_millis(shared.cfg.request_timeout_ms));
     let mut queue_us = 0u64;
     let mut form_us = 0u64;
     let mut execute_us = 0u64;
     let mut max_batch = 0usize;
     for r in 0..rows {
-        match arena.slots[r].wait(arena.seqs[r], deadline) {
+        match arena.slots[r].wait(arena.seqs[r], wait_deadline) {
             Some(reply) => {
                 queue_us = queue_us.max(reply.queue_us);
                 form_us = form_us.max(reply.form_us);
@@ -1497,14 +1584,20 @@ fn infer(
                 arena.batch_sizes[r] = reply.batch_size;
                 match reply.output {
                     Ok(len) => arena.out_lens[r] = len,
-                    Err(e) => {
+                    Err(SlotError::Expired) => {
+                        // The pipeline reaped this row (batcher or
+                        // worker); a typed 504, not an executor 500.
+                        shared.timeouts.inc();
+                        return Err(shed_retry_after(shared, 504, "deadline exceeded"));
+                    }
+                    Err(SlotError::Exec(e)) => {
                         return Err(Response::json(500, &err_json(&format!("executor: {e}"))))
                     }
                 }
             }
             None => {
                 shared.timeouts.inc();
-                return Err(Response::json(504, &err_json("inference timed out")));
+                return Err(shed_retry_after(shared, 504, "inference timed out"));
             }
         }
     }
@@ -1962,6 +2055,26 @@ fn write_json_f32(buf: &mut Vec<u8>, v: f32) {
     } else {
         let _ = write!(buf, "{n}");
     }
+}
+
+/// The request's deadline budget in milliseconds: the
+/// `x-acdc-deadline-ms` header clamped to `[1, limits.max_deadline_ms]`,
+/// or `limits.default_deadline_ms` when the header is absent. A
+/// malformed header is a 400 — running an unbounded request against a
+/// garbled budget would defeat the point of asking for one. Header
+/// parsing is wire-format agnostic, so JSON and binary-frame requests
+/// share this path bit-for-bit.
+fn deadline_budget_ms(shared: &Arc<Shared>, req: &RequestScratch) -> Result<u64, Response> {
+    let requested = match req.header("x-acdc-deadline-ms") {
+        None => None,
+        Some(v) => Some(v.trim().parse::<u64>().map_err(|_| {
+            Response::json(
+                400,
+                &err_json("x-acdc-deadline-ms must be a non-negative integer"),
+            )
+        })?),
+    };
+    Ok(shared.cfg.limits.clamp_deadline_ms(requested))
 }
 
 fn shed_response(shared: &Arc<Shared>, e: AdmitError) -> Response {

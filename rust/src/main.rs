@@ -877,6 +877,11 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         opt("width", "model width N (features per row)", Some("256")),
         opt("rows", "rows-per-request mix, e.g. 1,1,8", Some("1")),
         opt("timeout-ms", "per-request timeout", Some("5000")),
+        opt(
+            "deadline-ms",
+            "per-request deadline budget sent as x-acdc-deadline-ms (off by default)",
+            None,
+        ),
         opt("seed", "rng seed", Some("0")),
         opt(
             "targets",
@@ -901,6 +906,7 @@ fn cmd_loadgen(rest: &[String]) -> Result<(), String> {
         width: args.get_usize("width")?.unwrap(),
         rows_mix: args.get_usize_list("rows")?.unwrap(),
         timeout: Duration::from_millis(args.get_usize("timeout-ms")?.unwrap() as u64),
+        deadline_ms: args.get_usize("deadline-ms")?.map(|ms| ms as u64),
         seed: args.get_usize("seed")?.unwrap() as u64,
         targets: args
             .get("targets")

@@ -160,14 +160,17 @@ impl ModelHandle {
 
     /// Submit one arena row on the zero-allocation slot path (see
     /// [`crate::coordinator::Coordinator::submit_slot`]). `trace` is the
-    /// request's trace ID (0 = untraced).
+    /// request's trace ID (0 = untraced); `deadline` is the
+    /// admission-minted deadline past which the coordinator reaps
+    /// instead of executing.
     pub fn submit_slot(
         &self,
         row: RowRef,
         slot: &Arc<ResponseSlot>,
         trace: u64,
+        deadline: Option<std::time::Instant>,
     ) -> Result<(), SubmitError> {
-        self.epoch.server.submit_slot(row, slot, trace)
+        self.epoch.server.submit_slot(row, slot, trace, deadline)
     }
 
     /// Submit one row and block for the answer.

@@ -287,14 +287,16 @@ impl Server {
 
     /// Submit one arena row on the zero-allocation slot path (see
     /// [`Coordinator::submit_slot`]). `trace` is the request's trace ID
-    /// (0 = untraced).
+    /// (0 = untraced); `deadline` is the admission-minted deadline past
+    /// which the coordinator reaps instead of executing.
     pub fn submit_slot(
         &self,
         row: crate::coordinator::request::RowRef,
         slot: &Arc<crate::coordinator::request::ResponseSlot>,
         trace: u64,
+        deadline: Option<std::time::Instant>,
     ) -> Result<(), SubmitError> {
-        self.coordinator.submit_slot(row, slot, trace)
+        self.coordinator.submit_slot(row, slot, trace, deadline)
     }
 
     /// Text metrics report.

@@ -1,0 +1,921 @@
+//! Chaos suite: deterministic fault injection, deadline propagation,
+//! brownout degradation, and circuit breaking under induced failure.
+//!
+//! Covers the robustness acceptance paths:
+//!
+//! * **deadline cancellation** — a 100%-probability injected executor
+//!   delay makes every batch slower than the client deadline: queued
+//!   requests are reaped before execution (`gateway.deadline_reaped`),
+//!   the executor runs measurably fewer rows than were offered, and a
+//!   control run without deadlines executes everything;
+//! * **typed fault surfacing** — injected executor errors come back as
+//!   500s with the executor message, not opaque timeouts;
+//! * **header parity** — the JSON and binary wire frames travel the same
+//!   `x-acdc-deadline-ms` path (same 504 + `Retry-After` outcome);
+//! * **clamp properties** — deadline clamping is total, monotone, and
+//!   saturating on `[1, max_deadline_ms]`;
+//! * **budget propagation** — a router hop forwards a strictly smaller
+//!   deadline budget than it received, and a hedge is refused when the
+//!   remaining budget cannot cover the hedge target's observed p50;
+//! * **brownout** — sustained in-flight pressure walks the degradation
+//!   ladder up (`acdc_brownout_level` > 0) and hysteresis walks it back
+//!   to zero when the load stops;
+//! * **circuit breaking** — a SIGSTOPped shard trips its breaker on
+//!   request-path timeouts and is re-admitted through a half-open probe,
+//!   while `/healthz` hysteresis never marks it down.
+//!
+//! Multi-process tests inherit `ACDC_GW_MODE`, so the CI chaos lane runs
+//! this file under both the reactor and threaded gateways, single
+//! threaded (`--test-threads=1`).
+
+use acdc::config::{BrownoutConfig, ClusterConfig, FaultsConfig, GatewayConfig, ServeConfig};
+use acdc::coordinator::worker::{BatchExecutor, ExecutorFactory};
+use acdc::gateway::http;
+use acdc::gateway::wire;
+use acdc::gateway::Gateway;
+use acdc::registry::SellModel;
+use acdc::sell::acdc::{AcdcCascade, AcdcLayer};
+use acdc::sell::init::DiagInit;
+use acdc::serve::Server;
+use acdc::util::json::{obj, Json};
+use acdc::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One HTTP exchange on a fresh connection, with arbitrary extra headers.
+fn one_shot(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> http::ClientResponse {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    http::write_request(&mut stream, method, path, headers, body).expect("write request");
+    http::read_response(&mut reader).expect("read response")
+}
+
+fn infer_body(row: &[f32]) -> Vec<u8> {
+    let features = Json::Arr(row.iter().map(|v| Json::Num(*v as f64)).collect());
+    obj(vec![("features", features)]).to_string().into_bytes()
+}
+
+/// Exact-name lookup in a Prometheus `/metrics` payload
+/// (`acdc_foo_bar 3` lines; labelled/histogram series are skipped).
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find_map(|l| {
+            let mut parts = l.split_whitespace();
+            match (parts.next(), parts.next()) {
+                (Some(n), Some(v)) if n == name => v.parse().ok(),
+                _ => None,
+            }
+        })
+        .unwrap_or_else(|| panic!("metric {name} not found in:\n{text}"))
+}
+
+fn scrape(addr: SocketAddr) -> String {
+    let resp = one_shot(addr, "GET", "/metrics", &[], b"");
+    assert_eq!(resp.status, 200);
+    resp.body_str().to_string()
+}
+
+/// A serving gateway over a native ACDC cascade with the given injected
+/// faults: 1 worker, bucket [1], immediate batch formation — every
+/// request is its own batch, so per-batch fault draws map 1:1 onto
+/// requests.
+fn faulty_gateway(n: usize, faults: FaultsConfig, gateway: GatewayConfig) -> Gateway {
+    let mut rng = Pcg32::seeded(5);
+    let cascade = AcdcCascade::nonlinear(n, 2, DiagInit::CAFFENET, &mut rng);
+    let cfg = ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 1,
+        workers: 1,
+        queue_cap: 64,
+        faults,
+        gateway,
+        ..Default::default()
+    };
+    let server = Server::start_native(&cfg, cascade);
+    Gateway::start(server, cfg.gateway.clone()).unwrap()
+}
+
+#[test]
+fn deadlines_cancel_work_an_injected_delay_made_stale() {
+    let n = 16;
+    let delay = FaultsConfig {
+        enabled: true,
+        delay_ms: 200,
+        delay_prob: 1.0,
+        ..Default::default()
+    };
+    let gateway = faulty_gateway(
+        n,
+        delay.clone(),
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            request_timeout_ms: 30_000,
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+
+    // 4 clients × 3 requests, each carrying a 50ms budget against a
+    // 200ms injected executor delay: at most the first batch or two can
+    // execute before every queued deadline has passed.
+    let offered = 12u64;
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(40 + c);
+                let mut statuses = Vec::new();
+                for _ in 0..3 {
+                    let row: Vec<f32> = rng.normal_vec(16, 0.0, 1.0);
+                    let resp = one_shot(
+                        addr,
+                        "POST",
+                        "/v1/infer",
+                        &[("content-type", "application/json"), ("x-acdc-deadline-ms", "50")],
+                        &infer_body(&row),
+                    );
+                    statuses.push((resp.status, resp.header("retry-after").is_some()));
+                }
+                statuses
+            })
+        })
+        .collect();
+    let mut saw_504 = false;
+    for h in handles {
+        for (status, has_retry_after) in h.join().unwrap() {
+            assert!(
+                status == 200 || status == 504,
+                "only success or deadline-exceeded expected, got {status}"
+            );
+            if status == 504 {
+                saw_504 = true;
+                assert!(has_retry_after, "504 must carry Retry-After");
+            }
+        }
+    }
+    assert!(saw_504, "50ms budgets against 200ms delays must expire");
+
+    // Let the worker drain whatever the batcher already formed, then
+    // check the cancellation actually reached the executor.
+    std::thread::sleep(Duration::from_millis(600));
+    let text = scrape(addr);
+    let reaped = metric_value(&text, "acdc_gateway_deadline_reaped");
+    let rows = metric_value(&text, "acdc_worker_rows");
+    assert!(reaped > 0.0, "expired requests must be reaped, got {text}");
+    assert!(
+        rows < offered as f64,
+        "executor ran {rows} rows but only expired work was queued (offered {offered})"
+    );
+    gateway.shutdown();
+
+    // Control: same injected delay, no client deadlines (the 5s default
+    // dwarfs the queueing) — everything executes, nothing is reaped.
+    let control = faulty_gateway(
+        n,
+        delay,
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            request_timeout_ms: 30_000,
+            ..Default::default()
+        },
+    );
+    let caddr = control.local_addr();
+    let control_offered = 8;
+    let handles: Vec<_> = (0..4)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut rng = Pcg32::seeded(80 + c);
+                for _ in 0..2 {
+                    let row: Vec<f32> = rng.normal_vec(16, 0.0, 1.0);
+                    let resp = one_shot(
+                        caddr,
+                        "POST",
+                        "/v1/infer",
+                        &[("content-type", "application/json")],
+                        &infer_body(&row),
+                    );
+                    assert_eq!(resp.status, 200, "control run must execute everything");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let text = scrape(caddr);
+    assert_eq!(metric_value(&text, "acdc_gateway_deadline_reaped"), 0.0);
+    assert_eq!(metric_value(&text, "acdc_worker_rows"), f64::from(control_offered));
+    control.shutdown();
+}
+
+#[test]
+fn injected_executor_errors_surface_as_typed_500s() {
+    let gateway = faulty_gateway(
+        8,
+        FaultsConfig {
+            enabled: true,
+            error_prob: 1.0,
+            ..Default::default()
+        },
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+    let resp = one_shot(
+        addr,
+        "POST",
+        "/v1/infer",
+        &[("content-type", "application/json")],
+        &infer_body(&[0.5; 8]),
+    );
+    assert_eq!(resp.status, 500);
+    assert!(
+        resp.body_str().contains("executor") && resp.body_str().contains("injected"),
+        "error must carry the executor message: {}",
+        resp.body_str()
+    );
+    gateway.shutdown();
+}
+
+#[test]
+fn json_and_binary_frames_share_the_deadline_header_path() {
+    let n = 8;
+    let gateway = faulty_gateway(
+        n,
+        FaultsConfig {
+            enabled: true,
+            delay_ms: 150,
+            delay_prob: 1.0,
+            ..Default::default()
+        },
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            request_timeout_ms: 30_000,
+            ..Default::default()
+        },
+    );
+    let addr = gateway.local_addr();
+    let row = [0.25f32; 8];
+    let mut frame = Vec::new();
+    wire::write_binary_request(&mut frame, n, &row);
+
+    // A 20ms budget against a 150ms injected delay expires on both wire
+    // formats, with the same typed outcome.
+    for (content_type, body) in [
+        ("application/json", infer_body(&row)),
+        (wire::CONTENT_TYPE, frame.clone()),
+    ] {
+        let resp = one_shot(
+            addr,
+            "POST",
+            "/v1/infer",
+            &[("content-type", content_type), ("x-acdc-deadline-ms", "20")],
+            &body,
+        );
+        assert_eq!(resp.status, 504, "{content_type} must expire");
+        assert!(
+            resp.header("retry-after").is_some(),
+            "{content_type}: 504 must carry Retry-After"
+        );
+    }
+    // Without the header the default 5s budget absorbs the delay: both
+    // formats succeed.
+    for (content_type, body) in [
+        ("application/json", infer_body(&row)),
+        (wire::CONTENT_TYPE, frame),
+    ] {
+        let resp = one_shot(
+            addr,
+            "POST",
+            "/v1/infer",
+            &[("content-type", content_type)],
+            &body,
+        );
+        assert_eq!(resp.status, 200, "{content_type} without a deadline");
+    }
+    // Malformed budgets are a client error, not a default.
+    let resp = one_shot(
+        addr,
+        "POST",
+        "/v1/infer",
+        &[("content-type", "application/json"), ("x-acdc-deadline-ms", "soon")],
+        &infer_body(&row),
+    );
+    assert_eq!(resp.status, 400);
+    gateway.shutdown();
+}
+
+#[test]
+fn deadline_clamp_is_total_monotone_and_saturating() {
+    use acdc::config::LimitsConfig;
+    let limits = LimitsConfig {
+        default_deadline_ms: 500,
+        max_deadline_ms: 1_000,
+    };
+    assert_eq!(limits.clamp_deadline_ms(None), 500, "absent header → default");
+    assert_eq!(limits.clamp_deadline_ms(Some(0)), 1, "zero saturates up to 1");
+    assert_eq!(
+        limits.clamp_deadline_ms(Some(u64::MAX)),
+        1_000,
+        "overflow saturates at the max"
+    );
+    // Deterministic value sweep: total (never panics, never 0), bounded,
+    // and monotone in the requested budget.
+    let probe = |i: u64| (i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).rotate_left((i % 64) as u32);
+    let mut values: Vec<u64> = (0..4_000).map(probe).collect();
+    values.extend([0, 1, 2, 499, 500, 501, 999, 1_000, 1_001, u64::MAX]);
+    for &v in &values {
+        let out = limits.clamp_deadline_ms(Some(v));
+        assert!((1..=1_000).contains(&out), "clamp({v}) = {out} out of range");
+    }
+    values.sort_unstable();
+    for pair in values.windows(2) {
+        assert!(
+            limits.clamp_deadline_ms(Some(pair[0])) <= limits.clamp_deadline_ms(Some(pair[1])),
+            "clamp must be monotone: {} vs {}",
+            pair[0],
+            pair[1]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fake upstream shards: real TCP listeners that record the deadline
+// budget the router forwards and fail on command.
+
+const MODE_OK: u8 = 0;
+/// Read the request, sleep ~40ms, close without answering (transport
+/// error → the router retries elsewhere with a smaller budget).
+const MODE_DROP: u8 = 1;
+/// Read the request and hold the connection open without answering
+/// (models a wedged shard; the router's budget expires against it).
+const MODE_STALL: u8 = 2;
+
+struct FakeShard {
+    addr: SocketAddr,
+    /// `x-acdc-deadline-ms` values of inference POSTs, in arrival order.
+    seen: Arc<Mutex<Vec<u64>>>,
+    mode: Arc<AtomicU8>,
+}
+
+impl FakeShard {
+    fn start(ok_delay: Duration) -> FakeShard {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let mode = Arc::new(AtomicU8::new(MODE_OK));
+        let (seen2, mode2) = (Arc::clone(&seen), Arc::clone(&mode));
+        std::thread::spawn(move || {
+            for stream in listener.incoming().flatten() {
+                let (seen, mode) = (Arc::clone(&seen2), Arc::clone(&mode2));
+                std::thread::spawn(move || serve_fake_conn(stream, &seen, &mode, ok_delay));
+            }
+        });
+        FakeShard { addr, seen, mode }
+    }
+
+    fn seen_count(&self) -> usize {
+        self.seen.lock().unwrap().len()
+    }
+}
+
+/// Minimal keep-alive HTTP/1.1 server loop: answers `GET` (health
+/// probes) with 200, records + answers/fails inference POSTs per the
+/// shared mode flag.
+fn serve_fake_conn(
+    mut stream: TcpStream,
+    seen: &Mutex<Vec<u64>>,
+    mode: &AtomicU8,
+    ok_delay: Duration,
+) {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            return;
+        }
+        let is_post = line.starts_with("POST");
+        let mut content_len = 0usize;
+        let mut deadline_ms = None;
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h).unwrap_or(0) == 0 {
+                return;
+            }
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = h.split_once(':') {
+                let (name, value) = (name.trim().to_ascii_lowercase(), value.trim());
+                if name == "content-length" {
+                    content_len = value.parse().unwrap_or(0);
+                } else if name == "x-acdc-deadline-ms" {
+                    deadline_ms = value.parse().ok();
+                }
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        if content_len > 0 && reader.read_exact(&mut body).is_err() {
+            return;
+        }
+        if is_post {
+            if let Some(ms) = deadline_ms {
+                seen.lock().unwrap().push(ms);
+            }
+            match mode.load(Ordering::Acquire) {
+                MODE_DROP => {
+                    std::thread::sleep(Duration::from_millis(40));
+                    return; // close without a response
+                }
+                MODE_STALL => {
+                    std::thread::sleep(Duration::from_secs(10));
+                    return;
+                }
+                _ => std::thread::sleep(ok_delay),
+            }
+        }
+        let payload = br#"{"output":[0.0],"version":1}"#;
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\ncontent-type: application/json\r\ncontent-length: {}\r\n\r\n",
+            payload.len()
+        );
+        if stream.write_all(resp.as_bytes()).is_err() || stream.write_all(payload).is_err() {
+            return;
+        }
+    }
+}
+
+#[test]
+fn router_budget_decrements_across_hops_and_gates_hedges_below_p50() {
+    // Two fake shards; slow health probes and huge hysteresis keep
+    // /healthz out of the picture, a 64-wide breaker window never trips
+    // on the handful of induced failures.
+    let a = FakeShard::start(Duration::from_millis(150));
+    let b = FakeShard::start(Duration::from_millis(150));
+    let cluster = ClusterConfig {
+        shards: vec![a.addr.to_string(), b.addr.to_string()],
+        replication: 2,
+        probe_interval_ms: 60_000,
+        down_after: 100,
+        up_after: 1,
+        hedge_min_ms: 50,
+        breaker_window: 64,
+        breaker_cooldown_ms: 60_000,
+        request_timeout_ms: 10_000,
+        ..Default::default()
+    };
+    let router = Gateway::start_router(
+        cluster,
+        GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let raddr = router.local_addr();
+    let infer = |budget_ms: &str| {
+        one_shot(
+            raddr,
+            "POST",
+            "/v1/models/m/infer",
+            &[("content-type", "application/json"), ("x-acdc-deadline-ms", budget_ms)],
+            &infer_body(&[1.0; 4]),
+        )
+    };
+
+    // Which shard is ring-primary for "m"? Both idle → the first probe
+    // lands on it.
+    let resp = infer("5000");
+    assert_eq!(resp.status, 200);
+    let (primary, secondary) = if a.seen_count() == 1 {
+        (&a, &b)
+    } else {
+        (&b, &a)
+    };
+    assert_eq!(primary.seen_count() + secondary.seen_count(), 1);
+
+    // Hop decrement: the primary burns ~40ms and fails; the retry must
+    // reach the secondary with a strictly smaller budget.
+    primary.mode.store(MODE_DROP, Ordering::Release);
+    primary.seen.lock().unwrap().clear();
+    secondary.seen.lock().unwrap().clear();
+    let resp = infer("800");
+    assert_eq!(resp.status, 200, "retry onto the live replica");
+    let first = primary.seen.lock().unwrap()[0];
+    let second = secondary.seen.lock().unwrap()[0];
+    assert!(first <= 800, "forwarded budget exceeds the client's: {first}");
+    assert!(
+        second < first,
+        "budget must shrink across hops: {first} → {second}"
+    );
+    assert!(second >= 1, "forwarded budget floors at 1ms");
+
+    // Warm the secondary's latency history (~150ms p50) through a few
+    // more failed-primary retries.
+    for _ in 0..4 {
+        assert_eq!(infer("5000").status, 200);
+    }
+
+    // Hedge gating. The primary now stalls silently. With a fat budget
+    // the hedge fires at hedge_min (50ms) and the secondary answers;
+    // with 160ms the remaining ~110ms cannot cover the secondary's
+    // ~150ms p50, so the hedge is refused and the budget expires.
+    primary.mode.store(MODE_STALL, Ordering::Release);
+    let before = secondary.seen_count();
+    let resp = infer("5000");
+    assert_eq!(resp.status, 200, "hedge rescues the stalled primary");
+    assert_eq!(secondary.seen_count(), before + 1);
+
+    let before = secondary.seen_count();
+    let resp = infer("160");
+    assert_eq!(resp.status, 504, "no viable hedge → the budget expires");
+    assert!(
+        resp.header("retry-after").is_some(),
+        "router 504 must carry Retry-After"
+    );
+    assert_eq!(
+        secondary.seen_count(),
+        before,
+        "a hedge was fired against an upstream whose p50 exceeds the remaining budget"
+    );
+    router.shutdown();
+}
+
+/// Echo executor with a configurable service time (saturates tiny
+/// in-flight caps deterministically).
+struct SlowEcho {
+    n: usize,
+    delay: Duration,
+}
+
+impl BatchExecutor for SlowEcho {
+    fn width(&self) -> usize {
+        self.n
+    }
+    fn out_width(&self) -> usize {
+        self.n
+    }
+    fn execute_into(
+        &mut self,
+        _bucket: usize,
+        padded: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), String> {
+        std::thread::sleep(self.delay);
+        out.copy_from_slice(padded);
+        Ok(())
+    }
+}
+
+#[test]
+fn brownout_ladder_engages_under_sustained_pressure_and_recovers() {
+    let n = 8;
+    let cfg = ServeConfig {
+        buckets: vec![1],
+        max_wait_us: 1,
+        workers: 1,
+        queue_cap: 64,
+        gateway: GatewayConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight: 4,
+            request_timeout_ms: 10_000,
+            brownout: BrownoutConfig {
+                enabled: true,
+                tick_ms: 10,
+                hot_inflight_pct: 0.5,
+                up_after: 2,
+                down_after: 3,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let factory: ExecutorFactory = Arc::new(move || {
+        Ok(Box::new(SlowEcho {
+            n,
+            delay: Duration::from_millis(30),
+        }) as Box<dyn BatchExecutor>)
+    });
+    let server = Server::start_custom(&cfg, n, factory);
+    let gateway = Gateway::start(server, cfg.gateway.clone()).unwrap();
+    let addr = gateway.local_addr();
+
+    // 12 closed-loop clients against max_inflight 4 keep the in-flight
+    // gauge pinned past the 50% hot threshold.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let handles: Vec<_> = (0..12)
+        .map(|_| {
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let _ = one_shot(
+                        addr,
+                        "POST",
+                        "/v1/infer",
+                        &[("content-type", "application/json")],
+                        &infer_body(&[1.0; 8]),
+                    );
+                }
+            })
+        })
+        .collect();
+
+    // The ladder must climb within a few ticks (10ms tick, up_after 2).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut level = 0.0;
+    while Instant::now() < deadline {
+        level = metric_value(&scrape(addr), "acdc_brownout_level");
+        if level >= 1.0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(level >= 1.0, "brownout never engaged under saturation");
+
+    // Load stops → cool ticks walk the ladder back to zero.
+    stop.store(true, Ordering::Release);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        level = metric_value(&scrape(addr), "acdc_brownout_level");
+        if level == 0.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "brownout never recovered: level {level}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // Fully recovered: a normal request flows again.
+    let resp = one_shot(
+        addr,
+        "POST",
+        "/v1/infer",
+        &[("content-type", "application/json")],
+        &infer_body(&[1.0; 8]),
+    );
+    assert_eq!(resp.status, 200);
+    gateway.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-process breaker test: real shard processes, SIGSTOP as the fault.
+
+/// A spawned child that is SIGKILLed when the test (or a panic unwind)
+/// drops it — no orphaned gateways after a failed assertion.
+struct Proc(std::process::Child);
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        signal(self.0.id(), "-CONT"); // a stopped child ignores SIGKILL
+        self.0.kill().ok();
+        self.0.wait().ok();
+    }
+}
+
+fn spawn_acdc(args: &[&str]) -> Proc {
+    Proc(
+        Command::new(env!("CARGO_BIN_EXE_acdc"))
+            .args(args)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn acdc"),
+    )
+}
+
+fn signal(pid: u32, sig: &str) {
+    Command::new("kill")
+        .args([sig, &pid.to_string()])
+        .status()
+        .expect("send signal");
+}
+
+/// Poll the `--addr-file` a child writes once its listener is bound.
+fn wait_addr(path: &Path) -> SocketAddr {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while Instant::now() < deadline {
+        if let Ok(s) = std::fs::read_to_string(path) {
+            if let Ok(a) = s.trim().parse() {
+                return a;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    panic!("no address appeared in {}", path.display());
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("acdc_chaos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `/v1/cluster` shard state: (healthy, breaker) for shard `i`.
+fn shard_state(router: SocketAddr, i: usize) -> (bool, String) {
+    let resp = one_shot(router, "GET", "/v1/cluster", &[], b"");
+    assert_eq!(resp.status, 200);
+    let v = Json::parse(resp.body_str()).unwrap();
+    let shard = &v.get("shards").and_then(|s| s.as_arr()).unwrap()[i];
+    (
+        shard.get("healthy").and_then(|h| h.as_bool()).unwrap(),
+        shard
+            .get("breaker")
+            .and_then(|b| b.as_str())
+            .unwrap()
+            .to_string(),
+    )
+}
+
+#[test]
+fn sigstopped_shard_trips_the_breaker_without_health_ever_flapping() {
+    let n = 8;
+    let dir = temp_dir("breaker");
+    let ckpt = dir.join("m.ckpt");
+    SellModel::Acdc(AcdcCascade {
+        layers: vec![AcdcLayer::identity(n)],
+        perms: None,
+        relu: false,
+        train_bias: false,
+    })
+    .to_checkpoint()
+    .unwrap()
+    .save(&ckpt)
+    .unwrap();
+
+    let shard_cfg = dir.join("shard.toml");
+    std::fs::write(
+        &shard_cfg,
+        format!(
+            "[serve]\nbuckets = [1, 8]\nmax_wait_us = 200\nworkers = 2\n\n\
+             [gateway]\naddr = \"127.0.0.1:0\"\n\n\
+             [registry]\nmodels = [\"m={}\"]\ndefault_model = \"m\"\n",
+            ckpt.display()
+        ),
+    )
+    .unwrap();
+    let mut shards = Vec::new();
+    let mut shard_addrs = Vec::new();
+    for i in 0..2 {
+        let addr_file = dir.join(format!("shard{i}.addr"));
+        std::fs::remove_file(&addr_file).ok();
+        shards.push(spawn_acdc(&[
+            "shard",
+            "--config",
+            shard_cfg.to_str().unwrap(),
+            "--no-demo",
+            "--addr-file",
+            addr_file.to_str().unwrap(),
+        ]));
+        shard_addrs.push(wait_addr(&addr_file));
+    }
+
+    // Router: probes effectively off (60s interval) and down_after far
+    // out of reach, so /healthz can never mark the stopped shard down —
+    // only the breaker reacts. Hedging is disabled (hedge_min_ms 60s) so
+    // every stalled exchange burns its own budget.
+    let router_cfg = dir.join("router.toml");
+    let shard_list = shard_addrs
+        .iter()
+        .map(|a| format!("\"{a}\""))
+        .collect::<Vec<_>>()
+        .join(", ");
+    std::fs::write(
+        &router_cfg,
+        format!(
+            "[cluster]\nshards = [{shard_list}]\nreplication = 2\n\
+             probe_interval_ms = 60000\ndown_after = 100\nup_after = 1\n\
+             hedge_min_ms = 60000\nbreaker_window = 4\nbreaker_trip_ratio = 0.5\n\
+             breaker_cooldown_ms = 300\n\n\
+             [gateway]\naddr = \"127.0.0.1:0\"\n"
+        ),
+    )
+    .unwrap();
+    let router_addr_file = dir.join("router.addr");
+    std::fs::remove_file(&router_addr_file).ok();
+    let _router = spawn_acdc(&[
+        "router",
+        "--config",
+        router_cfg.to_str().unwrap(),
+        "--addr-file",
+        router_addr_file.to_str().unwrap(),
+    ]);
+    let router_addr = wait_addr(&router_addr_file);
+
+    let infer = |budget_ms: &str| {
+        one_shot(
+            router_addr,
+            "POST",
+            "/v1/models/m/infer",
+            &[("content-type", "application/json"), ("x-acdc-deadline-ms", budget_ms)],
+            &infer_body(&[1.0; 8]),
+        )
+    };
+
+    // Which shard answers when everything is idle? That one is ring
+    // primary; SIGSTOP it.
+    let warm = infer("5000");
+    assert_eq!(warm.status, 200);
+    let primary: usize = warm
+        .header("x-acdc-upstream")
+        .and_then(|s| s.parse().ok())
+        .expect("router tags the serving upstream");
+    signal(shards[primary].0.id(), "-STOP");
+
+    // Each 300ms budget burns out against the stopped shard and records
+    // one breaker failure; window 4 @ ratio 0.5 trips within a handful
+    // of requests. Health must never flap while this happens.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (healthy, breaker) = shard_state(router_addr, primary);
+        assert!(healthy, "/healthz hysteresis must never mark the shard down");
+        if breaker == "open" {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "breaker never opened; last state {breaker}"
+        );
+        let resp = infer("300");
+        assert!(
+            resp.status == 200 || resp.status == 504,
+            "stall phase: got {}",
+            resp.status
+        );
+    }
+
+    // Open breaker: the stopped shard is skipped entirely — traffic is
+    // fast and clean on the surviving replica.
+    for _ in 0..5 {
+        let resp = infer("2000");
+        assert_eq!(resp.status, 200, "open breaker must route around the stall");
+        let upstream: usize = resp
+            .header("x-acdc-upstream")
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        assert_ne!(upstream, primary, "request fired at an open breaker");
+    }
+    let trips = metric_value(&scrape(router_addr), "acdc_cluster_breaker_trips");
+    assert!(trips >= 1.0);
+
+    // Resume the shard; after the cooldown a half-open probe re-admits
+    // it and the breaker closes — again without /healthz involvement.
+    signal(shards[primary].0.id(), "-CONT");
+    std::thread::sleep(Duration::from_millis(400));
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let resp = infer("2000");
+        assert!(resp.status == 200 || resp.status == 504, "probe phase");
+        let (healthy, breaker) = shard_state(router_addr, primary);
+        assert!(healthy, "health must stay up through recovery");
+        if breaker == "closed" {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "breaker never closed after resume; state {breaker}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // And the re-admitted shard actually serves again.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let resp = infer("2000");
+        assert_eq!(resp.status, 200);
+        let upstream: usize = resp
+            .header("x-acdc-upstream")
+            .and_then(|s| s.parse().ok())
+            .unwrap();
+        if upstream == primary {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "re-admitted shard never served a request"
+        );
+    }
+}

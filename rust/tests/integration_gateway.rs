@@ -272,6 +272,7 @@ fn loadgen_reports_latency_and_nonzero_sheds_past_queue_cap() {
         timeout: Duration::from_secs(30),
         seed: 3,
         binary: false,
+        ..Default::default()
     })
     .unwrap();
 
